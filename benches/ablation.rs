@@ -1,0 +1,80 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//! 1. **§4.1 layer policy** — which layers run vectorized: None /
+//!    FirstK(2) (the paper's literal choice) / MinMeanDegree(16)
+//!    (adaptive) / All, on a real RMAT traversal.
+//! 2. **§8 hybrid direction optimization** — edges scanned and host time,
+//!    top-down vs hybrid (scalar and vectorized bottom-up).
+//! 3. **§6.2 helper threads** — workers-only vs workers+prefetch-helper
+//!    contexts on the modelled Phi.
+
+use phi_bfs::benchkit::{env_param, section, Bench};
+use phi_bfs::bfs::bottom_up::HybridBfs;
+use phi_bfs::bfs::policy::LayerPolicy;
+use phi_bfs::bfs::serial::SerialLayeredBfs;
+use phi_bfs::bfs::vectorized::{SimdOpts, VectorizedBfs};
+use phi_bfs::bfs::BfsAlgorithm;
+use phi_bfs::graph::{Csr, RmatConfig};
+use phi_bfs::harness::report::{mteps, Table};
+use phi_bfs::phi::cost::CostParams;
+use phi_bfs::phi::sim::predict_with_helpers;
+use phi_bfs::phi::{predict, Affinity, KncParams, WorkTrace};
+
+fn main() {
+    let scale: u32 = env_param("PHIBFS_SCALE", 14);
+    let el = RmatConfig::graph500(scale, 16).generate(1);
+    let g = Csr::from_edge_list(scale, &el);
+    let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
+    let bench = Bench::quick();
+    let knc = KncParams::default();
+    let cp = CostParams::default();
+
+    section(&format!("Ablation 1 — §4.1 layer policy (SCALE {scale}, modelled @118 threads)"));
+    let mut t = Table::new(&["policy", "simd layers", "host time", "Phi MTEPS@118"]);
+    for (name, policy) in [
+        ("None (scalar)", LayerPolicy::None),
+        ("FirstK(2) [paper]", LayerPolicy::FirstK(2)),
+        ("MinMeanDegree(16)", LayerPolicy::heavy()),
+        ("All", LayerPolicy::All),
+    ] {
+        let alg = VectorizedBfs { num_threads: 1, opts: SimdOpts::full(), policy };
+        let m = bench.run(name, || alg.run(&g, root));
+        let r = alg.run(&g, root);
+        let simd_layers = r.trace.layers.iter().filter(|l| l.vectorized).count();
+        let trace = WorkTrace::from_run(g.num_vertices(), &r.trace);
+        let p = predict(&knc, &cp, &trace, 118, Affinity::Balanced);
+        t.row(&[
+            name.to_string(),
+            format!("{simd_layers}/{}", r.trace.layers.len()),
+            format!("{:.2?}", m.mean),
+            mteps(p.teps),
+        ]);
+    }
+    print!("{}", t.render());
+
+    section(&format!("Ablation 2 — §8 hybrid direction optimization (SCALE {scale})"));
+    let mut t = Table::new(&["algorithm", "edges scanned", "host time"]);
+    let td = SerialLayeredBfs.run(&g, root);
+    let m = bench.run("top-down (serial)", || SerialLayeredBfs.run(&g, root));
+    t.row(&["top-down".into(), td.trace.total_edges_scanned().to_string(), format!("{:.2?}", m.mean)]);
+    for (name, simd) in [("hybrid (scalar bottom-up)", false), ("hybrid (simd bottom-up)", true)] {
+        let alg = HybridBfs { num_threads: 1, simd, ..Default::default() };
+        let r = alg.run(&g, root);
+        let m = bench.run(name, || alg.run(&g, root));
+        t.row(&[name.into(), r.trace.total_edges_scanned().to_string(), format!("{:.2?}", m.mean)]);
+    }
+    print!("{}", t.render());
+    println!("(direction optimization must scan strictly fewer edges than top-down)");
+
+    section("Ablation 3 — §6.2 helper threads (modelled, SCALE-20 workload)");
+    let trace20 =
+        WorkTrace::synthesize_simd(1 << 20, phi_bfs::phi::trace::TABLE1_SCALE20, true, true);
+    let mut t = Table::new(&["workers", "helpers/core", "MTEPS"]);
+    for (w, h) in [(59usize, 0usize), (59, 2), (118, 0), (118, 1), (118, 2), (236, 0)] {
+        let p = predict_with_helpers(&knc, &cp, &trace20, w, h, Affinity::Balanced);
+        t.row(&[w.to_string(), h.to_string(), mteps(p.teps)]);
+    }
+    print!("{}", t.render());
+    println!("(the paper's future-work claim: spare contexts as prefetch helpers can");
+    println!(" recover part of the full-population throughput at lower occupancy)");
+}

@@ -1,0 +1,79 @@
+//! Regenerates **Figure 9** — "BFS experimental optimizations results":
+//! three curves (TEPS vs threads) for `SIMD - no opt`,
+//! `SIMD + parallel + alignment/masks`, and `+ prefetching`, SCALE 20.
+//!
+//! Two parts:
+//! 1. *Measured* host-side cost of each optimization level: the real
+//!    vectorized implementation on a PHIBFS_SCALE graph, single thread —
+//!    shows the emulated-VPU event-count differences (full vs masked
+//!    chunks, prefetch coverage) and the host wall time.
+//! 2. *Modelled* Phi curves over the thread sweep, which is what the
+//!    figure actually plots.
+
+use phi_bfs::benchkit::{env_param, section, Bench};
+use phi_bfs::bfs::policy::LayerPolicy;
+use phi_bfs::bfs::vectorized::{SimdOpts, VectorizedBfs};
+use phi_bfs::bfs::BfsAlgorithm;
+use phi_bfs::graph::{Csr, RmatConfig};
+use phi_bfs::harness::report::{mteps, Table};
+use phi_bfs::phi::cost::CostParams;
+use phi_bfs::phi::{predict, Affinity, KncParams, WorkTrace};
+
+const THREAD_SWEEP: &[usize] = &[1, 2, 8, 16, 32, 40, 64, 100, 118, 180, 200, 210, 228, 236];
+
+fn opt_levels() -> [(&'static str, SimdOpts); 3] {
+    [
+        ("SIMD - no opt", SimdOpts::none()),
+        ("SIMD + align/masks", SimdOpts::aligned_masks()),
+        ("SIMD + align/masks + prefetch", SimdOpts::full()),
+    ]
+}
+
+fn main() {
+    let scale: u32 = env_param("PHIBFS_SCALE", 14);
+    let el = RmatConfig::graph500(scale, 16).generate(1);
+    let g = Csr::from_edge_list(scale, &el);
+    let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
+
+    section(&format!("Fig 9 (part 1) — measured optimization levels, SCALE {scale}, host 1 thread"));
+    let bench = Bench::quick();
+    let mut traces = Vec::new();
+    for (name, opts) in opt_levels() {
+        let alg = VectorizedBfs { num_threads: 1, opts, policy: LayerPolicy::heavy() };
+        let m = bench.run(name, || alg.run(&g, root));
+        println!("{}", m.report_line());
+        let r = alg.run(&g, root);
+        let vpu = r.trace.vpu_totals();
+        println!(
+            "    full_chunks={} masked={} gather_lanes={} prefetches={} vector_efficiency={:.3}",
+            vpu.full_chunks,
+            vpu.masked_loads,
+            vpu.gather_lanes,
+            vpu.prefetch_l1 + vpu.prefetch_l2,
+            vpu.vector_efficiency()
+        );
+        traces.push((name, WorkTrace::from_run(g.num_vertices(), &r.trace)));
+    }
+
+    section("Fig 9 (part 2) — modelled Phi curves (MTEPS vs threads, SCALE-20 workload)");
+    let knc = KncParams::default();
+    let cp = CostParams::default();
+    let mut t = Table::new(&["Threads", "no-opt", "align/masks", "+prefetch"]);
+    for &threads in THREAD_SWEEP {
+        let vals: Vec<String> = [(false, false), (true, false), (true, true)]
+            .iter()
+            .map(|&(aligned, prefetch)| {
+                let trace = WorkTrace::synthesize_simd(
+                    1 << 20,
+                    phi_bfs::phi::trace::TABLE1_SCALE20,
+                    aligned,
+                    prefetch,
+                );
+                mteps(predict(&knc, &cp, &trace, threads, Affinity::Balanced).teps)
+            })
+            .collect();
+        t.row(&[threads.to_string(), vals[0].clone(), vals[1].clone(), vals[2].clone()]);
+    }
+    print!("{}", t.render());
+    println!("shape check: each optimization adds TEPS at every thread count (paper Fig 9).");
+}

@@ -1,0 +1,96 @@
+//! Microbenchmarks of the hot paths — the profiling substrate for the
+//! §Perf optimization pass (EXPERIMENTS.md §Perf):
+//!
+//! * bitmap ops (set/test/word-iteration)
+//! * the emulated-VPU explore chunk (Listing 1's inner loop)
+//! * scalar vs vectorized restoration
+//! * the algorithm ladder end-to-end on one graph
+//! * RMAT generation and CSR construction
+
+use phi_bfs::benchkit::{env_param, section, Bench};
+use phi_bfs::bfs::bitrace_free::{restore_layer, BitRaceFreeBfs};
+use phi_bfs::bfs::parallel::ParallelBfs;
+use phi_bfs::bfs::policy::LayerPolicy;
+use phi_bfs::bfs::serial::{SerialLayeredBfs, SerialQueueBfs};
+use phi_bfs::bfs::state::{SharedBitmap, SharedPred};
+use phi_bfs::bfs::vectorized::{restore_layer_simd, SimdOpts, VectorizedBfs};
+use phi_bfs::bfs::BfsAlgorithm;
+use phi_bfs::graph::{Bitmap, Csr, RmatConfig};
+
+fn main() {
+    let scale: u32 = env_param("PHIBFS_SCALE", 13);
+    let bench = Bench::default();
+
+    section("bitmap ops");
+    let n = 1 << 20;
+    let mut bm = Bitmap::new(n);
+    let m = bench.run("bitmap set 100k bits", || {
+        for v in (0..100_000u32).map(|i| i * 7 % (n as u32)) {
+            bm.set_bit(v);
+        }
+    });
+    println!("{}", m.report_line());
+    let m = bench.run("bitmap iterate set bits", || bm.iter_set_bits().count());
+    println!("{}", m.report_line());
+    let m = bench.run("bitmap popcount", || bm.count_ones());
+    println!("{}", m.report_line());
+
+    section("restoration: scalar vs vectorized (64k vertices, 25% journalled)");
+    let rn = 1 << 16;
+    let setup = || {
+        let out = SharedBitmap::new(rn);
+        let vis = SharedBitmap::new(rn);
+        let pred = SharedPred::new_infinity(rn);
+        for v in (0..rn as u32).step_by(4) {
+            pred.set(v, 1 - rn as i32);
+            out.or_word_atomic((v / 32) as usize, 1 << ((v + 1) % 32));
+        }
+        (out, vis, pred)
+    };
+    let m = bench.run("restore scalar", || {
+        let (out, vis, pred) = setup();
+        restore_layer(1, &out, &vis, &pred, rn as i32)
+    });
+    println!("{}", m.report_line());
+    let m = bench.run("restore simd (emulated)", || {
+        let (out, vis, pred) = setup();
+        restore_layer_simd(1, &out, &vis, &pred, rn as i32)
+    });
+    println!("{}", m.report_line());
+
+    section(&format!("graph substrate (SCALE {scale})"));
+    let cfg = RmatConfig::graph500(scale, 16);
+    let m = bench.run("rmat generate", || cfg.generate(7));
+    println!("{}", m.report_line());
+    let edges = cfg.generate(7);
+    let m = bench.run("csr build", || Csr::from_edge_list(scale, &edges));
+    println!("{}", m.report_line());
+
+    section(&format!("algorithm ladder end-to-end (SCALE {scale}, 1 host thread)"));
+    let g = Csr::from_edge_list(scale, &edges);
+    let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
+    let teps_edges = {
+        let r = SerialQueueBfs.run(&g, root);
+        r.trace.total_edges_scanned() as f64 / 2.0
+    };
+    let algs: Vec<(&str, Box<dyn BfsAlgorithm>)> = vec![
+        ("serial-queue", Box::new(SerialQueueBfs)),
+        ("serial-layered", Box::new(SerialLayeredBfs)),
+        ("non-simd (alg 2)", Box::new(ParallelBfs { num_threads: 1 })),
+        ("bitrace-free (alg 3)", Box::new(BitRaceFreeBfs { num_threads: 1 })),
+        (
+            "simd emulated (listing 1)",
+            Box::new(VectorizedBfs {
+                num_threads: 1,
+                opts: SimdOpts::full(),
+                policy: LayerPolicy::heavy(),
+            }),
+        ),
+    ];
+    for (name, alg) in algs {
+        let m = bench.run(name, || alg.run(&g, root));
+        println!("{}  [host {:>7.2} MTEPS]", m.report_line(), m.rate(teps_edges) / 1e6);
+    }
+    println!("\nnote: the emulated-VPU path models instruction semantics, not host speed —");
+    println!("per-op host cost ≫ 1 cycle. Phi-projected TEPS come from the phi model benches.");
+}

@@ -1,0 +1,66 @@
+//! Regenerates **Table 1** — "Traversed vertices per layer" for an RMAT
+//! graph (paper: SCALE 20, edgefactor 16, random start vertex).
+//!
+//! Also times kernel-0 (graph construction) and kernel-2 (the traversal
+//! that produces the profile), so this doubles as the graph-substrate
+//! benchmark.
+//!
+//! Default SCALE is 16 to keep `cargo bench` fast on this container;
+//! run `PHIBFS_SCALE=20 cargo bench --bench table1_layer_profile` for the
+//! paper-scale instance (needs ~1.5 GB RSS and a few minutes).
+
+use phi_bfs::benchkit::{env_param, section, Bench};
+use phi_bfs::graph::stats::LayerProfile;
+use phi_bfs::graph::{Csr, RmatConfig};
+use phi_bfs::harness::report::Table;
+use phi_bfs::rng::Xoshiro256;
+
+fn main() {
+    let scale: u32 = env_param("PHIBFS_SCALE", 16);
+    let edgefactor: usize = env_param("PHIBFS_EDGEFACTOR", 16);
+    let seed: u64 = env_param("PHIBFS_SEED", 1);
+
+    section(&format!("Table 1 — layer profile (SCALE {scale}, edgefactor {edgefactor})"));
+    let bench = Bench::quick();
+
+    let cfg = RmatConfig::graph500(scale, edgefactor);
+    let m_gen = bench.run("kernel0: rmat generate", || cfg.generate(seed));
+    println!("{}", m_gen.report_line());
+    let edges = cfg.generate(seed);
+
+    let m_csr = bench.run("kernel0: csr build", || Csr::from_edge_list(scale, &edges));
+    println!("{}", m_csr.report_line());
+    let g = Csr::from_edge_list(scale, &edges);
+
+    // the paper chooses the start vertex randomly; sample like the harness
+    let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x524f_4f54);
+    let root = rng
+        .sample_distinct(g.num_vertices(), 64)
+        .into_iter()
+        .map(|v| v as u32)
+        .find(|&v| g.degree(v) > 0)
+        .unwrap();
+
+    let m_profile = bench.run("kernel2: layer profile traversal", || LayerProfile::compute(&g, root));
+    println!("{}", m_profile.report_line());
+
+    let p = LayerProfile::compute(&g, root);
+    let mut t = Table::new(&["Layer", "Vertices", "Edges", "Traversed vertices"]);
+    for r in &p.rows {
+        t.row(&[
+            r.layer.to_string(),
+            r.input_vertices.to_string(),
+            r.edges.to_string(),
+            r.traversed.to_string(),
+        ]);
+    }
+    println!("\n{}", t.render());
+    println!(
+        "layers={} (paper SCALE-20: 7)  peak layer={}  reached={}  edges inspected={}",
+        p.num_layers(),
+        p.peak_layer(),
+        p.total_traversed(),
+        p.total_edges()
+    );
+    println!("paper reference rows (SCALE 20): {:?}", phi_bfs::phi::trace::TABLE1_SCALE20);
+}

@@ -1,0 +1,69 @@
+//! The §4.2/§6.2 thread-affinity and hyperthreading study:
+//!
+//! 1. Table 2 — 48 threads manually pinned 1..4 threads/core.
+//! 2. The three `KMP_AFFINITY` strategies across partial populations
+//!    (the "balanced is generally better" claim).
+//! 3. The §6.2 hyperthreading sweep: slope breaks at 60/120/180 threads
+//!    and the OS-core cliff past 236.
+//!
+//! ```bash
+//! cargo run --release --example affinity_study
+//! ```
+
+use phi_bfs::harness::report::{mteps, sci, Table};
+use phi_bfs::phi::cost::CostParams;
+use phi_bfs::phi::{predict, Affinity, KncParams, WorkTrace};
+
+fn main() {
+    let knc = KncParams::default();
+    let cp = CostParams::default();
+    let trace =
+        WorkTrace::synthesize_simd(1 << 20, phi_bfs::phi::trace::TABLE1_SCALE20, true, true);
+
+    println!("=== Table 2: 48 threads, manual threads-per-core ===");
+    let mut t = Table::new(&["#Threads", "Affinity", "Cores", "TEPS", "paper"]);
+    for (k, paper) in (1..=4).zip(["4.69E+08", "2.67E+08", "1.89E+08", "1.42E+08"]) {
+        let p = predict(&knc, &cp, &trace, 48, Affinity::Manual(k));
+        t.row(&[
+            "48".into(),
+            format!("{k}T/C"),
+            p.cores_used.to_string(),
+            sci(p.teps),
+            paper.into(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\n=== KMP_AFFINITY strategies at partial population ===");
+    let mut t = Table::new(&["Threads", "compact", "scatter", "balanced"]);
+    for threads in [24usize, 48, 96, 118, 180, 236] {
+        let row: Vec<String> = [Affinity::Compact, Affinity::Scatter, Affinity::Balanced]
+            .iter()
+            .map(|&a| mteps(predict(&knc, &cp, &trace, threads, a).teps))
+            .collect();
+        t.row(&[threads.to_string(), row[0].clone(), row[1].clone(), row[2].clone()]);
+    }
+    print!("{}", t.render());
+    println!("(paper: \"balanced affinity was generally better\")");
+
+    println!("\n=== Hyperthreading sweep (balanced): slope breaks at 60/120/180 ===");
+    let mut t = Table::new(&["Threads", "T/C", "MTEPS", "ΔMTEPS/thread"]);
+    let mut prev: Option<(usize, f64)> = None;
+    for threads in [1usize, 30, 59, 90, 118, 150, 177, 200, 236, 240] {
+        let p = predict(&knc, &cp, &trace, threads, Affinity::Balanced);
+        let slope = prev
+            .map(|(pt, pv)| (p.teps - pv) / 1e6 / (threads - pt) as f64)
+            .map(|s| format!("{s:+.2}"))
+            .unwrap_or_default();
+        t.row(&[
+            threads.to_string(),
+            p.max_threads_per_core.to_string(),
+            mteps(p.teps),
+            slope,
+        ]);
+        prev = Some((threads, p.teps));
+    }
+    print!("{}", t.render());
+    println!("(240 threads invade the OS core → the §6.2 cliff)");
+    println!("affinity_study OK");
+}

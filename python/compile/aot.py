@@ -1,0 +1,86 @@
+# AOT pipeline: lower the Layer-2 jax function (which inlines the Layer-1
+# Pallas kernels, interpret=True) to HLO **text** artifacts the Rust runtime
+# loads through the `xla` crate's PJRT CPU client.
+#
+# HLO text — NOT lowered.compile()/.serialize() — is the interchange format:
+# jax >= 0.5 emits HloModuleProto with 64-bit instruction ids, which the
+# crate's pinned xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The
+# text parser reassigns ids and round-trips cleanly. See
+# /opt/xla-example/README.md and gen_hlo.py there.
+#
+# Usage: (from python/)  python -m compile.aot --out-dir ../artifacts
+#
+# Emits one artifact per size bucket plus a plain-text manifest the Rust
+# artifact registry parses (no JSON — serde is not in the offline registry):
+#
+#   bfs_layer_n{N}_c{C}.hlo.txt
+#   manifest.txt   lines: "bfs_layer <N> <C> <W> <filename>"
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Size buckets compiled by default. Chosen so the pjrt_bfs example (SCALE
+# 10-12 graphs) always finds a fitting bucket: N is the vertex count, C the
+# number of 16-lane adjacency chunks handled per call.
+DEFAULT_BUCKETS = (
+    (1 << 10, 64),
+    (1 << 12, 128),
+    (1 << 14, 256),
+)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_bucket(n: int, chunks: int) -> str:
+    fn, example = model.make_layer_step(n, chunks)
+    lowered = jax.jit(fn).lower(*example)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-compile BFS layer-step artifacts")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--buckets",
+        default=None,
+        help="comma list of N:C pairs, e.g. 4096:128,16384:256",
+    )
+    args = ap.parse_args()
+
+    buckets = DEFAULT_BUCKETS
+    if args.buckets:
+        buckets = tuple(
+            (int(n), int(c))
+            for n, c in (pair.split(":") for pair in args.buckets.split(","))
+        )
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = []
+    for n, chunks in buckets:
+        text = build_bucket(n, chunks)
+        name = f"bfs_layer_n{n}_c{chunks}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        w = model.words_for(n)
+        manifest_lines.append(f"bfs_layer {n} {chunks} {w} {name}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(manifest_lines)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

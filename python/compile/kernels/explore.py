@@ -1,0 +1,92 @@
+# Layer-1 Pallas kernel: the vectorized adjacency-list exploration of the
+# paper's Listing 1, adapted from Xeon Phi intrinsics to a Pallas dataflow.
+#
+# Hardware adaptation (DESIGN.md §7): the paper's unit of work is "one
+# hardware thread gathers/masks/scatters one 16-lane chunk". Here a chunk is
+# one row of the (C, 16) `neigh` block; the chunk loop is a sequential
+# `fori_loop` (mirroring the per-thread serial chunk schedule); the bitmap
+# word arrays live wholly in kernel memory — the Pallas analogue of the
+# paper's bitmaps-fit-in-L2 argument (SCALE-20 visited = 128 KiB = VMEM
+# resident).
+#
+# Semantics preserved bit-for-bit (these are load-bearing for the
+# reproduction, and are asserted against the scalar oracle in ref.py):
+#   * the filter mask is knot(kor(visited-bit, output-bit)) over the words
+#     gathered *at chunk start* (Listing 1 step 2);
+#   * the output-queue scatter is WORD granularity: lane l writes
+#     stale_word[l] | bit[l]; later lanes of the same chunk overwrite
+#     earlier lanes that hit the same word — the §3.3.2 bit race, kept, to
+#     be repaired by the restoration kernel (restore.py);
+#   * the predecessor write is the negative journal entry P[v] = parent -
+#     nodes (Alg 3 line 12); lane order resolves duplicates (benign race).
+#
+# interpret=True is mandatory: real-TPU lowering emits a Mosaic custom-call
+# the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 16
+BITS_PER_WORD = 32
+
+
+def _explore_kernel(neigh_ref, parent_ref, vis_ref, out_in_ref, pred_in_ref,
+                    out_ref, pred_ref, *, nodes: int):
+    """Process every (C, 16) chunk against the bitmap words.
+
+    Inputs:  neigh (C,16) i32 — adjacency chunks, -1 padding;
+             parent (C,16) i32 — frontier vertex owning each lane;
+             vis (W,) i32 — visited bitmap words (read-only this phase);
+             out_in (W,) i32, pred_in (N,) i32 — state to update.
+    Outputs: out (W,) i32, pred (N,) i32.
+    """
+    out_ref[...] = out_in_ref[...]
+    pred_ref[...] = pred_in_ref[...]
+    num_chunks = neigh_ref.shape[0]
+    vis_words = vis_ref[...]
+
+    def chunk_body(c, _):
+        neigh = neigh_ref[c, :]                      # 1.- load adjacency chunk
+        parent = parent_ref[c, :]
+        valid = neigh >= 0                           # peel/remainder/pad mask
+        safe = jnp.where(valid, neigh, 0)
+        vword = safe // BITS_PER_WORD                # 2.- word / bit offsets
+        vbits = safe % BITS_PER_WORD
+        bits = jnp.left_shift(jnp.int32(1), vbits)   # _mm512_sllv_epi32
+        out_words_now = out_ref[...]                 # gather (chunk-start snapshot)
+        vis_w = vis_words[vword]                     # _mm512_i32gather_epi32
+        out_w = out_words_now[vword]
+        seen = ((vis_w & bits) != 0) | ((out_w & bits) != 0)
+        mask = valid & jnp.logical_not(seen)         # knot(kor(...)) ∧ chunk mask
+
+        # 3.- scatter P and the output queue, lane by lane (ascending lane
+        # order == highest lane wins on conflicts, as on the Phi).
+        new_vals = out_w | bits
+        for l in range(LANES):
+            @pl.when(mask[l])
+            def _(l=l):
+                pred_ref[safe[l]] = parent[l] - nodes      # journal entry (< 0)
+                out_ref[vword[l]] = new_vals[l]            # word-granular racy store
+        return 0
+
+    jax.lax.fori_loop(0, num_chunks, chunk_body, 0)
+
+
+def explore(neigh, parents, vis_words, out_words, pred, *, nodes: int):
+    """Run the exploration kernel. Returns (out_words', pred')."""
+    C, lanes = neigh.shape
+    assert lanes == LANES
+    W = vis_words.shape[0]
+    N = pred.shape[0]
+    kernel = functools.partial(_explore_kernel, nodes=nodes)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((W,), jnp.int32),
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+        ),
+        interpret=True,
+    )(neigh, parents, vis_words, out_words, pred)

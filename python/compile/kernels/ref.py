@@ -1,0 +1,86 @@
+# Pure-numpy correctness oracle for the Layer-1 kernels.
+#
+# `ref_layer_step` computes the race-free, sequentially-consistent result of
+# one BFS layer step: every valid lane is processed one at a time in (chunk,
+# lane) order with *bit-granularity* updates — no word-store races, no lost
+# updates. This is the semantic target the explore+restore kernel pair must
+# reach: the paper's whole §3.3.2 argument is that racy-explore followed by
+# restoration equals the race-free result (up to the benign predecessor
+# race, which `valid_parents` captures).
+
+import numpy as np
+
+LANES = 16
+BITS_PER_WORD = 32
+
+
+def ref_layer_step(neigh, parents, vis_words, out_words, pred, *, nodes: int):
+    """Sequential bit-granular oracle. Returns (out', vis', pred')."""
+    neigh = np.asarray(neigh, dtype=np.int64)
+    parents = np.asarray(parents, dtype=np.int64)
+    out = np.array(out_words, dtype=np.uint32).copy()
+    vis = np.array(vis_words, dtype=np.uint32).copy()
+    p = np.array(pred, dtype=np.int64).copy()
+    n = p.shape[0]
+
+    # exploration: first writer wins (no lost updates, bit-granular)
+    for c in range(neigh.shape[0]):
+        for l in range(neigh.shape[1]):
+            v = int(neigh[c, l])
+            if v < 0:
+                continue
+            assert v < n, "neighbor out of range"
+            w, b = divmod(v, BITS_PER_WORD)
+            if (int(vis[w]) >> b) & 1 or (int(out[w]) >> b) & 1:
+                continue
+            out[w] |= np.uint32(1 << b)
+            p[v] = parents[c, l] - nodes
+
+    # restoration: normalize journal entries in non-zero words
+    for w in range(out.shape[0]):
+        if out[w] == 0:
+            continue
+        for b in range(BITS_PER_WORD):
+            v = w * BITS_PER_WORD + b
+            if v >= n:
+                break
+            if p[v] < 0:
+                out[w] |= np.uint32(1 << b)
+                vis[w] |= np.uint32(1 << b)
+                p[v] += nodes
+
+    return (
+        out.astype(np.uint32).view(np.int32),
+        vis.astype(np.uint32).view(np.int32),
+        p.astype(np.int64),
+    )
+
+
+def valid_parents(neigh, parents):
+    """Map vertex -> set of parents that could legally claim it this layer
+    (the benign race of §3.2: any of them yields a correct spanning tree)."""
+    out = {}
+    neigh = np.asarray(neigh)
+    parents = np.asarray(parents)
+    for c in range(neigh.shape[0]):
+        for l in range(neigh.shape[1]):
+            v = int(neigh[c, l])
+            if v >= 0:
+                out.setdefault(v, set()).add(int(parents[c, l]))
+    return out
+
+
+def discovered_vertices(neigh, vis_words, out_words):
+    """Vertices a layer step must newly discover: valid lanes whose bit is
+    set in neither the visited nor the output bitmap."""
+    vis = np.asarray(vis_words, dtype=np.uint32)
+    out = np.asarray(out_words, dtype=np.uint32)
+    found = set()
+    for v in np.asarray(neigh).flatten():
+        v = int(v)
+        if v < 0:
+            continue
+        w, b = divmod(v, BITS_PER_WORD)
+        if not ((int(vis[w]) >> b) & 1 or (int(out[w]) >> b) & 1):
+            found.add(v)
+    return found

@@ -1,0 +1,75 @@
+# Layer-1 Pallas kernel: the vectorized restoration process (§3.3.2 + §4).
+#
+# The exploration kernel's word-granularity scatters lose bits on conflicts;
+# the predecessor array (element-granularity, no bit races) holds a journal:
+# every vertex discovered this layer has P[v] = parent - nodes < 0. This
+# kernel sweeps the non-zero output-queue words and, for each journalled
+# vertex, (re)sets its output bit, sets its visited bit, and adds `nodes`
+# back — after which out/visited/pred are consistent for the next layer.
+#
+# Vectorization detail from the paper (§4, closing paragraph): a 32-bit word
+# covers 32 vertices but the VPU holds 16 lanes, so each word is processed
+# as a LOW half and a HIGH half of 16 lanes each. We keep that structure —
+# the `half` loop below — because it is the paper's actual dataflow and the
+# per-half horizontal OR is what the cost model prices.
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 16
+BITS_PER_WORD = 32
+
+
+def _restore_kernel(out_in_ref, vis_in_ref, pred_in_ref,
+                    out_ref, vis_ref, pred_ref, *, nodes: int):
+    out_ref[...] = out_in_ref[...]
+    vis_ref[...] = vis_in_ref[...]
+    pred_ref[...] = pred_in_ref[...]
+    W = out_in_ref.shape[0]
+    N = pred_in_ref.shape[0]
+    lane_iota = jnp.arange(LANES, dtype=jnp.int32)
+
+    def word_body(w, _):
+        word = out_ref[w]
+        nonzero = word != 0                       # Alg 3 line 18
+        pred_now = pred_ref[...]
+        patch = jnp.int32(0)
+        for half in range(2):                     # low / high 16-bit halves
+            base_bit = half * LANES
+            verts = w * BITS_PER_WORD + base_bit + lane_iota
+            valid = (verts < N) & nonzero
+            safe = jnp.where(valid, verts, 0)
+            pv = pred_now[safe]                   # gather P
+            mneg = valid & (pv < 0)               # journalled this layer
+            bits = jnp.left_shift(jnp.int32(1), base_bit + lane_iota)
+            # horizontal OR of the selected lanes (bits are distinct powers
+            # of two, so a wrapping sum equals the OR)
+            patch = patch | jnp.sum(jnp.where(mneg, bits, 0))
+            # P[vertex] += nodes for repaired lanes
+            for l in range(LANES):
+                @pl.when(mneg[l])
+                def _(l=l):
+                    pred_ref[safe[l]] = pv[l] + nodes
+        out_ref[w] = word | patch
+        vis_ref[w] = vis_ref[w] | patch
+        return 0
+
+    jax.lax.fori_loop(0, W, word_body, 0)
+
+
+def restore(out_words, vis_words, pred, *, nodes: int):
+    """Run the restoration kernel. Returns (out', vis', pred')."""
+    import functools
+    W = out_words.shape[0]
+    N = pred.shape[0]
+    kernel = functools.partial(_restore_kernel, nodes=nodes)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((W,), jnp.int32),
+            jax.ShapeDtypeStruct((W,), jnp.int32),
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+        ),
+        interpret=True,
+    )(out_words, vis_words, pred)

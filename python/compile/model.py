@@ -1,0 +1,66 @@
+# Layer-2: the JAX compute graph for one BFS layer step.
+#
+# `bfs_layer_step` composes the two Layer-1 Pallas kernels — racy vectorized
+# exploration (Listing 1) followed by vectorized restoration (§3.3.2/§4) —
+# into the function the Rust coordinator calls once per frontier batch per
+# layer. This module is traced once by aot.py; Python never runs at request
+# time.
+#
+# Fixed shapes per compiled artifact (AOT requires static shapes):
+#   N — vertices in the graph (bitmap geometry, nodes constant);
+#   W = ceil(N / 32) — bitmap words;
+#   C — adjacency chunks per call (the Rust side splits a layer's frontier
+#       adjacency into C-chunk batches and carries state between calls).
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import explore as explore_k
+from .kernels import restore as restore_k
+
+LANES = 16
+BITS_PER_WORD = 32
+
+
+def words_for(n: int) -> int:
+    return (n + BITS_PER_WORD - 1) // BITS_PER_WORD
+
+
+def bfs_layer_step(neigh, parents, vis_words, out_words, pred, *, nodes: int):
+    """One batched layer step: explore chunks, then restore.
+
+    Args:
+      neigh:   i32[C, 16] adjacency chunks, -1 padded.
+      parents: i32[C, 16] frontier vertex owning each lane, -1 padded.
+      vis_words: i32[W] visited bitmap words.
+      out_words: i32[W] output-queue bitmap words.
+      pred:    i32[N] predecessor array.
+      nodes:   N, baked into the artifact.
+
+    Returns (out_words', vis_words', pred') — consistent state: restoration
+    has already normalized every journal entry written by this call.
+    """
+    out1, pred1 = explore_k.explore(
+        neigh, parents, vis_words, out_words, pred, nodes=nodes
+    )
+    out2, vis2, pred2 = restore_k.restore(out1, vis_words, pred1, nodes=nodes)
+    return out2, vis2, pred2
+
+
+def make_layer_step(n: int, chunks: int):
+    """Bind static shapes and return (fn, example_args) ready for jit/lower."""
+    w = words_for(n)
+
+    def fn(neigh, parents, vis_words, out_words, pred):
+        return bfs_layer_step(
+            neigh, parents, vis_words, out_words, pred, nodes=n
+        )
+
+    example = (
+        jax.ShapeDtypeStruct((chunks, LANES), jnp.int32),
+        jax.ShapeDtypeStruct((chunks, LANES), jnp.int32),
+        jax.ShapeDtypeStruct((w,), jnp.int32),
+        jax.ShapeDtypeStruct((w,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+    )
+    return fn, example

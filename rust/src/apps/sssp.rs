@@ -1,0 +1,119 @@
+//! Unweighted single-source shortest paths on top of any BFS engine:
+//! the spanning tree's distance map *is* the shortest-path metric, and
+//! the predecessor array encodes one shortest path per vertex.
+
+use crate::bfs::{BfsAlgorithm, BfsTree};
+use crate::graph::Csr;
+use crate::Vertex;
+
+/// Shortest-path answers from one source.
+pub struct ShortestPaths {
+    pub source: Vertex,
+    pub tree: BfsTree,
+    dist: Vec<u32>,
+}
+
+impl ShortestPaths {
+    /// Compute with the given engine.
+    pub fn compute(g: &Csr, source: Vertex, engine: &dyn BfsAlgorithm) -> Self {
+        let result = engine.run(g, source);
+        let dist = result.tree.distances().expect("engine produced a corrupt tree");
+        ShortestPaths { source, tree: result.tree, dist }
+    }
+
+    /// Hop distance to `v`, or `None` if unreachable.
+    pub fn distance(&self, v: Vertex) -> Option<u32> {
+        match self.dist[v as usize] {
+            u32::MAX => None,
+            d => Some(d),
+        }
+    }
+
+    /// One shortest path `source → v` (inclusive), or `None` if
+    /// unreachable.
+    pub fn path_to(&self, v: Vertex) -> Option<Vec<Vertex>> {
+        self.distance(v)?;
+        let mut path = vec![v];
+        let mut cur = v;
+        while cur != self.source {
+            cur = self.tree.parent(cur)?;
+            path.push(cur);
+        }
+        path.reverse();
+        Some(path)
+    }
+
+    /// Eccentricity of the source (max finite distance).
+    pub fn eccentricity(&self) -> u32 {
+        self.dist.iter().copied().filter(|&d| d != u32::MAX).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::serial::SerialQueueBfs;
+    use crate::bfs::vectorized::VectorizedBfs;
+    use crate::graph::{EdgeList, RmatConfig};
+
+    fn grid3x3() -> Csr {
+        // 0-1-2 / 3-4-5 / 6-7-8 grid
+        let mut e = Vec::new();
+        for r in 0..3u32 {
+            for c in 0..3u32 {
+                let v = r * 3 + c;
+                if c < 2 {
+                    e.push((v, v + 1));
+                }
+                if r < 2 {
+                    e.push((v, v + 3));
+                }
+            }
+        }
+        Csr::from_edge_list(0, &EdgeList::with_edges(9, e))
+    }
+
+    #[test]
+    fn grid_distances_and_paths() {
+        let g = grid3x3();
+        let sp = ShortestPaths::compute(&g, 0, &SerialQueueBfs);
+        assert_eq!(sp.distance(8), Some(4)); // manhattan distance
+        assert_eq!(sp.distance(4), Some(2));
+        assert_eq!(sp.eccentricity(), 4);
+        let p = sp.path_to(8).unwrap();
+        assert_eq!(p.len(), 5);
+        assert_eq!(p[0], 0);
+        assert_eq!(*p.last().unwrap(), 8);
+        // every hop is a real edge
+        for w in p.windows(2) {
+            assert!(g.has_edge(w[0], w[1]));
+        }
+    }
+
+    #[test]
+    fn unreachable_is_none() {
+        let el = EdgeList::with_edges(4, vec![(0, 1)]);
+        let g = Csr::from_edge_list(0, &el);
+        let sp = ShortestPaths::compute(&g, 0, &SerialQueueBfs);
+        assert_eq!(sp.distance(3), None);
+        assert_eq!(sp.path_to(3), None);
+    }
+
+    #[test]
+    fn vectorized_engine_gives_valid_paths() {
+        let el = RmatConfig::graph500(9, 8).generate(91);
+        let g = Csr::from_edge_list(9, &el);
+        let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        let sp_v = ShortestPaths::compute(&g, root, &VectorizedBfs::default());
+        let sp_s = ShortestPaths::compute(&g, root, &SerialQueueBfs);
+        for v in 0..g.num_vertices() as Vertex {
+            assert_eq!(sp_v.distance(v), sp_s.distance(v), "distance({v})");
+            if let Some(p) = sp_v.path_to(v) {
+                assert_eq!(p.len() as u32 - 1, sp_v.distance(v).unwrap());
+                for w in p.windows(2) {
+                    assert!(g.has_edge(w[0], w[1]));
+                }
+            }
+        }
+    }
+}

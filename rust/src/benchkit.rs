@@ -1,0 +1,142 @@
+//! A miniature criterion stand-in (criterion is not in the offline crate
+//! registry): warmup, timed iterations, robust statistics, fixed-width
+//! reporting. Used by every `benches/*.rs` target (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Result of one measured benchmark.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iterations: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Measurement {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+
+    /// Events per second given `events` per iteration (e.g. TEPS).
+    pub fn rate(&self, events: f64) -> f64 {
+        if self.mean_secs() > 0.0 {
+            events / self.mean_secs()
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>10.3?} ±{:>9.3?}  (n={}, min {:?}, max {:?})",
+            self.name, self.mean, self.stddev, self.iterations, self.min, self.max
+        )
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop once total measured time exceeds this budget.
+    pub time_budget: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 50,
+            time_budget: Duration::from_secs(5),
+        }
+    }
+}
+
+impl Bench {
+    /// Quick profile for heavyweight end-to-end benches.
+    pub fn quick() -> Self {
+        Bench { warmup_iters: 1, min_iters: 2, max_iters: 10, time_budget: Duration::from_secs(3) }
+    }
+
+    /// Measure `f`, preventing the result from being optimized away via
+    /// `std::hint::black_box`.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let budget_start = Instant::now();
+        while samples.len() < self.max_iters
+            && (samples.len() < self.min_iters || budget_start.elapsed() < self.time_budget)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        Measurement {
+            name: name.to_string(),
+            iterations: samples.len(),
+            mean: Duration::from_secs_f64(mean),
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: Duration::from_secs_f64(samples.iter().copied().fold(f64::INFINITY, f64::min)),
+            max: Duration::from_secs_f64(samples.iter().copied().fold(0.0, f64::max)),
+        }
+    }
+}
+
+/// Print a bench-section header the way the bench binaries expect.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Read a bench parameter from the environment (`PHIBFS_SCALE=20 cargo
+/// bench` runs the paper-scale configuration).
+pub fn env_param<T: std::str::FromStr>(name: &str, default: T) -> T {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_measures_and_bounds_iterations() {
+        let b = Bench { warmup_iters: 1, min_iters: 3, max_iters: 5, time_budget: Duration::from_millis(50) };
+        let mut count = 0usize;
+        let m = b.run("spin", || {
+            count += 1;
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        assert!(m.iterations >= 3 && m.iterations <= 5);
+        assert!(m.mean >= Duration::from_millis(1));
+        assert!(m.min <= m.mean);
+        assert!(count >= m.iterations); // warmup included
+    }
+
+    #[test]
+    fn rate_computes() {
+        let m = Measurement {
+            name: "x".into(),
+            iterations: 1,
+            mean: Duration::from_millis(100),
+            stddev: Duration::ZERO,
+            min: Duration::from_millis(100),
+            max: Duration::from_millis(100),
+        };
+        assert!((m.rate(1000.0) - 10_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn env_param_fallback() {
+        assert_eq!(env_param::<u32>("PHIBFS_DOES_NOT_EXIST", 7), 7);
+    }
+}

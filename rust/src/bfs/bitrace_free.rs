@@ -1,0 +1,306 @@
+//! Algorithm 3 — parallel top-down BFS *without bit-race conditions*:
+//! bitmap frontiers, **no atomic operations**, and the restoration process.
+//!
+//! §3.3: bitmap word updates are plain read-modify-write, so concurrent
+//! writers to the same 32-bit word can lose each other's bits (Fig 6). The
+//! predecessor array is an `i32` array — element stores don't race at bit
+//! level — so it stays consistent and doubles as the repair journal:
+//! during exploration a discovery writes `P[v] = u - nodes` (negative).
+//! The **restoration process** (§3.3.2, Alg 3 lines 15–29) then scans the
+//! non-zero words of `out`, and every vertex in them with `P[vertex] < 0`
+//! gets its `out` and `visited` bits (re)set and `nodes` added back to its
+//! predecessor entry.
+//!
+//! Note the phase structure: `visited` is updated **only** by restoration —
+//! that is what keeps `visited` consistent without atomics (Alg 3 line 24).
+
+use std::time::Instant;
+
+use super::state::{SharedBitmap, SharedPred};
+use super::{BfsAlgorithm, BfsResult, BfsTree, LayerTrace, RunTrace};
+use crate::graph::bitmap::BITS_PER_WORD;
+use crate::graph::{Bitmap, Csr};
+use crate::threads::parallel_for_dynamic;
+use crate::{Pred, Vertex};
+
+const WORD_GRAIN: usize = 16;
+
+/// Parallel BFS with bitmaps, no atomics, and the restoration pass.
+#[derive(Clone, Copy, Debug)]
+pub struct BitRaceFreeBfs {
+    pub num_threads: usize,
+}
+
+impl Default for BitRaceFreeBfs {
+    fn default() -> Self {
+        BitRaceFreeBfs { num_threads: 4 }
+    }
+}
+
+#[derive(Default)]
+struct ExploreAcc {
+    edges_scanned: usize,
+}
+
+/// Statistics returned by one restoration sweep.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RestoreStats {
+    /// Non-zero `out` words scanned (Alg 3 line 18).
+    pub words_scanned: usize,
+    /// Vertices with `P < 0` that were normalized (bit set + P += nodes).
+    pub repaired: usize,
+    /// Subset of `repaired` whose `out` bit was actually missing — i.e.
+    /// genuine lost updates, the Fig 6 corruption.
+    pub lost_bits_fixed: usize,
+}
+
+/// The scalar restoration process (Alg 3 lines 15–29), exposed standalone so
+/// the vectorized algorithm and the corruption-injection tests can reuse it.
+///
+/// Scans `out` at word granularity; for every vertex in a non-zero word
+/// whose predecessor entry is negative: set its `out` bit, set its
+/// `visited` bit, and add `nodes` back to the predecessor entry.
+pub fn restore_layer(
+    num_threads: usize,
+    out: &SharedBitmap,
+    visited: &SharedBitmap,
+    pred: &SharedPred,
+    nodes: Pred,
+) -> RestoreStats {
+    let n = out.len();
+    let num_words = out.num_words();
+    let stats: Vec<RestoreStats> = parallel_for_dynamic(
+        num_threads,
+        num_words,
+        WORD_GRAIN,
+        |_tid, range, acc: &mut RestoreStats| {
+            for w in range {
+                let word = out.word(w);
+                if word == 0 {
+                    continue; // line 18
+                }
+                acc.words_scanned += 1;
+                // lines 20-27: step through every bit position of the word
+                for b in 0..BITS_PER_WORD {
+                    let vertex = Bitmap::bit_to_vertex(w, b);
+                    if vertex as usize >= n {
+                        break;
+                    }
+                    if pred.get(vertex) < 0 {
+                        // line 22
+                        if (word >> b) & 1 == 0 {
+                            acc.lost_bits_fixed += 1;
+                        }
+                        out.or_word_atomic(w, 1 << b); // line 23
+                        visited.set_bit_atomic(vertex); // line 24
+                        pred.add(vertex, nodes); // line 25
+                        acc.repaired += 1;
+                    }
+                }
+            }
+        },
+    );
+    let mut total = RestoreStats::default();
+    for s in stats {
+        total.words_scanned += s.words_scanned;
+        total.repaired += s.repaired;
+        total.lost_bits_fixed += s.lost_bits_fixed;
+    }
+    total
+}
+
+impl BfsAlgorithm for BitRaceFreeBfs {
+    fn name(&self) -> &'static str {
+        "bitrace-free"
+    }
+
+    fn run(&self, g: &Csr, root: Vertex) -> BfsResult {
+        let n = g.num_vertices();
+        let nodes = n as Pred;
+        let pred = SharedPred::new_infinity(n);
+        let visited = SharedBitmap::new(n);
+        let mut input = Bitmap::new(n);
+        let output = SharedBitmap::new(n);
+
+        input.set_bit(root); // line 4
+        visited.set_bit_atomic(root); // line 5
+        pred.set(root, root as Pred); // line 6
+
+        let mut layers = Vec::new();
+        let mut layer = 0usize;
+        let mut frontier_count = 1usize;
+        while frontier_count != 0 {
+            let t0 = Instant::now();
+            let in_words = input.words();
+            // --- exploration (lines 8-14): racy word updates, no atomics ---
+            let accs: Vec<ExploreAcc> = parallel_for_dynamic(
+                self.num_threads,
+                in_words.len(),
+                WORD_GRAIN,
+                |_tid, range, acc: &mut ExploreAcc| {
+                    for w in range {
+                        let mut word = in_words[w];
+                        while word != 0 {
+                            let bit = word.trailing_zeros();
+                            word &= word - 1;
+                            let u = Bitmap::bit_to_vertex(w, bit);
+                            if (u as usize) >= n {
+                                continue;
+                            }
+                            for &v in g.neighbors(u) {
+                                acc.edges_scanned += 1;
+                                // line 10: filter on visited OR out
+                                if !visited.test_bit(v) && !output.test_bit(v) {
+                                    output.set_bit_racy(v); // line 11 (racy!)
+                                    pred.set(v, u as Pred - nodes); // line 12
+                                }
+                            }
+                        }
+                    }
+                },
+            );
+            // --- restoration (lines 15-29) ---
+            let rstats = restore_layer(self.num_threads, &output, &visited, &pred, nodes);
+
+            let edges_scanned: usize = accs.iter().map(|a| a.edges_scanned).sum();
+            let traversed = output.count_ones();
+            layers.push(LayerTrace {
+                layer,
+                input_vertices: frontier_count,
+                edges_scanned,
+                traversed,
+                restore_words_scanned: rstats.words_scanned,
+                restore_fixed: rstats.lost_bits_fixed,
+                wall_ns: t0.elapsed().as_nanos() as u64,
+                ..Default::default()
+            });
+
+            // line 31: swap(in, out); out ← 0
+            let snap = output.snapshot();
+            frontier_count = snap.count_ones();
+            input = snap;
+            output.clear_all();
+            layer += 1;
+        }
+
+        BfsResult {
+            tree: BfsTree::new(root, pred.into_vec()),
+            trace: RunTrace { layers, num_threads: self.num_threads },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::serial::SerialLayeredBfs;
+    use crate::graph::{EdgeList, RmatConfig};
+    use crate::PRED_INFINITY;
+
+    #[test]
+    fn matches_serial_on_rmat() {
+        let el = RmatConfig::graph500(11, 8).generate(21);
+        let g = Csr::from_edge_list(11, &el);
+        let s = SerialLayeredBfs.run(&g, 3);
+        for t in [1, 4] {
+            let r = BitRaceFreeBfs { num_threads: t }.run(&g, 3);
+            assert_eq!(r.tree.distances().unwrap(), s.tree.distances().unwrap());
+        }
+    }
+
+    #[test]
+    fn predecessors_all_normalized() {
+        // After the run no negative predecessor entries may survive.
+        let el = RmatConfig::graph500(10, 8).generate(2);
+        let g = Csr::from_edge_list(10, &el);
+        let r = BitRaceFreeBfs::default().run(&g, 0);
+        for &p in &r.tree.pred {
+            assert!(p == PRED_INFINITY || p >= 0);
+        }
+    }
+
+    #[test]
+    fn restoration_repairs_injected_corruption() {
+        // Simulate Fig 6 exactly: vertices 5 and 9 share word 0; thread B's
+        // store clobbered thread A's bit for vertex 5. P carries both
+        // journal entries.
+        let n = 64usize;
+        let nodes = n as Pred;
+        let out = SharedBitmap::new(n);
+        let visited = SharedBitmap::new(n);
+        let pred = SharedPred::new_infinity(n);
+        // journal: both discovered, parents 2 and 3
+        pred.set(5, 2 - nodes);
+        pred.set(9, 3 - nodes);
+        // corrupted word: only vertex 9's bit survived
+        out.store_word_racy(0, 1 << 9);
+
+        let stats = restore_layer(2, &out, &visited, &pred, nodes);
+        assert_eq!(stats.repaired, 2);
+        assert_eq!(stats.lost_bits_fixed, 1); // vertex 5's bit was missing
+        assert!(out.test_bit(5), "lost bit must be restored");
+        assert!(out.test_bit(9));
+        assert!(visited.test_bit(5) && visited.test_bit(9));
+        assert_eq!(pred.get(5), 2);
+        assert_eq!(pred.get(9), 3);
+    }
+
+    #[test]
+    fn restoration_ignores_clean_words() {
+        let n = 96usize;
+        let nodes = n as Pred;
+        let out = SharedBitmap::new(n);
+        let visited = SharedBitmap::new(n);
+        let pred = SharedPred::new_infinity(n);
+        // a word with a set bit but non-negative pred (already restored)
+        out.store_word_racy(1, 1 << 0); // vertex 32
+        pred.set(32, 7);
+        let stats = restore_layer(1, &out, &visited, &pred, nodes);
+        assert_eq!(stats.repaired, 0);
+        assert_eq!(stats.words_scanned, 1);
+        assert_eq!(pred.get(32), 7);
+    }
+
+    #[test]
+    fn restoration_is_idempotent() {
+        let n = 64usize;
+        let nodes = n as Pred;
+        let out = SharedBitmap::new(n);
+        let visited = SharedBitmap::new(n);
+        let pred = SharedPred::new_infinity(n);
+        pred.set(10, 4 - nodes);
+        out.store_word_racy(0, 1 << 12); // vertex 10's bit lost, 12 present
+        pred.set(12, 4 - nodes);
+        restore_layer(1, &out, &visited, &pred, nodes);
+        let snap1 = out.snapshot();
+        let p1 = pred.snapshot();
+        restore_layer(1, &out, &visited, &pred, nodes);
+        assert_eq!(out.snapshot().words(), snap1.words());
+        assert_eq!(pred.snapshot(), p1);
+    }
+
+    #[test]
+    fn trace_counts_restoration_work() {
+        let el = RmatConfig::graph500(10, 16).generate(4);
+        let g = Csr::from_edge_list(10, &el);
+        // root at the highest-degree vertex so the traversal covers the
+        // giant component (vertex 0 may be isolated after permutation)
+        let root = (0..g.num_vertices() as Vertex).max_by_key(|&v| g.degree(v)).unwrap();
+        let r = BitRaceFreeBfs { num_threads: 2 }.run(&g, root);
+        // restoration scans at least the words holding discoveries
+        let scanned: usize = r.trace.layers.iter().map(|l| l.restore_words_scanned).sum();
+        assert!(scanned > 0);
+    }
+
+    #[test]
+    fn star_graph_heavy_collision_layer() {
+        // A hub exploding into 200 children exercises many same-word writes
+        // within one layer.
+        let el = EdgeList::with_edges(201, (1..=200).map(|i| (0u32, i as Vertex)).collect());
+        let g = Csr::from_edge_list(0, &el);
+        let s = SerialLayeredBfs.run(&g, 0);
+        let r = BitRaceFreeBfs { num_threads: 8 }.run(&g, 0);
+        assert_eq!(r.tree.distances().unwrap(), s.tree.distances().unwrap());
+        assert_eq!(r.tree.reached_count(), 201);
+    }
+}

@@ -1,0 +1,387 @@
+//! Extension (paper §8 future work): the bottom-up step and the
+//! direction-optimizing **hybrid** BFS of Beamer, Asanović & Patterson
+//! (the paper's [3]), with the bottom-up inner loop vectorized using the
+//! same techniques as the top-down explorer — the paper's stated claim
+//! being that "the same techniques can be applied to the bottom-up phase,
+//! which can lead to speed up the hybrid BFS algorithm" (§3).
+//!
+//! Bottom-up inverts the traversal: every *unvisited* vertex scans its
+//! own adjacency for a parent in the current frontier and claims the
+//! first hit. There are no write races at all — each vertex writes only
+//! its own predecessor entry and bitmap bit — so no restoration is
+//! needed; the win is that a high-degree unvisited vertex stops at the
+//! first frontier parent instead of being touched once per frontier edge.
+//!
+//! The hybrid controller is Beamer's: start top-down, switch to bottom-up
+//! when the frontier's outgoing edge volume exceeds `alpha`-th of the
+//! unexplored edge volume, switch back when the frontier shrinks below
+//! `|V| / beta`.
+
+use std::time::Instant;
+
+use super::state::{SharedBitmap, SharedPred};
+use super::vectorized::SimdOpts;
+use super::{BfsAlgorithm, BfsResult, BfsTree, LayerTrace, RunTrace};
+use crate::graph::bitmap::BITS_PER_WORD;
+use crate::graph::{Bitmap, Csr};
+use crate::simd::ops::Vpu;
+use crate::simd::vec512::{Mask16, LANES};
+use crate::threads::parallel_for_dynamic;
+use crate::{Pred, Vertex};
+
+const WORD_GRAIN: usize = 16;
+
+/// One bottom-up layer step (scalar): every unvisited vertex searches its
+/// adjacency for a frontier parent. Returns (edges scanned, discovered).
+pub fn bottom_up_layer_scalar(
+    num_threads: usize,
+    g: &Csr,
+    frontier: &Bitmap,
+    visited: &SharedBitmap,
+    next: &SharedBitmap,
+    pred: &SharedPred,
+) -> (usize, usize) {
+    let n = g.num_vertices();
+    let num_words = n.div_ceil(BITS_PER_WORD as usize);
+    let accs: Vec<(usize, usize)> = parallel_for_dynamic(
+        num_threads,
+        num_words,
+        WORD_GRAIN,
+        |_tid, range, acc: &mut (usize, usize)| {
+            for w in range {
+                for b in 0..BITS_PER_WORD {
+                    let v = Bitmap::bit_to_vertex(w, b);
+                    if v as usize >= n || visited.test_bit(v) {
+                        continue;
+                    }
+                    for &u in g.neighbors(v) {
+                        acc.0 += 1;
+                        if frontier.test_bit(u) {
+                            // claim: only v writes v's entries — race-free
+                            pred.set(v, u as Pred);
+                            next.set_bit_atomic(v);
+                            visited.set_bit_atomic(v);
+                            acc.1 += 1;
+                            break; // first parent wins; stop scanning
+                        }
+                    }
+                }
+            }
+        },
+    );
+    accs.into_iter().fold((0, 0), |a, b| (a.0 + b.0, a.1 + b.1))
+}
+
+/// Vectorized bottom-up layer step: the §4 techniques applied to the
+/// bottom-up scan. For each unvisited vertex, adjacency chunks of 16 are
+/// tested against the frontier bitmap with gather + bit-test exactly like
+/// Listing 1's filter; the first enabled lane supplies the parent.
+#[allow(clippy::too_many_arguments)]
+pub fn bottom_up_layer_simd(
+    num_threads: usize,
+    g: &Csr,
+    frontier_words: &[u32],
+    visited: &SharedBitmap,
+    next: &SharedBitmap,
+    pred: &SharedPred,
+) -> (usize, usize, crate::simd::VpuCounters) {
+    #[derive(Default)]
+    struct Acc {
+        edges: usize,
+        found: usize,
+        vpu: Option<Vpu>,
+    }
+    let n = g.num_vertices();
+    let num_words = n.div_ceil(BITS_PER_WORD as usize);
+    let frontier_i32: Vec<i32> = frontier_words.iter().map(|&w| w as i32).collect();
+    let accs: Vec<Acc> = parallel_for_dynamic(
+        num_threads,
+        num_words,
+        WORD_GRAIN,
+        |_tid, range, acc: &mut Acc| {
+            let vpu = acc.vpu.get_or_insert_with(Vpu::new);
+            for w in range {
+                for b in 0..BITS_PER_WORD {
+                    let v = Bitmap::bit_to_vertex(w, b);
+                    if v as usize >= n || visited.test_bit(v) {
+                        continue;
+                    }
+                    let (start, end) = g.adjacency_range(v);
+                    let mut off = start;
+                    'scan: while off < end {
+                        let len = (end - off).min(LANES);
+                        let chunk_mask = Mask16::first_n(len);
+                        let vneig = vpu.mask_load_vertices(chunk_mask, &g.rows, off);
+                        acc.edges += len;
+                        // frontier membership test = Listing 1's filter
+                        let bpw = vpu.set1_epi32(BITS_PER_WORD as i32);
+                        let vword = vpu.div_epi32(vneig, bpw);
+                        let vbits = vpu.rem_epi32(vneig, bpw);
+                        let words = vpu.mask_i32gather_epi32(chunk_mask, vword, &frontier_i32);
+                        let one = vpu.set1_epi32(1);
+                        let bits = vpu.sllv_epi32(one, vbits);
+                        let hit_all = vpu.test_epi32_mask(words, bits);
+                        let hit = vpu.kand(hit_all, chunk_mask);
+                        if !hit.is_empty() {
+                            // first enabled lane supplies the parent
+                            let lane = hit.0.trailing_zeros() as usize;
+                            let u = vneig.lane(lane) as Vertex;
+                            pred.set(v, u as Pred);
+                            next.set_bit_atomic(v);
+                            visited.set_bit_atomic(v);
+                            acc.found += 1;
+                            break 'scan;
+                        }
+                        off += len;
+                    }
+                }
+            }
+        },
+    );
+    let mut edges = 0;
+    let mut found = 0;
+    let mut vpu = crate::simd::VpuCounters::default();
+    for a in accs {
+        edges += a.edges;
+        found += a.found;
+        if let Some(v) = a.vpu {
+            vpu.merge(&v.counters);
+        }
+    }
+    (edges, found, vpu)
+}
+
+/// Direction-optimizing hybrid BFS (paper [3]; the paper's §8 roadmap).
+#[derive(Clone, Copy, Debug)]
+pub struct HybridBfs {
+    pub num_threads: usize,
+    /// Switch top-down → bottom-up when frontier edge volume exceeds
+    /// `unexplored edges / alpha` (Beamer's α, default 14).
+    pub alpha: usize,
+    /// Switch bottom-up → top-down when the frontier shrinks below
+    /// `|V| / beta` (Beamer's β, default 24).
+    pub beta: usize,
+    /// Vectorize the bottom-up scan (the paper's §3 claim).
+    pub simd: bool,
+    pub opts: SimdOpts,
+}
+
+impl Default for HybridBfs {
+    fn default() -> Self {
+        HybridBfs { num_threads: 4, alpha: 14, beta: 24, simd: true, opts: SimdOpts::full() }
+    }
+}
+
+impl BfsAlgorithm for HybridBfs {
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn run(&self, g: &Csr, root: Vertex) -> BfsResult {
+        let n = g.num_vertices();
+        let total_edges = g.num_directed_edges();
+        let pred = SharedPred::new_infinity(n);
+        let visited = SharedBitmap::new(n);
+        let mut frontier = Bitmap::new(n);
+        let next = SharedBitmap::new(n);
+
+        frontier.set_bit(root);
+        visited.set_bit_atomic(root);
+        pred.set(root, root as Pred);
+
+        let mut layers = Vec::new();
+        let mut layer = 0usize;
+        let mut frontier_count = 1usize;
+        let mut edges_explored_total = 0usize;
+        let mut bottom_up = false;
+        while frontier_count != 0 {
+            let t0 = Instant::now();
+            let frontier_edges: usize = frontier.iter_set_bits().map(|u| g.degree(u)).sum();
+            let unexplored = total_edges.saturating_sub(edges_explored_total);
+            // Beamer's direction heuristic
+            if !bottom_up && frontier_edges * self.alpha > unexplored {
+                bottom_up = true;
+            } else if bottom_up && frontier_count * self.beta < n {
+                bottom_up = false;
+            }
+
+            let (edges_scanned, vpu) = if bottom_up {
+                if self.simd {
+                    let (e, _found, vpu) = bottom_up_layer_simd(
+                        self.num_threads,
+                        g,
+                        frontier.words(),
+                        &visited,
+                        &next,
+                        &pred,
+                    );
+                    (e, vpu)
+                } else {
+                    let (e, _found) = bottom_up_layer_scalar(
+                        self.num_threads,
+                        g,
+                        &frontier,
+                        &visited,
+                        &next,
+                        &pred,
+                    );
+                    (e, Default::default())
+                }
+            } else {
+                // scalar top-down step (Algorithm 2 with atomics)
+                let in_words = frontier.words();
+                let accs: Vec<usize> = parallel_for_dynamic(
+                    self.num_threads,
+                    in_words.len(),
+                    WORD_GRAIN,
+                    |_tid, range, acc: &mut usize| {
+                        for w in range {
+                            let mut word = in_words[w];
+                            while word != 0 {
+                                let bit = word.trailing_zeros();
+                                word &= word - 1;
+                                let u = Bitmap::bit_to_vertex(w, bit);
+                                if (u as usize) >= n {
+                                    continue;
+                                }
+                                for &v in g.neighbors(u) {
+                                    *acc += 1;
+                                    if !visited.test_bit(v) {
+                                        visited.set_bit_atomic(v);
+                                        next.set_bit_atomic(v);
+                                        pred.set(v, u as Pred);
+                                    }
+                                }
+                            }
+                        }
+                    },
+                );
+                (accs.iter().sum(), Default::default())
+            };
+
+            edges_explored_total += frontier_edges;
+            let traversed = next.count_ones();
+            layers.push(LayerTrace {
+                layer,
+                input_vertices: frontier_count,
+                edges_scanned,
+                traversed,
+                vectorized: bottom_up && self.simd,
+                vpu,
+                wall_ns: t0.elapsed().as_nanos() as u64,
+                ..Default::default()
+            });
+
+            let snap = next.snapshot();
+            frontier_count = snap.count_ones();
+            frontier = snap;
+            next.clear_all();
+            layer += 1;
+        }
+
+        BfsResult {
+            tree: BfsTree::new(root, pred.into_vec()),
+            trace: RunTrace { layers, num_threads: self.num_threads },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::serial::SerialLayeredBfs;
+    use crate::bfs::validate::validate;
+    use crate::graph::{EdgeList, RmatConfig};
+
+    fn rmat(scale: u32, seed: u64) -> Csr {
+        let el = RmatConfig::graph500(scale, 16).generate(seed);
+        Csr::from_edge_list(scale, &el)
+    }
+
+    #[test]
+    fn hybrid_matches_serial_distances() {
+        let g = rmat(11, 71);
+        let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        let expected = SerialLayeredBfs.run(&g, root).tree.distances().unwrap();
+        for simd in [false, true] {
+            let r = HybridBfs { num_threads: 2, simd, ..Default::default() }.run(&g, root);
+            assert_eq!(r.tree.distances().unwrap(), expected, "simd={simd}");
+        }
+    }
+
+    #[test]
+    fn hybrid_actually_switches_direction() {
+        // RMAT explosion layers must trigger bottom-up (vectorized marks it)
+        let g = rmat(12, 72);
+        let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        let r = HybridBfs { num_threads: 1, ..Default::default() }.run(&g, root);
+        let bu_layers = r.trace.layers.iter().filter(|l| l.vectorized).count();
+        assert!(bu_layers > 0, "no bottom-up layer on an RMAT explosion");
+        assert!(bu_layers < r.trace.layers.len(), "never switched back / started bottom-up");
+    }
+
+    #[test]
+    fn bottom_up_scans_fewer_edges_on_explosion_layers() {
+        // the whole point of direction optimization (paper [3])
+        let g = rmat(12, 73);
+        let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        let td = SerialLayeredBfs.run(&g, root);
+        let hy = HybridBfs { num_threads: 1, ..Default::default() }.run(&g, root);
+        let td_edges: usize = td.trace.layers.iter().map(|l| l.edges_scanned).sum();
+        let hy_edges: usize = hy.trace.layers.iter().map(|l| l.edges_scanned).sum();
+        assert!(
+            hy_edges < td_edges,
+            "hybrid scanned {hy_edges}, top-down {td_edges}"
+        );
+    }
+
+    #[test]
+    fn hybrid_validates() {
+        let g = rmat(10, 74);
+        for root in [0u32, 5] {
+            let r = HybridBfs::default().run(&g, root);
+            let rep = validate(&g, &r.tree);
+            assert!(rep.all_passed(), "{}", rep.summary());
+        }
+    }
+
+    #[test]
+    fn scalar_and_simd_bottom_up_agree() {
+        let g = rmat(10, 75);
+        let n = g.num_vertices();
+        // frontier = all vertices at distance 1 from the hub
+        let root = (0..n as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        let mut frontier = Bitmap::new(n);
+        frontier.set_bit(root);
+        let mk = || {
+            let vis = SharedBitmap::new(n);
+            vis.set_bit_atomic(root);
+            let next = SharedBitmap::new(n);
+            let pred = SharedPred::new_infinity(n);
+            pred.set(root, root as Pred);
+            (vis, next, pred)
+        };
+        let (v1, n1, p1) = mk();
+        bottom_up_layer_scalar(1, &g, &frontier, &v1, &n1, &p1);
+        let (v2, n2, p2) = mk();
+        bottom_up_layer_simd(1, &g, frontier.words(), &v2, &n2, &p2);
+        assert_eq!(n1.snapshot().words(), n2.snapshot().words());
+        assert_eq!(v1.snapshot().words(), v2.snapshot().words());
+        // parents may differ in *which* frontier vertex... with a single
+        // frontier vertex they cannot:
+        assert_eq!(p1.snapshot(), p2.snapshot());
+    }
+
+    #[test]
+    fn bottom_up_no_frontier_discovers_nothing() {
+        let el = EdgeList::with_edges(8, vec![(0, 1), (1, 2)]);
+        let g = Csr::from_edge_list(0, &el);
+        let frontier = Bitmap::new(8);
+        let vis = SharedBitmap::new(8);
+        let next = SharedBitmap::new(8);
+        let pred = SharedPred::new_infinity(8);
+        let (_e, found) = bottom_up_layer_scalar(1, &g, &frontier, &vis, &next, &pred);
+        assert_eq!(found, 0);
+        assert!(next.is_all_zero());
+    }
+}

@@ -1,0 +1,248 @@
+//! The paper's algorithm ladder.
+//!
+//! | Module | Paper artifact |
+//! |---|---|
+//! | [`serial`] | Algorithm 1 — serial top-down (queue and layered forms) |
+//! | [`parallel`] | Algorithm 2 — OpenMP-style parallel top-down (the `non-simd` curve of Fig 10) |
+//! | [`bitrace_free`] | Algorithm 3 — bitmaps, no atomics, restoration process |
+//! | [`vectorized`] | §4 / Listing 1 — the SIMD explorer + vectorized restoration (the `simd` curve) |
+//! | [`policy`] | §4.1 — which layers run vectorized |
+//! | [`validate`] | §5.3 — the Graph500 five-check soft validator |
+//! | [`state`] | shared frontier/visited/predecessor state for the threaded versions |
+//!
+//! All algorithms implement [`BfsAlgorithm`] and return a [`BfsResult`]:
+//! the spanning tree (predecessor array, §3.1) plus a [`RunTrace`] of
+//! per-layer work counters that the Xeon Phi performance model prices.
+
+pub mod bitrace_free;
+pub mod bottom_up;
+pub mod parallel;
+pub mod policy;
+pub mod serial;
+pub mod state;
+pub mod validate;
+pub mod vectorized;
+
+use crate::graph::Csr;
+use crate::simd::VpuCounters;
+use crate::{Pred, Vertex, PRED_INFINITY};
+
+/// The BFS spanning tree: `pred[v]` is the parent of `v`, `pred[root] ==
+/// root`, and unreached vertices hold [`PRED_INFINITY`] (§3.1's "∞").
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BfsTree {
+    pub root: Vertex,
+    pub pred: Vec<Pred>,
+}
+
+impl BfsTree {
+    pub fn new(root: Vertex, pred: Vec<Pred>) -> Self {
+        BfsTree { root, pred }
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.pred.len()
+    }
+
+    /// Parent of `v`, or `None` if `v` was not reached.
+    pub fn parent(&self, v: Vertex) -> Option<Vertex> {
+        let p = self.pred[v as usize];
+        if p == PRED_INFINITY {
+            None
+        } else {
+            Some(p as Vertex)
+        }
+    }
+
+    /// True if `v` is in the tree.
+    #[inline]
+    pub fn reached(&self, v: Vertex) -> bool {
+        self.pred[v as usize] != PRED_INFINITY
+    }
+
+    /// Number of vertices in the tree (root included).
+    pub fn reached_count(&self) -> usize {
+        self.pred.iter().filter(|&&p| p != PRED_INFINITY).count()
+    }
+
+    /// Distance-from-root map computed from the predecessor chain, with
+    /// memoization; `u32::MAX` marks unreached vertices. Returns `None` if
+    /// the parent pointers contain a cycle. Chains that dangle (a "reached"
+    /// vertex whose ancestor line never hits the root) are classified as
+    /// unreached rather than panicking — the validator turns both defects
+    /// into check failures.
+    pub fn distances(&self) -> Option<Vec<u32>> {
+        const UNSEEN: u32 = u32::MAX - 1;
+        const ON_STACK: u32 = u32::MAX - 2;
+        let n = self.pred.len();
+        let mut dist = vec![UNSEEN; n];
+        if self.reached(self.root) {
+            dist[self.root as usize] = 0;
+        }
+        let mut stack: Vec<usize> = Vec::new();
+        for v0 in 0..n {
+            if dist[v0] != UNSEEN {
+                continue;
+            }
+            if !self.reached(v0 as Vertex) {
+                dist[v0] = u32::MAX;
+                continue;
+            }
+            let mut v = v0;
+            loop {
+                match dist[v] {
+                    UNSEEN => {
+                        dist[v] = ON_STACK;
+                        stack.push(v);
+                        let p = self.pred[v];
+                        if p == crate::PRED_INFINITY || p < 0 || p as usize >= n {
+                            // dangling chain — everything on it is unreached
+                            for &u in &stack {
+                                dist[u] = u32::MAX;
+                            }
+                            stack.clear();
+                            break;
+                        }
+                        v = p as usize;
+                    }
+                    ON_STACK => return None, // cycle
+                    u32::MAX => {
+                        // anchored on an unreached vertex — dangling chain
+                        for &u in &stack {
+                            dist[u] = u32::MAX;
+                        }
+                        stack.clear();
+                        break;
+                    }
+                    d => {
+                        let mut dd = d;
+                        while let Some(u) = stack.pop() {
+                            dd += 1;
+                            dist[u] = dd;
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        Some(dist)
+    }
+}
+
+/// Per-layer work trace (one entry per `while in ≠ 0` iteration).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LayerTrace {
+    pub layer: usize,
+    /// Vertices in the input list.
+    pub input_vertices: usize,
+    /// Adjacency entries inspected.
+    pub edges_scanned: usize,
+    /// Vertices newly discovered into the output list.
+    pub traversed: usize,
+    /// Bitmap words scanned by the restoration pass (0 when not applicable).
+    pub restore_words_scanned: usize,
+    /// Vertices actually repaired by restoration.
+    pub restore_fixed: usize,
+    /// Whether this layer ran through the vector unit.
+    pub vectorized: bool,
+    /// VPU events for this layer (zero for scalar layers).
+    pub vpu: VpuCounters,
+    /// Wall-clock nanoseconds actually spent on this layer (host machine).
+    pub wall_ns: u64,
+}
+
+/// Whole-run trace: the input to [`crate::phi::sim`].
+#[derive(Clone, Debug, Default)]
+pub struct RunTrace {
+    pub layers: Vec<LayerTrace>,
+    /// Threads the algorithm was configured with (the Phi model re-maps
+    /// work onto its own core topology, but keeps this for reporting).
+    pub num_threads: usize,
+}
+
+impl RunTrace {
+    pub fn total_edges_scanned(&self) -> usize {
+        self.layers.iter().map(|l| l.edges_scanned).sum()
+    }
+
+    pub fn total_traversed(&self) -> usize {
+        self.layers.iter().map(|l| l.traversed).sum()
+    }
+
+    pub fn total_wall_ns(&self) -> u64 {
+        self.layers.iter().map(|l| l.wall_ns).sum()
+    }
+
+    /// Merged VPU counters across layers.
+    pub fn vpu_totals(&self) -> VpuCounters {
+        let mut c = VpuCounters::default();
+        for l in &self.layers {
+            c.merge(&l.vpu);
+        }
+        c
+    }
+}
+
+/// Result of one BFS execution.
+#[derive(Clone, Debug)]
+pub struct BfsResult {
+    pub tree: BfsTree,
+    pub trace: RunTrace,
+}
+
+/// Common interface over the algorithm ladder.
+pub trait BfsAlgorithm {
+    /// Short name for reports ("serial", "non-simd", "simd", ...).
+    fn name(&self) -> &'static str;
+
+    /// Traverse `g` from `root`.
+    fn run(&self, g: &Csr, root: Vertex) -> BfsResult;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_basics() {
+        // 0 -> 1 -> 2, vertex 3 unreached
+        let t = BfsTree::new(0, vec![0, 0, 1, PRED_INFINITY]);
+        assert_eq!(t.parent(0), Some(0));
+        assert_eq!(t.parent(2), Some(1));
+        assert_eq!(t.parent(3), None);
+        assert_eq!(t.reached_count(), 3);
+        assert_eq!(t.distances().unwrap(), vec![0, 1, 2, u32::MAX]);
+    }
+
+    #[test]
+    fn distances_detect_cycles() {
+        // 1 and 2 point at each other — corrupt tree.
+        let t = BfsTree::new(0, vec![0, 2, 1, PRED_INFINITY]);
+        assert!(t.distances().is_none());
+    }
+
+    #[test]
+    fn distances_long_chain_no_recursion() {
+        let n = 100_000;
+        let mut pred: Vec<Pred> = (0..n as Pred).map(|v| v - 1).collect();
+        pred[0] = 0;
+        let t = BfsTree::new(0, pred);
+        let d = t.distances().unwrap();
+        assert_eq!(d[n - 1], (n - 1) as u32);
+    }
+
+    #[test]
+    fn trace_totals() {
+        let trace = RunTrace {
+            layers: vec![
+                LayerTrace { layer: 0, edges_scanned: 10, traversed: 5, wall_ns: 100, ..Default::default() },
+                LayerTrace { layer: 1, edges_scanned: 20, traversed: 7, wall_ns: 200, ..Default::default() },
+            ],
+            num_threads: 4,
+        };
+        assert_eq!(trace.total_edges_scanned(), 30);
+        assert_eq!(trace.total_traversed(), 12);
+        assert_eq!(trace.total_wall_ns(), 300);
+    }
+}

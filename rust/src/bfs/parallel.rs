@@ -1,0 +1,204 @@
+//! Algorithm 2 — the parallel top-down BFS (the paper's `non-simd` version).
+//!
+//! §3.2: the outer (input-list) loop is parallelized across OpenMP threads;
+//! the inner (adjacency) loop stays scalar here — exploiting it is the job
+//! of the vector unit in §4. Bit updates use the atomic
+//! `__sync_fetch_and_or` escape hatch the paper mentions, so no restoration
+//! is needed; the predecessor write keeps the *benign* race (either parent
+//! may win, both give a correct spanning tree).
+//!
+//! Scheduling is OpenMP `schedule(dynamic)` over bitmap words of the input
+//! frontier — the skewed RMAT degrees make static partitions badly
+//! imbalanced (§6.1 attributes the TEPS jitter at high thread counts to
+//! exactly this imbalance).
+
+use std::time::Instant;
+
+use super::state::{SharedBitmap, SharedPred};
+use super::{BfsAlgorithm, BfsResult, BfsTree, LayerTrace, RunTrace};
+use crate::graph::bitmap::BITS_PER_WORD;
+use crate::graph::{Bitmap, Csr};
+use crate::threads::parallel_for_dynamic;
+use crate::{Pred, Vertex};
+
+/// Words of the input bitmap each dynamic-schedule grab claims.
+const WORD_GRAIN: usize = 16;
+
+/// Parallel non-SIMD top-down BFS.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelBfs {
+    /// Worker threads (the paper sweeps 1..240).
+    pub num_threads: usize,
+}
+
+impl Default for ParallelBfs {
+    fn default() -> Self {
+        ParallelBfs { num_threads: 4 }
+    }
+}
+
+/// Per-thread accumulator for one layer.
+#[derive(Default)]
+struct LayerAcc {
+    edges_scanned: usize,
+    traversed: usize,
+}
+
+impl BfsAlgorithm for ParallelBfs {
+    fn name(&self) -> &'static str {
+        "non-simd"
+    }
+
+    fn run(&self, g: &Csr, root: Vertex) -> BfsResult {
+        let n = g.num_vertices();
+        let pred = SharedPred::new_infinity(n);
+        let visited = SharedBitmap::new(n);
+        let mut input = Bitmap::new(n);
+        let output = SharedBitmap::new(n);
+
+        input.set_bit(root); // line 4
+        visited.set_bit_atomic(root); // line 5
+        pred.set(root, root as Pred); // line 6
+
+        let mut layers = Vec::new();
+        let mut layer = 0usize;
+        let mut frontier_count = 1usize;
+        while frontier_count != 0 {
+            // line 7
+            let t0 = Instant::now();
+            let in_words = input.words();
+            let accs: Vec<LayerAcc> = parallel_for_dynamic(
+                self.num_threads,
+                in_words.len(),
+                WORD_GRAIN,
+                |_tid, range, acc: &mut LayerAcc| {
+                    for w in range {
+                        let mut word = in_words[w];
+                        while word != 0 {
+                            let bit = word.trailing_zeros();
+                            word &= word - 1;
+                            let u = Bitmap::bit_to_vertex(w, bit);
+                            if (u as usize) >= n {
+                                continue;
+                            }
+                            // lines 9-14: scalar adjacency exploration
+                            for &v in g.neighbors(u) {
+                                acc.edges_scanned += 1;
+                                if !visited.test_bit(v) && !output.test_bit(v) {
+                                    // atomic variant: no bit race, no
+                                    // restoration; benign pred race remains.
+                                    output.set_bit_atomic(v);
+                                    visited.set_bit_atomic(v);
+                                    pred.set(v, u as Pred);
+                                    acc.traversed += 1;
+                                }
+                            }
+                        }
+                    }
+                },
+            );
+
+            let edges_scanned: usize = accs.iter().map(|a| a.edges_scanned).sum();
+            // `traversed` from per-thread counters can double-count under the
+            // benign race (two threads passing the test before either sets
+            // the bit); report the exact popcount instead.
+            let traversed = output.count_ones();
+            layers.push(LayerTrace {
+                layer,
+                input_vertices: frontier_count,
+                edges_scanned,
+                traversed,
+                wall_ns: t0.elapsed().as_nanos() as u64,
+                ..Default::default()
+            });
+
+            // line 16: swap(in, out); out ← 0
+            let snap = output.snapshot();
+            frontier_count = snap.count_ones();
+            input = snap;
+            output.clear_all();
+            layer += 1;
+        }
+
+        BfsResult {
+            tree: BfsTree::new(root, pred.into_vec()),
+            trace: RunTrace { layers, num_threads: self.num_threads },
+        }
+    }
+}
+
+/// Sanity helper shared by tests: number of words a frontier of `n` vertices
+/// occupies.
+#[allow(dead_code)]
+fn words_for(n: usize) -> usize {
+    n.div_ceil(BITS_PER_WORD as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::serial::SerialLayeredBfs;
+    use crate::graph::{EdgeList, RmatConfig};
+
+    fn agree_with_serial(g: &Csr, root: Vertex, threads: usize) {
+        let serial = SerialLayeredBfs.run(g, root);
+        let par = ParallelBfs { num_threads: threads }.run(g, root);
+        assert_eq!(
+            par.tree.distances().unwrap(),
+            serial.tree.distances().unwrap(),
+            "distance maps differ (threads={threads})"
+        );
+    }
+
+    #[test]
+    fn matches_serial_small() {
+        let el = EdgeList::with_edges(7, vec![(1, 2), (1, 3), (2, 4), (3, 4), (3, 5), (4, 6)]);
+        let g = Csr::from_edge_list(0, &el);
+        for t in [1, 2, 4, 8] {
+            agree_with_serial(&g, 1, t);
+        }
+    }
+
+    #[test]
+    fn matches_serial_rmat() {
+        let el = RmatConfig::graph500(11, 8).generate(3);
+        let g = Csr::from_edge_list(11, &el);
+        for root in [0u32, 7, 100] {
+            agree_with_serial(&g, root, 4);
+        }
+    }
+
+    #[test]
+    fn layer_structure_matches_serial() {
+        let el = RmatConfig::graph500(10, 8).generate(9);
+        let g = Csr::from_edge_list(10, &el);
+        let s = SerialLayeredBfs.run(&g, 2);
+        let p = ParallelBfs { num_threads: 3 }.run(&g, 2);
+        assert_eq!(p.trace.layers.len(), s.trace.layers.len());
+        for (pl, sl) in p.trace.layers.iter().zip(s.trace.layers.iter()) {
+            assert_eq!(pl.input_vertices, sl.input_vertices);
+            assert_eq!(pl.edges_scanned, sl.edges_scanned);
+            assert_eq!(pl.traversed, sl.traversed);
+        }
+    }
+
+    #[test]
+    fn single_thread_equals_multi() {
+        let el = RmatConfig::graph500(9, 8).generate(5);
+        let g = Csr::from_edge_list(9, &el);
+        let a = ParallelBfs { num_threads: 1 }.run(&g, 0);
+        let b = ParallelBfs { num_threads: 6 }.run(&g, 0);
+        assert_eq!(a.tree.distances().unwrap(), b.tree.distances().unwrap());
+    }
+
+    #[test]
+    fn unreached_vertices_stay_infinity() {
+        let el = EdgeList::with_edges(10, vec![(0, 1), (1, 2)]);
+        let g = Csr::from_edge_list(0, &el);
+        let r = ParallelBfs { num_threads: 2 }.run(&g, 0);
+        assert_eq!(r.tree.reached_count(), 3);
+        for v in 3..10u32 {
+            assert!(!r.tree.reached(v));
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! §4.1 — *Which layers are vectorized?*
+//!
+//! The paper observes that RMAT graphs are small-world: per-layer input
+//! vertices grow to a mid-traversal peak and collapse after it (Table 1),
+//! and most of the edge volume is concentrated in a couple of layers. The
+//! vector unit only pays off where adjacency lists are long enough to fill
+//! 16-lane chunks, so the paper runs the SIMD explorer "only for the first
+//! [heavy] layers and the parallel top-down ... for the rest".
+//!
+//! The policy is a parameter here so the ablation bench can compare the
+//! paper's choice against alternatives.
+
+/// Decides, per layer, whether to run the vectorized explorer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LayerPolicy {
+    /// Vectorize every layer.
+    All,
+    /// Vectorize no layer (degenerates to the scalar parallel algorithm).
+    None,
+    /// Vectorize the first `k` layers *with non-trivial input* — the
+    /// paper's literal "only for the first two layers" with `k = 2`
+    /// (layer 0, the root's single vertex, never counts as non-trivial).
+    FirstK(usize),
+    /// Vectorize any layer whose expected edge volume is at least `0.01 ×
+    /// usize` …no — see [`LayerPolicy::heavy`] constructor: layers whose
+    /// mean frontier degree reaches the threshold (full 16-lane chunks are
+    /// likely). This is the adaptive variant the evaluation uses by
+    /// default: it picks exactly the explosion layers of Table 1.
+    MinMeanDegree(usize),
+}
+
+impl Default for LayerPolicy {
+    /// The paper's configuration: SIMD for the first two non-trivial
+    /// layers. (§4.1)
+    fn default() -> Self {
+        LayerPolicy::FirstK(2)
+    }
+}
+
+impl LayerPolicy {
+    /// Adaptive policy: vectorize when the frontier's mean degree fills at
+    /// least one 16-lane chunk per vertex.
+    pub fn heavy() -> Self {
+        LayerPolicy::MinMeanDegree(16)
+    }
+
+    /// Decide for a layer. `nontrivial_layers_so_far` counts previous
+    /// layers whose input held more than one vertex; `input_vertices` and
+    /// `input_edges` describe the layer about to be processed.
+    pub fn vectorize(
+        &self,
+        nontrivial_layers_so_far: usize,
+        input_vertices: usize,
+        input_edges: usize,
+    ) -> bool {
+        match *self {
+            LayerPolicy::All => true,
+            LayerPolicy::None => false,
+            LayerPolicy::FirstK(k) => input_vertices > 1 && nontrivial_layers_so_far < k,
+            LayerPolicy::MinMeanDegree(d) => {
+                input_vertices > 0 && input_edges / input_vertices >= d
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_and_none() {
+        assert!(LayerPolicy::All.vectorize(0, 1, 0));
+        assert!(!LayerPolicy::None.vectorize(5, 1000, 100_000));
+    }
+
+    #[test]
+    fn first_k_skips_trivial_root_layer() {
+        let p = LayerPolicy::FirstK(2);
+        // layer 0: single root vertex — not vectorized, doesn't consume k
+        assert!(!p.vectorize(0, 1, 12));
+        // first non-trivial layer
+        assert!(p.vectorize(0, 12, 21_892));
+        // second non-trivial layer
+        assert!(p.vectorize(1, 18_122, 13_547_462));
+        // third — back to scalar
+        assert!(!p.vectorize(2, 540_575, 17_626_910));
+    }
+
+    #[test]
+    fn min_mean_degree_targets_explosion_layers() {
+        let p = LayerPolicy::heavy();
+        // Table 1 rows: (input, edges)
+        assert!(!p.vectorize(0, 1, 12)); // layer 0: degree 12 < 16
+        assert!(p.vectorize(0, 12, 21_892)); // layer 1: ~1824
+        assert!(p.vectorize(1, 18_122, 13_547_462)); // layer 2: ~747
+        assert!(p.vectorize(2, 540_575, 17_626_910)); // layer 3: ~32
+        assert!(!p.vectorize(3, 100_874, 150_698)); // layer 4: ~1.5
+        assert!(!p.vectorize(4, 486, 490)); // layer 5: ~1
+    }
+
+    #[test]
+    fn zero_inputs_never_vectorize_adaptive() {
+        assert!(!LayerPolicy::heavy().vectorize(0, 0, 0));
+    }
+}

@@ -1,0 +1,199 @@
+//! Algorithm 1 — the serial top-down BFS.
+//!
+//! §3.1: two lists (`in`, `out`) processed layer by layer, a `visited`
+//! array, and the predecessor array `P` that *is* the output spanning tree.
+//! The classic single-queue variant is also provided ([`SerialQueueBfs`]) —
+//! it is the O(V+E) baseline the paper starts from, and its tree is the
+//! reference everything else is property-tested against.
+
+use std::time::Instant;
+
+use super::{BfsAlgorithm, BfsResult, BfsTree, LayerTrace, RunTrace};
+use crate::graph::{Bitmap, Csr};
+use crate::{Pred, Vertex, PRED_INFINITY};
+
+/// Classic FIFO-queue serial BFS (the Θ(1) enqueue/dequeue formulation the
+/// paper's §3 opens with). No layer structure — one trace entry total.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SerialQueueBfs;
+
+impl BfsAlgorithm for SerialQueueBfs {
+    fn name(&self) -> &'static str {
+        "serial-queue"
+    }
+
+    fn run(&self, g: &Csr, root: Vertex) -> BfsResult {
+        let start = Instant::now();
+        let n = g.num_vertices();
+        let mut pred: Vec<Pred> = vec![PRED_INFINITY; n];
+        let mut visited = Bitmap::new(n);
+        let mut queue = std::collections::VecDeque::with_capacity(1024);
+        pred[root as usize] = root as Pred;
+        visited.set_bit(root);
+        queue.push_back(root);
+        let mut edges_scanned = 0usize;
+        let mut traversed = 0usize;
+        while let Some(u) = queue.pop_front() {
+            for &v in g.neighbors(u) {
+                edges_scanned += 1;
+                if !visited.test_bit(v) {
+                    visited.set_bit(v);
+                    pred[v as usize] = u as Pred;
+                    queue.push_back(v);
+                    traversed += 1;
+                }
+            }
+        }
+        let trace = RunTrace {
+            layers: vec![LayerTrace {
+                layer: 0,
+                input_vertices: 1,
+                edges_scanned,
+                traversed,
+                wall_ns: start.elapsed().as_nanos() as u64,
+                ..Default::default()
+            }],
+            num_threads: 1,
+        };
+        BfsResult { tree: BfsTree::new(root, pred), trace }
+    }
+}
+
+/// Algorithm 1 proper: layer-synchronous serial top-down with `in`/`out`
+/// lists swapped each layer (§3.1 lines 7–17).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SerialLayeredBfs;
+
+impl BfsAlgorithm for SerialLayeredBfs {
+    fn name(&self) -> &'static str {
+        "serial-layered"
+    }
+
+    fn run(&self, g: &Csr, root: Vertex) -> BfsResult {
+        let n = g.num_vertices();
+        let mut pred: Vec<Pred> = vec![PRED_INFINITY; n];
+        let mut visited = Bitmap::new(n);
+        // The serial algorithm's lists are plain vertex vectors; bitmaps
+        // arrive with Algorithm 3.
+        let mut input: Vec<Vertex> = Vec::new();
+        let mut output: Vec<Vertex> = Vec::new();
+
+        pred[root as usize] = root as Pred; // line 6
+        visited.set_bit(root); // line 5
+        input.push(root); // line 4
+
+        let mut layers = Vec::new();
+        let mut layer = 0usize;
+        while !input.is_empty() {
+            // line 7
+            let t0 = Instant::now();
+            let mut edges_scanned = 0usize;
+            for &u in &input {
+                // line 8
+                for &v in g.neighbors(u) {
+                    // line 9
+                    edges_scanned += 1;
+                    if !visited.test_bit(v) {
+                        // line 10
+                        visited.set_bit(v); // line 11
+                        output.push(v); // line 12
+                        pred[v as usize] = u as Pred; // line 13
+                    }
+                }
+            }
+            layers.push(LayerTrace {
+                layer,
+                input_vertices: input.len(),
+                edges_scanned,
+                traversed: output.len(),
+                wall_ns: t0.elapsed().as_nanos() as u64,
+                ..Default::default()
+            });
+            std::mem::swap(&mut input, &mut output); // line 16 (swap)
+            output.clear(); // line 16 (out ← 0)
+            layer += 1;
+        }
+        BfsResult { tree: BfsTree::new(root, pred), trace: RunTrace { layers, num_threads: 1 } }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EdgeList, RmatConfig};
+
+    fn paper_fig2_graph() -> Csr {
+        // The Fig 2 example: root 1 reaches three layers.
+        //     1 -> {2, 3}; 2 -> {4}; 3 -> {4, 5}; 4 -> {6}; 5 -> {}
+        let el = EdgeList::with_edges(7, vec![(1, 2), (1, 3), (2, 4), (3, 4), (3, 5), (4, 6)]);
+        Csr::from_edge_list(0, &el)
+    }
+
+    #[test]
+    fn queue_and_layered_agree_on_distances() {
+        let g = paper_fig2_graph();
+        let a = SerialQueueBfs.run(&g, 1);
+        let b = SerialLayeredBfs.run(&g, 1);
+        assert_eq!(a.tree.distances().unwrap(), b.tree.distances().unwrap());
+    }
+
+    #[test]
+    fn fig2_distances() {
+        let g = paper_fig2_graph();
+        let r = SerialLayeredBfs.run(&g, 1);
+        let d = r.tree.distances().unwrap();
+        assert_eq!(d[1], 0);
+        assert_eq!(d[2], 1);
+        assert_eq!(d[3], 1);
+        assert_eq!(d[4], 2);
+        assert_eq!(d[5], 2);
+        assert_eq!(d[6], 3);
+        assert_eq!(d[0], u32::MAX); // vertex 0 unreachable
+    }
+
+    #[test]
+    fn root_is_own_parent() {
+        let g = paper_fig2_graph();
+        for alg in [&SerialQueueBfs as &dyn BfsAlgorithm, &SerialLayeredBfs] {
+            let r = alg.run(&g, 1);
+            assert_eq!(r.tree.parent(1), Some(1));
+        }
+    }
+
+    #[test]
+    fn tree_edges_exist_in_graph() {
+        let el = RmatConfig::graph500(10, 8).generate(1);
+        let g = Csr::from_edge_list(10, &el);
+        let r = SerialLayeredBfs.run(&g, 0);
+        for v in 0..g.num_vertices() as Vertex {
+            if let Some(p) = r.tree.parent(v) {
+                if p != v {
+                    assert!(g.has_edge(p, v), "tree edge {p}->{v} not in graph");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn layer_trace_matches_profile() {
+        let el = RmatConfig::graph500(10, 8).generate(2);
+        let g = Csr::from_edge_list(10, &el);
+        let r = SerialLayeredBfs.run(&g, 5);
+        let profile = crate::graph::stats::LayerProfile::compute(&g, 5);
+        assert_eq!(r.trace.layers.len(), profile.num_layers());
+        for (t, p) in r.trace.layers.iter().zip(profile.rows.iter()) {
+            assert_eq!(t.input_vertices, p.input_vertices);
+            assert_eq!(t.edges_scanned, p.edges);
+            assert_eq!(t.traversed, p.traversed);
+        }
+    }
+
+    #[test]
+    fn isolated_root_reaches_only_itself() {
+        let el = EdgeList::with_edges(4, vec![(0, 1)]);
+        let g = Csr::from_edge_list(0, &el);
+        let r = SerialQueueBfs.run(&g, 3);
+        assert_eq!(r.tree.reached_count(), 1);
+        assert!(r.tree.reached(3));
+    }
+}

@@ -1,0 +1,257 @@
+//! Shared traversal state for the threaded algorithms.
+//!
+//! Rust won't let several threads mutate a plain `Vec<u32>` (that's UB), so
+//! the shared bitmap and predecessor arrays are `AtomicU32`/`AtomicI32`
+//! cells accessed with `Relaxed` ordering. Two update disciplines exist,
+//! mirroring the paper:
+//!
+//! * [`SharedBitmap::set_bit_atomic`] — `__sync_fetch_and_or`, the atomic
+//!   escape hatch the paper *rejects* for the vector path (§3.2: atomic bit
+//!   operations are not in the vector ISA) but which is the natural
+//!   implementation for the scalar parallel baseline (Algorithm 2).
+//! * [`SharedBitmap::set_bit_racy`] — plain read-modify-write on the whole
+//!   word (load, OR, store). Concurrent writers to the same word can lose
+//!   each other's bits — the §3.3.2 bit race, deliberately preserved. The
+//!   restoration process repairs the damage afterwards.
+
+use std::sync::atomic::{AtomicI32, AtomicU32, Ordering};
+
+use crate::graph::bitmap::{Bitmap, BITS_PER_WORD};
+use crate::{Pred, Vertex, PRED_INFINITY};
+
+/// A bitmap whose words are atomic cells (safe to share across threads; the
+/// *algorithmic* races are chosen by the caller via the two set methods).
+pub struct SharedBitmap {
+    words: Vec<AtomicU32>,
+    len: usize,
+}
+
+impl SharedBitmap {
+    pub fn new(len: usize) -> Self {
+        let nwords = len.div_ceil(BITS_PER_WORD as usize);
+        SharedBitmap { words: (0..nwords).map(|_| AtomicU32::new(0)).collect(), len }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn num_words(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Atomic OR — race-free bit set (`__sync_fetch_and_or`).
+    #[inline]
+    pub fn set_bit_atomic(&self, v: Vertex) {
+        self.words[(v / BITS_PER_WORD) as usize]
+            .fetch_or(1 << (v % BITS_PER_WORD), Ordering::Relaxed);
+    }
+
+    /// Racy bit set: plain load / OR / store on the containing word.
+    /// Concurrent writers to the same word can lose updates — the paper's
+    /// bit race (Fig 6), kept on purpose.
+    #[inline]
+    pub fn set_bit_racy(&self, v: Vertex) {
+        let w = (v / BITS_PER_WORD) as usize;
+        let bit = 1u32 << (v % BITS_PER_WORD);
+        let old = self.words[w].load(Ordering::Relaxed);
+        self.words[w].store(old | bit, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn test_bit(&self, v: Vertex) -> bool {
+        (self.words[(v / BITS_PER_WORD) as usize].load(Ordering::Relaxed) >> (v % BITS_PER_WORD))
+            & 1
+            == 1
+    }
+
+    /// Read a whole word.
+    #[inline]
+    pub fn word(&self, w: usize) -> u32 {
+        self.words[w].load(Ordering::Relaxed)
+    }
+
+    /// Plain (racy) whole-word store — what a vector scatter does.
+    #[inline]
+    pub fn store_word_racy(&self, w: usize, value: u32) {
+        self.words[w].store(value, Ordering::Relaxed);
+    }
+
+    /// Atomic whole-word OR (used by restoration, which may itself run
+    /// multi-threaded but partitions words disjointly; OR keeps it safe
+    /// even if partitions ever overlap).
+    #[inline]
+    pub fn or_word_atomic(&self, w: usize, value: u32) {
+        self.words[w].fetch_or(value, Ordering::Relaxed);
+    }
+
+    pub fn clear_all(&self) {
+        for w in &self.words {
+            w.store(0, Ordering::Relaxed);
+        }
+    }
+
+    pub fn is_all_zero(&self) -> bool {
+        self.words.iter().all(|w| w.load(Ordering::Relaxed) == 0)
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.load(Ordering::Relaxed).count_ones() as usize).sum()
+    }
+
+    /// The raw atomic word cells — what the vector unit's shared
+    /// gather/scatter instructions operate on.
+    #[inline]
+    pub fn atomic_words(&self) -> &[AtomicU32] {
+        &self.words
+    }
+
+    /// Snapshot into a plain [`Bitmap`].
+    pub fn snapshot(&self) -> Bitmap {
+        let mut b = Bitmap::new(self.len);
+        for (i, w) in self.words.iter().enumerate() {
+            b.set_word(i, w.load(Ordering::Relaxed));
+        }
+        b
+    }
+
+    /// Copy a plain bitmap's contents in.
+    pub fn load_from(&self, src: &Bitmap) {
+        assert_eq!(src.num_words(), self.words.len());
+        for (i, w) in self.words.iter().enumerate() {
+            w.store(src.word(i), Ordering::Relaxed);
+        }
+    }
+
+    /// Collect set bits as vertices (test/reporting helper).
+    pub fn to_vertices(&self) -> Vec<Vertex> {
+        self.snapshot().to_vertices()
+    }
+}
+
+/// Shared predecessor array. Plain 32-bit stores are atomic on every target
+/// we run on; the benign race of §3.2 (two parents writing the same child)
+/// maps to relaxed stores where either value may land — exactly the paper's
+/// "different correct BFS spanning trees" outcome.
+pub struct SharedPred {
+    p: Vec<AtomicI32>,
+}
+
+impl SharedPred {
+    /// All entries initialized to ∞ (§3.1 lines 1–3).
+    pub fn new_infinity(n: usize) -> Self {
+        SharedPred { p: (0..n).map(|_| AtomicI32::new(PRED_INFINITY)).collect() }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.p.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.p.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, v: Vertex) -> Pred {
+        self.p[v as usize].load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn set(&self, v: Vertex, value: Pred) {
+        self.p[v as usize].store(value, Ordering::Relaxed);
+    }
+
+    /// Compare-free add used by restoration (`P[vertex] += nodes`); safe
+    /// because restoration partitions vertices disjointly across threads.
+    #[inline]
+    pub fn add(&self, v: Vertex, delta: Pred) {
+        self.p[v as usize].fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// The raw atomic cells — target of the vector unit's predecessor
+    /// scatter.
+    #[inline]
+    pub fn atomic_cells(&self) -> &[AtomicI32] {
+        &self.p
+    }
+
+    pub fn into_vec(self) -> Vec<Pred> {
+        self.p.into_iter().map(|a| a.into_inner()).collect()
+    }
+
+    pub fn snapshot(&self) -> Vec<Pred> {
+        self.p.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_and_racy_agree_single_threaded() {
+        let a = SharedBitmap::new(100);
+        let b = SharedBitmap::new(100);
+        for v in [0u32, 31, 32, 63, 99] {
+            a.set_bit_atomic(v);
+            b.set_bit_racy(v);
+        }
+        assert_eq!(a.snapshot().words(), b.snapshot().words());
+    }
+
+    #[test]
+    fn racy_store_word_loses_updates_by_design() {
+        // Deterministic demonstration of the §3.3.2 lost update: two
+        // "threads" read the same word, each ORs its own bit, stores —
+        // second store wins, first bit lost.
+        let bm = SharedBitmap::new(64);
+        let w0_a = bm.word(0) | (1 << 5); // thread A prepares vertex 5
+        let w0_b = bm.word(0) | (1 << 9); // thread B prepares vertex 9
+        bm.store_word_racy(0, w0_a);
+        bm.store_word_racy(0, w0_b); // clobbers A
+        assert!(!bm.test_bit(5), "bit 5 must be lost");
+        assert!(bm.test_bit(9));
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let bm = SharedBitmap::new(70);
+        bm.set_bit_atomic(3);
+        bm.set_bit_atomic(69);
+        let snap = bm.snapshot();
+        let bm2 = SharedBitmap::new(70);
+        bm2.load_from(&snap);
+        assert_eq!(bm2.to_vertices(), vec![3, 69]);
+    }
+
+    #[test]
+    fn shared_pred_infinity_and_restore_add() {
+        let p = SharedPred::new_infinity(10);
+        assert_eq!(p.get(4), PRED_INFINITY);
+        // restoration protocol: P[v] = u - nodes, later += nodes
+        p.set(4, 7 - 10);
+        assert!(p.get(4) < 0);
+        p.add(4, 10);
+        assert_eq!(p.get(4), 7);
+    }
+
+    #[test]
+    fn clear_and_count() {
+        let bm = SharedBitmap::new(128);
+        for v in 0..10 {
+            bm.set_bit_atomic(v);
+        }
+        assert_eq!(bm.count_ones(), 10);
+        bm.clear_all();
+        assert!(bm.is_all_zero());
+    }
+}

@@ -1,0 +1,246 @@
+//! §5.3 — the Graph500-style soft validator.
+//!
+//! "The validation method ... consists of five check results that do not
+//! intend to get a full check of the generated output ... but just provide
+//! a 'soft' check." We implement the five checks of the Graph500
+//! specification's `validate` kernel:
+//!
+//! 1. the root is its own parent and is marked reached;
+//! 2. the predecessor structure is a tree: every reached vertex's parent
+//!    chain terminates at the root (no cycles, no dangling parents);
+//! 3. every tree edge `(parent(v), v)` exists in the graph;
+//! 4. levels are consistent: `dist(v) == dist(parent(v)) + 1` for every
+//!    reached non-root vertex;
+//! 5. edge-cut consistency: every graph edge `{a, b}` has both endpoints
+//!    reached or both unreached, and if reached their levels differ by at
+//!    most 1 (this is what catches "missed" vertices without recomputing a
+//!    reference BFS).
+
+use super::BfsTree;
+use crate::graph::Csr;
+use crate::Vertex;
+
+/// Outcome of one check.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Check {
+    pub name: &'static str,
+    pub passed: bool,
+    /// First violation found (empty when passed).
+    pub detail: String,
+}
+
+/// The five-check report.
+#[derive(Clone, Debug)]
+pub struct ValidationReport {
+    pub checks: Vec<Check>,
+}
+
+impl ValidationReport {
+    pub fn all_passed(&self) -> bool {
+        self.checks.iter().all(|c| c.passed)
+    }
+
+    pub fn summary(&self) -> String {
+        self.checks
+            .iter()
+            .map(|c| format!("[{}] {}{}", if c.passed { "ok" } else { "FAIL" }, c.name, if c.detail.is_empty() { String::new() } else { format!(": {}", c.detail) }))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Run the five checks of a BFS tree against its graph.
+pub fn validate(g: &Csr, tree: &BfsTree) -> ValidationReport {
+    let mut checks = Vec::with_capacity(5);
+    let n = g.num_vertices();
+    let root = tree.root;
+
+    // Check 1: root parent.
+    let c1 = tree.reached(root) && tree.parent(root) == Some(root);
+    checks.push(Check {
+        name: "root is its own parent",
+        passed: c1,
+        detail: if c1 { String::new() } else { format!("pred[root]={:?}", tree.parent(root)) },
+    });
+
+    // Check 2: tree-ness (distances computable = acyclic parent chains that
+    // terminate at the root).
+    let dist = tree.distances();
+    let c2_detail = match &dist {
+        Some(d) => {
+            // parent of a reached vertex must itself be reached
+            let mut bad = String::new();
+            for v in 0..n as Vertex {
+                if let Some(p) = tree.parent(v) {
+                    if d[p as usize] == u32::MAX {
+                        bad = format!("vertex {v} has unreached parent {p}");
+                        break;
+                    }
+                }
+            }
+            bad
+        }
+        None => "cycle in predecessor chains".to_string(),
+    };
+    checks.push(Check { name: "predecessors form a tree", passed: c2_detail.is_empty(), detail: c2_detail });
+
+    let dist = dist.unwrap_or_else(|| vec![u32::MAX; n]);
+
+    // Check 3: tree edges exist in the graph.
+    let mut c3_detail = String::new();
+    for v in 0..n as Vertex {
+        if let Some(p) = tree.parent(v) {
+            if p != v && !g.has_edge(p, v) {
+                c3_detail = format!("tree edge {p}->{v} not in graph");
+                break;
+            }
+        }
+    }
+    checks.push(Check { name: "tree edges exist in graph", passed: c3_detail.is_empty(), detail: c3_detail });
+
+    // Check 4: levels differ by exactly one along tree edges.
+    let mut c4_detail = String::new();
+    for v in 0..n as Vertex {
+        if let Some(p) = tree.parent(v) {
+            if v != root && dist[v as usize] != dist[p as usize].saturating_add(1) {
+                c4_detail =
+                    format!("level({v})={} but level(parent {p})={}", dist[v as usize], dist[p as usize]);
+                break;
+            }
+        }
+    }
+    checks.push(Check { name: "levels increase by one", passed: c4_detail.is_empty(), detail: c4_detail });
+
+    // Check 5: graph-edge consistency (both endpoints reached or neither;
+    // reached endpoints within one level).
+    let mut c5_detail = String::new();
+    'outer: for a in 0..n as Vertex {
+        for &b in g.neighbors(a) {
+            let (da, db) = (dist[a as usize], dist[b as usize]);
+            match (da == u32::MAX, db == u32::MAX) {
+                (false, true) | (true, false) => {
+                    c5_detail = format!("edge {{{a},{b}}} crosses the reached boundary");
+                    break 'outer;
+                }
+                (false, false) => {
+                    if da.abs_diff(db) > 1 {
+                        c5_detail = format!("edge {{{a},{b}}} spans levels {da} and {db}");
+                        break 'outer;
+                    }
+                }
+                (true, true) => {}
+            }
+        }
+    }
+    checks.push(Check { name: "graph edges within one level", passed: c5_detail.is_empty(), detail: c5_detail });
+
+    ValidationReport { checks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::serial::SerialLayeredBfs;
+    use crate::bfs::BfsAlgorithm;
+    use crate::graph::{EdgeList, RmatConfig};
+    use crate::{Pred, PRED_INFINITY};
+
+    fn good_tree() -> (Csr, BfsTree) {
+        let el = RmatConfig::graph500(9, 8).generate(41);
+        let g = Csr::from_edge_list(9, &el);
+        let tree = SerialLayeredBfs.run(&g, 0).tree;
+        (g, tree)
+    }
+
+    #[test]
+    fn valid_tree_passes_all_five() {
+        let (g, tree) = good_tree();
+        let report = validate(&g, &tree);
+        assert_eq!(report.checks.len(), 5);
+        assert!(report.all_passed(), "{}", report.summary());
+    }
+
+    #[test]
+    fn detects_wrong_root_parent() {
+        let (g, mut tree) = good_tree();
+        tree.pred[tree.root as usize] = PRED_INFINITY;
+        let r = validate(&g, &tree);
+        assert!(!r.checks[0].passed);
+    }
+
+    #[test]
+    fn detects_cycle() {
+        let (g, mut tree) = good_tree();
+        // find two reached non-root vertices and point them at each other
+        let vs: Vec<Vertex> = (0..g.num_vertices() as Vertex)
+            .filter(|&v| tree.reached(v) && v != tree.root)
+            .take(2)
+            .collect();
+        tree.pred[vs[0] as usize] = vs[1] as Pred;
+        tree.pred[vs[1] as usize] = vs[0] as Pred;
+        let r = validate(&g, &tree);
+        assert!(!r.all_passed());
+        assert!(!r.checks[1].passed, "{}", r.summary());
+    }
+
+    #[test]
+    fn detects_phantom_tree_edge() {
+        // connect two vertices that are NOT adjacent in the graph
+        let el = EdgeList::with_edges(5, vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let g = Csr::from_edge_list(0, &el);
+        let mut tree = SerialLayeredBfs.run(&g, 0).tree;
+        tree.pred[4] = 0; // 0-4 is not an edge
+        let r = validate(&g, &tree);
+        assert!(!r.checks[2].passed || !r.checks[3].passed, "{}", r.summary());
+    }
+
+    #[test]
+    fn detects_level_skip() {
+        let el = EdgeList::with_edges(5, vec![(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)]);
+        let g = Csr::from_edge_list(0, &el);
+        let mut tree = SerialLayeredBfs.run(&g, 0).tree;
+        // make 3's parent 0: edge (0,3) doesn't exist → check 3; even if it
+        // did, levels would skip → craft with existing edge instead:
+        // set 2's parent to 4 (edge 4-? no). Use vertex 4: parent currently 0
+        // (edge 0-4 exists, dist 1). Set 3's parent to 4 and 4's to 0:
+        tree.pred[3] = 4;
+        // now dist(3) = 2 via 4, but graph edge (2,3) spans levels... still
+        // consistent. Force a skip: claim 2's parent is 0 (no edge 0-2).
+        tree.pred[2] = 0;
+        let r = validate(&g, &tree);
+        assert!(!r.all_passed());
+    }
+
+    #[test]
+    fn detects_missed_vertex() {
+        // a reachable vertex left out of the tree must trip check 5
+        let el = EdgeList::with_edges(4, vec![(0, 1), (1, 2), (2, 3)]);
+        let g = Csr::from_edge_list(0, &el);
+        let mut tree = SerialLayeredBfs.run(&g, 0).tree;
+        tree.pred[3] = PRED_INFINITY; // pretend BFS missed vertex 3
+        let r = validate(&g, &tree);
+        assert!(!r.checks[4].passed, "{}", r.summary());
+    }
+
+    #[test]
+    fn all_algorithms_validate() {
+        use crate::bfs::bitrace_free::BitRaceFreeBfs;
+        use crate::bfs::parallel::ParallelBfs;
+        use crate::bfs::serial::SerialQueueBfs;
+        use crate::bfs::vectorized::VectorizedBfs;
+        let el = RmatConfig::graph500(10, 16).generate(42);
+        let g = Csr::from_edge_list(10, &el);
+        let algs: Vec<Box<dyn BfsAlgorithm>> = vec![
+            Box::new(SerialQueueBfs),
+            Box::new(SerialLayeredBfs),
+            Box::new(ParallelBfs { num_threads: 3 }),
+            Box::new(BitRaceFreeBfs { num_threads: 3 }),
+            Box::new(VectorizedBfs::default()),
+        ];
+        for alg in algs {
+            let r = alg.run(&g, 7);
+            let report = validate(&g, &r.tree);
+            assert!(report.all_passed(), "{} failed:\n{}", alg.name(), report.summary());
+        }
+    }
+}

@@ -1,0 +1,659 @@
+//! §4 — the vectorized BFS: Listing 1's adjacency-list exploration on the
+//! emulated 512-bit VPU, the vectorized restoration process, and the layer
+//! policy of §4.1.
+//!
+//! Per adjacency chunk of ≤16 vertices the explorer issues the exact
+//! Listing-1 sequence:
+//!
+//! ```text
+//! 1. vneig     = load(rows[chunk])                       // _mm512_load_epi32
+//! 2. vword     = vneig / 32 ; vbits = vneig % 32         // div/rem_epi32
+//!    prefetch gather (out words, hint T0)                // §4.2 prefetching
+//!    vis_words = gather(visited, vword)                  // i32gather
+//!    out_words = gather(out, vword)
+//!    bits      = 1 << vbits                              // sllv
+//!    mask      = knot(kor(test(vis_words, bits),
+//!                         test(out_words, bits)))        // filter unvisited
+//! 3. prefetch scatter (bfs_tree, masked, hint T0)
+//!    scatter(bfs_tree, mask, vneig, u - nodes)           // benign race
+//!    new_values = mask_or(0, mask, out_words, bits)
+//!    prefetch scatter (out, masked, hint T0)
+//!    scatter(out, mask, vword, new_values)               // BIT RACE here
+//! ```
+//!
+//! The word-granularity scatter in step 3 loses bits whenever two lanes (or
+//! two threads) hit the same word — deliberately unrepaired until the
+//! vectorized restoration sweeps the non-zero `out` words in 16-lane halves
+//! (low/high, §4 ¶"On the other hand…") and repairs every vertex whose
+//! predecessor entry is still negative.
+//!
+//! §4.2's three optimization stages are selectable via [`SimdOpts`] so the
+//! Fig 9 ablation can measure them: `aligned` enables the peel/full/
+//! remainder chunk structure (otherwise every chunk issues unaligned masked
+//! loads), `prefetch` enables the software-prefetch intrinsics.
+
+use std::time::Instant;
+
+use super::policy::LayerPolicy;
+use super::state::{SharedBitmap, SharedPred};
+use super::{BfsAlgorithm, BfsResult, BfsTree, LayerTrace, RunTrace};
+use crate::graph::bitmap::BITS_PER_WORD;
+use crate::graph::{Bitmap, Csr};
+use crate::simd::ops::{PrefetchHint, Vpu};
+use crate::simd::vec512::{Mask16, VecI32x16, LANES};
+use crate::simd::VpuCounters;
+use crate::threads::parallel_for_dynamic;
+use crate::{Pred, Vertex};
+
+const WORD_GRAIN: usize = 16;
+
+/// §4.2 optimization toggles (the Fig 9 ablation axes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SimdOpts {
+    /// 64-byte-aligned chunking: peel to the 16-element boundary, full
+    /// vector loads in the middle, masked remainder (§4.2 "Data alignment"
+    /// / "Peel and remainder loops"). When false, every chunk is an
+    /// unaligned masked load ("SIMD - no opt").
+    pub aligned: bool,
+    /// Software prefetching of gathers/scatters plus next-iteration rows
+    /// (§4.2 "Prefetching").
+    pub prefetch: bool,
+}
+
+impl SimdOpts {
+    /// "SIMD - no opt" in Fig 9.
+    pub fn none() -> Self {
+        SimdOpts { aligned: false, prefetch: false }
+    }
+
+    /// "SIMD + parallel + alignment and masks" in Fig 9.
+    pub fn aligned_masks() -> Self {
+        SimdOpts { aligned: true, prefetch: false }
+    }
+
+    /// Full optimization set (alignment + masks + prefetching) — the
+    /// configuration the headline results use.
+    pub fn full() -> Self {
+        SimdOpts { aligned: true, prefetch: true }
+    }
+}
+
+impl Default for SimdOpts {
+    fn default() -> Self {
+        SimdOpts::full()
+    }
+}
+
+/// The paper's `simd` algorithm.
+#[derive(Clone, Copy, Debug)]
+pub struct VectorizedBfs {
+    pub num_threads: usize,
+    pub opts: SimdOpts,
+    pub policy: LayerPolicy,
+}
+
+impl Default for VectorizedBfs {
+    fn default() -> Self {
+        VectorizedBfs { num_threads: 4, opts: SimdOpts::full(), policy: LayerPolicy::default() }
+    }
+}
+
+/// Per-thread accumulator for an explored layer.
+#[derive(Default)]
+struct ExploreAcc {
+    edges_scanned: usize,
+    vpu: Option<Vpu>,
+}
+
+/// Explore one vertex's adjacency chunk `[offset, offset+n)` (n ≤ 16) with
+/// the Listing-1 instruction sequence. `chunk_mask` filters peel/remainder
+/// lanes (§4.2).
+#[allow(clippy::too_many_arguments)]
+fn explore_chunk(
+    vpu: &mut Vpu,
+    rows: &[u32],
+    offset: usize,
+    chunk_mask: Mask16,
+    full: bool,
+    u: Vertex,
+    nodes: Pred,
+    visited: &SharedBitmap,
+    out: &SharedBitmap,
+    pred: &SharedPred,
+    prefetch: bool,
+) {
+    // 1.- Load adjacency list to the register
+    let vneig = if full {
+        vpu.load_vertices(rows, offset)
+    } else {
+        vpu.mask_load_vertices(chunk_mask, rows, offset)
+    };
+
+    // 2.- Getting word and bit offset
+    let bits_per_word = vpu.set1_epi32(BITS_PER_WORD as i32);
+    let vword = vpu.div_epi32(vneig, bits_per_word);
+    let vbits = vpu.rem_epi32(vneig, bits_per_word);
+
+    // Gathering words from visited / output bitmap arrays
+    if prefetch {
+        vpu.prefetch_i32gather(vword, PrefetchHint::T0);
+    }
+    let vis_words = vpu.mask_gather_shared_words(chunk_mask, vword, visited.atomic_words());
+    let out_words = vpu.mask_gather_shared_words(chunk_mask, vword, out.atomic_words());
+
+    // Shifting 1 to the left by the bit offsets
+    let one = vpu.set1_epi32(1);
+    let bits = vpu.sllv_epi32(one, vbits);
+
+    // mask = knot(kor(test(vis, bits), test(out, bits))) ∧ chunk_mask
+    let m_vis = vpu.test_epi32_mask(vis_words, bits);
+    let m_out = vpu.test_epi32_mask(out_words, bits);
+    let m_seen = vpu.kor(m_vis, m_out);
+    let m_new_all = vpu.knot(m_seen);
+    let mask = vpu.kand(m_new_all, chunk_mask);
+    if mask.is_empty() {
+        return;
+    }
+
+    // 3.- Scattering P (bfs_tree) and output queue
+    if prefetch {
+        vpu.mask_prefetch_i32scatter(mask, vneig, PrefetchHint::T0);
+    }
+    // P[v] = u - nodes  (negative marker — the restoration journal)
+    let parent_marked = vpu.set1_epi32(u as Pred - nodes);
+    vpu.mask_scatter_shared_i32(pred.atomic_cells(), mask, vneig, parent_marked);
+
+    // Setting the output queue: out_word | bit for the surviving lanes.
+    let zero = vpu.set1_epi32(0);
+    let new_values = vpu.mask_or_epi32(zero, mask, out_words, bits);
+    if prefetch {
+        vpu.mask_prefetch_i32scatter(mask, vword, PrefetchHint::T0);
+    }
+    // Word-granularity racy scatter: intra-vector duplicates lose bits
+    // (highest lane wins) — the §3.3.2 hazard, repaired by restoration.
+    vpu.mask_scatter_shared_words(out.atomic_words(), mask, vword, new_values);
+}
+
+/// Explore one vertex's whole adjacency list, chunked per §4.2.
+#[allow(clippy::too_many_arguments)]
+fn explore_vertex(
+    vpu: &mut Vpu,
+    g: &Csr,
+    u: Vertex,
+    nodes: Pred,
+    visited: &SharedBitmap,
+    out: &SharedBitmap,
+    pred: &SharedPred,
+    opts: SimdOpts,
+) -> usize {
+    let (start, end) = g.adjacency_range(u);
+    let degree = end - start;
+    if degree == 0 {
+        return 0;
+    }
+    let rows = &g.rows;
+
+    if opts.prefetch {
+        // Prefetch the rows array for the vertices processed next
+        // iteration (§4.2, after Jha et al. [14]).
+        vpu.prefetch_scalar(PrefetchHint::T1);
+    }
+
+    if !opts.aligned {
+        // "SIMD - no opt": no peel/remainder structure; every chunk is an
+        // unaligned masked load.
+        let mut off = start;
+        while off < end {
+            let n = (end - off).min(LANES);
+            let m = Mask16::first_n(n);
+            vpu.note_remainder(n);
+            explore_chunk(vpu, rows, off, m, false, u, nodes, visited, out, pred, opts.prefetch);
+            off += n;
+        }
+        return degree;
+    }
+
+    // Aligned mode: peel up to the 16-element boundary of `rows`, full
+    // vectors through the middle, masked remainder at the tail.
+    let aligned_start = start.next_multiple_of(LANES);
+    let peel_end = aligned_start.min(end);
+    if peel_end > start {
+        let n = peel_end - start;
+        vpu.note_peel(n);
+        explore_chunk(
+            vpu,
+            rows,
+            start,
+            Mask16::first_n(n),
+            false,
+            u,
+            nodes,
+            visited,
+            out,
+            pred,
+            opts.prefetch,
+        );
+    }
+    let mut off = peel_end;
+    while off + LANES <= end {
+        vpu.note_full_chunk();
+        explore_chunk(vpu, rows, off, Mask16::ALL, true, u, nodes, visited, out, pred, opts.prefetch);
+        off += LANES;
+    }
+    if off < end {
+        let n = end - off;
+        vpu.note_remainder(n);
+        explore_chunk(
+            vpu,
+            rows,
+            off,
+            Mask16::first_n(n),
+            false,
+            u,
+            nodes,
+            visited,
+            out,
+            pred,
+            opts.prefetch,
+        );
+    }
+    degree
+}
+
+/// Vectorized restoration (§4, closing paragraphs): for every non-zero
+/// `out` word, process its low and high 16-bit halves as 16-lane vectors —
+/// gather the predecessors, select `P < 0`, rebuild the word's bit pattern
+/// with a horizontal OR, commit to `out` and `visited`, and add `nodes`
+/// back to the repaired predecessor entries.
+pub fn restore_layer_simd(
+    num_threads: usize,
+    out: &SharedBitmap,
+    visited: &SharedBitmap,
+    pred: &SharedPred,
+    nodes: Pred,
+) -> (super::bitrace_free::RestoreStats, VpuCounters) {
+    #[derive(Default)]
+    struct Acc {
+        stats: super::bitrace_free::RestoreStats,
+        vpu: Option<Vpu>,
+    }
+    let n = out.len();
+    let num_words = out.num_words();
+    let accs: Vec<Acc> = parallel_for_dynamic(
+        num_threads,
+        num_words,
+        WORD_GRAIN,
+        |_tid, range, acc: &mut Acc| {
+            let vpu = acc.vpu.get_or_insert_with(Vpu::new);
+            for w in range {
+                let word = out.word(w);
+                if word == 0 {
+                    continue;
+                }
+                acc.stats.words_scanned += 1;
+                // The word covers 32 vertices but the VPU holds 16 lanes:
+                // split into the low and the high half (§4).
+                for half in 0..2usize {
+                    let base_bit = half as i32 * 16;
+                    let first_vertex = Bitmap::bit_to_vertex(w, base_bit as u32);
+                    // lanes beyond the bitmap length are masked off
+                    let valid = (n as i64 - first_vertex as i64).clamp(0, 16) as usize;
+                    if valid == 0 {
+                        continue;
+                    }
+                    let lane_mask = Mask16::first_n(valid);
+                    // vvertex = w*32 + base_bit + lane
+                    let mut vertex_arr = [0i32; LANES];
+                    for (lane, x) in vertex_arr.iter_mut().enumerate() {
+                        *x = first_vertex as i32 + lane as i32;
+                    }
+                    let vvertex = VecI32x16(vertex_arr);
+                    let pvals = vpu.mask_gather_shared_i32(lane_mask, vvertex, pred.atomic_cells());
+                    let zero = vpu.set1_epi32(0);
+                    let m_neg_all = vpu.cmplt_epi32_mask(pvals, zero);
+                    let m_neg = vpu.kand(m_neg_all, lane_mask);
+                    if m_neg.is_empty() {
+                        continue;
+                    }
+                    // track genuine lost bits for the trace
+                    for lane in 0..LANES {
+                        if m_neg.test_lane(lane) {
+                            let bit = base_bit as u32 + lane as u32;
+                            if (word >> bit) & 1 == 0 {
+                                acc.stats.lost_bits_fixed += 1;
+                            }
+                            acc.stats.repaired += 1;
+                        }
+                    }
+                    // rebuild the half-word bit pattern: 1 << (base_bit+lane)
+                    let mut shift_arr = [0i32; LANES];
+                    for (lane, x) in shift_arr.iter_mut().enumerate() {
+                        *x = base_bit + lane as i32;
+                    }
+                    let one = vpu.set1_epi32(1);
+                    let bits = vpu.sllv_epi32(one, VecI32x16(shift_arr));
+                    let patch = vpu.mask_reduce_or_epi32(m_neg, bits) as u32;
+                    out.or_word_atomic(w, patch);
+                    visited.or_word_atomic(w, patch);
+                    // P[vertex] += nodes for the repaired lanes
+                    let vnodes = vpu.set1_epi32(nodes);
+                    let restored = vpu.add_epi32(pvals, vnodes);
+                    vpu.mask_scatter_shared_i32(pred.atomic_cells(), m_neg, vvertex, restored);
+                }
+            }
+        },
+    );
+    let mut stats = super::bitrace_free::RestoreStats::default();
+    let mut vpu = VpuCounters::default();
+    for a in accs {
+        stats.words_scanned += a.stats.words_scanned;
+        stats.repaired += a.stats.repaired;
+        stats.lost_bits_fixed += a.stats.lost_bits_fixed;
+        if let Some(v) = a.vpu {
+            vpu.merge(&v.counters);
+        }
+    }
+    (stats, vpu)
+}
+
+impl BfsAlgorithm for VectorizedBfs {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn run(&self, g: &Csr, root: Vertex) -> BfsResult {
+        let n = g.num_vertices();
+        let nodes = n as Pred;
+        let pred = SharedPred::new_infinity(n);
+        let visited = SharedBitmap::new(n);
+        let mut input = Bitmap::new(n);
+        let output = SharedBitmap::new(n);
+
+        input.set_bit(root);
+        visited.set_bit_atomic(root);
+        pred.set(root, root as Pred);
+
+        let mut layers = Vec::new();
+        let mut layer = 0usize;
+        let mut frontier_count = 1usize;
+        let mut nontrivial_seen = 0usize;
+        while frontier_count != 0 {
+            let t0 = Instant::now();
+            // estimate the layer's edge volume for the policy decision
+            let input_edges: usize =
+                input.iter_set_bits().map(|u| g.degree(u)).sum();
+            let vectorize = self.policy.vectorize(nontrivial_seen, frontier_count, input_edges);
+            if frontier_count > 1 {
+                nontrivial_seen += 1;
+            }
+
+            let in_words = input.words();
+            let (edges_scanned, rstats, vpu_counters) = if vectorize {
+                // ---- SIMD exploration (Listing 1) ----
+                let accs: Vec<ExploreAcc> = parallel_for_dynamic(
+                    self.num_threads,
+                    in_words.len(),
+                    WORD_GRAIN,
+                    |_tid, range, acc: &mut ExploreAcc| {
+                        for w in range {
+                            let mut word = in_words[w];
+                            while word != 0 {
+                                let bit = word.trailing_zeros();
+                                word &= word - 1;
+                                let u = Bitmap::bit_to_vertex(w, bit);
+                                if (u as usize) >= n {
+                                    continue;
+                                }
+                                let opts = self.opts;
+                                let deg = {
+                                    let vpu = acc.vpu.get_or_insert_with(Vpu::new);
+                                    explore_vertex(vpu, g, u, nodes, &visited, &output, &pred, opts)
+                                };
+                                acc.edges_scanned += deg;
+                            }
+                        }
+                    },
+                );
+                // ---- vectorized restoration ----
+                let (rstats, mut vpu_total) =
+                    restore_layer_simd(self.num_threads, &output, &visited, &pred, nodes);
+                let mut edges = 0usize;
+                for a in &accs {
+                    edges += a.edges_scanned;
+                    if let Some(v) = &a.vpu {
+                        vpu_total.merge(&v.counters);
+                    }
+                }
+                (edges, rstats, vpu_total)
+            } else {
+                // ---- scalar parallel fallback (Algorithm 2, §4.1) ----
+                let accs: Vec<usize> = parallel_for_dynamic(
+                    self.num_threads,
+                    in_words.len(),
+                    WORD_GRAIN,
+                    |_tid, range, acc: &mut usize| {
+                        for w in range {
+                            let mut word = in_words[w];
+                            while word != 0 {
+                                let bit = word.trailing_zeros();
+                                word &= word - 1;
+                                let u = Bitmap::bit_to_vertex(w, bit);
+                                if (u as usize) >= n {
+                                    continue;
+                                }
+                                for &v in g.neighbors(u) {
+                                    *acc += 1;
+                                    if !visited.test_bit(v) && !output.test_bit(v) {
+                                        output.set_bit_atomic(v);
+                                        visited.set_bit_atomic(v);
+                                        pred.set(v, u as Pred);
+                                    }
+                                }
+                            }
+                        }
+                    },
+                );
+                (accs.iter().sum(), Default::default(), VpuCounters::default())
+            };
+
+            let traversed = output.count_ones();
+            layers.push(LayerTrace {
+                layer,
+                input_vertices: frontier_count,
+                edges_scanned,
+                traversed,
+                restore_words_scanned: rstats.words_scanned,
+                restore_fixed: rstats.lost_bits_fixed,
+                vectorized: vectorize,
+                vpu: vpu_counters,
+                wall_ns: t0.elapsed().as_nanos() as u64,
+            });
+
+            let snap = output.snapshot();
+            frontier_count = snap.count_ones();
+            input = snap;
+            output.clear_all();
+            layer += 1;
+        }
+
+        BfsResult {
+            tree: BfsTree::new(root, pred.into_vec()),
+            trace: RunTrace { layers, num_threads: self.num_threads },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::serial::SerialLayeredBfs;
+    use crate::graph::{EdgeList, RmatConfig};
+    use crate::PRED_INFINITY;
+
+    fn rmat(scale: u32, ef: usize, seed: u64) -> Csr {
+        let el = RmatConfig::graph500(scale, ef).generate(seed);
+        Csr::from_edge_list(scale, &el)
+    }
+
+    fn assert_matches_serial(g: &Csr, root: Vertex, alg: VectorizedBfs) {
+        let s = SerialLayeredBfs.run(g, root);
+        let v = alg.run(g, root);
+        assert_eq!(
+            v.tree.distances().unwrap(),
+            s.tree.distances().unwrap(),
+            "distances differ for {:?}",
+            alg
+        );
+    }
+
+    #[test]
+    fn matches_serial_all_policies() {
+        let g = rmat(10, 8, 31);
+        for policy in [LayerPolicy::All, LayerPolicy::None, LayerPolicy::FirstK(2), LayerPolicy::heavy()] {
+            assert_matches_serial(&g, 0, VectorizedBfs { num_threads: 2, opts: SimdOpts::full(), policy });
+        }
+    }
+
+    #[test]
+    fn matches_serial_all_opt_levels() {
+        let g = rmat(10, 16, 32);
+        for opts in [SimdOpts::none(), SimdOpts::aligned_masks(), SimdOpts::full()] {
+            assert_matches_serial(
+                &g,
+                5,
+                VectorizedBfs { num_threads: 4, opts, policy: LayerPolicy::All },
+            );
+        }
+    }
+
+    #[test]
+    fn scatter_conflicts_occur_and_get_repaired() {
+        // A hub whose children are packed into few bitmap words forces
+        // intra-vector scatter conflicts.
+        let el = EdgeList::with_edges(64, (1..64).map(|i| (0u32, i as Vertex)).collect());
+        let g = Csr::from_edge_list(0, &el);
+        let r = VectorizedBfs { num_threads: 1, opts: SimdOpts::full(), policy: LayerPolicy::All }
+            .run(&g, 0);
+        let vpu = r.trace.vpu_totals();
+        assert!(vpu.scatter_conflicts > 0, "dense children must collide in words");
+        let fixed: usize = r.trace.layers.iter().map(|l| l.restore_fixed).sum();
+        assert!(fixed > 0, "restoration must repair genuinely lost bits");
+        // and the final tree is still complete
+        assert_eq!(r.tree.reached_count(), 64);
+    }
+
+    #[test]
+    fn aligned_mode_uses_full_chunks() {
+        let g = rmat(11, 16, 33);
+        let full = VectorizedBfs { num_threads: 2, opts: SimdOpts::full(), policy: LayerPolicy::All }
+            .run(&g, 0);
+        let c = full.trace.vpu_totals();
+        assert!(c.full_chunks > 0);
+        assert!(c.vector_loads > 0);
+        // unaligned mode must not use full loads
+        let noopt = VectorizedBfs { num_threads: 2, opts: SimdOpts::none(), policy: LayerPolicy::All }
+            .run(&g, 0);
+        let c2 = noopt.trace.vpu_totals();
+        assert_eq!(c2.vector_loads, 0);
+        assert_eq!(c2.full_chunks, 0);
+        assert!(c2.masked_loads > 0);
+    }
+
+    #[test]
+    fn prefetch_counters_only_with_prefetch() {
+        let g = rmat(9, 8, 34);
+        let with = VectorizedBfs { num_threads: 1, opts: SimdOpts::full(), policy: LayerPolicy::All }
+            .run(&g, 0);
+        assert!(with.trace.vpu_totals().prefetch_l1 > 0);
+        let without = VectorizedBfs {
+            num_threads: 1,
+            opts: SimdOpts::aligned_masks(),
+            policy: LayerPolicy::All,
+        }
+        .run(&g, 0);
+        let c = without.trace.vpu_totals();
+        assert_eq!(c.prefetch_l1 + c.prefetch_l2, 0);
+    }
+
+    #[test]
+    fn policy_mix_marks_layers() {
+        let g = rmat(11, 16, 35);
+        let r = VectorizedBfs {
+            num_threads: 2,
+            opts: SimdOpts::full(),
+            policy: LayerPolicy::FirstK(2),
+        }
+        .run(&g, 0);
+        let vec_layers: Vec<bool> = r.trace.layers.iter().map(|l| l.vectorized).collect();
+        assert!(vec_layers.iter().any(|&b| b), "some layer vectorized");
+        assert!(vec_layers.iter().any(|&b| !b), "some layer scalar");
+        // vectorized layers come before scalar ones under FirstK
+        let first_scalar_after_vec = vec_layers
+            .iter()
+            .skip_while(|&&b| !b) // leading trivial scalar layers (root)
+            .skip_while(|&&b| b)
+            .all(|&b| !b);
+        assert!(first_scalar_after_vec);
+    }
+
+    #[test]
+    fn predecessors_normalized_after_run() {
+        let g = rmat(10, 16, 36);
+        let r = VectorizedBfs::default().run(&g, 1);
+        for &p in &r.tree.pred {
+            assert!(p == PRED_INFINITY || p >= 0, "negative pred survived: {p}");
+        }
+    }
+
+    #[test]
+    fn vector_efficiency_reported() {
+        let g = rmat(11, 16, 37);
+        let r = VectorizedBfs { num_threads: 1, opts: SimdOpts::full(), policy: LayerPolicy::All }
+            .run(&g, 0);
+        let eff = r.trace.vpu_totals().vector_efficiency();
+        assert!(eff > 0.0 && eff <= 1.0);
+    }
+
+    #[test]
+    fn single_vertex_graph() {
+        let el = EdgeList::with_edges(1, vec![]);
+        let g = Csr::from_edge_list(0, &el);
+        let r = VectorizedBfs::default().run(&g, 0);
+        assert_eq!(r.tree.reached_count(), 1);
+    }
+
+    #[test]
+    fn restore_layer_simd_equals_scalar_restore() {
+        use crate::bfs::bitrace_free::restore_layer;
+        // Build identical corrupted states and repair with both paths.
+        let n = 256usize;
+        let nodes = n as Pred;
+        let mk = || {
+            let out = SharedBitmap::new(n);
+            let vis = SharedBitmap::new(n);
+            let pred = SharedPred::new_infinity(n);
+            // journal entries across several words, some bits lost
+            for (v, parent, bit_present) in
+                [(5u32, 2, false), (9, 3, true), (40, 3, true), (41, 7, false), (200, 9, false), (255, 1, true)]
+            {
+                pred.set(v, parent - nodes);
+                if bit_present {
+                    out.or_word_atomic((v / 32) as usize, 1 << (v % 32));
+                } else {
+                    // ensure the word is non-zero so restoration scans it
+                    out.or_word_atomic((v / 32) as usize, 1 << ((v + 1) % 32));
+                }
+            }
+            (out, vis, pred)
+        };
+        let (o1, v1, p1) = mk();
+        let s1 = restore_layer(1, &o1, &v1, &p1, nodes);
+        let (o2, v2, p2) = mk();
+        let (s2, _) = restore_layer_simd(1, &o2, &v2, &p2, nodes);
+        assert_eq!(s1.repaired, s2.repaired);
+        assert_eq!(s1.lost_bits_fixed, s2.lost_bits_fixed);
+        assert_eq!(o1.snapshot().words(), o2.snapshot().words());
+        assert_eq!(v1.snapshot().words(), v2.snapshot().words());
+        assert_eq!(p1.snapshot(), p2.snapshot());
+    }
+}

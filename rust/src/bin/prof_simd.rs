@@ -1,0 +1,20 @@
+//! Standalone profiling driver for the vectorized hot path (used with
+//! `perf record` during the §Perf pass; see EXPERIMENTS.md §Perf).
+use phi_bfs::bfs::policy::LayerPolicy;
+use phi_bfs::bfs::vectorized::{SimdOpts, VectorizedBfs};
+use phi_bfs::bfs::BfsAlgorithm;
+use phi_bfs::graph::{Csr, RmatConfig};
+
+fn main() {
+    let scale: u32 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(15);
+    let iters: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(20);
+    let el = RmatConfig::graph500(scale, 16).generate(1);
+    let g = Csr::from_edge_list(scale, &el);
+    let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
+    let alg = VectorizedBfs { num_threads: 1, opts: SimdOpts::full(), policy: LayerPolicy::All };
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(alg.run(&g, root));
+    }
+    println!("{} iters in {:.3?} ({:.3?}/iter)", iters, t0.elapsed(), t0.elapsed() / iters as u32);
+}

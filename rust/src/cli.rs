@@ -1,0 +1,147 @@
+//! Hand-rolled CLI argument parsing (clap is not in the offline registry).
+//!
+//! Grammar: `phi-bfs <command> [--flag value]...` — see `phi-bfs help`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: a command word plus `--key value` flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        if command.starts_with("--") {
+            bail!("expected a command before flags (try `phi-bfs help`)");
+        }
+        let mut flags = HashMap::new();
+        while let Some(arg) = it.next() {
+            let Some(key) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument {arg:?}");
+            };
+            // `--flag=value` or `--flag value` or boolean `--flag`
+            if let Some((k, v)) = key.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                flags.insert(key.to_string(), it.next().unwrap());
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+            }
+        }
+        Ok(Args { command, flags })
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Typed flag with default.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    /// String flag with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Boolean flag (present or `--flag true/false`).
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(String::as_str), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Flags that were provided but not consumed by the command — callers
+    /// can use this to reject typos.
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.flags.keys()
+    }
+}
+
+pub const USAGE: &str = "\
+phi-bfs — BFS vectorization on the (modelled) Xeon Phi
+
+USAGE:
+    phi-bfs <command> [--flag value]...
+
+COMMANDS:
+    run        Run a Graph500-style experiment
+               --scale N (16) --edgefactor N (16) --roots N (64)
+               --engine serial|serial-queue|non-simd|bitrace-free|simd|
+                        simd-noopt|simd-nopf|pjrt (simd)
+               --threads N (4) --workers N (1) --seed N (1)
+               --artifacts DIR (artifacts) --no-validate
+    model      Predict Xeon Phi TEPS for a thread/affinity sweep
+               --scale N (20: uses the paper's Table 1 profile)
+               --threads-list 1,2,48,236 --affinity balanced|compact|
+                        scatter|1t/c..4t/c (balanced) --engine simd|non-simd
+    table1     Print the Table-1 layer profile of a generated graph
+               --scale N (20) --edgefactor N (16) --seed N (1)
+    analyze    Graph analytics (components, shortest paths, betweenness)
+               --input FILE (SNAP-style edge list; omit to generate RMAT)
+               --scale N (12) --edgefactor N (16) --seed N (1)
+               --engine ... (simd) --threads N (4) --bc-sources N (32)
+    info       Print artifact manifest + PJRT platform
+               --artifacts DIR (artifacts)
+    help       This text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = parse("run --scale 18 --engine simd --no-validate");
+        assert_eq!(a.command, "run");
+        assert_eq!(a.get::<u32>("scale", 16).unwrap(), 18);
+        assert_eq!(a.get_str("engine", "serial"), "simd");
+        assert!(a.get_bool("no-validate"));
+        assert!(!a.get_bool("validate"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("model --threads-list=1,2,4 --affinity=compact");
+        assert_eq!(a.get_str("threads-list", ""), "1,2,4");
+        assert_eq!(a.get_str("affinity", "balanced"), "compact");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get::<u32>("scale", 16).unwrap(), 16);
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = parse("run --scale banana");
+        assert!(a.get::<u32>("scale", 16).is_err());
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(vec!["run".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn no_args_is_help() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

@@ -1,0 +1,142 @@
+//! Engine registry: one place that knows how to construct every BFS
+//! implementation in the repository — the algorithm ladder of §3–§4 plus
+//! the PJRT-compiled kernel engine.
+
+use anyhow::Result;
+
+use crate::bfs::bitrace_free::BitRaceFreeBfs;
+use crate::bfs::bottom_up::HybridBfs;
+use crate::bfs::parallel::ParallelBfs;
+use crate::bfs::policy::LayerPolicy;
+use crate::bfs::serial::{SerialLayeredBfs, SerialQueueBfs};
+use crate::bfs::vectorized::{SimdOpts, VectorizedBfs};
+use crate::bfs::BfsAlgorithm;
+use crate::runtime::bfs::PjrtBfs;
+
+/// Which engine a job should run on.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineKind {
+    /// Algorithm 1, queue form.
+    SerialQueue,
+    /// Algorithm 1, layered form.
+    SerialLayered,
+    /// Algorithm 2 — the `non-simd` baseline.
+    NonSimd { threads: usize },
+    /// Algorithm 3 — scalar, no atomics, restoration.
+    BitRaceFree { threads: usize },
+    /// §4 — the vectorized algorithm (the `simd` curve).
+    Simd { threads: usize, opts: SimdOpts, policy: LayerPolicy },
+    /// §8 extension — direction-optimizing hybrid (Beamer-style) with a
+    /// vectorized bottom-up scan.
+    Hybrid { threads: usize, simd: bool },
+    /// The AOT JAX/Pallas kernel through PJRT.
+    Pjrt { artifact_dir: String },
+}
+
+impl EngineKind {
+    /// Parse a CLI name: `serial`, `serial-queue`, `non-simd`,
+    /// `bitrace-free`, `simd`, `simd-noopt`, `simd-nopf`, `pjrt`.
+    pub fn parse(name: &str, threads: usize, artifact_dir: &str) -> Result<Self> {
+        Ok(match name {
+            "serial" | "serial-layered" => EngineKind::SerialLayered,
+            "serial-queue" => EngineKind::SerialQueue,
+            "non-simd" | "parallel" => EngineKind::NonSimd { threads },
+            "bitrace-free" => EngineKind::BitRaceFree { threads },
+            "simd" => EngineKind::Simd {
+                threads,
+                opts: SimdOpts::full(),
+                policy: LayerPolicy::heavy(),
+            },
+            "simd-noopt" => EngineKind::Simd {
+                threads,
+                opts: SimdOpts::none(),
+                policy: LayerPolicy::heavy(),
+            },
+            "simd-nopf" => EngineKind::Simd {
+                threads,
+                opts: SimdOpts::aligned_masks(),
+                policy: LayerPolicy::heavy(),
+            },
+            "hybrid" => EngineKind::Hybrid { threads, simd: true },
+            "hybrid-scalar" => EngineKind::Hybrid { threads, simd: false },
+            "pjrt" => EngineKind::Pjrt { artifact_dir: artifact_dir.to_string() },
+            other => anyhow::bail!(
+                "unknown engine {other:?} (expected serial, serial-queue, non-simd, \
+                 bitrace-free, simd, simd-noopt, simd-nopf, hybrid, hybrid-scalar, pjrt)"
+            ),
+        })
+    }
+}
+
+/// Instantiate an engine. (Engines are constructed per worker thread —
+/// the PJRT engine holds a client handle that is not `Sync`.)
+pub fn make_engine(kind: &EngineKind) -> Result<Box<dyn BfsAlgorithm>> {
+    Ok(match kind {
+        EngineKind::SerialQueue => Box::new(SerialQueueBfs),
+        EngineKind::SerialLayered => Box::new(SerialLayeredBfs),
+        EngineKind::NonSimd { threads } => Box::new(ParallelBfs { num_threads: *threads }),
+        EngineKind::BitRaceFree { threads } => {
+            Box::new(BitRaceFreeBfs { num_threads: *threads })
+        }
+        EngineKind::Simd { threads, opts, policy } => Box::new(VectorizedBfs {
+            num_threads: *threads,
+            opts: *opts,
+            policy: *policy,
+        }),
+        EngineKind::Hybrid { threads, simd } => Box::new(HybridBfs {
+            num_threads: *threads,
+            simd: *simd,
+            ..Default::default()
+        }),
+        EngineKind::Pjrt { artifact_dir } => Box::new(PjrtBfs::from_dir(artifact_dir)?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_names() {
+        for name in ["serial", "serial-queue", "non-simd", "bitrace-free", "simd", "simd-noopt", "simd-nopf", "hybrid", "hybrid-scalar", "pjrt"] {
+            assert!(EngineKind::parse(name, 4, "artifacts").is_ok(), "{name}");
+        }
+        assert!(EngineKind::parse("nope", 4, "artifacts").is_err());
+    }
+
+    #[test]
+    fn make_native_engines() {
+        for kind in [
+            EngineKind::SerialQueue,
+            EngineKind::SerialLayered,
+            EngineKind::NonSimd { threads: 2 },
+            EngineKind::BitRaceFree { threads: 2 },
+            EngineKind::Simd { threads: 2, opts: SimdOpts::full(), policy: LayerPolicy::All },
+        ] {
+            assert!(make_engine(&kind).is_ok(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn engines_run_and_agree() {
+        use crate::graph::{Csr, RmatConfig};
+        let el = RmatConfig::graph500(9, 8).generate(50);
+        let g = Csr::from_edge_list(9, &el);
+        let reference = make_engine(&EngineKind::SerialLayered).unwrap().run(&g, 0);
+        for kind in [
+            EngineKind::SerialQueue,
+            EngineKind::NonSimd { threads: 2 },
+            EngineKind::BitRaceFree { threads: 2 },
+            EngineKind::Simd { threads: 2, opts: SimdOpts::full(), policy: LayerPolicy::All },
+            EngineKind::Hybrid { threads: 2, simd: true },
+            EngineKind::Hybrid { threads: 2, simd: false },
+        ] {
+            let r = make_engine(&kind).unwrap().run(&g, 0);
+            assert_eq!(
+                r.tree.distances().unwrap(),
+                reference.tree.distances().unwrap(),
+                "{kind:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Job and result types for the coordinator.
+
+use std::sync::Arc;
+
+use super::engine::EngineKind;
+use crate::bfs::validate::ValidationReport;
+use crate::bfs::RunTrace;
+use crate::graph::Csr;
+use crate::Vertex;
+
+/// One unit of coordinator work: run BFS from each of `roots` over `graph`
+/// with `engine`, optionally validating every tree.
+#[derive(Clone)]
+pub struct BfsJob {
+    pub id: u64,
+    pub graph: Arc<Csr>,
+    pub roots: Vec<Vertex>,
+    pub engine: EngineKind,
+    pub validate: bool,
+}
+
+/// Result of one root's traversal.
+#[derive(Clone, Debug)]
+pub struct RootRun {
+    pub root: Vertex,
+    /// Edges *traversed* in Graph500's TEPS convention: the number of
+    /// undirected input edges within the reached component, approximated as
+    /// scanned-directed-edges / 2 (the reference uses m = |E| of the
+    /// component; scans count each direction once).
+    pub edges_traversed: usize,
+    pub reached: usize,
+    pub seconds: f64,
+    pub trace: RunTrace,
+    /// Validation report (None when the job ran with validate=false).
+    pub validation: Option<ValidationReport>,
+}
+
+impl RootRun {
+    /// TEPS for this root (0 when the root reached nothing — the paper
+    /// keeps those zeros in the harmonic mean, §5.3).
+    pub fn teps(&self) -> f64 {
+        if self.seconds > 0.0 {
+            self.edges_traversed as f64 / self.seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Completed job.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub id: u64,
+    pub runs: Vec<RootRun>,
+    pub all_valid: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn teps_zero_for_empty_run() {
+        let r = RootRun {
+            root: 0,
+            edges_traversed: 0,
+            reached: 1,
+            seconds: 0.01,
+            trace: RunTrace::default(),
+            validation: None,
+        };
+        assert_eq!(r.teps(), 0.0);
+    }
+
+    #[test]
+    fn teps_computes() {
+        let r = RootRun {
+            root: 0,
+            edges_traversed: 1_000_000,
+            reached: 100,
+            seconds: 0.5,
+            trace: RunTrace::default(),
+            validation: None,
+        };
+        assert_eq!(r.teps(), 2_000_000.0);
+    }
+}

@@ -1,0 +1,84 @@
+//! Coordinator metrics: cheap atomic counters aggregated across jobs.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use super::job::RootRun;
+
+/// Live counters (interior-mutable; the coordinator is shared by reference).
+#[derive(Default)]
+pub struct Metrics {
+    jobs: AtomicUsize,
+    roots: AtomicUsize,
+    edges: AtomicU64,
+    /// Total traversal nanoseconds (sum over roots, not wall).
+    nanos: AtomicU64,
+}
+
+/// Point-in-time copy of the counters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    pub jobs: usize,
+    pub roots: usize,
+    pub edges_traversed: u64,
+    pub total_seconds: f64,
+    /// Aggregate TEPS over everything the coordinator has run.
+    pub aggregate_teps: f64,
+}
+
+impl Metrics {
+    pub fn record_job(&self, runs: &[RootRun]) {
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        self.roots.fetch_add(runs.len(), Ordering::Relaxed);
+        let edges: u64 = runs.iter().map(|r| r.edges_traversed as u64).sum();
+        self.edges.fetch_add(edges, Ordering::Relaxed);
+        let nanos: u64 = runs.iter().map(|r| (r.seconds * 1e9) as u64).sum();
+        self.nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let edges = self.edges.load(Ordering::Relaxed);
+        let secs = self.nanos.load(Ordering::Relaxed) as f64 / 1e9;
+        MetricsSnapshot {
+            jobs: self.jobs.load(Ordering::Relaxed),
+            roots: self.roots.load(Ordering::Relaxed),
+            edges_traversed: edges,
+            total_seconds: secs,
+            aggregate_teps: if secs > 0.0 { edges as f64 / secs } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::RunTrace;
+
+    fn run(edges: usize, seconds: f64) -> RootRun {
+        RootRun {
+            root: 0,
+            edges_traversed: edges,
+            reached: 1,
+            seconds,
+            trace: RunTrace::default(),
+            validation: None,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let m = Metrics::default();
+        m.record_job(&[run(100, 0.5), run(300, 0.5)]);
+        let s = m.snapshot();
+        assert_eq!(s.jobs, 1);
+        assert_eq!(s.roots, 2);
+        assert_eq!(s.edges_traversed, 400);
+        assert!((s.total_seconds - 1.0).abs() < 1e-6);
+        assert!((s.aggregate_teps - 400.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_snapshot_no_nan() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.aggregate_teps, 0.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! Layer-3 coordinator.
+//!
+//! The paper's contribution lives in the kernel (L1/L2), so per the
+//! architecture rules this layer is a driver, not a serving stack: it owns
+//! process lifecycle, turns CLI requests into [`job::BfsJob`]s, schedules
+//! the 64-root Graph500 experiment over a small worker pool (roots are
+//! independent, so the batch unit is a root), selects the BFS engine, and
+//! aggregates [`metrics`].
+//!
+//! * [`engine`] — engine registry: every algorithm of the ladder plus the
+//!   PJRT-backed kernel engine, behind one constructor.
+//! * [`job`] — job + result types.
+//! * [`scheduler`] — root-batching worker pool.
+//! * [`metrics`] — run counters and TEPS aggregation.
+
+pub mod engine;
+pub mod job;
+pub mod metrics;
+pub mod scheduler;
+
+pub use engine::{make_engine, EngineKind};
+pub use job::{BfsJob, JobOutcome, RootRun};
+pub use scheduler::Coordinator;

@@ -1,0 +1,298 @@
+//! Bitmap arrays — the frontier / visited representation of §3.3.1.
+//!
+//! A bitmap maps vertex ids to single bits inside an array of 32-bit words
+//! (`word = v / 32`, `bit = v % 32`). The paper's motivating arithmetic: a
+//! SCALE-20 graph (1,048,576 vertices) needs 4 MB as an `i32` array but only
+//! 131,072 bytes as a bitmap — small enough to live in the Phi's L2 (and, in
+//! our Pallas adaptation, in VMEM).
+//!
+//! The word granularity is exactly what creates the paper's *bit race
+//! condition*: two threads (or two vector lanes) setting different bits of
+//! the same word with plain read-modify-write stores lose updates. The
+//! restoration process (§3.3.2, [`crate::bfs::bitrace_free`]) repairs that.
+
+use crate::Vertex;
+
+/// Number of bits per bitmap word. The paper fixes this at 32 (the vector
+/// unit handles 16 × 32-bit lanes).
+pub const BITS_PER_WORD: u32 = 32;
+
+/// A fixed-capacity bitmap over vertex ids `0..len`.
+///
+/// All single-bit operations are plain (non-atomic) read-modify-write on the
+/// containing word — deliberately so: the algorithms built on top either
+/// tolerate the race (benign predecessor race, §3.2) or repair it
+/// (restoration, §3.3.2). A handful of whole-word accessors are exposed so
+/// the restoration pass and the vector unit can work at word granularity.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Bitmap {
+    words: Vec<u32>,
+    len: usize,
+}
+
+impl Bitmap {
+    /// Create an all-zeros bitmap able to hold `len` bits.
+    pub fn new(len: usize) -> Self {
+        let nwords = len.div_ceil(BITS_PER_WORD as usize);
+        Bitmap { words: vec![0; nwords], len }
+    }
+
+    /// Number of bits (vertices) the bitmap covers.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if the bitmap covers zero bits.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of 32-bit words backing the bitmap.
+    #[inline]
+    pub fn num_words(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Set bit `v` (paper: `SetBit(n)`).
+    #[inline]
+    pub fn set_bit(&mut self, v: Vertex) {
+        debug_assert!((v as usize) < self.len);
+        self.words[(v / BITS_PER_WORD) as usize] |= 1u32 << (v % BITS_PER_WORD);
+    }
+
+    /// Clear bit `v`.
+    #[inline]
+    pub fn clear_bit(&mut self, v: Vertex) {
+        debug_assert!((v as usize) < self.len);
+        self.words[(v / BITS_PER_WORD) as usize] &= !(1u32 << (v % BITS_PER_WORD));
+    }
+
+    /// Test bit `v` (paper: `TestBit(n)`).
+    #[inline]
+    pub fn test_bit(&self, v: Vertex) -> bool {
+        debug_assert!((v as usize) < self.len);
+        (self.words[(v / BITS_PER_WORD) as usize] >> (v % BITS_PER_WORD)) & 1 == 1
+    }
+
+    /// Read the whole 32-bit word with index `w`.
+    #[inline]
+    pub fn word(&self, w: usize) -> u32 {
+        self.words[w]
+    }
+
+    /// Overwrite the whole 32-bit word with index `w`.
+    #[inline]
+    pub fn set_word(&mut self, w: usize, value: u32) {
+        self.words[w] = value;
+    }
+
+    /// OR `value` into word `w` (used by the vectorized scatter path, which
+    /// works at word granularity like `_mm512_mask_i32scatter_epi32`).
+    #[inline]
+    pub fn or_word(&mut self, w: usize, value: u32) {
+        self.words[w] |= value;
+    }
+
+    /// Raw words, read-only (the vector unit gathers from this).
+    #[inline]
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+
+    /// Raw words, mutable (the vector unit scatters into this).
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u32] {
+        &mut self.words
+    }
+
+    /// Map a (word, bit) position back to the vertex id
+    /// (paper: `bit2vertex(n)`).
+    #[inline]
+    pub fn bit_to_vertex(w: usize, bit: u32) -> Vertex {
+        w as Vertex * BITS_PER_WORD + bit
+    }
+
+    /// Zero every word (paper: `out ← 0` at the end of each layer).
+    pub fn clear_all(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// True if no bit is set (the `while in ≠ 0` loop condition).
+    pub fn is_all_zero(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Population count across the bitmap.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Iterate over the indices of non-zero words. The restoration pass and
+    /// the input-list scan both iterate at word granularity and skip zero
+    /// words (Algorithm 3 line 18: `if w ≠ 0`).
+    pub fn iter_nonzero_words(&self) -> impl Iterator<Item = (usize, u32)> + '_ {
+        self.words
+            .iter()
+            .copied()
+            .enumerate()
+            .filter(|&(_, w)| w != 0)
+    }
+
+    /// Iterate over all set bits as vertex ids, ascending.
+    pub fn iter_set_bits(&self) -> SetBits<'_> {
+        SetBits { words: &self.words, word_idx: 0, current: self.words.first().copied().unwrap_or(0), len: self.len }
+    }
+
+    /// Collect the set bits into a vertex vector (test/debug helper).
+    pub fn to_vertices(&self) -> Vec<Vertex> {
+        self.iter_set_bits().collect()
+    }
+
+    /// Bulk-load from a vertex list (test/setup helper).
+    pub fn from_vertices(len: usize, vs: &[Vertex]) -> Self {
+        let mut b = Bitmap::new(len);
+        for &v in vs {
+            b.set_bit(v);
+        }
+        b
+    }
+}
+
+impl std::fmt::Debug for Bitmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Bitmap(len={}, ones={})", self.len, self.count_ones())
+    }
+}
+
+/// Iterator over set bits, word-at-a-time with trailing-zeros extraction.
+pub struct SetBits<'a> {
+    words: &'a [u32],
+    word_idx: usize,
+    current: u32,
+    len: usize,
+}
+
+impl Iterator for SetBits<'_> {
+    type Item = Vertex;
+
+    #[inline]
+    fn next(&mut self) -> Option<Vertex> {
+        loop {
+            if self.current != 0 {
+                let bit = self.current.trailing_zeros();
+                self.current &= self.current - 1; // clear lowest set bit
+                let v = Bitmap::bit_to_vertex(self.word_idx, bit);
+                if (v as usize) < self.len {
+                    return Some(v);
+                }
+                // padding bit beyond len — keep scanning (shouldn't happen
+                // through the public API, but stay safe).
+                continue;
+            }
+            self.word_idx += 1;
+            if self.word_idx >= self.words.len() {
+                return None;
+            }
+            self.current = self.words[self.word_idx];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_is_all_zero() {
+        let b = Bitmap::new(100);
+        assert!(b.is_all_zero());
+        assert_eq!(b.count_ones(), 0);
+        assert_eq!(b.len(), 100);
+        assert_eq!(b.num_words(), 4); // ceil(100/32)
+    }
+
+    #[test]
+    fn set_test_clear_roundtrip() {
+        let mut b = Bitmap::new(70);
+        for v in [0u32, 1, 31, 32, 33, 63, 64, 69] {
+            assert!(!b.test_bit(v));
+            b.set_bit(v);
+            assert!(b.test_bit(v));
+        }
+        assert_eq!(b.count_ones(), 8);
+        b.clear_bit(32);
+        assert!(!b.test_bit(32));
+        assert!(b.test_bit(33));
+        assert_eq!(b.count_ones(), 7);
+    }
+
+    #[test]
+    fn paper_figure5_example() {
+        // Fig 5: vertices 28 and 30 set — both land in word 0 of the bitmap.
+        let mut b = Bitmap::new(64);
+        b.set_bit(28);
+        b.set_bit(30);
+        assert_eq!(b.word(0), (1 << 28) | (1 << 30));
+        assert_eq!(b.word(1), 0);
+    }
+
+    #[test]
+    fn paper_working_set_arithmetic() {
+        // §3.3.1: 1,048,576 vertices → 4MB as ints, 131,072 bytes as bitmap.
+        let b = Bitmap::new(1 << 20);
+        assert_eq!(b.num_words() * 4, 131_072);
+    }
+
+    #[test]
+    fn bit_to_vertex_inverse() {
+        for v in [0u32, 5, 31, 32, 100, 1023] {
+            let w = (v / BITS_PER_WORD) as usize;
+            let bit = v % BITS_PER_WORD;
+            assert_eq!(Bitmap::bit_to_vertex(w, bit), v);
+        }
+    }
+
+    #[test]
+    fn iter_set_bits_ascending_and_complete() {
+        let vs = [3u32, 17, 31, 32, 64, 95, 96, 127];
+        let b = Bitmap::from_vertices(128, &vs);
+        assert_eq!(b.to_vertices(), vs);
+    }
+
+    #[test]
+    fn iter_nonzero_words_skips_zeros() {
+        let mut b = Bitmap::new(32 * 10);
+        b.set_bit(0);
+        b.set_bit(32 * 7 + 3);
+        let nz: Vec<usize> = b.iter_nonzero_words().map(|(i, _)| i).collect();
+        assert_eq!(nz, vec![0, 7]);
+    }
+
+    #[test]
+    fn clear_all_resets() {
+        let mut b = Bitmap::from_vertices(256, &[1, 2, 3, 200]);
+        assert!(!b.is_all_zero());
+        b.clear_all();
+        assert!(b.is_all_zero());
+    }
+
+    #[test]
+    fn word_level_ops_match_bit_level() {
+        let mut a = Bitmap::new(96);
+        let mut b = Bitmap::new(96);
+        a.set_bit(40);
+        a.set_bit(41);
+        b.or_word(1, (1 << 8) | (1 << 9)); // bits 40, 41 live in word 1
+        assert_eq!(a.words(), b.words());
+    }
+
+    #[test]
+    fn empty_bitmap() {
+        let b = Bitmap::new(0);
+        assert!(b.is_empty());
+        assert!(b.is_all_zero());
+        assert_eq!(b.iter_set_bits().count(), 0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Raw edge lists with Graph500 semantics.
+//!
+//! The Graph500 generator emits a stream of `(start, end)` tuples that may
+//! contain self-loops and duplicate edges (§4.1: "including self-loops and
+//! repeated edges"); the kernel-1 graph construction step is responsible for
+//! interpreting the stream as an *undirected* graph. We keep the raw stream
+//! (it is what gets timed in real Graph500 kernel-1) plus helpers for the
+//! statistics modules.
+
+use crate::Vertex;
+
+/// A raw, possibly dirty (self-loops, duplicates) list of undirected edges.
+#[derive(Clone, Debug, Default)]
+pub struct EdgeList {
+    /// Edge tuples exactly as generated.
+    pub edges: Vec<(Vertex, Vertex)>,
+    /// Number of vertices in the id space (`2^SCALE`).
+    pub num_vertices: usize,
+}
+
+impl EdgeList {
+    pub fn new(num_vertices: usize) -> Self {
+        EdgeList { edges: Vec::new(), num_vertices }
+    }
+
+    pub fn with_edges(num_vertices: usize, edges: Vec<(Vertex, Vertex)>) -> Self {
+        let el = EdgeList { edges, num_vertices };
+        el.assert_in_range();
+        el
+    }
+
+    fn assert_in_range(&self) {
+        debug_assert!(self
+            .edges
+            .iter()
+            .all(|&(a, b)| (a as usize) < self.num_vertices && (b as usize) < self.num_vertices));
+    }
+
+    /// Number of raw tuples (Graph500's `2^SCALE * edgefactor`).
+    pub fn num_raw_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Count of self-loop tuples.
+    pub fn num_self_loops(&self) -> usize {
+        self.edges.iter().filter(|&&(a, b)| a == b).count()
+    }
+
+    /// Distinct undirected edges (ignoring direction, self-loops and
+    /// duplicates removed) — what actually lands in the CSR.
+    pub fn distinct_undirected(&self) -> Vec<(Vertex, Vertex)> {
+        let mut norm: Vec<(Vertex, Vertex)> = self
+            .edges
+            .iter()
+            .filter(|&&(a, b)| a != b)
+            .map(|&(a, b)| if a <= b { (a, b) } else { (b, a) })
+            .collect();
+        norm.sort_unstable();
+        norm.dedup();
+        norm
+    }
+
+    /// Out-degree histogram over the *undirected simple* graph.
+    pub fn degrees(&self) -> Vec<usize> {
+        let mut deg = vec![0usize; self.num_vertices];
+        for (a, b) in self.distinct_undirected() {
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        deg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> EdgeList {
+        // 0-1 duplicated both directions, 2-2 self-loop, 1-2.
+        EdgeList::with_edges(4, vec![(0, 1), (1, 0), (2, 2), (1, 2), (0, 1)])
+    }
+
+    #[test]
+    fn raw_counts() {
+        let el = sample();
+        assert_eq!(el.num_raw_edges(), 5);
+        assert_eq!(el.num_self_loops(), 1);
+    }
+
+    #[test]
+    fn distinct_undirected_dedups_and_drops_loops() {
+        let el = sample();
+        assert_eq!(el.distinct_undirected(), vec![(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn degrees_count_both_endpoints() {
+        let el = sample();
+        assert_eq!(el.degrees(), vec![1, 2, 1, 0]);
+    }
+
+    #[test]
+    fn empty_list() {
+        let el = EdgeList::new(3);
+        assert_eq!(el.num_raw_edges(), 0);
+        assert_eq!(el.distinct_undirected(), vec![]);
+        assert_eq!(el.degrees(), vec![0, 0, 0]);
+    }
+}

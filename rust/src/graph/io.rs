@@ -1,0 +1,212 @@
+//! Graph persistence: plain-text edge lists (the format real-world graph
+//! datasets ship in — SNAP/KONECT-style "src dst" lines) and a compact
+//! binary CSR snapshot so large generated graphs don't pay regeneration
+//! on every run.
+//!
+//! Text format: one `src dst` pair per line, `#`-comments and blank lines
+//! ignored, vertex ids are non-negative integers. `num_vertices` is
+//! `max id + 1` unless a `# vertices: N` header overrides it.
+
+use std::io::{BufRead, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::csr::Csr;
+use super::edge_list::EdgeList;
+use crate::Vertex;
+
+/// Parse an edge list from a reader.
+pub fn read_edge_list(r: impl Read) -> Result<EdgeList> {
+    let reader = std::io::BufReader::new(r);
+    let mut edges: Vec<(Vertex, Vertex)> = Vec::new();
+    let mut max_id: u64 = 0;
+    let mut declared: Option<usize> = None;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.context("reading edge list")?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            if let Some(n) = rest.trim().strip_prefix("vertices:") {
+                declared = Some(n.trim().parse().with_context(|| format!("line {}", lineno + 1))?);
+            }
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(a), Some(b)) = (it.next(), it.next()) else {
+            bail!("line {}: expected `src dst`, got {line:?}", lineno + 1);
+        };
+        let a: u64 = a.parse().with_context(|| format!("line {}: src", lineno + 1))?;
+        let b: u64 = b.parse().with_context(|| format!("line {}: dst", lineno + 1))?;
+        if a > u32::MAX as u64 || b > u32::MAX as u64 {
+            bail!("line {}: vertex id beyond u32", lineno + 1);
+        }
+        max_id = max_id.max(a).max(b);
+        edges.push((a as Vertex, b as Vertex));
+    }
+    let inferred = if edges.is_empty() { 0 } else { max_id as usize + 1 };
+    let n = declared.unwrap_or(inferred);
+    if n < inferred {
+        bail!("declared vertex count {n} smaller than max id {}", max_id);
+    }
+    Ok(EdgeList::with_edges(n, edges))
+}
+
+/// Load an edge list from a file path.
+pub fn load_edge_list(path: impl AsRef<Path>) -> Result<EdgeList> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    read_edge_list(f)
+}
+
+/// Write an edge list (with the vertices header so round-trips preserve
+/// isolated trailing vertices).
+pub fn write_edge_list(w: impl Write, el: &EdgeList) -> Result<()> {
+    let mut w = BufWriter::new(w);
+    writeln!(w, "# vertices: {}", el.num_vertices)?;
+    for &(a, b) in &el.edges {
+        writeln!(w, "{a} {b}")?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Save an edge list to a file path.
+pub fn save_edge_list(path: impl AsRef<Path>, el: &EdgeList) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    write_edge_list(f, el)
+}
+
+const CSR_MAGIC: &[u8; 8] = b"PHIBFS01";
+
+/// Binary CSR snapshot: magic, scale, |V|, |rows|, then the two arrays as
+/// little-endian integers.
+pub fn write_csr(mut w: impl Write, g: &Csr) -> Result<()> {
+    w.write_all(CSR_MAGIC)?;
+    w.write_all(&(g.scale as u64).to_le_bytes())?;
+    w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
+    w.write_all(&(g.rows.len() as u64).to_le_bytes())?;
+    let mut buf = BufWriter::new(w);
+    for &c in &g.colstarts {
+        buf.write_all(&(c as u64).to_le_bytes())?;
+    }
+    for &v in &g.rows {
+        buf.write_all(&v.to_le_bytes())?;
+    }
+    buf.flush()?;
+    Ok(())
+}
+
+/// Read a binary CSR snapshot.
+pub fn read_csr(mut r: impl Read) -> Result<Csr> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("csr header")?;
+    if &magic != CSR_MAGIC {
+        bail!("not a phi-bfs CSR snapshot (bad magic)");
+    }
+    let mut u64buf = [0u8; 8];
+    let mut read_u64 = |r: &mut dyn Read| -> Result<u64> {
+        r.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let scale = read_u64(&mut r)? as u32;
+    let n = read_u64(&mut r)? as usize;
+    let nrows = read_u64(&mut r)? as usize;
+    let mut br = std::io::BufReader::new(r);
+    let mut colstarts = Vec::with_capacity(n + 1);
+    let mut b8 = [0u8; 8];
+    for _ in 0..=n {
+        br.read_exact(&mut b8).context("colstarts")?;
+        colstarts.push(u64::from_le_bytes(b8) as usize);
+    }
+    let mut rows = Vec::with_capacity(nrows);
+    let mut b4 = [0u8; 4];
+    for _ in 0..nrows {
+        br.read_exact(&mut b4).context("rows")?;
+        rows.push(u32::from_le_bytes(b4));
+    }
+    if colstarts.last().copied() != Some(nrows) {
+        bail!("corrupt snapshot: colstarts tail {:?} != rows len {nrows}", colstarts.last());
+    }
+    Ok(Csr { colstarts, rows, scale })
+}
+
+/// Save / load CSR snapshots by path.
+pub fn save_csr(path: impl AsRef<Path>, g: &Csr) -> Result<()> {
+    write_csr(std::fs::File::create(path)?, g)
+}
+
+pub fn load_csr(path: impl AsRef<Path>) -> Result<Csr> {
+    read_csr(std::fs::File::open(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::RmatConfig;
+
+    #[test]
+    fn text_roundtrip() {
+        let el = RmatConfig::graph500(8, 4).generate(5);
+        let mut buf = Vec::new();
+        write_edge_list(&mut buf, &el).unwrap();
+        let back = read_edge_list(&buf[..]).unwrap();
+        assert_eq!(back.num_vertices, el.num_vertices);
+        assert_eq!(back.edges, el.edges);
+    }
+
+    #[test]
+    fn parses_comments_and_blank_lines() {
+        let text = "# a comment\n\n0 1\n1 2\n# vertices: 10\n2 0\n";
+        let el = read_edge_list(text.as_bytes()).unwrap();
+        assert_eq!(el.num_vertices, 10);
+        assert_eq!(el.edges, vec![(0, 1), (1, 2), (2, 0)]);
+    }
+
+    #[test]
+    fn infers_vertex_count() {
+        let el = read_edge_list("3 7\n1 2\n".as_bytes()).unwrap();
+        assert_eq!(el.num_vertices, 8);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_edge_list("0\n".as_bytes()).is_err());
+        assert!(read_edge_list("a b\n".as_bytes()).is_err());
+        assert!(read_edge_list("# vertices: 1\n5 6\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn csr_binary_roundtrip() {
+        let el = RmatConfig::graph500(9, 8).generate(6);
+        let g = Csr::from_edge_list(9, &el);
+        let mut buf = Vec::new();
+        write_csr(&mut buf, &g).unwrap();
+        let back = read_csr(&buf[..]).unwrap();
+        assert_eq!(back.scale, g.scale);
+        assert_eq!(back.colstarts, g.colstarts);
+        assert_eq!(back.rows, g.rows);
+    }
+
+    #[test]
+    fn csr_rejects_bad_magic() {
+        assert!(read_csr(&b"NOTMAGIC\x00\x00"[..]).is_err());
+    }
+
+    #[test]
+    fn loaded_graph_traverses_identically() {
+        use crate::bfs::serial::SerialQueueBfs;
+        use crate::bfs::BfsAlgorithm;
+        let el = RmatConfig::graph500(9, 8).generate(7);
+        let g = Csr::from_edge_list(9, &el);
+        let mut buf = Vec::new();
+        write_csr(&mut buf, &g).unwrap();
+        let g2 = read_csr(&buf[..]).unwrap();
+        let a = SerialQueueBfs.run(&g, 3);
+        let b = SerialQueueBfs.run(&g2, 3);
+        assert_eq!(a.tree.pred, b.tree.pred);
+    }
+}

@@ -1,0 +1,24 @@
+//! Graph substrate: everything the paper takes from the Graph500 reference
+//! code plus the bitmap data structure of §3.3.1.
+//!
+//! * [`bitmap`] — 32-bit-word bitmap arrays (frontier / visited sets).
+//! * [`edge_list`] — raw generated edge tuples with Graph500 semantics
+//!   (self-loops and duplicates allowed in the *generated* stream).
+//! * [`rmat`] — the RMAT / Kronecker generator with Graph500's standard
+//!   initiator parameters (A=0.57, B=0.19, C=0.19, D=0.05).
+//! * [`csr`] — Compressed Sparse Row adjacency (`rows` + `colstarts`,
+//!   Fig 4 of the paper).
+//! * [`stats`] — degree distributions and the per-layer traversal profile
+//!   that Table 1 reports.
+
+pub mod bitmap;
+pub mod csr;
+pub mod edge_list;
+pub mod io;
+pub mod rmat;
+pub mod stats;
+
+pub use bitmap::Bitmap;
+pub use csr::Csr;
+pub use edge_list::EdgeList;
+pub use rmat::RmatConfig;

@@ -1,0 +1,218 @@
+//! Graph statistics: degree distribution and the per-layer traversal
+//! profile that the paper's Table 1 reports (input vertices, edges
+//! inspected, newly traversed vertices, per BFS layer).
+
+use super::csr::Csr;
+use crate::Vertex;
+
+/// One row of Table 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerRow {
+    /// Layer index (distance from the root).
+    pub layer: usize,
+    /// Vertices in the input list for this layer.
+    pub input_vertices: usize,
+    /// Adjacency entries inspected while processing the layer
+    /// (the paper's "Edges" column: sum of input-vertex degrees).
+    pub edges: usize,
+    /// Vertices discovered (put into the output list) in this layer.
+    pub traversed: usize,
+}
+
+/// Full per-layer profile of a BFS from `root`.
+#[derive(Clone, Debug, Default)]
+pub struct LayerProfile {
+    pub rows: Vec<LayerRow>,
+}
+
+impl LayerProfile {
+    /// Run a simple layered traversal and record Table 1's columns.
+    /// (Deliberately independent of the `bfs` module so statistics can be
+    /// produced even while an algorithm under test is broken.)
+    pub fn compute(g: &Csr, root: Vertex) -> Self {
+        let n = g.num_vertices();
+        let mut visited = vec![false; n];
+        let mut frontier = vec![root];
+        visited[root as usize] = true;
+        let mut rows = Vec::new();
+        let mut layer = 0usize;
+        while !frontier.is_empty() {
+            let mut next = Vec::new();
+            let mut edges = 0usize;
+            for &u in &frontier {
+                edges += g.degree(u);
+                for &v in g.neighbors(u) {
+                    if !visited[v as usize] {
+                        visited[v as usize] = true;
+                        next.push(v);
+                    }
+                }
+            }
+            rows.push(LayerRow { layer, input_vertices: frontier.len(), edges, traversed: next.len() });
+            frontier = next;
+            layer += 1;
+        }
+        LayerProfile { rows }
+    }
+
+    /// Graph diameter as seen from this root (number of non-empty layers
+    /// minus one). Table 1's SCALE-20 instance shows 7 layers → diameter 7
+    /// in the paper's counting (they count the final empty-discovery layer).
+    pub fn num_layers(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Total vertices reached, including the root.
+    pub fn total_traversed(&self) -> usize {
+        1 + self.rows.iter().map(|r| r.traversed).sum::<usize>()
+    }
+
+    /// Total adjacency entries inspected.
+    pub fn total_edges(&self) -> usize {
+        self.rows.iter().map(|r| r.edges).sum()
+    }
+
+    /// Index of the layer with the most input vertices (the paper's
+    /// "middle layer" where counts peak, §4.1).
+    pub fn peak_layer(&self) -> usize {
+        self.rows
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, r)| r.input_vertices)
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// The layer-selection heuristic of §4.1 applied to this profile: the
+    /// layers worth vectorizing are the ones carrying most of the edge
+    /// volume. Returns layer indices whose edge count is ≥ `frac` of the
+    /// maximum layer's edge count.
+    pub fn heavy_layers(&self, frac: f64) -> Vec<usize> {
+        let max = self.rows.iter().map(|r| r.edges).max().unwrap_or(0) as f64;
+        self.rows
+            .iter()
+            .filter(|r| r.edges as f64 >= frac * max)
+            .map(|r| r.layer)
+            .collect()
+    }
+}
+
+/// Degree-distribution summary used by the evaluation discussion
+/// (workload imbalance grows with degree skew, §6.1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DegreeStats {
+    pub min: usize,
+    pub max: usize,
+    pub mean: f64,
+    /// Gini-style skew indicator: fraction of all edges owned by the top 1%
+    /// of vertices by degree.
+    pub top1pct_edge_share: f64,
+    pub isolated: usize,
+}
+
+impl DegreeStats {
+    pub fn compute(g: &Csr) -> Self {
+        let n = g.num_vertices();
+        let mut degs: Vec<usize> = (0..n).map(|v| g.degree(v as Vertex)).collect();
+        let total: usize = degs.iter().sum();
+        let isolated = degs.iter().filter(|&&d| d == 0).count();
+        let min = degs.iter().copied().min().unwrap_or(0);
+        let max = degs.iter().copied().max().unwrap_or(0);
+        degs.sort_unstable_by(|a, b| b.cmp(a));
+        let k = (n / 100).max(1);
+        let top: usize = degs[..k].iter().sum();
+        DegreeStats {
+            min,
+            max,
+            mean: total as f64 / n.max(1) as f64,
+            top1pct_edge_share: if total > 0 { top as f64 / total as f64 } else { 0.0 },
+            isolated,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::edge_list::EdgeList;
+    use crate::graph::rmat::RmatConfig;
+
+    fn path_graph(n: usize) -> Csr {
+        let edges = (0..n - 1).map(|i| (i as Vertex, i as Vertex + 1)).collect();
+        Csr::from_edge_list(0, &EdgeList::with_edges(n, edges))
+    }
+
+    #[test]
+    fn path_profile() {
+        let g = path_graph(5);
+        let p = LayerProfile::compute(&g, 0);
+        assert_eq!(p.num_layers(), 5);
+        assert_eq!(p.total_traversed(), 5);
+        // edges column = degree sums: 1, 2, 2, 2, 1
+        let edges: Vec<usize> = p.rows.iter().map(|r| r.edges).collect();
+        assert_eq!(edges, vec![1, 2, 2, 2, 1]);
+        let traversed: Vec<usize> = p.rows.iter().map(|r| r.traversed).collect();
+        assert_eq!(traversed, vec![1, 1, 1, 1, 0]);
+    }
+
+    #[test]
+    fn star_profile() {
+        let el = EdgeList::with_edges(9, (1..9).map(|i| (0, i as Vertex)).collect());
+        let g = Csr::from_edge_list(0, &el);
+        let p = LayerProfile::compute(&g, 0);
+        assert_eq!(p.num_layers(), 2);
+        assert_eq!(p.rows[0], LayerRow { layer: 0, input_vertices: 1, edges: 8, traversed: 8 });
+        assert_eq!(p.rows[1].input_vertices, 8);
+        assert_eq!(p.rows[1].traversed, 0);
+    }
+
+    #[test]
+    fn rmat_profile_small_world_shape() {
+        // §4.1 / Table 1: input vertices grow to a middle-layer peak then
+        // shrink; the layer count (effective diameter) is small.
+        let el = RmatConfig::graph500(13, 16).generate(11);
+        let g = Csr::from_edge_list(13, &el);
+        let p = LayerProfile::compute(&g, el.degrees().iter().enumerate().max_by_key(|(_, &d)| d).unwrap().0 as Vertex);
+        assert!(p.num_layers() <= 10, "small-world diameter, got {}", p.num_layers());
+        let peak = p.peak_layer();
+        assert!(peak >= 1 && peak + 1 < p.num_layers());
+        // monotone growth up to the peak
+        for w in p.rows[..=peak].windows(2) {
+            assert!(w[0].input_vertices <= w[1].input_vertices);
+        }
+        // most traversal happens by the end of the peak layer
+        let upto: usize = p.rows[..=peak].iter().map(|r| r.traversed).sum();
+        assert!(upto as f64 > 0.8 * (p.total_traversed() as f64 - 1.0));
+    }
+
+    #[test]
+    fn totals_consistent() {
+        let el = RmatConfig::graph500(10, 8).generate(3);
+        let g = Csr::from_edge_list(10, &el);
+        let p = LayerProfile::compute(&g, 0);
+        assert!(p.total_traversed() <= g.num_vertices());
+        assert!(p.total_edges() <= g.num_directed_edges());
+    }
+
+    #[test]
+    fn heavy_layers_cover_peak() {
+        let el = RmatConfig::graph500(12, 16).generate(5);
+        let g = Csr::from_edge_list(12, &el);
+        let p = LayerProfile::compute(&g, 1);
+        let heavy = p.heavy_layers(0.5);
+        assert!(!heavy.is_empty());
+        // the densest-edge layer must be included
+        let max_layer = p.rows.iter().max_by_key(|r| r.edges).unwrap().layer;
+        assert!(heavy.contains(&max_layer));
+    }
+
+    #[test]
+    fn degree_stats_skew() {
+        let el = RmatConfig::graph500(12, 16).generate(9);
+        let g = Csr::from_edge_list(12, &el);
+        let s = DegreeStats::compute(&g);
+        assert!(s.max > 50 * s.mean as usize, "max {} mean {}", s.max, s.mean);
+        assert!(s.top1pct_edge_share > 0.2);
+        assert!(s.isolated > 0); // RMAT leaves isolated vertices → 0-TEPS roots
+    }
+}

@@ -1,0 +1,21 @@
+//! §5 — the Graph500-style experiment harness.
+//!
+//! "The experimental design comprises 64 BFS executions each with a
+//! randomly chosen different starting vertex. ... After the completion of
+//! the executions, statistics, including time and Traversed Edges Per
+//! Second (TEPS), are collected."
+//!
+//! * [`stats`] — TEPS statistics including Graph500's harmonic mean with
+//!   the zero-TEPS quirk the paper calls out (unconnected roots are *not*
+//!   filtered, and inflate the harmonic mean above the max).
+//! * [`runner`] — end-to-end experiment: generate graph → sample roots →
+//!   run via the coordinator → validate → collect stats.
+//! * [`report`] — fixed-width table / scientific-notation formatting for
+//!   the bench outputs that mirror the paper's tables and figures.
+
+pub mod report;
+pub mod runner;
+pub mod stats;
+
+pub use runner::{Experiment, ExperimentReport};
+pub use stats::TepsStats;

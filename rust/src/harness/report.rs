@@ -1,0 +1,104 @@
+//! Report formatting: fixed-width tables and the paper's scientific
+//! notation (`4.69E+08`) so bench output reads like the original tables.
+
+/// Format a TEPS value the way Table 2 prints it: `4.69E+08`.
+pub fn sci(x: f64) -> String {
+    if x == 0.0 {
+        return "0.00E+00".to_string();
+    }
+    let exp = x.abs().log10().floor() as i32;
+    let mant = x / 10f64.powi(exp);
+    format!("{mant:.2}E{exp:+03}")
+}
+
+/// Format TEPS as the figures' MTEPS axis.
+pub fn mteps(x: f64) -> String {
+    format!("{:.1}", x / 1e6)
+}
+
+/// A simple fixed-width table builder.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Render with per-column width = max cell width + 2.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sci_matches_paper_format() {
+        assert_eq!(sci(4.69e8), "4.69E+08");
+        assert_eq!(sci(2.67e8), "2.67E+08");
+        assert_eq!(sci(1.42e8), "1.42E+08");
+        assert_eq!(sci(0.0), "0.00E+00");
+        assert_eq!(sci(999.4), "9.99E+02");
+    }
+
+    #[test]
+    fn mteps_format() {
+        assert_eq!(mteps(1.05e9), "1050.0");
+        assert_eq!(mteps(8.0e8), "800.0");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Layer", "Vertices", "Edges"]);
+        t.row(&["0".into(), "1".into(), "12".into()]);
+        t.row(&["1".into(), "12".into(), "21892".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("Layer"));
+        assert!(lines[3].contains("21892"));
+        // all data lines same width
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_row() {
+        Table::new(&["a", "b"]).row(&["1".into()]);
+    }
+}

@@ -1,0 +1,150 @@
+//! End-to-end Graph500 experiment: kernel-0 graph construction, 64 random
+//! roots, per-root traversal + soft validation, TEPS statistics.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::stats::TepsStats;
+use crate::coordinator::engine::EngineKind;
+use crate::coordinator::job::{BfsJob, RootRun};
+use crate::coordinator::scheduler::Coordinator;
+use crate::graph::stats::LayerProfile;
+use crate::graph::{Csr, RmatConfig};
+use crate::rng::Xoshiro256;
+use crate::Vertex;
+
+/// Experiment configuration (§5's setup).
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    pub scale: u32,
+    pub edgefactor: usize,
+    pub seed: u64,
+    /// Number of BFS executions; Graph500 and the paper use 64.
+    pub num_roots: usize,
+    pub engine: EngineKind,
+    /// Coordinator worker threads (independent of the engine's threads).
+    pub workers: usize,
+    pub validate: bool,
+}
+
+impl Experiment {
+    pub fn new(scale: u32, edgefactor: usize, engine: EngineKind) -> Self {
+        Experiment {
+            scale,
+            edgefactor,
+            seed: 1,
+            num_roots: 64,
+            engine,
+            workers: 1,
+            validate: true,
+        }
+    }
+
+    /// Build graph, sample roots, run all traversals, collect stats.
+    pub fn run(&self) -> Result<ExperimentReport> {
+        let t0 = Instant::now();
+        let cfg = RmatConfig::graph500(self.scale, self.edgefactor);
+        let edges = cfg.generate(self.seed);
+        let graph = Arc::new(Csr::from_edge_list(self.scale, &edges));
+        let construction_seconds = t0.elapsed().as_secs_f64();
+
+        // Graph500 samples roots uniformly from the vertex space; the
+        // paper explicitly does NOT filter unconnected ones (§5.3).
+        let mut rng = Xoshiro256::seed_from_u64(self.seed ^ 0x524f_4f54); // "ROOT"
+        let n = graph.num_vertices();
+        let roots: Vec<Vertex> = rng
+            .sample_distinct(n, self.num_roots.min(n))
+            .into_iter()
+            .map(|v| v as Vertex)
+            .collect();
+
+        let job = BfsJob {
+            id: self.seed,
+            graph: Arc::clone(&graph),
+            roots,
+            engine: self.engine.clone(),
+            validate: self.validate,
+        };
+        let coordinator = Coordinator::new(self.workers);
+        let outcome = coordinator.run_job(&job)?;
+
+        let stats = TepsStats::from_runs(&outcome.runs);
+        Ok(ExperimentReport {
+            scale: self.scale,
+            edgefactor: self.edgefactor,
+            num_vertices: n,
+            num_directed_edges: graph.num_directed_edges(),
+            construction_seconds,
+            graph,
+            runs: outcome.runs,
+            all_valid: outcome.all_valid,
+            stats,
+        })
+    }
+}
+
+/// Everything a bench or example needs to print paper-style results.
+pub struct ExperimentReport {
+    pub scale: u32,
+    pub edgefactor: usize,
+    pub num_vertices: usize,
+    pub num_directed_edges: usize,
+    pub construction_seconds: f64,
+    pub graph: Arc<Csr>,
+    pub runs: Vec<RootRun>,
+    pub all_valid: bool,
+    pub stats: TepsStats,
+}
+
+impl ExperimentReport {
+    /// Table-1-style layer profile for the first *connected* root.
+    pub fn layer_profile(&self) -> Option<LayerProfile> {
+        let run = self.runs.iter().find(|r| r.reached > 1)?;
+        Some(LayerProfile::compute(&self.graph, run.root))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_experiment_end_to_end() {
+        let mut exp = Experiment::new(9, 8, EngineKind::SerialLayered);
+        exp.num_roots = 8;
+        exp.workers = 2;
+        let report = exp.run().unwrap();
+        assert_eq!(report.num_vertices, 512);
+        assert_eq!(report.runs.len(), 8);
+        assert!(report.all_valid, "validation failed");
+        assert!(report.stats.max > 0.0);
+        assert!(report.layer_profile().is_some());
+    }
+
+    #[test]
+    fn experiment_deterministic_roots() {
+        let mut exp = Experiment::new(8, 8, EngineKind::SerialQueue);
+        exp.num_roots = 4;
+        let a = exp.run().unwrap();
+        let b = exp.run().unwrap();
+        let ra: Vec<_> = a.runs.iter().map(|r| r.root).collect();
+        let rb: Vec<_> = b.runs.iter().map(|r| r.root).collect();
+        assert_eq!(ra, rb);
+    }
+
+    #[test]
+    fn simd_engine_through_harness() {
+        use crate::bfs::policy::LayerPolicy;
+        use crate::bfs::vectorized::SimdOpts;
+        let mut exp = Experiment::new(9, 8, EngineKind::Simd {
+            threads: 2,
+            opts: SimdOpts::full(),
+            policy: LayerPolicy::heavy(),
+        });
+        exp.num_roots = 4;
+        let report = exp.run().unwrap();
+        assert!(report.all_valid);
+    }
+}

@@ -1,0 +1,108 @@
+//! TEPS statistics, Graph500 style.
+//!
+//! Graph500's collector works on *inverse* TEPS (seconds per edge): it
+//! averages `1/TEPS_i` and reports the harmonic mean `n / Σ(1/TEPS_i)`.
+//! An unconnected root traverses 0 edges, so its inverse is 0 — which
+//! *removes* it from the denominator and inflates the harmonic mean, to
+//! the point that it "can be higher than the maximum number of TEPS"
+//! (§5.3). The paper deliberately keeps this quirk for comparability with
+//! Gao et al. and Beamer et al.; we reproduce it and additionally report
+//! the filtered value.
+
+use crate::coordinator::job::RootRun;
+
+/// Summary statistics over a set of per-root TEPS values.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TepsStats {
+    pub runs: usize,
+    /// Roots that traversed zero edges (unconnected starts).
+    pub zero_runs: usize,
+    pub min: f64,
+    pub max: f64,
+    pub arithmetic_mean: f64,
+    /// Graph500's harmonic mean over inverse-TEPS, zeros contributing 0 to
+    /// the denominator — the paper's headline statistic.
+    pub harmonic_mean_graph500: f64,
+    /// Harmonic mean over connected roots only.
+    pub harmonic_mean_filtered: f64,
+}
+
+impl TepsStats {
+    pub fn from_teps(teps: &[f64]) -> Self {
+        if teps.is_empty() {
+            return TepsStats::default();
+        }
+        let zero_runs = teps.iter().filter(|&&t| t == 0.0).count();
+        let nonzero: Vec<f64> = teps.iter().copied().filter(|&t| t > 0.0).collect();
+        let min = teps.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = teps.iter().copied().fold(0.0, f64::max);
+        let arithmetic_mean = teps.iter().sum::<f64>() / teps.len() as f64;
+        // Graph500: inverse of a zero-TEPS run is *zero* (tm/m with m = 0
+        // in the reference code), so the denominator only sees the
+        // connected roots while n counts all of them.
+        let inv_sum: f64 = nonzero.iter().map(|t| 1.0 / t).sum();
+        let harmonic_mean_graph500 =
+            if inv_sum > 0.0 { teps.len() as f64 / inv_sum } else { 0.0 };
+        let harmonic_mean_filtered =
+            if inv_sum > 0.0 { nonzero.len() as f64 / inv_sum } else { 0.0 };
+        TepsStats {
+            runs: teps.len(),
+            zero_runs,
+            min,
+            max,
+            arithmetic_mean,
+            harmonic_mean_graph500,
+            harmonic_mean_filtered,
+        }
+    }
+
+    pub fn from_runs(runs: &[RootRun]) -> Self {
+        let teps: Vec<f64> = runs.iter().map(|r| r.teps()).collect();
+        Self::from_teps(&teps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_zeros_equals_classic_harmonic() {
+        let s = TepsStats::from_teps(&[100.0, 200.0, 400.0]);
+        let classic = 3.0 / (1.0 / 100.0 + 1.0 / 200.0 + 1.0 / 400.0);
+        assert!((s.harmonic_mean_graph500 - classic).abs() < 1e-9);
+        assert_eq!(s.harmonic_mean_graph500, s.harmonic_mean_filtered);
+        assert_eq!(s.zero_runs, 0);
+    }
+
+    #[test]
+    fn paper_quirk_zeros_inflate_harmonic_mean() {
+        // §5.3: with unconnected roots the Graph500 harmonic mean can
+        // exceed the maximum TEPS.
+        let teps = [100.0, 100.0, 0.0, 0.0, 0.0, 0.0];
+        let s = TepsStats::from_teps(&teps);
+        assert!(s.harmonic_mean_graph500 > s.max, "{s:?}");
+        assert!((s.harmonic_mean_graph500 - 300.0).abs() < 1e-9); // 6 / (2/100)
+        assert!((s.harmonic_mean_filtered - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_zero() {
+        let s = TepsStats::from_teps(&[0.0, 0.0]);
+        assert_eq!(s.harmonic_mean_graph500, 0.0);
+        assert_eq!(s.zero_runs, 2);
+    }
+
+    #[test]
+    fn empty() {
+        assert_eq!(TepsStats::from_teps(&[]).runs, 0);
+    }
+
+    #[test]
+    fn min_max_mean() {
+        let s = TepsStats::from_teps(&[10.0, 20.0, 30.0]);
+        assert_eq!(s.min, 10.0);
+        assert_eq!(s.max, 30.0);
+        assert_eq!(s.arithmetic_mean, 20.0);
+    }
+}

@@ -1,0 +1,74 @@
+//! # phi-bfs
+//!
+//! A reproduction of *"Breadth First Search Vectorization on the Intel Xeon
+//! Phi"* (Paredes, Riley, Luján; 2016) as a three-layer Rust + JAX + Pallas
+//! stack.
+//!
+//! The paper's contribution is a top-down BFS that
+//!
+//! 1. represents the frontier/visited sets as **bitmap arrays** (§3.3.1),
+//! 2. removes all atomic operations by tolerating bit-level races and
+//!    repairing them afterwards with a **restoration process** (§3.3.2), and
+//! 3. **vectorizes** the adjacency-list exploration and the restoration with
+//!    512-bit vector intrinsics (gather/scatter + mask registers, §4), plus
+//!    data-alignment / prefetching / thread-affinity tuning (§4.2, §6.2).
+//!
+//! This crate implements every substrate that work depends on:
+//!
+//! * [`graph`] — Graph500-style RMAT generator, CSR, bitmaps, statistics.
+//! * [`simd`] — a faithful 16-lane × 32-bit emulation of the Knights-Corner
+//!   vector unit (the exact intrinsics of the paper's Listing 1, including
+//!   the scatter write-conflict hazard the restoration process exists for).
+//! * [`bfs`] — the paper's algorithm ladder: serial (Alg 1), parallel
+//!   non-SIMD (Alg 2), bit-race-free with restoration (Alg 3), and the
+//!   vectorized version (Listing 1), plus the layer policy of §4.1 and the
+//!   Graph500 validator.
+//! * [`threads`] — a small OpenMP-like scoped thread pool (no rayon offline).
+//! * [`phi`] — an analytic Xeon Phi performance model (cores, SMT, affinity,
+//!   caches, ring/GDDR bandwidth) that converts measured work traces into
+//!   the TEPS figures of the paper's evaluation (Figs 9–10, Table 2).
+//! * [`harness`] — the Graph500 experiment harness (64 roots, harmonic-mean
+//!   TEPS with the paper's no-filtering quirk).
+//! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas layer
+//!   step (`artifacts/*.hlo.txt`) and executes it from Rust.
+//! * [`coordinator`] — the L3 driver: BFS job queue, scheduler, engines.
+//! * [`benchkit`] / [`prop`] — offline stand-ins for criterion / proptest.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use phi_bfs::graph::{rmat::RmatConfig, csr::Csr};
+//! use phi_bfs::bfs::{vectorized::VectorizedBfs, BfsAlgorithm};
+//!
+//! let edges = RmatConfig::graph500(14, 16).generate(42);
+//! let csr = Csr::from_edges(14, &edges);
+//! let result = VectorizedBfs::default().run(&csr, 0);
+//! println!("reached {} vertices", result.tree.reached_count());
+//! ```
+
+pub mod apps;
+pub mod benchkit;
+pub mod bfs;
+pub mod cli;
+pub mod coordinator;
+pub mod graph;
+pub mod harness;
+pub mod phi;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod simd;
+pub mod threads;
+
+/// Vertex identifier. The paper works with 32-bit integers throughout (the
+/// vector unit processes 16 × 32-bit lanes), and Graph500 SCALE ≤ 26 fits.
+pub type Vertex = u32;
+
+/// Predecessor-array entry. Signed because the restoration protocol (§3.3.2)
+/// marks freshly-written entries as `parent - nodes`, i.e. negative.
+pub type Pred = i32;
+
+/// "∞" initializer for the predecessor array: "an integer bigger than the
+/// number of vertices" (§3.1). Kept positive so the `P[v] < 0` restoration
+/// test cannot fire on untouched entries.
+pub const PRED_INFINITY: Pred = i32::MAX;

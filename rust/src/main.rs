@@ -1,0 +1,253 @@
+//! `phi-bfs` — the Layer-3 leader binary.
+//!
+//! Commands:
+//! * `run` — a Graph500-style experiment (generate → 64 roots → validate →
+//!   TEPS stats) on any engine, including the PJRT-compiled kernel.
+//! * `model` — Xeon Phi TEPS predictions for thread/affinity sweeps.
+//! * `table1` — the per-layer traversal profile (paper Table 1).
+//! * `info` — artifact + PJRT platform diagnostics.
+
+use anyhow::Result;
+
+use phi_bfs::cli::{Args, USAGE};
+use phi_bfs::coordinator::engine::EngineKind;
+use phi_bfs::graph::stats::LayerProfile;
+use phi_bfs::graph::{Csr, RmatConfig};
+use phi_bfs::harness::report::{mteps, sci, Table};
+use phi_bfs::harness::runner::Experiment;
+use phi_bfs::phi::{self, Affinity, KncParams};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "run" => cmd_run(&args),
+        "model" => cmd_model(&args),
+        "table1" => cmd_table1(&args),
+        "analyze" => cmd_analyze(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let scale: u32 = args.get("scale", 16)?;
+    let edgefactor: usize = args.get("edgefactor", 16)?;
+    let threads: usize = args.get("threads", 4)?;
+    let engine_name = args.get_str("engine", "simd");
+    let artifacts = args.get_str("artifacts", "artifacts");
+    let engine = EngineKind::parse(&engine_name, threads, &artifacts)?;
+
+    let mut exp = Experiment::new(scale, edgefactor, engine);
+    exp.seed = args.get("seed", 1)?;
+    exp.num_roots = args.get("roots", 64)?;
+    exp.workers = args.get("workers", 1)?;
+    exp.validate = !args.get_bool("no-validate");
+
+    println!(
+        "graph500 run: SCALE={scale} edgefactor={edgefactor} engine={engine_name} threads={threads} roots={}",
+        exp.num_roots
+    );
+    let report = exp.run()?;
+    println!(
+        "graph: {} vertices, {} directed edges (constructed in {:.2}s)",
+        report.num_vertices, report.num_directed_edges, report.construction_seconds
+    );
+    let s = &report.stats;
+    println!(
+        "roots: {} ({} unconnected/zero-TEPS)  validation: {}",
+        s.runs,
+        s.zero_runs,
+        if report.all_valid { "all 5 checks passed" } else { "FAILED" }
+    );
+    println!(
+        "TEPS  min {}  max {}  mean {}  harmonic(graph500) {}  harmonic(filtered) {}",
+        sci(s.min),
+        sci(s.max),
+        sci(s.arithmetic_mean),
+        sci(s.harmonic_mean_graph500),
+        sci(s.harmonic_mean_filtered)
+    );
+    if !report.all_valid {
+        anyhow::bail!("validation failed");
+    }
+    Ok(())
+}
+
+fn cmd_model(args: &Args) -> Result<()> {
+    let knc = KncParams::default();
+    let cp = phi::cost::CostParams::default();
+    let affinity = Affinity::parse(&args.get_str("affinity", "balanced"))
+        .ok_or_else(|| anyhow::anyhow!("bad --affinity"))?;
+    let engine = args.get_str("engine", "simd");
+    let list = args.get_str("threads-list", "1,2,8,16,32,48,64,100,118,180,200,236,240");
+    let threads: Vec<usize> = list
+        .split(',')
+        .map(|t| t.trim().parse::<usize>().map_err(|_| anyhow::anyhow!("bad thread count {t:?}")))
+        .collect::<Result<_>>()?;
+
+    println!("Xeon Phi model: engine={engine} affinity={affinity:?} (SCALE-20 Table-1 workload)");
+    let mut table = Table::new(&["Threads", "Cores", "T/C", "TEPS", "MTEPS"]);
+    for t in threads {
+        let p = match engine.as_str() {
+            "non-simd" => phi::sim::predict_scale20_scalar(&knc, &cp, t, affinity),
+            _ => phi::sim::predict_scale20_simd(&knc, &cp, t, affinity, true, true),
+        };
+        table.row(&[
+            t.to_string(),
+            p.cores_used.to_string(),
+            p.max_threads_per_core.to_string(),
+            sci(p.teps),
+            mteps(p.teps),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let scale: u32 = args.get("scale", 20)?;
+    let edgefactor: usize = args.get("edgefactor", 16)?;
+    let seed: u64 = args.get("seed", 1)?;
+    let el = RmatConfig::graph500(scale, edgefactor).generate(seed);
+    let g = Csr::from_edge_list(scale, &el);
+    // the paper picks "the starting vertex randomly"; use the first
+    // connected vertex from the seeded root sampler for determinism
+    let mut rng = phi_bfs::rng::Xoshiro256::seed_from_u64(seed ^ 0x524f_4f54);
+    let root = rng
+        .sample_distinct(g.num_vertices(), 64)
+        .into_iter()
+        .map(|v| v as u32)
+        .find(|&v| g.degree(v) > 0)
+        .unwrap_or(0);
+    let profile = LayerProfile::compute(&g, root);
+    println!(
+        "Table 1 — traversed vertices per layer (SCALE {scale}, edgefactor {edgefactor}, root {root})"
+    );
+    let mut t = Table::new(&["Layer", "Vertices", "Edges", "Traversed vertices"]);
+    for r in &profile.rows {
+        t.row(&[
+            r.layer.to_string(),
+            r.input_vertices.to_string(),
+            r.edges.to_string(),
+            r.traversed.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "{} layers, {} vertices reached, {} edges inspected",
+        profile.num_layers(),
+        profile.total_traversed(),
+        profile.total_edges()
+    );
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    use phi_bfs::apps::{betweenness_centrality, connected_components, ShortestPaths};
+    use phi_bfs::coordinator::engine::make_engine;
+
+    let threads: usize = args.get("threads", 4)?;
+    let engine_name = args.get_str("engine", "simd");
+    let engine = make_engine(&EngineKind::parse(
+        &engine_name,
+        threads,
+        &args.get_str("artifacts", "artifacts"),
+    )?)?;
+
+    let input = args.get_str("input", "");
+    let (g, source) = if input.is_empty() {
+        let scale: u32 = args.get("scale", 12)?;
+        let ef: usize = args.get("edgefactor", 16)?;
+        let el = RmatConfig::graph500(scale, ef).generate(args.get("seed", 1)?);
+        (Csr::from_edge_list(scale, &el), format!("RMAT SCALE {scale}"))
+    } else {
+        let el = phi_bfs::graph::io::load_edge_list(&input)?;
+        (Csr::from_edge_list(0, &el), input.clone())
+    };
+    println!(
+        "analyzing {source}: {} vertices, {} directed edges (engine {engine_name})",
+        g.num_vertices(),
+        g.num_directed_edges()
+    );
+
+    let comps = connected_components(&g, engine.as_ref());
+    println!(
+        "components: {} (giant = {} vertices, {:.1}%)",
+        comps.count,
+        comps.giant_size(),
+        100.0 * comps.giant_size() as f64 / g.num_vertices().max(1) as f64
+    );
+
+    let hub = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap_or(0);
+    let sp = ShortestPaths::compute(&g, hub, engine.as_ref());
+    println!("hub {hub} (degree {}): eccentricity {}", g.degree(hub), sp.eccentricity());
+
+    let k: usize = args.get("bc-sources", 32)?;
+    let mut rng = phi_bfs::rng::Xoshiro256::seed_from_u64(0xBC);
+    let sources: Vec<u32> = rng
+        .sample_distinct(g.num_vertices(), k.min(g.num_vertices()))
+        .into_iter()
+        .map(|v| v as u32)
+        .collect();
+    let bc = betweenness_centrality(&g, &sources);
+    let mut top: Vec<usize> = (0..g.num_vertices()).collect();
+    top.sort_by(|&a, &b| bc[b].total_cmp(&bc[a]));
+    println!("betweenness (sampled, {} sources), top 5:", sources.len());
+    let mut t = Table::new(&["vertex", "bc", "degree"]);
+    for &v in top.iter().take(5) {
+        t.row(&[v.to_string(), format!("{:.1}", bc[v]), g.degree(v as u32).to_string()]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get_str("artifacts", "artifacts");
+    match phi_bfs::runtime::ArtifactManifest::load(&dir) {
+        Ok(m) => {
+            println!("artifact dir: {dir}");
+            for s in &m.specs {
+                println!(
+                    "  bfs_layer: N={} C={} W={} ({} lanes/call) — {}",
+                    s.n,
+                    s.chunks,
+                    s.words,
+                    s.lanes_per_call(),
+                    s.filename
+                );
+            }
+            let mut engine = phi_bfs::runtime::PjrtEngine::new(m)?;
+            println!("PJRT platform: {}", engine.platform());
+            let spec = engine.manifest().specs[0].clone();
+            engine.executable(&spec)?;
+            println!("compiled {} OK", spec.filename);
+        }
+        Err(e) => println!("no artifacts: {e:#}"),
+    }
+    let knc = KncParams::default();
+    println!(
+        "modelled device: {} cores × {}-way SMT @ {:.3} GHz, {} max clean threads",
+        knc.cores,
+        knc.smt,
+        knc.clock_ghz,
+        knc.max_clean_threads()
+    );
+    Ok(())
+}

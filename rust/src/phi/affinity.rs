@@ -1,0 +1,215 @@
+//! `KMP_AFFINITY` thread-placement strategies (§4.2 "Thread affinity").
+//!
+//! * **compact** — fill each core's 4 thread contexts before moving on.
+//! * **scatter** — round-robin over physical cores, so thread ids far
+//!   apart share a core.
+//! * **balanced** — like scatter core-wise, but adjacent thread ids end up
+//!   on the same core. For the *population counts* per core (what the
+//!   performance model consumes) balanced and scatter are identical; they
+//!   differ in which ids share a core, which we also record since the
+//!   sharing pattern drives the cache-affinity term.
+//! * **manual(k)** — exactly k threads per core, the paper's Table 2
+//!   methodology (48 threads at 1T/C..4T/C).
+
+use super::config::KncParams;
+
+/// Placement strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Affinity {
+    Compact,
+    Scatter,
+    Balanced,
+    /// Fixed threads-per-core (Table 2's 1T/C..4T/C rows).
+    Manual(usize),
+}
+
+impl Affinity {
+    pub fn parse(s: &str) -> Option<Affinity> {
+        Some(match s {
+            "compact" => Affinity::Compact,
+            "scatter" => Affinity::Scatter,
+            "balanced" => Affinity::Balanced,
+            _ => {
+                let k = s.strip_suffix("t/c").or_else(|| s.strip_suffix("T/C"))?;
+                Affinity::Manual(k.parse().ok()?)
+            }
+        })
+    }
+}
+
+/// The result of placing `num_threads` threads: which core each thread
+/// landed on, and the per-core populations.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoreMap {
+    /// `core_of[t]` = physical core of thread `t`.
+    pub core_of: Vec<usize>,
+    /// `threads_on[c]` = number of threads on core `c` (len = cores).
+    pub threads_on: Vec<usize>,
+    /// True if any thread landed on an OS-reserved core.
+    pub invades_os_core: bool,
+    /// True when adjacent thread ids tend to share a core (balanced /
+    /// compact) — enables the shared-frontier cache-reuse credit.
+    pub neighbors_share_core: bool,
+}
+
+impl CoreMap {
+    /// Place threads according to the strategy.
+    pub fn place(params: &KncParams, num_threads: usize, affinity: Affinity) -> CoreMap {
+        let cores = params.cores;
+        let user = params.user_cores();
+        let mut core_of = vec![0usize; num_threads];
+        match affinity {
+            Affinity::Compact => {
+                // fill thread contexts core by core (user cores first, the
+                // OS core last — matching KMP behaviour where the OS core
+                // is the highest-numbered)
+                for (t, c) in core_of.iter_mut().enumerate() {
+                    *c = (t / params.smt).min(cores - 1);
+                }
+            }
+            Affinity::Scatter | Affinity::Balanced => {
+                // both strategies spread threads as evenly as possible over
+                // the user cores (per-core counts differ by at most one);
+                // they differ in which *ids* share a core.
+                let clean = num_threads.min(user * params.smt);
+                if affinity == Affinity::Balanced {
+                    // contiguous blocks: first `rem` cores take base+1
+                    let base = clean / user;
+                    let rem = clean % user;
+                    let mut t = 0usize;
+                    'outer: for core in 0..user {
+                        let take = base + usize::from(core < rem);
+                        for _ in 0..take {
+                            if t >= clean {
+                                break 'outer;
+                            }
+                            core_of[t] = core;
+                            t += 1;
+                        }
+                    }
+                } else {
+                    // scatter: round-robin, adjacent ids on different cores
+                    for (t, c) in core_of.iter_mut().enumerate().take(clean) {
+                        *c = t % user;
+                    }
+                }
+                // overflow beyond user×smt spills onto the OS core
+                for c in core_of.iter_mut().skip(clean) {
+                    *c = cores - 1;
+                }
+            }
+            Affinity::Manual(k) => {
+                let k = k.clamp(1, params.smt);
+                for (t, c) in core_of.iter_mut().enumerate() {
+                    *c = (t / k).min(cores - 1);
+                }
+            }
+        }
+        let mut threads_on = vec![0usize; cores];
+        for &c in &core_of {
+            threads_on[c] += 1;
+        }
+        let os_cores = cores - user;
+        let invades_os_core =
+            (cores - os_cores..cores).any(|c| threads_on[c] > 0) && os_cores > 0
+            // compact fills cores in order, so the OS core is only reached
+            // when every user context is taken
+            ;
+        // compact/balanced put adjacent ids together
+        let neighbors_share_core = matches!(affinity, Affinity::Compact | Affinity::Balanced)
+            && core_of.windows(2).any(|w| w[0] == w[1]);
+        CoreMap { core_of, threads_on, invades_os_core, neighbors_share_core }
+    }
+
+    /// Number of cores with at least one thread.
+    pub fn cores_used(&self) -> usize {
+        self.threads_on.iter().filter(|&&t| t > 0).count()
+    }
+
+    /// Histogram entry: max threads on any used core.
+    pub fn max_threads_per_core(&self) -> usize {
+        self.threads_on.iter().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> KncParams {
+        KncParams::default()
+    }
+
+    #[test]
+    fn manual_table2_rows() {
+        // Table 2: 48 threads at 1/2/3/4 T per core → 48/24/16/12 cores.
+        let p = params();
+        for (k, cores) in [(1usize, 48usize), (2, 24), (3, 16), (4, 12)] {
+            let m = CoreMap::place(&p, 48, Affinity::Manual(k));
+            assert_eq!(m.cores_used(), cores, "{k}T/C");
+            assert_eq!(m.max_threads_per_core(), k);
+            assert!(!m.invades_os_core);
+        }
+    }
+
+    #[test]
+    fn scatter_spreads_wide() {
+        let p = params();
+        let m = CoreMap::place(&p, 59, Affinity::Scatter);
+        assert_eq!(m.cores_used(), 59);
+        assert_eq!(m.max_threads_per_core(), 1);
+        let m = CoreMap::place(&p, 118, Affinity::Scatter);
+        assert_eq!(m.cores_used(), 59);
+        assert_eq!(m.max_threads_per_core(), 2);
+        // scatter puts adjacent ids on different cores
+        assert!(!m.neighbors_share_core);
+    }
+
+    #[test]
+    fn balanced_shares_core_between_neighbors() {
+        let p = params();
+        let m = CoreMap::place(&p, 118, Affinity::Balanced);
+        assert_eq!(m.cores_used(), 59);
+        assert_eq!(m.max_threads_per_core(), 2);
+        assert!(m.neighbors_share_core);
+        assert_eq!(m.core_of[0], m.core_of[1]); // adjacent ids together
+    }
+
+    #[test]
+    fn compact_fills_cores() {
+        let p = params();
+        let m = CoreMap::place(&p, 8, Affinity::Compact);
+        assert_eq!(m.cores_used(), 2);
+        assert_eq!(m.threads_on[0], 4);
+        assert_eq!(m.threads_on[1], 4);
+    }
+
+    #[test]
+    fn beyond_236_invades_os_core() {
+        let p = params();
+        let m236 = CoreMap::place(&p, 236, Affinity::Balanced);
+        assert!(!m236.invades_os_core);
+        let m240 = CoreMap::place(&p, 240, Affinity::Balanced);
+        assert!(m240.invades_os_core, "{:?}", &m240.threads_on[55..]);
+    }
+
+    #[test]
+    fn affinity_parse() {
+        assert_eq!(Affinity::parse("balanced"), Some(Affinity::Balanced));
+        assert_eq!(Affinity::parse("2t/c"), Some(Affinity::Manual(2)));
+        assert_eq!(Affinity::parse("4T/C"), Some(Affinity::Manual(4)));
+        assert_eq!(Affinity::parse("bogus"), None);
+    }
+
+    #[test]
+    fn all_threads_mapped() {
+        let p = params();
+        for aff in [Affinity::Compact, Affinity::Scatter, Affinity::Balanced, Affinity::Manual(3)] {
+            for t in [1usize, 7, 48, 100, 236, 240] {
+                let m = CoreMap::place(&p, t, aff);
+                assert_eq!(m.core_of.len(), t);
+                assert_eq!(m.threads_on.iter().sum::<usize>(), t, "{aff:?} {t}");
+            }
+        }
+    }
+}

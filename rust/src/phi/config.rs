@@ -1,0 +1,86 @@
+//! Knights-Corner machine parameters (§2 of the paper + Intel's published
+//! KNC documentation).
+
+/// The modelled coprocessor. Defaults describe the paper's device: a
+/// 60-core 4-way-SMT Xeon Phi with 8 GB GDDR5 at 320 GB/s.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KncParams {
+    /// Physical cores (60 on the paper's card).
+    pub cores: usize,
+    /// Cores the OS reserves; user threads spilling onto them suffer
+    /// [`Self::os_core_penalty`] (§6.2: "beyond 236 threads ... dramatic
+    /// fall in performance").
+    pub reserved_os_cores: usize,
+    /// Hardware threads per core.
+    pub smt: usize,
+    /// Core clock in GHz.
+    pub clock_ghz: f64,
+    /// Per-core L2 capacity in bytes (512 KB).
+    pub l2_bytes: usize,
+    /// Per-core L1D capacity in bytes (32 KB).
+    pub l1_bytes: usize,
+    /// Aggregate GDDR bandwidth in bytes/second.
+    pub mem_bw_bytes_per_s: f64,
+    /// Average memory latency in core cycles (~250 on KNC).
+    pub mem_latency_cycles: f64,
+    /// L2 hit latency in cycles.
+    pub l2_latency_cycles: f64,
+    /// Peak instruction issue per core per cycle (KNC: 1 vector pipe).
+    pub issue_per_core: f64,
+    /// Peak issue per *thread* per cycle — the KNC u-arch cannot issue
+    /// from the same thread context in back-to-back cycles, so a single
+    /// thread tops out at 0.5/cycle; ≥2 threads/core saturate the pipe.
+    pub issue_per_thread: f64,
+    /// Slowdown multiplier for threads placed on the OS core.
+    pub os_core_penalty: f64,
+}
+
+impl Default for KncParams {
+    fn default() -> Self {
+        KncParams {
+            cores: 60,
+            reserved_os_cores: 1,
+            smt: 4,
+            clock_ghz: 1.053,
+            l2_bytes: 512 * 1024,
+            l1_bytes: 32 * 1024,
+            mem_bw_bytes_per_s: 320.0e9,
+            mem_latency_cycles: 250.0,
+            l2_latency_cycles: 24.0,
+            issue_per_core: 1.0,
+            issue_per_thread: 0.5,
+            os_core_penalty: 8.0,
+        }
+    }
+}
+
+impl KncParams {
+    /// Cores available to user threads without invading the OS core.
+    pub fn user_cores(&self) -> usize {
+        self.cores - self.reserved_os_cores
+    }
+
+    /// Max user threads with no OS-core invasion (236 on the paper's card).
+    pub fn max_clean_threads(&self) -> usize {
+        self.user_cores() * self.smt
+    }
+
+    /// Cycles per second.
+    pub fn hz(&self) -> f64 {
+        self.clock_ghz * 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_numbers() {
+        let p = KncParams::default();
+        assert_eq!(p.cores, 60);
+        assert_eq!(p.user_cores(), 59);
+        assert_eq!(p.max_clean_threads(), 236); // §6.2's magic number
+        assert_eq!(p.smt * p.cores, 240); // §1: up to 240 logical cores
+    }
+}

@@ -1,0 +1,200 @@
+//! The event cost model: prices one layer's work in core cycles and bytes.
+//!
+//! Two cost classes per layer:
+//!
+//! * **issue cycles** — instruction occupancy of the core's single vector
+//!   pipe (or the scalar pipes for non-SIMD layers). Divided by the
+//!   per-core issue capacity in [`super::sim`].
+//! * **stall cycles** — memory latency a *thread* sits on: L2-latency for
+//!   bitmap gathers (the bitmap fits L2 but not L1), full memory latency
+//!   for predecessor-array writes (4 MB at SCALE 20, far beyond L2) and
+//!   for streaming `rows` refills when prefetch is off. SMT overlaps
+//!   stalls across a core's threads in [`super::sim`].
+//!
+//! Constants were calibrated against the paper's anchors (see
+//! `sim::calibration` tests): Table 2's 4.69E+08 TEPS at 48×1T/C, Fig 10c's
+//! >1 GTEPS at 236 threads, the ≈200 MTEPS SIMD gap, and Fig 9's
+//! optimization deltas.
+
+use super::config::KncParams;
+use super::trace::LayerWork;
+
+/// Tunable event costs (cycles unless noted).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostParams {
+    /// Fixed instruction overhead per 16-lane chunk (address arithmetic,
+    /// div/rem, shifts, mask logic ≈ Listing 1's non-memory ops).
+    pub chunk_issue: f64,
+    /// Extra issue cycles for a masked/unaligned chunk (§4.2: peel and
+    /// remainder "imply an extra processing step").
+    pub masked_chunk_penalty: f64,
+    /// Issue occupancy per gathered lane (KNC gathers retire ~1 lane/cycle).
+    pub gather_lane_issue: f64,
+    /// Issue occupancy per scattered lane.
+    pub scatter_lane_issue: f64,
+    /// Stall fraction of L2 latency charged per gather lane (bitmap lives
+    /// in L2; consecutive gathers pipeline partially).
+    pub gather_l2_stall_frac: f64,
+    /// Stall fraction of full memory latency charged per predecessor
+    /// scatter lane (pred array ≫ L2; write-allocate miss).
+    pub pred_miss_stall_frac: f64,
+    /// Per-chunk stall for streaming `rows` refills when SW prefetch is
+    /// OFF (one line miss per chunk, partially covered by the HW
+    /// prefetcher).
+    pub rows_stall_nopf: f64,
+    /// Same with SW prefetch ON (§4.2: prefetch the next iteration's rows).
+    pub rows_stall_pf: f64,
+    /// Rows-stall multiplier when the chunking is UNALIGNED (the "SIMD -
+    /// no opt" configuration: every load is masked and straddles cache
+    /// lines; detected as full_chunks == 0 with masked chunks present).
+    pub unaligned_stall_mult: f64,
+    /// Issue cycles per scalar edge (Algorithm 2's test/set/store chain).
+    pub scalar_edge_issue: f64,
+    /// Stall cycles per scalar edge (serial dependent loads on an in-order
+    /// core — this is what the vector unit amortizes 16-wide).
+    pub scalar_edge_stall: f64,
+    /// Issue cycles per restoration word scanned.
+    pub restore_word_issue: f64,
+    /// Bytes moved per edge scanned (rows read + share of bitmap/pred
+    /// traffic) for the bandwidth floor.
+    pub bytes_per_edge: f64,
+    /// SMT stall-overlap efficiency: fraction of another thread's stalls a
+    /// core can hide per extra thread context.
+    pub smt_overlap: f64,
+    /// L2-contention growth per extra thread on a core (cache splits;
+    /// miss rates rise).
+    pub smt_cache_penalty: f64,
+    /// Dynamic-scheduling grain in frontier vertices (starvation model).
+    pub sched_grain_vertices: f64,
+}
+
+impl Default for CostParams {
+    fn default() -> Self {
+        CostParams {
+            chunk_issue: 14.0,
+            masked_chunk_penalty: 6.0,
+            gather_lane_issue: 1.0,
+            scatter_lane_issue: 1.0,
+            gather_l2_stall_frac: 0.90,
+            pred_miss_stall_frac: 0.50,
+            rows_stall_nopf: 60.0,
+            rows_stall_pf: 25.0,
+            unaligned_stall_mult: 3.0,
+            scalar_edge_issue: 12.0,
+            scalar_edge_stall: 42.0,
+            restore_word_issue: 10.0,
+            bytes_per_edge: 9.0,
+            smt_overlap: 0.55,
+            smt_cache_penalty: 0.18,
+            sched_grain_vertices: 2.0,
+        }
+    }
+}
+
+/// A layer's priced work (totals across all threads, before core mapping).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LayerCost {
+    /// Total instruction-issue cycles.
+    pub issue_cycles: f64,
+    /// Total thread-stall cycles (before SMT overlap).
+    pub stall_cycles: f64,
+    /// Total bytes for the bandwidth floor.
+    pub bytes: f64,
+}
+
+/// Price one layer.
+pub fn price_layer(knc: &KncParams, cp: &CostParams, w: &LayerWork, bitmap_bytes: usize, pred_bytes: usize) -> LayerCost {
+    let mut issue = 0.0;
+    let mut stall = 0.0;
+
+    if w.vectorized {
+        let chunks = (w.full_chunks + w.masked_chunks) as f64;
+        issue += w.full_chunks as f64 * cp.chunk_issue;
+        issue += w.masked_chunks as f64 * (cp.chunk_issue + cp.masked_chunk_penalty);
+        issue += w.gather_lanes as f64 * cp.gather_lane_issue;
+        issue += w.scatter_lanes as f64 * cp.scatter_lane_issue;
+        issue += w.restore_words as f64 * cp.restore_word_issue;
+
+        // bitmap gathers: L2-resident when the bitmap fits (it does for
+        // every SCALE the paper runs), L1-resident fraction shrinks as the
+        // bitmap outgrows L1.
+        let l1_fit = (knc.l1_bytes as f64 / bitmap_bytes.max(1) as f64).min(1.0);
+        let gather_lat = knc.l2_latency_cycles * (1.0 - l1_fit);
+        stall += w.gather_lanes as f64 * gather_lat * cp.gather_l2_stall_frac;
+
+        // predecessor scatters: miss probability grows with pred footprint
+        // beyond L2.
+        let pred_fit = (knc.l2_bytes as f64 / pred_bytes.max(1) as f64).min(1.0);
+        let pred_miss = 1.0 - pred_fit;
+        // half the scatter lanes hit `pred`, half the queue words (words
+        // are bitmap-resident and cheap)
+        stall += 0.5
+            * w.scatter_lanes as f64
+            * pred_miss
+            * knc.mem_latency_cycles
+            * cp.pred_miss_stall_frac;
+
+        // streaming rows refills; unaligned (no-opt) chunking straddles
+        // cache lines and defeats the streaming pattern
+        let unaligned = w.full_chunks == 0 && w.masked_chunks > 0;
+        let mut rows_stall = if w.prefetch_enabled() { cp.rows_stall_pf } else { cp.rows_stall_nopf };
+        if unaligned {
+            rows_stall *= cp.unaligned_stall_mult;
+        }
+        stall += chunks * rows_stall;
+    } else {
+        let edges = w.edges_scanned as f64;
+        issue += edges * cp.scalar_edge_issue;
+        let pred_fit = (knc.l2_bytes as f64 / pred_bytes.max(1) as f64).min(1.0);
+        stall += edges * cp.scalar_edge_stall;
+        stall += w.traversed as f64 * (1.0 - pred_fit) * knc.mem_latency_cycles * cp.pred_miss_stall_frac;
+    }
+
+    LayerCost { issue_cycles: issue, stall_cycles: stall, bytes: w.edges_scanned as f64 * cp.bytes_per_edge }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phi::trace::WorkTrace;
+
+    fn knc() -> KncParams {
+        KncParams::default()
+    }
+
+    #[test]
+    fn vector_layer_cheaper_per_edge_than_scalar() {
+        let cp = CostParams::default();
+        let profile = &[(1000, 100_000, 30_000)];
+        let simd = WorkTrace::synthesize_simd(1 << 20, profile, true, true);
+        let scalar = WorkTrace::synthesize_scalar(1 << 20, profile);
+        let c_simd = price_layer(&knc(), &cp, &simd.layers[0], simd.bitmap_bytes(), simd.pred_bytes());
+        let c_scalar =
+            price_layer(&knc(), &cp, &scalar.layers[0], scalar.bitmap_bytes(), scalar.pred_bytes());
+        let t_simd = c_simd.issue_cycles + c_simd.stall_cycles;
+        let t_scalar = c_scalar.issue_cycles + c_scalar.stall_cycles;
+        assert!(t_simd < t_scalar, "simd {t_simd} !< scalar {t_scalar}");
+    }
+
+    #[test]
+    fn prefetch_reduces_stalls() {
+        let cp = CostParams::default();
+        let profile = &[(1000, 100_000, 30_000)];
+        let pf = WorkTrace::synthesize_simd(1 << 20, profile, true, true);
+        let nopf = WorkTrace::synthesize_simd(1 << 20, profile, true, false);
+        let c_pf = price_layer(&knc(), &cp, &pf.layers[0], pf.bitmap_bytes(), pf.pred_bytes());
+        let c_nopf = price_layer(&knc(), &cp, &nopf.layers[0], nopf.bitmap_bytes(), nopf.pred_bytes());
+        assert!(c_pf.stall_cycles < c_nopf.stall_cycles);
+    }
+
+    #[test]
+    fn unaligned_costs_more_issue() {
+        let cp = CostParams::default();
+        let profile = &[(1000, 100_000, 30_000)];
+        let al = WorkTrace::synthesize_simd(1 << 20, profile, true, true);
+        let un = WorkTrace::synthesize_simd(1 << 20, profile, false, true);
+        let c_al = price_layer(&knc(), &cp, &al.layers[0], al.bitmap_bytes(), al.pred_bytes());
+        let c_un = price_layer(&knc(), &cp, &un.layers[0], un.bitmap_bytes(), un.pred_bytes());
+        assert!(c_un.issue_cycles > c_al.issue_cycles);
+    }
+}

@@ -1,0 +1,328 @@
+//! The machine simulator: compose priced layers with a thread placement
+//! into predicted wall time and TEPS.
+//!
+//! Per layer, per core:
+//!
+//! * **issue time** — the core's share of issue cycles divided by its
+//!   effective issue rate `min(issue_per_core, issue_per_thread × t)`:
+//!   one KNC thread can only use every other cycle, two saturate the pipe.
+//! * **stall time** — the core's share of stall cycles shrunk by SMT
+//!   overlap (`1 / (1 + smt_overlap × (t-1))`) and *grown* by cache
+//!   contention (`1 + smt_cache_penalty × (t-1)`): more threads per core
+//!   hide more latency but split the L2 — the tension Table 2 measures.
+//! * **bandwidth floor** — bytes over the cores' aggregate share of the
+//!   ring/GDDR bandwidth.
+//! * **starvation** — a layer with fewer frontier vertices than scheduler
+//!   grains leaves threads idle (the high-thread-count jitter of §6.1):
+//!   utilization = min(1, input / (threads × grain)).
+//! * **OS-core invasion** — any thread on the reserved core multiplies
+//!   layer time by `os_core_penalty` (§6.2's cliff past 236 threads).
+
+use super::affinity::{Affinity, CoreMap};
+use super::config::KncParams;
+use super::cost::{price_layer, CostParams, LayerCost};
+use super::trace::WorkTrace;
+
+/// Per-layer prediction detail.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LayerPrediction {
+    pub layer: usize,
+    pub seconds: f64,
+    pub utilization: f64,
+    pub bandwidth_bound: bool,
+}
+
+/// Whole-run prediction.
+#[derive(Clone, Debug, Default)]
+pub struct PhiPrediction {
+    pub seconds: f64,
+    /// Predicted TEPS (undirected traversed edges / seconds).
+    pub teps: f64,
+    pub layers: Vec<LayerPrediction>,
+    pub cores_used: usize,
+    pub max_threads_per_core: usize,
+    pub invades_os_core: bool,
+}
+
+/// Predict the run time of `trace` on `knc` with `num_threads` placed by
+/// `affinity`.
+pub fn predict(
+    knc: &KncParams,
+    cp: &CostParams,
+    trace: &WorkTrace,
+    num_threads: usize,
+    affinity: Affinity,
+) -> PhiPrediction {
+    let map = CoreMap::place(knc, num_threads, affinity);
+    predict_with_map(knc, cp, trace, &map)
+}
+
+/// Predict with an explicit core map (for custom placements).
+pub fn predict_with_map(
+    knc: &KncParams,
+    cp: &CostParams,
+    trace: &WorkTrace,
+    map: &CoreMap,
+) -> PhiPrediction {
+    let num_threads: usize = map.threads_on.iter().sum();
+    let bitmap = trace.bitmap_bytes();
+    let pred = trace.pred_bytes();
+    let cores_used = map.cores_used();
+    // aggregate bandwidth available to the active cores (each core's ring
+    // stop sustains ~1/cores of the aggregate)
+    let bw = knc.mem_bw_bytes_per_s * (cores_used as f64 / knc.cores as f64).min(1.0);
+
+    let mut layers = Vec::with_capacity(trace.layers.len());
+    let mut total = 0.0f64;
+    for w in &trace.layers {
+        let LayerCost { issue_cycles, stall_cycles, bytes } = price_layer(knc, cp, w, bitmap, pred);
+
+        // scheduler starvation: small frontiers can't feed every thread
+        let grains = (w.input_vertices as f64 / cp.sched_grain_vertices).max(1.0);
+        let utilization = (grains / num_threads as f64).min(1.0);
+        let active_threads = (num_threads as f64 * utilization).max(1.0);
+
+        // Dynamic scheduling (the algorithms pull word-chunks from a shared
+        // cursor) equalizes completion time across cores, so the machine
+        // behaves like the SUM of per-core capacities rather than its worst
+        // core: each core contributes issue throughput
+        // min(issue_per_core, issue_per_thread × active contexts) and
+        // stall-processing throughput overlap/cache_pen. Starvation scales
+        // the active contexts per core (t_eff), which shrinks capacity on
+        // small frontiers exactly where idle threads can't help.
+        let _ = active_threads;
+        let mut issue_capacity = 0.0f64;
+        let mut stall_capacity = 0.0f64;
+        for &t_on_core in &map.threads_on {
+            if t_on_core == 0 {
+                continue;
+            }
+            let t_eff = (t_on_core as f64 * utilization).min(t_on_core as f64).max(1e-9);
+            issue_capacity += knc.issue_per_core.min(knc.issue_per_thread * t_eff);
+            let overlap = 1.0 + cp.smt_overlap * (t_eff - 1.0).max(0.0);
+            let cache_pen = 1.0 + cp.smt_cache_penalty * (t_eff - 1.0).max(0.0);
+            stall_capacity += overlap / cache_pen;
+        }
+        let cycles = issue_cycles / issue_capacity.max(1e-12)
+            + stall_cycles / stall_capacity.max(1e-12);
+        let worst_core_seconds = cycles / knc.hz();
+
+        let bw_floor = bytes / bw;
+        let mut layer_seconds = worst_core_seconds.max(bw_floor);
+        if map.invades_os_core {
+            layer_seconds *= knc.os_core_penalty;
+        }
+        total += layer_seconds;
+        layers.push(LayerPrediction {
+            layer: w.layer,
+            seconds: layer_seconds,
+            utilization,
+            bandwidth_bound: bw_floor > worst_core_seconds,
+        });
+    }
+
+    PhiPrediction {
+        seconds: total,
+        teps: if total > 0.0 { trace.teps_edges() / total } else { 0.0 },
+        layers,
+        cores_used,
+        max_threads_per_core: map.max_threads_per_core(),
+        invades_os_core: map.invades_os_core,
+    }
+}
+
+/// §6.2 future-work experiment: *helper threads*. Under-populate cores
+/// with `workers` BFS threads and give each core `helpers_per_core` spare
+/// thread contexts that only run prefetch streams (Kamruzzaman et al.,
+/// the paper's [15]). Helpers contribute **no** issue or stall capacity,
+/// but each one hides a further `helper_hide` fraction of the remaining
+/// memory stalls (diminishing: capped at 2 effective helpers) while still
+/// paying the L2-share cache penalty of an occupied context.
+pub fn predict_with_helpers(
+    knc: &KncParams,
+    cp: &CostParams,
+    trace: &WorkTrace,
+    workers: usize,
+    helpers_per_core: usize,
+    affinity: Affinity,
+) -> PhiPrediction {
+    const HELPER_HIDE: f64 = 0.30;
+    let map = CoreMap::place(knc, workers, affinity);
+    let mut p = predict_with_map(knc, cp, trace, &map);
+    if helpers_per_core == 0 {
+        return p;
+    }
+    let eff_helpers = (helpers_per_core.min(2)) as f64;
+    // helpers hide stalls but split the cache like any other context
+    let stall_hide = 1.0 - HELPER_HIDE * eff_helpers / (1.0 + HELPER_HIDE * eff_helpers);
+    let cache_pen = 1.0 + cp.smt_cache_penalty * helpers_per_core as f64 * 0.5;
+    let mut total = 0.0;
+    for l in &mut p.layers {
+        // only the stall-dominated share of the layer shrinks; approximate
+        // the stall share from the layer's bandwidth-bound flag heuristic
+        let stall_share = 0.75; // BFS layers are stall-dominated on KNC
+        l.seconds = l.seconds * (1.0 - stall_share)
+            + l.seconds * stall_share * stall_hide * cache_pen;
+        total += l.seconds;
+    }
+    p.seconds = total;
+    p.teps = if total > 0.0 { trace.teps_edges() / total } else { 0.0 };
+    p
+}
+
+/// Convenience: predicted TEPS for the paper's Table-1 SCALE-20 workload.
+pub fn predict_scale20_simd(knc: &KncParams, cp: &CostParams, threads: usize, affinity: Affinity, aligned: bool, prefetch: bool) -> PhiPrediction {
+    let trace = WorkTrace::synthesize_simd(1 << 20, super::trace::TABLE1_SCALE20, aligned, prefetch);
+    predict(knc, cp, &trace, threads, affinity)
+}
+
+/// Convenience: the scalar (`non-simd`) counterpart.
+pub fn predict_scale20_scalar(knc: &KncParams, cp: &CostParams, threads: usize, affinity: Affinity) -> PhiPrediction {
+    let trace = WorkTrace::synthesize_scalar(1 << 20, super::trace::TABLE1_SCALE20);
+    predict(knc, cp, &trace, threads, affinity)
+}
+
+#[cfg(test)]
+mod calibration {
+    //! The paper-anchored calibration bands. These tests are the contract
+    //! that the model reproduces the *shape* of every evaluation artifact.
+
+    use super::*;
+
+    fn knc() -> KncParams {
+        KncParams::default()
+    }
+
+    fn cp() -> CostParams {
+        CostParams::default()
+    }
+
+    /// Table 2 row 1: 48 threads, 1T/C → 4.69E+08 TEPS (±35%).
+    #[test]
+    fn table2_anchor_48x1() {
+        let p = predict_scale20_simd(&knc(), &cp(), 48, Affinity::Manual(1), true, true);
+        assert!(
+            p.teps > 3.0e8 && p.teps < 6.4e8,
+            "48×1T/C predicted {:.3e}, paper 4.69e8",
+            p.teps
+        );
+    }
+
+    /// Table 2 ordering: 1T/C > 2T/C > 3T/C > 4T/C at fixed 48 threads,
+    /// with the 4T/C value roughly a third of 1T/C (1.42/4.69 ≈ 0.30).
+    #[test]
+    fn table2_ordering_and_ratio() {
+        let t: Vec<f64> = (1..=4)
+            .map(|k| predict_scale20_simd(&knc(), &cp(), 48, Affinity::Manual(k), true, true).teps)
+            .collect();
+        assert!(t[0] > t[1] && t[1] > t[2] && t[2] > t[3], "{t:?}");
+        let ratio = t[3] / t[0];
+        assert!((0.18..=0.55).contains(&ratio), "4T/1T ratio {ratio}, paper 0.30");
+    }
+
+    /// Fig 10c headline: >1 GTEPS at 236 threads (±, we accept 0.8–1.6e9),
+    /// beating Gao et al.'s 800 MTEPS.
+    #[test]
+    fn fig10c_gigateps_at_236() {
+        let p = predict_scale20_simd(&knc(), &cp(), 236, Affinity::Balanced, true, true);
+        assert!(p.teps > 0.8e9 && p.teps < 1.8e9, "236T predicted {:.3e}", p.teps);
+    }
+
+    /// Fig 10: simd beats non-simd at every thread count, by roughly
+    /// 100–400 MTEPS at high thread counts (paper: ≈200).
+    #[test]
+    fn fig10_simd_gap() {
+        for threads in [16usize, 48, 118, 236] {
+            let s = predict_scale20_simd(&knc(), &cp(), threads, Affinity::Balanced, true, true);
+            let n = predict_scale20_scalar(&knc(), &cp(), threads, Affinity::Balanced);
+            assert!(s.teps > n.teps, "simd {:.3e} !> nonsimd {:.3e} at {threads}", s.teps, n.teps);
+            if threads >= 118 {
+                let gap = s.teps - n.teps;
+                assert!((0.5e8..6.0e8).contains(&gap), "gap {:.3e} at {threads}", gap);
+            }
+        }
+    }
+
+    /// Fig 10 shape: TEPS grows with thread count up to 236, with
+    /// decreasing slope per T/C regime (60 → 120 → 180 → 236).
+    #[test]
+    fn fig10_scaling_slope_breaks() {
+        let teps: Vec<f64> = [59usize, 118, 177, 236]
+            .iter()
+            .map(|&t| predict_scale20_simd(&knc(), &cp(), t, Affinity::Balanced, true, true).teps)
+            .collect();
+        assert!(teps.windows(2).all(|w| w[1] > w[0]), "monotone: {teps:?}");
+        let slopes: Vec<f64> = teps.windows(2).map(|w| w[1] - w[0]).collect();
+        assert!(
+            slopes.windows(2).all(|s| s[1] < s[0] * 1.05),
+            "decreasing slopes: {slopes:?}"
+        );
+    }
+
+    /// §6.2: past 236 threads the OS core is invaded — performance falls
+    /// off a cliff.
+    #[test]
+    fn os_core_cliff_past_236() {
+        let ok = predict_scale20_simd(&knc(), &cp(), 236, Affinity::Balanced, true, true);
+        let bad = predict_scale20_simd(&knc(), &cp(), 240, Affinity::Balanced, true, true);
+        assert!(bad.teps < 0.5 * ok.teps, "236: {:.3e}, 240: {:.3e}", ok.teps, bad.teps);
+    }
+
+    /// Fig 9 ordering: no-opt < aligned+masks < aligned+masks+prefetch.
+    #[test]
+    fn fig9_optimization_ladder() {
+        let threads = 118;
+        let noopt = predict_scale20_simd(&knc(), &cp(), threads, Affinity::Balanced, false, false);
+        let amask = predict_scale20_simd(&knc(), &cp(), threads, Affinity::Balanced, true, false);
+        let full = predict_scale20_simd(&knc(), &cp(), threads, Affinity::Balanced, true, true);
+        assert!(noopt.teps < amask.teps, "align: {:.3e} !> {:.3e}", amask.teps, noopt.teps);
+        assert!(amask.teps < full.teps, "prefetch: {:.3e} !> {:.3e}", full.teps, amask.teps);
+    }
+
+    /// Small frontiers starve threads: utilization < 1 on the tail layers
+    /// at 236 threads (the §6.1 jitter mechanism).
+    #[test]
+    fn starvation_on_tiny_layers() {
+        let p = predict_scale20_simd(&knc(), &cp(), 236, Affinity::Balanced, true, true);
+        let last = p.layers.last().unwrap();
+        assert!(last.utilization < 0.05, "layer 6 utilization {}", last.utilization);
+        let peak = &p.layers[3];
+        assert!(peak.utilization > 0.9, "peak layer utilization {}", peak.utilization);
+    }
+
+    /// Balanced ≥ scatter ≥(about) compact at partial populations (§4.2:
+    /// "balanced affinity was generally better").
+    #[test]
+    fn balanced_generally_best() {
+        for threads in [48usize, 100, 180] {
+            let b = predict_scale20_simd(&knc(), &cp(), threads, Affinity::Balanced, true, true);
+            let c = predict_scale20_simd(&knc(), &cp(), threads, Affinity::Compact, true, true);
+            assert!(b.teps >= c.teps * 0.98, "balanced {:.3e} vs compact {:.3e} at {threads}", b.teps, c.teps);
+        }
+    }
+
+    /// §6.2 helper-thread hypothesis: at 2 workers/core, adding prefetch
+    /// helpers on the spare contexts must beat leaving them idle, while
+    /// staying below a (modelled) perfect 4-worker configuration — i.e.
+    /// the paper's "use spare capacity to improve latency hiding" is
+    /// directionally confirmed by the model.
+    #[test]
+    fn helper_threads_beat_idle_contexts() {
+        let knc = knc();
+        let cp = cp();
+        let trace = WorkTrace::synthesize_simd(1 << 20, crate::phi::trace::TABLE1_SCALE20, true, true);
+        let idle = predict_with_helpers(&knc, &cp, &trace, 118, 0, Affinity::Balanced);
+        let helped = predict_with_helpers(&knc, &cp, &trace, 118, 2, Affinity::Balanced);
+        assert!(helped.teps > idle.teps, "helpers {:.3e} !> idle {:.3e}", helped.teps, idle.teps);
+        let full = predict_with_helpers(&knc, &cp, &trace, 236, 0, Affinity::Balanced);
+        assert!(helped.teps < full.teps * 1.1, "helpers {:.3e} vs 236 workers {:.3e}", helped.teps, full.teps);
+    }
+
+    /// Single thread is far from the aggregate: sanity against absurd
+    /// single-thread predictions.
+    #[test]
+    fn single_thread_sane() {
+        let p = predict_scale20_simd(&knc(), &cp(), 1, Affinity::Balanced, true, true);
+        assert!(p.teps > 1.0e6 && p.teps < 1.0e8, "1T predicted {:.3e}", p.teps);
+    }
+}

@@ -1,0 +1,199 @@
+//! Work traces: the bridge between a measured BFS run and the machine
+//! model. A [`WorkTrace`] is algorithm- and graph-specific but
+//! machine-independent; [`super::sim`] re-maps it onto any thread/affinity
+//! configuration.
+
+use crate::bfs::{LayerTrace, RunTrace};
+
+/// One layer's machine-independent work description.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LayerWork {
+    pub layer: usize,
+    pub input_vertices: usize,
+    pub edges_scanned: usize,
+    pub traversed: usize,
+    pub vectorized: bool,
+    /// 16-lane chunk loads (aligned full vectors).
+    pub full_chunks: u64,
+    /// Masked (peel/remainder/unaligned) chunk loads.
+    pub masked_chunks: u64,
+    pub gather_lanes: u64,
+    pub scatter_lanes: u64,
+    pub alu_ops: u64,
+    pub mask_ops: u64,
+    pub prefetches: u64,
+    pub restore_words: usize,
+}
+
+impl LayerWork {
+    pub fn from_layer(l: &LayerTrace) -> Self {
+        LayerWork {
+            layer: l.layer,
+            input_vertices: l.input_vertices,
+            edges_scanned: l.edges_scanned,
+            traversed: l.traversed,
+            vectorized: l.vectorized,
+            full_chunks: l.vpu.vector_loads,
+            masked_chunks: l.vpu.masked_loads,
+            gather_lanes: l.vpu.gather_lanes,
+            scatter_lanes: l.vpu.scatter_lanes,
+            alu_ops: l.vpu.alu_ops,
+            mask_ops: l.vpu.mask_ops,
+            prefetches: l.vpu.prefetch_l1 + l.vpu.prefetch_l2,
+            restore_words: l.restore_words_scanned,
+        }
+    }
+
+    /// Whether software prefetching was active during this layer.
+    pub fn prefetch_enabled(&self) -> bool {
+        self.prefetches > 0
+    }
+}
+
+/// Machine-independent description of a whole run.
+#[derive(Clone, Debug)]
+pub struct WorkTrace {
+    /// Vertices in the graph (bitmap geometry: `ceil(n/32)*4` bytes).
+    pub num_vertices: usize,
+    pub layers: Vec<LayerWork>,
+}
+
+impl WorkTrace {
+    /// Extract from a measured run.
+    pub fn from_run(num_vertices: usize, trace: &RunTrace) -> Self {
+        WorkTrace {
+            num_vertices,
+            layers: trace.layers.iter().map(LayerWork::from_layer).collect(),
+        }
+    }
+
+    /// Undirected edges traversed (Graph500 TEPS numerator).
+    pub fn teps_edges(&self) -> f64 {
+        self.layers.iter().map(|l| l.edges_scanned).sum::<usize>() as f64 / 2.0
+    }
+
+    /// Bitmap size in bytes (`visited` or the queues — same geometry).
+    pub fn bitmap_bytes(&self) -> usize {
+        self.num_vertices.div_ceil(32) * 4
+    }
+
+    /// Predecessor array footprint in bytes.
+    pub fn pred_bytes(&self) -> usize {
+        self.num_vertices * 4
+    }
+
+    /// Synthesize the trace of a *vectorized* run from per-layer
+    /// (input, edges, traversed) profiles — used to model paper-scale
+    /// graphs (SCALE 20) without holding them in this container's memory.
+    /// Counter arithmetic mirrors what the emulated VPU would record:
+    /// mean chunk occupancy from the degree distribution, 2 word-gathers +
+    /// ≤2 scatters per discovered lane, restoration over the words the
+    /// layer touched.
+    pub fn synthesize_simd(
+        num_vertices: usize,
+        profile: &[(usize, usize, usize)], // (input, edges, traversed)
+        aligned: bool,
+        prefetch: bool,
+    ) -> Self {
+        let layers = profile
+            .iter()
+            .enumerate()
+            .map(|(i, &(input, edges, traversed))| {
+                let mean_degree = if input > 0 { edges / input.max(1) } else { 0 };
+                // per vertex: one peel + one remainder chunk on average when
+                // aligned; all-masked when not
+                let full = if aligned { (edges / 16).saturating_sub(input) as u64 } else { 0 };
+                let masked = if aligned {
+                    (input * 2) as u64
+                } else {
+                    (edges.div_ceil(16).max(input)) as u64
+                };
+                let lanes = edges as u64;
+                LayerWork {
+                    layer: i,
+                    input_vertices: input,
+                    edges_scanned: edges,
+                    traversed,
+                    vectorized: mean_degree >= 16,
+                    full_chunks: full,
+                    masked_chunks: masked,
+                    gather_lanes: 2 * lanes,
+                    scatter_lanes: 2 * traversed as u64,
+                    alu_ops: (full + masked) * 8,
+                    mask_ops: (full + masked) * 4,
+                    prefetches: if prefetch { full + masked } else { 0 },
+                    restore_words: (traversed / 8).max(1),
+                }
+            })
+            .collect();
+        WorkTrace { num_vertices, layers }
+    }
+
+    /// Synthesize a scalar (`non-simd`, Algorithm 2) run from the same
+    /// profile shape.
+    pub fn synthesize_scalar(num_vertices: usize, profile: &[(usize, usize, usize)]) -> Self {
+        let layers = profile
+            .iter()
+            .enumerate()
+            .map(|(i, &(input, edges, traversed))| LayerWork {
+                layer: i,
+                input_vertices: input,
+                edges_scanned: edges,
+                traversed,
+                vectorized: false,
+                ..Default::default()
+            })
+            .collect();
+        WorkTrace { num_vertices, layers }
+    }
+}
+
+/// The paper's Table 1 profile (SCALE 20, edgefactor 16): per layer
+/// (input vertices, edges, traversed). Used by benches to model the exact
+/// workload the paper measured.
+pub const TABLE1_SCALE20: &[(usize, usize, usize)] = &[
+    (1, 12, 12),
+    (12, 21_892, 18_122),
+    (18_122, 13_547_462, 540_575),
+    (540_575, 17_626_910, 100_874),
+    (100_874, 150_698, 486),
+    (486, 490, 4),
+    (2, 2, 0),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_totals() {
+        let t = WorkTrace::synthesize_simd(1 << 20, TABLE1_SCALE20, true, true);
+        assert_eq!(t.layers.len(), 7);
+        // ~31.3M directed edge scans → ~15.7M undirected TEPS edges
+        assert!((t.teps_edges() - 15_673_733.0).abs() < 1.0);
+        assert_eq!(t.bitmap_bytes(), 131_072); // the paper's §3.3.1 number
+        assert_eq!(t.pred_bytes(), 4 * 1024 * 1024);
+    }
+
+    #[test]
+    fn from_run_roundtrip() {
+        use crate::bfs::vectorized::VectorizedBfs;
+        use crate::bfs::BfsAlgorithm;
+        use crate::graph::{Csr, RmatConfig};
+        let el = RmatConfig::graph500(10, 8).generate(3);
+        let g = Csr::from_edge_list(10, &el);
+        let r = VectorizedBfs::default().run(&g, 0);
+        let t = WorkTrace::from_run(g.num_vertices(), &r.trace);
+        assert_eq!(t.layers.len(), r.trace.layers.len());
+        assert_eq!(
+            t.layers.iter().map(|l| l.edges_scanned).sum::<usize>(),
+            r.trace.total_edges_scanned()
+        );
+    }
+
+    #[test]
+    fn synthesize_scalar_has_no_vpu_events() {
+        let t = WorkTrace::synthesize_scalar(1024, &[(1, 10, 5), (5, 50, 20)]);
+        assert!(t.layers.iter().all(|l| l.gather_lanes == 0 && !l.vectorized));
+    }
+}

@@ -1,0 +1,156 @@
+//! A miniature property-testing kit (proptest is not in the offline crate
+//! registry): seeded case generation with failure reporting that prints
+//! the reproducing seed. No shrinking — cases are kept small instead.
+//!
+//! ```
+//! use phi_bfs::prop::{forall, Gen};
+//! forall("addition commutes", 64, |g| {
+//!     let (a, b) = (g.int(0, 100), g.int(0, 100));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::rng::Xoshiro256;
+
+/// Per-case random source with convenience generators.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Case index (exposed for size-scaling strategies).
+    pub case: usize,
+}
+
+impl Gen {
+    /// Integer in `[lo, hi]` inclusive.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.rng.next_below((hi - lo + 1) as u64) as i64
+    }
+
+    /// usize in `[lo, hi]` inclusive.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    /// Uniform f64 in [0,1).
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.next_bool(p)
+    }
+
+    /// Choose one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_index(xs.len())]
+    }
+
+    /// A vector of length `len` built by `f`.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Random edge list over `n` vertices (possibly with duplicates and
+    /// self-loops, like the Graph500 raw stream).
+    pub fn edges(&mut self, n: usize, m: usize) -> Vec<(u32, u32)> {
+        self.vec(m, |g| (g.size(0, n - 1) as u32, g.size(0, n - 1) as u32))
+    }
+
+    /// Access the raw RNG.
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+}
+
+/// Default base seed ("PROPSEED" in ASCII).
+pub const DEFAULT_SEED: u64 = 0x5052_4f50_5345_4544;
+
+/// Run `body` on `cases` generated cases. On panic, re-raises with the
+/// property name, case index and base seed so the failure is reproducible
+/// with `forall_seeded`.
+pub fn forall(name: &str, cases: usize, body: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    forall_seeded(name, DEFAULT_SEED, cases, body)
+}
+
+/// `forall` with an explicit base seed (use the seed printed by a failure).
+pub fn forall_seeded(
+    name: &str,
+    base_seed: u64,
+    cases: usize,
+    body: impl Fn(&mut Gen) + std::panic::RefUnwindSafe,
+) {
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen { rng: Xoshiro256::seed_from_u64(seed), case };
+            body(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property {name:?} failed at case {case}/{cases} (base_seed={base_seed:#x}, case_seed={seed:#x}):\n{msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall("reverse twice is identity", 32, |g| {
+            let len = g.size(0, 20);
+            let v = g.vec(len, |g| g.int(-5, 5));
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always fails\"")]
+    fn reports_failure_with_seed() {
+        forall("always fails", 4, |g| {
+            let x = g.int(0, 10);
+            assert!(x > 100, "x={x}");
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        forall("int in range", 64, |g| {
+            let x = g.int(-3, 7);
+            assert!((-3..=7).contains(&x));
+        });
+    }
+
+    #[test]
+    fn deterministic_per_base_seed() {
+        let collect = |seed: u64| {
+            let out = std::sync::Mutex::new(Vec::new());
+            forall_seeded("collect", seed, 8, |g| {
+                out.lock().unwrap().push(g.int(0, 1000));
+            });
+            out.into_inner().unwrap()
+        };
+        assert_eq!(collect(42), collect(42));
+        assert_ne!(collect(42), collect(43));
+    }
+
+    #[test]
+    fn edges_in_range() {
+        forall("edges", 16, |g| {
+            let n = g.size(2, 50);
+            for (a, b) in g.edges(n, 30) {
+                assert!((a as usize) < n && (b as usize) < n);
+            }
+        });
+    }
+}

@@ -1,0 +1,141 @@
+//! Artifact manifest: which AOT layer-step executables exist and how to
+//! pick one for a graph.
+//!
+//! `make artifacts` writes `artifacts/manifest.txt` with one line per
+//! compiled size bucket:
+//!
+//! ```text
+//! bfs_layer <N> <C> <W> <filename>
+//! ```
+//!
+//! (Plain text rather than JSON because serde is not in the offline crate
+//! registry — and four fields don't need it.)
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One compiled size bucket.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    /// Vertex capacity (bitmap geometry; `nodes` constant baked in).
+    pub n: usize,
+    /// Adjacency chunks (rows of 16 lanes) per executable call.
+    pub chunks: usize,
+    /// Bitmap words = ceil(n / 32).
+    pub words: usize,
+    /// HLO text file, relative to the artifact directory.
+    pub filename: String,
+}
+
+impl ArtifactSpec {
+    /// Lanes per call.
+    pub fn lanes_per_call(&self) -> usize {
+        self.chunks * 16
+    }
+}
+
+/// Parsed manifest plus its directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub specs: Vec<ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        let specs = Self::parse(&text)?;
+        Ok(ArtifactManifest { dir, specs })
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str) -> Result<Vec<ArtifactSpec>> {
+        let mut specs = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 5 || parts[0] != "bfs_layer" {
+                bail!("manifest line {}: expected `bfs_layer N C W file`, got {line:?}", lineno + 1);
+            }
+            let spec = ArtifactSpec {
+                n: parts[1].parse().context("N")?,
+                chunks: parts[2].parse().context("C")?,
+                words: parts[3].parse().context("W")?,
+                filename: parts[4].to_string(),
+            };
+            if spec.words != spec.n.div_ceil(32) {
+                bail!("manifest line {}: W={} inconsistent with N={}", lineno + 1, spec.words, spec.n);
+            }
+            specs.push(spec);
+        }
+        if specs.is_empty() {
+            bail!("manifest contains no artifacts");
+        }
+        Ok(specs)
+    }
+
+    /// Smallest bucket able to hold a graph of `num_vertices`.
+    pub fn pick(&self, num_vertices: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .filter(|s| s.n >= num_vertices)
+            .min_by_key(|s| s.n)
+    }
+
+    /// Absolute path of a spec's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.filename)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+bfs_layer 1024 64 32 bfs_layer_n1024_c64.hlo.txt
+bfs_layer 4096 128 128 bfs_layer_n4096_c128.hlo.txt
+bfs_layer 16384 256 512 bfs_layer_n16384_c256.hlo.txt
+";
+
+    #[test]
+    fn parses_sample() {
+        let specs = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0], ArtifactSpec { n: 1024, chunks: 64, words: 32, filename: "bfs_layer_n1024_c64.hlo.txt".into() });
+        assert_eq!(specs[2].lanes_per_call(), 4096);
+    }
+
+    #[test]
+    fn pick_smallest_fitting() {
+        let m = ArtifactManifest { dir: "/x".into(), specs: ArtifactManifest::parse(SAMPLE).unwrap() };
+        assert_eq!(m.pick(100).unwrap().n, 1024);
+        assert_eq!(m.pick(1024).unwrap().n, 1024);
+        assert_eq!(m.pick(1025).unwrap().n, 4096);
+        assert_eq!(m.pick(16384).unwrap().n, 16384);
+        assert!(m.pick(1 << 20).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(ArtifactManifest::parse("bfs_layer 10 2").is_err());
+        assert!(ArtifactManifest::parse("other 1 2 3 f").is_err());
+        assert!(ArtifactManifest::parse("").is_err());
+        // inconsistent W
+        assert!(ArtifactManifest::parse("bfs_layer 1024 64 31 f.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let text = format!("# header\n\n{SAMPLE}");
+        assert_eq!(ArtifactManifest::parse(&text).unwrap().len(), 3);
+    }
+}

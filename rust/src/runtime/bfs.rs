@@ -1,0 +1,201 @@
+//! A [`BfsAlgorithm`] whose per-layer hot loop is the AOT-compiled
+//! JAX/Pallas kernel executed through PJRT — the end-to-end proof that the
+//! three layers (Rust coordinator → jax graph → Pallas kernel) compose.
+//!
+//! The Rust side keeps the traversal state (bitmaps, predecessors) and, per
+//! layer, packs the frontier's adjacency lists into 16-lane chunks, batches
+//! them to the artifact's `C` capacity, and calls the executable; the
+//! kernel performs Listing 1's explore + the restoration, returning
+//! consistent state for the next layer.
+//!
+//! Chunk packing is the same peel/full/remainder structure the native
+//! vectorized explorer uses: a vertex's adjacency is cut at `rows`-array
+//! 16-element boundaries, so a lane layout valid for the emulated VPU is
+//! valid here and results are bit-identical (asserted by the integration
+//! test and the `pjrt_bfs` example).
+
+use std::cell::RefCell;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::engine::{LayerStepArgs, PjrtEngine};
+use crate::bfs::{BfsAlgorithm, BfsResult, BfsTree, LayerTrace, RunTrace};
+use crate::graph::{Bitmap, Csr};
+use crate::{Pred, Vertex, PRED_INFINITY};
+
+const LANES: usize = 16;
+
+/// BFS engine backed by the PJRT-compiled layer step.
+pub struct PjrtBfs {
+    engine: RefCell<PjrtEngine>,
+}
+
+impl PjrtBfs {
+    pub fn new(engine: PjrtEngine) -> Self {
+        PjrtBfs { engine: RefCell::new(engine) }
+    }
+
+    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(Self::new(PjrtEngine::from_dir(dir)?))
+    }
+
+    /// Pack one frontier's adjacency lists into (neigh, parent) lane pairs,
+    /// chunked at the CSR `rows` 16-element boundaries (peel / full /
+    /// remainder, §4.2) — each chunk belongs to exactly one frontier vertex.
+    pub fn pack_frontier(g: &Csr, frontier: &Bitmap) -> Vec<([i32; LANES], [i32; LANES])> {
+        let mut chunks = Vec::new();
+        for u in frontier.iter_set_bits() {
+            let (start, end) = g.adjacency_range(u);
+            let mut off = start;
+            while off < end {
+                // cut at the next 16-aligned boundary of `rows`
+                let boundary = (off / LANES + 1) * LANES;
+                let stop = boundary.min(end);
+                let mut neigh = [-1i32; LANES];
+                let mut parent = [-1i32; LANES];
+                for (lane, idx) in (off..stop).enumerate() {
+                    neigh[lane] = g.rows[idx] as i32;
+                    parent[lane] = u as i32;
+                }
+                chunks.push((neigh, parent));
+                off = stop;
+            }
+        }
+        chunks
+    }
+
+    /// Run the traversal, returning the trace with per-call execution times.
+    pub fn run_checked(&self, g: &Csr, root: Vertex) -> Result<BfsResult> {
+        let n = g.num_vertices();
+        let mut engine = self.engine.borrow_mut();
+        let spec = engine
+            .manifest()
+            .pick(n)
+            .ok_or_else(|| anyhow!("no artifact bucket fits {n} vertices; rebuild with --buckets"))?
+            .clone();
+
+        // state in artifact geometry (padded to spec.n / spec.words)
+        let mut vis_words = vec![0i32; spec.words];
+        let mut out_words = vec![0i32; spec.words];
+        let mut pred = vec![PRED_INFINITY; spec.n];
+        let mut frontier = Bitmap::new(n);
+        frontier.set_bit(root);
+        vis_words[root as usize / 32] |= 1 << (root % 32);
+        pred[root as usize] = root as Pred;
+
+        let mut layers = Vec::new();
+        let mut layer = 0usize;
+        while frontier.count_ones() != 0 {
+            let t0 = Instant::now();
+            let chunks = Self::pack_frontier(g, &frontier);
+            let edges_scanned: usize = frontier.iter_set_bits().map(|u| g.degree(u)).sum();
+            // batch chunks through the executable, carrying state
+            for batch in chunks.chunks(spec.chunks) {
+                let mut neigh = vec![-1i32; spec.lanes_per_call()];
+                let mut parents = vec![-1i32; spec.lanes_per_call()];
+                for (i, (nrow, prow)) in batch.iter().enumerate() {
+                    neigh[i * LANES..(i + 1) * LANES].copy_from_slice(nrow);
+                    parents[i * LANES..(i + 1) * LANES].copy_from_slice(prow);
+                }
+                let args = LayerStepArgs {
+                    neigh,
+                    parents,
+                    vis_words: vis_words.clone(),
+                    out_words: out_words.clone(),
+                    pred: pred.clone(),
+                };
+                let r = engine.layer_step(&spec, &args)?;
+                vis_words = r.vis_words;
+                out_words = r.out_words;
+                pred = r.pred;
+            }
+            // swap: next frontier = out, clear out
+            // out_words is in padded artifact geometry; words beyond the
+            // graph's bitmap are always zero (no neighbor id reaches them)
+            let mut next = Bitmap::new(n);
+            for (w, &bits) in out_words.iter().enumerate().take(next.num_words()) {
+                next.set_word(w, bits as u32);
+            }
+            let traversed = next.count_ones();
+            layers.push(LayerTrace {
+                layer,
+                input_vertices: frontier.count_ones(),
+                edges_scanned,
+                traversed,
+                vectorized: true,
+                wall_ns: t0.elapsed().as_nanos() as u64,
+                ..Default::default()
+            });
+            out_words.fill(0);
+            frontier = next;
+            layer += 1;
+        }
+
+        pred.truncate(n);
+        Ok(BfsResult {
+            tree: BfsTree::new(root, pred),
+            trace: RunTrace { layers, num_threads: 1 },
+        })
+    }
+}
+
+impl BfsAlgorithm for PjrtBfs {
+    fn name(&self) -> &'static str {
+        "pjrt-simd"
+    }
+
+    fn run(&self, g: &Csr, root: Vertex) -> BfsResult {
+        self.run_checked(g, root).expect("PJRT BFS failed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::EdgeList;
+
+    #[test]
+    fn pack_frontier_respects_boundaries() {
+        // star: vertex 0 with 20 children → rows[0..20] for vertex 0
+        let el = EdgeList::with_edges(32, (1..=20).map(|i| (0u32, i as Vertex)).collect());
+        let g = Csr::from_edge_list(0, &el);
+        let mut f = Bitmap::new(32);
+        f.set_bit(0);
+        let chunks = PjrtBfs::pack_frontier(&g, &f);
+        // vertex 0's adjacency starts at rows[0]: full chunk of 16 + remainder 4
+        assert_eq!(chunks.len(), 2);
+        let valid0 = chunks[0].0.iter().filter(|&&v| v >= 0).count();
+        let valid1 = chunks[1].0.iter().filter(|&&v| v >= 0).count();
+        assert_eq!((valid0, valid1), (16, 4));
+        assert!(chunks[0].1[..16].iter().all(|&p| p == 0));
+        assert_eq!(chunks[1].1[4], -1); // padding lanes carry -1 parents
+    }
+
+    #[test]
+    fn pack_frontier_peel_structure() {
+        // two vertices: v1 with degree 5 (rows 0..5), v2 with degree 30
+        // (rows 5..35) → v2's first chunk is a peel of 11 (5→16)
+        let mut edges: Vec<(Vertex, Vertex)> = (10..15).map(|i| (0u32, i)).collect();
+        edges.extend((10..40).map(|i| (1u32, i)));
+        let el = EdgeList::with_edges(64, edges);
+        let g = Csr::from_edge_list(0, &el);
+        let mut f = Bitmap::new(64);
+        f.set_bit(0);
+        f.set_bit(1);
+        let chunks = PjrtBfs::pack_frontier(&g, &f);
+        let sizes: Vec<usize> =
+            chunks.iter().map(|(n, _)| n.iter().filter(|&&v| v >= 0).count()).collect();
+        // v0: rows 0..5 → one chunk of 5 (to boundary 16 cut at end=5)
+        // v1: rows 5..35 → peel 5..16 (11), full 16..32 (16), rem 32..35 (3)
+        assert_eq!(sizes, vec![5, 11, 16, 3]);
+    }
+
+    #[test]
+    fn pack_empty_frontier() {
+        let el = EdgeList::with_edges(8, vec![(0, 1)]);
+        let g = Csr::from_edge_list(0, &el);
+        let f = Bitmap::new(8);
+        assert!(PjrtBfs::pack_frontier(&g, &f).is_empty());
+    }
+}

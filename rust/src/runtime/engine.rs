@@ -1,0 +1,119 @@
+//! The PJRT execution engine: one CPU client, one compiled executable per
+//! artifact bucket (compiled lazily, cached), and the typed layer-step
+//! call used by the PJRT-backed BFS engine and the `pjrt_bfs` example.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::{ArtifactManifest, ArtifactSpec};
+
+/// Inputs of one layer-step call, all in artifact geometry (padded).
+#[derive(Clone, Debug)]
+pub struct LayerStepArgs {
+    /// `C*16` adjacency lanes, -1 padded (row-major `[C][16]`).
+    pub neigh: Vec<i32>,
+    /// `C*16` parent lanes, -1 padded.
+    pub parents: Vec<i32>,
+    /// `W` visited bitmap words (bit patterns).
+    pub vis_words: Vec<i32>,
+    /// `W` output-queue words.
+    pub out_words: Vec<i32>,
+    /// `N` predecessor entries.
+    pub pred: Vec<i32>,
+}
+
+/// Outputs of one layer-step call.
+#[derive(Clone, Debug)]
+pub struct LayerStepResult {
+    pub out_words: Vec<i32>,
+    pub vis_words: Vec<i32>,
+    pub pred: Vec<i32>,
+    /// Wall time of the on-device execution (excludes literal transfer).
+    pub exec_time: std::time::Duration,
+}
+
+/// PJRT CPU client + executable cache.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtEngine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(manifest: ArtifactManifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtEngine { client, manifest, executables: HashMap::new() })
+    }
+
+    /// Convenience: load the manifest from `dir` and build the engine.
+    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::new(ArtifactManifest::load(dir)?)
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for a bucket.
+    pub fn executable(&mut self, spec: &ArtifactSpec) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(&spec.filename) {
+            let path = self.manifest.path_of(spec);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", spec.filename))?;
+            self.executables.insert(spec.filename.clone(), exe);
+        }
+        Ok(&self.executables[&spec.filename])
+    }
+
+    /// Execute one layer step through the artifact.
+    pub fn layer_step(&mut self, spec: &ArtifactSpec, args: &LayerStepArgs) -> Result<LayerStepResult> {
+        let lanes = spec.lanes_per_call();
+        anyhow::ensure!(args.neigh.len() == lanes, "neigh: {} != {}", args.neigh.len(), lanes);
+        anyhow::ensure!(args.parents.len() == lanes, "parents len");
+        anyhow::ensure!(args.vis_words.len() == spec.words, "vis len");
+        anyhow::ensure!(args.out_words.len() == spec.words, "out len");
+        anyhow::ensure!(args.pred.len() == spec.n, "pred len");
+
+        let neigh = xla::Literal::vec1(&args.neigh).reshape(&[spec.chunks as i64, 16])?;
+        let parents = xla::Literal::vec1(&args.parents).reshape(&[spec.chunks as i64, 16])?;
+        let vis = xla::Literal::vec1(&args.vis_words);
+        let out = xla::Literal::vec1(&args.out_words);
+        let pred = xla::Literal::vec1(&args.pred);
+
+        let spec = spec.clone();
+        let exe = self.executable(&spec)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&[neigh, parents, vis, out, pred])?[0][0]
+            .to_literal_sync()?;
+        let exec_time = t0.elapsed();
+        // aot.py lowers with return_tuple=True → 3-tuple
+        let (out_l, vis_l, pred_l) = result.to_tuple3().context("expected a 3-tuple result")?;
+        Ok(LayerStepResult {
+            out_words: out_l.to_vec::<i32>()?,
+            vis_words: vis_l.to_vec::<i32>()?,
+            pred: pred_l.to_vec::<i32>()?,
+            exec_time,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The engine needs built artifacts; full coverage lives in
+    // rust/tests/pjrt_integration.rs (run after `make artifacts`).
+}

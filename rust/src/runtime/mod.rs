@@ -1,0 +1,20 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas layer-step artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
+//! them from Rust. Python is never on this path.
+//!
+//! Pipeline (see /opt/xla-example/load_hlo and DESIGN.md §2):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `executable.execute`.
+//!
+//! * [`artifacts`] — manifest parsing + size-bucket selection.
+//! * [`engine`] — the compiled-executable cache and the typed
+//!   `layer_step` call.
+//! * [`bfs`] — a [`crate::bfs::BfsAlgorithm`] that runs the whole
+//!   traversal through the artifact, proving the three layers compose.
+
+pub mod artifacts;
+pub mod bfs;
+pub mod engine;
+
+pub use artifacts::{ArtifactManifest, ArtifactSpec};
+pub use engine::PjrtEngine;

@@ -1,0 +1,108 @@
+//! VPU event counters.
+//!
+//! Every emulated intrinsic bumps a counter; the Xeon Phi performance model
+//! ([`crate::phi::cost`]) prices these events with Knights-Corner latencies
+//! to produce the TEPS predictions behind Figs 9–10 and Table 2. The
+//! counters also drive tests ("prefetching covered every gather", "peel
+//! lanes only occur on unaligned segment heads", ...).
+
+/// Counts of dynamic VPU events during a run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct VpuCounters {
+    /// Full-width 16-lane register loads (`_mm512_load_epi32`).
+    pub vector_loads: u64,
+    /// Masked / partial loads used for peel and remainder chunks.
+    pub masked_loads: u64,
+    /// Lanewise ALU ops (div, rem, shift, or, ...) — one per instruction,
+    /// not per lane.
+    pub alu_ops: u64,
+    /// Mask-register ops (`kor`, `knot`, `test_epi32_mask`...).
+    pub mask_ops: u64,
+    /// Gather instructions issued.
+    pub gathers: u64,
+    /// Total lanes gathered (≤ 16 × gathers when masked).
+    pub gather_lanes: u64,
+    /// Scatter instructions issued.
+    pub scatters: u64,
+    /// Total lanes scattered.
+    pub scatter_lanes: u64,
+    /// Lanes whose scatter was overwritten by a higher lane targeting the
+    /// same address — the lost updates the restoration process repairs.
+    pub scatter_conflicts: u64,
+    /// Software prefetches targeting L1 (`_MM_HINT_T0`).
+    pub prefetch_l1: u64,
+    /// Software prefetches targeting L2 (`_MM_HINT_T1`).
+    pub prefetch_l2: u64,
+    /// Full 16-lane chunks processed.
+    pub full_chunks: u64,
+    /// Lanes processed in peel chunks (unaligned segment heads, §4.2).
+    pub peel_lanes: u64,
+    /// Lanes processed in remainder chunks (segment tails, §4.2).
+    pub remainder_lanes: u64,
+}
+
+impl VpuCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Merge another thread's counters into this one.
+    pub fn merge(&mut self, other: &VpuCounters) {
+        self.vector_loads += other.vector_loads;
+        self.masked_loads += other.masked_loads;
+        self.alu_ops += other.alu_ops;
+        self.mask_ops += other.mask_ops;
+        self.gathers += other.gathers;
+        self.gather_lanes += other.gather_lanes;
+        self.scatters += other.scatters;
+        self.scatter_lanes += other.scatter_lanes;
+        self.scatter_conflicts += other.scatter_conflicts;
+        self.prefetch_l1 += other.prefetch_l1;
+        self.prefetch_l2 += other.prefetch_l2;
+        self.full_chunks += other.full_chunks;
+        self.peel_lanes += other.peel_lanes;
+        self.remainder_lanes += other.remainder_lanes;
+    }
+
+    /// Total lanes that went through the explore dataflow.
+    pub fn total_lanes(&self) -> u64 {
+        self.full_chunks * 16 + self.peel_lanes + self.remainder_lanes
+    }
+
+    /// Fraction of lanes executed in full vectors — the "vector-unit usage"
+    /// the paper's §4.1 tries to maximize.
+    pub fn vector_efficiency(&self) -> f64 {
+        let total = self.total_lanes();
+        if total == 0 {
+            return 1.0;
+        }
+        (self.full_chunks * 16) as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds() {
+        let mut a = VpuCounters { gathers: 2, gather_lanes: 30, ..Default::default() };
+        let b = VpuCounters { gathers: 3, gather_lanes: 40, scatter_conflicts: 1, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.gathers, 5);
+        assert_eq!(a.gather_lanes, 70);
+        assert_eq!(a.scatter_conflicts, 1);
+    }
+
+    #[test]
+    fn vector_efficiency() {
+        let c = VpuCounters { full_chunks: 3, peel_lanes: 8, remainder_lanes: 8, ..Default::default() };
+        assert_eq!(c.total_lanes(), 64);
+        assert!((c.vector_efficiency() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_efficiency_is_one() {
+        assert_eq!(VpuCounters::default().vector_efficiency(), 1.0);
+    }
+}

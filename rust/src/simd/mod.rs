@@ -1,0 +1,29 @@
+//! Emulation of the Knights-Corner 512-bit vector processing unit (VPU).
+//!
+//! §2 of the paper: each Phi core has a 512-bit VPU — 16 × 32-bit lanes —
+//! steered by 16-bit mask registers, with scatter/gather instructions for
+//! non-contiguous access. The paper's Listing 1 drives it through AVX-512
+//! intrinsics. This module is a semantically faithful software model of the
+//! subset Listing 1 uses, so the vectorized BFS in
+//! [`crate::bfs::vectorized`] reads line-for-line like the paper's code and
+//! — critically — reproduces the *same hazards*:
+//!
+//! * masked scatter with **duplicate word indices**: when several lanes
+//!   target the same address, one write wins and the other lanes' updates
+//!   are lost. That lost update is exactly the bit race the restoration
+//!   process (§3.3.2) repairs, so the emulator implements
+//!   highest-lane-wins scatter, and unit tests prove bits really are lost
+//!   without restoration.
+//! * masked operations only touch lanes whose mask bit is 1 (§2).
+//!
+//! [`ops`] carries the intrinsic look-alikes, [`vec512`] the register
+//! types, and [`counters`] the event counters (vector ops, gathers,
+//! scatters, prefetches, peel/remainder lanes) that feed the Xeon Phi
+//! performance model in [`crate::phi`].
+
+pub mod counters;
+pub mod ops;
+pub mod vec512;
+
+pub use counters::VpuCounters;
+pub use vec512::{Mask16, VecI32x16, LANES};

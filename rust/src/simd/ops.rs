@@ -1,0 +1,635 @@
+//! The vector unit itself: one `Vpu` per hardware thread, with methods
+//! named after the AVX-512 intrinsics of the paper's Listing 1.
+//!
+//! Semantics notes (all load-bearing for the reproduction):
+//!
+//! * **Masked ops** write only the lanes whose mask bit is set; other lanes
+//!   take the `src` operand's value (`_mm512_mask_or_epi32(src, k, a, b)`).
+//! * **Gather** (`_mm512_i32gather_epi32`) reads `base[idx[lane]]` per lane.
+//! * **Scatter** (`_mm512_mask_i32scatter_epi32`) processes lanes from 0
+//!   upward; when two enabled lanes carry the same index the higher lane's
+//!   value lands last and *wins* — the lower lane's update is lost. This is
+//!   the architectural behaviour that makes the paper's word-granularity
+//!   bitmap updates racy even within a single thread, and is why the
+//!   restoration process exists. `scatter_conflicts` counts the lost lanes.
+//! * **Prefetches** are architectural no-ops that only move data earlier in
+//!   time; the emulator records them so the cost model can credit latency
+//!   hiding (§4.2 Prefetching) and tests can assert coverage.
+
+use std::sync::atomic::{AtomicI32, AtomicU32, Ordering};
+
+use super::counters::VpuCounters;
+use super::vec512::{Mask16, VecI32x16, LANES};
+
+/// One emulated VPU (one per worker thread).
+#[derive(Clone, Debug, Default)]
+pub struct Vpu {
+    /// Event counters; read by the performance model after a run.
+    pub counters: VpuCounters,
+}
+
+impl Vpu {
+    pub fn new() -> Self {
+        Vpu { counters: VpuCounters::new() }
+    }
+
+    // ---- register initialisation --------------------------------------
+
+    /// `_mm512_set1_epi32`.
+    #[inline(always)]
+    pub fn set1_epi32(&mut self, x: i32) -> VecI32x16 {
+        self.counters.alu_ops += 1;
+        VecI32x16::splat(x)
+    }
+
+    // ---- loads ---------------------------------------------------------
+
+    /// `_mm512_load_epi32` — full 16-lane aligned load from `src[offset..]`.
+    #[inline(always)]
+    pub fn load_epi32(&mut self, src: &[i32], offset: usize) -> VecI32x16 {
+        self.counters.vector_loads += 1;
+        let mut out = [0i32; LANES];
+        out.copy_from_slice(&src[offset..offset + LANES]);
+        VecI32x16(out)
+    }
+
+    /// `_mm512_mask_loadu_epi32` — masked (possibly partial) load; disabled
+    /// lanes read as 0. Used for peel/remainder chunks (§4.2).
+    #[inline(always)]
+    pub fn mask_load_epi32(&mut self, mask: Mask16, src: &[i32], offset: usize) -> VecI32x16 {
+        self.counters.masked_loads += 1;
+        let mut out = [0i32; LANES];
+        for (i, o) in out.iter_mut().enumerate() {
+            if mask.test_lane(i) {
+                *o = src[offset + i];
+            }
+        }
+        VecI32x16(out)
+    }
+
+    // ---- lanewise ALU ----------------------------------------------------
+
+    /// `_mm512_div_epi32` (SVML) — lanewise signed division.
+    #[inline(always)]
+    pub fn div_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        self.counters.alu_ops += 1;
+        a.zip(&b, |x, y| x / y)
+    }
+
+    /// `_mm512_rem_epi32` (SVML) — lanewise signed remainder.
+    #[inline(always)]
+    pub fn rem_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        self.counters.alu_ops += 1;
+        a.zip(&b, |x, y| x % y)
+    }
+
+    /// `_mm512_sllv_epi32` — lanewise variable left shift.
+    #[inline(always)]
+    pub fn sllv_epi32(&mut self, a: VecI32x16, counts: VecI32x16) -> VecI32x16 {
+        self.counters.alu_ops += 1;
+        a.zip(&counts, |x, c| ((x as u32) << (c as u32 & 31)) as i32)
+    }
+
+    /// `_mm512_srlv_epi32` — lanewise variable logical right shift (used by
+    /// the vectorized restoration to walk word halves).
+    #[inline(always)]
+    pub fn srlv_epi32(&mut self, a: VecI32x16, counts: VecI32x16) -> VecI32x16 {
+        self.counters.alu_ops += 1;
+        a.zip(&counts, |x, c| ((x as u32) >> (c as u32 & 31)) as i32)
+    }
+
+    /// `_mm512_and_epi32`.
+    #[inline(always)]
+    pub fn and_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        self.counters.alu_ops += 1;
+        a.zip(&b, |x, y| x & y)
+    }
+
+    /// `_mm512_or_epi32`.
+    #[inline(always)]
+    pub fn or_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        self.counters.alu_ops += 1;
+        a.zip(&b, |x, y| x | y)
+    }
+
+    /// `_mm512_add_epi32`.
+    #[inline(always)]
+    pub fn add_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        self.counters.alu_ops += 1;
+        a.zip(&b, |x, y| x.wrapping_add(y))
+    }
+
+    /// `_mm512_sub_epi32`.
+    #[inline(always)]
+    pub fn sub_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        self.counters.alu_ops += 1;
+        a.zip(&b, |x, y| x.wrapping_sub(y))
+    }
+
+    /// `_mm512_mask_or_epi32(src, k, a, b)` — OR where masked, pass `src`
+    /// through elsewhere. Listing 1 uses this to merge new bits into the
+    /// gathered output-queue words.
+    #[inline(always)]
+    pub fn mask_or_epi32(&mut self, src: VecI32x16, mask: Mask16, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        self.counters.alu_ops += 1;
+        let mut out = src.0;
+        for (i, o) in out.iter_mut().enumerate() {
+            if mask.test_lane(i) {
+                *o = a.0[i] | b.0[i];
+            }
+        }
+        VecI32x16(out)
+    }
+
+    // ---- mask ops --------------------------------------------------------
+
+    /// `_mm512_test_epi32_mask(a, b)` — per-lane `(a & b) != 0` into a mask.
+    #[inline(always)]
+    pub fn test_epi32_mask(&mut self, a: VecI32x16, b: VecI32x16) -> Mask16 {
+        self.counters.mask_ops += 1;
+        let mut m = 0u16;
+        for i in 0..LANES {
+            if a.0[i] & b.0[i] != 0 {
+                m |= 1 << i;
+            }
+        }
+        Mask16(m)
+    }
+
+    /// `_mm512_cmplt_epi32_mask(a, b)` — per-lane `a < b` (restoration's
+    /// negative-predecessor test).
+    #[inline(always)]
+    pub fn cmplt_epi32_mask(&mut self, a: VecI32x16, b: VecI32x16) -> Mask16 {
+        self.counters.mask_ops += 1;
+        let mut m = 0u16;
+        for i in 0..LANES {
+            if a.0[i] < b.0[i] {
+                m |= 1 << i;
+            }
+        }
+        Mask16(m)
+    }
+
+    /// `_mm512_kor`.
+    #[inline(always)]
+    pub fn kor(&mut self, a: Mask16, b: Mask16) -> Mask16 {
+        self.counters.mask_ops += 1;
+        Mask16(a.0 | b.0)
+    }
+
+    /// `_mm512_kand`.
+    #[inline(always)]
+    pub fn kand(&mut self, a: Mask16, b: Mask16) -> Mask16 {
+        self.counters.mask_ops += 1;
+        Mask16(a.0 & b.0)
+    }
+
+    /// `_mm512_knot`.
+    #[inline(always)]
+    pub fn knot(&mut self, a: Mask16) -> Mask16 {
+        self.counters.mask_ops += 1;
+        Mask16(!a.0)
+    }
+
+    // ---- gather / scatter -------------------------------------------------
+
+    /// `_mm512_i32gather_epi32(vindex, base, scale)` over an `i32` array.
+    #[inline(always)]
+    pub fn i32gather_epi32(&mut self, vindex: VecI32x16, base: &[i32]) -> VecI32x16 {
+        self.counters.gathers += 1;
+        self.counters.gather_lanes += LANES as u64;
+        let mut out = [0i32; LANES];
+        for (o, &idx) in out.iter_mut().zip(vindex.0.iter()) {
+            *o = base[idx as usize];
+        }
+        VecI32x16(out)
+    }
+
+    /// Masked gather; disabled lanes read as 0. (The paper's peel/remainder
+    /// handling filters "according to the precalculated mask", §4.2.)
+    #[inline(always)]
+    pub fn mask_i32gather_epi32(&mut self, mask: Mask16, vindex: VecI32x16, base: &[i32]) -> VecI32x16 {
+        self.counters.gathers += 1;
+        self.counters.gather_lanes += mask.count() as u64;
+        let mut out = [0i32; LANES];
+        for (i, o) in out.iter_mut().enumerate() {
+            if mask.test_lane(i) {
+                *o = base[vindex.0[i] as usize];
+            }
+        }
+        VecI32x16(out)
+    }
+
+    /// Gather over a `u32` word array (the bitmap words). Bit patterns pass
+    /// through unchanged.
+    #[inline(always)]
+    pub fn i32gather_words(&mut self, vindex: VecI32x16, base: &[u32]) -> VecI32x16 {
+        self.counters.gathers += 1;
+        self.counters.gather_lanes += LANES as u64;
+        let mut out = [0i32; LANES];
+        for (o, &idx) in out.iter_mut().zip(vindex.0.iter()) {
+            *o = base[idx as usize] as i32;
+        }
+        VecI32x16(out)
+    }
+
+    /// Masked variant of [`Self::i32gather_words`].
+    #[inline(always)]
+    pub fn mask_i32gather_words(&mut self, mask: Mask16, vindex: VecI32x16, base: &[u32]) -> VecI32x16 {
+        self.counters.gathers += 1;
+        self.counters.gather_lanes += mask.count() as u64;
+        let mut out = [0i32; LANES];
+        for (i, o) in out.iter_mut().enumerate() {
+            if mask.test_lane(i) {
+                *o = base[vindex.0[i] as usize] as i32;
+            }
+        }
+        VecI32x16(out)
+    }
+
+    /// `_mm512_mask_i32scatter_epi32(base, k, vindex, v, scale)` over `i32`.
+    ///
+    /// Lanes are committed in ascending order, so with duplicate indices the
+    /// **highest enabled lane wins**; every overwritten store is counted in
+    /// `scatter_conflicts`. This is the precise mechanism behind Fig 6's
+    /// "visited bitmap race" when the paper scatters whole 32-bit words.
+    #[inline(always)]
+    pub fn mask_i32scatter_epi32(&mut self, base: &mut [i32], mask: Mask16, vindex: VecI32x16, v: VecI32x16) {
+        self.counters.scatters += 1;
+        self.counters.scatter_lanes += mask.count() as u64;
+        for i in 0..LANES {
+            if mask.test_lane(i) {
+                // conflict detection: does any higher enabled lane target the
+                // same slot?
+                for j in (i + 1)..LANES {
+                    if mask.test_lane(j) && vindex.0[j] == vindex.0[i] {
+                        self.counters.scatter_conflicts += 1;
+                        break;
+                    }
+                }
+                base[vindex.0[i] as usize] = v.0[i];
+            }
+        }
+    }
+
+    /// Masked scatter into a `u32` word array (bitmap words).
+    #[inline(always)]
+    pub fn mask_i32scatter_words(&mut self, base: &mut [u32], mask: Mask16, vindex: VecI32x16, v: VecI32x16) {
+        self.counters.scatters += 1;
+        self.counters.scatter_lanes += mask.count() as u64;
+        for i in 0..LANES {
+            if mask.test_lane(i) {
+                for j in (i + 1)..LANES {
+                    if mask.test_lane(j) && vindex.0[j] == vindex.0[i] {
+                        self.counters.scatter_conflicts += 1;
+                        break;
+                    }
+                }
+                base[vindex.0[i] as usize] = v.0[i] as u32;
+            }
+        }
+    }
+
+    /// Full 16-lane load from a `u32` vertex array (the CSR `rows` array;
+    /// vertex ids < 2³¹ so the i32 reinterpretation is lossless).
+    #[inline(always)]
+    pub fn load_vertices(&mut self, src: &[u32], offset: usize) -> VecI32x16 {
+        self.counters.vector_loads += 1;
+        let mut out = [0i32; LANES];
+        for (o, &x) in out.iter_mut().zip(src[offset..offset + LANES].iter()) {
+            *o = x as i32;
+        }
+        VecI32x16(out)
+    }
+
+    /// Masked load from a `u32` vertex array (peel/remainder chunks).
+    #[inline(always)]
+    pub fn mask_load_vertices(&mut self, mask: Mask16, src: &[u32], offset: usize) -> VecI32x16 {
+        self.counters.masked_loads += 1;
+        let mut out = [0i32; LANES];
+        for (i, o) in out.iter_mut().enumerate() {
+            if mask.test_lane(i) {
+                *o = src[offset + i] as u32 as i32;
+            }
+        }
+        VecI32x16(out)
+    }
+
+    // ---- shared-memory (multi-thread) gather / scatter ---------------------
+    //
+    // Same instructions as above, but against the `AtomicU32`/`AtomicI32`
+    // cells the threaded algorithms share. All accesses are `Relaxed` plain
+    // loads/stores — the *algorithmic* races of the paper are preserved
+    // (whole-word racy stores), only the language-level UB is removed.
+
+    /// Masked gather of bitmap words shared across threads.
+    #[inline(always)]
+    pub fn mask_gather_shared_words(&mut self, mask: Mask16, vindex: VecI32x16, base: &[AtomicU32]) -> VecI32x16 {
+        self.counters.gathers += 1;
+        self.counters.gather_lanes += mask.count() as u64;
+        let mut out = [0i32; LANES];
+        for (i, o) in out.iter_mut().enumerate() {
+            if mask.test_lane(i) {
+                *o = base[vindex.0[i] as usize].load(Ordering::Relaxed) as i32;
+            }
+        }
+        VecI32x16(out)
+    }
+
+    /// Masked scatter of whole bitmap words shared across threads — the
+    /// racy store at the heart of §3.3.2. Highest enabled lane wins on
+    /// intra-vector duplicates; across threads, last store wins. Both kinds
+    /// of lost update are repaired by restoration.
+    #[inline(always)]
+    pub fn mask_scatter_shared_words(&mut self, base: &[AtomicU32], mask: Mask16, vindex: VecI32x16, v: VecI32x16) {
+        self.counters.scatters += 1;
+        let enabled = mask.count();
+        self.counters.scatter_lanes += enabled as u64;
+        let check_conflicts = enabled > 1;
+        for i in 0..LANES {
+            if mask.test_lane(i) {
+                if check_conflicts {
+                    for j in (i + 1)..LANES {
+                        if mask.test_lane(j) && vindex.0[j] == vindex.0[i] {
+                            self.counters.scatter_conflicts += 1;
+                            break;
+                        }
+                    }
+                }
+                base[vindex.0[i] as usize].store(v.0[i] as u32, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Masked gather from a shared `i32` array (predecessors).
+    #[inline(always)]
+    pub fn mask_gather_shared_i32(&mut self, mask: Mask16, vindex: VecI32x16, base: &[AtomicI32]) -> VecI32x16 {
+        self.counters.gathers += 1;
+        self.counters.gather_lanes += mask.count() as u64;
+        let mut out = [0i32; LANES];
+        for (i, o) in out.iter_mut().enumerate() {
+            if mask.test_lane(i) {
+                *o = base[vindex.0[i] as usize].load(Ordering::Relaxed);
+            }
+        }
+        VecI32x16(out)
+    }
+
+    /// Masked scatter into a shared `i32` array (predecessors). Duplicate
+    /// vertex ids within the vector reproduce the benign race of §3.2:
+    /// the highest lane's parent wins.
+    #[inline(always)]
+    pub fn mask_scatter_shared_i32(&mut self, base: &[AtomicI32], mask: Mask16, vindex: VecI32x16, v: VecI32x16) {
+        self.counters.scatters += 1;
+        let enabled = mask.count();
+        self.counters.scatter_lanes += enabled as u64;
+        let check_conflicts = enabled > 1;
+        for i in 0..LANES {
+            if mask.test_lane(i) {
+                if check_conflicts {
+                    for j in (i + 1)..LANES {
+                        if mask.test_lane(j) && vindex.0[j] == vindex.0[i] {
+                            self.counters.scatter_conflicts += 1;
+                            break;
+                        }
+                    }
+                }
+                base[vindex.0[i] as usize].store(v.0[i], Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// `_mm512_mask_reduce_or_epi32` — horizontal OR of the enabled lanes
+    /// (used by the vectorized restoration to rebuild a bitmap word).
+    #[inline(always)]
+    pub fn mask_reduce_or_epi32(&mut self, mask: Mask16, v: VecI32x16) -> i32 {
+        self.counters.mask_ops += 1;
+        let mut acc = 0i32;
+        for i in 0..LANES {
+            if mask.test_lane(i) {
+                acc |= v.0[i];
+            }
+        }
+        acc
+    }
+
+    // ---- prefetch ----------------------------------------------------------
+
+    /// `_mm512_prefetch_i32gather_ps(vindex, base, scale, hint)` — gather
+    /// prefetch; `_MM_HINT_T0` targets L1, `_MM_HINT_T1` targets L2 (§4.2).
+    #[inline(always)]
+    pub fn prefetch_i32gather(&mut self, _vindex: VecI32x16, hint: PrefetchHint) {
+        match hint {
+            PrefetchHint::T0 => self.counters.prefetch_l1 += 1,
+            PrefetchHint::T1 => self.counters.prefetch_l2 += 1,
+        }
+    }
+
+    /// `_mm512_mask_prefetch_i32scatter_ps`.
+    #[inline(always)]
+    pub fn mask_prefetch_i32scatter(&mut self, _mask: Mask16, _vindex: VecI32x16, hint: PrefetchHint) {
+        match hint {
+            PrefetchHint::T0 => self.counters.prefetch_l1 += 1,
+            PrefetchHint::T1 => self.counters.prefetch_l2 += 1,
+        }
+    }
+
+    /// Scalar `_mm_prefetch` (next-iteration rows prefetch, after [14]).
+    #[inline(always)]
+    pub fn prefetch_scalar(&mut self, hint: PrefetchHint) {
+        match hint {
+            PrefetchHint::T0 => self.counters.prefetch_l1 += 1,
+            PrefetchHint::T1 => self.counters.prefetch_l2 += 1,
+        }
+    }
+
+    // ---- chunk accounting ---------------------------------------------------
+
+    /// Record a full 16-lane chunk (used by the explorer's chunk loop).
+    #[inline(always)]
+    pub fn note_full_chunk(&mut self) {
+        self.counters.full_chunks += 1;
+    }
+
+    /// Record `n` peel lanes.
+    #[inline(always)]
+    pub fn note_peel(&mut self, n: usize) {
+        self.counters.peel_lanes += n as u64;
+    }
+
+    /// Record `n` remainder lanes.
+    #[inline(always)]
+    pub fn note_remainder(&mut self, n: usize) {
+        self.counters.remainder_lanes += n as u64;
+    }
+}
+
+/// `_MM_HINT_T0` / `_MM_HINT_T1` (§4.2: prefetch into L1 or L2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefetchHint {
+    T0,
+    T1,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vpu() -> Vpu {
+        Vpu::new()
+    }
+
+    #[test]
+    fn load_and_set1() {
+        let mut v = vpu();
+        let data: Vec<i32> = (0..32).collect();
+        let r = v.load_epi32(&data, 16);
+        assert_eq!(r.0[0], 16);
+        assert_eq!(r.0[15], 31);
+        assert_eq!(v.set1_epi32(9), VecI32x16::splat(9));
+        assert_eq!(v.counters.vector_loads, 1);
+    }
+
+    #[test]
+    fn mask_load_zeroes_disabled_lanes() {
+        let mut v = vpu();
+        let data = [5i32; 20];
+        let r = v.mask_load_epi32(Mask16::first_n(3), &data, 0);
+        assert_eq!(&r.0[..3], &[5, 5, 5]);
+        assert_eq!(&r.0[3..], &[0; 13]);
+    }
+
+    #[test]
+    fn div_rem_word_bit_decomposition() {
+        // The Listing-1 word/bit split: word = v / 32, bit = v % 32.
+        let mut v = vpu();
+        let verts = VecI32x16([0, 1, 31, 32, 33, 63, 64, 95, 96, 100, 127, 128, 200, 255, 256, 1023]);
+        let w = v.div_epi32(verts, VecI32x16::splat(32));
+        let b = v.rem_epi32(verts, VecI32x16::splat(32));
+        for i in 0..LANES {
+            assert_eq!(w.0[i], verts.0[i] / 32);
+            assert_eq!(b.0[i], verts.0[i] % 32);
+            assert_eq!(w.0[i] * 32 + b.0[i], verts.0[i]);
+        }
+    }
+
+    #[test]
+    fn sllv_builds_bit_masks() {
+        let mut v = vpu();
+        let bits = VecI32x16([0, 1, 2, 3, 4, 5, 6, 7, 8, 15, 16, 24, 30, 31, 31, 0]);
+        let m = v.sllv_epi32(VecI32x16::splat(1), bits);
+        for i in 0..LANES {
+            assert_eq!(m.0[i] as u32, 1u32 << bits.0[i]);
+        }
+    }
+
+    #[test]
+    fn test_epi32_mask_matches_and() {
+        let mut v = vpu();
+        let a = VecI32x16([0b0100; LANES]);
+        let mut b = VecI32x16::zero();
+        b.0[2] = 0b0100; // overlap
+        b.0[5] = 0b0011; // no overlap
+        let m = v.test_epi32_mask(a, b);
+        assert!(m.test_lane(2));
+        assert!(!m.test_lane(5));
+        assert_eq!(m.count(), 1);
+    }
+
+    #[test]
+    fn kor_knot_filtering() {
+        // Listing 1: mask = knot(kor(visited, in_queue)) — selects lanes
+        // that are in neither set.
+        let mut v = vpu();
+        let visited = Mask16(0b0000_0000_0000_1111);
+        let queued = Mask16(0b0000_0000_1111_0000);
+        let seen = v.kor(visited, queued);
+        let m = v.knot(seen);
+        assert_eq!(m.0, 0b1111_1111_0000_0000);
+    }
+
+    #[test]
+    fn gather_reads_indexed() {
+        let mut v = vpu();
+        let base: Vec<i32> = (0..100).map(|x| x * 10).collect();
+        let idx = VecI32x16([0, 5, 9, 3, 7, 1, 2, 4, 6, 8, 10, 20, 30, 40, 50, 99]);
+        let r = v.i32gather_epi32(idx, &base);
+        for i in 0..LANES {
+            assert_eq!(r.0[i], idx.0[i] * 10);
+        }
+        assert_eq!(v.counters.gather_lanes, 16);
+    }
+
+    #[test]
+    fn masked_scatter_only_touches_enabled_lanes() {
+        let mut v = vpu();
+        let mut base = vec![0i32; 20];
+        let idx = VecI32x16([0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15]);
+        let vals = VecI32x16::splat(7);
+        v.mask_i32scatter_epi32(&mut base, Mask16(0b101), idx, vals);
+        assert_eq!(base[0], 7);
+        assert_eq!(base[1], 0);
+        assert_eq!(base[2], 7);
+        assert_eq!(v.counters.scatter_lanes, 2);
+        assert_eq!(v.counters.scatter_conflicts, 0);
+    }
+
+    #[test]
+    fn scatter_conflict_highest_lane_wins_and_loses_updates() {
+        // THE core hazard: two lanes write different bit patterns to the
+        // same bitmap word; the lower lane's bits are lost.
+        let mut v = vpu();
+        let mut words = vec![0u32; 4];
+        let mut idx = VecI32x16::zero();
+        let mut vals = VecI32x16::zero();
+        // lane 3 and lane 11 both target word 2 with different single bits
+        idx.0[3] = 2;
+        vals.0[3] = 1 << 5; // vertex 69
+        idx.0[11] = 2;
+        vals.0[11] = 1 << 9; // vertex 73
+        let mask = Mask16((1 << 3) | (1 << 11));
+        v.mask_i32scatter_words(&mut words, mask, idx, vals);
+        // highest lane (11) wins; bit 5 from lane 3 is LOST
+        assert_eq!(words[2], 1 << 9);
+        assert_eq!(v.counters.scatter_conflicts, 1);
+    }
+
+    #[test]
+    fn mask_or_passes_src_through() {
+        let mut v = vpu();
+        let src = VecI32x16::splat(-1);
+        let a = VecI32x16::splat(0b01);
+        let b = VecI32x16::splat(0b10);
+        let r = v.mask_or_epi32(src, Mask16::first_n(4), a, b);
+        assert_eq!(&r.0[..4], &[0b11; 4]);
+        assert_eq!(&r.0[4..], &[-1; 12]);
+    }
+
+    #[test]
+    fn prefetch_counters() {
+        let mut v = vpu();
+        v.prefetch_i32gather(VecI32x16::zero(), PrefetchHint::T0);
+        v.mask_prefetch_i32scatter(Mask16::ALL, VecI32x16::zero(), PrefetchHint::T0);
+        v.prefetch_scalar(PrefetchHint::T1);
+        assert_eq!(v.counters.prefetch_l1, 2);
+        assert_eq!(v.counters.prefetch_l2, 1);
+    }
+
+    #[test]
+    fn cmplt_mask() {
+        let mut v = vpu();
+        let mut a = VecI32x16::splat(5);
+        a.0[0] = -3;
+        a.0[7] = -1;
+        let m = v.cmplt_epi32_mask(a, VecI32x16::zero());
+        assert_eq!(m.0, (1 << 0) | (1 << 7));
+    }
+
+    #[test]
+    fn srlv_shifts_right() {
+        let mut v = vpu();
+        let a = VecI32x16::splat(0b1100);
+        let r = v.srlv_epi32(a, VecI32x16::splat(2));
+        assert_eq!(r, VecI32x16::splat(0b11));
+    }
+}

@@ -1,0 +1,133 @@
+//! The VPU register types: a 512-bit vector register holding 16 × 32-bit
+//! integer lanes (`__m512i` in the paper's Listing 1) and a 16-bit mask
+//! register (`__mmask16`).
+
+/// Lanes per 512-bit register at 32-bit element width (§2: "16 (32-bit)
+/// operations at a time").
+pub const LANES: usize = 16;
+
+/// A `__m512i` holding 16 × i32.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct VecI32x16(pub [i32; LANES]);
+
+impl VecI32x16 {
+    /// All-zero register.
+    pub fn zero() -> Self {
+        VecI32x16([0; LANES])
+    }
+
+    /// Broadcast (`_mm512_set1_epi32`).
+    pub fn splat(x: i32) -> Self {
+        VecI32x16([x; LANES])
+    }
+
+    /// Lane accessor.
+    #[inline(always)]
+    pub fn lane(&self, i: usize) -> i32 {
+        self.0[i]
+    }
+
+    /// Lanewise map helper used by the intrinsic implementations.
+    #[inline(always)]
+    pub fn map(&self, f: impl Fn(i32) -> i32) -> Self {
+        let mut out = [0i32; LANES];
+        for (o, &x) in out.iter_mut().zip(self.0.iter()) {
+            *o = f(x);
+        }
+        VecI32x16(out)
+    }
+
+    /// Lanewise zip-map helper.
+    #[inline(always)]
+    pub fn zip(&self, other: &Self, f: impl Fn(i32, i32) -> i32) -> Self {
+        let mut out = [0i32; LANES];
+        for i in 0..LANES {
+            out[i] = f(self.0[i], other.0[i]);
+        }
+        VecI32x16(out)
+    }
+
+    pub fn to_array(self) -> [i32; LANES] {
+        self.0
+    }
+}
+
+impl std::fmt::Debug for VecI32x16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "VecI32x16({:?})", self.0)
+    }
+}
+
+/// A `__mmask16`: bit *i* steers lane *i*. Masked instructions update only
+/// lanes whose bit is 1; the rest pass through unchanged (§2).
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct Mask16(pub u16);
+
+impl Mask16 {
+    pub const ALL: Mask16 = Mask16(0xFFFF);
+    pub const NONE: Mask16 = Mask16(0);
+
+    /// Mask with the low `n` lanes enabled — how the paper handles peel and
+    /// remainder (less-than-full-vector) chunks, §4.2.
+    pub fn first_n(n: usize) -> Self {
+        debug_assert!(n <= LANES);
+        if n >= LANES {
+            Mask16::ALL
+        } else {
+            Mask16(((1u32 << n) - 1) as u16)
+        }
+    }
+
+    #[inline(always)]
+    pub fn test_lane(&self, i: usize) -> bool {
+        (self.0 >> i) & 1 == 1
+    }
+
+    /// Number of enabled lanes.
+    #[inline(always)]
+    pub fn count(&self) -> u32 {
+        self.0.count_ones()
+    }
+
+    #[inline(always)]
+    pub fn is_empty(&self) -> bool {
+        self.0 == 0
+    }
+}
+
+impl std::fmt::Debug for Mask16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mask16({:#018b})", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splat_and_lane() {
+        let v = VecI32x16::splat(7);
+        for i in 0..LANES {
+            assert_eq!(v.lane(i), 7);
+        }
+    }
+
+    #[test]
+    fn zip_adds() {
+        let a = VecI32x16([1; LANES]);
+        let b = VecI32x16::splat(2);
+        assert_eq!(a.zip(&b, |x, y| x + y), VecI32x16::splat(3));
+    }
+
+    #[test]
+    fn mask_first_n() {
+        assert_eq!(Mask16::first_n(0), Mask16::NONE);
+        assert_eq!(Mask16::first_n(16), Mask16::ALL);
+        let m = Mask16::first_n(5);
+        assert_eq!(m.0, 0b11111);
+        assert!(m.test_lane(4));
+        assert!(!m.test_lane(5));
+        assert_eq!(m.count(), 5);
+    }
+}

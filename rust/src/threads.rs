@@ -1,0 +1,136 @@
+//! A small OpenMP-like parallel-for layer over `std::thread::scope`.
+//!
+//! The paper parallelizes the outer (input-list) loop with OpenMP threads
+//! (§3.2) and relies on dynamic scheduling to fight the workload imbalance
+//! caused by RMAT's skewed degrees (§6.1). rayon is not in the offline
+//! registry, so this module provides the two schedules the reproduction
+//! needs:
+//!
+//! * [`parallel_for_static`] — OpenMP `schedule(static)`: contiguous
+//!   partition of the index space, one slice per thread.
+//! * [`parallel_for_dynamic`] — OpenMP `schedule(dynamic, grain)`: threads
+//!   pull fixed-size chunks from a shared atomic cursor.
+//!
+//! Both hand each worker a thread id so callers can keep per-thread state
+//! (a [`crate::simd::ops::Vpu`], counters, output buffers) without sharing.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Run `body(thread_id, start..end)` over a static partition of `0..n`.
+/// Returns one `R` per thread (index = thread id).
+pub fn parallel_for_static<R, F>(num_threads: usize, n: usize, body: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, std::ops::Range<usize>) -> R + Sync,
+{
+    let t = num_threads.max(1);
+    // ceil-split so early threads take the slack, like OpenMP static.
+    let chunk = n.div_ceil(t.max(1)).max(1);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..t)
+            .map(|tid| {
+                let body = &body;
+                s.spawn(move || {
+                    let start = (tid * chunk).min(n);
+                    let end = ((tid + 1) * chunk).min(n);
+                    body(tid, start..end)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+/// Run `body(thread_id, start..end)` with dynamic chunk scheduling: workers
+/// repeatedly claim `grain`-sized chunks of `0..n` until exhausted. Returns
+/// one `R` per thread.
+pub fn parallel_for_dynamic<R, F>(num_threads: usize, n: usize, grain: usize, body: F) -> Vec<R>
+where
+    R: Send + Default,
+    F: Fn(usize, std::ops::Range<usize>, &mut R) + Sync,
+{
+    let t = num_threads.max(1);
+    let grain = grain.max(1);
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..t)
+            .map(|tid| {
+                let body = &body;
+                let cursor = &cursor;
+                s.spawn(move || {
+                    let mut acc = R::default();
+                    loop {
+                        let start = cursor.fetch_add(grain, Ordering::Relaxed);
+                        if start >= n {
+                            break;
+                        }
+                        let end = (start + grain).min(n);
+                        body(tid, start..end, &mut acc);
+                    }
+                    acc
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn static_covers_all_indices_once() {
+        let hits: Vec<AtomicU64> = (0..103).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_static(4, 103, |_tid, range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn dynamic_covers_all_indices_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_dynamic(8, 1000, 7, |_tid, range, _acc: &mut ()| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn static_returns_per_thread_results() {
+        let sums = parallel_for_static(3, 30, |_tid, range| range.sum::<usize>());
+        assert_eq!(sums.len(), 3);
+        assert_eq!(sums.iter().sum::<usize>(), (0..30).sum::<usize>());
+    }
+
+    #[test]
+    fn dynamic_accumulates_per_thread() {
+        let sums: Vec<usize> = parallel_for_dynamic(3, 100, 9, |_tid, range, acc| {
+            *acc += range.sum::<usize>();
+        });
+        assert_eq!(sums.iter().sum::<usize>(), (0..100).sum::<usize>());
+    }
+
+    #[test]
+    fn zero_items_is_fine() {
+        let r = parallel_for_static(4, 0, |_t, range| range.len());
+        assert_eq!(r.iter().sum::<usize>(), 0);
+        let r: Vec<usize> = parallel_for_dynamic(4, 0, 16, |_t, _range, _a| unreachable!());
+        assert_eq!(r.iter().sum::<usize>(), 0);
+    }
+
+    #[test]
+    fn single_thread_degenerates_to_serial() {
+        let r = parallel_for_static(1, 10, |tid, range| {
+            assert_eq!(tid, 0);
+            range.collect::<Vec<_>>()
+        });
+        assert_eq!(r[0], (0..10).collect::<Vec<_>>());
+    }
+}

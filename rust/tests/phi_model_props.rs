@@ -1,0 +1,155 @@
+//! Property tests over the Xeon Phi performance model: physical-sanity
+//! invariants that must hold for *any* workload, not just the calibrated
+//! SCALE-20 anchor.
+
+use phi_bfs::phi::affinity::{Affinity, CoreMap};
+use phi_bfs::phi::cost::CostParams;
+use phi_bfs::phi::sim::{predict, predict_with_helpers};
+use phi_bfs::phi::{KncParams, WorkTrace};
+use phi_bfs::prop::{forall, Gen};
+
+fn random_trace(g: &mut Gen) -> WorkTrace {
+    let scale = g.size(12, 22) as u32;
+    let n = 1usize << scale;
+    let layers = g.size(1, 9);
+    let mut profile = Vec::new();
+    let mut input = 1usize;
+    for _ in 0..layers {
+        let degree = g.size(1, 200);
+        let edges = input * degree;
+        let traversed = g.size(0, (edges / 2).max(1)).min(n / 2);
+        profile.push((input, edges, traversed));
+        input = traversed.max(1);
+    }
+    if g.bool(0.5) {
+        WorkTrace::synthesize_simd(n, &profile, g.bool(0.8), g.bool(0.8))
+    } else {
+        WorkTrace::synthesize_scalar(n, &profile)
+    }
+}
+
+#[test]
+fn prop_positive_finite_predictions() {
+    forall("predictions are positive and finite", 60, |g| {
+        let knc = KncParams::default();
+        let cp = CostParams::default();
+        let trace = random_trace(g);
+        let threads = g.size(1, 240);
+        let k = g.size(1, 4);
+        let aff = *g.choose(&[
+            Affinity::Balanced,
+            Affinity::Scatter,
+            Affinity::Compact,
+            Affinity::Manual(k),
+        ]);
+        let p = predict(&knc, &cp, &trace, threads, aff);
+        assert!(p.seconds.is_finite() && p.seconds > 0.0, "{p:?}");
+        assert!(p.teps.is_finite() && p.teps >= 0.0);
+        assert_eq!(p.layers.len(), trace.layers.len());
+    });
+}
+
+#[test]
+fn prop_monotone_in_threads_within_clean_region() {
+    // more balanced threads never hurt (until the OS core is invaded)
+    forall("TEPS monotone in thread count", 30, |g| {
+        let knc = KncParams::default();
+        let cp = CostParams::default();
+        let trace = random_trace(g);
+        let mut last = 0.0f64;
+        for &t in &[1usize, 30, 59, 118, 177, 236] {
+            let p = predict(&knc, &cp, &trace, t, Affinity::Balanced);
+            assert!(
+                p.teps >= last * 0.999,
+                "TEPS fell from {last:.3e} to {:.3e} at {t} threads",
+                p.teps
+            );
+            last = p.teps;
+        }
+    });
+}
+
+#[test]
+fn prop_os_core_invasion_always_hurts() {
+    forall("240 threads slower than 236", 20, |g| {
+        let knc = KncParams::default();
+        let cp = CostParams::default();
+        let trace = random_trace(g);
+        let clean = predict(&knc, &cp, &trace, 236, Affinity::Balanced);
+        let dirty = predict(&knc, &cp, &trace, 240, Affinity::Balanced);
+        assert!(dirty.teps < clean.teps, "clean {:.3e} dirty {:.3e}", clean.teps, dirty.teps);
+    });
+}
+
+#[test]
+fn prop_affinity_placement_conservation() {
+    // placements always map every thread exactly once, and manual
+    // placement uses ceil(T/k) cores
+    forall("core maps conserve threads", 100, |g| {
+        let knc = KncParams::default();
+        let t = g.size(1, 240);
+        for aff in [Affinity::Balanced, Affinity::Scatter, Affinity::Compact] {
+            let m = CoreMap::place(&knc, t, aff);
+            assert_eq!(m.threads_on.iter().sum::<usize>(), t, "{aff:?}");
+            assert!(m.max_threads_per_core() <= knc.smt);
+        }
+        let k = g.size(1, 4);
+        let m = CoreMap::place(&knc, t, Affinity::Manual(k));
+        assert_eq!(m.threads_on.iter().sum::<usize>(), t);
+    });
+}
+
+#[test]
+fn prop_balanced_spreads_evenly() {
+    forall("balanced per-core counts differ by ≤1", 60, |g| {
+        let knc = KncParams::default();
+        let t = g.size(1, 236);
+        let m = CoreMap::place(&knc, t, Affinity::Balanced);
+        let used: Vec<usize> =
+            m.threads_on.iter().copied().filter(|&x| x > 0).collect();
+        let min = used.iter().copied().min().unwrap();
+        let max = used.iter().copied().max().unwrap();
+        assert!(max - min <= 1, "t={t}: min {min} max {max}");
+    });
+}
+
+#[test]
+fn prop_helpers_never_hurt_at_partial_population() {
+    forall("helper threads are never harmful", 30, |g| {
+        let knc = KncParams::default();
+        let cp = CostParams::default();
+        let trace = random_trace(g);
+        let workers = g.size(30, 118);
+        let base = predict_with_helpers(&knc, &cp, &trace, workers, 0, Affinity::Balanced);
+        let h = g.size(1, 2);
+        let helped = predict_with_helpers(&knc, &cp, &trace, workers, h, Affinity::Balanced);
+        assert!(
+            helped.teps >= base.teps * 0.999,
+            "helpers hurt: {:.3e} -> {:.3e}",
+            base.teps,
+            helped.teps
+        );
+    });
+}
+
+#[test]
+fn prop_more_work_takes_longer() {
+    // doubling every layer's edge volume must not reduce predicted time
+    forall("time monotone in work", 30, |g| {
+        let knc = KncParams::default();
+        let cp = CostParams::default();
+        let scale = g.size(14, 20) as u32;
+        let n = 1usize << scale;
+        let input = g.size(10, 2000);
+        // keep mean degree ≥ 16 so both traces stay in the vectorized
+        // regime (dropping below flips the layer to the scalar path, whose
+        // different per-edge cost makes the comparison apples-to-oranges)
+        let edges = input * g.size(16, 100);
+        let small = WorkTrace::synthesize_simd(n, &[(input, edges, edges / 4)], true, true);
+        let large = WorkTrace::synthesize_simd(n, &[(input, edges * 2, edges / 2)], true, true);
+        let t = g.size(1, 236);
+        let ps = predict(&knc, &cp, &small, t, Affinity::Balanced);
+        let pl = predict(&knc, &cp, &large, t, Affinity::Balanced);
+        assert!(pl.seconds > ps.seconds * 0.999, "{} vs {}", pl.seconds, ps.seconds);
+    });
+}

@@ -1,0 +1,151 @@
+//! Integration tests over the PJRT runtime: the AOT artifacts produced by
+//! `make artifacts` loaded and executed from Rust, cross-checked against
+//! the native emulated-VPU implementation.
+//!
+//! These tests require `artifacts/manifest.txt`; they are skipped (with a
+//! loud message) if artifacts have not been built, so `cargo test` still
+//! passes in a fresh checkout — the Makefile's `test` target builds
+//! artifacts first.
+
+use phi_bfs::bfs::policy::LayerPolicy;
+use phi_bfs::bfs::serial::SerialLayeredBfs;
+use phi_bfs::bfs::validate::validate;
+use phi_bfs::bfs::vectorized::{SimdOpts, VectorizedBfs};
+use phi_bfs::bfs::BfsAlgorithm;
+use phi_bfs::graph::{Csr, EdgeList, RmatConfig};
+use phi_bfs::runtime::bfs::PjrtBfs;
+use phi_bfs::runtime::engine::LayerStepArgs;
+use phi_bfs::runtime::{ArtifactManifest, PjrtEngine};
+use phi_bfs::PRED_INFINITY;
+
+fn artifacts() -> Option<ArtifactManifest> {
+    match ArtifactManifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIPPING pjrt integration test (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_buckets_load_and_compile() {
+    let Some(m) = artifacts() else { return };
+    let mut engine = PjrtEngine::new(m).expect("cpu client");
+    assert_eq!(engine.platform(), "cpu");
+    let spec = engine.manifest().specs[0].clone();
+    engine.executable(&spec).expect("compile smallest bucket");
+}
+
+#[test]
+fn single_layer_step_matches_expected_bits() {
+    let Some(m) = artifacts() else { return };
+    let spec = m.specs[0].clone(); // n=1024 bucket
+    let mut engine = PjrtEngine::new(m).unwrap();
+
+    // one chunk: root 3 discovers vertices 10, 11, 40
+    let mut neigh = vec![-1i32; spec.lanes_per_call()];
+    let mut parents = vec![-1i32; spec.lanes_per_call()];
+    for (i, v) in [10i32, 11, 40].into_iter().enumerate() {
+        neigh[i] = v;
+        parents[i] = 3;
+    }
+    let mut vis = vec![0i32; spec.words];
+    vis[0] = 1 << 3; // root visited
+    let args = LayerStepArgs {
+        neigh,
+        parents,
+        vis_words: vis,
+        out_words: vec![0i32; spec.words],
+        pred: vec![PRED_INFINITY; spec.n],
+    };
+    let r = engine.layer_step(&spec, &args).unwrap();
+    assert_eq!(r.out_words[0] as u32, (1 << 10) | (1 << 11));
+    assert_eq!(r.out_words[1] as u32, 1 << 8); // vertex 40
+    assert_eq!(r.vis_words[0] as u32, (1 << 3) | (1 << 10) | (1 << 11));
+    assert_eq!(r.pred[10], 3);
+    assert_eq!(r.pred[11], 3);
+    assert_eq!(r.pred[40], 3);
+    assert_eq!(r.pred[9], PRED_INFINITY);
+}
+
+#[test]
+fn layer_step_filters_visited() {
+    let Some(m) = artifacts() else { return };
+    let spec = m.specs[0].clone();
+    let mut engine = PjrtEngine::new(m).unwrap();
+    let mut neigh = vec![-1i32; spec.lanes_per_call()];
+    let mut parents = vec![-1i32; spec.lanes_per_call()];
+    neigh[0] = 5;
+    parents[0] = 1;
+    neigh[1] = 6;
+    parents[1] = 1;
+    let mut vis = vec![0i32; spec.words];
+    vis[0] = 1 << 5; // 5 already visited
+    let mut pred = vec![PRED_INFINITY; spec.n];
+    pred[5] = 9;
+    let r = engine
+        .layer_step(&spec, &LayerStepArgs {
+            neigh,
+            parents,
+            vis_words: vis,
+            out_words: vec![0i32; spec.words],
+            pred,
+        })
+        .unwrap();
+    assert_eq!(r.out_words[0] as u32, 1 << 6, "only vertex 6 discovered");
+    assert_eq!(r.pred[5], 9, "visited vertex untouched");
+    assert_eq!(r.pred[6], 1);
+}
+
+#[test]
+fn pjrt_bfs_matches_serial_and_validates() {
+    let Some(_) = artifacts() else { return };
+    let el = RmatConfig::graph500(9, 8).generate(17);
+    let g = Csr::from_edge_list(9, &el);
+    let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
+
+    let engine = PjrtBfs::from_dir("artifacts").unwrap();
+    let pjrt = engine.run_checked(&g, root).unwrap();
+    let serial = SerialLayeredBfs.run(&g, root);
+    assert_eq!(
+        pjrt.tree.distances().unwrap(),
+        serial.tree.distances().unwrap(),
+        "pjrt vs serial distance maps"
+    );
+    let report = validate(&g, &pjrt.tree);
+    assert!(report.all_passed(), "{}", report.summary());
+}
+
+#[test]
+fn pjrt_bfs_bit_identical_to_emulated_vpu() {
+    // Same chunk packing + same conflict semantics ⇒ the PJRT kernel and
+    // the Rust emulated-VPU explorer must produce identical *predecessor*
+    // arrays when run single-threaded with the same layer policy.
+    let Some(_) = artifacts() else { return };
+    let el = EdgeList::with_edges(
+        64,
+        (1..40).map(|i| (0u32, i)).chain((40..64).map(|i| (1u32, i))).collect(),
+    );
+    let g = Csr::from_edge_list(6, &el);
+    let engine = PjrtBfs::from_dir("artifacts").unwrap();
+    let pjrt = engine.run_checked(&g, 0).unwrap();
+    let native = VectorizedBfs {
+        num_threads: 1,
+        opts: SimdOpts::full(),
+        policy: LayerPolicy::All,
+    }
+    .run(&g, 0);
+    assert_eq!(pjrt.tree.pred, native.tree.pred, "bit-identical predecessor arrays");
+}
+
+#[test]
+fn oversized_graph_is_rejected() {
+    let Some(m) = artifacts() else { return };
+    let max_n = m.specs.iter().map(|s| s.n).max().unwrap();
+    let el = EdgeList::with_edges(max_n * 2, vec![(0, 1)]);
+    let g = Csr::from_edge_list(0, &el);
+    let engine = PjrtBfs::new(PjrtEngine::new(m).unwrap());
+    let err = engine.run_checked(&g, 0).unwrap_err();
+    assert!(err.to_string().contains("no artifact bucket"), "{err:#}");
+}

@@ -1,0 +1,257 @@
+//! Property-based integration tests over the whole algorithm ladder,
+//! using the in-crate prop kit (proptest is not available offline).
+//!
+//! Invariants enforced:
+//! * every algorithm produces the same distance map as the serial oracle
+//!   on arbitrary (dirty) edge lists and RMAT graphs;
+//! * every tree passes the Graph500 five-check validator;
+//! * the restoration process repairs arbitrary injected corruption;
+//! * CSR construction round-trips arbitrary edge lists;
+//! * bitmap word/bit views agree under arbitrary operation sequences.
+
+use phi_bfs::bfs::bitrace_free::{restore_layer, BitRaceFreeBfs};
+use phi_bfs::bfs::parallel::ParallelBfs;
+use phi_bfs::bfs::policy::LayerPolicy;
+use phi_bfs::bfs::serial::{SerialLayeredBfs, SerialQueueBfs};
+use phi_bfs::bfs::state::{SharedBitmap, SharedPred};
+use phi_bfs::bfs::validate::validate;
+use phi_bfs::bfs::vectorized::{restore_layer_simd, SimdOpts, VectorizedBfs};
+use phi_bfs::bfs::BfsAlgorithm;
+use phi_bfs::graph::{Bitmap, Csr, EdgeList, RmatConfig};
+use phi_bfs::prop::{forall, Gen};
+use phi_bfs::{Pred, Vertex, PRED_INFINITY};
+
+fn random_graph(g: &mut Gen) -> Csr {
+    let n = g.size(2, 400);
+    let m = g.size(0, 1200);
+    let el = EdgeList::with_edges(n, g.edges(n, m));
+    Csr::from_edge_list(0, &el)
+}
+
+fn ladder(g: &mut Gen) -> Vec<Box<dyn BfsAlgorithm>> {
+    let threads = g.size(1, 4);
+    vec![
+        Box::new(SerialQueueBfs),
+        Box::new(ParallelBfs { num_threads: threads }),
+        Box::new(BitRaceFreeBfs { num_threads: threads }),
+        Box::new(VectorizedBfs {
+            num_threads: threads,
+            opts: *g.choose(&[SimdOpts::none(), SimdOpts::aligned_masks(), SimdOpts::full()]),
+            policy: *g.choose(&[LayerPolicy::All, LayerPolicy::FirstK(2), LayerPolicy::heavy()]),
+        }),
+    ]
+}
+
+#[test]
+fn prop_all_algorithms_agree_on_distances() {
+    forall("distance agreement on arbitrary graphs", 60, |g| {
+        let csr = random_graph(g);
+        let root = g.size(0, csr.num_vertices() - 1) as Vertex;
+        let reference = SerialLayeredBfs.run(&csr, root);
+        let expected = reference.tree.distances().unwrap();
+        for alg in ladder(g) {
+            let r = alg.run(&csr, root);
+            assert_eq!(
+                r.tree.distances().unwrap(),
+                expected,
+                "{} differs from serial (n={}, root={root})",
+                alg.name(),
+                csr.num_vertices()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_all_trees_validate() {
+    forall("five-check validation on arbitrary graphs", 40, |g| {
+        let csr = random_graph(g);
+        let root = g.size(0, csr.num_vertices() - 1) as Vertex;
+        for alg in ladder(g) {
+            let r = alg.run(&csr, root);
+            let report = validate(&csr, &r.tree);
+            assert!(report.all_passed(), "{}: {}", alg.name(), report.summary());
+        }
+    });
+}
+
+#[test]
+fn prop_rmat_distance_agreement() {
+    forall("distance agreement on RMAT", 10, |g| {
+        let scale = g.size(8, 10) as u32;
+        let el = RmatConfig::graph500(scale, 8).generate(g.size(0, 1 << 20) as u64);
+        let csr = Csr::from_edge_list(scale, &el);
+        let root = g.size(0, csr.num_vertices() - 1) as Vertex;
+        let expected = SerialLayeredBfs.run(&csr, root).tree.distances().unwrap();
+        for alg in ladder(g) {
+            assert_eq!(alg.run(&csr, root).tree.distances().unwrap(), expected, "{}", alg.name());
+        }
+    });
+}
+
+#[test]
+fn prop_restoration_repairs_arbitrary_corruption() {
+    // Failure injection: arbitrary sets of journalled vertices, arbitrary
+    // subsets of their bits lost — both restoration implementations must
+    // produce the identical, fully-repaired state.
+    forall("restoration repairs injected corruption", 80, |g| {
+        let n = g.size(33, 513);
+        let nodes = n as Pred;
+        let journalled: Vec<Vertex> = {
+            let k = g.size(1, 40.min(n - 1));
+            let mut vs: Vec<Vertex> =
+                (0..k).map(|_| g.size(0, n - 1) as Vertex).collect();
+            vs.sort_unstable();
+            vs.dedup();
+            vs
+        };
+        let build = |g: &mut Gen, lost: &[bool]| {
+            let out = SharedBitmap::new(n);
+            let vis = SharedBitmap::new(n);
+            let pred = SharedPred::new_infinity(n);
+            for (i, &v) in journalled.iter().enumerate() {
+                let parent = g.size(0, n - 1) as Pred;
+                pred.set(v, parent - nodes);
+                let w = (v / 32) as usize;
+                if lost[i] {
+                    // bit lost: ensure the word is still non-zero (the
+                    // clobbering writer set its own bit) — set a sibling
+                    out.or_word_atomic(w, 1 << ((v + 1) % 32));
+                } else {
+                    out.or_word_atomic(w, 1 << (v % 32));
+                }
+            }
+            (out, vis, pred)
+        };
+        let lost: Vec<bool> = journalled.iter().map(|_| g.bool(0.5)).collect();
+        // deterministic parents for both builds: reuse one seeded sub-gen
+        // by building twice from the same case data
+        let parents: Vec<Pred> = journalled.iter().map(|_| g.size(0, n - 1) as Pred).collect();
+        let build2 = |lost: &[bool]| {
+            let out = SharedBitmap::new(n);
+            let vis = SharedBitmap::new(n);
+            let pred = SharedPred::new_infinity(n);
+            for (i, &v) in journalled.iter().enumerate() {
+                pred.set(v, parents[i] - nodes);
+                let w = (v / 32) as usize;
+                if lost[i] {
+                    out.or_word_atomic(w, 1 << ((v + 1) % 32));
+                } else {
+                    out.or_word_atomic(w, 1 << (v % 32));
+                }
+            }
+            (out, vis, pred)
+        };
+        let _ = build; // the closure kept for doc purposes
+        let (o1, v1, p1) = build2(&lost);
+        restore_layer(g.size(1, 3), &o1, &v1, &p1, nodes);
+        let (o2, v2, p2) = build2(&lost);
+        restore_layer_simd(g.size(1, 3), &o2, &v2, &p2, nodes);
+
+        // identical output from scalar and vectorized restoration
+        assert_eq!(o1.snapshot().words(), o2.snapshot().words());
+        assert_eq!(v1.snapshot().words(), v2.snapshot().words());
+        assert_eq!(p1.snapshot(), p2.snapshot());
+        // every journalled vertex fully repaired
+        for (i, &v) in journalled.iter().enumerate() {
+            assert!(o1.test_bit(v), "out bit missing for {v}");
+            assert!(v1.test_bit(v), "vis bit missing for {v}");
+            assert_eq!(p1.get(v), parents[i], "pred not normalized for {v}");
+        }
+    });
+}
+
+#[test]
+fn prop_csr_roundtrip() {
+    forall("CSR round-trips edge lists", 100, |g| {
+        let n = g.size(1, 200);
+        let m = g.size(0, 600);
+        let edges = g.edges(n, m);
+        let el = EdgeList::with_edges(n, edges.clone());
+        let csr = Csr::from_edge_list(0, &el);
+        // every non-loop tuple appears in both adjacencies
+        for &(a, b) in &edges {
+            if a != b {
+                assert!(csr.neighbors(a).contains(&b));
+                assert!(csr.neighbors(b).contains(&a));
+            }
+        }
+        // degree sum == directed edge count == 2 × non-loop tuples
+        let degsum: usize = (0..n).map(|v| csr.degree(v as Vertex)).sum();
+        let nonloop = edges.iter().filter(|&&(a, b)| a != b).count();
+        assert_eq!(degsum, 2 * nonloop);
+        assert_eq!(csr.num_directed_edges(), 2 * nonloop);
+    });
+}
+
+#[test]
+fn prop_bitmap_matches_model() {
+    // bitmap vs a Vec<bool> model under arbitrary op sequences
+    forall("bitmap equals boolean-vector model", 100, |g| {
+        let n = g.size(1, 300);
+        let mut bm = Bitmap::new(n);
+        let mut model = vec![false; n];
+        for _ in 0..g.size(0, 200) {
+            let v = g.size(0, n - 1) as Vertex;
+            if g.bool(0.7) {
+                bm.set_bit(v);
+                model[v as usize] = true;
+            } else {
+                bm.clear_bit(v);
+                model[v as usize] = false;
+            }
+        }
+        assert_eq!(bm.count_ones(), model.iter().filter(|&&b| b).count());
+        for v in 0..n {
+            assert_eq!(bm.test_bit(v as Vertex), model[v]);
+        }
+        let from_iter: Vec<Vertex> = bm.iter_set_bits().collect();
+        let from_model: Vec<Vertex> =
+            (0..n).filter(|&v| model[v]).map(|v| v as Vertex).collect();
+        assert_eq!(from_iter, from_model);
+    });
+}
+
+#[test]
+fn prop_reached_count_consistent() {
+    forall("reached count equals distance-map count", 50, |g| {
+        let csr = random_graph(g);
+        let root = g.size(0, csr.num_vertices() - 1) as Vertex;
+        let r = VectorizedBfs {
+            num_threads: 2,
+            opts: SimdOpts::full(),
+            policy: LayerPolicy::All,
+        }
+        .run(&csr, root);
+        let d = r.tree.distances().unwrap();
+        let by_dist = d.iter().filter(|&&x| x != u32::MAX).count();
+        assert_eq!(r.tree.reached_count(), by_dist);
+        // traversed totals agree with the tree
+        assert_eq!(r.trace.total_traversed() + 1, by_dist);
+    });
+}
+
+#[test]
+fn prop_no_negative_predecessors_survive() {
+    forall("restoration normalizes every journal entry", 40, |g| {
+        let csr = random_graph(g);
+        let root = g.size(0, csr.num_vertices() - 1) as Vertex;
+        for alg in [
+            Box::new(BitRaceFreeBfs { num_threads: 3 }) as Box<dyn BfsAlgorithm>,
+            Box::new(VectorizedBfs {
+                num_threads: 3,
+                opts: SimdOpts::full(),
+                policy: LayerPolicy::All,
+            }),
+        ] {
+            let r = alg.run(&csr, root);
+            for (v, &p) in r.tree.pred.iter().enumerate() {
+                assert!(
+                    p == PRED_INFINITY || p >= 0,
+                    "{}: pred[{v}] = {p} still marked",
+                    alg.name()
+                );
+            }
+        }
+    });
+}
