@@ -7,13 +7,19 @@
 //!    top-down vs hybrid (scalar and vectorized bottom-up).
 //! 3. **§6.2 helper threads** — workers-only vs workers+prefetch-helper
 //!    contexts on the modelled Phi.
+//! 4. **SELL-16-σ lane occupancy** — mean active VPU lanes per explore
+//!    issue, per-vertex chunking (`simd`) vs lane packing (`sell`), on the
+//!    same skewed RMAT traversal.
 
 use phi_bfs::benchkit::{env_param, section, Bench};
 use phi_bfs::bfs::bottom_up::HybridBfs;
 use phi_bfs::bfs::policy::LayerPolicy;
+use phi_bfs::bfs::sell_vectorized::SellBfs;
 use phi_bfs::bfs::serial::SerialLayeredBfs;
 use phi_bfs::bfs::vectorized::{SimdOpts, VectorizedBfs};
 use phi_bfs::bfs::BfsAlgorithm;
+use phi_bfs::graph::sell::Sell16;
+use phi_bfs::graph::stats::SellOccupancy;
 use phi_bfs::graph::{Csr, RmatConfig};
 use phi_bfs::harness::report::{mteps, Table};
 use phi_bfs::phi::cost::CostParams;
@@ -77,4 +83,79 @@ fn main() {
     print!("{}", t.render());
     println!("(the paper's future-work claim: spare contexts as prefetch helpers can");
     println!(" recover part of the full-population throughput at lower occupancy)");
+
+    section(&format!("Ablation 4 — SELL-16-σ lane occupancy (SCALE {scale})"));
+    let layout = Sell16::from_csr(&g, 256);
+    let occ = SellOccupancy::compute(&layout);
+    println!(
+        "layout: {} chunks, {} rows, fill {:.1}% ({} padded lanes)",
+        occ.chunks,
+        occ.rows,
+        100.0 * occ.fill,
+        occ.padded_lanes()
+    );
+    println!("(policy All for both engines: same layers vectorized, chunking is the variable;");
+    println!(" sell host time includes its per-run Sell16 layout construction)");
+    let mut t = Table::new(&[
+        "engine",
+        "explore issues",
+        "mean lanes/issue",
+        "host time",
+        "Phi MTEPS@118",
+    ]);
+    let simd_alg =
+        VectorizedBfs { num_threads: 1, opts: SimdOpts::full(), policy: LayerPolicy::All };
+    let sell_alg = SellBfs { num_threads: 1, ..Default::default() };
+    let mut occupancies = Vec::new();
+    {
+        let r = simd_alg.run(&g, root);
+        let m = bench.run("simd (per-vertex chunking)", || simd_alg.run(&g, root));
+        let c = r.trace.vpu_totals();
+        let p = predict(
+            &knc,
+            &cp,
+            &WorkTrace::from_run(g.num_vertices(), &r.trace),
+            118,
+            Affinity::Balanced,
+        );
+        occupancies.push(c.mean_lanes_active());
+        t.row(&[
+            "simd (per-vertex)".into(),
+            c.explore_issues.to_string(),
+            format!("{:.2}", c.mean_lanes_active()),
+            format!("{:.2?}", m.mean),
+            mteps(p.teps),
+        ]);
+    }
+    {
+        let r = sell_alg.run(&g, root);
+        let m = bench.run("sell (lane-packed)", || sell_alg.run(&g, root));
+        let c = r.trace.vpu_totals();
+        let p = predict(
+            &knc,
+            &cp,
+            &WorkTrace::from_run(g.num_vertices(), &r.trace),
+            118,
+            Affinity::Balanced,
+        );
+        occupancies.push(c.mean_lanes_active());
+        t.row(&[
+            "sell (lane-packed)".into(),
+            c.explore_issues.to_string(),
+            format!("{:.2}", c.mean_lanes_active()),
+            format!("{:.2?}", m.mean),
+            mteps(p.teps),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "(lane packing holds more active lanes per issue: sell {:.2} vs simd {:.2})",
+        occupancies[1], occupancies[0]
+    );
+    assert!(
+        occupancies[1] > occupancies[0],
+        "sell occupancy {:.2} did not beat simd {:.2}",
+        occupancies[1],
+        occupancies[0]
+    );
 }

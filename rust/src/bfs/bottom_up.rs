@@ -19,17 +19,17 @@
 
 use std::time::Instant;
 
+use super::sell_vectorized::{sell_top_down_layer, DEFAULT_SIGMA};
 use super::state::{SharedBitmap, SharedPred};
 use super::vectorized::SimdOpts;
-use super::{BfsAlgorithm, BfsResult, BfsTree, LayerTrace, RunTrace};
+use super::{BfsAlgorithm, BfsResult, BfsTree, LayerTrace, RunTrace, WORD_GRAIN};
 use crate::graph::bitmap::BITS_PER_WORD;
+use crate::graph::sell::Sell16;
 use crate::graph::{Bitmap, Csr};
 use crate::simd::ops::Vpu;
 use crate::simd::vec512::{Mask16, LANES};
 use crate::threads::parallel_for_dynamic;
 use crate::{Pred, Vertex};
-
-const WORD_GRAIN: usize = 16;
 
 /// One bottom-up layer step (scalar): every unvisited vertex searches its
 /// adjacency for a frontier parent. Returns (edges scanned, discovered).
@@ -111,6 +111,7 @@ pub fn bottom_up_layer_simd(
                     'scan: while off < end {
                         let len = (end - off).min(LANES);
                         let chunk_mask = Mask16::first_n(len);
+                        vpu.note_explore_issue(chunk_mask.count());
                         let vneig = vpu.mask_load_vertices(chunk_mask, &g.rows, off);
                         acc.edges += len;
                         // frontier membership test = Listing 1's filter
@@ -163,12 +164,23 @@ pub struct HybridBfs {
     pub beta: usize,
     /// Vectorize the bottom-up scan (the paper's §3 claim).
     pub simd: bool,
+    /// Run top-down phases through the SELL-16-σ lane-packed explorer
+    /// (plus restoration) instead of the scalar atomic step — the sequel
+    /// paper's point that the SELL techniques carry to the hybrid.
+    pub sell: bool,
     pub opts: SimdOpts,
 }
 
 impl Default for HybridBfs {
     fn default() -> Self {
-        HybridBfs { num_threads: 4, alpha: 14, beta: 24, simd: true, opts: SimdOpts::full() }
+        HybridBfs {
+            num_threads: 4,
+            alpha: 14,
+            beta: 24,
+            simd: true,
+            sell: false,
+            opts: SimdOpts::full(),
+        }
     }
 }
 
@@ -180,6 +192,7 @@ impl BfsAlgorithm for HybridBfs {
     fn run(&self, g: &Csr, root: Vertex) -> BfsResult {
         let n = g.num_vertices();
         let total_edges = g.num_directed_edges();
+        let sell_layout = self.sell.then(|| Sell16::from_csr(g, DEFAULT_SIGMA));
         let pred = SharedPred::new_infinity(n);
         let visited = SharedBitmap::new(n);
         let mut frontier = Bitmap::new(n);
@@ -205,7 +218,7 @@ impl BfsAlgorithm for HybridBfs {
                 bottom_up = false;
             }
 
-            let (edges_scanned, vpu) = if bottom_up {
+            let (edges_scanned, vpu, rstats) = if bottom_up {
                 if self.simd {
                     let (e, _found, vpu) = bottom_up_layer_simd(
                         self.num_threads,
@@ -215,7 +228,7 @@ impl BfsAlgorithm for HybridBfs {
                         &next,
                         &pred,
                     );
-                    (e, vpu)
+                    (e, vpu, Default::default())
                 } else {
                     let (e, _found) = bottom_up_layer_scalar(
                         self.num_threads,
@@ -225,8 +238,25 @@ impl BfsAlgorithm for HybridBfs {
                         &next,
                         &pred,
                     );
-                    (e, Default::default())
+                    (e, Default::default(), Default::default())
                 }
+            } else if let Some(sl) = &sell_layout {
+                // the shared SELL top-down step: chunking choice +
+                // exploration + vectorized restoration
+                let (e, rstats, vpu) = sell_top_down_layer(
+                    self.num_threads,
+                    g,
+                    sl,
+                    &frontier,
+                    frontier_count,
+                    frontier_edges,
+                    &visited,
+                    &next,
+                    &pred,
+                    n as Pred,
+                    self.opts,
+                );
+                (e, vpu, rstats)
             } else {
                 // scalar top-down step (Algorithm 2 with atomics)
                 let in_words = frontier.words();
@@ -256,7 +286,7 @@ impl BfsAlgorithm for HybridBfs {
                         }
                     },
                 );
-                (accs.iter().sum(), Default::default())
+                (accs.iter().sum(), Default::default(), Default::default())
             };
 
             edges_explored_total += frontier_edges;
@@ -266,7 +296,9 @@ impl BfsAlgorithm for HybridBfs {
                 input_vertices: frontier_count,
                 edges_scanned,
                 traversed,
-                vectorized: bottom_up && self.simd,
+                restore_words_scanned: rstats.words_scanned,
+                restore_fixed: rstats.lost_bits_fixed,
+                vectorized: (bottom_up && self.simd) || (!bottom_up && self.sell),
                 vpu,
                 wall_ns: t0.elapsed().as_nanos() as u64,
                 ..Default::default()
@@ -333,6 +365,29 @@ mod tests {
             hy_edges < td_edges,
             "hybrid scanned {hy_edges}, top-down {td_edges}"
         );
+    }
+
+    #[test]
+    fn hybrid_sell_top_down_matches_serial_and_validates() {
+        let g = rmat(11, 76);
+        let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        let expected = SerialLayeredBfs.run(&g, root).tree.distances().unwrap();
+        let alg = HybridBfs { num_threads: 2, sell: true, ..Default::default() };
+        let r = alg.run(&g, root);
+        assert_eq!(r.tree.distances().unwrap(), expected);
+        let rep = validate(&g, &r.tree);
+        assert!(rep.all_passed(), "{}", rep.summary());
+        // the sell top-down step actually ran through the VPU: only the
+        // sell top-down layers run restoration (bottom-up is race-free),
+        // so filter on restore activity rather than the vectorized flag
+        let td_vpu: u64 = r
+            .trace
+            .layers
+            .iter()
+            .filter(|l| l.restore_words_scanned > 0)
+            .map(|l| l.vpu.explore_issues)
+            .sum();
+        assert!(td_vpu > 0, "no sell top-down issues recorded");
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //! | [`parallel`] | Algorithm 2 — OpenMP-style parallel top-down (the `non-simd` curve of Fig 10) |
 //! | [`bitrace_free`] | Algorithm 3 — bitmaps, no atomics, restoration process |
 //! | [`vectorized`] | §4 / Listing 1 — the SIMD explorer + vectorized restoration (the `simd` curve) |
-//! | [`policy`] | §4.1 — which layers run vectorized |
+//! | [`sell_vectorized`] | extension — SELL-16-σ lane-packed explorer (the `sell` engine): 16 distinct frontier vertices per VPU issue |
+//! | [`bottom_up`] | extension (§8) — direction-optimizing hybrid with vectorized (and optionally SELL) steps |
+//! | [`policy`] | §4.1 — which layers run vectorized, and how the sell engine chunks them |
 //! | [`validate`] | §5.3 — the Graph500 five-check soft validator |
 //! | [`state`] | shared frontier/visited/predecessor state for the threaded versions |
 //!
@@ -18,6 +20,7 @@ pub mod bitrace_free;
 pub mod bottom_up;
 pub mod parallel;
 pub mod policy;
+pub mod sell_vectorized;
 pub mod serial;
 pub mod state;
 pub mod validate;
@@ -26,6 +29,12 @@ pub mod vectorized;
 use crate::graph::Csr;
 use crate::simd::VpuCounters;
 use crate::{Pred, Vertex, PRED_INFINITY};
+
+/// Bitmap words each dynamic-schedule grab claims in the threaded
+/// algorithms (OpenMP `schedule(dynamic, 16)` over frontier words). One
+/// shared definition — every engine's scheduling granularity moves
+/// together.
+pub(crate) const WORD_GRAIN: usize = 16;
 
 /// The BFS spanning tree: `pred[v]` is the parent of `v`, `pred[root] ==
 /// root`, and unreached vertices hold [`PRED_INFINITY`] (§3.1's "∞").

@@ -15,14 +15,11 @@
 use std::time::Instant;
 
 use super::state::{SharedBitmap, SharedPred};
-use super::{BfsAlgorithm, BfsResult, BfsTree, LayerTrace, RunTrace};
+use super::{BfsAlgorithm, BfsResult, BfsTree, LayerTrace, RunTrace, WORD_GRAIN};
 use crate::graph::bitmap::BITS_PER_WORD;
 use crate::graph::{Bitmap, Csr};
 use crate::threads::parallel_for_dynamic;
 use crate::{Pred, Vertex};
-
-/// Words of the input bitmap each dynamic-schedule grab claims.
-const WORD_GRAIN: usize = 16;
 
 /// Parallel non-SIMD top-down BFS.
 #[derive(Clone, Copy, Debug)]

@@ -37,11 +37,47 @@ impl Default for LayerPolicy {
     }
 }
 
+/// How a vectorized layer feeds the VPU — the SELL-engine extension of
+/// §4.1's layer choice. Per-vertex chunking (Listing 1) streams one
+/// vertex's adjacency through aligned loads; lane packing (SELL-16-σ)
+/// gathers one neighbor from 16 *distinct* frontier vertices per issue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkingMode {
+    /// Listing-1 chunking: ≤16 neighbors of a single vertex per issue.
+    PerVertex,
+    /// SELL-16-σ packing: 16 different frontier vertices per issue.
+    LanePacked,
+}
+
 impl LayerPolicy {
     /// Adaptive policy: vectorize when the frontier's mean degree fills at
     /// least one 16-lane chunk per vertex.
     pub fn heavy() -> Self {
         LayerPolicy::MinMeanDegree(16)
+    }
+
+    /// Mean frontier degree at which per-vertex chunking overtakes lane
+    /// packing. Above it, adjacency lists span ≥ 2 full vectors and the
+    /// Listing-1 chunking already runs near-full lanes, while the skewed
+    /// top of the degree distribution makes packed groups ragged (group
+    /// occupancy is Σdeg/max-deg). Below it — the low-degree majority of
+    /// an RMAT frontier — per-vertex chunks are mostly dead lanes and
+    /// packing wins decisively (measured ~15 vs ~5 lanes/issue on RMAT
+    /// tail layers).
+    pub const SELL_PER_VERTEX_DEGREE: usize = 32;
+
+    /// The SELL engine's per-layer chunking choice (an associated function:
+    /// it depends only on the frontier's shape, not on which layer-selection
+    /// variant is active). Hub-dominated layers (mean degree ≥
+    /// [`Self::SELL_PER_VERTEX_DEGREE`]) keep Listing-1 per-vertex
+    /// chunking; everything else — the low-degree majority of an RMAT
+    /// traversal — is lane-packed to restore occupancy.
+    pub fn sell_chunking(input_vertices: usize, input_edges: usize) -> ChunkingMode {
+        if input_vertices > 0 && input_edges / input_vertices >= Self::SELL_PER_VERTEX_DEGREE {
+            ChunkingMode::PerVertex
+        } else {
+            ChunkingMode::LanePacked
+        }
     }
 
     /// Decide for a layer. `nontrivial_layers_so_far` counts previous
@@ -102,5 +138,17 @@ mod tests {
     #[test]
     fn zero_inputs_never_vectorize_adaptive() {
         assert!(!LayerPolicy::heavy().vectorize(0, 0, 0));
+    }
+
+    #[test]
+    fn sell_chunking_splits_on_mean_degree() {
+        // Table 1 rows: the explosion layers (means ~1824, ~747, ~32.6)
+        // stay per-vertex; the low-degree tail layers are lane-packed.
+        assert_eq!(LayerPolicy::sell_chunking(12, 21_892), ChunkingMode::PerVertex);
+        assert_eq!(LayerPolicy::sell_chunking(18_122, 13_547_462), ChunkingMode::PerVertex);
+        assert_eq!(LayerPolicy::sell_chunking(540_575, 17_626_910), ChunkingMode::PerVertex);
+        assert_eq!(LayerPolicy::sell_chunking(100_874, 150_698), ChunkingMode::LanePacked);
+        assert_eq!(LayerPolicy::sell_chunking(486, 490), ChunkingMode::LanePacked);
+        assert_eq!(LayerPolicy::sell_chunking(0, 0), ChunkingMode::LanePacked);
     }
 }

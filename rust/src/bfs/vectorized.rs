@@ -36,7 +36,7 @@ use std::time::Instant;
 
 use super::policy::LayerPolicy;
 use super::state::{SharedBitmap, SharedPred};
-use super::{BfsAlgorithm, BfsResult, BfsTree, LayerTrace, RunTrace};
+use super::{BfsAlgorithm, BfsResult, BfsTree, LayerTrace, RunTrace, WORD_GRAIN};
 use crate::graph::bitmap::BITS_PER_WORD;
 use crate::graph::{Bitmap, Csr};
 use crate::simd::ops::{PrefetchHint, Vpu};
@@ -44,8 +44,6 @@ use crate::simd::vec512::{Mask16, VecI32x16, LANES};
 use crate::simd::VpuCounters;
 use crate::threads::parallel_for_dynamic;
 use crate::{Pred, Vertex};
-
-const WORD_GRAIN: usize = 16;
 
 /// §4.2 optimization toggles (the Fig 9 ablation axes).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -122,6 +120,7 @@ fn explore_chunk(
     pred: &SharedPred,
     prefetch: bool,
 ) {
+    vpu.note_explore_issue(chunk_mask.count());
     // 1.- Load adjacency list to the register
     let vneig = if full {
         vpu.load_vertices(rows, offset)
@@ -174,9 +173,10 @@ fn explore_chunk(
     vpu.mask_scatter_shared_words(out.atomic_words(), mask, vword, new_values);
 }
 
-/// Explore one vertex's whole adjacency list, chunked per §4.2.
+/// Explore one vertex's whole adjacency list, chunked per §4.2. Shared
+/// with the SELL engine's per-vertex chunking mode.
 #[allow(clippy::too_many_arguments)]
-fn explore_vertex(
+pub(crate) fn explore_vertex(
     vpu: &mut Vpu,
     g: &Csr,
     u: Vertex,
@@ -258,6 +258,96 @@ fn explore_vertex(
         );
     }
     degree
+}
+
+/// Per-vertex (Listing 1) exploration of one whole layer, parallel over
+/// the frontier's bitmap words. Returns (edges scanned, merged VPU
+/// counters). Shared by the `simd` engine and the sell engine's
+/// per-vertex chunking mode.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn explore_layer_per_vertex(
+    num_threads: usize,
+    g: &Csr,
+    input: &Bitmap,
+    nodes: Pred,
+    visited: &SharedBitmap,
+    out: &SharedBitmap,
+    pred: &SharedPred,
+    opts: SimdOpts,
+) -> (usize, VpuCounters) {
+    let n = g.num_vertices();
+    let in_words = input.words();
+    let accs: Vec<ExploreAcc> = parallel_for_dynamic(
+        num_threads,
+        in_words.len(),
+        WORD_GRAIN,
+        |_tid, range, acc: &mut ExploreAcc| {
+            for w in range {
+                let mut word = in_words[w];
+                while word != 0 {
+                    let bit = word.trailing_zeros();
+                    word &= word - 1;
+                    let u = Bitmap::bit_to_vertex(w, bit);
+                    if (u as usize) >= n {
+                        continue;
+                    }
+                    let vpu = acc.vpu.get_or_insert_with(Vpu::new);
+                    acc.edges_scanned += explore_vertex(vpu, g, u, nodes, visited, out, pred, opts);
+                }
+            }
+        },
+    );
+    let mut edges = 0usize;
+    let mut vpu = VpuCounters::default();
+    for a in accs {
+        edges += a.edges_scanned;
+        if let Some(v) = a.vpu {
+            vpu.merge(&v.counters);
+        }
+    }
+    (edges, vpu)
+}
+
+/// Scalar parallel top-down step over a bitmap frontier (Algorithm 2 with
+/// atomics — the §4.1 fallback for layers not worth vectorizing). Returns
+/// edges scanned. Shared by the `simd` and `sell` engines.
+pub(crate) fn scalar_fallback_layer(
+    num_threads: usize,
+    g: &Csr,
+    input: &Bitmap,
+    visited: &SharedBitmap,
+    out: &SharedBitmap,
+    pred: &SharedPred,
+) -> usize {
+    let n = g.num_vertices();
+    let in_words = input.words();
+    let accs: Vec<usize> = parallel_for_dynamic(
+        num_threads,
+        in_words.len(),
+        WORD_GRAIN,
+        |_tid, range, acc: &mut usize| {
+            for w in range {
+                let mut word = in_words[w];
+                while word != 0 {
+                    let bit = word.trailing_zeros();
+                    word &= word - 1;
+                    let u = Bitmap::bit_to_vertex(w, bit);
+                    if (u as usize) >= n {
+                        continue;
+                    }
+                    for &v in g.neighbors(u) {
+                        *acc += 1;
+                        if !visited.test_bit(v) && !out.test_bit(v) {
+                            out.set_bit_atomic(v);
+                            visited.set_bit_atomic(v);
+                            pred.set(v, u as Pred);
+                        }
+                    }
+                }
+            }
+        },
+    );
+    accs.iter().sum()
 }
 
 /// Vectorized restoration (§4, closing paragraphs): for every non-zero
@@ -387,73 +477,28 @@ impl BfsAlgorithm for VectorizedBfs {
                 nontrivial_seen += 1;
             }
 
-            let in_words = input.words();
             let (edges_scanned, rstats, vpu_counters) = if vectorize {
                 // ---- SIMD exploration (Listing 1) ----
-                let accs: Vec<ExploreAcc> = parallel_for_dynamic(
+                let (edges, mut vpu_total) = explore_layer_per_vertex(
                     self.num_threads,
-                    in_words.len(),
-                    WORD_GRAIN,
-                    |_tid, range, acc: &mut ExploreAcc| {
-                        for w in range {
-                            let mut word = in_words[w];
-                            while word != 0 {
-                                let bit = word.trailing_zeros();
-                                word &= word - 1;
-                                let u = Bitmap::bit_to_vertex(w, bit);
-                                if (u as usize) >= n {
-                                    continue;
-                                }
-                                let opts = self.opts;
-                                let deg = {
-                                    let vpu = acc.vpu.get_or_insert_with(Vpu::new);
-                                    explore_vertex(vpu, g, u, nodes, &visited, &output, &pred, opts)
-                                };
-                                acc.edges_scanned += deg;
-                            }
-                        }
-                    },
+                    g,
+                    &input,
+                    nodes,
+                    &visited,
+                    &output,
+                    &pred,
+                    self.opts,
                 );
                 // ---- vectorized restoration ----
-                let (rstats, mut vpu_total) =
+                let (rstats, restore_vpu) =
                     restore_layer_simd(self.num_threads, &output, &visited, &pred, nodes);
-                let mut edges = 0usize;
-                for a in &accs {
-                    edges += a.edges_scanned;
-                    if let Some(v) = &a.vpu {
-                        vpu_total.merge(&v.counters);
-                    }
-                }
+                vpu_total.merge(&restore_vpu);
                 (edges, rstats, vpu_total)
             } else {
                 // ---- scalar parallel fallback (Algorithm 2, §4.1) ----
-                let accs: Vec<usize> = parallel_for_dynamic(
-                    self.num_threads,
-                    in_words.len(),
-                    WORD_GRAIN,
-                    |_tid, range, acc: &mut usize| {
-                        for w in range {
-                            let mut word = in_words[w];
-                            while word != 0 {
-                                let bit = word.trailing_zeros();
-                                word &= word - 1;
-                                let u = Bitmap::bit_to_vertex(w, bit);
-                                if (u as usize) >= n {
-                                    continue;
-                                }
-                                for &v in g.neighbors(u) {
-                                    *acc += 1;
-                                    if !visited.test_bit(v) && !output.test_bit(v) {
-                                        output.set_bit_atomic(v);
-                                        visited.set_bit_atomic(v);
-                                        pred.set(v, u as Pred);
-                                    }
-                                }
-                            }
-                        }
-                    },
-                );
-                (accs.iter().sum(), Default::default(), VpuCounters::default())
+                let edges =
+                    scalar_fallback_layer(self.num_threads, g, &input, &visited, &output, &pred);
+                (edges, Default::default(), VpuCounters::default())
             };
 
             let traversed = output.count_ones();

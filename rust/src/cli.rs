@@ -79,7 +79,8 @@ COMMANDS:
     run        Run a Graph500-style experiment
                --scale N (16) --edgefactor N (16) --roots N (64)
                --engine serial|serial-queue|non-simd|bitrace-free|simd|
-                        simd-noopt|simd-nopf|pjrt (simd)
+                        simd-noopt|simd-nopf|sell|sell-noopt|hybrid|
+                        hybrid-scalar|hybrid-sell|pjrt (simd)
                --threads N (4) --workers N (1) --seed N (1)
                --artifacts DIR (artifacts) --no-validate
     model      Predict Xeon Phi TEPS for a thread/affinity sweep

@@ -8,6 +8,7 @@ use crate::bfs::bitrace_free::BitRaceFreeBfs;
 use crate::bfs::bottom_up::HybridBfs;
 use crate::bfs::parallel::ParallelBfs;
 use crate::bfs::policy::LayerPolicy;
+use crate::bfs::sell_vectorized::{SellBfs, DEFAULT_SIGMA};
 use crate::bfs::serial::{SerialLayeredBfs, SerialQueueBfs};
 use crate::bfs::vectorized::{SimdOpts, VectorizedBfs};
 use crate::bfs::BfsAlgorithm;
@@ -26,16 +27,38 @@ pub enum EngineKind {
     BitRaceFree { threads: usize },
     /// §4 — the vectorized algorithm (the `simd` curve).
     Simd { threads: usize, opts: SimdOpts, policy: LayerPolicy },
+    /// SELL-16-σ extension — lane-packed exploration over the sliced-
+    /// ELLPACK layout (16 distinct frontier vertices per VPU issue).
+    Sell { threads: usize, opts: SimdOpts, policy: LayerPolicy, sigma: usize },
     /// §8 extension — direction-optimizing hybrid (Beamer-style) with a
-    /// vectorized bottom-up scan.
-    Hybrid { threads: usize, simd: bool },
+    /// vectorized bottom-up scan; `sell` routes the top-down phases through
+    /// the SELL lane-packed step.
+    Hybrid { threads: usize, simd: bool, sell: bool },
     /// The AOT JAX/Pallas kernel through PJRT.
     Pjrt { artifact_dir: String },
 }
 
 impl EngineKind {
-    /// Parse a CLI name: `serial`, `serial-queue`, `non-simd`,
-    /// `bitrace-free`, `simd`, `simd-noopt`, `simd-nopf`, `pjrt`.
+    /// Canonical names of every engine that runs without PJRT artifacts —
+    /// the single source the CLI help, tests, and the cross-engine
+    /// property suite draw from. (`pjrt` is parseable too but needs
+    /// `artifacts/manifest.txt`.)
+    pub const NATIVE_NAMES: &[&str] = &[
+        "serial",
+        "serial-queue",
+        "non-simd",
+        "bitrace-free",
+        "simd",
+        "simd-noopt",
+        "simd-nopf",
+        "sell",
+        "sell-noopt",
+        "hybrid",
+        "hybrid-scalar",
+        "hybrid-sell",
+    ];
+
+    /// Parse a CLI name: any of [`Self::NATIVE_NAMES`] or `pjrt`.
     pub fn parse(name: &str, threads: usize, artifact_dir: &str) -> Result<Self> {
         Ok(match name {
             "serial" | "serial-layered" => EngineKind::SerialLayered,
@@ -57,12 +80,28 @@ impl EngineKind {
                 opts: SimdOpts::aligned_masks(),
                 policy: LayerPolicy::heavy(),
             },
-            "hybrid" => EngineKind::Hybrid { threads, simd: true },
-            "hybrid-scalar" => EngineKind::Hybrid { threads, simd: false },
+            // lane packing keeps low-degree layers efficient, so the sell
+            // engines vectorize every layer (no §4.1 scalar fallback)
+            "sell" => EngineKind::Sell {
+                threads,
+                opts: SimdOpts::full(),
+                policy: LayerPolicy::All,
+                sigma: DEFAULT_SIGMA,
+            },
+            "sell-noopt" => EngineKind::Sell {
+                threads,
+                opts: SimdOpts::none(),
+                policy: LayerPolicy::All,
+                sigma: DEFAULT_SIGMA,
+            },
+            "hybrid" => EngineKind::Hybrid { threads, simd: true, sell: false },
+            "hybrid-scalar" => EngineKind::Hybrid { threads, simd: false, sell: false },
+            "hybrid-sell" => EngineKind::Hybrid { threads, simd: true, sell: true },
             "pjrt" => EngineKind::Pjrt { artifact_dir: artifact_dir.to_string() },
             other => anyhow::bail!(
                 "unknown engine {other:?} (expected serial, serial-queue, non-simd, \
-                 bitrace-free, simd, simd-noopt, simd-nopf, hybrid, hybrid-scalar, pjrt)"
+                 bitrace-free, simd, simd-noopt, simd-nopf, sell, sell-noopt, hybrid, \
+                 hybrid-scalar, hybrid-sell, pjrt)"
             ),
         })
     }
@@ -83,9 +122,16 @@ pub fn make_engine(kind: &EngineKind) -> Result<Box<dyn BfsAlgorithm>> {
             opts: *opts,
             policy: *policy,
         }),
-        EngineKind::Hybrid { threads, simd } => Box::new(HybridBfs {
+        EngineKind::Sell { threads, opts, policy, sigma } => Box::new(SellBfs {
+            num_threads: *threads,
+            opts: *opts,
+            policy: *policy,
+            sigma: *sigma,
+        }),
+        EngineKind::Hybrid { threads, simd, sell } => Box::new(HybridBfs {
             num_threads: *threads,
             simd: *simd,
+            sell: *sell,
             ..Default::default()
         }),
         EngineKind::Pjrt { artifact_dir } => Box::new(PjrtBfs::from_dir(artifact_dir)?),
@@ -98,10 +144,19 @@ mod tests {
 
     #[test]
     fn parse_all_names() {
-        for name in ["serial", "serial-queue", "non-simd", "bitrace-free", "simd", "simd-noopt", "simd-nopf", "hybrid", "hybrid-scalar", "pjrt"] {
+        for name in EngineKind::NATIVE_NAMES.iter().chain(&["pjrt"]) {
             assert!(EngineKind::parse(name, 4, "artifacts").is_ok(), "{name}");
         }
         assert!(EngineKind::parse("nope", 4, "artifacts").is_err());
+    }
+
+    #[test]
+    fn native_names_construct_native_engines() {
+        // every canonical name must build an engine with no artifacts
+        for name in EngineKind::NATIVE_NAMES {
+            let kind = EngineKind::parse(name, 2, "artifacts").unwrap();
+            assert!(make_engine(&kind).is_ok(), "{name}");
+        }
     }
 
     #[test]
@@ -112,6 +167,12 @@ mod tests {
             EngineKind::NonSimd { threads: 2 },
             EngineKind::BitRaceFree { threads: 2 },
             EngineKind::Simd { threads: 2, opts: SimdOpts::full(), policy: LayerPolicy::All },
+            EngineKind::Sell {
+                threads: 2,
+                opts: SimdOpts::full(),
+                policy: LayerPolicy::All,
+                sigma: DEFAULT_SIGMA,
+            },
         ] {
             assert!(make_engine(&kind).is_ok(), "{kind:?}");
         }
@@ -128,8 +189,21 @@ mod tests {
             EngineKind::NonSimd { threads: 2 },
             EngineKind::BitRaceFree { threads: 2 },
             EngineKind::Simd { threads: 2, opts: SimdOpts::full(), policy: LayerPolicy::All },
-            EngineKind::Hybrid { threads: 2, simd: true },
-            EngineKind::Hybrid { threads: 2, simd: false },
+            EngineKind::Sell {
+                threads: 2,
+                opts: SimdOpts::full(),
+                policy: LayerPolicy::All,
+                sigma: DEFAULT_SIGMA,
+            },
+            EngineKind::Sell {
+                threads: 2,
+                opts: SimdOpts::none(),
+                policy: LayerPolicy::heavy(),
+                sigma: DEFAULT_SIGMA,
+            },
+            EngineKind::Hybrid { threads: 2, simd: true, sell: false },
+            EngineKind::Hybrid { threads: 2, simd: false, sell: false },
+            EngineKind::Hybrid { threads: 2, simd: true, sell: true },
         ] {
             let r = make_engine(&kind).unwrap().run(&g, 0);
             assert_eq!(

@@ -33,11 +33,6 @@ impl Csr {
         Self::build(scale, el.num_vertices, &el.edges)
     }
 
-    /// Build from raw tuples (test convenience).
-    pub fn from_edges(scale: u32, el: &EdgeList) -> Self {
-        Self::from_edge_list(scale, el)
-    }
-
     fn build(scale: u32, n: usize, tuples: &[(Vertex, Vertex)]) -> Self {
         // Counting sort: degree pass, prefix sum, fill pass.
         let mut deg = vec![0usize; n];

@@ -8,17 +8,21 @@
 //!   initiator parameters (A=0.57, B=0.19, C=0.19, D=0.05).
 //! * [`csr`] — Compressed Sparse Row adjacency (`rows` + `colstarts`,
 //!   Fig 4 of the paper).
-//! * [`stats`] — degree distributions and the per-layer traversal profile
-//!   that Table 1 reports.
+//! * [`sell`] — SELL-16-σ sliced-ELLPACK layout (SlimSell-style) backing
+//!   the lane-packed explorer.
+//! * [`stats`] — degree distributions, the per-layer traversal profile
+//!   that Table 1 reports, and SELL occupancy statistics.
 
 pub mod bitmap;
 pub mod csr;
 pub mod edge_list;
 pub mod io;
 pub mod rmat;
+pub mod sell;
 pub mod stats;
 
 pub use bitmap::Bitmap;
 pub use csr::Csr;
 pub use edge_list::EdgeList;
 pub use rmat::RmatConfig;
+pub use sell::Sell16;

@@ -1,0 +1,269 @@
+//! SELL-16-σ — a Sell-C-σ sliced-ELLPACK adjacency layout with C = 16
+//! (one VPU register of lanes) and a σ-window degree sort.
+//!
+//! The paper's Listing-1 explorer vectorizes *within* one vertex's
+//! adjacency list, so a frontier vertex of degree d < 16 issues a chunk
+//! with 16 − d dead lanes — and in a Graph500 RMAT graph the overwhelming
+//! majority of vertices have such small degrees (§6.1's skew). SlimSell
+//! (Besta et al.) shows the fix: store the graph so that *sixteen
+//! different vertices* contribute one adjacency entry each per vector row.
+//!
+//! Construction:
+//!
+//! 1. **σ sort** — vertices are sorted by descending degree within windows
+//!    of `sigma` consecutive ids (σ = n gives a full sort, σ ≤ 16 disables
+//!    sorting). Sorting bounds the padding: lanes sharing a chunk have
+//!    similar degrees, so chunk height ≈ every lane's length.
+//! 2. **C = 16 chunks, column-major** — slot `s` (the sorted position) of
+//!    vertex `perm[s]` lands in chunk `s / 16`, lane `s % 16`. A chunk's
+//!    storage is `chunk_len` rows of 16 lanes; row `r` holds the `r`-th
+//!    neighbor of each lane's vertex, so
+//!    `cols[chunk_starts[c] + r*16 + lane]` is one aligned vector row.
+//! 3. **per-lane lengths + permutation** — `lane_len[s]` masks the padded
+//!    tail of short lanes, `perm`/`rank` map slots ↔ original vertex ids
+//!    (the BFS tree is always reported in original ids).
+//!
+//! The lane-packed explorer ([`crate::bfs::sell_vectorized`]) walks rows
+//! either as full aligned vector loads (all 16 lanes of a chunk active) or
+//! as gathers over `cols` for dynamically packed frontier groups.
+
+use super::csr::Csr;
+use crate::simd::vec512::LANES;
+use crate::Vertex;
+
+/// Chunk width — fixed to the VPU lane count (SELL-*16*-σ).
+pub const SELL_C: usize = LANES;
+
+/// The SELL-16-σ adjacency layout.
+#[derive(Clone, Debug)]
+pub struct Sell16 {
+    /// Sorting-window size the layout was built with.
+    pub sigma: usize,
+    /// `perm[slot]` = original vertex id occupying that slot.
+    pub perm: Vec<Vertex>,
+    /// `rank[vertex]` = slot of that vertex (inverse of `perm`).
+    pub rank: Vec<u32>,
+    /// Offset of each chunk's first element in `cols`; has `num_chunks + 1`
+    /// entries so `chunk_starts[c + 1] - chunk_starts[c] == 16 * chunk_len`.
+    pub chunk_starts: Vec<usize>,
+    /// Rows per chunk (the maximum lane length in the chunk).
+    pub chunk_lens: Vec<u32>,
+    /// Adjacency length of each slot's vertex (0 for the padding slots of a
+    /// final partial chunk).
+    pub lane_len: Vec<u32>,
+    /// Column-major adjacency storage; padding entries hold 0 and are never
+    /// enabled by a lane mask.
+    pub cols: Vec<Vertex>,
+}
+
+impl Sell16 {
+    /// Build from a CSR with the given σ window (clamped to ≥ 16; pass
+    /// `usize::MAX` for a global degree sort).
+    pub fn from_csr(g: &Csr, sigma: usize) -> Self {
+        let n = g.num_vertices();
+        let sigma = sigma.max(SELL_C);
+        let num_chunks = n.div_ceil(SELL_C);
+        let num_slots = num_chunks * SELL_C;
+
+        // σ-window degree sort: descending degree inside each window,
+        // stable on vertex id so the layout is deterministic.
+        let mut perm: Vec<Vertex> = (0..n as Vertex).collect();
+        let mut start = 0usize;
+        while start < n {
+            let end = start.saturating_add(sigma).min(n);
+            perm[start..end].sort_by_key(|&v| std::cmp::Reverse(g.degree(v)));
+            start = end;
+        }
+        let mut rank = vec![0u32; n];
+        for (slot, &v) in perm.iter().enumerate() {
+            rank[v as usize] = slot as u32;
+        }
+
+        let mut lane_len = vec![0u32; num_slots];
+        for (slot, &v) in perm.iter().enumerate() {
+            lane_len[slot] = g.degree(v) as u32;
+        }
+
+        let mut chunk_starts = Vec::with_capacity(num_chunks + 1);
+        let mut chunk_lens = Vec::with_capacity(num_chunks);
+        let mut cols: Vec<Vertex> = Vec::new();
+        let mut offset = 0usize;
+        for c in 0..num_chunks {
+            chunk_starts.push(offset);
+            let lanes = &lane_len[c * SELL_C..(c + 1) * SELL_C];
+            let height = lanes.iter().copied().max().unwrap_or(0) as usize;
+            chunk_lens.push(height as u32);
+            cols.resize(offset + height * SELL_C, 0);
+            for lane in 0..SELL_C {
+                let slot = c * SELL_C + lane;
+                if slot >= n {
+                    continue;
+                }
+                let adj = g.neighbors(perm[slot]);
+                for (r, &w) in adj.iter().enumerate() {
+                    cols[offset + r * SELL_C + lane] = w;
+                }
+            }
+            offset += height * SELL_C;
+        }
+        chunk_starts.push(offset);
+
+        Sell16 { sigma, perm, rank, chunk_starts, chunk_lens, lane_len, cols }
+    }
+
+    /// Number of vertices covered.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// Number of 16-lane chunks.
+    #[inline]
+    pub fn num_chunks(&self) -> usize {
+        self.chunk_lens.len()
+    }
+
+    /// Index into `cols` of `(slot, row 0)` — add `row * 16` to step rows.
+    #[inline]
+    pub fn slot_base(&self, slot: usize) -> usize {
+        self.chunk_starts[slot / SELL_C] + slot % SELL_C
+    }
+
+    /// The `r`-th neighbor of the vertex in `slot` (test/debug accessor).
+    #[inline]
+    pub fn neighbor(&self, slot: usize, r: usize) -> Vertex {
+        debug_assert!(r < self.lane_len[slot] as usize);
+        self.cols[self.slot_base(slot) + r * SELL_C]
+    }
+
+    /// Adjacency entries stored (without padding).
+    pub fn filled_lanes(&self) -> usize {
+        self.lane_len.iter().map(|&l| l as usize).sum()
+    }
+
+    /// Total lane cells allocated (rows × 16, padding included).
+    pub fn stored_lanes(&self) -> usize {
+        self.cols.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EdgeList, RmatConfig};
+
+    fn csr(scale: u32, ef: usize, seed: u64) -> Csr {
+        let el = RmatConfig::graph500(scale, ef).generate(seed);
+        Csr::from_edge_list(scale, &el)
+    }
+
+    /// Every adjacency entry of every vertex must be recoverable from the
+    /// sell layout, in CSR order.
+    fn assert_roundtrip(g: &Csr, s: &Sell16) {
+        assert_eq!(s.num_vertices(), g.num_vertices());
+        for v in 0..g.num_vertices() as Vertex {
+            let slot = s.rank[v as usize] as usize;
+            assert_eq!(s.perm[slot], v);
+            let adj = g.neighbors(v);
+            assert_eq!(s.lane_len[slot] as usize, adj.len());
+            for (r, &w) in adj.iter().enumerate() {
+                assert_eq!(s.neighbor(slot, r), w, "vertex {v} neighbor {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrips_small_graph() {
+        let el = EdgeList::with_edges(
+            10,
+            vec![(0, 1), (0, 2), (0, 3), (1, 2), (4, 5), (6, 7), (6, 8), (6, 9), (6, 1)],
+        );
+        let g = Csr::from_edge_list(0, &el);
+        for sigma in [16usize, 32, usize::MAX] {
+            assert_roundtrip(&g, &Sell16::from_csr(&g, sigma));
+        }
+    }
+
+    #[test]
+    fn roundtrips_rmat() {
+        let g = csr(10, 8, 77);
+        assert_roundtrip(&g, &Sell16::from_csr(&g, 256));
+    }
+
+    #[test]
+    fn perm_is_a_permutation() {
+        let g = csr(9, 8, 78);
+        let s = Sell16::from_csr(&g, 64);
+        let mut seen = s.perm.clone();
+        seen.sort_unstable();
+        let expect: Vec<Vertex> = (0..g.num_vertices() as Vertex).collect();
+        assert_eq!(seen, expect);
+    }
+
+    #[test]
+    fn sigma_sort_orders_degrees_within_windows() {
+        let g = csr(10, 16, 79);
+        let sigma = 128usize;
+        let s = Sell16::from_csr(&g, sigma);
+        for window in s.perm.chunks(sigma) {
+            let degs: Vec<usize> = window.iter().map(|&v| g.degree(v)).collect();
+            assert!(degs.windows(2).all(|w| w[0] >= w[1]), "window not degree-sorted");
+        }
+    }
+
+    #[test]
+    fn chunk_geometry_consistent() {
+        let g = csr(10, 16, 80);
+        let s = Sell16::from_csr(&g, 256);
+        assert_eq!(s.chunk_starts.len(), s.num_chunks() + 1);
+        for c in 0..s.num_chunks() {
+            assert_eq!(
+                s.chunk_starts[c + 1] - s.chunk_starts[c],
+                s.chunk_lens[c] as usize * SELL_C
+            );
+            // chunk height is exactly the max lane length
+            let max_len = s.lane_len[c * SELL_C..(c + 1) * SELL_C]
+                .iter()
+                .copied()
+                .max()
+                .unwrap();
+            assert_eq!(s.chunk_lens[c], max_len);
+        }
+        assert_eq!(*s.chunk_starts.last().unwrap(), s.cols.len());
+    }
+
+    #[test]
+    fn sorting_reduces_padding() {
+        // On a skewed graph the σ sort must waste fewer lane cells than the
+        // unsorted (σ = 16) layout.
+        let g = csr(12, 16, 81);
+        let unsorted = Sell16::from_csr(&g, SELL_C);
+        let sorted = Sell16::from_csr(&g, 256);
+        let full = Sell16::from_csr(&g, usize::MAX);
+        assert_eq!(unsorted.filled_lanes(), sorted.filled_lanes());
+        assert!(sorted.stored_lanes() < unsorted.stored_lanes());
+        assert!(full.stored_lanes() <= sorted.stored_lanes());
+    }
+
+    #[test]
+    fn partial_final_chunk_padded_with_zero_lanes() {
+        let el = EdgeList::with_edges(20, vec![(0, 1), (2, 3), (18, 19)]);
+        let g = Csr::from_edge_list(0, &el);
+        let s = Sell16::from_csr(&g, 16);
+        assert_eq!(s.num_chunks(), 2);
+        // slots 20..32 are padding
+        for slot in 20..32 {
+            assert_eq!(s.lane_len[slot], 0);
+        }
+        assert_roundtrip(&g, &s);
+    }
+
+    #[test]
+    fn empty_and_tiny_graphs() {
+        let g = Csr::from_edge_list(0, &EdgeList::with_edges(1, vec![]));
+        let s = Sell16::from_csr(&g, 256);
+        assert_eq!(s.num_chunks(), 1);
+        assert_eq!(s.filled_lanes(), 0);
+        assert_eq!(s.chunk_lens[0], 0);
+    }
+}

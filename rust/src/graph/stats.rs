@@ -1,8 +1,10 @@
-//! Graph statistics: degree distribution and the per-layer traversal
+//! Graph statistics: degree distribution, the per-layer traversal
 //! profile that the paper's Table 1 reports (input vertices, edges
-//! inspected, newly traversed vertices, per BFS layer).
+//! inspected, newly traversed vertices, per BFS layer), and storage
+//! occupancy of the SELL-16-σ layout.
 
 use super::csr::Csr;
+use super::sell::{Sell16, SELL_C};
 use crate::Vertex;
 
 /// One row of Table 1.
@@ -131,6 +133,53 @@ impl DegreeStats {
     }
 }
 
+/// Storage occupancy of a [`Sell16`] layout — how much of the padded
+/// column-major storage carries real adjacency entries. High fill is the
+/// precondition for the lane-packed explorer's occupancy win: every padded
+/// cell is a lane the σ sort failed to fill.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SellOccupancy {
+    /// 16-lane chunks in the layout.
+    pub chunks: usize,
+    /// Vector rows stored (Σ chunk heights).
+    pub rows: usize,
+    /// Lane cells allocated (`rows × 16`).
+    pub stored_lanes: usize,
+    /// Lane cells holding a real adjacency entry.
+    pub filled_lanes: usize,
+    /// `filled_lanes / stored_lanes` (1.0 for an empty layout).
+    pub fill: f64,
+}
+
+impl SellOccupancy {
+    pub fn compute(s: &Sell16) -> Self {
+        let stored = s.stored_lanes();
+        let filled = s.filled_lanes();
+        SellOccupancy {
+            chunks: s.num_chunks(),
+            rows: s.chunk_lens.iter().map(|&h| h as usize).sum(),
+            stored_lanes: stored,
+            filled_lanes: filled,
+            fill: if stored > 0 { filled as f64 / stored as f64 } else { 1.0 },
+        }
+    }
+
+    /// Lane cells wasted on padding.
+    pub fn padded_lanes(&self) -> usize {
+        self.stored_lanes - self.filled_lanes
+    }
+
+    /// Mean lanes a full sweep of the layout would fill per vector row —
+    /// the static upper bound on the explorer's dynamic occupancy.
+    pub fn mean_lanes_per_row(&self) -> f64 {
+        if self.rows > 0 {
+            self.filled_lanes as f64 / self.rows as f64
+        } else {
+            SELL_C as f64
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,6 +253,33 @@ mod tests {
         // the densest-edge layer must be included
         let max_layer = p.rows.iter().max_by_key(|r| r.edges).unwrap().layer;
         assert!(heavy.contains(&max_layer));
+    }
+
+    #[test]
+    fn sell_occupancy_accounts_every_lane() {
+        let el = RmatConfig::graph500(11, 16).generate(13);
+        let g = Csr::from_edge_list(11, &el);
+        let s = Sell16::from_csr(&g, 256);
+        let occ = SellOccupancy::compute(&s);
+        assert_eq!(occ.filled_lanes, g.num_directed_edges());
+        assert_eq!(occ.stored_lanes, occ.rows * SELL_C);
+        assert_eq!(occ.filled_lanes + occ.padded_lanes(), occ.stored_lanes);
+        assert!(occ.fill > 0.0 && occ.fill <= 1.0);
+        assert!(occ.mean_lanes_per_row() <= SELL_C as f64);
+    }
+
+    #[test]
+    fn sell_sigma_sort_improves_fill() {
+        let el = RmatConfig::graph500(12, 16).generate(14);
+        let g = Csr::from_edge_list(12, &el);
+        let unsorted = SellOccupancy::compute(&Sell16::from_csr(&g, SELL_C));
+        let sorted = SellOccupancy::compute(&Sell16::from_csr(&g, 256));
+        assert!(
+            sorted.fill > unsorted.fill,
+            "σ sort fill {} !> unsorted {}",
+            sorted.fill,
+            unsorted.fill
+        );
     }
 
     #[test]

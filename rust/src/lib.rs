@@ -15,14 +15,18 @@
 //!
 //! This crate implements every substrate that work depends on:
 //!
-//! * [`graph`] — Graph500-style RMAT generator, CSR, bitmaps, statistics.
+//! * [`graph`] — Graph500-style RMAT generator, CSR, bitmaps, statistics,
+//!   and the SELL-16-σ sliced-ELLPACK layout ([`graph::sell`]).
 //! * [`simd`] — a faithful 16-lane × 32-bit emulation of the Knights-Corner
 //!   vector unit (the exact intrinsics of the paper's Listing 1, including
-//!   the scatter write-conflict hazard the restoration process exists for).
+//!   the scatter write-conflict hazard the restoration process exists for),
+//!   with per-issue lane-occupancy counters.
 //! * [`bfs`] — the paper's algorithm ladder: serial (Alg 1), parallel
-//!   non-SIMD (Alg 2), bit-race-free with restoration (Alg 3), and the
-//!   vectorized version (Listing 1), plus the layer policy of §4.1 and the
-//!   Graph500 validator.
+//!   non-SIMD (Alg 2), bit-race-free with restoration (Alg 3), the
+//!   vectorized version (Listing 1), and the SELL-16-σ lane-packed
+//!   explorer ([`bfs::sell_vectorized`]) that fills all 16 VPU lanes from
+//!   16 distinct frontier vertices on skewed RMAT frontiers — plus the
+//!   layer policy of §4.1 and the Graph500 validator.
 //! * [`threads`] — a small OpenMP-like scoped thread pool (no rayon offline).
 //! * [`phi`] — an analytic Xeon Phi performance model (cores, SMT, affinity,
 //!   caches, ring/GDDR bandwidth) that converts measured work traces into
@@ -38,12 +42,16 @@
 //!
 //! ```no_run
 //! use phi_bfs::graph::{rmat::RmatConfig, csr::Csr};
-//! use phi_bfs::bfs::{vectorized::VectorizedBfs, BfsAlgorithm};
+//! use phi_bfs::bfs::{sell_vectorized::SellBfs, vectorized::VectorizedBfs, BfsAlgorithm};
 //!
 //! let edges = RmatConfig::graph500(14, 16).generate(42);
-//! let csr = Csr::from_edges(14, &edges);
+//! let csr = Csr::from_edge_list(14, &edges);
 //! let result = VectorizedBfs::default().run(&csr, 0);
 //! println!("reached {} vertices", result.tree.reached_count());
+//!
+//! // the SELL-16-σ engine: same tree, higher VPU lane occupancy
+//! let sell = SellBfs::default().run(&csr, 0);
+//! println!("mean lanes/issue: {:.1}", sell.trace.vpu_totals().mean_lanes_active());
 //! ```
 
 pub mod apps;

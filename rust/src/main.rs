@@ -2,7 +2,9 @@
 //!
 //! Commands:
 //! * `run` — a Graph500-style experiment (generate → 64 roots → validate →
-//!   TEPS stats) on any engine, including the PJRT-compiled kernel.
+//!   TEPS stats) on any engine of the ladder — serial, non-simd,
+//!   bitrace-free, simd, the SELL-16-σ lane-packed `sell`, the hybrids,
+//!   or the PJRT-compiled kernel.
 //! * `model` — Xeon Phi TEPS predictions for thread/affinity sweeps.
 //! * `table1` — the per-layer traversal profile (paper Table 1).
 //! * `info` — artifact + PJRT platform diagnostics.

@@ -108,9 +108,15 @@ pub fn price_layer(knc: &KncParams, cp: &CostParams, w: &LayerWork, bitmap_bytes
     let mut stall = 0.0;
 
     if w.vectorized {
-        let chunks = (w.full_chunks + w.masked_chunks) as f64;
+        // Gather-fed explorers (the SELL engine) issue rows without a
+        // vector load, so the chunk count is the larger of the load tally
+        // and the recorded explore issues; the extra issues are priced as
+        // masked chunks (their lane masks vary per row). For load-fed
+        // explorers the two tallies coincide and nothing changes.
+        let masked = w.masked_chunks.max(w.explore_issues.saturating_sub(w.full_chunks));
+        let chunks = (w.full_chunks + masked) as f64;
         issue += w.full_chunks as f64 * cp.chunk_issue;
-        issue += w.masked_chunks as f64 * (cp.chunk_issue + cp.masked_chunk_penalty);
+        issue += masked as f64 * (cp.chunk_issue + cp.masked_chunk_penalty);
         issue += w.gather_lanes as f64 * cp.gather_lane_issue;
         issue += w.scatter_lanes as f64 * cp.scatter_lane_issue;
         issue += w.restore_words as f64 * cp.restore_word_issue;

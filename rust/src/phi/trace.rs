@@ -17,6 +17,12 @@ pub struct LayerWork {
     pub full_chunks: u64,
     /// Masked (peel/remainder/unaligned) chunk loads.
     pub masked_chunks: u64,
+    /// Explore issues pushed through the Listing-1 dataflow (≥ the load
+    /// counts for gather-fed explorers like SELL, whose rows issue without
+    /// a vector load).
+    pub explore_issues: u64,
+    /// Lanes carrying real adjacency work across those issues.
+    pub lanes_active: u64,
     pub gather_lanes: u64,
     pub scatter_lanes: u64,
     pub alu_ops: u64,
@@ -35,6 +41,8 @@ impl LayerWork {
             vectorized: l.vectorized,
             full_chunks: l.vpu.vector_loads,
             masked_chunks: l.vpu.masked_loads,
+            explore_issues: l.vpu.explore_issues,
+            lanes_active: l.vpu.lanes_active,
             gather_lanes: l.vpu.gather_lanes,
             scatter_lanes: l.vpu.scatter_lanes,
             alu_ops: l.vpu.alu_ops,
@@ -117,6 +125,8 @@ impl WorkTrace {
                     vectorized: mean_degree >= 16,
                     full_chunks: full,
                     masked_chunks: masked,
+                    explore_issues: full + masked,
+                    lanes_active: lanes,
                     gather_lanes: 2 * lanes,
                     scatter_lanes: 2 * traversed as u64,
                     alu_ops: (full + masked) * 8,

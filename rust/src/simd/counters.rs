@@ -39,6 +39,14 @@ pub struct VpuCounters {
     pub peel_lanes: u64,
     /// Lanes processed in remainder chunks (segment tails, §4.2).
     pub remainder_lanes: u64,
+    /// Explore issues: one per adjacency chunk (per-vertex explorer) or
+    /// per packed row (SELL explorer) pushed through the Listing-1
+    /// dataflow.
+    pub explore_issues: u64,
+    /// Lanes carrying a real adjacency entry across those issues — the
+    /// occupancy numerator. `lanes_active / explore_issues` is the mean
+    /// VPU lane occupancy the SELL layout exists to raise.
+    pub lanes_active: u64,
 }
 
 impl VpuCounters {
@@ -62,6 +70,8 @@ impl VpuCounters {
         self.full_chunks += other.full_chunks;
         self.peel_lanes += other.peel_lanes;
         self.remainder_lanes += other.remainder_lanes;
+        self.explore_issues += other.explore_issues;
+        self.lanes_active += other.lanes_active;
     }
 
     /// Total lanes that went through the explore dataflow.
@@ -77,6 +87,17 @@ impl VpuCounters {
             return 1.0;
         }
         (self.full_chunks * 16) as f64 / total as f64
+    }
+
+    /// Mean lanes carrying real work per explore issue (0.0 when nothing
+    /// was explored). Per-vertex chunking tops out at the frontier's mean
+    /// degree; the SELL-16-σ explorer packs 16 distinct vertices per issue
+    /// to push this toward 16.
+    pub fn mean_lanes_active(&self) -> f64 {
+        if self.explore_issues == 0 {
+            return 0.0;
+        }
+        self.lanes_active as f64 / self.explore_issues as f64
     }
 }
 
@@ -104,5 +125,12 @@ mod tests {
     #[test]
     fn empty_efficiency_is_one() {
         assert_eq!(VpuCounters::default().vector_efficiency(), 1.0);
+    }
+
+    #[test]
+    fn mean_lanes_active() {
+        let c = VpuCounters { explore_issues: 4, lanes_active: 40, ..Default::default() };
+        assert!((c.mean_lanes_active() - 10.0).abs() < 1e-12);
+        assert_eq!(VpuCounters::default().mean_lanes_active(), 0.0);
     }
 }

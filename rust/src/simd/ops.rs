@@ -462,6 +462,14 @@ impl Vpu {
     pub fn note_remainder(&mut self, n: usize) {
         self.counters.remainder_lanes += n as u64;
     }
+
+    /// Record one explore issue carrying `active` real-work lanes (the
+    /// occupancy statistic the SELL-16-σ layout targets).
+    #[inline(always)]
+    pub fn note_explore_issue(&mut self, active: u32) {
+        self.counters.explore_issues += 1;
+        self.counters.lanes_active += active as u64;
+    }
 }
 
 /// `_MM_HINT_T0` / `_MM_HINT_T1` (§4.2: prefetch into L1 or L2).

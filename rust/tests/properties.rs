@@ -12,11 +12,13 @@
 use phi_bfs::bfs::bitrace_free::{restore_layer, BitRaceFreeBfs};
 use phi_bfs::bfs::parallel::ParallelBfs;
 use phi_bfs::bfs::policy::LayerPolicy;
+use phi_bfs::bfs::sell_vectorized::SellBfs;
 use phi_bfs::bfs::serial::{SerialLayeredBfs, SerialQueueBfs};
 use phi_bfs::bfs::state::{SharedBitmap, SharedPred};
 use phi_bfs::bfs::validate::validate;
 use phi_bfs::bfs::vectorized::{restore_layer_simd, SimdOpts, VectorizedBfs};
 use phi_bfs::bfs::BfsAlgorithm;
+use phi_bfs::coordinator::engine::{make_engine, EngineKind};
 use phi_bfs::graph::{Bitmap, Csr, EdgeList, RmatConfig};
 use phi_bfs::prop::{forall, Gen};
 use phi_bfs::{Pred, Vertex, PRED_INFINITY};
@@ -38,6 +40,12 @@ fn ladder(g: &mut Gen) -> Vec<Box<dyn BfsAlgorithm>> {
             num_threads: threads,
             opts: *g.choose(&[SimdOpts::none(), SimdOpts::aligned_masks(), SimdOpts::full()]),
             policy: *g.choose(&[LayerPolicy::All, LayerPolicy::FirstK(2), LayerPolicy::heavy()]),
+        }),
+        Box::new(SellBfs {
+            num_threads: threads,
+            opts: *g.choose(&[SimdOpts::none(), SimdOpts::aligned_masks(), SimdOpts::full()]),
+            policy: *g.choose(&[LayerPolicy::All, LayerPolicy::FirstK(2), LayerPolicy::heavy()]),
+            sigma: *g.choose(&[16usize, 64, 256, usize::MAX]),
         }),
     ]
 }
@@ -85,6 +93,35 @@ fn prop_rmat_distance_agreement() {
         let expected = SerialLayeredBfs.run(&csr, root).tree.distances().unwrap();
         for alg in ladder(g) {
             assert_eq!(alg.run(&csr, root).tree.distances().unwrap(), expected, "{}", alg.name());
+        }
+    });
+}
+
+#[test]
+fn prop_registered_engines_agree_and_validate_on_rmat() {
+    // Every engine the registry can construct — including the sell
+    // engines — must produce serial-identical distances AND pass the
+    // Graph500 five-check validator, across several scales and seeds.
+    forall("registered engines agree + validate on RMAT", 6, |g| {
+        let scale = g.size(8, 11) as u32;
+        let seed = g.size(0, 1 << 16) as u64;
+        let el = RmatConfig::graph500(scale, 8).generate(seed);
+        let csr = Csr::from_edge_list(scale, &el);
+        let root = g.size(0, csr.num_vertices() - 1) as Vertex;
+        let threads = g.size(1, 4);
+        let expected = SerialLayeredBfs.run(&csr, root).tree.distances().unwrap();
+        for name in EngineKind::NATIVE_NAMES {
+            let kind = EngineKind::parse(name, threads, "artifacts")
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            let engine = make_engine(&kind).unwrap_or_else(|e| panic!("{name}: {e}"));
+            let r = engine.run(&csr, root);
+            assert_eq!(
+                r.tree.distances().unwrap(),
+                expected,
+                "{name} differs from serial (scale={scale}, seed={seed}, root={root})"
+            );
+            let report = validate(&csr, &r.tree);
+            assert!(report.all_passed(), "{name}: {}", report.summary());
         }
     });
 }

@@ -1,0 +1,199 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The container's crate registry is offline, so this workspace vendors the
+//! subset of the anyhow API it actually uses: [`Error`], [`Result`], the
+//! [`anyhow!`], [`bail!`] and [`ensure!`] macros, and the [`Context`]
+//! extension trait for `Result` and `Option`. Error chains are captured as
+//! text (`{:#}` prints the full `context: cause: cause` chain, `{}` the top
+//! message) — enough for every diagnostic path in this repository. Swap the
+//! path dependency for the real crate when building online; no call site
+//! needs to change.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `anyhow::Result<T>` — a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A type-erased error: a top message plus a textual cause chain.
+pub struct Error {
+    msg: String,
+    /// Outermost-first causes (`{:#}` joins them with `": "`).
+    causes: Vec<String>,
+}
+
+impl Error {
+    /// Build from any displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), causes: Vec::new() }
+    }
+
+    /// Wrap with an outer context message, pushing the current message onto
+    /// the cause chain.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        let mut causes = Vec::with_capacity(self.causes.len() + 1);
+        causes.push(self.msg);
+        causes.extend(self.causes);
+        Error { msg: context.to_string(), causes }
+    }
+
+    /// The cause chain, outermost first (text-only).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.causes.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for cause in &self.causes {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if !self.causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.causes {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut causes = Vec::new();
+        let mut source = e.source();
+        while let Some(s) = source {
+            causes.push(s.to_string());
+            source = s.source();
+        }
+        Error { msg: e.to_string(), causes }
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Error::from(io_err()).context("opening file");
+        assert_eq!(format!("{e}"), "opening file");
+        assert_eq!(format!("{e:#}"), "opening file: missing");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let n = 3;
+        let e = anyhow!("bad value {n}");
+        assert_eq!(e.to_string(), "bad value 3");
+        let e = anyhow!("{} != {}", 1, 2);
+        assert_eq!(e.to_string(), "1 != 2");
+
+        fn fails() -> Result<()> {
+            bail!("boom {}", 7);
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "boom 7");
+
+        fn guarded(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert!(guarded(1).is_ok());
+        assert_eq!(guarded(-1).unwrap_err().to_string(), "x must be positive, got -1");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(format!("{e:#}"), "ctx: missing");
+
+        let o: Option<i32> = None;
+        let e = o.with_context(|| format!("lazy {}", 5)).unwrap_err();
+        assert_eq!(e.to_string(), "lazy 5");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("12").unwrap(), 12);
+        assert!(parse("nope").is_err());
+    }
+}
