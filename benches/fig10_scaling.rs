@@ -12,7 +12,7 @@ use phi_bfs::benchkit::{env_param, section, Bench};
 use phi_bfs::bfs::parallel::ParallelBfs;
 use phi_bfs::bfs::policy::LayerPolicy;
 use phi_bfs::bfs::vectorized::{SimdOpts, VectorizedBfs};
-use phi_bfs::bfs::BfsAlgorithm;
+use phi_bfs::bfs::BfsEngine;
 use phi_bfs::graph::stats::LayerProfile;
 use phi_bfs::graph::{Csr, RmatConfig};
 use phi_bfs::harness::report::{mteps, Table};
@@ -38,8 +38,11 @@ fn main() {
         let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
         let nonsimd = ParallelBfs { num_threads: 1 };
         let simd = VectorizedBfs { num_threads: 1, opts: SimdOpts::full(), policy: LayerPolicy::heavy() };
-        let m1 = bench.run(&format!("SCALE {scale} non-simd"), || nonsimd.run(&g, root));
-        let m2 = bench.run(&format!("SCALE {scale} simd"), || simd.run(&g, root));
+        // both sides prepared outside the timer — like-for-like traversal time
+        let nonsimd_prepared = nonsimd.prepare(&g).expect("prepare");
+        let simd_prepared = simd.prepare(&g).expect("prepare");
+        let m1 = bench.run(&format!("SCALE {scale} non-simd"), || nonsimd_prepared.run(root));
+        let m2 = bench.run(&format!("SCALE {scale} simd"), || simd_prepared.run(root));
         println!("{}", m1.report_line());
         println!("{}", m2.report_line());
     }

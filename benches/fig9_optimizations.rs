@@ -13,7 +13,7 @@
 use phi_bfs::benchkit::{env_param, section, Bench};
 use phi_bfs::bfs::policy::LayerPolicy;
 use phi_bfs::bfs::vectorized::{SimdOpts, VectorizedBfs};
-use phi_bfs::bfs::BfsAlgorithm;
+use phi_bfs::bfs::BfsEngine;
 use phi_bfs::graph::{Csr, RmatConfig};
 use phi_bfs::harness::report::{mteps, Table};
 use phi_bfs::phi::cost::CostParams;
@@ -40,9 +40,10 @@ fn main() {
     let mut traces = Vec::new();
     for (name, opts) in opt_levels() {
         let alg = VectorizedBfs { num_threads: 1, opts, policy: LayerPolicy::heavy() };
-        let m = bench.run(name, || alg.run(&g, root));
+        let prepared = alg.prepare(&g).expect("prepare");
+        let m = bench.run(name, || prepared.run(root));
         println!("{}", m.report_line());
-        let r = alg.run(&g, root);
+        let r = prepared.run(root);
         let vpu = r.trace.vpu_totals();
         println!(
             "    full_chunks={} masked={} gather_lanes={} prefetches={} vector_efficiency={:.3}",

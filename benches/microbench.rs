@@ -14,7 +14,7 @@ use phi_bfs::bfs::policy::LayerPolicy;
 use phi_bfs::bfs::serial::{SerialLayeredBfs, SerialQueueBfs};
 use phi_bfs::bfs::state::{SharedBitmap, SharedPred};
 use phi_bfs::bfs::vectorized::{restore_layer_simd, SimdOpts, VectorizedBfs};
-use phi_bfs::bfs::BfsAlgorithm;
+use phi_bfs::bfs::BfsEngine;
 use phi_bfs::graph::{Bitmap, Csr, RmatConfig};
 
 fn main() {
@@ -73,7 +73,7 @@ fn main() {
         let r = SerialQueueBfs.run(&g, root);
         r.trace.total_edges_scanned() as f64 / 2.0
     };
-    let algs: Vec<(&str, Box<dyn BfsAlgorithm>)> = vec![
+    let algs: Vec<(&str, Box<dyn BfsEngine>)> = vec![
         ("serial-queue", Box::new(SerialQueueBfs)),
         ("serial-layered", Box::new(SerialLayeredBfs)),
         ("non-simd (alg 2)", Box::new(ParallelBfs { num_threads: 1 })),
@@ -88,7 +88,9 @@ fn main() {
         ),
     ];
     for (name, alg) in algs {
-        let m = bench.run(name, || alg.run(&g, root));
+        // prepare once per engine — the ladder bench times pure traversal
+        let prepared = alg.prepare(&g).expect("prepare");
+        let m = bench.run(name, || prepared.run(root));
         println!("{}  [host {:>7.2} MTEPS]", m.report_line(), m.rate(teps_edges) / 1e6);
     }
     println!("\nnote: the emulated-VPU path models instruction semantics, not host speed —");

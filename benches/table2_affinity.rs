@@ -10,7 +10,7 @@
 use phi_bfs::benchkit::{env_param, section};
 use phi_bfs::bfs::policy::LayerPolicy;
 use phi_bfs::bfs::vectorized::{SimdOpts, VectorizedBfs};
-use phi_bfs::bfs::BfsAlgorithm;
+use phi_bfs::bfs::BfsEngine;
 use phi_bfs::graph::{Csr, RmatConfig};
 use phi_bfs::harness::report::{sci, Table};
 use phi_bfs::phi::cost::CostParams;

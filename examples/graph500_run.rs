@@ -41,6 +41,12 @@ fn main() -> anyhow::Result<()> {
         report.num_vertices, report.num_directed_edges, report.construction_seconds
     );
     println!(
+        "kernel 1: engine prepared once in {:.4}s (graph-level layouts + stats, \
+         shared across all {} roots)",
+        report.preparation_seconds,
+        report.runs.len()
+    );
+    println!(
         "kernel 2: {} traversals, {} zero-TEPS (unconnected) roots, validation: {}",
         report.runs.len(),
         report.stats.zero_runs,

@@ -11,7 +11,7 @@
 use phi_bfs::bfs::policy::LayerPolicy;
 use phi_bfs::bfs::validate::validate;
 use phi_bfs::bfs::vectorized::{SimdOpts, VectorizedBfs};
-use phi_bfs::bfs::BfsAlgorithm;
+use phi_bfs::bfs::BfsEngine;
 use phi_bfs::graph::{Csr, RmatConfig};
 use phi_bfs::runtime::bfs::PjrtBfs;
 

@@ -8,7 +8,7 @@
 use phi_bfs::bfs::policy::LayerPolicy;
 use phi_bfs::bfs::validate::validate;
 use phi_bfs::bfs::vectorized::{SimdOpts, VectorizedBfs};
-use phi_bfs::bfs::BfsAlgorithm;
+use phi_bfs::bfs::BfsEngine;
 use phi_bfs::graph::{Csr, RmatConfig};
 
 fn main() {
@@ -23,16 +23,20 @@ fn main() {
     );
 
     // 2. Run the vectorized top-down BFS (Listing 1 on the emulated VPU,
-    //    restoration process, SIMD on the heavy layers per §4.1).
+    //    restoration process, SIMD on the heavy layers per §4.1). Engines
+    //    are two-phase: prepare() binds the engine to the graph once
+    //    (degree stats, aligned padded-CSR view), then run() traverses any
+    //    number of roots against the shared prepared state.
     let algorithm = VectorizedBfs {
         num_threads: 4,
         opts: SimdOpts::full(),
         policy: LayerPolicy::heavy(),
     };
+    let prepared = algorithm.prepare(&graph).expect("prepare");
     let root = (0..graph.num_vertices() as u32)
         .max_by_key(|&v| graph.degree(v))
         .unwrap();
-    let result = algorithm.run(&graph, root);
+    let result = prepared.run(root);
 
     println!(
         "bfs from {}: reached {} vertices in {} layers",

@@ -1,8 +1,12 @@
 //! Connected components via repeated BFS sweeps: pick the smallest
 //! unassigned vertex, traverse with any engine, label everything reached,
 //! repeat. (On undirected graphs BFS reachability = connectivity.)
+//!
+//! A component sweep is a many-roots workload over one graph — exactly
+//! what the two-phase engine API exists for — so the engine is prepared
+//! once and every sweep reuses the prepared instance.
 
-use crate::bfs::BfsAlgorithm;
+use crate::bfs::BfsEngine;
 use crate::graph::Csr;
 use crate::Vertex;
 
@@ -32,8 +36,10 @@ impl Components {
 }
 
 /// Label the connected components of `g` using `engine` for each sweep.
-pub fn connected_components(g: &Csr, engine: &dyn BfsAlgorithm) -> Components {
+/// The engine is prepared once; all sweeps share the prepared state.
+pub fn connected_components(g: &Csr, engine: &dyn BfsEngine) -> Components {
     let n = g.num_vertices();
+    let prepared = engine.prepare(g).expect("engine preparation failed");
     let mut label: Vec<Option<Vertex>> = vec![None; n];
     let mut count = 0usize;
     for v in 0..n as Vertex {
@@ -41,7 +47,7 @@ pub fn connected_components(g: &Csr, engine: &dyn BfsAlgorithm) -> Components {
             continue;
         }
         count += 1;
-        let result = engine.run(g, v);
+        let result = prepared.run(v);
         for u in 0..n as Vertex {
             if result.tree.reached(u) && label[u as usize].is_none() {
                 label[u as usize] = Some(v);

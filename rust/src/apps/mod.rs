@@ -8,7 +8,7 @@
 //!
 //! * [`components`] — connected components by repeated BFS sweeps;
 //! * [`sssp`] — unweighted single-source shortest paths (distances +
-//!   path extraction) from any [`crate::bfs::BfsAlgorithm`];
+//!   path extraction) from any [`crate::bfs::BfsEngine`];
 //! * [`betweenness`] — Brandes' betweenness centrality, whose forward
 //!   phase is layer-synchronous BFS (and therefore reuses the paper's
 //!   frontier machinery).

@@ -2,7 +2,7 @@
 //! the spanning tree's distance map *is* the shortest-path metric, and
 //! the predecessor array encodes one shortest path per vertex.
 
-use crate::bfs::{BfsAlgorithm, BfsTree};
+use crate::bfs::{BfsEngine, BfsTree};
 use crate::graph::Csr;
 use crate::Vertex;
 
@@ -15,7 +15,7 @@ pub struct ShortestPaths {
 
 impl ShortestPaths {
     /// Compute with the given engine.
-    pub fn compute(g: &Csr, source: Vertex, engine: &dyn BfsAlgorithm) -> Self {
+    pub fn compute(g: &Csr, source: Vertex, engine: &dyn BfsEngine) -> Self {
         let result = engine.run(g, source);
         let dist = result.tree.distances().expect("engine produced a corrupt tree");
         ShortestPaths { source, tree: result.tree, dist }

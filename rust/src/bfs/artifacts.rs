@@ -1,0 +1,186 @@
+//! Per-graph artifacts for the two-phase engine API.
+//!
+//! A Graph500 experiment is 64 traversals over one read-only graph, so
+//! anything derived from the graph alone — degree statistics, the
+//! SELL-16-σ layout, the aligned padded-CSR view — is *graph-level* state:
+//! built once by [`crate::bfs::BfsEngine::prepare`], then shared by every
+//! root's [`crate::bfs::PreparedBfs::run`] (and across the coordinator's
+//! worker threads via `Arc`). [`GraphArtifacts`] is the typed home for
+//! that state; the expensive members are built lazily so an engine only
+//! pays for the layouts it actually traverses.
+//!
+//! The artifacts also carry the cross-root [`PolicyFeedback`] channel:
+//! occupancy measured while running earlier roots of a job accumulates
+//! here and steers the per-layer chunking choice of later roots (see
+//! [`crate::bfs::policy`]).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use super::policy::PolicyFeedback;
+use crate::graph::{Csr, PaddedCsr, Sell16};
+
+pub use crate::graph::stats::DegreeStats;
+
+/// Typed per-graph state shared across all roots of a job.
+///
+/// Only the [`PolicyFeedback`] channel exists up front; everything
+/// derived from the graph — [`DegreeStats`], the layouts — is built on
+/// first request and cached, so an engine only pays for the artifacts it
+/// actually reads and "build exactly once per job" holds by construction.
+/// The build counters exist so tests can assert it.
+pub struct GraphArtifacts {
+    stats: OnceLock<DegreeStats>,
+    feedback: PolicyFeedback,
+    sell: OnceLock<Arc<Sell16>>,
+    padded: OnceLock<Arc<PaddedCsr>>,
+    sell_builds: AtomicUsize,
+    padded_builds: AtomicUsize,
+}
+
+impl GraphArtifacts {
+    /// Create empty artifacts for `g`. Construction is free; the caller
+    /// must pass the same graph to the lazy accessors below.
+    pub fn for_graph(_g: &Csr) -> Self {
+        GraphArtifacts {
+            stats: OnceLock::new(),
+            feedback: PolicyFeedback::default(),
+            sell: OnceLock::new(),
+            padded: OnceLock::new(),
+            sell_builds: AtomicUsize::new(0),
+            padded_builds: AtomicUsize::new(0),
+        }
+    }
+
+    /// Degree statistics of `g`, computed on first call and cached.
+    pub fn stats(&self, g: &Csr) -> &DegreeStats {
+        self.stats.get_or_init(|| DegreeStats::compute(g))
+    }
+
+    /// The cross-root occupancy feedback channel of this job.
+    pub fn feedback(&self) -> &PolicyFeedback {
+        &self.feedback
+    }
+
+    /// The SELL-16-σ layout of `g`, built on first call and cached. A call
+    /// with a different σ than the cached layout builds a fresh layout
+    /// (uncached) — within one job the engine's σ is fixed, so this path
+    /// only triggers when artifacts are deliberately shared across
+    /// differently-configured engines.
+    pub fn sell_layout(&self, g: &Csr, sigma: usize) -> Arc<Sell16> {
+        let cached = self.sell.get_or_init(|| {
+            self.sell_builds.fetch_add(1, Ordering::Relaxed);
+            Arc::new(Sell16::from_csr(g, sigma))
+        });
+        if cached.sigma == sigma.max(crate::graph::sell::SELL_C) {
+            Arc::clone(cached)
+        } else {
+            self.sell_builds.fetch_add(1, Ordering::Relaxed);
+            Arc::new(Sell16::from_csr(g, sigma))
+        }
+    }
+
+    /// The aligned padded-CSR view of `g`, built on first call and cached.
+    pub fn padded_csr(&self, g: &Csr) -> Arc<PaddedCsr> {
+        Arc::clone(self.padded.get_or_init(|| {
+            self.padded_builds.fetch_add(1, Ordering::Relaxed);
+            Arc::new(PaddedCsr::from_csr(g))
+        }))
+    }
+
+    /// How many times a [`Sell16`] layout was constructed through these
+    /// artifacts (the "built exactly once per job" test hook).
+    pub fn sell_builds(&self) -> usize {
+        self.sell_builds.load(Ordering::Relaxed)
+    }
+
+    /// How many times a [`PaddedCsr`] was constructed through these
+    /// artifacts.
+    pub fn padded_builds(&self) -> usize {
+        self.padded_builds.load(Ordering::Relaxed)
+    }
+}
+
+impl std::fmt::Debug for GraphArtifacts {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GraphArtifacts")
+            .field("stats", &self.stats.get())
+            .field("sell_builds", &self.sell_builds())
+            .field("padded_builds", &self.padded_builds())
+            .finish_non_exhaustive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EdgeList, RmatConfig};
+
+    fn rmat(scale: u32, ef: usize, seed: u64) -> Csr {
+        let el = RmatConfig::graph500(scale, ef).generate(seed);
+        Csr::from_edge_list(scale, &el)
+    }
+
+    #[test]
+    fn stats_match_graph() {
+        let g = rmat(10, 8, 3);
+        let s = DegreeStats::compute(&g);
+        assert_eq!(s.num_vertices, g.num_vertices());
+        assert_eq!(s.num_directed_edges, g.num_directed_edges());
+        let max =
+            (0..g.num_vertices() as crate::Vertex).map(|v| g.degree(v)).max().unwrap();
+        assert_eq!(s.max, max);
+        assert!(s.max as f64 > s.mean, "RMAT graphs are skewed");
+    }
+
+    #[test]
+    fn stats_empty_graph_no_nan() {
+        let g = Csr::from_edge_list(0, &EdgeList::with_edges(1, vec![]));
+        let s = DegreeStats::compute(&g);
+        assert_eq!(s.mean, 0.0);
+        assert!(s.suggested_sigma() >= 16);
+    }
+
+    #[test]
+    fn layouts_build_once_and_are_shared() {
+        let g = rmat(9, 8, 4);
+        let a = GraphArtifacts::for_graph(&g);
+        assert_eq!(a.sell_builds(), 0);
+        let s1 = a.sell_layout(&g, 256);
+        let s2 = a.sell_layout(&g, 256);
+        assert!(Arc::ptr_eq(&s1, &s2));
+        assert_eq!(a.sell_builds(), 1);
+        let p1 = a.padded_csr(&g);
+        let p2 = a.padded_csr(&g);
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!(a.padded_builds(), 1);
+    }
+
+    #[test]
+    fn sigma_mismatch_builds_fresh_without_evicting() {
+        let g = rmat(9, 8, 5);
+        let a = GraphArtifacts::for_graph(&g);
+        let s1 = a.sell_layout(&g, 256);
+        let s3 = a.sell_layout(&g, usize::MAX);
+        assert!(!Arc::ptr_eq(&s1, &s3));
+        assert_eq!(a.sell_builds(), 2);
+        // the original σ stays cached
+        let s4 = a.sell_layout(&g, 256);
+        assert!(Arc::ptr_eq(&s1, &s4));
+        assert_eq!(a.sell_builds(), 2);
+    }
+
+    #[test]
+    fn suggested_sigma_per_scale() {
+        assert_eq!(
+            DegreeStats { num_vertices: 1 << 12, ..DegreeStats::compute(&rmat(8, 8, 6)) }
+                .suggested_sigma(),
+            usize::MAX
+        );
+        assert_eq!(
+            DegreeStats { num_vertices: 1 << 20, ..DegreeStats::compute(&rmat(8, 8, 6)) }
+                .suggested_sigma(),
+            crate::bfs::sell_vectorized::DEFAULT_SIGMA
+        );
+    }
+}

@@ -14,10 +14,16 @@
 //! Note the phase structure: `visited` is updated **only** by restoration —
 //! that is what keeps `visited` consistent without atomics (Alg 3 line 24).
 
+use std::sync::Arc;
 use std::time::Instant;
 
+use anyhow::Result;
+
 use super::state::{SharedBitmap, SharedPred};
-use super::{BfsAlgorithm, BfsResult, BfsTree, LayerTrace, RunTrace, WORD_GRAIN};
+use super::{
+    BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, PreparedStateless,
+    RunTrace, StatelessBfs, WORD_GRAIN,
+};
 use crate::graph::bitmap::BITS_PER_WORD;
 use crate::graph::{Bitmap, Csr};
 use crate::threads::parallel_for_dynamic;
@@ -107,12 +113,12 @@ pub fn restore_layer(
     total
 }
 
-impl BfsAlgorithm for BitRaceFreeBfs {
+impl StatelessBfs for BitRaceFreeBfs {
     fn name(&self) -> &'static str {
         "bitrace-free"
     }
 
-    fn run(&self, g: &Csr, root: Vertex) -> BfsResult {
+    fn traverse(&self, g: &Csr, root: Vertex) -> BfsResult {
         let n = g.num_vertices();
         let nodes = n as Pred;
         let pred = SharedPred::new_infinity(n);
@@ -185,6 +191,20 @@ impl BfsAlgorithm for BitRaceFreeBfs {
             tree: BfsTree::new(root, pred.into_vec()),
             trace: RunTrace { layers, num_threads: self.num_threads },
         }
+    }
+}
+
+impl BfsEngine for BitRaceFreeBfs {
+    fn name(&self) -> &'static str {
+        "bitrace-free"
+    }
+
+    fn prepare_with<'g>(
+        &self,
+        g: &'g Csr,
+        artifacts: Arc<GraphArtifacts>,
+    ) -> Result<Box<dyn PreparedBfs + 'g>> {
+        Ok(Box::new(PreparedStateless::new(g, *self, artifacts)))
     }
 }
 

@@ -17,15 +17,21 @@
 //! unexplored edge volume, switch back when the frontier shrinks below
 //! `|V| / beta`.
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use super::sell_vectorized::{sell_top_down_layer, DEFAULT_SIGMA};
+use anyhow::Result;
+
+use super::policy::PolicyFeedback;
+use super::sell_vectorized::SellStep;
 use super::state::{SharedBitmap, SharedPred};
 use super::vectorized::SimdOpts;
-use super::{BfsAlgorithm, BfsResult, BfsTree, LayerTrace, RunTrace, WORD_GRAIN};
+use super::{
+    BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, RunTrace, WORD_GRAIN,
+};
 use crate::graph::bitmap::BITS_PER_WORD;
 use crate::graph::sell::Sell16;
-use crate::graph::{Bitmap, Csr};
+use crate::graph::{Bitmap, Csr, PaddedCsr};
 use crate::simd::ops::Vpu;
 use crate::simd::vec512::{Mask16, LANES};
 use crate::threads::parallel_for_dynamic;
@@ -184,15 +190,19 @@ impl Default for HybridBfs {
     }
 }
 
-impl BfsAlgorithm for HybridBfs {
-    fn name(&self) -> &'static str {
-        "hybrid"
-    }
-
-    fn run(&self, g: &Csr, root: Vertex) -> BfsResult {
+impl HybridBfs {
+    /// One traversal. `sell_layout`/`padded`/`feedback` are the per-graph
+    /// artifacts prepare built (all `None`/unused when `self.sell` is off).
+    fn traverse(
+        &self,
+        g: &Csr,
+        sell_layout: Option<&Sell16>,
+        padded: Option<&PaddedCsr>,
+        feedback: Option<&PolicyFeedback>,
+        root: Vertex,
+    ) -> BfsResult {
         let n = g.num_vertices();
         let total_edges = g.num_directed_edges();
-        let sell_layout = self.sell.then(|| Sell16::from_csr(g, DEFAULT_SIGMA));
         let pred = SharedPred::new_infinity(n);
         let visited = SharedBitmap::new(n);
         let mut frontier = Bitmap::new(n);
@@ -240,13 +250,18 @@ impl BfsAlgorithm for HybridBfs {
                     );
                     (e, Default::default(), Default::default())
                 }
-            } else if let Some(sl) = &sell_layout {
+            } else if let Some(sl) = sell_layout {
                 // the shared SELL top-down step: chunking choice +
                 // exploration + vectorized restoration
-                let (e, rstats, vpu) = sell_top_down_layer(
-                    self.num_threads,
+                let step = SellStep {
+                    num_threads: self.num_threads,
                     g,
-                    sl,
+                    sell: sl,
+                    padded,
+                    feedback,
+                    opts: self.opts,
+                };
+                let (e, rstats, vpu) = step.layer(
                     &frontier,
                     frontier_count,
                     frontier_edges,
@@ -254,7 +269,6 @@ impl BfsAlgorithm for HybridBfs {
                     &next,
                     &pred,
                     n as Pred,
-                    self.opts,
                 );
                 (e, vpu, rstats)
             } else {
@@ -311,10 +325,65 @@ impl BfsAlgorithm for HybridBfs {
             layer += 1;
         }
 
+        if let Some(f) = feedback {
+            f.record_root();
+        }
+
         BfsResult {
             tree: BfsTree::new(root, pred.into_vec()),
             trace: RunTrace { layers, num_threads: self.num_threads },
         }
+    }
+}
+
+/// A [`HybridBfs`] bound to one graph. When the sell top-down step is
+/// enabled the prepared state carries the σ-resolved [`Sell16`] layout and
+/// the aligned per-vertex view, both built once per graph.
+pub struct PreparedHybrid<'g> {
+    g: &'g Csr,
+    sell: Option<Arc<Sell16>>,
+    padded: Option<Arc<PaddedCsr>>,
+    engine: HybridBfs,
+    artifacts: Arc<GraphArtifacts>,
+}
+
+impl PreparedBfs for PreparedHybrid<'_> {
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn run(&self, root: Vertex) -> BfsResult {
+        let feedback = self.sell.is_some().then(|| self.artifacts.feedback());
+        self.engine.traverse(self.g, self.sell.as_deref(), self.padded.as_deref(), feedback, root)
+    }
+
+    fn artifacts(&self) -> &GraphArtifacts {
+        &self.artifacts
+    }
+}
+
+impl BfsEngine for HybridBfs {
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn prepare_with<'g>(
+        &self,
+        g: &'g Csr,
+        artifacts: Arc<GraphArtifacts>,
+    ) -> Result<Box<dyn PreparedBfs + 'g>> {
+        let sell = if self.sell {
+            let sigma = artifacts.stats(g).suggested_sigma();
+            Some(artifacts.sell_layout(g, sigma))
+        } else {
+            None
+        };
+        let padded = if self.sell && self.opts.aligned {
+            Some(artifacts.padded_csr(g))
+        } else {
+            None
+        };
+        Ok(Box::new(PreparedHybrid { g, sell, padded, engine: *self, artifacts }))
     }
 }
 

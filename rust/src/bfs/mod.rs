@@ -11,11 +11,35 @@
 //! | [`policy`] | §4.1 — which layers run vectorized, and how the sell engine chunks them |
 //! | [`validate`] | §5.3 — the Graph500 five-check soft validator |
 //! | [`state`] | shared frontier/visited/predecessor state for the threaded versions |
+//! | [`artifacts`] | per-graph prepared state ([`GraphArtifacts`]) shared across roots |
 //!
-//! All algorithms implement [`BfsAlgorithm`] and return a [`BfsResult`]:
-//! the spanning tree (predecessor array, §3.1) plus a [`RunTrace`] of
-//! per-layer work counters that the Xeon Phi performance model prices.
+//! # The two-phase engine API
+//!
+//! The paper's experimental unit is the Graph500 run: **64 traversals over
+//! one read-only graph**. Per-graph work (the SELL-16-σ layout, the
+//! aligned padded-CSR view, degree statistics) must therefore be paid once
+//! per graph, not once per root, so every engine implements [`BfsEngine`]
+//! in two phases:
+//!
+//! 1. [`BfsEngine::prepare`] — expensive, once per graph. Builds the
+//!    engine's [`GraphArtifacts`] and returns a [`PreparedBfs`] bound to
+//!    the graph.
+//! 2. [`PreparedBfs::run`] — cheap, once per root. `PreparedBfs` is
+//!    `Sync`, so the coordinator's workers share one prepared instance by
+//!    reference instead of constructing a private engine per root.
+//!
+//! The prepared instance also carries the cross-root
+//! [`policy::PolicyFeedback`] channel: occupancy measured on earlier roots
+//! of a job steers the per-layer chunking choice of later roots.
+//!
+//! [`BfsEngine::run`] is the provided one-shot convenience (prepare +
+//! run); benchmarks and multi-root callers should prepare once and reuse.
+//!
+//! All traversals return a [`BfsResult`]: the spanning tree (predecessor
+//! array, §3.1) plus a [`RunTrace`] of per-layer work counters that the
+//! Xeon Phi performance model prices.
 
+pub mod artifacts;
 pub mod bitrace_free;
 pub mod bottom_up;
 pub mod parallel;
@@ -25,6 +49,12 @@ pub mod serial;
 pub mod state;
 pub mod validate;
 pub mod vectorized;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+pub use artifacts::{DegreeStats, GraphArtifacts};
 
 use crate::graph::Csr;
 use crate::simd::VpuCounters;
@@ -200,13 +230,86 @@ pub struct BfsResult {
     pub trace: RunTrace,
 }
 
-/// Common interface over the algorithm ladder.
-pub trait BfsAlgorithm {
+/// Common interface over the algorithm ladder — the *configuration* half
+/// of the two-phase API (see the module docs). An engine value is a cheap,
+/// copyable description (thread count, SIMD options, policy); all
+/// per-graph state lives in the [`PreparedBfs`] returned by
+/// [`BfsEngine::prepare`].
+pub trait BfsEngine {
     /// Short name for reports ("serial", "non-simd", "simd", ...).
     fn name(&self) -> &'static str;
 
-    /// Traverse `g` from `root`.
-    fn run(&self, g: &Csr, root: Vertex) -> BfsResult;
+    /// Phase 1 with caller-supplied artifacts: bind the engine to `g`,
+    /// building (or reusing, when `artifacts` already carries them) every
+    /// per-graph structure the traversals need. The coordinator calls this
+    /// once per job with artifacts it shares across worker threads.
+    fn prepare_with<'g>(
+        &self,
+        g: &'g Csr,
+        artifacts: Arc<GraphArtifacts>,
+    ) -> Result<Box<dyn PreparedBfs + 'g>>;
+
+    /// Phase 1: bind the engine to `g` with fresh artifacts.
+    fn prepare<'g>(&self, g: &'g Csr) -> Result<Box<dyn PreparedBfs + 'g>> {
+        self.prepare_with(g, Arc::new(GraphArtifacts::for_graph(g)))
+    }
+
+    /// One-shot convenience: prepare for `g` and traverse from `root`.
+    /// Multi-root callers should [`BfsEngine::prepare`] once instead —
+    /// this pays the per-graph phase on every call.
+    fn run(&self, g: &Csr, root: Vertex) -> BfsResult {
+        self.prepare(g).expect("engine preparation failed").run(root)
+    }
+}
+
+/// Phase 2 of the engine API: an engine bound to one graph. `Sync` by
+/// contract — the coordinator's worker threads share one instance and pull
+/// roots from a common cursor, so `run` must be callable concurrently.
+pub trait PreparedBfs: Sync {
+    /// Short name of the underlying engine.
+    fn name(&self) -> &'static str;
+
+    /// Traverse the prepared graph from `root`.
+    fn run(&self, root: Vertex) -> BfsResult;
+
+    /// The per-graph artifacts this instance was prepared with.
+    fn artifacts(&self) -> &GraphArtifacts;
+}
+
+/// Engines whose traversal uses no per-graph artifacts beyond the graph
+/// itself (the serial/scalar rungs of the ladder). Implementing this is
+/// enough to plug into the two-phase API through [`PreparedStateless`].
+pub(crate) trait StatelessBfs: Sync {
+    fn name(&self) -> &'static str;
+    fn traverse(&self, g: &Csr, root: Vertex) -> BfsResult;
+}
+
+/// A [`PreparedBfs`] for [`StatelessBfs`] engines: just the engine config,
+/// the graph reference, and the (unused but carried) artifacts.
+pub(crate) struct PreparedStateless<'g, E> {
+    g: &'g Csr,
+    engine: E,
+    artifacts: Arc<GraphArtifacts>,
+}
+
+impl<'g, E> PreparedStateless<'g, E> {
+    pub(crate) fn new(g: &'g Csr, engine: E, artifacts: Arc<GraphArtifacts>) -> Self {
+        PreparedStateless { g, engine, artifacts }
+    }
+}
+
+impl<E: StatelessBfs> PreparedBfs for PreparedStateless<'_, E> {
+    fn name(&self) -> &'static str {
+        self.engine.name()
+    }
+
+    fn run(&self, root: Vertex) -> BfsResult {
+        self.engine.traverse(self.g, root)
+    }
+
+    fn artifacts(&self) -> &GraphArtifacts {
+        &self.artifacts
+    }
 }
 
 #[cfg(test)]

@@ -12,10 +12,16 @@
 //! imbalanced (§6.1 attributes the TEPS jitter at high thread counts to
 //! exactly this imbalance).
 
+use std::sync::Arc;
 use std::time::Instant;
 
+use anyhow::Result;
+
 use super::state::{SharedBitmap, SharedPred};
-use super::{BfsAlgorithm, BfsResult, BfsTree, LayerTrace, RunTrace, WORD_GRAIN};
+use super::{
+    BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, PreparedStateless,
+    RunTrace, StatelessBfs, WORD_GRAIN,
+};
 use crate::graph::bitmap::BITS_PER_WORD;
 use crate::graph::{Bitmap, Csr};
 use crate::threads::parallel_for_dynamic;
@@ -41,12 +47,12 @@ struct LayerAcc {
     traversed: usize,
 }
 
-impl BfsAlgorithm for ParallelBfs {
+impl StatelessBfs for ParallelBfs {
     fn name(&self) -> &'static str {
         "non-simd"
     }
 
-    fn run(&self, g: &Csr, root: Vertex) -> BfsResult {
+    fn traverse(&self, g: &Csr, root: Vertex) -> BfsResult {
         let n = g.num_vertices();
         let pred = SharedPred::new_infinity(n);
         let visited = SharedBitmap::new(n);
@@ -121,6 +127,20 @@ impl BfsAlgorithm for ParallelBfs {
             tree: BfsTree::new(root, pred.into_vec()),
             trace: RunTrace { layers, num_threads: self.num_threads },
         }
+    }
+}
+
+impl BfsEngine for ParallelBfs {
+    fn name(&self) -> &'static str {
+        "non-simd"
+    }
+
+    fn prepare_with<'g>(
+        &self,
+        g: &'g Csr,
+        artifacts: Arc<GraphArtifacts>,
+    ) -> Result<Box<dyn PreparedBfs + 'g>> {
+        Ok(Box::new(PreparedStateless::new(g, *self, artifacts)))
     }
 }
 

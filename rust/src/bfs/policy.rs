@@ -9,6 +9,19 @@
 //!
 //! The policy is a parameter here so the ablation bench can compare the
 //! paper's choice against alternatives.
+//!
+//! The SELL engine's per-layer *chunking* choice additionally learns from
+//! measurement: [`PolicyFeedback`] accumulates the occupancy
+//! (`lanes_active / explore_issues`) each chunking mode achieved on
+//! earlier roots of the same job, bucketed by frontier mean degree, and
+//! later roots pick whichever mode measured better — replacing the fixed
+//! [`LayerPolicy::SELL_PER_VERTEX_DEGREE`] threshold once real data
+//! exists.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::simd::vec512::LANES;
+use crate::simd::VpuCounters;
 
 /// Decides, per layer, whether to run the vectorized explorer.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -100,6 +113,173 @@ impl LayerPolicy {
     }
 }
 
+/// Mean-degree bands the feedback buckets layers into (log₂ bands:
+/// 1, 2–3, 4–7, 8–15, 16–31, ≥32). A layer's chunking behaviour is a
+/// function of its frontier's degree shape, so occupancy is only
+/// comparable within a band.
+pub const OCC_BANDS: usize = 6;
+
+/// Issues a (band, mode) cell must accumulate before its measured
+/// occupancy is trusted over the static threshold.
+const MIN_FEEDBACK_ISSUES: u64 = 64;
+
+#[derive(Default)]
+struct ModeOcc {
+    issues: AtomicU64,
+    lanes: AtomicU64,
+}
+
+/// Cross-root occupancy feedback for the SELL engine's per-layer chunking
+/// choice (a ROADMAP item: learn the choice from the measured
+/// `lanes_active / explore_issues` of previous roots in a 64-root run).
+///
+/// Thread-safe by construction (atomic cells): the coordinator's workers
+/// share one instance through [`crate::bfs::GraphArtifacts`] and record
+/// concurrently. The protocol per layer is [`PolicyFeedback::choose`] →
+/// explore → [`PolicyFeedback::record_layer`]; engines call
+/// [`PolicyFeedback::record_root`] when a traversal completes.
+///
+/// Decision rule: once both modes have `MIN_FEEDBACK_ISSUES` measured
+/// issues in the layer's degree band, pick the higher-occupancy mode.
+/// While only lane packing is measured, probe per-vertex chunking **only
+/// where it can plausibly win**: when its optimistic closed-form bound
+/// ([`PolicyFeedback::per_vertex_occupancy_bound`]) exceeds the measured
+/// packed occupancy. A blind probe would burn whole low-degree layers at
+/// 1–3 lanes/issue just to confirm what the bound already rules out
+/// (counter-simulation showed it costing ~2 lanes/issue of batch
+/// occupancy); the guided probe is self-limiting — it supplies the
+/// missing measurements, after which the argmax above governs. No probe
+/// fires before the first root completes, so single-root runs behave
+/// exactly like the static [`LayerPolicy::sell_chunking`] threshold.
+#[derive(Default)]
+pub struct PolicyFeedback {
+    bands: [[ModeOcc; 2]; OCC_BANDS],
+    roots_done: AtomicUsize,
+}
+
+/// log₂ band of a layer's mean frontier degree.
+fn band_of(mean_degree: usize) -> usize {
+    (usize::BITS - 1 - mean_degree.max(1).leading_zeros()).min(OCC_BANDS as u32 - 1) as usize
+}
+
+fn mode_index(mode: ChunkingMode) -> usize {
+    match mode {
+        ChunkingMode::LanePacked => 0,
+        ChunkingMode::PerVertex => 1,
+    }
+}
+
+impl PolicyFeedback {
+    /// Pick the chunking mode for a layer of `input_vertices` frontier
+    /// vertices carrying `input_edges` adjacency entries.
+    pub fn choose(&self, input_vertices: usize, input_edges: usize) -> ChunkingMode {
+        let fallback = LayerPolicy::sell_chunking(input_vertices, input_edges);
+        if input_vertices == 0 {
+            return fallback;
+        }
+        let mean_degree = input_edges / input_vertices;
+        let b = band_of(mean_degree);
+        let packed = self.occupancy_in_band(b, ChunkingMode::LanePacked);
+        let per_vertex = self.occupancy_in_band(b, ChunkingMode::PerVertex);
+        match (packed, per_vertex) {
+            (Some(p), Some(v)) => {
+                if v > p {
+                    ChunkingMode::PerVertex
+                } else {
+                    ChunkingMode::LanePacked
+                }
+            }
+            // guided probe: measure per-vertex chunking only in bands where
+            // even its optimistic bound beats what packing measured
+            (Some(p), None)
+                if self.roots_done() > 0
+                    && Self::per_vertex_occupancy_bound(mean_degree) > p =>
+            {
+                ChunkingMode::PerVertex
+            }
+            _ => fallback,
+        }
+    }
+
+    /// Optimistic per-vertex occupancy bound for a layer of mean frontier
+    /// degree `d`: if every vertex had exactly the mean degree, Listing-1
+    /// chunking would issue `ceil(d / 16)` chunks per vertex holding
+    /// `d / ceil(d / 16)` lanes each. Degree skew only lowers the real
+    /// value (more ragged remainders), so the bound is a safe probe
+    /// filter: where it cannot beat measured packing, per-vertex chunking
+    /// is not worth measuring.
+    pub fn per_vertex_occupancy_bound(mean_degree: usize) -> f64 {
+        if mean_degree == 0 {
+            return 0.0;
+        }
+        mean_degree as f64 / mean_degree.div_ceil(LANES) as f64
+    }
+
+    /// Record the exploration counters of one finished layer.
+    pub fn record_layer(
+        &self,
+        mode: ChunkingMode,
+        input_vertices: usize,
+        input_edges: usize,
+        vpu: &VpuCounters,
+    ) {
+        if input_vertices == 0 || vpu.explore_issues == 0 {
+            return;
+        }
+        let cell = &self.bands[band_of(input_edges / input_vertices)][mode_index(mode)];
+        cell.issues.fetch_add(vpu.explore_issues, Ordering::Relaxed);
+        cell.lanes.fetch_add(vpu.lanes_active, Ordering::Relaxed);
+    }
+
+    /// Mark one root's traversal complete (enables probing).
+    pub fn record_root(&self) {
+        self.roots_done.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Roots recorded so far.
+    pub fn roots_done(&self) -> usize {
+        self.roots_done.load(Ordering::Relaxed)
+    }
+
+    /// Measured mean occupancy of `mode` in degree band `band`, or `None`
+    /// below the confidence floor.
+    pub fn occupancy_in_band(&self, band: usize, mode: ChunkingMode) -> Option<f64> {
+        let cell = &self.bands[band][mode_index(mode)];
+        let issues = cell.issues.load(Ordering::Relaxed);
+        if issues < MIN_FEEDBACK_ISSUES {
+            return None;
+        }
+        Some(cell.lanes.load(Ordering::Relaxed) as f64 / issues as f64)
+    }
+
+    /// Overall measured occupancy of `mode` across all bands (`None` until
+    /// anything was recorded) — the reporting/ablation view.
+    pub fn mean_lanes_active(&self, mode: ChunkingMode) -> Option<f64> {
+        let m = mode_index(mode);
+        let mut issues = 0u64;
+        let mut lanes = 0u64;
+        for band in &self.bands {
+            issues += band[m].issues.load(Ordering::Relaxed);
+            lanes += band[m].lanes.load(Ordering::Relaxed);
+        }
+        if issues == 0 {
+            None
+        } else {
+            Some(lanes as f64 / issues as f64)
+        }
+    }
+}
+
+impl std::fmt::Debug for PolicyFeedback {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PolicyFeedback")
+            .field("roots_done", &self.roots_done())
+            .field("packed_occ", &self.mean_lanes_active(ChunkingMode::LanePacked))
+            .field("per_vertex_occ", &self.mean_lanes_active(ChunkingMode::PerVertex))
+            .finish_non_exhaustive()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,5 +330,91 @@ mod tests {
         assert_eq!(LayerPolicy::sell_chunking(100_874, 150_698), ChunkingMode::LanePacked);
         assert_eq!(LayerPolicy::sell_chunking(486, 490), ChunkingMode::LanePacked);
         assert_eq!(LayerPolicy::sell_chunking(0, 0), ChunkingMode::LanePacked);
+    }
+
+    #[test]
+    fn degree_bands() {
+        assert_eq!(band_of(0), 0);
+        assert_eq!(band_of(1), 0);
+        assert_eq!(band_of(2), 1);
+        assert_eq!(band_of(3), 1);
+        assert_eq!(band_of(7), 2);
+        assert_eq!(band_of(15), 3);
+        assert_eq!(band_of(31), 4);
+        assert_eq!(band_of(32), 5);
+        assert_eq!(band_of(10_000), 5);
+    }
+
+    fn counters(issues: u64, lanes: u64) -> VpuCounters {
+        VpuCounters { explore_issues: issues, lanes_active: lanes, ..Default::default() }
+    }
+
+    #[test]
+    fn empty_feedback_falls_back_to_static_threshold() {
+        let f = PolicyFeedback::default();
+        assert_eq!(f.choose(100, 400), LayerPolicy::sell_chunking(100, 400));
+        assert_eq!(f.choose(10, 1000), LayerPolicy::sell_chunking(10, 1000));
+        assert_eq!(f.choose(0, 0), ChunkingMode::LanePacked);
+    }
+
+    #[test]
+    fn measured_comparison_overrides_static_threshold() {
+        // band of mean degree 4: static says LanePacked (4 < 32), but the
+        // measured data says per-vertex held more lanes there
+        let f = PolicyFeedback::default();
+        f.record_layer(ChunkingMode::LanePacked, 100, 400, &counters(100, 600));
+        f.record_layer(ChunkingMode::PerVertex, 100, 400, &counters(100, 900));
+        assert_eq!(f.choose(100, 400), ChunkingMode::PerVertex);
+        // ...and the reverse keeps lane packing
+        let g = PolicyFeedback::default();
+        g.record_layer(ChunkingMode::LanePacked, 100, 400, &counters(100, 1500));
+        g.record_layer(ChunkingMode::PerVertex, 100, 400, &counters(100, 900));
+        assert_eq!(g.choose(100, 400), ChunkingMode::LanePacked);
+    }
+
+    #[test]
+    fn per_vertex_bound_matches_chunk_arithmetic() {
+        assert_eq!(PolicyFeedback::per_vertex_occupancy_bound(0), 0.0);
+        assert_eq!(PolicyFeedback::per_vertex_occupancy_bound(4), 4.0);
+        assert_eq!(PolicyFeedback::per_vertex_occupancy_bound(16), 16.0);
+        assert_eq!(PolicyFeedback::per_vertex_occupancy_bound(17), 8.5);
+        assert_eq!(PolicyFeedback::per_vertex_occupancy_bound(48), 16.0);
+        assert!((PolicyFeedback::per_vertex_occupancy_bound(40) - 40.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn guided_probe_waits_for_first_root() {
+        // mean degree 16: the per-vertex bound (16.0) beats the measured
+        // packed occupancy (12.0), so the band is worth probing — but not
+        // before a full root has landed
+        let f = PolicyFeedback::default();
+        f.record_layer(ChunkingMode::LanePacked, 100, 1600, &counters(100, 1200));
+        assert_eq!(f.choose(100, 1600), ChunkingMode::LanePacked);
+        f.record_root();
+        assert_eq!(f.choose(100, 1600), ChunkingMode::PerVertex);
+        // the probe's own measurements settle the comparison
+        f.record_layer(ChunkingMode::PerVertex, 100, 1600, &counters(100, 900));
+        assert_eq!(f.choose(100, 1600), ChunkingMode::LanePacked);
+    }
+
+    #[test]
+    fn guided_probe_skips_hopeless_bands() {
+        // mean degree 4: per-vertex can hold at most 4 lanes/issue, the
+        // measured packing holds 10 — a blind probe would burn the layer,
+        // the guided probe declines
+        let f = PolicyFeedback::default();
+        f.record_layer(ChunkingMode::LanePacked, 100, 400, &counters(100, 1000));
+        f.record_root();
+        assert_eq!(f.choose(100, 400), ChunkingMode::LanePacked);
+    }
+
+    #[test]
+    fn low_sample_counts_are_not_trusted() {
+        let f = PolicyFeedback::default();
+        f.record_layer(ChunkingMode::PerVertex, 100, 400, &counters(8, 128));
+        assert_eq!(f.occupancy_in_band(band_of(4), ChunkingMode::PerVertex), None);
+        // under the floor the static threshold still decides
+        assert_eq!(f.choose(100, 400), ChunkingMode::LanePacked);
+        assert!(f.mean_lanes_active(ChunkingMode::PerVertex).is_some());
     }
 }

@@ -6,9 +6,15 @@
 //! it is the O(V+E) baseline the paper starts from, and its tree is the
 //! reference everything else is property-tested against.
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use super::{BfsAlgorithm, BfsResult, BfsTree, LayerTrace, RunTrace};
+use anyhow::Result;
+
+use super::{
+    BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, PreparedStateless,
+    RunTrace, StatelessBfs,
+};
 use crate::graph::{Bitmap, Csr};
 use crate::{Pred, Vertex, PRED_INFINITY};
 
@@ -17,12 +23,12 @@ use crate::{Pred, Vertex, PRED_INFINITY};
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SerialQueueBfs;
 
-impl BfsAlgorithm for SerialQueueBfs {
+impl StatelessBfs for SerialQueueBfs {
     fn name(&self) -> &'static str {
         "serial-queue"
     }
 
-    fn run(&self, g: &Csr, root: Vertex) -> BfsResult {
+    fn traverse(&self, g: &Csr, root: Vertex) -> BfsResult {
         let start = Instant::now();
         let n = g.num_vertices();
         let mut pred: Vec<Pred> = vec![PRED_INFINITY; n];
@@ -59,17 +65,31 @@ impl BfsAlgorithm for SerialQueueBfs {
     }
 }
 
+impl BfsEngine for SerialQueueBfs {
+    fn name(&self) -> &'static str {
+        "serial-queue"
+    }
+
+    fn prepare_with<'g>(
+        &self,
+        g: &'g Csr,
+        artifacts: Arc<GraphArtifacts>,
+    ) -> Result<Box<dyn PreparedBfs + 'g>> {
+        Ok(Box::new(PreparedStateless::new(g, *self, artifacts)))
+    }
+}
+
 /// Algorithm 1 proper: layer-synchronous serial top-down with `in`/`out`
 /// lists swapped each layer (§3.1 lines 7–17).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SerialLayeredBfs;
 
-impl BfsAlgorithm for SerialLayeredBfs {
+impl StatelessBfs for SerialLayeredBfs {
     fn name(&self) -> &'static str {
         "serial-layered"
     }
 
-    fn run(&self, g: &Csr, root: Vertex) -> BfsResult {
+    fn traverse(&self, g: &Csr, root: Vertex) -> BfsResult {
         let n = g.num_vertices();
         let mut pred: Vec<Pred> = vec![PRED_INFINITY; n];
         let mut visited = Bitmap::new(n);
@@ -117,6 +137,20 @@ impl BfsAlgorithm for SerialLayeredBfs {
     }
 }
 
+impl BfsEngine for SerialLayeredBfs {
+    fn name(&self) -> &'static str {
+        "serial-layered"
+    }
+
+    fn prepare_with<'g>(
+        &self,
+        g: &'g Csr,
+        artifacts: Arc<GraphArtifacts>,
+    ) -> Result<Box<dyn PreparedBfs + 'g>> {
+        Ok(Box::new(PreparedStateless::new(g, *self, artifacts)))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,7 +188,7 @@ mod tests {
     #[test]
     fn root_is_own_parent() {
         let g = paper_fig2_graph();
-        for alg in [&SerialQueueBfs as &dyn BfsAlgorithm, &SerialLayeredBfs] {
+        for alg in [&SerialQueueBfs as &dyn BfsEngine, &SerialLayeredBfs] {
             let r = alg.run(&g, 1);
             assert_eq!(r.tree.parent(1), Some(1));
         }

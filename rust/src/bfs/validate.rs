@@ -141,7 +141,7 @@ pub fn validate(g: &Csr, tree: &BfsTree) -> ValidationReport {
 mod tests {
     use super::*;
     use crate::bfs::serial::SerialLayeredBfs;
-    use crate::bfs::BfsAlgorithm;
+    use crate::bfs::BfsEngine;
     use crate::graph::{EdgeList, RmatConfig};
     use crate::{Pred, PRED_INFINITY};
 
@@ -230,7 +230,7 @@ mod tests {
         use crate::bfs::vectorized::VectorizedBfs;
         let el = RmatConfig::graph500(10, 16).generate(42);
         let g = Csr::from_edge_list(10, &el);
-        let algs: Vec<Box<dyn BfsAlgorithm>> = vec![
+        let algs: Vec<Box<dyn BfsEngine>> = vec![
             Box::new(SerialQueueBfs),
             Box::new(SerialLayeredBfs),
             Box::new(ParallelBfs { num_threads: 3 }),

@@ -32,13 +32,18 @@
 //! remainder chunk structure (otherwise every chunk issues unaligned masked
 //! loads), `prefetch` enables the software-prefetch intrinsics.
 
+use std::sync::Arc;
 use std::time::Instant;
+
+use anyhow::Result;
 
 use super::policy::LayerPolicy;
 use super::state::{SharedBitmap, SharedPred};
-use super::{BfsAlgorithm, BfsResult, BfsTree, LayerTrace, RunTrace, WORD_GRAIN};
+use super::{
+    BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, RunTrace, WORD_GRAIN,
+};
 use crate::graph::bitmap::BITS_PER_WORD;
-use crate::graph::{Bitmap, Csr};
+use crate::graph::{Adjacency, Bitmap, Csr, PaddedCsr};
 use crate::simd::ops::{PrefetchHint, Vpu};
 use crate::simd::vec512::{Mask16, VecI32x16, LANES};
 use crate::simd::VpuCounters;
@@ -173,12 +178,14 @@ fn explore_chunk(
     vpu.mask_scatter_shared_words(out.atomic_words(), mask, vword, new_values);
 }
 
-/// Explore one vertex's whole adjacency list, chunked per §4.2. Shared
-/// with the SELL engine's per-vertex chunking mode.
+/// Explore one vertex's whole adjacency list, chunked per §4.2, over any
+/// [`Adjacency`] layout — the raw [`Csr`] (peel/full/remainder) or the
+/// prepared [`PaddedCsr`] view whose aligned starts make the peel loop
+/// vanish. Shared with the SELL engine's per-vertex chunking mode.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn explore_vertex(
+pub(crate) fn explore_vertex<A: Adjacency + ?Sized>(
     vpu: &mut Vpu,
-    g: &Csr,
+    g: &A,
     u: Vertex,
     nodes: Pred,
     visited: &SharedBitmap,
@@ -191,7 +198,7 @@ pub(crate) fn explore_vertex(
     if degree == 0 {
         return 0;
     }
-    let rows = &g.rows;
+    let rows = g.rows();
 
     if opts.prefetch {
         // Prefetch the rows array for the vertices processed next
@@ -263,11 +270,12 @@ pub(crate) fn explore_vertex(
 /// Per-vertex (Listing 1) exploration of one whole layer, parallel over
 /// the frontier's bitmap words. Returns (edges scanned, merged VPU
 /// counters). Shared by the `simd` engine and the sell engine's
-/// per-vertex chunking mode.
+/// per-vertex chunking mode; generic over the [`Adjacency`] layout so a
+/// prepared engine can traverse the aligned padded view.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn explore_layer_per_vertex(
+pub(crate) fn explore_layer_per_vertex<A: Adjacency + ?Sized>(
     num_threads: usize,
-    g: &Csr,
+    g: &A,
     input: &Bitmap,
     nodes: Pred,
     visited: &SharedBitmap,
@@ -446,12 +454,50 @@ pub fn restore_layer_simd(
     (stats, vpu)
 }
 
-impl BfsAlgorithm for VectorizedBfs {
+/// A [`VectorizedBfs`] bound to one graph: carries the aligned
+/// [`PaddedCsr`] view (when `opts.aligned` is on) so every root's
+/// traversal reuses it instead of peeling unaligned segment heads.
+pub struct PreparedSimd<'g> {
+    g: &'g Csr,
+    padded: Option<Arc<PaddedCsr>>,
+    engine: VectorizedBfs,
+    artifacts: Arc<GraphArtifacts>,
+}
+
+impl PreparedBfs for PreparedSimd<'_> {
     fn name(&self) -> &'static str {
         "simd"
     }
 
-    fn run(&self, g: &Csr, root: Vertex) -> BfsResult {
+    fn run(&self, root: Vertex) -> BfsResult {
+        self.engine.traverse(self.g, self.padded.as_deref(), root)
+    }
+
+    fn artifacts(&self) -> &GraphArtifacts {
+        &self.artifacts
+    }
+}
+
+impl BfsEngine for VectorizedBfs {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn prepare_with<'g>(
+        &self,
+        g: &'g Csr,
+        artifacts: Arc<GraphArtifacts>,
+    ) -> Result<Box<dyn PreparedBfs + 'g>> {
+        // the padded view only pays off when aligned chunking is on —
+        // unaligned mode issues masked loads regardless
+        let padded = if self.opts.aligned { Some(artifacts.padded_csr(g)) } else { None };
+        Ok(Box::new(PreparedSimd { g, padded, engine: *self, artifacts }))
+    }
+}
+
+impl VectorizedBfs {
+    /// One traversal over `g`, exploring through `padded` when present.
+    fn traverse(&self, g: &Csr, padded: Option<&PaddedCsr>, root: Vertex) -> BfsResult {
         let n = g.num_vertices();
         let nodes = n as Pred;
         let pred = SharedPred::new_infinity(n);
@@ -479,9 +525,13 @@ impl BfsAlgorithm for VectorizedBfs {
 
             let (edges_scanned, rstats, vpu_counters) = if vectorize {
                 // ---- SIMD exploration (Listing 1) ----
+                let adj: &dyn Adjacency = match padded {
+                    Some(p) => p,
+                    None => g,
+                };
                 let (edges, mut vpu_total) = explore_layer_per_vertex(
                     self.num_threads,
-                    g,
+                    adj,
                     &input,
                     nodes,
                     &visited,

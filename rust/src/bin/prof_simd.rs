@@ -2,7 +2,7 @@
 //! `perf record` during the §Perf pass; see EXPERIMENTS.md §Perf).
 use phi_bfs::bfs::policy::LayerPolicy;
 use phi_bfs::bfs::vectorized::{SimdOpts, VectorizedBfs};
-use phi_bfs::bfs::BfsAlgorithm;
+use phi_bfs::bfs::BfsEngine;
 use phi_bfs::graph::{Csr, RmatConfig};
 
 fn main() {
@@ -12,9 +12,11 @@ fn main() {
     let g = Csr::from_edge_list(scale, &el);
     let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
     let alg = VectorizedBfs { num_threads: 1, opts: SimdOpts::full(), policy: LayerPolicy::All };
+    // prepare once outside the timed loop — profile the traversal hot path
+    let prepared = alg.prepare(&g).expect("prepare");
     let t0 = std::time::Instant::now();
     for _ in 0..iters {
-        std::hint::black_box(alg.run(&g, root));
+        std::hint::black_box(prepared.run(root));
     }
     println!("{} iters in {:.3?} ({:.3?}/iter)", iters, t0.elapsed(), t0.elapsed() / iters as u32);
 }

@@ -72,17 +72,29 @@ impl Args {
 pub const USAGE: &str = "\
 phi-bfs — BFS vectorization on the (modelled) Xeon Phi
 
-USAGE:
-    phi-bfs <command> [--flag value]...
+Engines prepare per-graph state once per experiment (SELL layout,
+padded-CSR view, degree stats), then share it across all roots; per-root
+times report pure traversal, preparation is reported separately.
+
+ENGINES (--engine):
+    serial, serial-queue     Algorithm 1 — serial top-down (layered/queue)
+    non-simd                 Algorithm 2 — parallel top-down, atomics
+    bitrace-free             Algorithm 3 — no atomics + restoration
+    simd, simd-noopt,        §4 Listing 1 — vectorized explorer
+      simd-nopf                (full / no-opt / no-prefetch)
+    sell, sell-noopt         SELL-16-σ lane packing, cross-root
+                               occupancy-feedback chunking
+    hybrid, hybrid-scalar,   §8 direction-optimizing (Beamer) hybrid;
+      hybrid-sell              -sell packs top-down phases
+    pjrt                     AOT JAX/Pallas kernel via PJRT
 
 COMMANDS:
     run        Run a Graph500-style experiment
                --scale N (16) --edgefactor N (16) --roots N (64)
-               --engine serial|serial-queue|non-simd|bitrace-free|simd|
-                        simd-noopt|simd-nopf|sell|sell-noopt|hybrid|
-                        hybrid-scalar|hybrid-sell|pjrt (simd)
-               --threads N (4) --workers N (1) --seed N (1)
-               --artifacts DIR (artifacts) --no-validate
+               --engine NAME (simd) --threads N (4) --workers N (1)
+               --seed N (1) --artifacts DIR (artifacts) --no-validate
+               --sigma N|global|auto (auto)  SELL σ sort window
+                        (sell engines only; others reject the flag)
     model      Predict Xeon Phi TEPS for a thread/affinity sweep
                --scale N (20: uses the paper's Table 1 profile)
                --threads-list 1,2,48,236 --affinity balanced|compact|

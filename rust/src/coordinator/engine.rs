@@ -1,6 +1,21 @@
 //! Engine registry: one place that knows how to construct every BFS
 //! implementation in the repository — the algorithm ladder of §3–§4 plus
 //! the PJRT-compiled kernel engine.
+//!
+//! Engines are **two-phase** ([`crate::bfs::BfsEngine`]): [`make_engine`]
+//! returns the cheap configuration value; the coordinator then calls
+//! `prepare` once per job to build the per-graph artifacts (SELL layout,
+//! padded-CSR view, policy feedback) that every root's run shares.
+//!
+//! | name | engine | paper artifact |
+//! |---|---|---|
+//! | `serial`, `serial-queue` | [`SerialLayeredBfs`] / [`SerialQueueBfs`] | Algorithm 1 |
+//! | `non-simd` | [`ParallelBfs`] | Algorithm 2 |
+//! | `bitrace-free` | [`BitRaceFreeBfs`] | Algorithm 3 (restoration) |
+//! | `simd`, `simd-noopt`, `simd-nopf` | [`VectorizedBfs`] | §4 Listing 1 |
+//! | `sell`, `sell-noopt` | [`SellBfs`] | SELL-16-σ lane packing |
+//! | `hybrid`, `hybrid-scalar`, `hybrid-sell` | [`HybridBfs`] | §8 direction optimization |
+//! | `pjrt` | [`PjrtBfs`] | AOT JAX/Pallas kernel |
 
 use anyhow::Result;
 
@@ -8,10 +23,10 @@ use crate::bfs::bitrace_free::BitRaceFreeBfs;
 use crate::bfs::bottom_up::HybridBfs;
 use crate::bfs::parallel::ParallelBfs;
 use crate::bfs::policy::LayerPolicy;
-use crate::bfs::sell_vectorized::{SellBfs, DEFAULT_SIGMA};
+use crate::bfs::sell_vectorized::{SellBfs, SIGMA_AUTO};
 use crate::bfs::serial::{SerialLayeredBfs, SerialQueueBfs};
 use crate::bfs::vectorized::{SimdOpts, VectorizedBfs};
-use crate::bfs::BfsAlgorithm;
+use crate::bfs::BfsEngine;
 use crate::runtime::bfs::PjrtBfs;
 
 /// Which engine a job should run on.
@@ -81,18 +96,19 @@ impl EngineKind {
                 policy: LayerPolicy::heavy(),
             },
             // lane packing keeps low-degree layers efficient, so the sell
-            // engines vectorize every layer (no §4.1 scalar fallback)
+            // engines vectorize every layer (no §4.1 scalar fallback); σ is
+            // resolved per scale at prepare time
             "sell" => EngineKind::Sell {
                 threads,
                 opts: SimdOpts::full(),
                 policy: LayerPolicy::All,
-                sigma: DEFAULT_SIGMA,
+                sigma: SIGMA_AUTO,
             },
             "sell-noopt" => EngineKind::Sell {
                 threads,
                 opts: SimdOpts::none(),
                 policy: LayerPolicy::All,
-                sigma: DEFAULT_SIGMA,
+                sigma: SIGMA_AUTO,
             },
             "hybrid" => EngineKind::Hybrid { threads, simd: true, sell: false },
             "hybrid-scalar" => EngineKind::Hybrid { threads, simd: false, sell: false },
@@ -107,9 +123,11 @@ impl EngineKind {
     }
 }
 
-/// Instantiate an engine. (Engines are constructed per worker thread —
-/// the PJRT engine holds a client handle that is not `Sync`.)
-pub fn make_engine(kind: &EngineKind) -> Result<Box<dyn BfsAlgorithm>> {
+/// Instantiate an engine configuration. The result is cheap — per-graph
+/// state (layouts, compiled executables) is built by
+/// [`crate::bfs::BfsEngine::prepare`], once per job, and shared across
+/// worker threads through the returned [`crate::bfs::PreparedBfs`].
+pub fn make_engine(kind: &EngineKind) -> Result<Box<dyn BfsEngine>> {
     Ok(match kind {
         EngineKind::SerialQueue => Box::new(SerialQueueBfs),
         EngineKind::SerialLayered => Box::new(SerialLayeredBfs),
@@ -171,7 +189,7 @@ mod tests {
                 threads: 2,
                 opts: SimdOpts::full(),
                 policy: LayerPolicy::All,
-                sigma: DEFAULT_SIGMA,
+                sigma: SIGMA_AUTO,
             },
         ] {
             assert!(make_engine(&kind).is_ok(), "{kind:?}");
@@ -193,13 +211,13 @@ mod tests {
                 threads: 2,
                 opts: SimdOpts::full(),
                 policy: LayerPolicy::All,
-                sigma: DEFAULT_SIGMA,
+                sigma: SIGMA_AUTO,
             },
             EngineKind::Sell {
                 threads: 2,
                 opts: SimdOpts::none(),
                 policy: LayerPolicy::heavy(),
-                sigma: DEFAULT_SIGMA,
+                sigma: SIGMA_AUTO,
             },
             EngineKind::Hybrid { threads: 2, simd: true, sell: false },
             EngineKind::Hybrid { threads: 2, simd: false, sell: false },

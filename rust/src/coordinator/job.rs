@@ -4,7 +4,7 @@ use std::sync::Arc;
 
 use super::engine::EngineKind;
 use crate::bfs::validate::ValidationReport;
-use crate::bfs::RunTrace;
+use crate::bfs::{GraphArtifacts, RunTrace};
 use crate::graph::Csr;
 use crate::Vertex;
 
@@ -29,7 +29,14 @@ pub struct RootRun {
     /// component; scans count each direction once).
     pub edges_traversed: usize,
     pub reached: usize,
+    /// Pure traversal seconds (Graph500's kernel-2 analogue). Per-graph
+    /// preparation is *not* included — see `preparation_seconds`.
     pub seconds: f64,
+    /// This root's amortized share of the job's one-time preparation
+    /// (engine construction + `prepare`: layouts, stats, compiled
+    /// kernels) — the Graph500 kernel-1-style split that shows what the
+    /// prepare-once architecture saves per root.
+    pub preparation_seconds: f64,
     pub trace: RunTrace,
     /// Validation report (None when the job ran with validate=false).
     pub validation: Option<ValidationReport>,
@@ -53,6 +60,14 @@ pub struct JobOutcome {
     pub id: u64,
     pub runs: Vec<RootRun>,
     pub all_valid: bool,
+    /// Wall seconds the job spent in its one-time prepare phase (engine
+    /// construction + per-graph artifact build) before any root ran.
+    pub preparation_seconds: f64,
+    /// The per-graph artifacts the job prepared once and every root
+    /// shared: layouts, degree stats, build counters, and the cross-root
+    /// policy-feedback channel — inspectable for reuse and for the
+    /// built-exactly-once guarantee.
+    pub artifacts: Arc<GraphArtifacts>,
 }
 
 #[cfg(test)]
@@ -66,6 +81,7 @@ mod tests {
             edges_traversed: 0,
             reached: 1,
             seconds: 0.01,
+            preparation_seconds: 0.0,
             trace: RunTrace::default(),
             validation: None,
         };
@@ -79,6 +95,7 @@ mod tests {
             edges_traversed: 1_000_000,
             reached: 100,
             seconds: 0.5,
+            preparation_seconds: 0.0,
             trace: RunTrace::default(),
             validation: None,
         };

@@ -12,6 +12,8 @@ pub struct Metrics {
     edges: AtomicU64,
     /// Total traversal nanoseconds (sum over roots, not wall).
     nanos: AtomicU64,
+    /// Total one-time preparation nanoseconds (once per job).
+    prep_nanos: AtomicU64,
 }
 
 /// Point-in-time copy of the counters.
@@ -21,18 +23,22 @@ pub struct MetricsSnapshot {
     pub roots: usize,
     pub edges_traversed: u64,
     pub total_seconds: f64,
+    /// Seconds spent preparing graphs (kernel-1-style, once per job) —
+    /// kept separate from traversal time so amortization is visible.
+    pub preparation_seconds: f64,
     /// Aggregate TEPS over everything the coordinator has run.
     pub aggregate_teps: f64,
 }
 
 impl Metrics {
-    pub fn record_job(&self, runs: &[RootRun]) {
+    pub fn record_job(&self, runs: &[RootRun], preparation_seconds: f64) {
         self.jobs.fetch_add(1, Ordering::Relaxed);
         self.roots.fetch_add(runs.len(), Ordering::Relaxed);
         let edges: u64 = runs.iter().map(|r| r.edges_traversed as u64).sum();
         self.edges.fetch_add(edges, Ordering::Relaxed);
         let nanos: u64 = runs.iter().map(|r| (r.seconds * 1e9) as u64).sum();
         self.nanos.fetch_add(nanos, Ordering::Relaxed);
+        self.prep_nanos.fetch_add((preparation_seconds * 1e9) as u64, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -43,6 +49,7 @@ impl Metrics {
             roots: self.roots.load(Ordering::Relaxed),
             edges_traversed: edges,
             total_seconds: secs,
+            preparation_seconds: self.prep_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             aggregate_teps: if secs > 0.0 { edges as f64 / secs } else { 0.0 },
         }
     }
@@ -59,6 +66,7 @@ mod tests {
             edges_traversed: edges,
             reached: 1,
             seconds,
+            preparation_seconds: 0.0,
             trace: RunTrace::default(),
             validation: None,
         }
@@ -67,12 +75,13 @@ mod tests {
     #[test]
     fn aggregates() {
         let m = Metrics::default();
-        m.record_job(&[run(100, 0.5), run(300, 0.5)]);
+        m.record_job(&[run(100, 0.5), run(300, 0.5)], 0.25);
         let s = m.snapshot();
         assert_eq!(s.jobs, 1);
         assert_eq!(s.roots, 2);
         assert_eq!(s.edges_traversed, 400);
         assert!((s.total_seconds - 1.0).abs() < 1e-6);
+        assert!((s.preparation_seconds - 0.25).abs() < 1e-6);
         assert!((s.aggregate_teps - 400.0).abs() < 1e-6);
     }
 

@@ -1,13 +1,22 @@
 //! The root-batching scheduler.
 //!
 //! A Graph500 job is 64 independent single-root traversals over one shared
-//! read-only CSR, so the natural batch unit is the root: `workers` threads
-//! each construct their own engine (the PJRT engine is not `Sync`) and pull
-//! root indices from a shared cursor until the job drains. Results arrive
-//! in root order regardless of completion order.
+//! read-only CSR, so the natural batch unit is the root. The job runs in
+//! the engine API's two phases:
+//!
+//! 1. **Prepare (once, before any worker spawns).** The engine is
+//!    constructed and `prepare`d against the job's graph — building the
+//!    shared [`crate::bfs::GraphArtifacts`] (SELL layout, padded-CSR view,
+//!    degree stats, the cross-root policy-feedback channel). A bad engine
+//!    configuration therefore fails *here*, immediately, instead of racing
+//!    through per-thread error plumbing.
+//! 2. **Run (per root).** `workers` threads share the one prepared
+//!    instance (`PreparedBfs` is `Sync`) and pull root indices from a
+//!    shared cursor until the job drains. Results arrive in root order
+//!    regardless of completion order.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -16,6 +25,7 @@ use super::engine::make_engine;
 use super::job::{BfsJob, JobOutcome, RootRun};
 use super::metrics::Metrics;
 use crate::bfs::validate::validate;
+use crate::bfs::{GraphArtifacts, PreparedBfs};
 
 /// The L3 driver: runs jobs, keeps metrics.
 pub struct Coordinator {
@@ -35,51 +45,51 @@ impl Coordinator {
 
     /// Execute a job to completion.
     pub fn run_job(&self, job: &BfsJob) -> Result<JobOutcome> {
+        // Phase 1 — fail fast: construct the engine and prepare the graph
+        // once, before any worker spawns. The PJRT engine compiles its
+        // executable here; the sell engines build their Sell16 layout here
+        // — exactly once per job, shared by every root below.
+        let t_prep = Instant::now();
+        let engine = make_engine(&job.engine)?;
+        let artifacts = Arc::new(GraphArtifacts::for_graph(&job.graph));
+        let prepared = engine.prepare_with(&job.graph, Arc::clone(&artifacts))?;
+        let preparation_seconds = t_prep.elapsed().as_secs_f64();
+        let prep_share = preparation_seconds / job.roots.len().max(1) as f64;
+
+        // Phase 2 — workers share the prepared engine by reference and
+        // pull roots from a common cursor.
+        let prepared: &dyn PreparedBfs = prepared.as_ref();
         let cursor = AtomicUsize::new(0);
         let results: Mutex<Vec<Option<RootRun>>> = Mutex::new(vec![None; job.roots.len()]);
-        let first_error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
 
         std::thread::scope(|s| {
             for _ in 0..self.workers.min(job.roots.len().max(1)) {
-                s.spawn(|| {
-                    // per-worker engine (PJRT compiles its executable here, once)
-                    let engine = match make_engine(&job.engine) {
-                        Ok(e) => e,
-                        Err(e) => {
-                            first_error.lock().unwrap().get_or_insert(e);
-                            return;
-                        }
-                    };
-                    loop {
-                        let i = cursor.fetch_add(1, Ordering::Relaxed);
-                        if i >= job.roots.len() {
-                            break;
-                        }
-                        let root = job.roots[i];
-                        let t0 = Instant::now();
-                        let r = engine.run(&job.graph, root);
-                        let seconds = t0.elapsed().as_secs_f64();
-                        let validation =
-                            job.validate.then(|| validate(&job.graph, &r.tree));
-                        let run = RootRun {
-                            root,
-                            // Graph500 TEPS: undirected edges of the reached
-                            // component ≈ directed scans / 2
-                            edges_traversed: r.trace.total_edges_scanned() / 2,
-                            reached: r.tree.reached_count(),
-                            seconds,
-                            trace: r.trace,
-                            validation,
-                        };
-                        results.lock().unwrap()[i] = Some(run);
+                s.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= job.roots.len() {
+                        break;
                     }
+                    let root = job.roots[i];
+                    let t0 = Instant::now();
+                    let r = prepared.run(root);
+                    let seconds = t0.elapsed().as_secs_f64();
+                    let validation = job.validate.then(|| validate(&job.graph, &r.tree));
+                    let run = RootRun {
+                        root,
+                        // Graph500 TEPS: undirected edges of the reached
+                        // component ≈ directed scans / 2
+                        edges_traversed: r.trace.total_edges_scanned() / 2,
+                        reached: r.tree.reached_count(),
+                        seconds,
+                        preparation_seconds: prep_share,
+                        trace: r.trace,
+                        validation,
+                    };
+                    results.lock().unwrap()[i] = Some(run);
                 });
             }
         });
 
-        if let Some(e) = first_error.into_inner().unwrap() {
-            return Err(e);
-        }
         let runs: Vec<RootRun> = results
             .into_inner()
             .unwrap()
@@ -89,8 +99,8 @@ impl Coordinator {
         let all_valid = runs
             .iter()
             .all(|r| r.validation.as_ref().map(|v| v.all_passed()).unwrap_or(true));
-        self.metrics.record_job(&runs);
-        Ok(JobOutcome { id: job.id, runs, all_valid })
+        self.metrics.record_job(&runs, preparation_seconds);
+        Ok(JobOutcome { id: job.id, runs, all_valid, preparation_seconds, artifacts })
     }
 }
 
@@ -137,6 +147,37 @@ mod tests {
         let j = job(EngineKind::SerialLayered, (0..20).collect());
         let out = Coordinator::new(2).run_job(&j).unwrap();
         assert!(out.runs.iter().any(|r| r.reached == 1 && r.edges_traversed == 0));
+    }
+
+    #[test]
+    fn sell_layout_built_exactly_once_per_job() {
+        // the tentpole guarantee: a multi-root sell job constructs its
+        // Sell16 layout once, in the prepare phase, no matter how many
+        // roots or workers run (PR 1 rebuilt it per root — 64× per job)
+        let j = job(
+            EngineKind::parse("sell", 2, "artifacts").unwrap(),
+            (0..8).collect(),
+        );
+        let out = Coordinator::new(3).run_job(&j).unwrap();
+        assert_eq!(out.artifacts.sell_builds(), 1, "{:?}", out.artifacts);
+        assert!(out.all_valid);
+        assert!(out.preparation_seconds > 0.0);
+        for r in &out.runs {
+            assert!((r.preparation_seconds - out.preparation_seconds / 8.0).abs() < 1e-12);
+        }
+        // the cross-root feedback channel saw every root
+        assert_eq!(out.artifacts.feedback().roots_done(), 8);
+    }
+
+    #[test]
+    fn bad_engine_fails_fast_before_workers() {
+        // a PJRT config with no artifacts errors in the prepare phase
+        let j = job(
+            EngineKind::Pjrt { artifact_dir: "/nonexistent-artifacts".into() },
+            vec![0, 1],
+        );
+        let err = Coordinator::new(2).run_job(&j).unwrap_err();
+        assert!(!err.to_string().is_empty());
     }
 
     #[test]

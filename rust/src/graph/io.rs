@@ -199,7 +199,7 @@ mod tests {
     #[test]
     fn loaded_graph_traverses_identically() {
         use crate::bfs::serial::SerialQueueBfs;
-        use crate::bfs::BfsAlgorithm;
+        use crate::bfs::BfsEngine;
         let el = RmatConfig::graph500(9, 8).generate(7);
         let g = Csr::from_edge_list(9, &el);
         let mut buf = Vec::new();

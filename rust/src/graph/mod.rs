@@ -10,6 +10,9 @@
 //!   Fig 4 of the paper).
 //! * [`sell`] — SELL-16-σ sliced-ELLPACK layout (SlimSell-style) backing
 //!   the lane-packed explorer.
+//! * [`padded`] — the aligned padded-CSR view ([`PaddedCsr`]) the per-graph
+//!   prepare phase builds for the SIMD explorers (no peel loops), plus the
+//!   [`Adjacency`] abstraction they traverse.
 //! * [`stats`] — degree distributions, the per-layer traversal profile
 //!   that Table 1 reports, and SELL occupancy statistics.
 
@@ -17,6 +20,7 @@ pub mod bitmap;
 pub mod csr;
 pub mod edge_list;
 pub mod io;
+pub mod padded;
 pub mod rmat;
 pub mod sell;
 pub mod stats;
@@ -24,5 +28,6 @@ pub mod stats;
 pub use bitmap::Bitmap;
 pub use csr::Csr;
 pub use edge_list::EdgeList;
+pub use padded::{Adjacency, PaddedCsr};
 pub use rmat::RmatConfig;
 pub use sell::Sell16;

@@ -1,0 +1,157 @@
+//! Aligned padded-CSR adjacency view — a per-graph artifact for the SIMD
+//! explorers.
+//!
+//! §4.2's "data alignment" optimization wants every adjacency chunk to be
+//! a full 64-byte vector load, but in a plain CSR the adjacency list of a
+//! vertex starts wherever the previous one ended, so the explorer must
+//! peel up to 15 lanes to reach the next 16-element boundary (the *peel
+//! loop*), and every peel is a masked partial issue. This view re-stores
+//! `rows` with each vertex's adjacency starting on a 16-element boundary:
+//! the peel loop disappears entirely — a degree-d list is exactly
+//! `d / 16` full aligned loads plus one masked remainder.
+//!
+//! The copy is an O(V + E) preprocessing step, which is why it lives in
+//! [`crate::bfs::GraphArtifacts`] and is built **once per graph** by
+//! [`crate::bfs::BfsEngine::prepare`], then shared by every root's
+//! traversal — not rebuilt per run.
+//!
+//! [`Adjacency`] is the small abstraction that lets the explorers run
+//! unchanged over either layout: [`super::Csr`] (peel/full/remainder) or
+//! [`PaddedCsr`] (full/remainder only).
+
+use super::csr::Csr;
+use crate::simd::vec512::LANES;
+use crate::Vertex;
+
+/// Read-only adjacency storage the per-vertex SIMD explorers traverse: a
+/// flat `rows` array plus a `[start, end)` window per vertex. Implemented
+/// by [`Csr`] and [`PaddedCsr`].
+pub trait Adjacency: Sync {
+    fn num_vertices(&self) -> usize;
+    /// `[start, end)` range of `v`'s neighbors inside [`Self::rows`].
+    fn adjacency_range(&self, v: Vertex) -> (usize, usize);
+    /// The flat neighbor array the ranges index into.
+    fn rows(&self) -> &[Vertex];
+}
+
+impl Adjacency for Csr {
+    #[inline]
+    fn num_vertices(&self) -> usize {
+        Csr::num_vertices(self)
+    }
+
+    #[inline]
+    fn adjacency_range(&self, v: Vertex) -> (usize, usize) {
+        Csr::adjacency_range(self, v)
+    }
+
+    #[inline]
+    fn rows(&self) -> &[Vertex] {
+        &self.rows
+    }
+}
+
+/// CSR with every vertex's adjacency start rounded up to a 16-element
+/// boundary (padding cells hold 0 and are never enabled by a lane mask).
+#[derive(Clone, Debug)]
+pub struct PaddedCsr {
+    /// Aligned start of each vertex's adjacency in `rows` (always a
+    /// multiple of 16).
+    starts: Vec<usize>,
+    /// Adjacency length of each vertex.
+    lens: Vec<u32>,
+    rows: Vec<Vertex>,
+}
+
+impl PaddedCsr {
+    /// Copy `g`'s adjacency into the aligned layout.
+    pub fn from_csr(g: &Csr) -> Self {
+        let n = g.num_vertices();
+        let mut starts = Vec::with_capacity(n);
+        let mut lens = Vec::with_capacity(n);
+        let mut total = 0usize;
+        for v in 0..n as Vertex {
+            let d = g.degree(v);
+            starts.push(total);
+            lens.push(d as u32);
+            total += d.next_multiple_of(LANES);
+        }
+        let mut rows: Vec<Vertex> = vec![0; total];
+        for v in 0..n as Vertex {
+            let adj = g.neighbors(v);
+            let s = starts[v as usize];
+            rows[s..s + adj.len()].copy_from_slice(adj);
+        }
+        PaddedCsr { starts, lens, rows }
+    }
+
+    /// Storage cells including alignment padding.
+    pub fn padded_len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Adjacency entries actually stored (Σ degree).
+    pub fn filled_len(&self) -> usize {
+        self.lens.iter().map(|&l| l as usize).sum()
+    }
+}
+
+impl Adjacency for PaddedCsr {
+    #[inline]
+    fn num_vertices(&self) -> usize {
+        self.starts.len()
+    }
+
+    #[inline]
+    fn adjacency_range(&self, v: Vertex) -> (usize, usize) {
+        let s = self.starts[v as usize];
+        (s, s + self.lens[v as usize] as usize)
+    }
+
+    #[inline]
+    fn rows(&self) -> &[Vertex] {
+        &self.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EdgeList, RmatConfig};
+
+    fn rmat(scale: u32, ef: usize, seed: u64) -> Csr {
+        let el = RmatConfig::graph500(scale, ef).generate(seed);
+        Csr::from_edge_list(scale, &el)
+    }
+
+    #[test]
+    fn roundtrips_adjacency_in_order() {
+        let g = rmat(10, 8, 7);
+        let p = PaddedCsr::from_csr(&g);
+        assert_eq!(Adjacency::num_vertices(&p), g.num_vertices());
+        for v in 0..g.num_vertices() as Vertex {
+            let (s, e) = p.adjacency_range(v);
+            assert_eq!(s % LANES, 0, "start of {v} not aligned");
+            assert_eq!(&p.rows()[s..e], g.neighbors(v), "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn padding_is_bounded() {
+        let g = rmat(10, 16, 8);
+        let p = PaddedCsr::from_csr(&g);
+        assert_eq!(p.filled_len(), g.num_directed_edges());
+        // at most 15 pad cells per vertex
+        assert!(p.padded_len() <= g.num_directed_edges() + g.num_vertices() * (LANES - 1));
+    }
+
+    #[test]
+    fn empty_adjacencies_take_no_space() {
+        let el = EdgeList::with_edges(40, vec![(0, 1)]);
+        let g = Csr::from_edge_list(0, &el);
+        let p = PaddedCsr::from_csr(&g);
+        assert_eq!(p.padded_len(), 2 * LANES); // two degree-1 vertices
+        let (s, e) = p.adjacency_range(5);
+        assert_eq!(s, e);
+    }
+}

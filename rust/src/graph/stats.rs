@@ -100,9 +100,13 @@ impl LayerProfile {
 }
 
 /// Degree-distribution summary used by the evaluation discussion
-/// (workload imbalance grows with degree skew, §6.1).
+/// (workload imbalance grows with degree skew, §6.1) and, as the cheap
+/// member of [`crate::bfs::GraphArtifacts`], to seed per-graph policy
+/// defaults (σ window, chunking thresholds) at prepare time.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DegreeStats {
+    pub num_vertices: usize,
+    pub num_directed_edges: usize,
     pub min: usize,
     pub max: usize,
     pub mean: f64,
@@ -115,20 +119,49 @@ pub struct DegreeStats {
 impl DegreeStats {
     pub fn compute(g: &Csr) -> Self {
         let n = g.num_vertices();
+        if n == 0 {
+            return DegreeStats {
+                num_vertices: 0,
+                num_directed_edges: 0,
+                min: 0,
+                max: 0,
+                mean: 0.0,
+                top1pct_edge_share: 0.0,
+                isolated: 0,
+            };
+        }
         let mut degs: Vec<usize> = (0..n).map(|v| g.degree(v as Vertex)).collect();
         let total: usize = degs.iter().sum();
         let isolated = degs.iter().filter(|&&d| d == 0).count();
         let min = degs.iter().copied().min().unwrap_or(0);
         let max = degs.iter().copied().max().unwrap_or(0);
-        degs.sort_unstable_by(|a, b| b.cmp(a));
+        // top-1% edge share via O(V) selection rather than a full sort —
+        // this now runs inside every engine prepare
         let k = (n / 100).max(1);
+        degs.select_nth_unstable_by(k - 1, |a, b| b.cmp(a));
         let top: usize = degs[..k].iter().sum();
         DegreeStats {
+            num_vertices: n,
+            num_directed_edges: g.num_directed_edges(),
             min,
             max,
-            mean: total as f64 / n.max(1) as f64,
+            mean: total as f64 / n as f64,
             top1pct_edge_share: if total > 0 { top as f64 / total as f64 } else { 0.0 },
             isolated,
+        }
+    }
+
+    /// Per-scale σ default for the SELL-16-σ layout, from the ablation
+    /// bench's σ sweep (ablation 5): small graphs take the global degree
+    /// sort — the sort is cheap and the fill is best — while larger graphs
+    /// keep 256-slot windows (the `DEFAULT_SIGMA` of
+    /// [`crate::bfs::sell_vectorized`]) so the permutation stays local to
+    /// the `cols` gathers.
+    pub fn suggested_sigma(&self) -> usize {
+        if self.num_vertices <= 1 << 14 {
+            usize::MAX
+        } else {
+            256
         }
     }
 }

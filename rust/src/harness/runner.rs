@@ -77,6 +77,7 @@ impl Experiment {
             num_vertices: n,
             num_directed_edges: graph.num_directed_edges(),
             construction_seconds,
+            preparation_seconds: outcome.preparation_seconds,
             graph,
             runs: outcome.runs,
             all_valid: outcome.all_valid,
@@ -91,7 +92,11 @@ pub struct ExperimentReport {
     pub edgefactor: usize,
     pub num_vertices: usize,
     pub num_directed_edges: usize,
+    /// Kernel 0: RMAT generation + CSR build.
     pub construction_seconds: f64,
+    /// One-time engine prepare (layouts, stats, compiled kernels) — paid
+    /// once per experiment, amortized over all roots.
+    pub preparation_seconds: f64,
     pub graph: Arc<Csr>,
     pub runs: Vec<RootRun>,
     pub all_valid: bool,
@@ -132,6 +137,24 @@ mod tests {
         let ra: Vec<_> = a.runs.iter().map(|r| r.root).collect();
         let rb: Vec<_> = b.runs.iter().map(|r| r.root).collect();
         assert_eq!(ra, rb);
+    }
+
+    #[test]
+    fn preparation_time_surfaced_separately() {
+        // kernel-0 / prepare / traversal split: the sell engine's layout
+        // build lands in preparation_seconds, not in any root's seconds,
+        // and the stats' amortized sum equals the job's prepare time
+        let mut exp =
+            Experiment::new(9, 8, EngineKind::parse("sell", 2, "artifacts").unwrap());
+        exp.num_roots = 6;
+        exp.workers = 2;
+        let report = exp.run().unwrap();
+        assert!(report.preparation_seconds > 0.0);
+        assert!(report.all_valid);
+        assert!(
+            (report.stats.preparation_seconds - report.preparation_seconds).abs() < 1e-9,
+            "amortized prep shares must sum back to the job total"
+        );
     }
 
     #[test]

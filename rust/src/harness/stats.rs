@@ -25,6 +25,11 @@ pub struct TepsStats {
     pub harmonic_mean_graph500: f64,
     /// Harmonic mean over connected roots only.
     pub harmonic_mean_filtered: f64,
+    /// One-time per-graph preparation seconds (engine prepare: layouts,
+    /// stats, compiled kernels), amortized over all roots of the job and
+    /// summed back here — the Graph500 kernel-1-style split. TEPS above
+    /// are pure traversal; this is what prepare-once saves per root.
+    pub preparation_seconds: f64,
 }
 
 impl TepsStats {
@@ -53,12 +58,15 @@ impl TepsStats {
             arithmetic_mean,
             harmonic_mean_graph500,
             harmonic_mean_filtered,
+            preparation_seconds: 0.0,
         }
     }
 
     pub fn from_runs(runs: &[RootRun]) -> Self {
         let teps: Vec<f64> = runs.iter().map(|r| r.teps()).collect();
-        Self::from_teps(&teps)
+        let mut stats = Self::from_teps(&teps);
+        stats.preparation_seconds = runs.iter().map(|r| r.preparation_seconds).sum();
+        stats
     }
 }
 

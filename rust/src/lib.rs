@@ -26,7 +26,11 @@
 //!   vectorized version (Listing 1), and the SELL-16-σ lane-packed
 //!   explorer ([`bfs::sell_vectorized`]) that fills all 16 VPU lanes from
 //!   16 distinct frontier vertices on skewed RMAT frontiers — plus the
-//!   layer policy of §4.1 and the Graph500 validator.
+//!   layer policy of §4.1 and the Graph500 validator. Engines are
+//!   two-phase ([`bfs::BfsEngine::prepare`] once per graph →
+//!   [`bfs::PreparedBfs::run`] per root) with per-graph state in
+//!   [`bfs::GraphArtifacts`] and cross-root occupancy feedback in
+//!   [`bfs::policy::PolicyFeedback`].
 //! * [`threads`] — a small OpenMP-like scoped thread pool (no rayon offline).
 //! * [`phi`] — an analytic Xeon Phi performance model (cores, SMT, affinity,
 //!   caches, ring/GDDR bandwidth) that converts measured work traces into
@@ -42,16 +46,20 @@
 //!
 //! ```no_run
 //! use phi_bfs::graph::{rmat::RmatConfig, csr::Csr};
-//! use phi_bfs::bfs::{sell_vectorized::SellBfs, vectorized::VectorizedBfs, BfsAlgorithm};
+//! use phi_bfs::bfs::{sell_vectorized::SellBfs, vectorized::VectorizedBfs, BfsEngine};
 //!
 //! let edges = RmatConfig::graph500(14, 16).generate(42);
 //! let csr = Csr::from_edge_list(14, &edges);
 //! let result = VectorizedBfs::default().run(&csr, 0);
 //! println!("reached {} vertices", result.tree.reached_count());
 //!
-//! // the SELL-16-σ engine: same tree, higher VPU lane occupancy
-//! let sell = SellBfs::default().run(&csr, 0);
-//! println!("mean lanes/issue: {:.1}", sell.trace.vpu_totals().mean_lanes_active());
+//! // the SELL-16-σ engine is two-phase: prepare once per graph (layout
+//! // build), then run any number of roots against the shared state
+//! let prepared = SellBfs::default().prepare(&csr).unwrap();
+//! for root in [0, 1, 2] {
+//!     let sell = prepared.run(root);
+//!     println!("mean lanes/issue: {:.1}", sell.trace.vpu_totals().mean_lanes_active());
+//! }
 //! ```
 
 pub mod apps;

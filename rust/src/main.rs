@@ -54,7 +54,20 @@ fn cmd_run(args: &Args) -> Result<()> {
     let threads: usize = args.get("threads", 4)?;
     let engine_name = args.get_str("engine", "simd");
     let artifacts = args.get_str("artifacts", "artifacts");
-    let engine = EngineKind::parse(&engine_name, threads, &artifacts)?;
+    let mut engine = EngineKind::parse(&engine_name, threads, &artifacts)?;
+    if let EngineKind::Sell { sigma, .. } = &mut engine {
+        *sigma = match args.get_str("sigma", "auto").as_str() {
+            "auto" => phi_bfs::bfs::sell_vectorized::SIGMA_AUTO,
+            "global" => usize::MAX,
+            s => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--sigma: expected a number, `global` or `auto`"))?,
+        };
+    } else if args.keys().any(|k| k.as_str() == "sigma") {
+        // refuse rather than silently ignore: hybrid-sell resolves its σ
+        // from the graph's degree stats and has no override yet
+        anyhow::bail!("--sigma only applies to the sell engines (got --engine {engine_name})");
+    }
 
     let mut exp = Experiment::new(scale, edgefactor, engine);
     exp.seed = args.get("seed", 1)?;
@@ -70,6 +83,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!(
         "graph: {} vertices, {} directed edges (constructed in {:.2}s)",
         report.num_vertices, report.num_directed_edges, report.construction_seconds
+    );
+    println!(
+        "engine prepared once in {:.4}s (layouts + stats, amortized over {} roots)",
+        report.preparation_seconds,
+        report.runs.len()
     );
     let s = &report.stats;
     println!(

@@ -188,7 +188,7 @@ mod tests {
     #[test]
     fn from_run_roundtrip() {
         use crate::bfs::vectorized::VectorizedBfs;
-        use crate::bfs::BfsAlgorithm;
+        use crate::bfs::BfsEngine;
         use crate::graph::{Csr, RmatConfig};
         let el = RmatConfig::graph500(10, 8).generate(3);
         let g = Csr::from_edge_list(10, &el);

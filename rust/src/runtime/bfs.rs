@@ -1,4 +1,4 @@
-//! A [`BfsAlgorithm`] whose per-layer hot loop is the AOT-compiled
+//! A [`BfsEngine`] whose per-layer hot loop is the AOT-compiled
 //! JAX/Pallas kernel executed through PJRT — the end-to-end proof that the
 //! three layers (Rust coordinator → jax graph → Pallas kernel) compose.
 //!
@@ -8,36 +8,69 @@
 //! kernel performs Listing 1's explore + the restoration, returning
 //! consistent state for the next layer.
 //!
-//! Chunk packing is the same peel/full/remainder structure the native
-//! vectorized explorer uses: a vertex's adjacency is cut at `rows`-array
-//! 16-element boundaries, so a lane layout valid for the emulated VPU is
-//! valid here and results are bit-identical (asserted by the integration
-//! test and the `pjrt_bfs` example).
+//! Chunk packing is the raw-CSR peel/full/remainder structure of §4.2: a
+//! vertex's adjacency is cut at `rows`-array 16-element boundaries, so a
+//! lane layout valid for the emulated VPU is valid here; distances always
+//! agree with the native explorer (asserted by the integration test and
+//! the `pjrt_bfs` example).
 
-use std::cell::RefCell;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use super::artifacts::{ArtifactManifest, ArtifactSpec};
 use super::engine::{LayerStepArgs, PjrtEngine};
-use crate::bfs::{BfsAlgorithm, BfsResult, BfsTree, LayerTrace, RunTrace};
+use crate::bfs::{BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, RunTrace};
 use crate::graph::{Bitmap, Csr};
 use crate::{Pred, Vertex, PRED_INFINITY};
 
 const LANES: usize = 16;
 
 /// BFS engine backed by the PJRT-compiled layer step.
+///
+/// The engine value only carries the artifact manifest; the PJRT client
+/// and the compiled executable for the graph's bucket are created by
+/// [`BfsEngine::prepare`] — once per graph, failing fast if the runtime is
+/// unavailable or no bucket fits. The PJRT client is not `Sync`-friendly,
+/// so the prepared instance serializes device calls behind a `Mutex`
+/// (one CPU device anyway) while still satisfying the shared-`PreparedBfs`
+/// contract.
 pub struct PjrtBfs {
-    engine: RefCell<PjrtEngine>,
+    manifest: ArtifactManifest,
 }
 
 impl PjrtBfs {
+    /// Wrap an existing engine's manifest. (The engine's client handle is
+    /// not reused — each prepare builds its own.)
     pub fn new(engine: PjrtEngine) -> Self {
-        PjrtBfs { engine: RefCell::new(engine) }
+        PjrtBfs { manifest: engine.manifest().clone() }
     }
 
     pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Self> {
-        Ok(Self::new(PjrtEngine::from_dir(dir)?))
+        Ok(PjrtBfs { manifest: ArtifactManifest::load(dir)? })
+    }
+
+    /// Prepare for `g`: create the client, pick the bucket, compile.
+    fn prepare_pjrt<'g>(
+        &self,
+        g: &'g Csr,
+        artifacts: Arc<GraphArtifacts>,
+    ) -> Result<PreparedPjrt<'g>> {
+        let mut engine = PjrtEngine::new(self.manifest.clone())?;
+        let n = g.num_vertices();
+        let spec = engine
+            .manifest()
+            .pick(n)
+            .ok_or_else(|| anyhow!("no artifact bucket fits {n} vertices; rebuild with --buckets"))?
+            .clone();
+        engine.executable(&spec)?;
+        Ok(PreparedPjrt { g, engine: Mutex::new(engine), spec, artifacts })
+    }
+
+    /// One-shot prepare + traverse with error propagation.
+    pub fn run_checked(&self, g: &Csr, root: Vertex) -> Result<BfsResult> {
+        self.prepare_pjrt(g, Arc::new(GraphArtifacts::for_graph(g)))?.run_checked(root)
     }
 
     /// Pack one frontier's adjacency lists into (neigh, parent) lane pairs,
@@ -64,16 +97,32 @@ impl PjrtBfs {
         }
         chunks
     }
+}
 
+/// A [`PjrtBfs`] bound to one graph: compiled executable for the graph's
+/// bucket, device calls serialized behind a `Mutex`.
+///
+/// Serialization trade-off: multi-worker jobs on the PJRT engine now
+/// share one executable (compiled once, in prepare) instead of compiling
+/// per worker, but roots execute one at a time and a root's measured
+/// traversal seconds include any time spent waiting for the device lock.
+/// The target is a single CPU device, so concurrent clients bought little
+/// — a per-worker executable cache is the recorded follow-up if a
+/// multi-device backend lands.
+pub struct PreparedPjrt<'g> {
+    g: &'g Csr,
+    engine: Mutex<PjrtEngine>,
+    spec: ArtifactSpec,
+    artifacts: Arc<GraphArtifacts>,
+}
+
+impl PreparedPjrt<'_> {
     /// Run the traversal, returning the trace with per-call execution times.
-    pub fn run_checked(&self, g: &Csr, root: Vertex) -> Result<BfsResult> {
+    pub fn run_checked(&self, root: Vertex) -> Result<BfsResult> {
+        let g = self.g;
         let n = g.num_vertices();
-        let mut engine = self.engine.borrow_mut();
-        let spec = engine
-            .manifest()
-            .pick(n)
-            .ok_or_else(|| anyhow!("no artifact bucket fits {n} vertices; rebuild with --buckets"))?
-            .clone();
+        let mut engine = self.engine.lock().expect("pjrt engine lock poisoned");
+        let spec = &self.spec;
 
         // state in artifact geometry (padded to spec.n / spec.words)
         let mut vis_words = vec![0i32; spec.words];
@@ -88,7 +137,7 @@ impl PjrtBfs {
         let mut layer = 0usize;
         while frontier.count_ones() != 0 {
             let t0 = Instant::now();
-            let chunks = Self::pack_frontier(g, &frontier);
+            let chunks = PjrtBfs::pack_frontier(g, &frontier);
             let edges_scanned: usize = frontier.iter_set_bits().map(|u| g.degree(u)).sum();
             // batch chunks through the executable, carrying state
             for batch in chunks.chunks(spec.chunks) {
@@ -105,7 +154,7 @@ impl PjrtBfs {
                     out_words: out_words.clone(),
                     pred: pred.clone(),
                 };
-                let r = engine.layer_step(&spec, &args)?;
+                let r = engine.layer_step(spec, &args)?;
                 vis_words = r.vis_words;
                 out_words = r.out_words;
                 pred = r.pred;
@@ -140,13 +189,31 @@ impl PjrtBfs {
     }
 }
 
-impl BfsAlgorithm for PjrtBfs {
+impl PreparedBfs for PreparedPjrt<'_> {
     fn name(&self) -> &'static str {
         "pjrt-simd"
     }
 
-    fn run(&self, g: &Csr, root: Vertex) -> BfsResult {
-        self.run_checked(g, root).expect("PJRT BFS failed")
+    fn run(&self, root: Vertex) -> BfsResult {
+        self.run_checked(root).expect("PJRT BFS failed")
+    }
+
+    fn artifacts(&self) -> &GraphArtifacts {
+        &self.artifacts
+    }
+}
+
+impl BfsEngine for PjrtBfs {
+    fn name(&self) -> &'static str {
+        "pjrt-simd"
+    }
+
+    fn prepare_with<'g>(
+        &self,
+        g: &'g Csr,
+        artifacts: Arc<GraphArtifacts>,
+    ) -> Result<Box<dyn PreparedBfs + 'g>> {
+        Ok(Box::new(self.prepare_pjrt(g, artifacts)?))
     }
 }
 

@@ -9,7 +9,7 @@
 //! * [`artifacts`] — manifest parsing + size-bucket selection.
 //! * [`engine`] — the compiled-executable cache and the typed
 //!   `layer_step` call.
-//! * [`bfs`] — a [`crate::bfs::BfsAlgorithm`] that runs the whole
+//! * [`bfs`] — a [`crate::bfs::BfsEngine`] that runs the whole
 //!   traversal through the artifact, proving the three layers compose.
 
 pub mod artifacts;

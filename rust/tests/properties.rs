@@ -17,7 +17,7 @@ use phi_bfs::bfs::serial::{SerialLayeredBfs, SerialQueueBfs};
 use phi_bfs::bfs::state::{SharedBitmap, SharedPred};
 use phi_bfs::bfs::validate::validate;
 use phi_bfs::bfs::vectorized::{restore_layer_simd, SimdOpts, VectorizedBfs};
-use phi_bfs::bfs::BfsAlgorithm;
+use phi_bfs::bfs::BfsEngine;
 use phi_bfs::coordinator::engine::{make_engine, EngineKind};
 use phi_bfs::graph::{Bitmap, Csr, EdgeList, RmatConfig};
 use phi_bfs::prop::{forall, Gen};
@@ -30,7 +30,7 @@ fn random_graph(g: &mut Gen) -> Csr {
     Csr::from_edge_list(0, &el)
 }
 
-fn ladder(g: &mut Gen) -> Vec<Box<dyn BfsAlgorithm>> {
+fn ladder(g: &mut Gen) -> Vec<Box<dyn BfsEngine>> {
     let threads = g.size(1, 4);
     vec![
         Box::new(SerialQueueBfs),
@@ -45,7 +45,8 @@ fn ladder(g: &mut Gen) -> Vec<Box<dyn BfsAlgorithm>> {
             num_threads: threads,
             opts: *g.choose(&[SimdOpts::none(), SimdOpts::aligned_masks(), SimdOpts::full()]),
             policy: *g.choose(&[LayerPolicy::All, LayerPolicy::FirstK(2), LayerPolicy::heavy()]),
-            sigma: *g.choose(&[16usize, 64, 256, usize::MAX]),
+            // 0 is SIGMA_AUTO: resolved per scale at prepare time
+            sigma: *g.choose(&[0usize, 16, 64, 256, usize::MAX]),
         }),
     ]
 }
@@ -122,6 +123,71 @@ fn prop_registered_engines_agree_and_validate_on_rmat() {
             );
             let report = validate(&csr, &r.tree);
             assert!(report.all_passed(), "{name}: {}", report.summary());
+        }
+    });
+}
+
+#[test]
+fn prop_prepared_reuse_equals_fresh_preparation() {
+    // The two-phase contract: one PreparedBfs reused across all roots must
+    // produce the same trees as preparing fresh per root, for every
+    // registered engine. (Tree equivalence is compared as distance maps,
+    // the canonical form across the whole suite: predecessor choice is
+    // non-unique under the benign races and under feedback-adaptive
+    // chunking, distances never are.) All trees must also validate.
+    forall("prepared reuse ≡ fresh preparation", 5, |g| {
+        let scale = g.size(8, 9) as u32;
+        let seed = g.size(0, 1 << 16) as u64;
+        let el = RmatConfig::graph500(scale, 8).generate(seed);
+        let csr = Csr::from_edge_list(scale, &el);
+        let threads = g.size(1, 3);
+        let roots: Vec<Vertex> =
+            (0..3).map(|_| g.size(0, csr.num_vertices() - 1) as Vertex).collect();
+        for name in EngineKind::NATIVE_NAMES {
+            let kind = EngineKind::parse(name, threads, "artifacts").unwrap();
+            let engine = make_engine(&kind).unwrap();
+            let shared = engine.prepare(&csr).unwrap_or_else(|e| panic!("{name}: {e}"));
+            for &root in &roots {
+                let reused = shared.run(root);
+                let fresh = engine.prepare(&csr).unwrap().run(root);
+                let expected = SerialLayeredBfs.run(&csr, root).tree.distances().unwrap();
+                assert_eq!(
+                    reused.tree.distances().unwrap(),
+                    expected,
+                    "{name}: reused prepared instance diverged (root {root})"
+                );
+                assert_eq!(
+                    fresh.tree.distances().unwrap(),
+                    expected,
+                    "{name}: fresh preparation diverged (root {root})"
+                );
+                let report = validate(&csr, &reused.tree);
+                assert!(report.all_passed(), "{name}: {}", report.summary());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_prepared_engines_build_layouts_once() {
+    // Per-graph artifacts are built by prepare, exactly once, no matter
+    // how many roots run through the prepared instance.
+    forall("layouts built once per prepared engine", 5, |g| {
+        let scale = g.size(8, 10) as u32;
+        let el = RmatConfig::graph500(scale, 8).generate(g.size(0, 1 << 16) as u64);
+        let csr = Csr::from_edge_list(scale, &el);
+        for name in ["sell", "sell-noopt", "hybrid-sell"] {
+            let kind = EngineKind::parse(name, 2, "artifacts").unwrap();
+            let engine = make_engine(&kind).unwrap();
+            let prepared = engine.prepare(&csr).unwrap();
+            for _ in 0..4 {
+                prepared.run(g.size(0, csr.num_vertices() - 1) as Vertex);
+            }
+            assert_eq!(
+                prepared.artifacts().sell_builds(),
+                1,
+                "{name}: Sell16 must be built exactly once per preparation"
+            );
         }
     });
 }
@@ -274,7 +340,7 @@ fn prop_no_negative_predecessors_survive() {
         let csr = random_graph(g);
         let root = g.size(0, csr.num_vertices() - 1) as Vertex;
         for alg in [
-            Box::new(BitRaceFreeBfs { num_threads: 3 }) as Box<dyn BfsAlgorithm>,
+            Box::new(BitRaceFreeBfs { num_threads: 3 }) as Box<dyn BfsEngine>,
             Box::new(VectorizedBfs {
                 num_threads: 3,
                 opts: SimdOpts::full(),
