@@ -15,6 +15,13 @@
 //! 5. **σ sweep** — SELL-16-σ sort-window sweep (16 / 256 / global)
 //!    across scales: fill, permutation locality, layout-build and
 //!    traversal time — the data behind `DegreeStats::suggested_sigma`.
+//! 6. **SELL-packed bottom-up** — mean active lanes per explore issue on
+//!    the hybrid's bottom-up layers: per-vertex chunks (`hybrid-sell`) vs
+//!    lane packing over the unvisited pool (`hybrid-sell-bu`), plus the
+//!    top-down/hybrid TEPS ladder. Asserts the packed scan holds strictly
+//!    more lanes and scans no more edges, and writes the ladder to
+//!    `BENCH_hybrid.json` (override with `PHIBFS_BENCH_JSON`) so CI
+//!    records the perf trajectory.
 //!
 //! Pass `--smoke` (CI) for a down-scaled run of every section.
 
@@ -226,4 +233,143 @@ fn main() {
     println!("(defaults encoded in DegreeStats::suggested_sigma: global sort up to 2^14");
     println!(" vertices — best fill, negligible sort cost, bounded displacement — and");
     println!(" sigma=256 windows above, keeping the permutation local to the gathers)");
+
+    // the acceptance bar for the SELL-packed bottom-up runs at SCALE ≥ 16;
+    // smoke keeps a scale that still triggers a bottom-up phase
+    let bu_scale: u32 = if smoke { 12 } else { env_param("PHIBFS_BU_SCALE", 16) };
+    section(&format!(
+        "Ablation 6 — SELL-packed bottom-up: occupancy + hybrid TEPS (SCALE {bu_scale})"
+    ));
+    let el6 = RmatConfig::graph500(bu_scale, 16).generate(1);
+    let g6 = Csr::from_edge_list(bu_scale, &el6);
+    let root6 = (0..g6.num_vertices() as u32).max_by_key(|&v| g6.degree(v)).unwrap();
+
+    // mean lanes/issue over the bottom-up layers of one traversal
+    let bu_occ = |r: &phi_bfs::bfs::BfsResult| -> Option<f64> {
+        let mut c = VpuCounters::default();
+        for l in r.trace.layers.iter().filter(|l| l.bottom_up) {
+            c.merge(&l.vpu);
+        }
+        (c.explore_issues > 0).then(|| c.mean_lanes_active())
+    };
+
+    struct HybridRow {
+        name: &'static str,
+        teps: f64,
+        mean_seconds: f64,
+        edges_scanned: usize,
+        bu_occ: Option<f64>,
+    }
+    let engines: Vec<(&'static str, Box<dyn BfsEngine>)> = vec![
+        ("top-down-sell", Box::new(SellBfs { num_threads: 1, ..Default::default() })),
+        ("hybrid", Box::new(HybridBfs { num_threads: 1, ..Default::default() })),
+        (
+            "hybrid-sell",
+            Box::new(HybridBfs { num_threads: 1, sell: true, ..Default::default() }),
+        ),
+        (
+            "hybrid-sell-bu",
+            Box::new(HybridBfs {
+                num_threads: 1,
+                sell: true,
+                bu_sell: true,
+                ..Default::default()
+            }),
+        ),
+    ];
+    let mut rows: Vec<HybridRow> = Vec::new();
+    let mut bu_tree = None;
+    // Graph500 TEPS uses one m — the traversed component's undirected edge
+    // count — for every implementation; a per-engine "own edges scanned"
+    // numerator would cancel (or invert) exactly the edge savings direction
+    // optimization exists for. The top-down engine scans each directed edge
+    // of the component once, so its total/2 is that common m.
+    let mut component_edges: Option<usize> = None;
+    for (name, alg) in engines {
+        let prepared = alg.prepare(&g6).expect("prepare");
+        // first run, no completed root in the feedback channel: every
+        // hybrid runs the raw Beamer α test, so switch points — and
+        // therefore edge counts (the `edges scanned` column and the ≤
+        // assertion below) — are directly comparable across variants
+        let r = prepared.run(root6);
+        let m = bench.run(name, || prepared.run(root6));
+        if name == "top-down-sell" {
+            component_edges = Some(r.trace.total_edges_scanned() / 2);
+        }
+        let m_edges = component_edges.expect("top-down-sell runs first") as f64;
+        rows.push(HybridRow {
+            name,
+            teps: m.rate(m_edges),
+            mean_seconds: m.mean_secs(),
+            edges_scanned: r.trace.total_edges_scanned(),
+            bu_occ: bu_occ(&r),
+        });
+        if name == "hybrid-sell-bu" {
+            bu_tree = Some(r.tree);
+        }
+    }
+    let mut t = Table::new(&["engine", "edges scanned", "BU lanes/issue", "TEPS", "mean time"]);
+    for row in &rows {
+        t.row(&[
+            row.name.into(),
+            row.edges_scanned.to_string(),
+            row.bu_occ.map(|o| format!("{o:.2}")).unwrap_or_else(|| "-".into()),
+            mteps(row.teps),
+            format!("{:.2?}", std::time::Duration::from_secs_f64(row.mean_seconds)),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let chunked = rows.iter().find(|r| r.name == "hybrid-sell").unwrap();
+    let packed = rows.iter().find(|r| r.name == "hybrid-sell-bu").unwrap();
+    let occ_chunked = chunked.bu_occ.expect("hybrid-sell ran no bottom-up layer");
+    let occ_packed = packed.bu_occ.expect("hybrid-sell-bu ran no bottom-up layer");
+    assert!(
+        occ_packed > occ_chunked,
+        "packed bottom-up occupancy {occ_packed:.2} !> per-vertex chunks {occ_chunked:.2}"
+    );
+    assert!(
+        packed.edges_scanned <= chunked.edges_scanned,
+        "packed bottom-up scanned {} > chunked {}",
+        packed.edges_scanned,
+        chunked.edges_scanned
+    );
+    let report = phi_bfs::bfs::validate::validate(&g6, &bu_tree.expect("hybrid-sell-bu row"));
+    assert!(report.all_passed(), "{}", report.summary());
+    println!(
+        "(packed bottom-up: {occ_packed:.2} lanes/issue vs {occ_chunked:.2} chunked, \
+         all 5 validator checks passed)"
+    );
+
+    // perf trajectory: one JSON point per engine for CI to archive
+    let json_path =
+        std::env::var("PHIBFS_BENCH_JSON").unwrap_or_else(|_| "BENCH_hybrid.json".into());
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"name\":\"{}\",\"teps\":{:.1},\"mean_seconds\":{:.6},\
+                 \"edges_scanned\":{},\"bu_lanes_per_issue\":{}}}",
+                r.name,
+                r.teps,
+                r.mean_seconds,
+                r.edges_scanned,
+                r.bu_occ.map(|o| format!("{o:.3}")).unwrap_or_else(|| "null".into()),
+            )
+        })
+        .collect();
+    // m_edges is the common Graph500 TEPS numerator (component undirected
+    // edges); per-engine edges_scanned is the first-root raw-α count the
+    // cross-variant ≤ assertion compares.
+    let json = format!(
+        "{{\"bench\":\"hybrid\",\"scale\":{},\"edgefactor\":16,\"smoke\":{},\
+         \"m_edges\":{},\"engines\":[{}]}}\n",
+        bu_scale,
+        smoke,
+        component_edges.unwrap_or(0),
+        entries.join(",")
+    );
+    std::fs::write(&json_path, &json)
+        .unwrap_or_else(|e| panic!("writing {json_path}: {e}"));
+    println!("wrote {json_path}");
 }

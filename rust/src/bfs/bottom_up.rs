@@ -16,14 +16,29 @@
 //! when the frontier's outgoing edge volume exceeds `alpha`-th of the
 //! unexplored edge volume, switch back when the frontier shrinks below
 //! `|V| / beta`.
+//!
+//! The bottom-up scan itself has three implementations, chosen per layer
+//! by [`super::policy::BottomUpMode`]: the scalar first-hit walk, 16-wide
+//! chunks of a single vertex's adjacency ([`bottom_up_layer_simd`]), and
+//! the SELL-packed scan ([`super::sell_bottom_up`]) that gathers the k-th
+//! neighbor of 16 *distinct* unvisited vertices per issue (see that
+//! module's docs for the lane-refill protocol). With `bu_sell` enabled
+//! (the `hybrid-sell-bu` engine) the choice is driven by the cross-root
+//! [`PolicyFeedback`] occupancy tables, and the α switch itself compares
+//! predicted VPU issue counts (`edges ÷ measured lanes-per-issue`) instead
+//! of raw edge volumes once the feedback channel holds a completed root
+//! and both directions are measured
+//! ([`PolicyFeedback::switch_to_bottom_up`]); a fresh channel's first
+//! root always runs the classic raw-edge test.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::policy::PolicyFeedback;
-use super::sell_vectorized::SellStep;
+use super::policy::{BottomUpMode, LayerPolicy, PolicyFeedback};
+use super::sell_bottom_up::bottom_up_layer_sell;
+use super::sell_vectorized::{SellStep, SIGMA_AUTO};
 use super::state::{SharedBitmap, SharedPred};
 use super::vectorized::SimdOpts;
 use super::{
@@ -174,17 +189,35 @@ pub struct HybridBfs {
     /// (plus restoration) instead of the scalar atomic step — the sequel
     /// paper's point that the SELL techniques carry to the hybrid.
     pub sell: bool,
+    /// Lane-pack the bottom-up phase too (the `hybrid-sell-bu` engine):
+    /// per layer, [`PolicyFeedback`] picks scalar vs per-vertex chunks vs
+    /// SELL-packed from measured occupancy, and the α switch runs in
+    /// issue units instead of raw edges.
+    pub bu_sell: bool,
+    /// σ sort window of the prepared [`Sell16`] layout (only read when
+    /// `sell`/`bu_sell` need one); [`SIGMA_AUTO`] resolves to the
+    /// per-scale default at prepare time.
+    pub sigma: usize,
     pub opts: SimdOpts,
+}
+
+impl HybridBfs {
+    /// Beamer's α default (switch top-down → bottom-up).
+    pub const DEFAULT_ALPHA: usize = 14;
+    /// Beamer's β default (switch bottom-up → top-down).
+    pub const DEFAULT_BETA: usize = 24;
 }
 
 impl Default for HybridBfs {
     fn default() -> Self {
         HybridBfs {
             num_threads: 4,
-            alpha: 14,
-            beta: 24,
+            alpha: Self::DEFAULT_ALPHA,
+            beta: Self::DEFAULT_BETA,
             simd: true,
             sell: false,
+            bu_sell: false,
+            sigma: SIGMA_AUTO,
             opts: SimdOpts::full(),
         }
     }
@@ -215,42 +248,91 @@ impl HybridBfs {
         let mut layers = Vec::new();
         let mut layer = 0usize;
         let mut frontier_count = 1usize;
+        let mut visited_count = 1usize;
         let mut edges_explored_total = 0usize;
         let mut bottom_up = false;
         while frontier_count != 0 {
             let t0 = Instant::now();
             let frontier_edges: usize = frontier.iter_set_bits().map(|u| g.degree(u)).sum();
             let unexplored = total_edges.saturating_sub(edges_explored_total);
-            // Beamer's direction heuristic
-            if !bottom_up && frontier_edges * self.alpha > unexplored {
+            // Beamer's direction heuristic — with BU packing enabled the α
+            // test runs in measured-issue units instead of raw edges from
+            // the second root on (once the feedback channel has a full
+            // root's data for both directions)
+            let go_bottom_up = match feedback {
+                Some(f) if self.bu_sell => {
+                    f.switch_to_bottom_up(frontier_edges, unexplored, self.alpha)
+                }
+                _ => frontier_edges * self.alpha > unexplored,
+            };
+            if !bottom_up && go_bottom_up {
                 bottom_up = true;
             } else if bottom_up && frontier_count * self.beta < n {
                 bottom_up = false;
             }
 
-            let (edges_scanned, vpu, rstats) = if bottom_up {
-                if self.simd {
-                    let (e, _found, vpu) = bottom_up_layer_simd(
-                        self.num_threads,
-                        g,
-                        frontier.words(),
-                        &visited,
-                        &next,
-                        &pred,
-                    );
-                    (e, vpu, Default::default())
-                } else {
-                    let (e, _found) = bottom_up_layer_scalar(
-                        self.num_threads,
-                        g,
-                        &frontier,
-                        &visited,
-                        &next,
-                        &pred,
-                    );
-                    (e, Default::default(), Default::default())
+            // the pool a bottom-up layer scans: everything still unvisited
+            let unvisited = n - visited_count;
+            let unvisited_edges =
+                total_edges.saturating_sub(edges_explored_total + frontier_edges);
+            let bu_mode = if !bottom_up {
+                None
+            } else if !self.simd {
+                Some(BottomUpMode::Scalar)
+            } else if self.bu_sell && sell_layout.is_some() {
+                Some(match feedback {
+                    Some(f) => f.choose_bottom_up(unvisited, unvisited_edges),
+                    None => LayerPolicy::bottom_up_chunking(unvisited, unvisited_edges),
+                })
+            } else {
+                Some(BottomUpMode::PerVertexChunks)
+            };
+
+            let (edges_scanned, vpu, rstats) = if let Some(mode) = bu_mode {
+                let (e, vpu) = match mode {
+                    BottomUpMode::Scalar => {
+                        let (e, _found) = bottom_up_layer_scalar(
+                            self.num_threads,
+                            g,
+                            &frontier,
+                            &visited,
+                            &next,
+                            &pred,
+                        );
+                        (e, Default::default())
+                    }
+                    BottomUpMode::PerVertexChunks => {
+                        let (e, _found, vpu) = bottom_up_layer_simd(
+                            self.num_threads,
+                            g,
+                            frontier.words(),
+                            &visited,
+                            &next,
+                            &pred,
+                        );
+                        (e, vpu)
+                    }
+                    BottomUpMode::SellPacked => {
+                        let sl = sell_layout.expect("SellPacked requires a prepared layout");
+                        let (e, _found, vpu) = bottom_up_layer_sell(
+                            self.num_threads,
+                            sl,
+                            frontier.words(),
+                            &visited,
+                            &next,
+                            &pred,
+                            self.opts,
+                        );
+                        (e, vpu)
+                    }
+                };
+                if self.bu_sell {
+                    if let Some(f) = feedback {
+                        f.record_bottom_up_layer(mode, unvisited, unvisited_edges, &vpu);
+                    }
                 }
-            } else if let Some(sl) = sell_layout {
+                (e, vpu, Default::default())
+            } else if let (true, Some(sl)) = (self.sell, sell_layout) {
                 // the shared SELL top-down step: chunking choice +
                 // exploration + vectorized restoration
                 let step = SellStep {
@@ -305,6 +387,7 @@ impl HybridBfs {
 
             edges_explored_total += frontier_edges;
             let traversed = next.count_ones();
+            visited_count += traversed;
             layers.push(LayerTrace {
                 layer,
                 input_vertices: frontier_count,
@@ -312,7 +395,11 @@ impl HybridBfs {
                 traversed,
                 restore_words_scanned: rstats.words_scanned,
                 restore_fixed: rstats.lost_bits_fixed,
-                vectorized: (bottom_up && self.simd) || (!bottom_up && self.sell),
+                vectorized: match bu_mode {
+                    Some(mode) => mode != BottomUpMode::Scalar,
+                    None => self.sell,
+                },
+                bottom_up,
                 vpu,
                 wall_ns: t0.elapsed().as_nanos() as u64,
                 ..Default::default()
@@ -372,8 +459,25 @@ impl BfsEngine for HybridBfs {
         g: &'g Csr,
         artifacts: Arc<GraphArtifacts>,
     ) -> Result<Box<dyn PreparedBfs + 'g>> {
-        let sell = if self.sell {
-            let sigma = artifacts.stats(g).suggested_sigma();
+        // fail fast on nonsense switch thresholds: α = 0 never leaves
+        // top-down, β = 0 divides the frontier test by nothing sensible —
+        // both silently degenerate the hybrid, so reject them here, before
+        // any worker spawns
+        if self.alpha == 0 || self.beta == 0 {
+            anyhow::bail!(
+                "hybrid switch thresholds must be >= 1 (alpha={}, beta={})",
+                self.alpha,
+                self.beta
+            );
+        }
+        // the SELL layout serves the top-down step (`sell`), the
+        // lane-packed bottom-up step (`bu_sell`), or both
+        let sell = if self.sell || self.bu_sell {
+            let sigma = if self.sigma == SIGMA_AUTO {
+                artifacts.stats(g).suggested_sigma()
+            } else {
+                self.sigma
+            };
             Some(artifacts.sell_layout(g, sigma))
         } else {
             None
@@ -457,6 +561,120 @@ mod tests {
             .map(|l| l.vpu.explore_issues)
             .sum();
         assert!(td_vpu > 0, "no sell top-down issues recorded");
+    }
+
+    #[test]
+    fn hybrid_sell_bu_matches_serial_and_validates() {
+        let g = rmat(11, 77);
+        let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        let expected = SerialLayeredBfs.run(&g, root).tree.distances().unwrap();
+        let alg = HybridBfs { num_threads: 2, sell: true, bu_sell: true, ..Default::default() };
+        let r = alg.run(&g, root);
+        assert_eq!(r.tree.distances().unwrap(), expected);
+        let rep = validate(&g, &r.tree);
+        assert!(rep.all_passed(), "{}", rep.summary());
+        // at least one bottom-up layer actually ran through the VPU
+        let bu_issues: u64 = r
+            .trace
+            .layers
+            .iter()
+            .filter(|l| l.bottom_up)
+            .map(|l| l.vpu.explore_issues)
+            .sum();
+        assert!(bu_issues > 0, "no vectorized bottom-up issues recorded");
+    }
+
+    #[test]
+    fn hybrid_sell_bu_scans_no_more_edges_than_hybrid_sell() {
+        // the chunked bottom-up scan pays for post-hit chunk remainders;
+        // the packed scan stops each lane at its hit — and a first root
+        // always runs the raw Beamer α test (the occupancy-adjusted form
+        // waits for a completed root), so both hybrids share identical
+        // switch points and total scans can only shrink
+        let g = rmat(12, 78);
+        let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        let base = HybridBfs { num_threads: 1, sell: true, ..Default::default() }.run(&g, root);
+        let bu = HybridBfs { num_threads: 1, sell: true, bu_sell: true, ..Default::default() }
+            .run(&g, root);
+        let base_edges = base.trace.total_edges_scanned();
+        let bu_edges = bu.trace.total_edges_scanned();
+        assert!(bu_edges <= base_edges, "packed BU scanned {bu_edges} > chunked {base_edges}");
+        assert_eq!(
+            base.tree.distances().unwrap(),
+            bu.tree.distances().unwrap(),
+            "both hybrids must agree"
+        );
+    }
+
+    #[test]
+    fn hybrid_sell_bu_occupancy_beats_chunked_on_bu_layers() {
+        // the tentpole acceptance at the whole-traversal level: mean
+        // lanes/issue over bottom-up layers, packed vs chunked
+        let g = rmat(12, 79);
+        let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        let bu_occ = |r: &crate::bfs::BfsResult| {
+            let mut c = crate::simd::VpuCounters::default();
+            for l in r.trace.layers.iter().filter(|l| l.bottom_up) {
+                c.merge(&l.vpu);
+            }
+            c.mean_lanes_active()
+        };
+        let chunked =
+            HybridBfs { num_threads: 1, sell: true, ..Default::default() }.run(&g, root);
+        let packed = HybridBfs { num_threads: 1, sell: true, bu_sell: true, ..Default::default() }
+            .run(&g, root);
+        let occ_chunked = bu_occ(&chunked);
+        let occ_packed = bu_occ(&packed);
+        assert!(occ_chunked > 0.0, "no chunked BU layers measured");
+        assert!(occ_packed > 0.0, "no packed BU layers measured");
+        assert!(
+            occ_packed > occ_chunked,
+            "packed BU occupancy {occ_packed:.2} !> chunked {occ_chunked:.2}"
+        );
+    }
+
+    #[test]
+    fn sigma_override_is_honored_in_prepare() {
+        let g = rmat(10, 80);
+        // a global sort (σ = MAX) and the unsorted layout (σ = 16) must
+        // produce layouts with the requested σ, not the per-scale default
+        for sigma in [16usize, usize::MAX] {
+            let alg = HybridBfs { num_threads: 1, sell: true, sigma, ..Default::default() };
+            let prepared = alg.prepare(&g).unwrap();
+            let built = prepared.artifacts().sell_builds();
+            assert_eq!(built, 1);
+            // traversals still agree with serial under the override
+            let r = prepared.run(3);
+            let s = SerialLayeredBfs.run(&g, 3);
+            assert_eq!(r.tree.distances().unwrap(), s.tree.distances().unwrap());
+        }
+    }
+
+    #[test]
+    fn zero_alpha_or_beta_fails_fast_in_prepare() {
+        let g = rmat(9, 81);
+        for (alpha, beta) in [(0usize, 24usize), (14, 0), (0, 0)] {
+            let alg = HybridBfs { alpha, beta, ..Default::default() };
+            let err = alg.prepare(&g).unwrap_err();
+            assert!(
+                err.to_string().contains("switch thresholds"),
+                "unexpected error: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn bottom_up_layers_are_marked_in_trace() {
+        let g = rmat(12, 72);
+        let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        let r = HybridBfs { num_threads: 1, ..Default::default() }.run(&g, root);
+        let bu_layers = r.trace.layers.iter().filter(|l| l.bottom_up).count();
+        assert!(bu_layers > 0, "explosion layers must run bottom-up");
+        assert!(bu_layers < r.trace.layers.len());
+        // for the plain hybrid the vectorized flag still tracks bottom-up
+        for l in &r.trace.layers {
+            assert_eq!(l.vectorized, l.bottom_up);
+        }
     }
 
     #[test]

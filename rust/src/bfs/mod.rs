@@ -8,6 +8,7 @@
 //! | [`vectorized`] | §4 / Listing 1 — the SIMD explorer + vectorized restoration (the `simd` curve) |
 //! | [`sell_vectorized`] | extension — SELL-16-σ lane-packed explorer (the `sell` engine): 16 distinct frontier vertices per VPU issue |
 //! | [`bottom_up`] | extension (§8) — direction-optimizing hybrid with vectorized (and optionally SELL) steps |
+//! | [`sell_bottom_up`] | extension — SELL-packed bottom-up scan: 16 distinct *unvisited* vertices per VPU issue, dynamic lane refill |
 //! | [`policy`] | §4.1 — which layers run vectorized, and how the sell engine chunks them |
 //! | [`validate`] | §5.3 — the Graph500 five-check soft validator |
 //! | [`state`] | shared frontier/visited/predecessor state for the threaded versions |
@@ -44,6 +45,7 @@ pub mod bitrace_free;
 pub mod bottom_up;
 pub mod parallel;
 pub mod policy;
+pub mod sell_bottom_up;
 pub mod sell_vectorized;
 pub mod serial;
 pub mod state;
@@ -185,6 +187,9 @@ pub struct LayerTrace {
     pub restore_fixed: usize,
     /// Whether this layer ran through the vector unit.
     pub vectorized: bool,
+    /// Whether this layer ran bottom-up (hybrid engines only) — lets the
+    /// ablation separate bottom-up occupancy from top-down occupancy.
+    pub bottom_up: bool,
     /// VPU events for this layer (zero for scalar layers).
     pub vpu: VpuCounters,
     /// Wall-clock nanoseconds actually spent on this layer (host machine).

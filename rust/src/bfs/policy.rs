@@ -17,6 +17,17 @@
 //! later roots pick whichever mode measured better — replacing the fixed
 //! [`LayerPolicy::SELL_PER_VERTEX_DEGREE`] threshold once real data
 //! exists.
+//!
+//! The hybrid's **bottom-up** phase has the same three-way choice
+//! ([`BottomUpMode`]): a scalar first-hit scan, 16-wide chunks of a single
+//! unvisited vertex's adjacency, or the SELL-packed scan that gathers the
+//! k-th neighbor of 16 *distinct* unvisited vertices per issue
+//! ([`crate::bfs::sell_bottom_up`]). The feedback channel keeps a separate
+//! (band, mode) occupancy table for it, bucketed by the *unvisited* pool's
+//! mean degree, and the measured occupancy also feeds the Beamer α switch:
+//! [`PolicyFeedback::switch_to_bottom_up`] compares predicted VPU *issues*
+//! (edges ÷ measured lanes-per-issue) instead of raw edge counts once a
+//! root has completed and both directions have been measured.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
@@ -62,6 +73,23 @@ pub enum ChunkingMode {
     LanePacked,
 }
 
+/// How a bottom-up layer scans the unvisited pool — the hybrid analogue of
+/// [`ChunkingMode`]. Scalar walks one adjacency entry at a time;
+/// per-vertex chunks push ≤16 neighbors of a *single* unvisited vertex
+/// through the Listing-1 filter per issue; SELL packing gathers the k-th
+/// neighbor of 16 *distinct* unvisited vertices per issue, refilling
+/// retired lanes from the pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BottomUpMode {
+    /// Scalar first-hit scan (no VPU) — worthwhile only when the unvisited
+    /// pool is too small to keep lanes fed.
+    Scalar,
+    /// ≤16-neighbor chunks of one unvisited vertex per issue.
+    PerVertexChunks,
+    /// SELL-16-σ lane packing over the unvisited pool with dynamic refill.
+    SellPacked,
+}
+
 impl LayerPolicy {
     /// Adaptive policy: vectorize when the frontier's mean degree fills at
     /// least one 16-lane chunk per vertex.
@@ -90,6 +118,31 @@ impl LayerPolicy {
             ChunkingMode::PerVertex
         } else {
             ChunkingMode::LanePacked
+        }
+    }
+
+    /// Unvisited-pool size below which the bottom-up scan stays scalar:
+    /// with fewer than two groups' worth of candidate lanes the packed
+    /// explorer cannot amortize its gather setup, and per-vertex chunks
+    /// degenerate the same way.
+    pub const BOTTOM_UP_SCALAR_VERTICES: usize = 2 * LANES;
+
+    /// Static chunking rule for a bottom-up layer over `unvisited_vertices`
+    /// carrying `unvisited_edges` adjacency entries (the analogue of
+    /// [`Self::sell_chunking`], used until [`PolicyFeedback`] has measured
+    /// data). Tiny pools stay scalar; hub-dominated pools (mean degree ≥
+    /// [`Self::SELL_PER_VERTEX_DEGREE`]) keep per-vertex chunks, whose
+    /// contiguous loads already run near-full lanes; the low-degree
+    /// majority — where a first-hit scan retires after a handful of
+    /// entries and per-vertex chunks are mostly dead lanes — is
+    /// SELL-packed.
+    pub fn bottom_up_chunking(unvisited_vertices: usize, unvisited_edges: usize) -> BottomUpMode {
+        if unvisited_vertices < Self::BOTTOM_UP_SCALAR_VERTICES {
+            BottomUpMode::Scalar
+        } else if unvisited_edges / unvisited_vertices >= Self::SELL_PER_VERTEX_DEGREE {
+            BottomUpMode::PerVertexChunks
+        } else {
+            BottomUpMode::SellPacked
         }
     }
 
@@ -129,6 +182,41 @@ struct ModeOcc {
     lanes: AtomicU64,
 }
 
+impl ModeOcc {
+    /// Accumulate one layer's exploration counters.
+    fn record(&self, vpu: &VpuCounters) {
+        self.issues.fetch_add(vpu.explore_issues, Ordering::Relaxed);
+        self.lanes.fetch_add(vpu.lanes_active, Ordering::Relaxed);
+    }
+
+    /// Measured mean occupancy, `None` below the confidence floor — the
+    /// single definition of the trust rule, shared by the top-down and
+    /// bottom-up tables.
+    fn occupancy(&self) -> Option<f64> {
+        let issues = self.issues.load(Ordering::Relaxed);
+        if issues < MIN_FEEDBACK_ISSUES {
+            return None;
+        }
+        Some(self.lanes.load(Ordering::Relaxed) as f64 / issues as f64)
+    }
+}
+
+/// Mean occupancy of mode-column `m` pooled across every band of `table`
+/// (`None` until anything was recorded) — the reporting/ablation view.
+fn table_mean(table: &[[ModeOcc; 2]; OCC_BANDS], m: usize) -> Option<f64> {
+    let mut issues = 0u64;
+    let mut lanes = 0u64;
+    for band in table {
+        issues += band[m].issues.load(Ordering::Relaxed);
+        lanes += band[m].lanes.load(Ordering::Relaxed);
+    }
+    if issues == 0 {
+        None
+    } else {
+        Some(lanes as f64 / issues as f64)
+    }
+}
+
 /// Cross-root occupancy feedback for the SELL engine's per-layer chunking
 /// choice (a ROADMAP item: learn the choice from the measured
 /// `lanes_active / explore_issues` of previous roots in a 64-root run).
@@ -154,6 +242,10 @@ struct ModeOcc {
 #[derive(Default)]
 pub struct PolicyFeedback {
     bands: [[ModeOcc; 2]; OCC_BANDS],
+    /// Bottom-up occupancy, bucketed by the *unvisited pool's* mean degree
+    /// (the set a bottom-up layer actually scans). Index 0 = SellPacked,
+    /// 1 = PerVertexChunks; the scalar mode issues nothing measurable.
+    bu_bands: [[ModeOcc; 2]; OCC_BANDS],
     roots_done: AtomicUsize,
 }
 
@@ -166,6 +258,16 @@ fn mode_index(mode: ChunkingMode) -> usize {
     match mode {
         ChunkingMode::LanePacked => 0,
         ChunkingMode::PerVertex => 1,
+    }
+}
+
+/// Cell index of a vectorized bottom-up mode (`None` for the scalar scan,
+/// which records no VPU occupancy).
+fn bu_mode_index(mode: BottomUpMode) -> Option<usize> {
+    match mode {
+        BottomUpMode::SellPacked => Some(0),
+        BottomUpMode::PerVertexChunks => Some(1),
+        BottomUpMode::Scalar => None,
     }
 }
 
@@ -226,9 +328,7 @@ impl PolicyFeedback {
         if input_vertices == 0 || vpu.explore_issues == 0 {
             return;
         }
-        let cell = &self.bands[band_of(input_edges / input_vertices)][mode_index(mode)];
-        cell.issues.fetch_add(vpu.explore_issues, Ordering::Relaxed);
-        cell.lanes.fetch_add(vpu.lanes_active, Ordering::Relaxed);
+        self.bands[band_of(input_edges / input_vertices)][mode_index(mode)].record(vpu);
     }
 
     /// Mark one root's traversal complete (enables probing).
@@ -244,28 +344,138 @@ impl PolicyFeedback {
     /// Measured mean occupancy of `mode` in degree band `band`, or `None`
     /// below the confidence floor.
     pub fn occupancy_in_band(&self, band: usize, mode: ChunkingMode) -> Option<f64> {
-        let cell = &self.bands[band][mode_index(mode)];
-        let issues = cell.issues.load(Ordering::Relaxed);
-        if issues < MIN_FEEDBACK_ISSUES {
-            return None;
-        }
-        Some(cell.lanes.load(Ordering::Relaxed) as f64 / issues as f64)
+        self.bands[band][mode_index(mode)].occupancy()
     }
 
     /// Overall measured occupancy of `mode` across all bands (`None` until
     /// anything was recorded) — the reporting/ablation view.
     pub fn mean_lanes_active(&self, mode: ChunkingMode) -> Option<f64> {
-        let m = mode_index(mode);
+        table_mean(&self.bands, mode_index(mode))
+    }
+
+    // ---- bottom-up: the hybrid's three-way scan choice ----
+
+    /// Pick the bottom-up mode for a layer scanning `unvisited_vertices`
+    /// carrying `unvisited_edges` adjacency entries. Same protocol as
+    /// [`PolicyFeedback::choose`]: measured argmax once both vectorized
+    /// modes have data in the pool's degree band, a bound-guided probe of
+    /// per-vertex chunks after the first root, the static
+    /// [`LayerPolicy::bottom_up_chunking`] threshold until then. Pools
+    /// below [`LayerPolicy::BOTTOM_UP_SCALAR_VERTICES`] always stay scalar
+    /// — occupancy cannot rescue a layer with too few lanes to fill.
+    pub fn choose_bottom_up(
+        &self,
+        unvisited_vertices: usize,
+        unvisited_edges: usize,
+    ) -> BottomUpMode {
+        let fallback = LayerPolicy::bottom_up_chunking(unvisited_vertices, unvisited_edges);
+        if fallback == BottomUpMode::Scalar {
+            return fallback;
+        }
+        let mean_degree = unvisited_edges / unvisited_vertices;
+        let b = band_of(mean_degree);
+        let packed = self.bu_occupancy_in_band(b, BottomUpMode::SellPacked);
+        let chunks = self.bu_occupancy_in_band(b, BottomUpMode::PerVertexChunks);
+        match (packed, chunks) {
+            (Some(p), Some(c)) => {
+                if c > p {
+                    BottomUpMode::PerVertexChunks
+                } else {
+                    BottomUpMode::SellPacked
+                }
+            }
+            // the first-hit early exit only lowers per-vertex occupancy
+            // further, so the top-down bound still filters probes safely
+            (Some(p), None)
+                if self.roots_done() > 0
+                    && Self::per_vertex_occupancy_bound(mean_degree) > p =>
+            {
+                BottomUpMode::PerVertexChunks
+            }
+            _ => fallback,
+        }
+    }
+
+    /// Record the exploration counters of one finished bottom-up layer
+    /// (no-op for the scalar mode — nothing went through the VPU).
+    pub fn record_bottom_up_layer(
+        &self,
+        mode: BottomUpMode,
+        unvisited_vertices: usize,
+        unvisited_edges: usize,
+        vpu: &VpuCounters,
+    ) {
+        let Some(m) = bu_mode_index(mode) else { return };
+        if unvisited_vertices == 0 || vpu.explore_issues == 0 {
+            return;
+        }
+        self.bu_bands[band_of(unvisited_edges / unvisited_vertices)][m].record(vpu);
+    }
+
+    /// Measured mean bottom-up occupancy of `mode` in degree band `band`
+    /// (`None` below the confidence floor, and always for the scalar mode).
+    pub fn bu_occupancy_in_band(&self, band: usize, mode: BottomUpMode) -> Option<f64> {
+        self.bu_bands[band][bu_mode_index(mode)?].occupancy()
+    }
+
+    /// Overall measured bottom-up occupancy of `mode` across all bands —
+    /// the reporting/ablation view (`None` until recorded, and always for
+    /// the scalar mode).
+    pub fn mean_bottom_up_lanes_active(&self, mode: BottomUpMode) -> Option<f64> {
+        table_mean(&self.bu_bands, bu_mode_index(mode)?)
+    }
+
+    /// Aggregate measured occupancy of one direction: all top-down chunking
+    /// modes pooled (`bottom_up = false`) or all bottom-up modes pooled.
+    fn direction_occupancy(&self, bottom_up: bool) -> Option<f64> {
+        let table = if bottom_up { &self.bu_bands } else { &self.bands };
         let mut issues = 0u64;
         let mut lanes = 0u64;
-        for band in &self.bands {
-            issues += band[m].issues.load(Ordering::Relaxed);
-            lanes += band[m].lanes.load(Ordering::Relaxed);
+        for band in table {
+            for cell in band {
+                issues += cell.issues.load(Ordering::Relaxed);
+                lanes += cell.lanes.load(Ordering::Relaxed);
+            }
         }
-        if issues == 0 {
+        if issues < MIN_FEEDBACK_ISSUES {
             None
         } else {
             Some(lanes as f64 / issues as f64)
+        }
+    }
+
+    /// The Beamer α test, occupancy-adjusted. The classic heuristic
+    /// compares raw edge volumes (`frontier_edges × α > unexplored`); on a
+    /// VPU the real cost of a direction is its *issue* count, `edges ÷
+    /// lanes-per-issue`. Once a full root has completed and both
+    /// directions have measured occupancy, the comparison runs in issue
+    /// units — a bottom-up scan that holds more lanes per issue than the
+    /// top-down step is cheaper per edge, so the switch fires earlier (and
+    /// vice versa). Like the guided probe, the adjustment waits for
+    /// [`Self::record_root`]: mid-root measurements are partial (only the
+    /// layers run so far), and holding a *fresh* channel's first root to
+    /// the raw-edge test keeps its layer-by-layer switch points identical
+    /// to classic Beamer — the property the cross-variant edges-scanned
+    /// comparisons rely on. (A channel already carrying completed roots —
+    /// e.g. reused through the coordinator's artifact cache — adjusts
+    /// immediately; that is the point of reusing it.) With either side
+    /// unmeasured the factors cancel back to the raw test, so single-root
+    /// runs and non-SELL hybrids always behave exactly like classic
+    /// Beamer.
+    pub fn switch_to_bottom_up(
+        &self,
+        frontier_edges: usize,
+        unexplored_edges: usize,
+        alpha: usize,
+    ) -> bool {
+        if self.roots_done() == 0 {
+            return frontier_edges * alpha > unexplored_edges;
+        }
+        match (self.direction_occupancy(false), self.direction_occupancy(true)) {
+            (Some(td), Some(bu)) if td > 0.0 && bu > 0.0 => {
+                (frontier_edges as f64 / td) * alpha as f64 > unexplored_edges as f64 / bu
+            }
+            _ => frontier_edges * alpha > unexplored_edges,
         }
     }
 }
@@ -276,6 +486,11 @@ impl std::fmt::Debug for PolicyFeedback {
             .field("roots_done", &self.roots_done())
             .field("packed_occ", &self.mean_lanes_active(ChunkingMode::LanePacked))
             .field("per_vertex_occ", &self.mean_lanes_active(ChunkingMode::PerVertex))
+            .field("bu_packed_occ", &self.mean_bottom_up_lanes_active(BottomUpMode::SellPacked))
+            .field(
+                "bu_chunked_occ",
+                &self.mean_bottom_up_lanes_active(BottomUpMode::PerVertexChunks),
+            )
             .finish_non_exhaustive()
     }
 }
@@ -406,6 +621,105 @@ mod tests {
         f.record_layer(ChunkingMode::LanePacked, 100, 400, &counters(100, 1000));
         f.record_root();
         assert_eq!(f.choose(100, 400), ChunkingMode::LanePacked);
+    }
+
+    #[test]
+    fn bottom_up_static_rule_three_ways() {
+        // tiny pools stay scalar regardless of degree
+        assert_eq!(LayerPolicy::bottom_up_chunking(8, 800), BottomUpMode::Scalar);
+        assert_eq!(LayerPolicy::bottom_up_chunking(0, 0), BottomUpMode::Scalar);
+        // hub-dominated pools keep per-vertex chunks
+        assert_eq!(LayerPolicy::bottom_up_chunking(100, 3200), BottomUpMode::PerVertexChunks);
+        // the low-degree majority is SELL-packed
+        assert_eq!(LayerPolicy::bottom_up_chunking(1000, 4000), BottomUpMode::SellPacked);
+        assert_eq!(LayerPolicy::bottom_up_chunking(100_874, 150_698), BottomUpMode::SellPacked);
+    }
+
+    #[test]
+    fn bottom_up_measured_comparison_overrides_static() {
+        // mean unvisited degree 4: static says SellPacked, but measurement
+        // says per-vertex chunks held more lanes in that band
+        let f = PolicyFeedback::default();
+        f.record_bottom_up_layer(BottomUpMode::SellPacked, 100, 400, &counters(100, 600));
+        f.record_bottom_up_layer(BottomUpMode::PerVertexChunks, 100, 400, &counters(100, 900));
+        assert_eq!(f.choose_bottom_up(100, 400), BottomUpMode::PerVertexChunks);
+        // ...and the reverse keeps lane packing
+        let g = PolicyFeedback::default();
+        g.record_bottom_up_layer(BottomUpMode::SellPacked, 100, 400, &counters(100, 1500));
+        g.record_bottom_up_layer(BottomUpMode::PerVertexChunks, 100, 400, &counters(100, 900));
+        assert_eq!(g.choose_bottom_up(100, 400), BottomUpMode::SellPacked);
+        // the scalar floor is not overridable by measurements
+        assert_eq!(f.choose_bottom_up(8, 32), BottomUpMode::Scalar);
+    }
+
+    #[test]
+    fn bottom_up_guided_probe_waits_for_first_root() {
+        // mean degree 16: the per-vertex bound (16.0) beats measured
+        // packing (12.0) — probe-worthy, but only after a root completes
+        let f = PolicyFeedback::default();
+        f.record_bottom_up_layer(BottomUpMode::SellPacked, 100, 1600, &counters(100, 1200));
+        assert_eq!(f.choose_bottom_up(100, 1600), BottomUpMode::SellPacked);
+        f.record_root();
+        assert_eq!(f.choose_bottom_up(100, 1600), BottomUpMode::PerVertexChunks);
+        // mean degree 4: the bound (4.0) cannot beat measured packing — no probe
+        let g = PolicyFeedback::default();
+        g.record_bottom_up_layer(BottomUpMode::SellPacked, 100, 400, &counters(100, 1000));
+        g.record_root();
+        assert_eq!(g.choose_bottom_up(100, 400), BottomUpMode::SellPacked);
+    }
+
+    #[test]
+    fn scalar_mode_records_nothing() {
+        let f = PolicyFeedback::default();
+        f.record_bottom_up_layer(BottomUpMode::Scalar, 100, 400, &counters(100, 900));
+        assert_eq!(f.mean_bottom_up_lanes_active(BottomUpMode::Scalar), None);
+        assert_eq!(f.mean_bottom_up_lanes_active(BottomUpMode::SellPacked), None);
+        assert_eq!(f.mean_bottom_up_lanes_active(BottomUpMode::PerVertexChunks), None);
+    }
+
+    #[test]
+    fn switch_falls_back_to_raw_edges_unmeasured() {
+        let f = PolicyFeedback::default();
+        f.record_root();
+        // classic Beamer: 100 × 14 > 1000 → switch; 10 × 14 < 1000 → stay
+        assert!(f.switch_to_bottom_up(100, 1000, 14));
+        assert!(!f.switch_to_bottom_up(10, 1000, 14));
+        // one direction measured is not enough — still raw
+        f.record_layer(ChunkingMode::LanePacked, 100, 400, &counters(100, 1200));
+        assert!(!f.switch_to_bottom_up(10, 1000, 14));
+    }
+
+    #[test]
+    fn switch_stays_raw_during_first_root() {
+        // both directions measured mid-root, but no root has completed:
+        // the first root must behave exactly like classic Beamer
+        let f = PolicyFeedback::default();
+        f.record_layer(ChunkingMode::LanePacked, 100, 400, &counters(100, 400));
+        f.record_bottom_up_layer(BottomUpMode::SellPacked, 100, 400, &counters(100, 1600));
+        // raw: 30 × 14 = 420 < 1000 → no switch, despite favorable BU occ
+        assert!(!f.switch_to_bottom_up(30, 1000, 14));
+        f.record_root();
+        assert!(f.switch_to_bottom_up(30, 1000, 14));
+    }
+
+    #[test]
+    fn switch_fires_earlier_when_bottom_up_occupancy_wins() {
+        // top-down measures 4 lanes/issue, bottom-up 16. Raw test:
+        // 30 × 14 = 420 < 1000 → no switch. Issue units:
+        // (30/4) × 14 = 105 > 1000/16 = 62.5 → switch.
+        let f = PolicyFeedback::default();
+        f.record_layer(ChunkingMode::LanePacked, 100, 400, &counters(100, 400));
+        f.record_bottom_up_layer(BottomUpMode::SellPacked, 100, 400, &counters(100, 1600));
+        f.record_root();
+        assert!(f.switch_to_bottom_up(30, 1000, 14), "adjusted test must fire earlier");
+        // and with the occupancies reversed the switch is *later* than raw:
+        // raw 100×14 = 1400 > 1000 would fire, issue units (100/16)×14 =
+        // 87.5 < 1000/4 = 250 hold off
+        let g = PolicyFeedback::default();
+        g.record_layer(ChunkingMode::LanePacked, 100, 400, &counters(100, 1600));
+        g.record_bottom_up_layer(BottomUpMode::SellPacked, 100, 400, &counters(100, 400));
+        g.record_root();
+        assert!(!g.switch_to_bottom_up(100, 1000, 14), "adjusted test must hold off");
     }
 
     #[test]

@@ -1,0 +1,441 @@
+//! SELL-packed bottom-up exploration — the tentpole of the hybrid's
+//! vectorization story.
+//!
+//! The chunked bottom-up scan ([`super::bottom_up::bottom_up_layer_simd`])
+//! vectorizes *within* one unvisited vertex's adjacency: a vertex of
+//! degree d < 16 issues a chunk with 16 − d dead lanes, and the first-hit
+//! early exit makes the effective scanned degree even smaller than d — on
+//! the low-degree majority of an RMAT graph most lanes idle. This module
+//! applies the SELL-16-σ lane-packing idea to the *unvisited pool*
+//! instead: every VPU issue gathers the k-th neighbor of **16 distinct
+//! unvisited vertices**, one per lane.
+//!
+//! # The lane-refill protocol
+//!
+//! Each worker thread owns a contiguous range of SELL chunks and streams
+//! their occupied, still-unvisited lanes ([`crate::graph::SellLane`], in
+//! rank order — degree-sorted within the σ window, so co-resident lanes
+//! have similar lengths) through a `LanePack` (this module's per-lane
+//! cursor state):
+//!
+//! 1. **Refill** — every inactive lane takes the next candidate from the
+//!    stream; the pack runs 16-wide until the pool drains.
+//! 2. **Issue** — one gather over `Sell16::cols` at per-lane indices
+//!    `slot_base + row·16` fetches each lane's next neighbor; a second
+//!    gather fetches the frontier-bitmap words those neighbors live in,
+//!    and a bit-test mask marks the lanes whose neighbor is in the
+//!    frontier (Listing 1's filter, aimed at the frontier instead of the
+//!    visited map).
+//! 3. **Claim** — hit lanes scatter the found parent into their own
+//!    vertex's predecessor entry. Every active lane scans a *distinct*
+//!    vertex, so the scatter indices never collide: the claim is race-free
+//!    by construction, needs no negative-marker journal and no
+//!    restoration pass (the bottom-up property the paper's §3 points out,
+//!    kept intact under lane packing). The `next`/`visited` bits are set
+//!    with the scalar atomic-OR — bit-granularity updates the vector ISA
+//!    lacks (§3.2), at most 16 per issue and only on hits.
+//! 4. **Retire + advance** — hit lanes (converged) and lanes whose row
+//!    reached their length (exhausted: no parent this layer) leave the
+//!    pack; everyone else steps one row. Loop to 1.
+//!
+//! Parent choice is deterministic and identical to the scalar scan: a
+//! lane's rows visit its adjacency in CSR order, so the first hit is the
+//! first frontier neighbor in adjacency order. Edge accounting is also
+//! identical — one adjacency entry per active lane per issue — which the
+//! equivalence tests assert; the chunked scan by contrast pays for every
+//! entry of a 16-chunk even when lane 0 already hit.
+
+use super::state::{SharedBitmap, SharedPred};
+use super::vectorized::SimdOpts;
+use crate::graph::bitmap::BITS_PER_WORD;
+use crate::graph::sell::{Sell16, SELL_C};
+use crate::graph::SellLane;
+use crate::simd::ops::{PrefetchHint, Vpu};
+use crate::simd::vec512::{Mask16, VecI32x16, LANES};
+use crate::simd::VpuCounters;
+use crate::threads::parallel_for_dynamic;
+use crate::Vertex;
+
+/// Per-lane cursor state for packed exploration with **dynamic refill**.
+/// The top-down packer (`pack_frontier` in [`super::sell_vectorized`]) is
+/// the static analogue: it pre-sorts frontier slots by length so a group's
+/// lanes exhaust together and never need refilling mid-group. The
+/// bottom-up explorer cannot pre-sort — lanes retire unpredictably the
+/// moment they find a parent — so it streams candidate lanes
+/// ([`SellLane`]) through this pack instead: every issue runs all
+/// currently-active lanes one row forward, and retired lanes (converged
+/// or exhausted) are refilled from the stream before the next issue,
+/// keeping occupancy at 16 until the pool drains.
+struct LanePack {
+    /// SELL slot each lane is scanning.
+    slot: [u32; LANES],
+    /// Adjacency length of each lane.
+    len: [u32; LANES],
+    /// Next row (k-th neighbor) each lane will scan.
+    row: [u32; LANES],
+    /// Original vertex id each lane is scanning for.
+    vertex: [Vertex; LANES],
+    active: u16,
+}
+
+impl LanePack {
+    fn new() -> Self {
+        LanePack {
+            slot: [0; LANES],
+            len: [0; LANES],
+            row: [0; LANES],
+            vertex: [0; LANES],
+            active: 0,
+        }
+    }
+
+    /// Fill every inactive lane from `stream` (stops early when the stream
+    /// runs dry). Returns the active-lane mask after refilling.
+    fn refill(&mut self, stream: &mut impl Iterator<Item = SellLane>) -> Mask16 {
+        for lane in 0..LANES {
+            let bit = 1u16 << lane;
+            if self.active & bit != 0 {
+                continue;
+            }
+            let Some(l) = stream.next() else { break };
+            self.slot[lane] = l.slot;
+            self.len[lane] = l.len;
+            self.row[lane] = 0;
+            self.vertex[lane] = l.vertex;
+            self.active |= bit;
+        }
+        Mask16(self.active)
+    }
+
+    /// Per-lane gather indices into `Sell16::cols` for each active lane's
+    /// current row ([`Sell16::lane_index`] — the one definition of the
+    /// SELL gather address); inactive lanes hold 0 and are masked off by
+    /// the caller.
+    fn gather_indices(&self, sell: &Sell16) -> VecI32x16 {
+        let mut idx = [0i32; LANES];
+        for lane in 0..LANES {
+            if self.active & (1 << lane) != 0 {
+                idx[lane] =
+                    sell.lane_index(self.slot[lane] as usize, self.row[lane] as usize) as i32;
+            }
+        }
+        VecI32x16(idx)
+    }
+
+    /// Each lane's own vertex id as a vector — the scatter index for
+    /// race-free per-lane claims (all active lanes are distinct vertices).
+    fn vertex_vec(&self) -> VecI32x16 {
+        let mut v = [0i32; LANES];
+        for lane in 0..LANES {
+            if self.active & (1 << lane) != 0 {
+                v[lane] = self.vertex[lane] as i32;
+            }
+        }
+        VecI32x16(v)
+    }
+
+    /// Vertex id in `lane` (only meaningful for active lanes).
+    #[inline]
+    fn vertex(&self, lane: usize) -> Vertex {
+        self.vertex[lane]
+    }
+
+    /// Advance every active lane one row; lanes in `retire` (converged) and
+    /// lanes that ran out of adjacency (exhausted) leave the pack.
+    fn advance(&mut self, retire: Mask16) {
+        for lane in 0..LANES {
+            let bit = 1u16 << lane;
+            if self.active & bit == 0 {
+                continue;
+            }
+            if retire.0 & bit != 0 {
+                self.active &= !bit;
+                continue;
+            }
+            self.row[lane] += 1;
+            if self.row[lane] >= self.len[lane] {
+                self.active &= !bit;
+            }
+        }
+    }
+}
+
+/// SELL chunks per dynamic-schedule grab. The refill pool lives inside one
+/// grab, and every grab pays a lane-drain tail (the last ≤16 candidates
+/// retire without replacement), so the grain trades load balancing against
+/// occupancy: 64 chunks (1024 slots) keeps the drain below ~2% of a grab's
+/// issues while still giving the dynamic scheduler dozens of grabs at
+/// Graph500 scales.
+const BU_CHUNK_GRAIN: usize = 64;
+
+/// One SELL-packed bottom-up layer step: every unvisited vertex searches
+/// its adjacency for a frontier parent, 16 distinct vertices per VPU
+/// issue. Returns (edges scanned, vertices discovered, merged counters).
+///
+/// `frontier_words` is the read-only frontier bitmap of the current layer;
+/// `visited`/`next`/`pred` follow the same discipline as the scalar scan —
+/// a vertex's entries are written only by the lane scanning that vertex.
+pub fn bottom_up_layer_sell(
+    num_threads: usize,
+    sell: &Sell16,
+    frontier_words: &[u32],
+    visited: &SharedBitmap,
+    next: &SharedBitmap,
+    pred: &SharedPred,
+    opts: SimdOpts,
+) -> (usize, usize, VpuCounters) {
+    #[derive(Default)]
+    struct Acc {
+        edges: usize,
+        found: usize,
+        vpu: Option<Vpu>,
+    }
+
+    let accs: Vec<Acc> = parallel_for_dynamic(
+        num_threads,
+        sell.num_chunks(),
+        BU_CHUNK_GRAIN,
+        |_tid, chunk_range, acc: &mut Acc| {
+            let vpu = acc.vpu.get_or_insert_with(Vpu::new);
+            let slots = chunk_range.start * SELL_C..chunk_range.end * SELL_C;
+            // candidate lanes: occupied slots whose vertex is still
+            // unvisited. Within a layer only this thread can visit them
+            // (each vertex is claimed by its own lane), so the filter is
+            // stable across the refill stream.
+            let mut stream = sell.slot_lanes(slots).filter(|l| !visited.test_bit(l.vertex));
+            let mut pack = LanePack::new();
+            loop {
+                let active = pack.refill(&mut stream);
+                if active.is_empty() {
+                    break;
+                }
+                vpu.note_explore_issue(active.count());
+                acc.edges += active.count() as usize;
+
+                // gather each lane's next neighbor from the SELL storage
+                let vidx = pack.gather_indices(sell);
+                if opts.prefetch {
+                    vpu.prefetch_i32gather(vidx, PrefetchHint::T1);
+                }
+                let vneig = vpu.mask_i32gather_words(active, vidx, &sell.cols);
+
+                // frontier membership = Listing 1's filter aimed at the
+                // frontier bitmap
+                let bpw = vpu.set1_epi32(BITS_PER_WORD as i32);
+                let vword = vpu.div_epi32(vneig, bpw);
+                let vbits = vpu.rem_epi32(vneig, bpw);
+                if opts.prefetch {
+                    vpu.prefetch_i32gather(vword, PrefetchHint::T0);
+                }
+                let fwords = vpu.mask_i32gather_words(active, vword, frontier_words);
+                let one = vpu.set1_epi32(1);
+                let bits = vpu.sllv_epi32(one, vbits);
+                let hit = vpu.kand(vpu.test_epi32_mask(fwords, bits), active);
+
+                if !hit.is_empty() {
+                    // claim: P[v] = u for each hit lane's own vertex — all
+                    // scatter targets distinct, so no race and no marker
+                    let vself = pack.vertex_vec();
+                    vpu.mask_scatter_shared_i32(pred.atomic_cells(), hit, vself, vneig);
+                    for lane in 0..SELL_C {
+                        if hit.test_lane(lane) {
+                            let v = pack.vertex(lane);
+                            next.set_bit_atomic(v);
+                            visited.set_bit_atomic(v);
+                            acc.found += 1;
+                        }
+                    }
+                }
+                pack.advance(hit);
+            }
+        },
+    );
+
+    let mut edges = 0usize;
+    let mut found = 0usize;
+    let mut vpu = VpuCounters::default();
+    for a in accs {
+        edges += a.edges;
+        found += a.found;
+        if let Some(v) = a.vpu {
+            vpu.merge(&v.counters);
+        }
+    }
+    (edges, found, vpu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::bottom_up::{bottom_up_layer_scalar, bottom_up_layer_simd};
+    use crate::graph::{Bitmap, Csr, EdgeList, RmatConfig};
+    use crate::{Pred, Vertex};
+
+    fn rmat(scale: u32, ef: usize, seed: u64) -> Csr {
+        let el = RmatConfig::graph500(scale, ef).generate(seed);
+        Csr::from_edge_list(scale, &el)
+    }
+
+    fn fresh_state(n: usize, root: Vertex) -> (SharedBitmap, SharedBitmap, SharedPred) {
+        let vis = SharedBitmap::new(n);
+        vis.set_bit_atomic(root);
+        let next = SharedBitmap::new(n);
+        let pred = SharedPred::new_infinity(n);
+        pred.set(root, root as Pred);
+        (vis, next, pred)
+    }
+
+    #[test]
+    fn agrees_with_scalar_bottom_up() {
+        // one layer from a hub frontier: identical discoveries, parents,
+        // and — unlike the chunked scan — identical edge counts
+        let g = rmat(10, 16, 75);
+        let n = g.num_vertices();
+        let sell = Sell16::from_csr(&g, 256);
+        let root = (0..n as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        let mut frontier = Bitmap::new(n);
+        frontier.set_bit(root);
+
+        let (v1, n1, p1) = fresh_state(n, root);
+        let (e1, f1) = bottom_up_layer_scalar(1, &g, &frontier, &v1, &n1, &p1);
+        for threads in [1usize, 4] {
+            let (v2, n2, p2) = fresh_state(n, root);
+            let (e2, f2, vpu) = bottom_up_layer_sell(
+                threads,
+                &sell,
+                frontier.words(),
+                &v2,
+                &n2,
+                &p2,
+                SimdOpts::full(),
+            );
+            assert_eq!(e1, e2, "lane-packed must scan exactly the scalar entry count");
+            assert_eq!(f1, f2);
+            assert_eq!(n1.snapshot().words(), n2.snapshot().words());
+            assert_eq!(v1.snapshot().words(), v2.snapshot().words());
+            assert_eq!(p1.snapshot(), p2.snapshot(), "threads={threads}");
+            assert!(vpu.explore_issues > 0);
+            assert!(vpu.gathers > 0);
+        }
+    }
+
+    #[test]
+    fn agrees_with_chunked_bottom_up_on_discoveries() {
+        // discoveries/parents match the chunked scan too; the chunked scan
+        // may only ever scan *more* entries (post-hit chunk remainders)
+        let g = rmat(10, 8, 77);
+        let n = g.num_vertices();
+        let sell = Sell16::from_csr(&g, 256);
+        let root = (0..n as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        let mut frontier = Bitmap::new(n);
+        frontier.set_bit(root);
+
+        let (v1, n1, p1) = fresh_state(n, root);
+        let (e_chunked, _f, _) =
+            bottom_up_layer_simd(1, &g, frontier.words(), &v1, &n1, &p1);
+        let (v2, n2, p2) = fresh_state(n, root);
+        let (e_packed, _f2, _) = bottom_up_layer_sell(
+            1,
+            &sell,
+            frontier.words(),
+            &v2,
+            &n2,
+            &p2,
+            SimdOpts::full(),
+        );
+        assert_eq!(n1.snapshot().words(), n2.snapshot().words());
+        assert_eq!(v1.snapshot().words(), v2.snapshot().words());
+        assert_eq!(p1.snapshot(), p2.snapshot());
+        assert!(e_packed <= e_chunked, "packed {e_packed} > chunked {e_chunked}");
+    }
+
+    #[test]
+    fn occupancy_beats_chunked_on_skewed_frontier() {
+        // the tentpole claim at the layer level: scanning the same
+        // unvisited pool against the same frontier, lane packing holds
+        // strictly more active lanes per issue than per-vertex chunks
+        let g = rmat(12, 16, 94);
+        let n = g.num_vertices();
+        let sell = Sell16::from_csr(&g, 256);
+        let root = (0..n as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        // frontier = the hub's neighborhood (a realistic explosion-layer
+        // frontier), unvisited = everything else
+        let (vis, next, pred) = fresh_state(n, root);
+        let mut frontier = Bitmap::new(n);
+        frontier.set_bit(root);
+        bottom_up_layer_scalar(1, &g, &frontier, &vis, &next, &pred);
+        let frontier = next.snapshot();
+        let vis_words = vis.snapshot();
+
+        let mk = || {
+            let v = SharedBitmap::new(n);
+            for (w, &bits) in vis_words.words().iter().enumerate() {
+                v.or_word_atomic(w, bits);
+            }
+            (v, SharedBitmap::new(n), SharedPred::new_infinity(n))
+        };
+        let (v1, n1, p1) = mk();
+        let (_, _, chunked) = bottom_up_layer_simd(1, &g, frontier.words(), &v1, &n1, &p1);
+        let (v2, n2, p2) = mk();
+        let (_, _, packed) =
+            bottom_up_layer_sell(1, &sell, frontier.words(), &v2, &n2, &p2, SimdOpts::full());
+        let occ_chunked = chunked.mean_lanes_active();
+        let occ_packed = packed.mean_lanes_active();
+        assert!(occ_chunked > 0.0 && occ_packed > 0.0);
+        assert!(
+            occ_packed > occ_chunked + 1.0,
+            "packed occupancy {occ_packed:.2} !> chunked {occ_chunked:.2} + 1.0"
+        );
+        // same discoveries either way
+        assert_eq!(n1.snapshot().words(), n2.snapshot().words());
+    }
+
+    #[test]
+    fn empty_frontier_discovers_nothing() {
+        let el = EdgeList::with_edges(8, vec![(0, 1), (1, 2)]);
+        let g = Csr::from_edge_list(0, &el);
+        let sell = Sell16::from_csr(&g, 16);
+        let frontier = Bitmap::new(8);
+        let vis = SharedBitmap::new(8);
+        let next = SharedBitmap::new(8);
+        let pred = SharedPred::new_infinity(8);
+        let (edges, found, _) = bottom_up_layer_sell(
+            1,
+            &sell,
+            frontier.words(),
+            &vis,
+            &next,
+            &pred,
+            SimdOpts::full(),
+        );
+        // every unvisited lane scans to exhaustion, finds nothing
+        assert_eq!(found, 0);
+        assert!(next.is_all_zero());
+        assert_eq!(edges, g.num_directed_edges());
+    }
+
+    #[test]
+    fn disconnected_vertices_never_claimed() {
+        // 0–1 connected; 2–3 form a separate component; 4 isolated
+        let el = EdgeList::with_edges(5, vec![(0, 1), (2, 3)]);
+        let g = Csr::from_edge_list(0, &el);
+        let sell = Sell16::from_csr(&g, 16);
+        let mut frontier = Bitmap::new(5);
+        frontier.set_bit(0);
+        let (vis, next, pred) = fresh_state(5, 0);
+        let (_, found, _) = bottom_up_layer_sell(
+            1,
+            &sell,
+            frontier.words(),
+            &vis,
+            &next,
+            &pred,
+            SimdOpts::none(),
+        );
+        assert_eq!(found, 1);
+        assert!(next.test_bit(1));
+        assert_eq!(pred.get(1), 0);
+        assert_eq!(pred.get(2), crate::PRED_INFINITY);
+        assert_eq!(pred.get(4), crate::PRED_INFINITY);
+    }
+}

@@ -560,6 +560,7 @@ impl VectorizedBfs {
                 restore_words_scanned: rstats.words_scanned,
                 restore_fixed: rstats.lost_bits_fixed,
                 vectorized: vectorize,
+                bottom_up: false,
                 vpu: vpu_counters,
                 wall_ns: t0.elapsed().as_nanos() as u64,
             });

@@ -86,6 +86,9 @@ ENGINES (--engine):
                                occupancy-feedback chunking
     hybrid, hybrid-scalar,   §8 direction-optimizing (Beamer) hybrid;
       hybrid-sell              -sell packs top-down phases
+    hybrid-sell-bu           hybrid-sell + SELL-packed bottom-up scan
+                               (16 unvisited vertices per VPU issue) and
+                               occupancy-fed α switch
     pjrt                     AOT JAX/Pallas kernel via PJRT
 
 COMMANDS:
@@ -94,7 +97,10 @@ COMMANDS:
                --engine NAME (simd) --threads N (4) --workers N (1)
                --seed N (1) --artifacts DIR (artifacts) --no-validate
                --sigma N|global|auto (auto)  SELL σ sort window
-                        (sell engines only; others reject the flag)
+                        (engines with a SELL layout: sell, sell-noopt,
+                         hybrid-sell, hybrid-sell-bu; others reject it)
+               --alpha N (14) --beta N (24)  Beamer switch thresholds
+                        (hybrid engines only; must be >= 1)
     model      Predict Xeon Phi TEPS for a thread/affinity sweep
                --scale N (20: uses the paper's Table 1 profile)
                --threads-list 1,2,48,236 --affinity balanced|compact|

@@ -15,6 +15,7 @@
 //! | `simd`, `simd-noopt`, `simd-nopf` | [`VectorizedBfs`] | §4 Listing 1 |
 //! | `sell`, `sell-noopt` | [`SellBfs`] | SELL-16-σ lane packing |
 //! | `hybrid`, `hybrid-scalar`, `hybrid-sell` | [`HybridBfs`] | §8 direction optimization |
+//! | `hybrid-sell-bu` | [`HybridBfs`] | SELL-packed bottom-up + occupancy-fed α switch |
 //! | `pjrt` | [`PjrtBfs`] | AOT JAX/Pallas kernel |
 
 use anyhow::Result;
@@ -47,8 +48,19 @@ pub enum EngineKind {
     Sell { threads: usize, opts: SimdOpts, policy: LayerPolicy, sigma: usize },
     /// §8 extension — direction-optimizing hybrid (Beamer-style) with a
     /// vectorized bottom-up scan; `sell` routes the top-down phases through
-    /// the SELL lane-packed step.
-    Hybrid { threads: usize, simd: bool, sell: bool },
+    /// the SELL lane-packed step, `bu_sell` lane-packs the bottom-up phase
+    /// too and feeds measured occupancy into the α switch. `sigma` is the
+    /// SELL sort window ([`SIGMA_AUTO`] = per-scale default); `alpha`/
+    /// `beta` are Beamer's switch thresholds.
+    Hybrid {
+        threads: usize,
+        simd: bool,
+        sell: bool,
+        bu_sell: bool,
+        sigma: usize,
+        alpha: usize,
+        beta: usize,
+    },
     /// The AOT JAX/Pallas kernel through PJRT.
     Pjrt { artifact_dir: String },
 }
@@ -71,7 +83,31 @@ impl EngineKind {
         "hybrid",
         "hybrid-scalar",
         "hybrid-sell",
+        "hybrid-sell-bu",
     ];
+
+    /// A hybrid kind with the default switch thresholds and auto σ.
+    fn hybrid(threads: usize, simd: bool, sell: bool, bu_sell: bool) -> Self {
+        EngineKind::Hybrid {
+            threads,
+            simd,
+            sell,
+            bu_sell,
+            sigma: SIGMA_AUTO,
+            alpha: HybridBfs::DEFAULT_ALPHA,
+            beta: HybridBfs::DEFAULT_BETA,
+        }
+    }
+
+    /// The σ sort window this kind would build a SELL layout with —
+    /// [`SIGMA_AUTO`] for kinds that resolve it per scale or build none.
+    /// Together with the graph it keys the coordinator's artifact cache.
+    pub fn sigma_key(&self) -> usize {
+        match self {
+            EngineKind::Sell { sigma, .. } | EngineKind::Hybrid { sigma, .. } => *sigma,
+            _ => SIGMA_AUTO,
+        }
+    }
 
     /// Parse a CLI name: any of [`Self::NATIVE_NAMES`] or `pjrt`.
     pub fn parse(name: &str, threads: usize, artifact_dir: &str) -> Result<Self> {
@@ -110,14 +146,17 @@ impl EngineKind {
                 policy: LayerPolicy::All,
                 sigma: SIGMA_AUTO,
             },
-            "hybrid" => EngineKind::Hybrid { threads, simd: true, sell: false },
-            "hybrid-scalar" => EngineKind::Hybrid { threads, simd: false, sell: false },
-            "hybrid-sell" => EngineKind::Hybrid { threads, simd: true, sell: true },
+            "hybrid" => Self::hybrid(threads, true, false, false),
+            "hybrid-scalar" => Self::hybrid(threads, false, false, false),
+            "hybrid-sell" => Self::hybrid(threads, true, true, false),
+            // the full tentpole configuration: SELL-packed top-down AND
+            // bottom-up, occupancy-fed direction switch
+            "hybrid-sell-bu" => Self::hybrid(threads, true, true, true),
             "pjrt" => EngineKind::Pjrt { artifact_dir: artifact_dir.to_string() },
             other => anyhow::bail!(
                 "unknown engine {other:?} (expected serial, serial-queue, non-simd, \
                  bitrace-free, simd, simd-noopt, simd-nopf, sell, sell-noopt, hybrid, \
-                 hybrid-scalar, hybrid-sell, pjrt)"
+                 hybrid-scalar, hybrid-sell, hybrid-sell-bu, pjrt)"
             ),
         })
     }
@@ -146,12 +185,18 @@ pub fn make_engine(kind: &EngineKind) -> Result<Box<dyn BfsEngine>> {
             policy: *policy,
             sigma: *sigma,
         }),
-        EngineKind::Hybrid { threads, simd, sell } => Box::new(HybridBfs {
-            num_threads: *threads,
-            simd: *simd,
-            sell: *sell,
-            ..Default::default()
-        }),
+        EngineKind::Hybrid { threads, simd, sell, bu_sell, sigma, alpha, beta } => {
+            Box::new(HybridBfs {
+                num_threads: *threads,
+                simd: *simd,
+                sell: *sell,
+                bu_sell: *bu_sell,
+                sigma: *sigma,
+                alpha: *alpha,
+                beta: *beta,
+                ..Default::default()
+            })
+        }
         EngineKind::Pjrt { artifact_dir } => Box::new(PjrtBfs::from_dir(artifact_dir)?),
     })
 }
@@ -197,6 +242,42 @@ mod tests {
     }
 
     #[test]
+    fn hybrid_sell_bu_parses_to_full_config() {
+        let kind = EngineKind::parse("hybrid-sell-bu", 4, "artifacts").unwrap();
+        match kind {
+            EngineKind::Hybrid {
+                simd: true,
+                sell: true,
+                bu_sell: true,
+                alpha,
+                beta,
+                sigma,
+                ..
+            } => {
+                assert_eq!(alpha, HybridBfs::DEFAULT_ALPHA);
+                assert_eq!(beta, HybridBfs::DEFAULT_BETA);
+                assert_eq!(sigma, SIGMA_AUTO);
+            }
+            other => panic!("unexpected kind {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sigma_key_covers_sell_layout_kinds() {
+        let mut sell = EngineKind::parse("sell", 2, "a").unwrap();
+        if let EngineKind::Sell { sigma, .. } = &mut sell {
+            *sigma = 128;
+        }
+        assert_eq!(sell.sigma_key(), 128);
+        let mut hybrid = EngineKind::parse("hybrid-sell-bu", 2, "a").unwrap();
+        if let EngineKind::Hybrid { sigma, .. } = &mut hybrid {
+            *sigma = 256;
+        }
+        assert_eq!(hybrid.sigma_key(), 256);
+        assert_eq!(EngineKind::SerialLayered.sigma_key(), SIGMA_AUTO);
+    }
+
+    #[test]
     fn engines_run_and_agree() {
         use crate::graph::{Csr, RmatConfig};
         let el = RmatConfig::graph500(9, 8).generate(50);
@@ -219,9 +300,10 @@ mod tests {
                 policy: LayerPolicy::heavy(),
                 sigma: SIGMA_AUTO,
             },
-            EngineKind::Hybrid { threads: 2, simd: true, sell: false },
-            EngineKind::Hybrid { threads: 2, simd: false, sell: false },
-            EngineKind::Hybrid { threads: 2, simd: true, sell: true },
+            EngineKind::hybrid(2, true, false, false),
+            EngineKind::hybrid(2, false, false, false),
+            EngineKind::hybrid(2, true, true, false),
+            EngineKind::hybrid(2, true, true, true),
         ] {
             let r = make_engine(&kind).unwrap().run(&g, 0);
             assert_eq!(

@@ -14,6 +14,10 @@ pub struct Metrics {
     nanos: AtomicU64,
     /// Total one-time preparation nanoseconds (once per job).
     prep_nanos: AtomicU64,
+    /// Jobs whose per-graph artifacts came from the coordinator's keyed
+    /// cache (serving scenario: repeated jobs on a hot graph skip
+    /// preparation).
+    artifact_cache_hits: AtomicUsize,
 }
 
 /// Point-in-time copy of the counters.
@@ -28,6 +32,8 @@ pub struct MetricsSnapshot {
     pub preparation_seconds: f64,
     /// Aggregate TEPS over everything the coordinator has run.
     pub aggregate_teps: f64,
+    /// Jobs served from the keyed artifact cache.
+    pub artifact_cache_hits: usize,
 }
 
 impl Metrics {
@@ -41,6 +47,11 @@ impl Metrics {
         self.prep_nanos.fetch_add((preparation_seconds * 1e9) as u64, Ordering::Relaxed);
     }
 
+    /// Count one job whose artifacts were served from the keyed cache.
+    pub fn record_artifact_cache_hit(&self) {
+        self.artifact_cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let edges = self.edges.load(Ordering::Relaxed);
         let secs = self.nanos.load(Ordering::Relaxed) as f64 / 1e9;
@@ -51,6 +62,7 @@ impl Metrics {
             total_seconds: secs,
             preparation_seconds: self.prep_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             aggregate_teps: if secs > 0.0 { edges as f64 / secs } else { 0.0 },
+            artifact_cache_hits: self.artifact_cache_hits.load(Ordering::Relaxed),
         }
     }
 }

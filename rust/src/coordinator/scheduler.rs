@@ -16,7 +16,7 @@
 //!    regardless of completion order.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -26,21 +26,73 @@ use super::job::{BfsJob, JobOutcome, RootRun};
 use super::metrics::Metrics;
 use crate::bfs::validate::validate;
 use crate::bfs::{GraphArtifacts, PreparedBfs};
+use crate::graph::Csr;
+
+/// Entries the artifact cache holds at most — a serving deployment repeats
+/// jobs over a handful of hot graphs, not hundreds.
+const ARTIFACT_CACHE_CAP: usize = 8;
+
+/// One cached per-graph preparation: the graph it belongs to (held weakly —
+/// the cache must not keep dropped graphs alive) plus the σ the entry was
+/// keyed under.
+struct ArtifactCacheEntry {
+    graph: Weak<Csr>,
+    sigma: usize,
+    artifacts: Arc<GraphArtifacts>,
+}
 
 /// The L3 driver: runs jobs, keeps metrics.
 pub struct Coordinator {
     /// Worker threads per job.
     pub workers: usize,
     metrics: Metrics,
+    /// Keyed [`GraphArtifacts`] cache (graph identity + σ): repeated jobs
+    /// on the same graph — the serving scenario — skip layout/stats
+    /// construction entirely and keep accumulating the same cross-root
+    /// [`crate::bfs::policy::PolicyFeedback`] channel. Insertion order,
+    /// oldest evicted at [`ARTIFACT_CACHE_CAP`]. Entries whose graph was
+    /// dropped are pruned on the next `run_job` (every job passes through
+    /// the cache), so a fully idle coordinator can pin at most
+    /// [`ARTIFACT_CACHE_CAP`] dead graphs' artifacts until its next job.
+    artifact_cache: Mutex<Vec<ArtifactCacheEntry>>,
 }
 
 impl Coordinator {
     pub fn new(workers: usize) -> Self {
-        Coordinator { workers: workers.max(1), metrics: Metrics::default() }
+        Coordinator {
+            workers: workers.max(1),
+            metrics: Metrics::default(),
+            artifact_cache: Mutex::new(Vec::new()),
+        }
     }
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// The cached artifacts for `(graph, sigma)`, or a fresh entry.
+    /// Identity is the graph's allocation (`Arc::ptr_eq`), verified through
+    /// the stored `Weak` so a reused allocation address can never alias a
+    /// dropped graph. Returns `(artifacts, was_cached)`.
+    fn artifacts_for(&self, graph: &Arc<Csr>, sigma: usize) -> (Arc<GraphArtifacts>, bool) {
+        let mut cache = self.artifact_cache.lock().unwrap();
+        cache.retain(|e| e.graph.strong_count() > 0);
+        if let Some(e) = cache.iter().find(|e| {
+            e.sigma == sigma
+                && e.graph.upgrade().map(|g| Arc::ptr_eq(&g, graph)).unwrap_or(false)
+        }) {
+            return (Arc::clone(&e.artifacts), true);
+        }
+        let artifacts = Arc::new(GraphArtifacts::for_graph(graph));
+        if cache.len() >= ARTIFACT_CACHE_CAP {
+            cache.remove(0);
+        }
+        cache.push(ArtifactCacheEntry {
+            graph: Arc::downgrade(graph),
+            sigma,
+            artifacts: Arc::clone(&artifacts),
+        });
+        (artifacts, false)
     }
 
     /// Execute a job to completion.
@@ -48,10 +100,14 @@ impl Coordinator {
         // Phase 1 — fail fast: construct the engine and prepare the graph
         // once, before any worker spawns. The PJRT engine compiles its
         // executable here; the sell engines build their Sell16 layout here
-        // — exactly once per job, shared by every root below.
+        // — exactly once per *graph*: repeated jobs on a cached graph
+        // reuse the artifacts and skip the build entirely.
         let t_prep = Instant::now();
         let engine = make_engine(&job.engine)?;
-        let artifacts = Arc::new(GraphArtifacts::for_graph(&job.graph));
+        let (artifacts, cached) = self.artifacts_for(&job.graph, job.engine.sigma_key());
+        if cached {
+            self.metrics.record_artifact_cache_hit();
+        }
         let prepared = engine.prepare_with(&job.graph, Arc::clone(&artifacts))?;
         let preparation_seconds = t_prep.elapsed().as_secs_f64();
         let prep_share = preparation_seconds / job.roots.len().max(1) as f64;
@@ -167,6 +223,62 @@ mod tests {
         }
         // the cross-root feedback channel saw every root
         assert_eq!(out.artifacts.feedback().roots_done(), 8);
+    }
+
+    #[test]
+    fn artifact_cache_reuses_preparation_across_jobs() {
+        // the serving scenario: repeated jobs on one hot graph share one
+        // prepared GraphArtifacts — layout built once, feedback persistent
+        let c = Coordinator::new(2);
+        let el = RmatConfig::graph500(9, 8).generate(61);
+        let g = Arc::new(Csr::from_edge_list(9, &el));
+        let engine = EngineKind::parse("sell", 2, "artifacts").unwrap();
+        let j1 = BfsJob {
+            id: 1,
+            graph: Arc::clone(&g),
+            roots: (0..4).collect(),
+            engine,
+            validate: true,
+        };
+        let j2 = BfsJob { id: 2, ..j1.clone() };
+        let a = c.run_job(&j1).unwrap();
+        let b = c.run_job(&j2).unwrap();
+        assert!(Arc::ptr_eq(&a.artifacts, &b.artifacts));
+        assert_eq!(b.artifacts.sell_builds(), 1, "layout must not rebuild on a cache hit");
+        // the cross-root feedback channel kept accumulating across jobs
+        assert_eq!(b.artifacts.feedback().roots_done(), 8);
+        assert_eq!(c.metrics().snapshot().artifact_cache_hits, 1);
+        assert!(b.all_valid);
+    }
+
+    #[test]
+    fn artifact_cache_distinguishes_graph_and_sigma() {
+        let c = Coordinator::new(1);
+        let el = RmatConfig::graph500(9, 8).generate(62);
+        let g1 = Arc::new(Csr::from_edge_list(9, &el));
+        // equal content, different identity — must not alias
+        let g2 = Arc::new(Csr::from_edge_list(9, &el));
+        let mk = |graph: &Arc<Csr>, sigma: usize| {
+            let mut engine = EngineKind::parse("sell", 1, "artifacts").unwrap();
+            if let EngineKind::Sell { sigma: s, .. } = &mut engine {
+                *s = sigma;
+            }
+            BfsJob {
+                id: 0,
+                graph: Arc::clone(graph),
+                roots: vec![0, 1],
+                engine,
+                validate: false,
+            }
+        };
+        let a = c.run_job(&mk(&g1, 64)).unwrap();
+        let b = c.run_job(&mk(&g2, 64)).unwrap(); // different graph → miss
+        let d = c.run_job(&mk(&g1, 128)).unwrap(); // different σ → miss
+        let e = c.run_job(&mk(&g1, 64)).unwrap(); // same graph + σ → hit
+        assert!(!Arc::ptr_eq(&a.artifacts, &b.artifacts));
+        assert!(!Arc::ptr_eq(&a.artifacts, &d.artifacts));
+        assert!(Arc::ptr_eq(&a.artifacts, &e.artifacts));
+        assert_eq!(c.metrics().snapshot().artifact_cache_hits, 1);
     }
 
     #[test]

@@ -30,4 +30,4 @@ pub use csr::Csr;
 pub use edge_list::EdgeList;
 pub use padded::{Adjacency, PaddedCsr};
 pub use rmat::RmatConfig;
-pub use sell::Sell16;
+pub use sell::{Sell16, SellLane};

@@ -34,6 +34,20 @@ use crate::Vertex;
 /// Chunk width — fixed to the VPU lane count (SELL-*16*-σ).
 pub const SELL_C: usize = LANES;
 
+/// One candidate VPU lane of the layout: a slot, the original vertex
+/// occupying it, and its adjacency length. The stream unit the bottom-up
+/// lane packer ([`crate::bfs::sell_bottom_up`]) refills retired lanes
+/// from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SellLane {
+    /// Slot index (rank order — degree-sorted within the σ window).
+    pub slot: u32,
+    /// Original vertex id (`perm[slot]`).
+    pub vertex: Vertex,
+    /// Adjacency entries in this lane.
+    pub len: u32,
+}
+
 /// The SELL-16-σ adjacency layout.
 #[derive(Clone, Debug)]
 pub struct Sell16 {
@@ -127,6 +141,34 @@ impl Sell16 {
     #[inline]
     pub fn slot_base(&self, slot: usize) -> usize {
         self.chunk_starts[slot / SELL_C] + slot % SELL_C
+    }
+
+    /// Gather index into `cols` of `(slot, row)` — the per-lane address a
+    /// lane-packed explorer feeds to the VPU gather for the `row`-th
+    /// neighbor of the vertex in `slot`.
+    #[inline]
+    pub fn lane_index(&self, slot: usize, row: usize) -> usize {
+        self.slot_base(slot) + row * SELL_C
+    }
+
+    /// The occupied lanes of `slots` (a slot range, in rank order),
+    /// skipping zero-length lanes — both the padding slots of a final
+    /// partial chunk and degree-0 vertices, which carry no scannable
+    /// adjacency. Because ranks are degree-sorted within each σ window,
+    /// consecutive lanes from this stream have similar lengths, so a
+    /// packed group's lanes exhaust together.
+    pub fn slot_lanes(
+        &self,
+        slots: std::ops::Range<usize>,
+    ) -> impl Iterator<Item = SellLane> + '_ {
+        let end = slots.end.min(self.lane_len.len());
+        (slots.start.min(end)..end).filter_map(move |s| {
+            let len = self.lane_len[s];
+            if len == 0 {
+                return None;
+            }
+            Some(SellLane { slot: s as u32, vertex: self.perm[s], len })
+        })
     }
 
     /// The `r`-th neighbor of the vertex in `slot` (test/debug accessor).
@@ -256,6 +298,34 @@ mod tests {
             assert_eq!(s.lane_len[slot], 0);
         }
         assert_roundtrip(&g, &s);
+    }
+
+    #[test]
+    fn slot_lanes_skip_padding_and_degree_zero() {
+        let el = EdgeList::with_edges(20, vec![(0, 1), (2, 3), (18, 19)]);
+        let g = Csr::from_edge_list(0, &el);
+        let s = Sell16::from_csr(&g, 16);
+        // 32 slots exist (2 chunks); only the 6 endpoint vertices carry lanes
+        let lanes: Vec<SellLane> = s.slot_lanes(0..s.lane_len.len()).collect();
+        assert_eq!(lanes.len(), 6);
+        for l in &lanes {
+            assert_eq!(s.perm[l.slot as usize], l.vertex);
+            assert_eq!(s.lane_len[l.slot as usize], l.len);
+            assert!(l.len > 0);
+            // lane_index addresses the stored neighbors
+            for r in 0..l.len as usize {
+                assert_eq!(
+                    s.cols[s.lane_index(l.slot as usize, r)],
+                    s.neighbor(l.slot as usize, r)
+                );
+            }
+        }
+        // an out-of-range end is clamped, not a panic
+        assert_eq!(s.slot_lanes(0..usize::MAX).count(), 6);
+        // sub-ranges partition the stream
+        let a = s.slot_lanes(0..16).count();
+        let b = s.slot_lanes(16..32).count();
+        assert_eq!(a + b, 6);
     }
 
     #[test]

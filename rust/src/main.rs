@@ -55,18 +55,40 @@ fn cmd_run(args: &Args) -> Result<()> {
     let engine_name = args.get_str("engine", "simd");
     let artifacts = args.get_str("artifacts", "artifacts");
     let mut engine = EngineKind::parse(&engine_name, threads, &artifacts)?;
-    if let EngineKind::Sell { sigma, .. } = &mut engine {
-        *sigma = match args.get_str("sigma", "auto").as_str() {
+    let parse_sigma = || -> Result<usize> {
+        Ok(match args.get_str("sigma", "auto").as_str() {
             "auto" => phi_bfs::bfs::sell_vectorized::SIGMA_AUTO,
             "global" => usize::MAX,
             s => s
                 .parse()
                 .map_err(|_| anyhow::anyhow!("--sigma: expected a number, `global` or `auto`"))?,
-        };
-    } else if args.keys().any(|k| k.as_str() == "sigma") {
-        // refuse rather than silently ignore: hybrid-sell resolves its σ
-        // from the graph's degree stats and has no override yet
-        anyhow::bail!("--sigma only applies to the sell engines (got --engine {engine_name})");
+        })
+    };
+    // --sigma applies exactly to the engines that build a SELL layout;
+    // everything else refuses rather than silently ignoring the flag
+    match &mut engine {
+        EngineKind::Sell { sigma, .. } => *sigma = parse_sigma()?,
+        EngineKind::Hybrid { sell, bu_sell, sigma, .. } if *sell || *bu_sell => {
+            *sigma = parse_sigma()?
+        }
+        _ if args.keys().any(|k| k.as_str() == "sigma") => anyhow::bail!(
+            "--sigma only applies to engines with a SELL layout (sell, sell-noopt, \
+             hybrid-sell, hybrid-sell-bu); got --engine {engine_name}"
+        ),
+        _ => {}
+    }
+    // --alpha/--beta tune the hybrid's direction switch; fail fast on
+    // values that would degenerate it (the engine's prepare re-checks)
+    if let EngineKind::Hybrid { alpha, beta, .. } = &mut engine {
+        *alpha = args.get("alpha", *alpha)?;
+        *beta = args.get("beta", *beta)?;
+        if *alpha == 0 || *beta == 0 {
+            anyhow::bail!("--alpha/--beta must be >= 1 (got alpha={alpha}, beta={beta})");
+        }
+    } else if args.keys().any(|k| k.as_str() == "alpha" || k.as_str() == "beta") {
+        anyhow::bail!(
+            "--alpha/--beta only apply to the hybrid engines (got --engine {engine_name})"
+        );
     }
 
     let mut exp = Experiment::new(scale, edgefactor, engine);

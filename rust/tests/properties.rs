@@ -176,7 +176,7 @@ fn prop_prepared_engines_build_layouts_once() {
         let scale = g.size(8, 10) as u32;
         let el = RmatConfig::graph500(scale, 8).generate(g.size(0, 1 << 16) as u64);
         let csr = Csr::from_edge_list(scale, &el);
-        for name in ["sell", "sell-noopt", "hybrid-sell"] {
+        for name in ["sell", "sell-noopt", "hybrid-sell", "hybrid-sell-bu"] {
             let kind = EngineKind::parse(name, 2, "artifacts").unwrap();
             let engine = make_engine(&kind).unwrap();
             let prepared = engine.prepare(&csr).unwrap();
