@@ -1,14 +1,16 @@
 //! The paper's §3 motivation in action: BFS as the building block for
 //! graph analytics — connected components, shortest paths and Brandes'
-//! betweenness centrality over an RMAT social-network-like graph, all
-//! running on the vectorized BFS engine.
+//! betweenness centrality over an RMAT social-network-like graph. The
+//! multi-source workloads (component sweeps, betweenness forward passes)
+//! go through the batch-first `run_batch` entry point on the MS-BFS
+//! engine, which answers 16 sources per shared traversal.
 //!
 //! ```bash
 //! cargo run --release --example analytics
 //! ```
 
-use phi_bfs::apps::{betweenness_centrality, connected_components, ShortestPaths};
-use phi_bfs::bfs::vectorized::VectorizedBfs;
+use phi_bfs::apps::{betweenness_centrality, connected_components_batched, ShortestPaths};
+use phi_bfs::bfs::multi_source::MultiSourceSellBfs;
 use phi_bfs::graph::stats::DegreeStats;
 use phi_bfs::graph::{Csr, RmatConfig};
 
@@ -16,7 +18,7 @@ fn main() {
     // a small "social network": SCALE 12, edgefactor 16
     let el = RmatConfig::graph500(12, 16).generate(7);
     let g = Csr::from_edge_list(12, &el);
-    let engine = VectorizedBfs { num_threads: 2, ..Default::default() };
+    let engine = MultiSourceSellBfs { num_threads: 2, ..Default::default() };
     println!(
         "graph: {} vertices, {} directed edges",
         g.num_vertices(),
@@ -30,8 +32,8 @@ fn main() {
         deg.top1pct_edge_share * 100.0
     );
 
-    // 1. connected components
-    let comps = connected_components(&g, &engine);
+    // 1. connected components — seeds batched 16 per MS wave
+    let comps = connected_components_batched(&g, &engine, 16);
     println!(
         "components: {} total, giant component = {} vertices ({:.1}%), {} isolated",
         comps.count,
@@ -55,9 +57,10 @@ fn main() {
     let path = sp.path_to(far).unwrap();
     println!("  farthest reachable vertex {far}: path {path:?}");
 
-    // 3. sampled betweenness centrality (64 BFS sources, Bader-style)
+    // 3. sampled betweenness centrality (64 BFS sources, Bader-style) —
+    //    the forward passes run as four shared 16-source MS waves
     let sources: Vec<u32> = (0..64u32).map(|i| (i * 61) % g.num_vertices() as u32).collect();
-    let bc = betweenness_centrality(&g, &sources);
+    let bc = betweenness_centrality(&g, &sources, &engine);
     let mut top: Vec<usize> = (0..g.num_vertices()).collect();
     top.sort_by(|&a, &b| bc[b].total_cmp(&bc[a]));
     println!("betweenness (sampled over {} sources), top 5:", sources.len());

@@ -5,55 +5,106 @@
 //! accumulates pair dependencies over the layers in reverse. This is the
 //! flagship "BFS as a building block" application the paper's §3 cites.
 //!
+//! The forward BFS runs on the library's engines through the batch-first
+//! entry point: sources go through one prepared engine in wave-sized
+//! [`crate::bfs::PreparedBfs::run_batch`] chunks, so a batched engine
+//! (`hybrid-sell-ms`) answers 16 sources per shared traversal while the
+//! resident result set stays O(wave × V) even for exact all-sources
+//! runs. Path counts and dependencies are then recovered per source from
+//! the exact BFS depth map, level by level — mathematically identical to
+//! Brandes' queue-order recurrences, which only ever read across
+//! adjacent levels.
+//!
 //! Exact computation is O(V·E); `betweenness_centrality` therefore takes
 //! the set of source vertices, so callers can do exact (all sources) or
 //! sampled/approximate (k random sources, Bader-style) centrality.
 
+use crate::bfs::BfsEngine;
 use crate::graph::Csr;
 use crate::Vertex;
 
-/// Brandes' algorithm from the given sources. Returns per-vertex scores
-/// (divide by `sources.len()` for a sampled estimate; exact undirected
-/// betweenness conventionally halves the total as well).
-pub fn betweenness_centrality(g: &Csr, sources: &[Vertex]) -> Vec<f64> {
+/// Brandes' algorithm from the given sources, with the forward BFS run
+/// (batched) on `engine`. Returns per-vertex scores (divide by
+/// `sources.len()` for a sampled estimate; exact undirected betweenness
+/// conventionally halves the total as well).
+pub fn betweenness_centrality(g: &Csr, sources: &[Vertex], engine: &dyn BfsEngine) -> Vec<f64> {
     let n = g.num_vertices();
     let mut bc = vec![0.0f64; n];
     // reused scratch
     let mut sigma = vec![0.0f64; n];
-    let mut dist = vec![-1i64; n];
     let mut delta = vec![0.0f64; n];
-    let mut order: Vec<Vertex> = Vec::with_capacity(n);
-    let mut queue = std::collections::VecDeque::new();
+    let mut levels: Vec<Vec<Vertex>> = Vec::new();
 
-    for &s in sources {
-        sigma.fill(0.0);
-        dist.fill(-1);
-        delta.fill(0.0);
-        order.clear();
-        queue.clear();
+    let prepared = engine.prepare(g).expect("engine preparation failed");
+    // one wave-sized run_batch call at a time: each result holds an
+    // n-length predecessor array, so batching ALL sources at once would
+    // make the exact (all-sources) use O(V²) resident — chunking keeps
+    // the shared-traversal win with O(wave × V) memory
+    for chunk in sources.chunks(crate::bfs::multi_source::MS_WAVE) {
+        for (result, &s) in prepared.run_batch(chunk).into_iter().zip(chunk.iter()) {
+            accumulate_source(g, s, &result, &mut bc, &mut sigma, &mut delta, &mut levels);
+        }
+    }
+    bc
+}
 
-        // forward: BFS counting shortest paths
-        sigma[s as usize] = 1.0;
-        dist[s as usize] = 0;
-        queue.push_back(s);
-        while let Some(u) = queue.pop_front() {
-            order.push(u);
-            for &v in g.neighbors(u) {
-                if dist[v as usize] < 0 {
-                    dist[v as usize] = dist[u as usize] + 1;
-                    queue.push_back(v);
-                }
-                if dist[v as usize] == dist[u as usize] + 1 {
+/// One source's Brandes forward/backward accumulation from its exact BFS
+/// depth map, level by level.
+fn accumulate_source(
+    g: &Csr,
+    s: Vertex,
+    result: &crate::bfs::BfsResult,
+    bc: &mut [f64],
+    sigma: &mut [f64],
+    delta: &mut [f64],
+    levels: &mut Vec<Vec<Vertex>>,
+) {
+    let dist = result.tree.distances().expect("engine produced a corrupt tree");
+    // bucket reached vertices by depth — the layer-synchronous order
+    // both Brandes phases need
+    for level in levels.iter_mut() {
+        level.clear();
+    }
+    for (v, &d) in dist.iter().enumerate() {
+        if d == u32::MAX {
+            continue;
+        }
+        let d = d as usize;
+        while levels.len() <= d {
+            levels.push(Vec::new());
+        }
+        levels[d].push(v as Vertex);
+    }
+    let depth = dist
+        .iter()
+        .filter(|&&d| d != u32::MAX)
+        .max()
+        .map(|&d| d as usize + 1)
+        .unwrap_or(0);
+
+    sigma.fill(0.0);
+    delta.fill(0.0);
+    sigma[s as usize] = 1.0;
+
+    // forward: path counts, level by level (a vertex at depth d only
+    // reads depth d-1, so within-level order is irrelevant)
+    for d in 1..depth {
+        for &v in &levels[d] {
+            for &u in g.neighbors(v) {
+                if dist[u as usize] == (d - 1) as u32 {
                     sigma[v as usize] += sigma[u as usize];
                 }
             }
         }
+    }
 
-        // backward: dependency accumulation in reverse BFS order
-        for &w in order.iter().rev() {
+    // backward: dependency accumulation, deepest level first
+    for d in (1..depth).rev() {
+        for &w in &levels[d] {
             for &v in g.neighbors(w) {
-                if dist[v as usize] == dist[w as usize] - 1 {
-                    let share = sigma[v as usize] / sigma[w as usize] * (1.0 + delta[w as usize]);
+                if dist[v as usize] == (d - 1) as u32 {
+                    let share =
+                        sigma[v as usize] / sigma[w as usize] * (1.0 + delta[w as usize]);
                     delta[v as usize] += share;
                 }
             }
@@ -62,12 +113,13 @@ pub fn betweenness_centrality(g: &Csr, sources: &[Vertex]) -> Vec<f64> {
             }
         }
     }
-    bc
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bfs::multi_source::MultiSourceSellBfs;
+    use crate::bfs::serial::SerialQueueBfs;
     use crate::graph::{EdgeList, RmatConfig};
 
     fn csr(n: usize, edges: Vec<(Vertex, Vertex)>) -> Csr {
@@ -77,7 +129,10 @@ mod tests {
     fn exact(g: &Csr) -> Vec<f64> {
         let all: Vec<Vertex> = (0..g.num_vertices() as Vertex).collect();
         // undirected convention: halve (each pair counted from both ends)
-        betweenness_centrality(g, &all).into_iter().map(|x| x / 2.0).collect()
+        betweenness_centrality(g, &all, &SerialQueueBfs)
+            .into_iter()
+            .map(|x| x / 2.0)
+            .collect()
     }
 
     #[test]
@@ -132,11 +187,32 @@ mod tests {
         let el = RmatConfig::graph500(8, 8).generate(93);
         let g = Csr::from_edge_list(8, &el);
         let all: Vec<Vertex> = (0..g.num_vertices() as Vertex).collect();
-        let full = betweenness_centrality(&g, &all);
-        let half = betweenness_centrality(&g, &all[..all.len() / 2]);
-        let rest = betweenness_centrality(&g, &all[all.len() / 2..]);
+        let full = betweenness_centrality(&g, &all, &SerialQueueBfs);
+        let half = betweenness_centrality(&g, &all[..all.len() / 2], &SerialQueueBfs);
+        let rest = betweenness_centrality(&g, &all[all.len() / 2..], &SerialQueueBfs);
         for v in 0..g.num_vertices() {
             assert!((full[v] - half[v] - rest[v]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn batched_engine_agrees_with_serial() {
+        // the batch-first path: MS waves must produce the same scores as
+        // the serial per-source forward passes (identical depth maps →
+        // identical recurrences; only FP summation order may differ)
+        let el = RmatConfig::graph500(9, 8).generate(95);
+        let g = Csr::from_edge_list(9, &el);
+        let sources: Vec<Vertex> = (0..40).map(|i| (i * 13) % g.num_vertices() as u32).collect();
+        let serial = betweenness_centrality(&g, &sources, &SerialQueueBfs);
+        let ms = MultiSourceSellBfs { num_threads: 2, ..Default::default() };
+        let batched = betweenness_centrality(&g, &sources, &ms);
+        for v in 0..g.num_vertices() {
+            assert!(
+                (serial[v] - batched[v]).abs() < 1e-6,
+                "vertex {v}: serial {} vs batched {}",
+                serial[v],
+                batched[v]
+            );
         }
     }
 
@@ -145,13 +221,16 @@ mod tests {
         let el = RmatConfig::graph500(9, 8).generate(94);
         let g = Csr::from_edge_list(9, &el);
         let sources: Vec<Vertex> = (0..64).collect();
-        let bc = betweenness_centrality(&g, &sources);
+        let bc = betweenness_centrality(&g, &sources, &SerialQueueBfs);
         let top_bc = (0..g.num_vertices()).max_by(|&a, &b| bc[a].total_cmp(&bc[b])).unwrap();
         let deg_rank_of_top = {
             let mut by_deg: Vec<usize> = (0..g.num_vertices()).collect();
             by_deg.sort_by_key(|&v| std::cmp::Reverse(g.degree(v as Vertex)));
             by_deg.iter().position(|&v| v == top_bc).unwrap()
         };
-        assert!(deg_rank_of_top < g.num_vertices() / 10, "top-bc vertex degree rank {deg_rank_of_top}");
+        assert!(
+            deg_rank_of_top < g.num_vertices() / 10,
+            "top-bc vertex degree rank {deg_rank_of_top}"
+        );
     }
 }

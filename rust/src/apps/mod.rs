@@ -6,17 +6,19 @@
 //! top of the library's engines, so the repository demonstrates the
 //! downstream uses the paper's introduction appeals to:
 //!
-//! * [`components`] — connected components by repeated BFS sweeps;
+//! * [`components`] — connected components by repeated BFS sweeps
+//!   (optionally batching seeds through `run_batch`);
 //! * [`sssp`] — unweighted single-source shortest paths (distances +
-//!   path extraction) from any [`crate::bfs::BfsEngine`];
+//!   path extraction) from any [`crate::bfs::BfsEngine`], single- or
+//!   many-source;
 //! * [`betweenness`] — Brandes' betweenness centrality, whose forward
-//!   phase is layer-synchronous BFS (and therefore reuses the paper's
-//!   frontier machinery).
+//!   phase is layer-synchronous BFS run batched on the engines (and
+//!   therefore reuses the paper's frontier machinery).
 
 pub mod betweenness;
 pub mod components;
 pub mod sssp;
 
 pub use betweenness::betweenness_centrality;
-pub use components::connected_components;
+pub use components::{connected_components, connected_components_batched};
 pub use sssp::ShortestPaths;

@@ -21,6 +21,27 @@ impl ShortestPaths {
         ShortestPaths { source, tree: result.tree, dist }
     }
 
+    /// Shortest paths from many sources through one prepared engine. The
+    /// sources go through the batch-first
+    /// [`crate::bfs::PreparedBfs::run_batch`] entry point, so a batched
+    /// engine (`hybrid-sell-ms`) answers a whole 16-source wave with one
+    /// shared traversal; every other engine loops internally. Returns one
+    /// answer per source, in order — note every answer holds its own
+    /// O(V) tree/distance arrays, so callers that only fold over the
+    /// answers should chunk their source list.
+    pub fn compute_many(g: &Csr, sources: &[Vertex], engine: &dyn BfsEngine) -> Vec<Self> {
+        let prepared = engine.prepare(g).expect("engine preparation failed");
+        prepared
+            .run_batch(sources)
+            .into_iter()
+            .zip(sources.iter())
+            .map(|(result, &source)| {
+                let dist = result.tree.distances().expect("engine produced a corrupt tree");
+                ShortestPaths { source, tree: result.tree, dist }
+            })
+            .collect()
+    }
+
     /// Hop distance to `v`, or `None` if unreachable.
     pub fn distance(&self, v: Vertex) -> Option<u32> {
         match self.dist[v as usize] {
@@ -97,6 +118,26 @@ mod tests {
         let sp = ShortestPaths::compute(&g, 0, &SerialQueueBfs);
         assert_eq!(sp.distance(3), None);
         assert_eq!(sp.path_to(3), None);
+    }
+
+    #[test]
+    fn compute_many_equals_per_source_compute() {
+        let el = RmatConfig::graph500(9, 8).generate(92);
+        let g = Csr::from_edge_list(9, &el);
+        let sources: Vec<Vertex> = (0..20).map(|i| (i * 17) % g.num_vertices() as u32).collect();
+        let ms = crate::bfs::multi_source::MultiSourceSellBfs {
+            num_threads: 2,
+            ..Default::default()
+        };
+        let many = ShortestPaths::compute_many(&g, &sources, &ms);
+        assert_eq!(many.len(), sources.len());
+        for (sp, &s) in many.iter().zip(sources.iter()) {
+            assert_eq!(sp.source, s);
+            let single = ShortestPaths::compute(&g, s, &SerialQueueBfs);
+            for v in 0..g.num_vertices() as Vertex {
+                assert_eq!(sp.distance(v), single.distance(v), "source {s}, vertex {v}");
+            }
+        }
     }
 
     #[test]

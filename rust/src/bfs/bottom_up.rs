@@ -24,12 +24,14 @@
 //! neighbor of 16 *distinct* unvisited vertices per issue (see that
 //! module's docs for the lane-refill protocol). With `bu_sell` enabled
 //! (the `hybrid-sell-bu` engine) the choice is driven by the cross-root
-//! [`PolicyFeedback`] occupancy tables, and the α switch itself compares
-//! predicted VPU issue counts (`edges ÷ measured lanes-per-issue`) instead
-//! of raw edge volumes once the feedback channel holds a completed root
-//! and both directions are measured
-//! ([`PolicyFeedback::switch_to_bottom_up`]); a fresh channel's first
-//! root always runs the classic raw-edge test.
+//! [`PolicyFeedback`] occupancy tables, and **both** direction switches
+//! compare predicted VPU issue counts (`edges ÷ measured lanes-per-issue`)
+//! instead of raw volumes once the feedback channel holds a completed
+//! root and both directions are measured — α via
+//! [`PolicyFeedback::switch_to_bottom_up`], β via its symmetric
+//! counterpart [`PolicyFeedback::switch_to_top_down`] (which replaces the
+//! raw frontier-population test); a fresh channel's first root always
+//! runs the classic raw tests.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -191,8 +193,8 @@ pub struct HybridBfs {
     pub sell: bool,
     /// Lane-pack the bottom-up phase too (the `hybrid-sell-bu` engine):
     /// per layer, [`PolicyFeedback`] picks scalar vs per-vertex chunks vs
-    /// SELL-packed from measured occupancy, and the α switch runs in
-    /// issue units instead of raw edges.
+    /// SELL-packed from measured occupancy, and both direction switches
+    /// (α and β) run in issue units instead of raw volumes.
     pub bu_sell: bool,
     /// σ sort window of the prepared [`Sell16`] layout (only read when
     /// `sell`/`bu_sell` need one); [`SIGMA_AUTO`] resolves to the
@@ -267,8 +269,23 @@ impl HybridBfs {
             };
             if !bottom_up && go_bottom_up {
                 bottom_up = true;
-            } else if bottom_up && frontier_count * self.beta < n {
-                bottom_up = false;
+            } else if bottom_up {
+                // the β side is symmetric to α: measured issue counts
+                // replace the raw frontier-population test from the
+                // second root on (PolicyFeedback::switch_to_top_down)
+                let back_to_top_down = match feedback {
+                    Some(f) if self.bu_sell => f.switch_to_top_down(
+                        frontier_count,
+                        frontier_edges,
+                        unexplored,
+                        n,
+                        self.beta,
+                    ),
+                    _ => frontier_count * self.beta < n,
+                };
+                if back_to_top_down {
+                    bottom_up = false;
+                }
             }
 
             // the pool a bottom-up layer scans: everything still unvisited

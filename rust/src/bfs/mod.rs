@@ -9,6 +9,7 @@
 //! | [`sell_vectorized`] | extension — SELL-16-σ lane-packed explorer (the `sell` engine): 16 distinct frontier vertices per VPU issue |
 //! | [`bottom_up`] | extension (§8) — direction-optimizing hybrid with vectorized (and optionally SELL) steps |
 //! | [`sell_bottom_up`] | extension — SELL-packed bottom-up scan: 16 distinct *unvisited* vertices per VPU issue, dynamic lane refill |
+//! | [`multi_source`] | extension — 16-root MS-BFS over the SELL layout (the `hybrid-sell-ms` engine): one traversal serves a whole root batch |
 //! | [`policy`] | §4.1 — which layers run vectorized, and how the sell engine chunks them |
 //! | [`validate`] | §5.3 — the Graph500 five-check soft validator |
 //! | [`state`] | shared frontier/visited/predecessor state for the threaded versions |
@@ -33,6 +34,18 @@
 //! [`policy::PolicyFeedback`] channel: occupancy measured on earlier roots
 //! of a job steers the per-layer chunking choice of later roots.
 //!
+//! # The batch entry point
+//!
+//! The run phase is **batch-first**: [`PreparedBfs::run_batch`] takes a
+//! whole slice of roots and returns one [`BfsResult`] per root, in order.
+//! The provided implementation loops [`PreparedBfs::run`], so every
+//! engine accepts batches of any size unchanged; engines with a genuinely
+//! batched traversal override it — [`multi_source`]'s `hybrid-sell-ms`
+//! runs 16 concurrent roots through one shared SELL traversal, so a
+//! single VPU gather serves all 16 searches at once. The coordinator's
+//! `BatchPolicy` decides how a job's sampled roots are grouped into
+//! `run_batch` calls.
+//!
 //! [`BfsEngine::run`] is the provided one-shot convenience (prepare +
 //! run); benchmarks and multi-root callers should prepare once and reuse.
 //!
@@ -43,6 +56,7 @@
 pub mod artifacts;
 pub mod bitrace_free;
 pub mod bottom_up;
+pub mod multi_source;
 pub mod parallel;
 pub mod policy;
 pub mod sell_bottom_up;
@@ -269,13 +283,25 @@ pub trait BfsEngine {
 
 /// Phase 2 of the engine API: an engine bound to one graph. `Sync` by
 /// contract — the coordinator's worker threads share one instance and pull
-/// roots from a common cursor, so `run` must be callable concurrently.
+/// root batches from a common cursor, so `run`/`run_batch` must be
+/// callable concurrently.
 pub trait PreparedBfs: Sync {
     /// Short name of the underlying engine.
     fn name(&self) -> &'static str;
 
     /// Traverse the prepared graph from `root`.
     fn run(&self, root: Vertex) -> BfsResult;
+
+    /// Traverse the prepared graph from every root of `roots`, returning
+    /// one result per root **in root order**. The provided implementation
+    /// loops [`PreparedBfs::run`], so every engine accepts batches of any
+    /// size; engines with a genuinely batched traversal (the MS-BFS
+    /// [`multi_source`] engine) override it to share one traversal across
+    /// the batch. Duplicate roots are allowed and yield independent
+    /// results.
+    fn run_batch(&self, roots: &[Vertex]) -> Vec<BfsResult> {
+        roots.iter().map(|&r| self.run(r)).collect()
+    }
 
     /// The per-graph artifacts this instance was prepared with.
     fn artifacts(&self) -> &GraphArtifacts;

@@ -1,0 +1,994 @@
+//! Multi-source (MS-BFS) traversal over the SELL layout — the batch-first
+//! engine `hybrid-sell-ms`: up to [`MS_WAVE`] roots traverse the prepared
+//! [`Sell16`] **concurrently, through one shared walk of the graph**.
+//!
+//! The single-root engines fill the VPU's 16 lanes *within* one search
+//! (16 distinct frontier vertices per issue). This engine fills a second
+//! dimension: 16 *searches* per memory access. Per vertex it keeps a
+//! **visit mask** — one bit per root of the wave, stored one 32-bit word
+//! per vertex so the mask array is directly gatherable — and advances the
+//! traversal by **mask OR-propagation**: when the union frontier scans
+//! edge `v → w`, every root whose bit is in `v`'s frontier mask but not
+//! yet in `w`'s visit mask discovers `w` in this layer. One gather of 16
+//! neighbor ids therefore serves every search of the wave at once, which
+//! is exactly the amortization a Graph500-style 64-root batch (or a
+//! serving deployment's request batch) wants.
+//!
+//! Layering is exact per root: all roots start at layer 0 together and
+//! masks propagate one layer per iteration, so bit `r` walks precisely
+//! root `r`'s standalone BFS — depths are identical to the single-root
+//! engines' (the batch-equivalence property suite asserts this for every
+//! engine, this one included).
+//!
+//! # Direction optimization, per root
+//!
+//! The wave is direction-optimizing (the hybrid-vectorization follow-up's
+//! point that direction switching composes with lane packing) — but the
+//! Beamer schedule runs **per root**, not on the union: each root hits
+//! its explosion layers at its own depth, and a single union-wide switch
+//! would force bottom-up layers to keep scanning until *every* root's
+//! bits arrive (work-volume simulation showed a union-wide switch losing
+//! to 16 per-root hybrids from SCALE 14 up, while per-root schedules
+//! sharing the passes win ~2.3× at every scale). Every layer therefore
+//! splits the live bits into a top-down group and a bottom-up group by
+//! each root's own α/β test over its own frontier volumes, and runs up
+//! to two shared passes:
+//!
+//! * **Top-down pass** — the frontier vertices carrying top-down bits
+//!   are packed over the SELL layout exactly like
+//!   [`super::sell_vectorized`] (aligned full-chunk rows + degree-sorted
+//!   gather groups); each row gathers 16 neighbor ids, a second gather
+//!   fetches those neighbors' visit masks, and a vector AND-NOT yields
+//!   the per-lane candidate masks (restricted to the top-down bits).
+//! * **Bottom-up pass** — vertices whose visit mask is still missing
+//!   *bottom-up-live* bits stream through the [`super::sell_bottom_up`]
+//!   lane-refill pack; a lane gathers its next neighbor's frontier mask
+//!   and ORs the missing bits in (opportunistically including top-down
+//!   bits — a frontier parent is a frontier parent), retiring once its
+//!   mask covers the bottom-up live set. Exploding roots' frontiers are
+//!   huge, so coverage — like the single-root first-hit exit — arrives
+//!   within a few rows, and bits whose frontier has drained (an isolated
+//!   root after layer 0) never pin lanes to exhaustion.
+//!
+//! Both per-root switches run through the cross-root [`PolicyFeedback`]
+//! channel: classic raw-volume tests while the channel is fresh,
+//! measured-issue units (`edges ÷ lanes-per-issue`) once a completed
+//! root has measured both directions
+//! ([`PolicyFeedback::switch_to_bottom_up`] /
+//! [`PolicyFeedback::switch_to_top_down`]).
+//!
+//! # Claims and traces
+//!
+//! Discoveries are committed with the bottom-up claim discipline in
+//! *both* directions: visit masks must **merge** (`fetch_or`), not
+//! overwrite, so the paper's racy whole-word scatter + restoration pair
+//! does not apply — the `fetch_or` return value arbitrates concurrent
+//! claimants, giving every `pred[r][w]` cell a unique writer. Bit-
+//! granularity atomic ORs are not in the vector ISA (§3.2), so claims are
+//! scalar, at most 16 per issue and only on hit lanes.
+//!
+//! Each root of a batch gets its own [`BfsResult`]: its exact tree, and a
+//! trace whose scalar columns (`input_vertices`, `edges_scanned` as
+//! top-down degree sums — the Graph500-comparable volume — and
+//! `traversed`) are per-root exact. The wave's *shared* work (VPU
+//! counters, wall time) cannot be split per root, so it is attributed to
+//! the wave's **lead result** (the first root), whose trace keeps a row
+//! for every union layer; sums over a batch therefore stay additive, and
+//! the attribution is direction-exact — a lead row carries one pass's
+//! counters with a matching `bottom_up` flag, a mixed layer adding a
+//! second zero-volume row for its bottom-up pass. Non-lead rows carry
+//! their own root's per-layer direction (and no VPU counters).
+//! [`PolicyFeedback`] additionally records each union layer's occupancy,
+//! so later waves — and any engine sharing the artifacts — learn from
+//! batch occupancy too.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::bottom_up::HybridBfs;
+use super::policy::{BottomUpMode, ChunkingMode, PolicyFeedback};
+use super::sell_bottom_up::LanePack;
+use super::sell_vectorized::{pack_frontier, PackedItem, SIGMA_AUTO};
+use super::state::{SharedBitmap, SharedPred};
+use super::vectorized::SimdOpts;
+use super::{BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, RunTrace};
+use crate::graph::sell::{Sell16, SELL_C};
+use crate::graph::{Bitmap, Csr};
+use crate::simd::ops::{PrefetchHint, Vpu};
+use crate::simd::vec512::{Mask16, VecI32x16, LANES};
+use crate::simd::VpuCounters;
+use crate::threads::parallel_for_dynamic;
+use crate::{Pred, Vertex};
+
+/// Roots per MS wave — one bit of the per-vertex visit mask (and one VPU
+/// mask-register bit) per root. Larger batches are split into waves.
+pub const MS_WAVE: usize = LANES;
+
+/// The shared discovery state of one MS wave: per-vertex visit masks,
+/// next-frontier masks, the union next bitmap, and one predecessor array
+/// per root bit. All cells are atomic — a wave is still parallelized
+/// across `num_threads` workers like every other engine.
+struct WaveState<'a> {
+    seen: &'a [AtomicU32],
+    next_mask: &'a [AtomicU32],
+    next_union: &'a SharedBitmap,
+    preds: &'a [SharedPred],
+}
+
+impl WaveState<'_> {
+    /// Merge `cand`'s root bits into `w`'s visit mask, claiming `parent`
+    /// for every bit that was genuinely new. `fetch_or` arbitrates
+    /// concurrent claimants — exactly one claim observes each bit's 0→1
+    /// transition, so every `preds[r]` cell has a unique writer (the
+    /// race-free claim discipline of the SELL bottom-up scan, kept in
+    /// both directions here). Returns the visit mask after the merge.
+    fn claim(&self, w: Vertex, cand: u32, parent: Vertex) -> u32 {
+        let old = self.seen[w as usize].fetch_or(cand, Ordering::Relaxed);
+        let new = cand & !old;
+        if new != 0 {
+            self.next_mask[w as usize].fetch_or(new, Ordering::Relaxed);
+            self.next_union.set_bit_atomic(w);
+            let mut bits = new;
+            while bits != 0 {
+                let r = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                self.preds[r].set(w, parent as Pred);
+            }
+        }
+        old | cand
+    }
+}
+
+/// Issue one packed row of the union frontier through the MS filter. The
+/// visit-mask array holds one 32-bit word per vertex, so the second
+/// gather's indices are the neighbor ids themselves; the per-lane
+/// candidate masks come from a vector AND-NOT, and hit lanes commit
+/// through [`WaveState::claim`].
+fn ms_explore_row(
+    vpu: &mut Vpu,
+    vneig: VecI32x16,
+    active: Mask16,
+    vsrc_mask: VecI32x16,
+    src_vertices: &[Vertex; LANES],
+    state: &WaveState<'_>,
+    prefetch: bool,
+) {
+    if prefetch {
+        vpu.prefetch_i32gather(vneig, PrefetchHint::T0);
+    }
+    let vseen = vpu.mask_gather_shared_words(active, vneig, state.seen);
+    // bits of the source's frontier mask the neighbor has not seen yet
+    let vcand = vpu.andnot_epi32(vseen, vsrc_mask);
+    let hit = vpu.kand(vpu.test_epi32_mask(vcand, vcand), active);
+    if hit.is_empty() {
+        return;
+    }
+    for (lane, &src) in src_vertices.iter().enumerate() {
+        if hit.test_lane(lane) {
+            state.claim(vneig.lane(lane) as Vertex, vcand.lane(lane) as u32, src);
+        }
+    }
+}
+
+/// Per-thread accumulator shared by both passes: entries scanned, the
+/// bottom-up pool tally (zero for the top-down pass), and the thread's
+/// VPU (created lazily so idle threads stay free).
+#[derive(Default)]
+struct PassAcc {
+    edges: usize,
+    pool_vertices: usize,
+    pool_edges: usize,
+    vpu: Option<Vpu>,
+}
+
+/// Merge the per-thread accumulators of one pass.
+fn merge_accs(accs: Vec<PassAcc>) -> (usize, usize, usize, VpuCounters) {
+    let mut edges = 0usize;
+    let mut pool_vertices = 0usize;
+    let mut pool_edges = 0usize;
+    let mut vpu = VpuCounters::default();
+    for a in accs {
+        edges += a.edges;
+        pool_vertices += a.pool_vertices;
+        pool_edges += a.pool_edges;
+        if let Some(v) = a.vpu {
+            vpu.merge(&v.counters);
+        }
+    }
+    (edges, pool_vertices, pool_edges, vpu)
+}
+
+/// Explore one shared top-down pass: the frontier vertices carrying
+/// top-down bits (`td_union`) are packed over the SELL layout exactly
+/// like the single-root lane-packed explorer — aligned full-chunk rows
+/// plus degree-sorted gather groups — but each row serves every top-down
+/// root of the wave at once (source masks are restricted to `td_mask`).
+/// Returns (adjacency entries scanned, merged VPU counters).
+///
+/// NOTE: the chunk/group iteration skeleton (active-mask construction,
+/// issue accounting, aligned-vs-gather load choice, prefetching) mirrors
+/// `sell_explore_layer` in [`super::sell_vectorized`] — only the per-lane
+/// payload differs (source *mask* here vs marked parent there, and no
+/// restoration since claims merge). A fix to the packing loop there
+/// almost certainly applies here too.
+fn ms_explore_layer(
+    num_threads: usize,
+    sell: &Sell16,
+    td_union: &Bitmap,
+    frontier_mask: &[u32],
+    td_mask: u32,
+    state: &WaveState<'_>,
+    opts: SimdOpts,
+) -> (usize, VpuCounters) {
+    let (items, packed) = pack_frontier(sell, td_union, opts.aligned);
+    let accs: Vec<PassAcc> = parallel_for_dynamic(
+        num_threads,
+        items.len(),
+        2,
+        |_tid, range, acc: &mut PassAcc| {
+            let vpu = acc.vpu.get_or_insert_with(Vpu::new);
+            for item in &items[range] {
+                match *item {
+                    PackedItem::FullChunk(c) => {
+                        let start = sell.chunk_starts[c];
+                        let lens = &sell.lane_len[c * SELL_C..(c + 1) * SELL_C];
+                        let height = sell.chunk_lens[c] as usize;
+                        let mut src: [Vertex; LANES] = [0; LANES];
+                        let mut mask_arr = [0i32; LANES];
+                        for (lane, (s, m)) in
+                            src.iter_mut().zip(mask_arr.iter_mut()).enumerate()
+                        {
+                            *s = sell.perm[c * SELL_C + lane];
+                            *m = (frontier_mask[*s as usize] & td_mask) as i32;
+                        }
+                        let vsrc_mask = VecI32x16(mask_arr);
+                        for r in 0..height {
+                            let mut m = 0u16;
+                            for (lane, &len) in lens.iter().enumerate() {
+                                if len as usize > r {
+                                    m |= 1 << lane;
+                                }
+                            }
+                            let active = Mask16(m);
+                            vpu.note_explore_issue(active.count());
+                            acc.edges += active.count() as usize;
+                            let offset = start + r * SELL_C;
+                            let vneig = if active == Mask16::ALL {
+                                vpu.note_full_chunk();
+                                vpu.load_vertices(&sell.cols, offset)
+                            } else {
+                                vpu.note_remainder(active.count() as usize);
+                                vpu.mask_load_vertices(active, &sell.cols, offset)
+                            };
+                            if opts.prefetch && r + 1 < height {
+                                vpu.prefetch_scalar(PrefetchHint::T1);
+                            }
+                            ms_explore_row(
+                                vpu, vneig, active, vsrc_mask, &src, state, opts.prefetch,
+                            );
+                        }
+                    }
+                    PackedItem::Group(gstart, gend) => {
+                        let group = &packed[gstart..gend];
+                        let mut base_arr = [0i32; LANES];
+                        let mut len_arr = [0u32; LANES];
+                        let mut src: [Vertex; LANES] = [0; LANES];
+                        let mut mask_arr = [0i32; LANES];
+                        for (lane, &slot) in group.iter().enumerate() {
+                            let slot = slot as usize;
+                            base_arr[lane] = sell.slot_base(slot) as i32;
+                            len_arr[lane] = sell.lane_len[slot];
+                            src[lane] = sell.perm[slot];
+                            mask_arr[lane] =
+                                (frontier_mask[src[lane] as usize] & td_mask) as i32;
+                        }
+                        let vbase = VecI32x16(base_arr);
+                        let vsrc_mask = VecI32x16(mask_arr);
+                        // groups are packed in descending length order
+                        let height = len_arr[0] as usize;
+                        for r in 0..height {
+                            let mut m = 0u16;
+                            for (lane, &len) in len_arr.iter().enumerate().take(group.len()) {
+                                if len as usize > r {
+                                    m |= 1 << lane;
+                                }
+                            }
+                            let active = Mask16(m);
+                            vpu.note_explore_issue(active.count());
+                            acc.edges += active.count() as usize;
+                            let roff = vpu.set1_epi32((r * SELL_C) as i32);
+                            let vidx = vpu.add_epi32(vbase, roff);
+                            if opts.prefetch {
+                                vpu.prefetch_i32gather(vidx, PrefetchHint::T1);
+                            }
+                            let vneig = vpu.mask_i32gather_words(active, vidx, &sell.cols);
+                            ms_explore_row(
+                                vpu, vneig, active, vsrc_mask, &src, state, opts.prefetch,
+                            );
+                        }
+                    }
+                }
+            }
+        },
+    );
+
+    let (edges, _, _, vpu) = merge_accs(accs);
+    (edges, vpu)
+}
+
+/// SELL chunks per dynamic grab of the bottom-up scan — same granularity
+/// tradeoff as the single-root packed scan.
+const MS_BU_CHUNK_GRAIN: usize = 64;
+
+/// One shared bottom-up pass: every vertex whose visit mask is still
+/// missing a `live_mask` bit streams through a [`LanePack`] (16 distinct
+/// incomplete vertices per issue); each lane gathers its next neighbor,
+/// that neighbor's *frontier* mask, and its own visit mask, and ORs the
+/// missing bits in — the claim takes the neighbor's whole frontier mask
+/// (a frontier parent is a frontier parent, so top-down-scheduled bits
+/// ride along opportunistically).
+///
+/// `live_mask` is the OR of the frontier-carried bits of the
+/// bottom-up-scheduled roots. A lane retires as soon as its visit mask
+/// covers it (nothing this pass owes it any more), or its adjacency
+/// exhausts; vertices already covering `live_mask` are skipped outright.
+/// Exploding roots' frontiers are huge, so coverage typically arrives
+/// within a few rows — the multi-source analogue of the single-root
+/// first-hit exit — and bits whose root frontier has drained (an
+/// isolated root after layer 0) never pin lanes to exhaustion. Returns
+/// (entries scanned, pool vertices streamed, pool adjacency entries,
+/// merged counters) — the pool tally is counted in the candidate stream
+/// itself, so no separate O(V) pool scan is needed.
+fn ms_bottom_up_layer(
+    num_threads: usize,
+    sell: &Sell16,
+    frontier_mask: &[u32],
+    live_mask: u32,
+    state: &WaveState<'_>,
+    opts: SimdOpts,
+) -> (usize, usize, usize, VpuCounters) {
+    let accs: Vec<PassAcc> = parallel_for_dynamic(
+        num_threads,
+        sell.num_chunks(),
+        MS_BU_CHUNK_GRAIN,
+        |_tid, chunk_range, acc: &mut PassAcc| {
+            let vpu = acc.vpu.get_or_insert_with(Vpu::new);
+            let slots = chunk_range.start * SELL_C..chunk_range.end * SELL_C;
+            // candidate lanes: occupied slots whose vertex some *live*
+            // root has not seen yet. Within a layer only the lane
+            // scanning a vertex grows its mask, so the filter is stable
+            // across the refill stream; the stream doubles as the pool
+            // tally for the feedback channel.
+            let mut pool_vertices = 0usize;
+            let mut pool_edges = 0usize;
+            let mut stream = sell
+                .slot_lanes(slots)
+                .filter(|l| {
+                    live_mask & !state.seen[l.vertex as usize].load(Ordering::Relaxed) != 0
+                })
+                .inspect(|l| {
+                    pool_vertices += 1;
+                    pool_edges += l.len as usize;
+                });
+            let mut pack = LanePack::new();
+            loop {
+                let active = pack.refill(&mut stream);
+                if active.is_empty() {
+                    break;
+                }
+                vpu.note_explore_issue(active.count());
+                acc.edges += active.count() as usize;
+
+                // gather each lane's next neighbor from the SELL storage,
+                // then that neighbor's frontier mask and the lane's own
+                // visit mask (both one word per vertex)
+                let vidx = pack.gather_indices(sell);
+                if opts.prefetch {
+                    vpu.prefetch_i32gather(vidx, PrefetchHint::T1);
+                }
+                let vneig = vpu.mask_i32gather_words(active, vidx, &sell.cols);
+                let vfm = vpu.mask_i32gather_words(active, vneig, frontier_mask);
+                let vself = pack.vertex_vec();
+                let vseen = vpu.mask_gather_shared_words(active, vself, state.seen);
+                let vwant = vpu.andnot_epi32(vseen, vfm);
+                let hit = vpu.kand(vpu.test_epi32_mask(vwant, vwant), active);
+
+                let mut retire = 0u16;
+                if !hit.is_empty() {
+                    for lane in 0..SELL_C {
+                        if !hit.test_lane(lane) {
+                            continue;
+                        }
+                        let v = pack.vertex(lane);
+                        let u = vneig.lane(lane) as Vertex;
+                        let now = state.claim(v, vwant.lane(lane) as u32, u);
+                        if live_mask & !now == 0 {
+                            // converged: every live root of the wave saw v
+                            retire |= 1 << lane;
+                        }
+                    }
+                }
+                pack.advance(Mask16(retire));
+            }
+            drop(stream);
+            acc.pool_vertices += pool_vertices;
+            acc.pool_edges += pool_edges;
+        },
+    );
+
+    merge_accs(accs)
+}
+
+/// The batch-first multi-source engine (`hybrid-sell-ms`): up to
+/// [`MS_WAVE`] roots per wave share one traversal of the prepared
+/// [`Sell16`], each root running its own direction-optimizing schedule
+/// (see the module docs). Single roots run as a one-bit wave, so the
+/// engine plugs into the per-root API unchanged.
+#[derive(Clone, Copy, Debug)]
+pub struct MultiSourceSellBfs {
+    pub num_threads: usize,
+    /// σ sort window of the prepared layout ([`SIGMA_AUTO`] resolves to
+    /// the per-scale default at prepare time).
+    pub sigma: usize,
+    /// Beamer's α (top-down → bottom-up), applied per root to that
+    /// root's own frontier volumes.
+    pub alpha: usize,
+    /// Beamer's β (bottom-up → top-down), applied per root.
+    pub beta: usize,
+    pub opts: SimdOpts,
+}
+
+impl Default for MultiSourceSellBfs {
+    fn default() -> Self {
+        MultiSourceSellBfs {
+            num_threads: 4,
+            sigma: SIGMA_AUTO,
+            alpha: HybridBfs::DEFAULT_ALPHA,
+            beta: HybridBfs::DEFAULT_BETA,
+            opts: SimdOpts::full(),
+        }
+    }
+}
+
+impl MultiSourceSellBfs {
+    /// One MS wave: traverse from up to [`MS_WAVE`] roots simultaneously,
+    /// returning one result per root in root order.
+    fn traverse_wave(
+        &self,
+        g: &Csr,
+        sell: &Sell16,
+        feedback: &PolicyFeedback,
+        roots: &[Vertex],
+    ) -> Vec<BfsResult> {
+        let k = roots.len();
+        debug_assert!((1..=MS_WAVE).contains(&k), "wave width {k} out of range");
+        let n = g.num_vertices();
+        let total_edges = g.num_directed_edges();
+
+        let seen: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        let next_mask: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        let next_union = SharedBitmap::new(n);
+        let preds: Vec<SharedPred> = (0..k).map(|_| SharedPred::new_infinity(n)).collect();
+        let mut frontier_mask: Vec<u32> = vec![0; n];
+        let mut union = Bitmap::new(n);
+
+        for (r, &root) in roots.iter().enumerate() {
+            seen[root as usize].fetch_or(1 << r, Ordering::Relaxed);
+            frontier_mask[root as usize] |= 1 << r;
+            union.set_bit(root);
+            preds[r].set(root, root as Pred);
+        }
+
+        let state = WaveState {
+            seen: &seen,
+            next_mask: &next_mask,
+            next_union: &next_union,
+            preds: &preds,
+        };
+
+        let mut rows: Vec<Vec<LayerTrace>> = (0..k).map(|_| Vec::new()).collect();
+        let mut layer = 0usize;
+        let mut union_count = union.count_ones();
+        // per-root Beamer state: direction flag and accumulated frontier
+        // edge volume — exactly the bookkeeping 16 independent hybrids
+        // would keep, one bit / cell per root
+        let mut bu_flags = 0u32;
+        let mut explored = [0usize; MS_WAVE];
+        while union_count != 0 {
+            let t0 = Instant::now();
+
+            // per-root layer accounting from the union frontier: a root's
+            // layer-ℓ frontier is exactly the vertices whose frontier mask
+            // carries its bit, so per-root volumes (top-down degree sums,
+            // the Graph500-comparable count) fall out of one pass
+            let mut input_vertices = [0usize; MS_WAVE];
+            let mut input_edges = [0usize; MS_WAVE];
+            for v in union.iter_set_bits() {
+                let deg = g.degree(v);
+                let mut m = frontier_mask[v as usize];
+                while m != 0 {
+                    let r = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    input_vertices[r] += 1;
+                    input_edges[r] += deg;
+                }
+            }
+
+            // each live root runs its own Beamer schedule over its own
+            // volumes — classic raw tests on a fresh channel, measured
+            // issue units once a completed root measured both directions
+            let mut td_mask = 0u32;
+            let mut bu_mask = 0u32;
+            for r in 0..k {
+                if input_vertices[r] == 0 {
+                    continue; // this root's traversal has drained
+                }
+                let unexplored = total_edges.saturating_sub(explored[r]);
+                if bu_flags & (1 << r) == 0 {
+                    if feedback.switch_to_bottom_up(input_edges[r], unexplored, self.alpha) {
+                        bu_flags |= 1 << r;
+                    }
+                } else if feedback.switch_to_top_down(
+                    input_vertices[r],
+                    input_edges[r],
+                    unexplored,
+                    n,
+                    self.beta,
+                ) {
+                    bu_flags &= !(1 << r);
+                }
+                explored[r] += input_edges[r];
+                if bu_flags & (1 << r) != 0 {
+                    bu_mask |= 1 << r;
+                } else {
+                    td_mask |= 1 << r;
+                }
+            }
+
+            // split the frontier between the two shared passes: vertices
+            // carrying top-down bits form the top-down pack; the union of
+            // frontier-carried bottom-up bits bounds the bottom-up pool
+            let mut td_union = Bitmap::new(n);
+            let mut td_vertices = 0usize;
+            let mut td_edges = 0usize;
+            let mut bu_live = 0u32;
+            for v in union.iter_set_bits() {
+                let m = frontier_mask[v as usize];
+                if m & td_mask != 0 {
+                    td_union.set_bit(v);
+                    td_vertices += 1;
+                    td_edges += g.degree(v);
+                }
+                bu_live |= m & bu_mask;
+            }
+
+            let mut td_vpu = VpuCounters::default();
+            let mut bu_vpu = VpuCounters::default();
+            if td_vertices > 0 {
+                let (_scanned, pass_vpu) = ms_explore_layer(
+                    self.num_threads,
+                    sell,
+                    &td_union,
+                    &frontier_mask,
+                    td_mask,
+                    &state,
+                    self.opts,
+                );
+                // batch occupancy feeds the shared channel: later waves
+                // (and any engine sharing the artifacts) learn from it
+                feedback.record_layer(ChunkingMode::LanePacked, td_vertices, td_edges, &pass_vpu);
+                td_vpu = pass_vpu;
+            }
+            if bu_live != 0 {
+                // the pool the pass scans — every vertex still missing a
+                // bottom-up-live bit — is tallied by the pass itself
+                let (_scanned, pool_vertices, pool_edges, pass_vpu) = ms_bottom_up_layer(
+                    self.num_threads,
+                    sell,
+                    &frontier_mask,
+                    bu_live,
+                    &state,
+                    self.opts,
+                );
+                feedback.record_bottom_up_layer(
+                    BottomUpMode::SellPacked,
+                    pool_vertices,
+                    pool_edges,
+                    &pass_vpu,
+                );
+                bu_vpu = pass_vpu;
+            }
+
+            // advance: count per-root discoveries while installing the new
+            // frontier masks (`swap(0)` also clears them for reuse)
+            let mut traversed = [0usize; MS_WAVE];
+            for v in union.iter_set_bits() {
+                frontier_mask[v as usize] = 0;
+            }
+            let snap = next_union.snapshot();
+            for v in snap.iter_set_bits() {
+                let mask = next_mask[v as usize].swap(0, Ordering::Relaxed);
+                frontier_mask[v as usize] = mask;
+                let mut m = mask;
+                while m != 0 {
+                    let r = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    traversed[r] += 1;
+                }
+            }
+
+            let wall_ns = t0.elapsed().as_nanos() as u64;
+            let td_ran = td_vertices > 0;
+            let bu_ran = bu_live != 0;
+            for (r, root_rows) in rows.iter_mut().enumerate() {
+                if r > 0 && input_vertices[r] == 0 {
+                    // this root's own traversal already drained; only the
+                    // wave lead keeps rows for trailing union layers
+                    continue;
+                }
+                let mut row = LayerTrace {
+                    layer,
+                    input_vertices: input_vertices[r],
+                    edges_scanned: input_edges[r],
+                    traversed: traversed[r],
+                    vectorized: true,
+                    // per-root exact: the direction THIS root's bit ran
+                    bottom_up: bu_flags & (1 << r) != 0,
+                    ..Default::default()
+                };
+                if r == 0 {
+                    // the wave's shared VPU events and wall time go to the
+                    // lead result exactly once, so sums over a batch stay
+                    // additive (see the module docs). Attribution is
+                    // direction-exact: this row carries the top-down
+                    // pass's counters (or the bottom-up pass's when only
+                    // that ran) with a matching direction flag; a mixed
+                    // layer appends an extra zero-volume row below for
+                    // the bottom-up pass.
+                    row.bottom_up = bu_ran && !td_ran;
+                    row.vpu = if td_ran { td_vpu } else { bu_vpu };
+                    row.wall_ns = wall_ns;
+                }
+                root_rows.push(row);
+                if r == 0 && td_ran && bu_ran {
+                    // the mixed layer's bottom-up pass, on its own row so
+                    // per-direction aggregations over the lead trace stay
+                    // exact (zero scalar volumes: those live on the
+                    // primary row)
+                    root_rows.push(LayerTrace {
+                        layer,
+                        vectorized: true,
+                        bottom_up: true,
+                        vpu: bu_vpu,
+                        ..Default::default()
+                    });
+                }
+            }
+
+            union = snap;
+            next_union.clear_all();
+            union_count = union.count_ones();
+            layer += 1;
+        }
+
+        for _ in 0..k {
+            feedback.record_root();
+        }
+
+        preds
+            .into_iter()
+            .zip(roots.iter())
+            .zip(rows)
+            .map(|((pred, &root), layers)| BfsResult {
+                tree: BfsTree::new(root, pred.into_vec()),
+                trace: RunTrace { layers, num_threads: self.num_threads },
+            })
+            .collect()
+    }
+
+    /// Resolve [`SIGMA_AUTO`] against the graph's measured degree stats.
+    fn resolved_sigma(&self, g: &Csr, artifacts: &GraphArtifacts) -> usize {
+        if self.sigma == SIGMA_AUTO {
+            artifacts.stats(g).suggested_sigma()
+        } else {
+            self.sigma
+        }
+    }
+}
+
+/// A [`MultiSourceSellBfs`] bound to one graph: the σ-resolved [`Sell16`]
+/// layout built once by prepare and shared by every wave; the artifacts'
+/// [`PolicyFeedback`] both steers the direction switches and accumulates
+/// batch occupancy.
+pub struct PreparedMultiSource<'g> {
+    g: &'g Csr,
+    sell: Arc<Sell16>,
+    engine: MultiSourceSellBfs,
+    artifacts: Arc<GraphArtifacts>,
+}
+
+impl PreparedBfs for PreparedMultiSource<'_> {
+    fn name(&self) -> &'static str {
+        "hybrid-sell-ms"
+    }
+
+    fn run(&self, root: Vertex) -> BfsResult {
+        self.run_batch(std::slice::from_ref(&root)).pop().expect("wave returned no result")
+    }
+
+    fn run_batch(&self, roots: &[Vertex]) -> Vec<BfsResult> {
+        let mut out = Vec::with_capacity(roots.len());
+        for wave in roots.chunks(MS_WAVE) {
+            out.extend(self.engine.traverse_wave(
+                self.g,
+                &self.sell,
+                self.artifacts.feedback(),
+                wave,
+            ));
+        }
+        out
+    }
+
+    fn artifacts(&self) -> &GraphArtifacts {
+        &self.artifacts
+    }
+}
+
+impl BfsEngine for MultiSourceSellBfs {
+    fn name(&self) -> &'static str {
+        "hybrid-sell-ms"
+    }
+
+    fn prepare_with<'g>(
+        &self,
+        g: &'g Csr,
+        artifacts: Arc<GraphArtifacts>,
+    ) -> Result<Box<dyn PreparedBfs + 'g>> {
+        // same fail-fast contract as the hybrid: degenerate switch
+        // thresholds are rejected before any worker spawns
+        if self.alpha == 0 || self.beta == 0 {
+            anyhow::bail!(
+                "hybrid switch thresholds must be >= 1 (alpha={}, beta={})",
+                self.alpha,
+                self.beta
+            );
+        }
+        let sigma = self.resolved_sigma(g, &artifacts);
+        let sell = artifacts.sell_layout(g, sigma);
+        Ok(Box::new(PreparedMultiSource { g, sell, engine: *self, artifacts }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::serial::SerialLayeredBfs;
+    use crate::bfs::validate::validate;
+    use crate::graph::{EdgeList, RmatConfig};
+    use crate::PRED_INFINITY;
+
+    fn rmat(scale: u32, ef: usize, seed: u64) -> Csr {
+        let el = RmatConfig::graph500(scale, ef).generate(seed);
+        Csr::from_edge_list(scale, &el)
+    }
+
+    /// A deterministic spread of roots: the hub plus stride-sampled ids.
+    fn sample_roots(g: &Csr, k: usize) -> Vec<Vertex> {
+        let n = g.num_vertices();
+        let hub = (0..n as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        std::iter::once(hub)
+            .chain((0..k.saturating_sub(1)).map(|i| ((i * 97 + 13) % n) as Vertex))
+            .collect()
+    }
+
+    #[test]
+    fn wave_matches_serial_distances_all_widths() {
+        let g = rmat(10, 8, 21);
+        let engine = MultiSourceSellBfs { num_threads: 2, ..Default::default() };
+        let prepared = engine.prepare(&g).unwrap();
+        for k in [1usize, 2, 5, 16] {
+            let roots = sample_roots(&g, k);
+            let results = prepared.run_batch(&roots);
+            assert_eq!(results.len(), k);
+            for (r, &root) in results.iter().zip(roots.iter()) {
+                assert_eq!(r.tree.root, root);
+                let expected = SerialLayeredBfs.run(&g, root).tree.distances().unwrap();
+                assert_eq!(r.tree.distances().unwrap(), expected, "k={k} root={root}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_larger_than_wave_chunks_into_waves() {
+        // 19 roots = one full 16-wave plus a 3-wave
+        let g = rmat(9, 8, 22);
+        let roots = sample_roots(&g, 19);
+        let engine = MultiSourceSellBfs { num_threads: 2, ..Default::default() };
+        let results = engine.prepare(&g).unwrap().run_batch(&roots);
+        assert_eq!(results.len(), 19);
+        for (r, &root) in results.iter().zip(roots.iter()) {
+            let expected = SerialLayeredBfs.run(&g, root).tree.distances().unwrap();
+            assert_eq!(r.tree.distances().unwrap(), expected, "root={root}");
+        }
+    }
+
+    #[test]
+    fn wave_trees_validate_five_checks() {
+        let g = rmat(11, 16, 23);
+        let roots = sample_roots(&g, 16);
+        let engine = MultiSourceSellBfs { num_threads: 4, ..Default::default() };
+        let results = engine.prepare(&g).unwrap().run_batch(&roots);
+        for r in &results {
+            let report = validate(&g, &r.tree);
+            assert!(report.all_passed(), "root {}: {}", r.tree.root, report.summary());
+            for &p in &r.tree.pred {
+                assert!(p == PRED_INFINITY || p >= 0, "marked pred survived: {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_root_trace_rows_match_serial_layers() {
+        // the per-root scalar columns are exact: a non-lead root's rows
+        // must equal the serial engine's layer profile entry for entry
+        // (edges are top-down degree sums in both)
+        let g = rmat(10, 16, 24);
+        let roots = sample_roots(&g, 4);
+        let engine = MultiSourceSellBfs { num_threads: 1, ..Default::default() };
+        let results = engine.prepare(&g).unwrap().run_batch(&roots);
+        for (i, &root) in roots.iter().enumerate().skip(1) {
+            let serial = SerialLayeredBfs.run(&g, root);
+            let ms = &results[i];
+            assert_eq!(ms.trace.layers.len(), serial.trace.layers.len(), "root {root}");
+            for (a, b) in ms.trace.layers.iter().zip(serial.trace.layers.iter()) {
+                assert_eq!(a.input_vertices, b.input_vertices, "root {root} layer {}", a.layer);
+                assert_eq!(a.edges_scanned, b.edges_scanned, "root {root} layer {}", a.layer);
+                assert_eq!(a.traversed, b.traversed, "root {root} layer {}", a.layer);
+                // shared VPU work lives on the lead result only
+                assert_eq!(a.vpu.explore_issues, 0);
+            }
+        }
+        // the lead result carries the wave's VPU counters
+        assert!(results[0].trace.vpu_totals().explore_issues > 0);
+    }
+
+    #[test]
+    fn wave_shares_issues_across_roots() {
+        // the amortization claim: one 16-root wave issues far fewer VPU
+        // explores than 16 single-root traversals of the same engine.
+        // Connected roots only, so the sharing signal is about real
+        // traversals (degree-0 roots add ~nothing to either side; the
+        // isolated case has its own test).
+        let g = rmat(10, 16, 25);
+        let n = g.num_vertices();
+        let hub = (0..n as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        let roots: Vec<Vertex> = std::iter::once(hub)
+            .chain(
+                (0usize..)
+                    .map(|i| ((i * 97 + 13) % n) as Vertex)
+                    .filter(|&v| g.degree(v) > 0)
+                    .take(15),
+            )
+            .collect();
+        let engine = MultiSourceSellBfs { num_threads: 1, ..Default::default() };
+        let wave_issues: u64 = engine
+            .prepare(&g)
+            .unwrap()
+            .run_batch(&roots)
+            .iter()
+            .map(|r| r.trace.vpu_totals().explore_issues)
+            .sum();
+        let single_issues: u64 = roots
+            .iter()
+            .map(|&r| {
+                // fresh preparation per root: every root runs the same
+                // raw-α first-root schedule the wave's roots share
+                engine.prepare(&g).unwrap().run(r).trace.vpu_totals().explore_issues
+            })
+            .sum();
+        assert!(wave_issues > 0 && single_issues > 0);
+        assert!(
+            wave_issues < single_issues,
+            "wave issued {wave_issues} explores, singles {single_issues}"
+        );
+    }
+
+    #[test]
+    fn wave_runs_bottom_up_on_explosion_layers() {
+        let g = rmat(12, 16, 26);
+        let roots = sample_roots(&g, 16);
+        let engine = MultiSourceSellBfs { num_threads: 1, ..Default::default() };
+        let results = engine.prepare(&g).unwrap().run_batch(&roots);
+        let lead = &results[0];
+        let bu_layers = lead.trace.layers.iter().filter(|l| l.bottom_up).count();
+        assert!(bu_layers > 0, "no bottom-up layer on an RMAT explosion");
+        assert!(bu_layers < lead.trace.layers.len(), "never ran top-down");
+        let bu_issues: u64 = lead
+            .trace
+            .layers
+            .iter()
+            .filter(|l| l.bottom_up)
+            .map(|l| l.vpu.explore_issues)
+            .sum();
+        assert!(bu_issues > 0, "bottom-up layers issued nothing");
+    }
+
+    #[test]
+    fn duplicate_roots_yield_identical_results() {
+        let g = rmat(9, 8, 27);
+        let engine = MultiSourceSellBfs { num_threads: 2, ..Default::default() };
+        let results = engine.prepare(&g).unwrap().run_batch(&[7, 7]);
+        assert_eq!(results.len(), 2);
+        assert_eq!(
+            results[0].tree.distances().unwrap(),
+            results[1].tree.distances().unwrap()
+        );
+    }
+
+    #[test]
+    fn isolated_root_in_wave_reaches_only_itself() {
+        // 0–1–2 connected; 3 isolated
+        let el = EdgeList::with_edges(4, vec![(0, 1), (1, 2)]);
+        let g = Csr::from_edge_list(0, &el);
+        let engine = MultiSourceSellBfs { num_threads: 1, ..Default::default() };
+        let results = engine.prepare(&g).unwrap().run_batch(&[0, 3]);
+        assert_eq!(results[0].tree.reached_count(), 3);
+        assert_eq!(results[1].tree.reached_count(), 1);
+        assert_eq!(results[1].tree.parent(3), Some(3));
+        assert_eq!(results[1].tree.parent(0), None);
+    }
+
+    #[test]
+    fn feedback_counts_every_root_of_a_batch() {
+        let g = rmat(9, 8, 28);
+        let engine = MultiSourceSellBfs { num_threads: 2, ..Default::default() };
+        let prepared = engine.prepare(&g).unwrap();
+        prepared.run_batch(&sample_roots(&g, 16));
+        assert_eq!(prepared.artifacts().feedback().roots_done(), 16);
+        // the batch's lane-packed occupancy landed in the shared channel
+        assert!(prepared
+            .artifacts()
+            .feedback()
+            .mean_lanes_active(ChunkingMode::LanePacked)
+            .is_some());
+    }
+
+    #[test]
+    fn zero_alpha_or_beta_fails_fast_in_prepare() {
+        let g = rmat(8, 8, 29);
+        for (alpha, beta) in [(0usize, 24usize), (14, 0)] {
+            let engine = MultiSourceSellBfs { alpha, beta, ..Default::default() };
+            let err = engine.prepare(&g).unwrap_err();
+            assert!(err.to_string().contains("switch thresholds"), "unexpected error: {err}");
+        }
+    }
+
+    #[test]
+    fn sigma_override_is_honored_in_prepare() {
+        let g = rmat(9, 8, 30);
+        for sigma in [16usize, usize::MAX] {
+            let engine = MultiSourceSellBfs { num_threads: 1, sigma, ..Default::default() };
+            let prepared = engine.prepare(&g).unwrap();
+            assert_eq!(prepared.artifacts().sell_builds(), 1);
+            let r = prepared.run(3);
+            let s = SerialLayeredBfs.run(&g, 3);
+            assert_eq!(r.tree.distances().unwrap(), s.tree.distances().unwrap());
+        }
+    }
+
+    #[test]
+    fn multithreaded_wave_agrees_with_single() {
+        let g = rmat(11, 16, 31);
+        let roots = sample_roots(&g, 16);
+        let engine1 = MultiSourceSellBfs { num_threads: 1, ..Default::default() };
+        let engine4 = MultiSourceSellBfs { num_threads: 4, ..Default::default() };
+        let a = engine1.prepare(&g).unwrap().run_batch(&roots);
+        let b = engine4.prepare(&g).unwrap().run_batch(&roots);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.tree.distances().unwrap(), y.tree.distances().unwrap());
+        }
+    }
+}

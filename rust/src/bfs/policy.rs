@@ -24,10 +24,12 @@
 //! k-th neighbor of 16 *distinct* unvisited vertices per issue
 //! ([`crate::bfs::sell_bottom_up`]). The feedback channel keeps a separate
 //! (band, mode) occupancy table for it, bucketed by the *unvisited* pool's
-//! mean degree, and the measured occupancy also feeds the Beamer α switch:
-//! [`PolicyFeedback::switch_to_bottom_up`] compares predicted VPU *issues*
-//! (edges ÷ measured lanes-per-issue) instead of raw edge counts once a
-//! root has completed and both directions have been measured.
+//! mean degree, and the measured occupancy also feeds **both** Beamer
+//! switches: [`PolicyFeedback::switch_to_bottom_up`] (α) and its
+//! symmetric counterpart [`PolicyFeedback::switch_to_top_down`] (β)
+//! compare predicted VPU *issues* (edges ÷ measured lanes-per-issue)
+//! instead of raw edge counts / frontier population once a root has
+//! completed and both directions have been measured.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
@@ -478,6 +480,38 @@ impl PolicyFeedback {
             _ => frontier_edges * alpha > unexplored_edges,
         }
     }
+
+    /// The Beamer β test (bottom-up → top-down), made symmetric to the α
+    /// side. Classic Beamer switches back when the frontier *population*
+    /// shrinks below `|V| / β` — a vertex-count proxy for "top-down is
+    /// cheap again". In issue units the comparison is direct: the next
+    /// top-down layer costs about `frontier_edges ÷ td-lanes-per-issue`
+    /// issues, staying bottom-up costs about `unexplored_edges ÷
+    /// bu-lanes-per-issue`, so once a completed root has measured both
+    /// directions the switch fires when the top-down cost times β is
+    /// below the bottom-up cost. The same staging rules as the α side
+    /// apply: a fresh channel's first root runs the classic population
+    /// test (keeping its switch points identical to classic Beamer, which
+    /// the cross-variant comparisons rely on), and with either direction
+    /// unmeasured the test falls back to the classic form.
+    pub fn switch_to_top_down(
+        &self,
+        frontier_vertices: usize,
+        frontier_edges: usize,
+        unexplored_edges: usize,
+        num_vertices: usize,
+        beta: usize,
+    ) -> bool {
+        if self.roots_done() == 0 {
+            return frontier_vertices * beta < num_vertices;
+        }
+        match (self.direction_occupancy(false), self.direction_occupancy(true)) {
+            (Some(td), Some(bu)) if td > 0.0 && bu > 0.0 => {
+                (frontier_edges as f64 / td) * beta as f64 < unexplored_edges as f64 / bu
+            }
+            _ => frontier_vertices * beta < num_vertices,
+        }
+    }
 }
 
 impl std::fmt::Debug for PolicyFeedback {
@@ -720,6 +754,54 @@ mod tests {
         g.record_bottom_up_layer(BottomUpMode::SellPacked, 100, 400, &counters(100, 400));
         g.record_root();
         assert!(!g.switch_to_bottom_up(100, 1000, 14), "adjusted test must hold off");
+    }
+
+    #[test]
+    fn switch_back_falls_back_to_population_unmeasured() {
+        let f = PolicyFeedback::default();
+        f.record_root();
+        // classic Beamer β: 100 × 24 = 2400 < 10000 → back to top-down;
+        // 500 × 24 = 12000 > 10000 → stay bottom-up
+        assert!(f.switch_to_top_down(100, 1000, 50_000, 10_000, 24));
+        assert!(!f.switch_to_top_down(500, 1000, 50_000, 10_000, 24));
+        // one direction measured is not enough — still the population test
+        f.record_layer(ChunkingMode::LanePacked, 100, 400, &counters(100, 1200));
+        assert!(!f.switch_to_top_down(500, 1000, 50_000, 10_000, 24));
+    }
+
+    #[test]
+    fn switch_back_stays_classic_during_first_root() {
+        // both directions measured mid-root, but no root completed: the
+        // first root must behave exactly like classic Beamer
+        let f = PolicyFeedback::default();
+        f.record_layer(ChunkingMode::LanePacked, 100, 400, &counters(100, 1600));
+        f.record_bottom_up_layer(BottomUpMode::SellPacked, 100, 400, &counters(100, 400));
+        // population test: 500 × 24 > 10000 → stay bottom-up, despite the
+        // measured top-down occupancy advantage
+        assert!(!f.switch_to_top_down(500, 1000, 50_000, 10_000, 24));
+        f.record_root();
+        assert!(f.switch_to_top_down(500, 1000, 50_000, 10_000, 24));
+    }
+
+    #[test]
+    fn switch_back_runs_in_issue_units_once_measured() {
+        // top-down measures 16 lanes/issue, bottom-up 4: the issue-unit
+        // test fires back to top-down *earlier* than the population test.
+        // population: 500 × 24 = 12000 > 10000 → classic stays bottom-up;
+        // issues: (1000/16) × 24 = 1500 < 50000/4 = 12500 → switch back.
+        let f = PolicyFeedback::default();
+        f.record_layer(ChunkingMode::LanePacked, 100, 400, &counters(100, 1600));
+        f.record_bottom_up_layer(BottomUpMode::SellPacked, 100, 400, &counters(100, 400));
+        f.record_root();
+        assert!(f.switch_to_top_down(500, 1000, 50_000, 10_000, 24));
+        // reversed occupancies hold bottom-up longer than the population
+        // test would: population 100 × 24 = 2400 < 10000 → classic fires,
+        // issues (1000/4) × 24 = 6000 > 50000/16 = 3125 → stay
+        let g = PolicyFeedback::default();
+        g.record_layer(ChunkingMode::LanePacked, 100, 400, &counters(100, 400));
+        g.record_bottom_up_layer(BottomUpMode::SellPacked, 100, 400, &counters(100, 1600));
+        g.record_root();
+        assert!(!g.switch_to_top_down(100, 1000, 50_000, 10_000, 24));
     }
 
     #[test]

@@ -65,8 +65,10 @@ use crate::Vertex;
 /// ([`SellLane`]) through this pack instead: every issue runs all
 /// currently-active lanes one row forward, and retired lanes (converged
 /// or exhausted) are refilled from the stream before the next issue,
-/// keeping occupancy at 16 until the pool drains.
-struct LanePack {
+/// keeping occupancy at 16 until the pool drains. Shared with the MS-BFS
+/// bottom-up scan ([`super::multi_source`]), where a lane retires once
+/// its vertex's visit mask covers the layer's live root set.
+pub(crate) struct LanePack {
     /// SELL slot each lane is scanning.
     slot: [u32; LANES],
     /// Adjacency length of each lane.
@@ -79,7 +81,7 @@ struct LanePack {
 }
 
 impl LanePack {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         LanePack {
             slot: [0; LANES],
             len: [0; LANES],
@@ -91,7 +93,7 @@ impl LanePack {
 
     /// Fill every inactive lane from `stream` (stops early when the stream
     /// runs dry). Returns the active-lane mask after refilling.
-    fn refill(&mut self, stream: &mut impl Iterator<Item = SellLane>) -> Mask16 {
+    pub(crate) fn refill(&mut self, stream: &mut impl Iterator<Item = SellLane>) -> Mask16 {
         for lane in 0..LANES {
             let bit = 1u16 << lane;
             if self.active & bit != 0 {
@@ -111,7 +113,7 @@ impl LanePack {
     /// current row ([`Sell16::lane_index`] — the one definition of the
     /// SELL gather address); inactive lanes hold 0 and are masked off by
     /// the caller.
-    fn gather_indices(&self, sell: &Sell16) -> VecI32x16 {
+    pub(crate) fn gather_indices(&self, sell: &Sell16) -> VecI32x16 {
         let mut idx = [0i32; LANES];
         for lane in 0..LANES {
             if self.active & (1 << lane) != 0 {
@@ -124,7 +126,7 @@ impl LanePack {
 
     /// Each lane's own vertex id as a vector — the scatter index for
     /// race-free per-lane claims (all active lanes are distinct vertices).
-    fn vertex_vec(&self) -> VecI32x16 {
+    pub(crate) fn vertex_vec(&self) -> VecI32x16 {
         let mut v = [0i32; LANES];
         for lane in 0..LANES {
             if self.active & (1 << lane) != 0 {
@@ -136,13 +138,13 @@ impl LanePack {
 
     /// Vertex id in `lane` (only meaningful for active lanes).
     #[inline]
-    fn vertex(&self, lane: usize) -> Vertex {
+    pub(crate) fn vertex(&self, lane: usize) -> Vertex {
         self.vertex[lane]
     }
 
     /// Advance every active lane one row; lanes in `retire` (converged) and
     /// lanes that ran out of adjacency (exhausted) leave the pack.
-    fn advance(&mut self, retire: Mask16) {
+    pub(crate) fn advance(&mut self, retire: Mask16) {
         for lane in 0..LANES {
             let bit = 1u16 << lane;
             if self.active & bit == 0 {

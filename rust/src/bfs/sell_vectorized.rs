@@ -93,8 +93,9 @@ impl Default for SellBfs {
 
 /// One unit of lane-packed work: either all 16 lanes of a static chunk
 /// (aligned loads) or a dynamically packed group of frontier slots
-/// (gathers).
-enum PackedItem {
+/// (gathers). Shared with the MS-BFS engine ([`super::multi_source`]),
+/// which packs the *union* frontier of a whole root batch the same way.
+pub(crate) enum PackedItem {
     FullChunk(usize),
     /// `[start, end)` range into the packed slot list.
     Group(usize, usize),
@@ -103,7 +104,11 @@ enum PackedItem {
 /// Collect the frontier's occupied slots (degree-0 vertices carry no work)
 /// and split them into aligned full-chunk items and degree-sorted gather
 /// groups.
-fn pack_frontier(sell: &Sell16, frontier: &Bitmap, aligned: bool) -> (Vec<PackedItem>, Vec<u32>) {
+pub(crate) fn pack_frontier(
+    sell: &Sell16,
+    frontier: &Bitmap,
+    aligned: bool,
+) -> (Vec<PackedItem>, Vec<u32>) {
     let slots: Vec<u32> = frontier
         .iter_set_bits()
         .map(|v| sell.rank[v as usize])
@@ -204,6 +209,11 @@ fn explore_packed_row(
 
 /// Explore one layer with lane packing. Returns (edges scanned, merged VPU
 /// counters); the caller runs restoration afterwards.
+///
+/// NOTE: the MS-BFS top-down pass (`ms_explore_layer` in
+/// [`super::multi_source`]) mirrors this chunk/group iteration skeleton
+/// with a different per-lane payload — keep fixes to the packing loop in
+/// sync.
 #[allow(clippy::too_many_arguments)]
 pub fn sell_explore_layer(
     num_threads: usize,

@@ -88,7 +88,10 @@ ENGINES (--engine):
       hybrid-sell              -sell packs top-down phases
     hybrid-sell-bu           hybrid-sell + SELL-packed bottom-up scan
                                (16 unvisited vertices per VPU issue) and
-                               occupancy-fed α switch
+                               occupancy-fed α/β switches
+    hybrid-sell-ms           batch-first MS-BFS: 16 roots traverse one
+                               shared SELL walk (visit-mask propagation);
+                               pair with --batch-roots 16
     pjrt                     AOT JAX/Pallas kernel via PJRT
 
 COMMANDS:
@@ -96,9 +99,13 @@ COMMANDS:
                --scale N (16) --edgefactor N (16) --roots N (64)
                --engine NAME (simd) --threads N (4) --workers N (1)
                --seed N (1) --artifacts DIR (artifacts) --no-validate
+               --batch-roots N (1)  roots per traversal batch; engines
+                        without a batched traversal loop internally,
+                        hybrid-sell-ms shares one walk per 16-root wave
                --sigma N|global|auto (auto)  SELL σ sort window
                         (engines with a SELL layout: sell, sell-noopt,
-                         hybrid-sell, hybrid-sell-bu; others reject it)
+                         hybrid-sell, hybrid-sell-bu, hybrid-sell-ms;
+                         others reject it)
                --alpha N (14) --beta N (24)  Beamer switch thresholds
                         (hybrid engines only; must be >= 1)
     model      Predict Xeon Phi TEPS for a thread/affinity sweep
@@ -111,6 +118,8 @@ COMMANDS:
                --input FILE (SNAP-style edge list; omit to generate RMAT)
                --scale N (12) --edgefactor N (16) --seed N (1)
                --engine ... (simd) --threads N (4) --bc-sources N (32)
+               --batch-roots N (1)  seeds per component-sweep batch
+                        (betweenness always batches its sources)
     info       Print artifact manifest + PJRT platform
                --artifacts DIR (artifacts)
     help       This text

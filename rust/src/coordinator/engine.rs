@@ -15,13 +15,15 @@
 //! | `simd`, `simd-noopt`, `simd-nopf` | [`VectorizedBfs`] | §4 Listing 1 |
 //! | `sell`, `sell-noopt` | [`SellBfs`] | SELL-16-σ lane packing |
 //! | `hybrid`, `hybrid-scalar`, `hybrid-sell` | [`HybridBfs`] | §8 direction optimization |
-//! | `hybrid-sell-bu` | [`HybridBfs`] | SELL-packed bottom-up + occupancy-fed α switch |
+//! | `hybrid-sell-bu` | [`HybridBfs`] | SELL-packed bottom-up + occupancy-fed α/β switches |
+//! | `hybrid-sell-ms` | [`MultiSourceSellBfs`] | batch-first MS-BFS: 16 roots per shared SELL traversal |
 //! | `pjrt` | [`PjrtBfs`] | AOT JAX/Pallas kernel |
 
 use anyhow::Result;
 
 use crate::bfs::bitrace_free::BitRaceFreeBfs;
 use crate::bfs::bottom_up::HybridBfs;
+use crate::bfs::multi_source::MultiSourceSellBfs;
 use crate::bfs::parallel::ParallelBfs;
 use crate::bfs::policy::LayerPolicy;
 use crate::bfs::sell_vectorized::{SellBfs, SIGMA_AUTO};
@@ -61,6 +63,10 @@ pub enum EngineKind {
         alpha: usize,
         beta: usize,
     },
+    /// Batch-first MS-BFS extension — up to 16 roots traverse the SELL
+    /// layout concurrently (one visit-mask bit per root); single roots run
+    /// as a one-bit wave. `sigma`/`alpha`/`beta` as for `Hybrid`.
+    MultiSource { threads: usize, sigma: usize, alpha: usize, beta: usize },
     /// The AOT JAX/Pallas kernel through PJRT.
     Pjrt { artifact_dir: String },
 }
@@ -84,6 +90,7 @@ impl EngineKind {
         "hybrid-scalar",
         "hybrid-sell",
         "hybrid-sell-bu",
+        "hybrid-sell-ms",
     ];
 
     /// A hybrid kind with the default switch thresholds and auto σ.
@@ -104,7 +111,9 @@ impl EngineKind {
     /// Together with the graph it keys the coordinator's artifact cache.
     pub fn sigma_key(&self) -> usize {
         match self {
-            EngineKind::Sell { sigma, .. } | EngineKind::Hybrid { sigma, .. } => *sigma,
+            EngineKind::Sell { sigma, .. }
+            | EngineKind::Hybrid { sigma, .. }
+            | EngineKind::MultiSource { sigma, .. } => *sigma,
             _ => SIGMA_AUTO,
         }
     }
@@ -149,14 +158,21 @@ impl EngineKind {
             "hybrid" => Self::hybrid(threads, true, false, false),
             "hybrid-scalar" => Self::hybrid(threads, false, false, false),
             "hybrid-sell" => Self::hybrid(threads, true, true, false),
-            // the full tentpole configuration: SELL-packed top-down AND
-            // bottom-up, occupancy-fed direction switch
+            // the full single-root configuration: SELL-packed top-down AND
+            // bottom-up, occupancy-fed direction switches
             "hybrid-sell-bu" => Self::hybrid(threads, true, true, true),
+            // the batch-first configuration: 16 roots per shared traversal
+            "hybrid-sell-ms" => EngineKind::MultiSource {
+                threads,
+                sigma: SIGMA_AUTO,
+                alpha: HybridBfs::DEFAULT_ALPHA,
+                beta: HybridBfs::DEFAULT_BETA,
+            },
             "pjrt" => EngineKind::Pjrt { artifact_dir: artifact_dir.to_string() },
             other => anyhow::bail!(
                 "unknown engine {other:?} (expected serial, serial-queue, non-simd, \
                  bitrace-free, simd, simd-noopt, simd-nopf, sell, sell-noopt, hybrid, \
-                 hybrid-scalar, hybrid-sell, hybrid-sell-bu, pjrt)"
+                 hybrid-scalar, hybrid-sell, hybrid-sell-bu, hybrid-sell-ms, pjrt)"
             ),
         })
     }
@@ -191,6 +207,15 @@ pub fn make_engine(kind: &EngineKind) -> Result<Box<dyn BfsEngine>> {
                 simd: *simd,
                 sell: *sell,
                 bu_sell: *bu_sell,
+                sigma: *sigma,
+                alpha: *alpha,
+                beta: *beta,
+                ..Default::default()
+            })
+        }
+        EngineKind::MultiSource { threads, sigma, alpha, beta } => {
+            Box::new(MultiSourceSellBfs {
+                num_threads: *threads,
                 sigma: *sigma,
                 alpha: *alpha,
                 beta: *beta,
@@ -242,6 +267,19 @@ mod tests {
     }
 
     #[test]
+    fn hybrid_sell_ms_parses_to_multi_source() {
+        let kind = EngineKind::parse("hybrid-sell-ms", 4, "artifacts").unwrap();
+        match kind {
+            EngineKind::MultiSource { threads: 4, sigma, alpha, beta } => {
+                assert_eq!(sigma, SIGMA_AUTO);
+                assert_eq!(alpha, HybridBfs::DEFAULT_ALPHA);
+                assert_eq!(beta, HybridBfs::DEFAULT_BETA);
+            }
+            other => panic!("unexpected kind {other:?}"),
+        }
+    }
+
+    #[test]
     fn hybrid_sell_bu_parses_to_full_config() {
         let kind = EngineKind::parse("hybrid-sell-bu", 4, "artifacts").unwrap();
         match kind {
@@ -274,6 +312,11 @@ mod tests {
             *sigma = 256;
         }
         assert_eq!(hybrid.sigma_key(), 256);
+        let mut ms = EngineKind::parse("hybrid-sell-ms", 2, "a").unwrap();
+        if let EngineKind::MultiSource { sigma, .. } = &mut ms {
+            *sigma = 64;
+        }
+        assert_eq!(ms.sigma_key(), 64);
         assert_eq!(EngineKind::SerialLayered.sigma_key(), SIGMA_AUTO);
     }
 
@@ -304,6 +347,7 @@ mod tests {
             EngineKind::hybrid(2, false, false, false),
             EngineKind::hybrid(2, true, true, false),
             EngineKind::hybrid(2, true, true, true),
+            EngineKind::parse("hybrid-sell-ms", 2, "artifacts").unwrap(),
         ] {
             let r = make_engine(&kind).unwrap().run(&g, 0);
             assert_eq!(

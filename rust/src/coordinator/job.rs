@@ -8,8 +8,43 @@ use crate::bfs::{GraphArtifacts, RunTrace};
 use crate::graph::Csr;
 use crate::Vertex;
 
+/// How the coordinator groups a job's roots into traversal batches.
+///
+/// Per-root scheduling (the default) hands a worker one root per
+/// iteration — the pre-batch behaviour, byte-for-byte. `Fixed(w)` hands
+/// each worker a contiguous group of up to `w` roots, traversed through
+/// [`crate::bfs::PreparedBfs::run_batch`]: engines with a genuinely
+/// batched implementation (`hybrid-sell-ms`) share one traversal across
+/// the group, every other engine loops `run` internally, so any engine
+/// accepts any policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BatchPolicy {
+    /// One root per worker iteration (batch width 1).
+    #[default]
+    PerRoot,
+    /// Contiguous batches of up to this many roots per worker iteration
+    /// (clamped to ≥ 1).
+    Fixed(usize),
+}
+
+impl BatchPolicy {
+    /// Roots per batch (≥ 1).
+    pub fn width(&self) -> usize {
+        match *self {
+            BatchPolicy::PerRoot => 1,
+            BatchPolicy::Fixed(w) => w.max(1),
+        }
+    }
+
+    /// Number of batches a `roots`-long job splits into.
+    pub fn num_batches(&self, roots: usize) -> usize {
+        roots.div_ceil(self.width())
+    }
+}
+
 /// One unit of coordinator work: run BFS from each of `roots` over `graph`
-/// with `engine`, optionally validating every tree.
+/// with `engine`, optionally validating every tree. `batch` groups the
+/// roots into [`crate::bfs::PreparedBfs::run_batch`] calls.
 #[derive(Clone)]
 pub struct BfsJob {
     pub id: u64,
@@ -17,6 +52,7 @@ pub struct BfsJob {
     pub roots: Vec<Vertex>,
     pub engine: EngineKind,
     pub validate: bool,
+    pub batch: BatchPolicy,
 }
 
 /// Result of one root's traversal.
@@ -29,8 +65,12 @@ pub struct RootRun {
     /// component; scans count each direction once).
     pub edges_traversed: usize,
     pub reached: usize,
-    /// Pure traversal seconds (Graph500's kernel-2 analogue). Per-graph
-    /// preparation is *not* included — see `preparation_seconds`.
+    /// Pure traversal seconds (Graph500's kernel-2 analogue): this root's
+    /// equal share of its batch's traversal wall time. Under the default
+    /// per-root [`BatchPolicy`] the batch is the root itself, so this is
+    /// the root's own time; under wider batches the share makes batch
+    /// amortization visible in per-root TEPS. Per-graph preparation is
+    /// *not* included — see `preparation_seconds`.
     pub seconds: f64,
     /// This root's amortized share of the job's one-time preparation
     /// (engine construction + `prepare`: layouts, stats, compiled
@@ -73,6 +113,18 @@ pub struct JobOutcome {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn batch_policy_widths_and_counts() {
+        assert_eq!(BatchPolicy::PerRoot.width(), 1);
+        assert_eq!(BatchPolicy::Fixed(16).width(), 16);
+        assert_eq!(BatchPolicy::Fixed(0).width(), 1, "zero width clamps to 1");
+        assert_eq!(BatchPolicy::default(), BatchPolicy::PerRoot);
+        assert_eq!(BatchPolicy::PerRoot.num_batches(5), 5);
+        assert_eq!(BatchPolicy::Fixed(16).num_batches(64), 4);
+        assert_eq!(BatchPolicy::Fixed(16).num_batches(17), 2);
+        assert_eq!(BatchPolicy::Fixed(16).num_batches(0), 0);
+    }
 
     #[test]
     fn teps_zero_for_empty_run() {

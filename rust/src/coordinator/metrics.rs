@@ -9,6 +9,9 @@ use super::job::RootRun;
 pub struct Metrics {
     jobs: AtomicUsize,
     roots: AtomicUsize,
+    /// Traversal batches dispatched (== roots under the default per-root
+    /// batch policy; fewer when jobs batch their roots).
+    batches: AtomicUsize,
     edges: AtomicU64,
     /// Total traversal nanoseconds (sum over roots, not wall).
     nanos: AtomicU64,
@@ -18,6 +21,10 @@ pub struct Metrics {
     /// cache (serving scenario: repeated jobs on a hot graph skip
     /// preparation).
     artifact_cache_hits: AtomicUsize,
+    /// The subset of cache hits served by the *content* key (same graph
+    /// bytes, different allocation — a reloaded graph) rather than the
+    /// identity fast-path.
+    artifact_cache_content_hits: AtomicUsize,
 }
 
 /// Point-in-time copy of the counters.
@@ -25,6 +32,8 @@ pub struct Metrics {
 pub struct MetricsSnapshot {
     pub jobs: usize,
     pub roots: usize,
+    /// Traversal batches dispatched across all jobs.
+    pub batches: usize,
     pub edges_traversed: u64,
     pub total_seconds: f64,
     /// Seconds spent preparing graphs (kernel-1-style, once per job) —
@@ -34,12 +43,15 @@ pub struct MetricsSnapshot {
     pub aggregate_teps: f64,
     /// Jobs served from the keyed artifact cache.
     pub artifact_cache_hits: usize,
+    /// Cache hits that matched by graph *content* (reloaded graphs).
+    pub artifact_cache_content_hits: usize,
 }
 
 impl Metrics {
-    pub fn record_job(&self, runs: &[RootRun], preparation_seconds: f64) {
+    pub fn record_job(&self, runs: &[RootRun], preparation_seconds: f64, batches: usize) {
         self.jobs.fetch_add(1, Ordering::Relaxed);
         self.roots.fetch_add(runs.len(), Ordering::Relaxed);
+        self.batches.fetch_add(batches, Ordering::Relaxed);
         let edges: u64 = runs.iter().map(|r| r.edges_traversed as u64).sum();
         self.edges.fetch_add(edges, Ordering::Relaxed);
         let nanos: u64 = runs.iter().map(|r| (r.seconds * 1e9) as u64).sum();
@@ -48,8 +60,13 @@ impl Metrics {
     }
 
     /// Count one job whose artifacts were served from the keyed cache.
-    pub fn record_artifact_cache_hit(&self) {
+    /// `by_content` marks hits that matched the content key (a reloaded
+    /// graph) rather than the identity fast-path.
+    pub fn record_artifact_cache_hit(&self, by_content: bool) {
         self.artifact_cache_hits.fetch_add(1, Ordering::Relaxed);
+        if by_content {
+            self.artifact_cache_content_hits.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -58,11 +75,15 @@ impl Metrics {
         MetricsSnapshot {
             jobs: self.jobs.load(Ordering::Relaxed),
             roots: self.roots.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
             edges_traversed: edges,
             total_seconds: secs,
             preparation_seconds: self.prep_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             aggregate_teps: if secs > 0.0 { edges as f64 / secs } else { 0.0 },
             artifact_cache_hits: self.artifact_cache_hits.load(Ordering::Relaxed),
+            artifact_cache_content_hits: self
+                .artifact_cache_content_hits
+                .load(Ordering::Relaxed),
         }
     }
 }
@@ -87,10 +108,11 @@ mod tests {
     #[test]
     fn aggregates() {
         let m = Metrics::default();
-        m.record_job(&[run(100, 0.5), run(300, 0.5)], 0.25);
+        m.record_job(&[run(100, 0.5), run(300, 0.5)], 0.25, 2);
         let s = m.snapshot();
         assert_eq!(s.jobs, 1);
         assert_eq!(s.roots, 2);
+        assert_eq!(s.batches, 2);
         assert_eq!(s.edges_traversed, 400);
         assert!((s.total_seconds - 1.0).abs() < 1e-6);
         assert!((s.preparation_seconds - 0.25).abs() < 1e-6);
@@ -101,5 +123,25 @@ mod tests {
     fn empty_snapshot_no_nan() {
         let s = Metrics::default().snapshot();
         assert_eq!(s.aggregate_teps, 0.0);
+        assert_eq!(s.batches, 0);
+    }
+
+    #[test]
+    fn batched_jobs_record_fewer_batches_than_roots() {
+        let m = Metrics::default();
+        m.record_job(&[run(10, 0.1), run(10, 0.1), run(10, 0.1)], 0.0, 1);
+        let s = m.snapshot();
+        assert_eq!(s.roots, 3);
+        assert_eq!(s.batches, 1);
+    }
+
+    #[test]
+    fn cache_hit_kinds_are_distinguished() {
+        let m = Metrics::default();
+        m.record_artifact_cache_hit(false);
+        m.record_artifact_cache_hit(true);
+        let s = m.snapshot();
+        assert_eq!(s.artifact_cache_hits, 2);
+        assert_eq!(s.artifact_cache_content_hits, 1);
     }
 }

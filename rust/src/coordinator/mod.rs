@@ -4,13 +4,16 @@
 //! architecture rules this layer is a driver, not a serving stack: it owns
 //! process lifecycle, turns CLI requests into [`job::BfsJob`]s, schedules
 //! the 64-root Graph500 experiment over a small worker pool (roots are
-//! independent, so the batch unit is a root), selects the BFS engine, and
-//! aggregates [`metrics`].
+//! independent, so the scheduling unit is a **root batch** — one root by
+//! default, up to [`job::BatchPolicy`]-many through the batch-first
+//! [`crate::bfs::PreparedBfs::run_batch`] entry point), selects the BFS
+//! engine, and aggregates [`metrics`].
 //!
 //! * [`engine`] — engine registry: every algorithm of the ladder plus the
 //!   PJRT-backed kernel engine, behind one constructor.
-//! * [`job`] — job + result types.
-//! * [`scheduler`] — root-batching worker pool.
+//! * [`job`] — job + result types, including the [`job::BatchPolicy`].
+//! * [`scheduler`] — root-batch worker pool + the content-addressed
+//!   artifact cache.
 //! * [`metrics`] — run counters and TEPS aggregation.
 
 pub mod engine;
@@ -19,5 +22,5 @@ pub mod metrics;
 pub mod scheduler;
 
 pub use engine::{make_engine, EngineKind};
-pub use job::{BfsJob, JobOutcome, RootRun};
+pub use job::{BatchPolicy, BfsJob, JobOutcome, RootRun};
 pub use scheduler::Coordinator;

@@ -1,8 +1,10 @@
 //! The root-batching scheduler.
 //!
 //! A Graph500 job is 64 independent single-root traversals over one shared
-//! read-only CSR, so the natural batch unit is the root. The job runs in
-//! the engine API's two phases:
+//! read-only CSR, so the natural scheduling unit is the **root batch**
+//! ([`crate::coordinator::job::BatchPolicy`]: one root by default, up to a
+//! fixed width when the job opts into batching). The job runs in the
+//! engine API's two phases:
 //!
 //! 1. **Prepare (once, before any worker spawns).** The engine is
 //!    constructed and `prepare`d against the job's graph — building the
@@ -10,10 +12,12 @@
 //!    degree stats, the cross-root policy-feedback channel). A bad engine
 //!    configuration therefore fails *here*, immediately, instead of racing
 //!    through per-thread error plumbing.
-//! 2. **Run (per root).** `workers` threads share the one prepared
-//!    instance (`PreparedBfs` is `Sync`) and pull root indices from a
-//!    shared cursor until the job drains. Results arrive in root order
-//!    regardless of completion order.
+//! 2. **Run (per batch).** `workers` threads share the one prepared
+//!    instance (`PreparedBfs` is `Sync`) and pull batch indices from a
+//!    shared cursor, traversing each batch through
+//!    [`crate::bfs::PreparedBfs::run_batch`] until the job drains. Each
+//!    root's reported seconds are its equal share of its batch's wall
+//!    time; results arrive in root order regardless of completion order.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, Weak};
@@ -32,13 +36,25 @@ use crate::graph::Csr;
 /// jobs over a handful of hot graphs, not hundreds.
 const ARTIFACT_CACHE_CAP: usize = 8;
 
-/// One cached per-graph preparation: the graph it belongs to (held weakly —
-/// the cache must not keep dropped graphs alive) plus the σ the entry was
-/// keyed under.
+/// One cached per-graph preparation. The durable key is `(content, sigma)`
+/// — a 64-bit fingerprint of the graph's degree sequence + adjacency
+/// stream ([`Csr::content_hash`]) — so a *reloaded* graph (new `Arc`, same
+/// bytes) still hits. `graph` additionally remembers the last allocation
+/// the entry served, weakly, as a hash-free identity fast-path.
 struct ArtifactCacheEntry {
     graph: Weak<Csr>,
+    content: u64,
     sigma: usize,
     artifacts: Arc<GraphArtifacts>,
+}
+
+/// How a cache lookup was (or wasn't) served.
+enum CacheOutcome {
+    /// Same live allocation — no hashing needed.
+    IdentityHit,
+    /// Same content, different allocation (a reloaded graph).
+    ContentHit,
+    Miss,
 }
 
 /// The L3 driver: runs jobs, keeps metrics.
@@ -46,14 +62,15 @@ pub struct Coordinator {
     /// Worker threads per job.
     pub workers: usize,
     metrics: Metrics,
-    /// Keyed [`GraphArtifacts`] cache (graph identity + σ): repeated jobs
-    /// on the same graph — the serving scenario — skip layout/stats
-    /// construction entirely and keep accumulating the same cross-root
-    /// [`crate::bfs::policy::PolicyFeedback`] channel. Insertion order,
-    /// oldest evicted at [`ARTIFACT_CACHE_CAP`]. Entries whose graph was
-    /// dropped are pruned on the next `run_job` (every job passes through
-    /// the cache), so a fully idle coordinator can pin at most
-    /// [`ARTIFACT_CACHE_CAP`] dead graphs' artifacts until its next job.
+    /// Keyed [`GraphArtifacts`] cache: repeated jobs on the same graph —
+    /// the serving scenario — skip layout/stats construction entirely and
+    /// keep accumulating the same cross-root
+    /// [`crate::bfs::policy::PolicyFeedback`] channel. Keys are **content
+    /// addressed** (graph fingerprint + σ), with a `Weak` identity
+    /// fast-path per entry, so entries deliberately outlive their graphs:
+    /// dropping and reloading a graph between jobs still hits. Insertion
+    /// order, oldest evicted at [`ARTIFACT_CACHE_CAP`], which bounds the
+    /// retained layouts.
     artifact_cache: Mutex<Vec<ArtifactCacheEntry>>,
 }
 
@@ -71,17 +88,40 @@ impl Coordinator {
     }
 
     /// The cached artifacts for `(graph, sigma)`, or a fresh entry.
-    /// Identity is the graph's allocation (`Arc::ptr_eq`), verified through
-    /// the stored `Weak` so a reused allocation address can never alias a
-    /// dropped graph. Returns `(artifacts, was_cached)`.
-    fn artifacts_for(&self, graph: &Arc<Csr>, sigma: usize) -> (Arc<GraphArtifacts>, bool) {
+    ///
+    /// Lookup order: the identity fast-path first (`Arc::ptr_eq` through
+    /// the stored `Weak` — a reused allocation address can never alias a
+    /// dropped graph), then the content key ([`Csr::content_hash`],
+    /// computed only when identity missed — and *outside* the lock, so
+    /// concurrent jobs never serialize behind an O(V + E) hash). A
+    /// content hit refreshes the entry's identity fast-path so the
+    /// following jobs on the same reloaded `Arc` skip hashing again.
+    fn artifacts_for(&self, graph: &Arc<Csr>, sigma: usize) -> (Arc<GraphArtifacts>, CacheOutcome) {
+        let identity_hit = |cache: &[ArtifactCacheEntry]| {
+            cache
+                .iter()
+                .find(|e| {
+                    e.sigma == sigma
+                        && e.graph.upgrade().map(|g| Arc::ptr_eq(&g, graph)).unwrap_or(false)
+                })
+                .map(|e| Arc::clone(&e.artifacts))
+        };
+        if let Some(artifacts) = identity_hit(&self.artifact_cache.lock().unwrap()) {
+            return (artifacts, CacheOutcome::IdentityHit);
+        }
+        // hash without the lock, then re-check: another worker may have
+        // inserted (or re-pointed) an entry for this graph meanwhile
+        let content = graph.content_hash();
         let mut cache = self.artifact_cache.lock().unwrap();
-        cache.retain(|e| e.graph.strong_count() > 0);
-        if let Some(e) = cache.iter().find(|e| {
-            e.sigma == sigma
-                && e.graph.upgrade().map(|g| Arc::ptr_eq(&g, graph)).unwrap_or(false)
-        }) {
-            return (Arc::clone(&e.artifacts), true);
+        if let Some(artifacts) = identity_hit(&cache) {
+            return (artifacts, CacheOutcome::IdentityHit);
+        }
+        if let Some(e) = cache
+            .iter_mut()
+            .find(|e| e.sigma == sigma && e.content == content)
+        {
+            e.graph = Arc::downgrade(graph);
+            return (Arc::clone(&e.artifacts), CacheOutcome::ContentHit);
         }
         let artifacts = Arc::new(GraphArtifacts::for_graph(graph));
         if cache.len() >= ARTIFACT_CACHE_CAP {
@@ -89,10 +129,11 @@ impl Coordinator {
         }
         cache.push(ArtifactCacheEntry {
             graph: Arc::downgrade(graph),
+            content,
             sigma,
             artifacts: Arc::clone(&artifacts),
         });
-        (artifacts, false)
+        (artifacts, CacheOutcome::Miss)
     }
 
     /// Execute a job to completion.
@@ -100,48 +141,70 @@ impl Coordinator {
         // Phase 1 — fail fast: construct the engine and prepare the graph
         // once, before any worker spawns. The PJRT engine compiles its
         // executable here; the sell engines build their Sell16 layout here
-        // — exactly once per *graph*: repeated jobs on a cached graph
-        // reuse the artifacts and skip the build entirely.
+        // — exactly once per *graph content*: repeated jobs on a cached
+        // (or reloaded) graph reuse the artifacts and skip the build.
         let t_prep = Instant::now();
         let engine = make_engine(&job.engine)?;
-        let (artifacts, cached) = self.artifacts_for(&job.graph, job.engine.sigma_key());
-        if cached {
-            self.metrics.record_artifact_cache_hit();
+        let (artifacts, outcome) = self.artifacts_for(&job.graph, job.engine.sigma_key());
+        match outcome {
+            CacheOutcome::IdentityHit => self.metrics.record_artifact_cache_hit(false),
+            CacheOutcome::ContentHit => self.metrics.record_artifact_cache_hit(true),
+            CacheOutcome::Miss => {}
         }
         let prepared = engine.prepare_with(&job.graph, Arc::clone(&artifacts))?;
         let preparation_seconds = t_prep.elapsed().as_secs_f64();
         let prep_share = preparation_seconds / job.roots.len().max(1) as f64;
 
         // Phase 2 — workers share the prepared engine by reference and
-        // pull roots from a common cursor.
+        // pull root batches from a common cursor.
         let prepared: &dyn PreparedBfs = prepared.as_ref();
+        let width = job.batch.width();
+        let num_batches = job.batch.num_batches(job.roots.len());
         let cursor = AtomicUsize::new(0);
         let results: Mutex<Vec<Option<RootRun>>> = Mutex::new(vec![None; job.roots.len()]);
 
         std::thread::scope(|s| {
-            for _ in 0..self.workers.min(job.roots.len().max(1)) {
+            for _ in 0..self.workers.min(num_batches.max(1)) {
                 s.spawn(|| loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= job.roots.len() {
+                    let b = cursor.fetch_add(1, Ordering::Relaxed);
+                    if b >= num_batches {
                         break;
                     }
-                    let root = job.roots[i];
+                    let start = b * width;
+                    let end = (start + width).min(job.roots.len());
+                    let batch_roots = &job.roots[start..end];
                     let t0 = Instant::now();
-                    let r = prepared.run(root);
-                    let seconds = t0.elapsed().as_secs_f64();
-                    let validation = job.validate.then(|| validate(&job.graph, &r.tree));
-                    let run = RootRun {
-                        root,
-                        // Graph500 TEPS: undirected edges of the reached
-                        // component ≈ directed scans / 2
-                        edges_traversed: r.trace.total_edges_scanned() / 2,
-                        reached: r.tree.reached_count(),
-                        seconds,
-                        preparation_seconds: prep_share,
-                        trace: r.trace,
-                        validation,
-                    };
-                    results.lock().unwrap()[i] = Some(run);
+                    let batch_results = prepared.run_batch(batch_roots);
+                    // per-batch timing, amortized equally over its roots
+                    let seconds = t0.elapsed().as_secs_f64() / batch_roots.len() as f64;
+                    assert_eq!(
+                        batch_results.len(),
+                        batch_roots.len(),
+                        "run_batch must return one result per root"
+                    );
+                    let runs: Vec<RootRun> = batch_results
+                        .into_iter()
+                        .zip(batch_roots.iter())
+                        .map(|(r, &root)| {
+                            let validation =
+                                job.validate.then(|| validate(&job.graph, &r.tree));
+                            RootRun {
+                                root,
+                                // Graph500 TEPS: undirected edges of the
+                                // reached component ≈ directed scans / 2
+                                edges_traversed: r.trace.total_edges_scanned() / 2,
+                                reached: r.tree.reached_count(),
+                                seconds,
+                                preparation_seconds: prep_share,
+                                trace: r.trace,
+                                validation,
+                            }
+                        })
+                        .collect();
+                    let mut slots = results.lock().unwrap();
+                    for (i, run) in runs.into_iter().enumerate() {
+                        slots[start + i] = Some(run);
+                    }
                 });
             }
         });
@@ -155,7 +218,7 @@ impl Coordinator {
         let all_valid = runs
             .iter()
             .all(|r| r.validation.as_ref().map(|v| v.all_passed()).unwrap_or(true));
-        self.metrics.record_job(&runs, preparation_seconds);
+        self.metrics.record_job(&runs, preparation_seconds, num_batches);
         Ok(JobOutcome { id: job.id, runs, all_valid, preparation_seconds, artifacts })
     }
 }
@@ -164,13 +227,14 @@ impl Coordinator {
 mod tests {
     use super::*;
     use crate::coordinator::engine::EngineKind;
+    use crate::coordinator::job::BatchPolicy;
     use crate::graph::{Csr, RmatConfig};
     use std::sync::Arc;
 
     fn job(engine: EngineKind, roots: Vec<u32>) -> BfsJob {
         let el = RmatConfig::graph500(9, 8).generate(60);
         let g = Arc::new(Csr::from_edge_list(9, &el));
-        BfsJob { id: 1, graph: g, roots, engine, validate: true }
+        BfsJob { id: 1, graph: g, roots, engine, validate: true, batch: BatchPolicy::PerRoot }
     }
 
     #[test]
@@ -193,6 +257,7 @@ mod tests {
         let m = c.metrics().snapshot();
         assert_eq!(m.jobs, 2);
         assert_eq!(m.roots, 8);
+        assert_eq!(m.batches, 8, "per-root policy: one batch per root");
         assert!(m.total_seconds > 0.0);
     }
 
@@ -203,6 +268,57 @@ mod tests {
         let j = job(EngineKind::SerialLayered, (0..20).collect());
         let out = Coordinator::new(2).run_job(&j).unwrap();
         assert!(out.runs.iter().any(|r| r.reached == 1 && r.edges_traversed == 0));
+    }
+
+    #[test]
+    fn batched_job_matches_per_root_job() {
+        // the batch policy changes scheduling, never results: same roots,
+        // same trees (compared as reached/edge counts), for a looping
+        // engine and for the genuinely batched MS engine
+        for engine_name in ["serial", "hybrid-sell-ms"] {
+            let engine = EngineKind::parse(engine_name, 2, "artifacts").unwrap();
+            let mut j = job(engine, (0..10).collect());
+            let per_root = Coordinator::new(2).run_job(&j).unwrap();
+            j.batch = BatchPolicy::Fixed(4);
+            let batched = Coordinator::new(2).run_job(&j).unwrap();
+            assert!(per_root.all_valid && batched.all_valid, "{engine_name}");
+            assert_eq!(per_root.runs.len(), batched.runs.len());
+            for (a, b) in per_root.runs.iter().zip(batched.runs.iter()) {
+                assert_eq!(a.root, b.root, "{engine_name}");
+                assert_eq!(a.reached, b.reached, "{engine_name}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_widths_cover_all_roots() {
+        // widths 1, 16 and a non-multiple of the root count all fill
+        // every result slot exactly once
+        for width in [1usize, 3, 16] {
+            let mut j = job(
+                EngineKind::parse("hybrid-sell-ms", 1, "artifacts").unwrap(),
+                (0..10).collect(),
+            );
+            j.batch = if width == 1 { BatchPolicy::PerRoot } else { BatchPolicy::Fixed(width) };
+            let out = Coordinator::new(3).run_job(&j).unwrap();
+            assert_eq!(out.runs.len(), 10, "width {width}");
+            for (i, r) in out.runs.iter().enumerate() {
+                assert_eq!(r.root, j.roots[i], "width {width}");
+                assert!(r.seconds >= 0.0);
+            }
+            assert!(out.all_valid, "width {width}");
+        }
+    }
+
+    #[test]
+    fn batch_metrics_count_batches_not_roots() {
+        let c = Coordinator::new(2);
+        let mut j = job(EngineKind::SerialLayered, (0..10).collect());
+        j.batch = BatchPolicy::Fixed(4);
+        c.run_job(&j).unwrap();
+        let m = c.metrics().snapshot();
+        assert_eq!(m.roots, 10);
+        assert_eq!(m.batches, 3, "10 roots in batches of 4 → 3 batches");
     }
 
     #[test]
@@ -239,6 +355,7 @@ mod tests {
             roots: (0..4).collect(),
             engine,
             validate: true,
+            batch: BatchPolicy::PerRoot,
         };
         let j2 = BfsJob { id: 2, ..j1.clone() };
         let a = c.run_job(&j1).unwrap();
@@ -247,17 +364,59 @@ mod tests {
         assert_eq!(b.artifacts.sell_builds(), 1, "layout must not rebuild on a cache hit");
         // the cross-root feedback channel kept accumulating across jobs
         assert_eq!(b.artifacts.feedback().roots_done(), 8);
-        assert_eq!(c.metrics().snapshot().artifact_cache_hits, 1);
+        let m = c.metrics().snapshot();
+        assert_eq!(m.artifact_cache_hits, 1);
+        assert_eq!(m.artifact_cache_content_hits, 0, "same Arc → identity fast-path");
         assert!(b.all_valid);
     }
 
     #[test]
-    fn artifact_cache_distinguishes_graph_and_sigma() {
+    fn artifact_cache_hits_reloaded_graph_by_content() {
+        // the ROADMAP item: dropping a graph and reloading it from the
+        // same source must hit the cache — the durable key is the content
+        // fingerprint, not the allocation
+        let c = Coordinator::new(1);
+        let el = RmatConfig::graph500(9, 8).generate(62);
+        let engine = EngineKind::parse("sell", 1, "artifacts").unwrap();
+        let mk = |graph: Arc<Csr>| BfsJob {
+            id: 0,
+            graph,
+            roots: vec![0, 1],
+            engine: engine.clone(),
+            validate: false,
+            batch: BatchPolicy::PerRoot,
+        };
+        let a = {
+            // this Arc is dropped before the second job — only content
+            // can match it
+            let g1 = Arc::new(Csr::from_edge_list(9, &el));
+            c.run_job(&mk(Arc::clone(&g1))).unwrap()
+        };
+        let g2 = Arc::new(Csr::from_edge_list(9, &el));
+        let b = c.run_job(&mk(Arc::clone(&g2))).unwrap();
+        assert!(Arc::ptr_eq(&a.artifacts, &b.artifacts), "reloaded graph must hit");
+        assert_eq!(b.artifacts.sell_builds(), 1);
+        let m = c.metrics().snapshot();
+        assert_eq!(m.artifact_cache_hits, 1);
+        assert_eq!(m.artifact_cache_content_hits, 1);
+        // a third job on the same reloaded Arc takes the refreshed
+        // identity fast-path — a hit, but not a content hit
+        c.run_job(&mk(Arc::clone(&g2))).unwrap();
+        let m = c.metrics().snapshot();
+        assert_eq!(m.artifact_cache_hits, 2);
+        assert_eq!(m.artifact_cache_content_hits, 1);
+    }
+
+    #[test]
+    fn artifact_cache_distinguishes_content_and_sigma() {
         let c = Coordinator::new(1);
         let el = RmatConfig::graph500(9, 8).generate(62);
         let g1 = Arc::new(Csr::from_edge_list(9, &el));
-        // equal content, different identity — must not alias
+        // equal content, different identity — must alias via the content key
         let g2 = Arc::new(Csr::from_edge_list(9, &el));
+        // different content — must not alias
+        let el3 = RmatConfig::graph500(9, 8).generate(63);
+        let g3 = Arc::new(Csr::from_edge_list(9, &el3));
         let mk = |graph: &Arc<Csr>, sigma: usize| {
             let mut engine = EngineKind::parse("sell", 1, "artifacts").unwrap();
             if let EngineKind::Sell { sigma: s, .. } = &mut engine {
@@ -269,16 +428,23 @@ mod tests {
                 roots: vec![0, 1],
                 engine,
                 validate: false,
+                batch: BatchPolicy::PerRoot,
             }
         };
         let a = c.run_job(&mk(&g1, 64)).unwrap();
-        let b = c.run_job(&mk(&g2, 64)).unwrap(); // different graph → miss
+        let b = c.run_job(&mk(&g2, 64)).unwrap(); // same content → content hit
         let d = c.run_job(&mk(&g1, 128)).unwrap(); // different σ → miss
-        let e = c.run_job(&mk(&g1, 64)).unwrap(); // same graph + σ → hit
-        assert!(!Arc::ptr_eq(&a.artifacts, &b.artifacts));
+        let e = c.run_job(&mk(&g3, 64)).unwrap(); // different content → miss
+        // g2's content hit re-pointed the identity fast-path at g2, so g1
+        // matches by content again
+        let f = c.run_job(&mk(&g1, 64)).unwrap();
+        assert!(Arc::ptr_eq(&a.artifacts, &b.artifacts));
         assert!(!Arc::ptr_eq(&a.artifacts, &d.artifacts));
-        assert!(Arc::ptr_eq(&a.artifacts, &e.artifacts));
-        assert_eq!(c.metrics().snapshot().artifact_cache_hits, 1);
+        assert!(!Arc::ptr_eq(&a.artifacts, &e.artifacts));
+        assert!(Arc::ptr_eq(&a.artifacts, &f.artifacts));
+        let m = c.metrics().snapshot();
+        assert_eq!(m.artifact_cache_hits, 2, "b and f hit");
+        assert_eq!(m.artifact_cache_content_hits, 2, "both via the content key");
     }
 
     #[test]

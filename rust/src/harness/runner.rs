@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use super::stats::TepsStats;
 use crate::coordinator::engine::EngineKind;
-use crate::coordinator::job::{BfsJob, RootRun};
+use crate::coordinator::job::{BatchPolicy, BfsJob, RootRun};
 use crate::coordinator::scheduler::Coordinator;
 use crate::graph::stats::LayerProfile;
 use crate::graph::{Csr, RmatConfig};
@@ -27,6 +27,10 @@ pub struct Experiment {
     /// Coordinator worker threads (independent of the engine's threads).
     pub workers: usize,
     pub validate: bool,
+    /// Roots per traversal batch (1 = the classic per-root schedule).
+    /// Wider batches route through `PreparedBfs::run_batch`, which the
+    /// MS engine (`hybrid-sell-ms`) turns into shared 16-root waves.
+    pub batch_roots: usize,
 }
 
 impl Experiment {
@@ -39,6 +43,7 @@ impl Experiment {
             engine,
             workers: 1,
             validate: true,
+            batch_roots: 1,
         }
     }
 
@@ -66,6 +71,11 @@ impl Experiment {
             roots,
             engine: self.engine.clone(),
             validate: self.validate,
+            batch: if self.batch_roots > 1 {
+                BatchPolicy::Fixed(self.batch_roots)
+            } else {
+                BatchPolicy::PerRoot
+            },
         };
         let coordinator = Coordinator::new(self.workers);
         let outcome = coordinator.run_job(&job)?;
@@ -155,6 +165,23 @@ mod tests {
             (report.stats.preparation_seconds - report.preparation_seconds).abs() < 1e-9,
             "amortized prep shares must sum back to the job total"
         );
+    }
+
+    #[test]
+    fn batched_experiment_through_harness() {
+        // --batch-roots plumbing: the MS engine validates end to end in
+        // 16-root waves and the TEPS stats stay well-formed
+        let mut exp =
+            Experiment::new(9, 8, EngineKind::parse("hybrid-sell-ms", 2, "artifacts").unwrap());
+        exp.num_roots = 20;
+        exp.workers = 2;
+        exp.batch_roots = 16;
+        let report = exp.run().unwrap();
+        assert_eq!(report.runs.len(), 20);
+        assert!(report.all_valid, "batched runs must validate");
+        assert!(report.stats.max > 0.0);
+        // batch timing: every root of a batch reports its equal share
+        assert!(report.runs.iter().all(|r| r.seconds > 0.0));
     }
 
     #[test]

@@ -28,9 +28,11 @@
 //!   16 distinct frontier vertices on skewed RMAT frontiers — plus the
 //!   layer policy of §4.1 and the Graph500 validator. Engines are
 //!   two-phase ([`bfs::BfsEngine::prepare`] once per graph →
-//!   [`bfs::PreparedBfs::run`] per root) with per-graph state in
-//!   [`bfs::GraphArtifacts`] and cross-root occupancy feedback in
-//!   [`bfs::policy::PolicyFeedback`].
+//!   [`bfs::PreparedBfs::run`] per root, or batch-first
+//!   [`bfs::PreparedBfs::run_batch`] — the MS-BFS engine
+//!   [`bfs::multi_source`] serves 16 roots per shared traversal) with
+//!   per-graph state in [`bfs::GraphArtifacts`] and cross-root occupancy
+//!   feedback in [`bfs::policy::PolicyFeedback`].
 //! * [`threads`] — a small OpenMP-like scoped thread pool (no rayon offline).
 //! * [`phi`] — an analytic Xeon Phi performance model (cores, SMT, affinity,
 //!   caches, ring/GDDR bandwidth) that converts measured work traces into

@@ -67,28 +67,35 @@ fn cmd_run(args: &Args) -> Result<()> {
     // --sigma applies exactly to the engines that build a SELL layout;
     // everything else refuses rather than silently ignoring the flag
     match &mut engine {
-        EngineKind::Sell { sigma, .. } => *sigma = parse_sigma()?,
+        EngineKind::Sell { sigma, .. } | EngineKind::MultiSource { sigma, .. } => {
+            *sigma = parse_sigma()?
+        }
         EngineKind::Hybrid { sell, bu_sell, sigma, .. } if *sell || *bu_sell => {
             *sigma = parse_sigma()?
         }
         _ if args.keys().any(|k| k.as_str() == "sigma") => anyhow::bail!(
             "--sigma only applies to engines with a SELL layout (sell, sell-noopt, \
-             hybrid-sell, hybrid-sell-bu); got --engine {engine_name}"
+             hybrid-sell, hybrid-sell-bu, hybrid-sell-ms); got --engine {engine_name}"
         ),
         _ => {}
     }
-    // --alpha/--beta tune the hybrid's direction switch; fail fast on
-    // values that would degenerate it (the engine's prepare re-checks)
-    if let EngineKind::Hybrid { alpha, beta, .. } = &mut engine {
-        *alpha = args.get("alpha", *alpha)?;
-        *beta = args.get("beta", *beta)?;
-        if *alpha == 0 || *beta == 0 {
-            anyhow::bail!("--alpha/--beta must be >= 1 (got alpha={alpha}, beta={beta})");
+    // --alpha/--beta tune the direction-optimizing switches; fail fast on
+    // values that would degenerate them (the engine's prepare re-checks)
+    match &mut engine {
+        EngineKind::Hybrid { alpha, beta, .. }
+        | EngineKind::MultiSource { alpha, beta, .. } => {
+            *alpha = args.get("alpha", *alpha)?;
+            *beta = args.get("beta", *beta)?;
+            if *alpha == 0 || *beta == 0 {
+                anyhow::bail!("--alpha/--beta must be >= 1 (got alpha={alpha}, beta={beta})");
+            }
         }
-    } else if args.keys().any(|k| k.as_str() == "alpha" || k.as_str() == "beta") {
-        anyhow::bail!(
-            "--alpha/--beta only apply to the hybrid engines (got --engine {engine_name})"
-        );
+        _ if args.keys().any(|k| k.as_str() == "alpha" || k.as_str() == "beta") => {
+            anyhow::bail!(
+                "--alpha/--beta only apply to the hybrid engines (got --engine {engine_name})"
+            )
+        }
+        _ => {}
     }
 
     let mut exp = Experiment::new(scale, edgefactor, engine);
@@ -96,11 +103,26 @@ fn cmd_run(args: &Args) -> Result<()> {
     exp.num_roots = args.get("roots", 64)?;
     exp.workers = args.get("workers", 1)?;
     exp.validate = !args.get_bool("no-validate");
+    exp.batch_roots = args.get("batch-roots", 1)?;
+    if exp.batch_roots == 0 {
+        anyhow::bail!("--batch-roots must be >= 1");
+    }
 
     println!(
         "graph500 run: SCALE={scale} edgefactor={edgefactor} engine={engine_name} threads={threads} roots={}",
         exp.num_roots
     );
+    if exp.batch_roots > 1 {
+        println!(
+            "batching: up to {} roots per traversal batch{}",
+            exp.batch_roots,
+            if engine_name == "hybrid-sell-ms" {
+                " (shared MS waves of 16)"
+            } else {
+                " (engine loops per root)"
+            }
+        );
+    }
     let report = exp.run()?;
     println!(
         "graph: {} vertices, {} directed edges (constructed in {:.2}s)",
@@ -202,7 +224,7 @@ fn cmd_table1(args: &Args) -> Result<()> {
 }
 
 fn cmd_analyze(args: &Args) -> Result<()> {
-    use phi_bfs::apps::{betweenness_centrality, connected_components, ShortestPaths};
+    use phi_bfs::apps::{betweenness_centrality, connected_components_batched, ShortestPaths};
     use phi_bfs::coordinator::engine::make_engine;
 
     let threads: usize = args.get("threads", 4)?;
@@ -212,6 +234,12 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         threads,
         &args.get_str("artifacts", "artifacts"),
     )?)?;
+    // component-sweep seed batching only pays with a genuinely batched
+    // engine; looped engines would re-traverse the giant component
+    let batch_roots: usize = args.get("batch-roots", 1)?;
+    if batch_roots == 0 {
+        anyhow::bail!("--batch-roots must be >= 1");
+    }
 
     let input = args.get_str("input", "");
     let (g, source) = if input.is_empty() {
@@ -229,7 +257,7 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         g.num_directed_edges()
     );
 
-    let comps = connected_components(&g, engine.as_ref());
+    let comps = connected_components_batched(&g, engine.as_ref(), batch_roots);
     println!(
         "components: {} (giant = {} vertices, {:.1}%)",
         comps.count,
@@ -248,7 +276,7 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         .into_iter()
         .map(|v| v as u32)
         .collect();
-    let bc = betweenness_centrality(&g, &sources);
+    let bc = betweenness_centrality(&g, &sources, engine.as_ref());
     let mut top: Vec<usize> = (0..g.num_vertices()).collect();
     top.sort_by(|&a, &b| bc[b].total_cmp(&bc[a]));
     println!("betweenness (sampled, {} sources), top 5:", sources.len());

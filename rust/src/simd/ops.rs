@@ -105,6 +105,15 @@ impl Vpu {
         a.zip(&b, |x, y| x & y)
     }
 
+    /// `_mm512_andnot_epi32(a, b)` — lanewise `(!a) & b`. The MS-BFS
+    /// visit-mask filter: bits of `b` (the frontier masks) not yet present
+    /// in `a` (the visit masks).
+    #[inline(always)]
+    pub fn andnot_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        self.counters.alu_ops += 1;
+        a.zip(&b, |x, y| !x & y)
+    }
+
     /// `_mm512_or_epi32`.
     #[inline(always)]
     pub fn or_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
@@ -631,6 +640,15 @@ mod tests {
         a.0[7] = -1;
         let m = v.cmplt_epi32_mask(a, VecI32x16::zero());
         assert_eq!(m.0, (1 << 0) | (1 << 7));
+    }
+
+    #[test]
+    fn andnot_keeps_new_bits_only() {
+        let mut v = vpu();
+        let seen = VecI32x16::splat(0b0110);
+        let frontier = VecI32x16::splat(0b1010);
+        // (!seen) & frontier = the bits still to propagate
+        assert_eq!(v.andnot_epi32(seen, frontier), VecI32x16::splat(0b1000));
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //! Invariants enforced:
 //! * every algorithm produces the same distance map as the serial oracle
 //!   on arbitrary (dirty) edge lists and RMAT graphs;
+//! * `run_batch(roots)` equals per-root `run` (depths exact, parents
+//!   validated) for every registered engine and batch width;
 //! * every tree passes the Graph500 five-check validator;
 //! * the restoration process repairs arbitrary injected corruption;
 //! * CSR construction round-trips arbitrary edge lists;
@@ -169,6 +171,48 @@ fn prop_prepared_reuse_equals_fresh_preparation() {
 }
 
 #[test]
+fn prop_run_batch_equals_per_root_runs() {
+    // The batch-first contract: for EVERY registered engine,
+    // run_batch(roots) must return one result per root, in root order,
+    // with exactly the per-root traversal's depths (the serial oracle)
+    // and a tree that passes the five-check validator (parents valid) —
+    // for batch widths 1, a full MS wave (16), and a non-multiple of 16.
+    forall("run_batch ≡ per-root run", 3, |g| {
+        let scale = g.size(8, 9) as u32;
+        let seed = g.size(0, 1 << 16) as u64;
+        let el = RmatConfig::graph500(scale, 8).generate(seed);
+        let csr = Csr::from_edge_list(scale, &el);
+        let n = csr.num_vertices();
+        let threads = g.size(1, 3);
+        for &width in &[1usize, 16, 19] {
+            let roots: Vec<Vertex> =
+                (0..width).map(|_| g.size(0, n - 1) as Vertex).collect();
+            let oracle: Vec<Vec<u32>> = roots
+                .iter()
+                .map(|&r| SerialLayeredBfs.run(&csr, r).tree.distances().unwrap())
+                .collect();
+            for name in EngineKind::NATIVE_NAMES {
+                let kind = EngineKind::parse(name, threads, "artifacts").unwrap();
+                let engine = make_engine(&kind).unwrap();
+                let prepared = engine.prepare(&csr).unwrap_or_else(|e| panic!("{name}: {e}"));
+                let batch = prepared.run_batch(&roots);
+                assert_eq!(batch.len(), roots.len(), "{name}: one result per root");
+                for (i, &root) in roots.iter().enumerate() {
+                    assert_eq!(batch[i].tree.root, root, "{name}: results in root order");
+                    assert_eq!(
+                        batch[i].tree.distances().unwrap(),
+                        oracle[i],
+                        "{name}: batch width {width}, root {root} (scale={scale}, seed={seed})"
+                    );
+                    let report = validate(&csr, &batch[i].tree);
+                    assert!(report.all_passed(), "{name}: {}", report.summary());
+                }
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_prepared_engines_build_layouts_once() {
     // Per-graph artifacts are built by prepare, exactly once, no matter
     // how many roots run through the prepared instance.
@@ -176,7 +220,7 @@ fn prop_prepared_engines_build_layouts_once() {
         let scale = g.size(8, 10) as u32;
         let el = RmatConfig::graph500(scale, 8).generate(g.size(0, 1 << 16) as u64);
         let csr = Csr::from_edge_list(scale, &el);
-        for name in ["sell", "sell-noopt", "hybrid-sell", "hybrid-sell-bu"] {
+        for name in ["sell", "sell-noopt", "hybrid-sell", "hybrid-sell-bu", "hybrid-sell-ms"] {
             let kind = EngineKind::parse(name, 2, "artifacts").unwrap();
             let engine = make_engine(&kind).unwrap();
             let prepared = engine.prepare(&csr).unwrap();
