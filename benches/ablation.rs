@@ -30,6 +30,16 @@
 //!    aggregate TEPS is at least the per-root aggregate; writes
 //!    `BENCH_batch.json` (override with `PHIBFS_BENCH_BATCH_JSON`), which
 //!    CI archives alongside `BENCH_hybrid.json`.
+//! 8. **VPU backends** — counted emulation vs hardware SIMD (`--vpu
+//!    counted` vs `--vpu hw`) TEPS ladder per vectorized engine at SCALE
+//!    16 (smoke 12), one shared Graph500 numerator. At full scale asserts
+//!    the hardware backend strictly beats the counted emulator for
+//!    `hybrid-sell-bu` and `hybrid-sell-ms`; smoke records both without
+//!    the wall-clock assert. Writes `BENCH_vpu.json` (override with
+//!    `PHIBFS_BENCH_VPU_JSON`), which CI archives alongside the other
+//!    trajectories. NOTE: the MS rows reflect the per-component
+//!    lane-retirement bound (PR 5) — its counted issue counts dropped by
+//!    design relative to the unbounded pre-PR scan.
 //!
 //! Pass `--smoke` (CI) for a down-scaled run of every section.
 
@@ -41,6 +51,7 @@ use phi_bfs::bfs::sell_vectorized::SellBfs;
 use phi_bfs::bfs::serial::SerialLayeredBfs;
 use phi_bfs::bfs::vectorized::{SimdOpts, VectorizedBfs};
 use phi_bfs::bfs::BfsEngine;
+use phi_bfs::coordinator::engine::{make_engine, EngineKind};
 use phi_bfs::graph::sell::Sell16;
 use phi_bfs::graph::stats::SellOccupancy;
 use phi_bfs::graph::{Csr, RmatConfig};
@@ -48,7 +59,7 @@ use phi_bfs::harness::report::{mteps, Table};
 use phi_bfs::phi::cost::CostParams;
 use phi_bfs::phi::sim::predict_with_helpers;
 use phi_bfs::phi::{predict, Affinity, KncParams, WorkTrace};
-use phi_bfs::simd::VpuCounters;
+use phi_bfs::simd::{detect_hw_select, VpuCounters, VpuMode};
 use phi_bfs::Vertex;
 
 fn main() {
@@ -69,7 +80,7 @@ fn main() {
         ("MinMeanDegree(16)", LayerPolicy::heavy()),
         ("All", LayerPolicy::All),
     ] {
-        let alg = VectorizedBfs { num_threads: 1, opts: SimdOpts::full(), policy };
+        let alg = VectorizedBfs { num_threads: 1, opts: SimdOpts::full(), policy, ..Default::default() };
         let prepared = alg.prepare(&g).expect("prepare");
         let m = bench.run(name, || prepared.run(root));
         let r = prepared.run(root);
@@ -120,8 +131,12 @@ fn main() {
     let batch: Vec<Vertex> = std::iter::once(root)
         .chain((0..num_batch - 1).map(|i| ((i * 97 + 13) % n) as Vertex))
         .collect();
-    let simd_alg =
-        VectorizedBfs { num_threads: 1, opts: SimdOpts::full(), policy: LayerPolicy::All };
+    let simd_alg = VectorizedBfs {
+        num_threads: 1,
+        opts: SimdOpts::full(),
+        policy: LayerPolicy::All,
+        ..Default::default()
+    };
     let sell_alg = SellBfs { num_threads: 1, ..Default::default() };
 
     let batch_occ = |runs: &[phi_bfs::bfs::BfsResult]| -> (VpuCounters, f64) {
@@ -525,4 +540,104 @@ fn main() {
     std::fs::write(&batch_json_path, &batch_json)
         .unwrap_or_else(|e| panic!("writing {batch_json_path}: {e}"));
     println!("wrote {batch_json_path}");
+
+    // the backend acceptance bar runs at SCALE 16; smoke keeps a scale
+    // with real explosion layers so both directions exercise the VPU
+    let vpu_scale: u32 = if smoke { 12 } else { env_param("PHIBFS_VPU_SCALE", 16) };
+    section(&format!(
+        "Ablation 8 — VPU backends: counted emulation vs hardware SIMD (SCALE {vpu_scale}, \
+         hw tier: {})",
+        detect_hw_select().name()
+    ));
+    let el8 = RmatConfig::graph500(vpu_scale, 16).generate(1);
+    let g8 = Csr::from_edge_list(vpu_scale, &el8);
+    let root8 = (0..g8.num_vertices() as u32).max_by_key(|&v| g8.degree(v)).unwrap();
+    // one Graph500 numerator for every engine × backend: the traversed
+    // component's undirected edge count (serial scans each direction once)
+    let m_edges8 = SerialLayeredBfs.run(&g8, root8).trace.total_edges_scanned() as f64 / 2.0;
+
+    struct VpuRow {
+        name: &'static str,
+        counted_teps: f64,
+        counted_seconds: f64,
+        hw_teps: f64,
+        hw_seconds: f64,
+    }
+    let mut vpu_rows: Vec<VpuRow> = Vec::new();
+    for name in ["simd", "sell", "hybrid-sell-bu", "hybrid-sell-ms"] {
+        let mut teps = [0.0f64; 2];
+        let mut secs = [0.0f64; 2];
+        for (i, mode) in [VpuMode::Counted, VpuMode::Hw].into_iter().enumerate() {
+            let mut kind = EngineKind::parse(name, 1, "artifacts").expect("engine");
+            assert!(kind.set_vpu(mode), "{name} must accept a VPU mode");
+            let engine = make_engine(&kind).expect("engine");
+            // fresh preparation per backend so both sides start from the
+            // same (empty) feedback channel
+            let prepared = engine.prepare(&g8).expect("prepare");
+            let m = bench.run(&format!("{name} --vpu {}", if i == 0 { "counted" } else { "hw" }), || {
+                prepared.run(root8)
+            });
+            teps[i] = m.rate(m_edges8);
+            secs[i] = m.mean_secs();
+        }
+        vpu_rows.push(VpuRow {
+            name,
+            counted_teps: teps[0],
+            counted_seconds: secs[0],
+            hw_teps: teps[1],
+            hw_seconds: secs[1],
+        });
+    }
+    let mut t = Table::new(&["engine", "counted TEPS", "hw TEPS", "hw speedup"]);
+    for r in &vpu_rows {
+        t.row(&[
+            r.name.into(),
+            mteps(r.counted_teps),
+            mteps(r.hw_teps),
+            format!("{:.2}x", r.hw_teps / r.counted_teps.max(f64::MIN_POSITIVE)),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(counted interprets every lane op and bumps counters; hw runs the same");
+    println!(" semantics on real SIMD with counters compiled away)");
+    // the wall-clock acceptance bar runs at full scale only — smoke sweeps
+    // are milliseconds long, where shared-runner noise could fail CI
+    // without a real regression; both TEPS land in BENCH_vpu.json always
+    if !smoke {
+        for r in vpu_rows.iter().filter(|r| r.name == "hybrid-sell-bu" || r.name == "hybrid-sell-ms") {
+            assert!(
+                r.hw_teps > r.counted_teps,
+                "{}: hw TEPS {:.0} must beat counted {:.0}",
+                r.name,
+                r.hw_teps,
+                r.counted_teps
+            );
+        }
+    }
+
+    // perf trajectory: one JSON point per engine × backend for CI
+    let vpu_json_path =
+        std::env::var("PHIBFS_BENCH_VPU_JSON").unwrap_or_else(|_| "BENCH_vpu.json".into());
+    let vpu_entries: Vec<String> = vpu_rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"name\":\"{}\",\"counted_teps\":{:.1},\"counted_seconds\":{:.6},\
+                 \"hw_teps\":{:.1},\"hw_seconds\":{:.6}}}",
+                r.name, r.counted_teps, r.counted_seconds, r.hw_teps, r.hw_seconds,
+            )
+        })
+        .collect();
+    let vpu_json = format!(
+        "{{\"bench\":\"vpu\",\"scale\":{},\"edgefactor\":16,\"smoke\":{},\
+         \"hw_tier\":\"{}\",\"m_edges\":{:.0},\"engines\":[{}]}}\n",
+        vpu_scale,
+        smoke,
+        detect_hw_select().name(),
+        m_edges8,
+        vpu_entries.join(",")
+    );
+    std::fs::write(&vpu_json_path, &vpu_json)
+        .unwrap_or_else(|e| panic!("writing {vpu_json_path}: {e}"));
+    println!("wrote {vpu_json_path}");
 }

@@ -37,7 +37,12 @@ fn main() {
         let g = Csr::from_edge_list(scale, &el);
         let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
         let nonsimd = ParallelBfs { num_threads: 1 };
-        let simd = VectorizedBfs { num_threads: 1, opts: SimdOpts::full(), policy: LayerPolicy::heavy() };
+        let simd = VectorizedBfs {
+            num_threads: 1,
+            opts: SimdOpts::full(),
+            policy: LayerPolicy::heavy(),
+            ..Default::default()
+        };
         // both sides prepared outside the timer — like-for-like traversal time
         let nonsimd_prepared = nonsimd.prepare(&g).expect("prepare");
         let simd_prepared = simd.prepare(&g).expect("prepare");

@@ -39,7 +39,7 @@ fn main() {
     let bench = Bench::quick();
     let mut traces = Vec::new();
     for (name, opts) in opt_levels() {
-        let alg = VectorizedBfs { num_threads: 1, opts, policy: LayerPolicy::heavy() };
+        let alg = VectorizedBfs { num_threads: 1, opts, policy: LayerPolicy::heavy(), ..Default::default() };
         let prepared = alg.prepare(&g).expect("prepare");
         let m = bench.run(name, || prepared.run(root));
         println!("{}", m.report_line());

@@ -14,6 +14,7 @@ use phi_bfs::bfs::policy::LayerPolicy;
 use phi_bfs::bfs::serial::{SerialLayeredBfs, SerialQueueBfs};
 use phi_bfs::bfs::state::{SharedBitmap, SharedPred};
 use phi_bfs::bfs::vectorized::{restore_layer_simd, SimdOpts, VectorizedBfs};
+use phi_bfs::simd::{ops::Vpu, HwPortable};
 use phi_bfs::bfs::BfsEngine;
 use phi_bfs::graph::{Bitmap, Csr, RmatConfig};
 
@@ -54,7 +55,12 @@ fn main() {
     println!("{}", m.report_line());
     let m = bench.run("restore simd (emulated)", || {
         let (out, vis, pred) = setup();
-        restore_layer_simd(1, &out, &vis, &pred, rn as i32)
+        restore_layer_simd::<Vpu>(1, &out, &vis, &pred, rn as i32)
+    });
+    println!("{}", m.report_line());
+    let m = bench.run("restore simd (hw portable)", || {
+        let (out, vis, pred) = setup();
+        restore_layer_simd::<HwPortable>(1, &out, &vis, &pred, rn as i32)
     });
     println!("{}", m.report_line());
 
@@ -84,6 +90,7 @@ fn main() {
                 num_threads: 1,
                 opts: SimdOpts::full(),
                 policy: LayerPolicy::heavy(),
+                ..Default::default()
             }),
         ),
     ];

@@ -43,8 +43,13 @@ fn main() {
     let el = RmatConfig::graph500(scale, 16).generate(1);
     let g = Csr::from_edge_list(scale, &el);
     let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
-    let run = VectorizedBfs { num_threads: 1, opts: SimdOpts::full(), policy: LayerPolicy::heavy() }
-        .run(&g, root);
+    let run = VectorizedBfs {
+        num_threads: 1,
+        opts: SimdOpts::full(),
+        policy: LayerPolicy::heavy(),
+        ..Default::default()
+    }
+    .run(&g, root);
     let trace = WorkTrace::from_run(g.num_vertices(), &run.trace);
     let mut t2 = Table::new(&["#Threads", "Thread Affinity", "Cores", "TEPS"]);
     for k in 1..=4 {

@@ -48,8 +48,13 @@ fn main() -> anyhow::Result<()> {
     }
 
     // the native emulated-VPU implementation on the same graph
-    let native = VectorizedBfs { num_threads: 1, opts: SimdOpts::full(), policy: LayerPolicy::All }
-        .run(&g, root);
+    let native = VectorizedBfs {
+        num_threads: 1,
+        opts: SimdOpts::full(),
+        policy: LayerPolicy::All,
+        ..Default::default()
+    }
+    .run(&g, root);
 
     // cross-validate: identical distance maps (predecessors may differ by
     // the benign race; distances must not)

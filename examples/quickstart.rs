@@ -31,6 +31,7 @@ fn main() {
         num_threads: 4,
         opts: SimdOpts::full(),
         policy: LayerPolicy::heavy(),
+        ..Default::default()
     };
     let prepared = algorithm.prepare(&graph).expect("prepare");
     let root = (0..graph.num_vertices() as u32)

@@ -22,6 +22,56 @@ use crate::graph::{Csr, PaddedCsr, Sell16};
 
 pub use crate::graph::stats::DegreeStats;
 
+use crate::Vertex;
+
+/// Connected-component labels of a graph — the cheap per-graph pass behind
+/// the MS-BFS bottom-up **per-component reachable-mask bound**
+/// ([`crate::bfs::multi_source`]): a vertex can only ever be discovered by
+/// wave roots in its own component, so a lane retires the moment it covers
+/// that subset of the live mask instead of waiting on unreachable bits.
+/// One scalar O(V + E) sweep, built lazily like every other artifact.
+#[derive(Clone, Debug)]
+pub struct ComponentMap {
+    /// Component label per vertex, dense in `0..count`.
+    pub labels: Vec<u32>,
+    /// Number of connected components (isolated vertices included).
+    pub count: usize,
+}
+
+impl ComponentMap {
+    /// Label every vertex with an iterative scalar BFS sweep.
+    pub fn compute(g: &Csr) -> Self {
+        let n = g.num_vertices();
+        let mut labels = vec![u32::MAX; n];
+        let mut count = 0usize;
+        let mut stack: Vec<Vertex> = Vec::new();
+        for v0 in 0..n {
+            if labels[v0] != u32::MAX {
+                continue;
+            }
+            let label = count as u32;
+            count += 1;
+            labels[v0] = label;
+            stack.push(v0 as Vertex);
+            while let Some(u) = stack.pop() {
+                for &w in g.neighbors(u) {
+                    if labels[w as usize] == u32::MAX {
+                        labels[w as usize] = label;
+                        stack.push(w);
+                    }
+                }
+            }
+        }
+        ComponentMap { labels, count }
+    }
+
+    /// Component label of `v`.
+    #[inline]
+    pub fn label(&self, v: Vertex) -> u32 {
+        self.labels[v as usize]
+    }
+}
+
 /// Typed per-graph state shared across all roots of a job.
 ///
 /// Only the [`PolicyFeedback`] channel exists up front; everything
@@ -34,8 +84,10 @@ pub struct GraphArtifacts {
     feedback: PolicyFeedback,
     sell: OnceLock<Arc<Sell16>>,
     padded: OnceLock<Arc<PaddedCsr>>,
+    components: OnceLock<Arc<ComponentMap>>,
     sell_builds: AtomicUsize,
     padded_builds: AtomicUsize,
+    component_builds: AtomicUsize,
 }
 
 impl GraphArtifacts {
@@ -47,8 +99,10 @@ impl GraphArtifacts {
             feedback: PolicyFeedback::default(),
             sell: OnceLock::new(),
             padded: OnceLock::new(),
+            components: OnceLock::new(),
             sell_builds: AtomicUsize::new(0),
             padded_builds: AtomicUsize::new(0),
+            component_builds: AtomicUsize::new(0),
         }
     }
 
@@ -86,6 +140,21 @@ impl GraphArtifacts {
             self.padded_builds.fetch_add(1, Ordering::Relaxed);
             Arc::new(PaddedCsr::from_csr(g))
         }))
+    }
+
+    /// The connected-component labels of `g`, built on first call and
+    /// cached — the MS-BFS per-component lane-retirement bound reads them.
+    pub fn components(&self, g: &Csr) -> Arc<ComponentMap> {
+        Arc::clone(self.components.get_or_init(|| {
+            self.component_builds.fetch_add(1, Ordering::Relaxed);
+            Arc::new(ComponentMap::compute(g))
+        }))
+    }
+
+    /// How many times a [`ComponentMap`] was constructed through these
+    /// artifacts.
+    pub fn component_builds(&self) -> usize {
+        self.component_builds.load(Ordering::Relaxed)
     }
 
     /// How many times a [`Sell16`] layout was constructed through these
@@ -168,6 +237,28 @@ mod tests {
         let s4 = a.sell_layout(&g, 256);
         assert!(Arc::ptr_eq(&s1, &s4));
         assert_eq!(a.sell_builds(), 2);
+    }
+
+    #[test]
+    fn component_map_labels_components() {
+        // 0-1-2 connected; 3-4 a second component; 5 isolated
+        let el = EdgeList::with_edges(6, vec![(0, 1), (1, 2), (3, 4)]);
+        let g = Csr::from_edge_list(0, &el);
+        let cm = ComponentMap::compute(&g);
+        assert_eq!(cm.count, 3);
+        assert_eq!(cm.label(0), cm.label(1));
+        assert_eq!(cm.label(0), cm.label(2));
+        assert_eq!(cm.label(3), cm.label(4));
+        assert_ne!(cm.label(0), cm.label(3));
+        assert_ne!(cm.label(5), cm.label(0));
+        assert_ne!(cm.label(5), cm.label(3));
+        // built once through the artifacts, then cached
+        let a = GraphArtifacts::for_graph(&g);
+        let c1 = a.components(&g);
+        let c2 = a.components(&g);
+        assert!(Arc::ptr_eq(&c1, &c2));
+        assert_eq!(a.component_builds(), 1);
+        assert_eq!(c1.count, cm.count);
     }
 
     #[test]

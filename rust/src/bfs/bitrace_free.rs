@@ -189,7 +189,7 @@ impl StatelessBfs for BitRaceFreeBfs {
 
         BfsResult {
             tree: BfsTree::new(root, pred.into_vec()),
-            trace: RunTrace { layers, num_threads: self.num_threads },
+            trace: RunTrace { layers, num_threads: self.num_threads, ..Default::default() },
         }
     }
 }

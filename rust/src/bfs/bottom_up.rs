@@ -49,7 +49,7 @@ use super::{
 use crate::graph::bitmap::BITS_PER_WORD;
 use crate::graph::sell::Sell16;
 use crate::graph::{Bitmap, Csr, PaddedCsr};
-use crate::simd::ops::Vpu;
+use crate::simd::backend::{resolve, VpuBackend, VpuMode};
 use crate::simd::vec512::{Mask16, LANES};
 use crate::threads::parallel_for_dynamic;
 use crate::{Pred, Vertex};
@@ -100,7 +100,7 @@ pub fn bottom_up_layer_scalar(
 /// tested against the frontier bitmap with gather + bit-test exactly like
 /// Listing 1's filter; the first enabled lane supplies the parent.
 #[allow(clippy::too_many_arguments)]
-pub fn bottom_up_layer_simd(
+pub fn bottom_up_layer_simd<V: VpuBackend>(
     num_threads: usize,
     g: &Csr,
     frontier_words: &[u32],
@@ -108,21 +108,26 @@ pub fn bottom_up_layer_simd(
     next: &SharedBitmap,
     pred: &SharedPred,
 ) -> (usize, usize, crate::simd::VpuCounters) {
-    #[derive(Default)]
-    struct Acc {
+    struct Acc<V> {
         edges: usize,
         found: usize,
-        vpu: Option<Vpu>,
+        vpu: Option<V>,
+    }
+    #[allow(clippy::derivable_impls)]
+    impl<V> Default for Acc<V> {
+        fn default() -> Self {
+            Acc { edges: 0, found: 0, vpu: None }
+        }
     }
     let n = g.num_vertices();
     let num_words = n.div_ceil(BITS_PER_WORD as usize);
     let frontier_i32: Vec<i32> = frontier_words.iter().map(|&w| w as i32).collect();
-    let accs: Vec<Acc> = parallel_for_dynamic(
+    let accs: Vec<Acc<V>> = parallel_for_dynamic(
         num_threads,
         num_words,
         WORD_GRAIN,
-        |_tid, range, acc: &mut Acc| {
-            let vpu = acc.vpu.get_or_insert_with(Vpu::new);
+        |_tid, range, acc: &mut Acc<V>| {
+            let vpu = acc.vpu.get_or_insert_with(V::new);
             for w in range {
                 for b in 0..BITS_PER_WORD {
                     let v = Bitmap::bit_to_vertex(w, b);
@@ -169,7 +174,7 @@ pub fn bottom_up_layer_simd(
         edges += a.edges;
         found += a.found;
         if let Some(v) = a.vpu {
-            vpu.merge(&v.counters);
+            vpu.merge(&v.counters());
         }
     }
     (edges, found, vpu)
@@ -201,6 +206,9 @@ pub struct HybridBfs {
     /// per-scale default at prepare time.
     pub sigma: usize,
     pub opts: SimdOpts,
+    /// VPU backend mode: counted emulation, hardware SIMD, or counted
+    /// warm-up + hardware steady state.
+    pub vpu: VpuMode,
 }
 
 impl HybridBfs {
@@ -221,14 +229,16 @@ impl Default for HybridBfs {
             bu_sell: false,
             sigma: SIGMA_AUTO,
             opts: SimdOpts::full(),
+            vpu: VpuMode::default(),
         }
     }
 }
 
 impl HybridBfs {
-    /// One traversal. `sell_layout`/`padded`/`feedback` are the per-graph
-    /// artifacts prepare built (all `None`/unused when `self.sell` is off).
-    fn traverse(
+    /// One traversal on VPU backend `V`. `sell_layout`/`padded`/`feedback`
+    /// are the per-graph artifacts prepare built (all `None`/unused when
+    /// `self.sell` is off).
+    fn traverse<V: VpuBackend>(
         &self,
         g: &Csr,
         sell_layout: Option<&Sell16>,
@@ -298,7 +308,8 @@ impl HybridBfs {
                 Some(BottomUpMode::Scalar)
             } else if self.bu_sell && sell_layout.is_some() {
                 Some(match feedback {
-                    Some(f) => f.choose_bottom_up(unvisited, unvisited_edges),
+                    // V::COUNTED gates the guided probe (see SellStep)
+                    Some(f) => f.choose_bottom_up(unvisited, unvisited_edges, V::COUNTED),
                     None => LayerPolicy::bottom_up_chunking(unvisited, unvisited_edges),
                 })
             } else {
@@ -319,7 +330,7 @@ impl HybridBfs {
                         (e, Default::default())
                     }
                     BottomUpMode::PerVertexChunks => {
-                        let (e, _found, vpu) = bottom_up_layer_simd(
+                        let (e, _found, vpu) = bottom_up_layer_simd::<V>(
                             self.num_threads,
                             g,
                             frontier.words(),
@@ -331,7 +342,7 @@ impl HybridBfs {
                     }
                     BottomUpMode::SellPacked => {
                         let sl = sell_layout.expect("SellPacked requires a prepared layout");
-                        let (e, _found, vpu) = bottom_up_layer_sell(
+                        let (e, _found, vpu) = bottom_up_layer_sell::<V>(
                             self.num_threads,
                             sl,
                             frontier.words(),
@@ -360,7 +371,7 @@ impl HybridBfs {
                     feedback,
                     opts: self.opts,
                 };
-                let (e, rstats, vpu) = step.layer(
+                let (e, rstats, vpu) = step.layer::<V>(
                     &frontier,
                     frontier_count,
                     frontier_edges,
@@ -435,7 +446,7 @@ impl HybridBfs {
 
         BfsResult {
             tree: BfsTree::new(root, pred.into_vec()),
-            trace: RunTrace { layers, num_threads: self.num_threads },
+            trace: RunTrace { layers, num_threads: self.num_threads, ..Default::default() },
         }
     }
 }
@@ -457,8 +468,25 @@ impl PreparedBfs for PreparedHybrid<'_> {
     }
 
     fn run(&self, root: Vertex) -> BfsResult {
-        let feedback = self.sell.is_some().then(|| self.artifacts.feedback());
-        self.engine.traverse(self.g, self.sell.as_deref(), self.padded.as_deref(), feedback, root)
+        // backend dispatch, once per traversal (monomorphizes the whole
+        // layer machinery under traverse)
+        let fb = self.artifacts.feedback();
+        let (select, warmup) = resolve(self.engine.vpu, fb.roots_done());
+        let feedback = self.sell.is_some().then_some(fb);
+        let mut r = crate::with_vpu_backend!(select, V, self.engine.traverse::<V>(
+            self.g,
+            self.sell.as_deref(),
+            self.padded.as_deref(),
+            feedback,
+            root,
+        ));
+        if feedback.is_none() && self.engine.vpu == VpuMode::Auto {
+            // non-sell hybrids record no feedback of their own: advance
+            // the auto warm-up count explicitly
+            fb.record_root();
+        }
+        r.trace.counted_warmup = warmup;
+        r
     }
 
     fn artifacts(&self) -> &GraphArtifacts {
@@ -514,6 +542,7 @@ mod tests {
     use crate::bfs::serial::SerialLayeredBfs;
     use crate::bfs::validate::validate;
     use crate::graph::{EdgeList, RmatConfig};
+    use crate::simd::ops::Vpu;
 
     fn rmat(scale: u32, seed: u64) -> Csr {
         let el = RmatConfig::graph500(scale, 16).generate(seed);
@@ -562,7 +591,8 @@ mod tests {
         let g = rmat(11, 76);
         let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
         let expected = SerialLayeredBfs.run(&g, root).tree.distances().unwrap();
-        let alg = HybridBfs { num_threads: 2, sell: true, ..Default::default() };
+        let alg =
+            HybridBfs { num_threads: 2, sell: true, vpu: VpuMode::Counted, ..Default::default() };
         let r = alg.run(&g, root);
         assert_eq!(r.tree.distances().unwrap(), expected);
         let rep = validate(&g, &r.tree);
@@ -585,7 +615,13 @@ mod tests {
         let g = rmat(11, 77);
         let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
         let expected = SerialLayeredBfs.run(&g, root).tree.distances().unwrap();
-        let alg = HybridBfs { num_threads: 2, sell: true, bu_sell: true, ..Default::default() };
+        let alg = HybridBfs {
+            num_threads: 2,
+            sell: true,
+            bu_sell: true,
+            vpu: VpuMode::Counted,
+            ..Default::default()
+        };
         let r = alg.run(&g, root);
         assert_eq!(r.tree.distances().unwrap(), expected);
         let rep = validate(&g, &r.tree);
@@ -636,10 +672,21 @@ mod tests {
             }
             c.mean_lanes_active()
         };
-        let chunked =
-            HybridBfs { num_threads: 1, sell: true, ..Default::default() }.run(&g, root);
-        let packed = HybridBfs { num_threads: 1, sell: true, bu_sell: true, ..Default::default() }
-            .run(&g, root);
+        let chunked = HybridBfs {
+            num_threads: 1,
+            sell: true,
+            vpu: VpuMode::Counted,
+            ..Default::default()
+        }
+        .run(&g, root);
+        let packed = HybridBfs {
+            num_threads: 1,
+            sell: true,
+            bu_sell: true,
+            vpu: VpuMode::Counted,
+            ..Default::default()
+        }
+        .run(&g, root);
         let occ_chunked = bu_occ(&chunked);
         let occ_packed = bu_occ(&packed);
         assert!(occ_chunked > 0.0, "no chunked BU layers measured");
@@ -723,7 +770,7 @@ mod tests {
         let (v1, n1, p1) = mk();
         bottom_up_layer_scalar(1, &g, &frontier, &v1, &n1, &p1);
         let (v2, n2, p2) = mk();
-        bottom_up_layer_simd(1, &g, frontier.words(), &v2, &n2, &p2);
+        bottom_up_layer_simd::<Vpu>(1, &g, frontier.words(), &v2, &n2, &p2);
         assert_eq!(n1.snapshot().words(), n2.snapshot().words());
         assert_eq!(v1.snapshot().words(), v2.snapshot().words());
         // parents may differ in *which* frontier vertex... with a single

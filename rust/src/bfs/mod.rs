@@ -70,7 +70,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-pub use artifacts::{DegreeStats, GraphArtifacts};
+pub use artifacts::{ComponentMap, DegreeStats, GraphArtifacts};
 
 use crate::graph::Csr;
 use crate::simd::VpuCounters;
@@ -217,6 +217,12 @@ pub struct RunTrace {
     /// Threads the algorithm was configured with (the Phi model re-maps
     /// work onto its own core topology, but keeps this for reporting).
     pub num_threads: usize,
+    /// This traversal was a counted **warm-up** root of
+    /// [`crate::simd::VpuMode::Auto`]: it ran on the counted emulator to
+    /// feed the policy feedback while steady-state roots run the hardware
+    /// backend. Warm-up timings are emulation timings, so TEPS aggregates
+    /// exclude flagged runs ([`crate::harness::stats::TepsStats`]).
+    pub counted_warmup: bool,
 }
 
 impl RunTrace {
@@ -383,6 +389,7 @@ mod tests {
                 LayerTrace { layer: 1, edges_scanned: 20, traversed: 7, wall_ns: 200, ..Default::default() },
             ],
             num_threads: 4,
+            ..Default::default()
         };
         assert_eq!(trace.total_edges_scanned(), 30);
         assert_eq!(trace.total_traversed(), 12);

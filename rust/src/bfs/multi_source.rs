@@ -88,6 +88,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use super::artifacts::ComponentMap;
 use super::bottom_up::HybridBfs;
 use super::policy::{BottomUpMode, ChunkingMode, PolicyFeedback};
 use super::sell_bottom_up::LanePack;
@@ -97,7 +98,8 @@ use super::vectorized::SimdOpts;
 use super::{BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, RunTrace};
 use crate::graph::sell::{Sell16, SELL_C};
 use crate::graph::{Bitmap, Csr};
-use crate::simd::ops::{PrefetchHint, Vpu};
+use crate::simd::backend::{resolve, VpuBackend, VpuMode};
+use crate::simd::ops::PrefetchHint;
 use crate::simd::vec512::{Mask16, VecI32x16, LANES};
 use crate::simd::VpuCounters;
 use crate::threads::parallel_for_dynamic;
@@ -116,6 +118,34 @@ struct WaveState<'a> {
     next_mask: &'a [AtomicU32],
     next_union: &'a SharedBitmap,
     preds: &'a [SharedPred],
+    /// Per-component reachable-mask bound (the ROADMAP lane-retirement
+    /// item): `None` disables it.
+    comp: Option<CompBound<'a>>,
+}
+
+/// The wave's per-component root masks: a vertex can only ever be reached
+/// by the wave roots in its own connected component, so everything a
+/// bottom-up lane *owes* is `live_mask & root_masks[label(v)]`. Bits of
+/// roots in other components — which would otherwise pin the lane until
+/// those roots drain — retire immediately.
+struct CompBound<'a> {
+    /// Component label per vertex ([`ComponentMap::labels`]).
+    labels: &'a [u32],
+    /// OR of `1 << r` over the wave roots in each component.
+    root_masks: &'a [u32],
+}
+
+impl WaveState<'_> {
+    /// The live bits vertex `v` can still be discovered by: `live_mask`
+    /// restricted to `v`'s component's wave roots (or unrestricted when
+    /// the bound is off).
+    #[inline]
+    fn live_for(&self, v: Vertex, live_mask: u32) -> u32 {
+        match &self.comp {
+            Some(c) => live_mask & c.root_masks[c.labels[v as usize] as usize],
+            None => live_mask,
+        }
+    }
 }
 
 impl WaveState<'_> {
@@ -147,8 +177,8 @@ impl WaveState<'_> {
 /// gather's indices are the neighbor ids themselves; the per-lane
 /// candidate masks come from a vector AND-NOT, and hit lanes commit
 /// through [`WaveState::claim`].
-fn ms_explore_row(
-    vpu: &mut Vpu,
+fn ms_explore_row<V: VpuBackend>(
+    vpu: &mut V,
     vneig: VecI32x16,
     active: Mask16,
     vsrc_mask: VecI32x16,
@@ -176,16 +206,22 @@ fn ms_explore_row(
 /// Per-thread accumulator shared by both passes: entries scanned, the
 /// bottom-up pool tally (zero for the top-down pass), and the thread's
 /// VPU (created lazily so idle threads stay free).
-#[derive(Default)]
-struct PassAcc {
+struct PassAcc<V> {
     edges: usize,
     pool_vertices: usize,
     pool_edges: usize,
-    vpu: Option<Vpu>,
+    vpu: Option<V>,
+}
+
+#[allow(clippy::derivable_impls)]
+impl<V> Default for PassAcc<V> {
+    fn default() -> Self {
+        PassAcc { edges: 0, pool_vertices: 0, pool_edges: 0, vpu: None }
+    }
 }
 
 /// Merge the per-thread accumulators of one pass.
-fn merge_accs(accs: Vec<PassAcc>) -> (usize, usize, usize, VpuCounters) {
+fn merge_accs<V: VpuBackend>(accs: Vec<PassAcc<V>>) -> (usize, usize, usize, VpuCounters) {
     let mut edges = 0usize;
     let mut pool_vertices = 0usize;
     let mut pool_edges = 0usize;
@@ -195,7 +231,7 @@ fn merge_accs(accs: Vec<PassAcc>) -> (usize, usize, usize, VpuCounters) {
         pool_vertices += a.pool_vertices;
         pool_edges += a.pool_edges;
         if let Some(v) = a.vpu {
-            vpu.merge(&v.counters);
+            vpu.merge(&v.counters());
         }
     }
     (edges, pool_vertices, pool_edges, vpu)
@@ -214,7 +250,7 @@ fn merge_accs(accs: Vec<PassAcc>) -> (usize, usize, usize, VpuCounters) {
 /// payload differs (source *mask* here vs marked parent there, and no
 /// restoration since claims merge). A fix to the packing loop there
 /// almost certainly applies here too.
-fn ms_explore_layer(
+fn ms_explore_layer<V: VpuBackend>(
     num_threads: usize,
     sell: &Sell16,
     td_union: &Bitmap,
@@ -224,12 +260,12 @@ fn ms_explore_layer(
     opts: SimdOpts,
 ) -> (usize, VpuCounters) {
     let (items, packed) = pack_frontier(sell, td_union, opts.aligned);
-    let accs: Vec<PassAcc> = parallel_for_dynamic(
+    let accs: Vec<PassAcc<V>> = parallel_for_dynamic(
         num_threads,
         items.len(),
         2,
-        |_tid, range, acc: &mut PassAcc| {
-            let vpu = acc.vpu.get_or_insert_with(Vpu::new);
+        |_tid, range, acc: &mut PassAcc<V>| {
+            let vpu = acc.vpu.get_or_insert_with(V::new);
             for item in &items[range] {
                 match *item {
                     PackedItem::FullChunk(c) => {
@@ -342,7 +378,7 @@ const MS_BU_CHUNK_GRAIN: usize = 64;
 /// (entries scanned, pool vertices streamed, pool adjacency entries,
 /// merged counters) — the pool tally is counted in the candidate stream
 /// itself, so no separate O(V) pool scan is needed.
-fn ms_bottom_up_layer(
+fn ms_bottom_up_layer<V: VpuBackend>(
     num_threads: usize,
     sell: &Sell16,
     frontier_mask: &[u32],
@@ -350,12 +386,12 @@ fn ms_bottom_up_layer(
     state: &WaveState<'_>,
     opts: SimdOpts,
 ) -> (usize, usize, usize, VpuCounters) {
-    let accs: Vec<PassAcc> = parallel_for_dynamic(
+    let accs: Vec<PassAcc<V>> = parallel_for_dynamic(
         num_threads,
         sell.num_chunks(),
         MS_BU_CHUNK_GRAIN,
-        |_tid, chunk_range, acc: &mut PassAcc| {
-            let vpu = acc.vpu.get_or_insert_with(Vpu::new);
+        |_tid, chunk_range, acc: &mut PassAcc<V>| {
+            let vpu = acc.vpu.get_or_insert_with(V::new);
             let slots = chunk_range.start * SELL_C..chunk_range.end * SELL_C;
             // candidate lanes: occupied slots whose vertex some *live*
             // root has not seen yet. Within a layer only the lane
@@ -367,7 +403,12 @@ fn ms_bottom_up_layer(
             let mut stream = sell
                 .slot_lanes(slots)
                 .filter(|l| {
-                    live_mask & !state.seen[l.vertex as usize].load(Ordering::Relaxed) != 0
+                    // everything this pass could still owe the vertex —
+                    // restricted to its component's wave roots when the
+                    // per-component bound is on
+                    state.live_for(l.vertex, live_mask)
+                        & !state.seen[l.vertex as usize].load(Ordering::Relaxed)
+                        != 0
                 })
                 .inspect(|l| {
                     pool_vertices += 1;
@@ -405,8 +446,10 @@ fn ms_bottom_up_layer(
                         let v = pack.vertex(lane);
                         let u = vneig.lane(lane) as Vertex;
                         let now = state.claim(v, vwant.lane(lane) as u32, u);
-                        if live_mask & !now == 0 {
-                            // converged: every live root of the wave saw v
+                        if state.live_for(v, live_mask) & !now == 0 {
+                            // converged: every live root that can ever
+                            // reach v saw it — with the component bound,
+                            // other components' live bits retire instantly
                             retire |= 1 << lane;
                         }
                     }
@@ -439,6 +482,15 @@ pub struct MultiSourceSellBfs {
     /// Beamer's β (bottom-up → top-down), applied per root.
     pub beta: usize,
     pub opts: SimdOpts,
+    /// Retire bottom-up lanes against the per-component reachable-mask
+    /// bound (prepare runs a cheap components pass once): a lane owes a
+    /// vertex only the live bits of roots in the vertex's own component,
+    /// so bits of still-running roots elsewhere never pin it to adjacency
+    /// exhaustion. Off reproduces the unbounded pre-PR scan.
+    pub component_bound: bool,
+    /// VPU backend mode: counted emulation, hardware SIMD, or counted
+    /// warm-up + hardware steady state.
+    pub vpu: VpuMode,
 }
 
 impl Default for MultiSourceSellBfs {
@@ -449,18 +501,23 @@ impl Default for MultiSourceSellBfs {
             alpha: HybridBfs::DEFAULT_ALPHA,
             beta: HybridBfs::DEFAULT_BETA,
             opts: SimdOpts::full(),
+            component_bound: true,
+            vpu: VpuMode::default(),
         }
     }
 }
 
 impl MultiSourceSellBfs {
-    /// One MS wave: traverse from up to [`MS_WAVE`] roots simultaneously,
-    /// returning one result per root in root order.
-    fn traverse_wave(
+    /// One MS wave on VPU backend `V`: traverse from up to [`MS_WAVE`]
+    /// roots simultaneously, returning one result per root in root order.
+    /// `components`, when present, supplies the per-component
+    /// reachable-mask bound for bottom-up lane retirement.
+    fn traverse_wave<V: VpuBackend>(
         &self,
         g: &Csr,
         sell: &Sell16,
         feedback: &PolicyFeedback,
+        components: Option<&ComponentMap>,
         roots: &[Vertex],
     ) -> Vec<BfsResult> {
         let k = roots.len();
@@ -482,11 +539,23 @@ impl MultiSourceSellBfs {
             preds[r].set(root, root as Pred);
         }
 
+        // per-component wave-root masks for the retirement bound
+        let root_masks: Option<Vec<u32>> = components.map(|cm| {
+            let mut masks = vec![0u32; cm.count.max(1)];
+            for (r, &root) in roots.iter().enumerate() {
+                masks[cm.label(root) as usize] |= 1 << r;
+            }
+            masks
+        });
         let state = WaveState {
             seen: &seen,
             next_mask: &next_mask,
             next_union: &next_union,
             preds: &preds,
+            comp: components.zip(root_masks.as_deref()).map(|(cm, masks)| CompBound {
+                labels: &cm.labels,
+                root_masks: masks,
+            }),
         };
 
         let mut rows: Vec<Vec<LayerTrace>> = (0..k).map(|_| Vec::new()).collect();
@@ -568,7 +637,7 @@ impl MultiSourceSellBfs {
             let mut td_vpu = VpuCounters::default();
             let mut bu_vpu = VpuCounters::default();
             if td_vertices > 0 {
-                let (_scanned, pass_vpu) = ms_explore_layer(
+                let (_scanned, pass_vpu) = ms_explore_layer::<V>(
                     self.num_threads,
                     sell,
                     &td_union,
@@ -585,7 +654,7 @@ impl MultiSourceSellBfs {
             if bu_live != 0 {
                 // the pool the pass scans — every vertex still missing a
                 // bottom-up-live bit — is tallied by the pass itself
-                let (_scanned, pool_vertices, pool_edges, pass_vpu) = ms_bottom_up_layer(
+                let (_scanned, pool_vertices, pool_edges, pass_vpu) = ms_bottom_up_layer::<V>(
                     self.num_threads,
                     sell,
                     &frontier_mask,
@@ -684,7 +753,7 @@ impl MultiSourceSellBfs {
             .zip(rows)
             .map(|((pred, &root), layers)| BfsResult {
                 tree: BfsTree::new(root, pred.into_vec()),
-                trace: RunTrace { layers, num_threads: self.num_threads },
+                trace: RunTrace { layers, num_threads: self.num_threads, ..Default::default() },
             })
             .collect()
     }
@@ -706,6 +775,9 @@ impl MultiSourceSellBfs {
 pub struct PreparedMultiSource<'g> {
     g: &'g Csr,
     sell: Arc<Sell16>,
+    /// Component labels for the bottom-up retirement bound (`None` when
+    /// [`MultiSourceSellBfs::component_bound`] is off).
+    components: Option<Arc<ComponentMap>>,
     engine: MultiSourceSellBfs,
     artifacts: Arc<GraphArtifacts>,
 }
@@ -721,13 +793,24 @@ impl PreparedBfs for PreparedMultiSource<'_> {
 
     fn run_batch(&self, roots: &[Vertex]) -> Vec<BfsResult> {
         let mut out = Vec::with_capacity(roots.len());
+        let fb = self.artifacts.feedback();
         for wave in roots.chunks(MS_WAVE) {
-            out.extend(self.engine.traverse_wave(
+            // backend dispatch per wave: Auto runs counted warm-up waves
+            // until the feedback channel has seen enough roots
+            let (select, warmup) = resolve(self.engine.vpu, fb.roots_done());
+            let mut results = crate::with_vpu_backend!(select, V, self.engine.traverse_wave::<V>(
                 self.g,
                 &self.sell,
-                self.artifacts.feedback(),
+                fb,
+                self.components.as_deref(),
                 wave,
             ));
+            if warmup {
+                for r in &mut results {
+                    r.trace.counted_warmup = true;
+                }
+            }
+            out.append(&mut results);
         }
         out
     }
@@ -758,7 +841,10 @@ impl BfsEngine for MultiSourceSellBfs {
         }
         let sigma = self.resolved_sigma(g, &artifacts);
         let sell = artifacts.sell_layout(g, sigma);
-        Ok(Box::new(PreparedMultiSource { g, sell, engine: *self, artifacts }))
+        // the cheap components pass for the lane-retirement bound runs
+        // once per graph, in prepare, like every other artifact
+        let components = self.component_bound.then(|| artifacts.components(g));
+        Ok(Box::new(PreparedMultiSource { g, sell, components, engine: *self, artifacts }))
     }
 }
 
@@ -837,7 +923,8 @@ mod tests {
         // (edges are top-down degree sums in both)
         let g = rmat(10, 16, 24);
         let roots = sample_roots(&g, 4);
-        let engine = MultiSourceSellBfs { num_threads: 1, ..Default::default() };
+        let engine =
+            MultiSourceSellBfs { num_threads: 1, vpu: VpuMode::Counted, ..Default::default() };
         let results = engine.prepare(&g).unwrap().run_batch(&roots);
         for (i, &root) in roots.iter().enumerate().skip(1) {
             let serial = SerialLayeredBfs.run(&g, root);
@@ -873,7 +960,8 @@ mod tests {
                     .take(15),
             )
             .collect();
-        let engine = MultiSourceSellBfs { num_threads: 1, ..Default::default() };
+        let engine =
+            MultiSourceSellBfs { num_threads: 1, vpu: VpuMode::Counted, ..Default::default() };
         let wave_issues: u64 = engine
             .prepare(&g)
             .unwrap()
@@ -900,7 +988,8 @@ mod tests {
     fn wave_runs_bottom_up_on_explosion_layers() {
         let g = rmat(12, 16, 26);
         let roots = sample_roots(&g, 16);
-        let engine = MultiSourceSellBfs { num_threads: 1, ..Default::default() };
+        let engine =
+            MultiSourceSellBfs { num_threads: 1, vpu: VpuMode::Counted, ..Default::default() };
         let results = engine.prepare(&g).unwrap().run_batch(&roots);
         let lead = &results[0];
         let bu_layers = lead.trace.layers.iter().filter(|l| l.bottom_up).count();
@@ -944,7 +1033,8 @@ mod tests {
     #[test]
     fn feedback_counts_every_root_of_a_batch() {
         let g = rmat(9, 8, 28);
-        let engine = MultiSourceSellBfs { num_threads: 2, ..Default::default() };
+        let engine =
+            MultiSourceSellBfs { num_threads: 2, vpu: VpuMode::Counted, ..Default::default() };
         let prepared = engine.prepare(&g).unwrap();
         prepared.run_batch(&sample_roots(&g, 16));
         assert_eq!(prepared.artifacts().feedback().roots_done(), 16);
@@ -954,6 +1044,66 @@ mod tests {
             .feedback()
             .mean_lanes_active(ChunkingMode::LanePacked)
             .is_some());
+    }
+
+    #[test]
+    fn component_bound_retires_lanes_and_preserves_results() {
+        // the ROADMAP lane-retirement satellite: on a graph whose second
+        // component finishes early (a clique), the unbounded bottom-up
+        // scan keeps streaming that component's vertices through the pack
+        // — they owe the other root's live bit forever — while the
+        // per-component bound retires them immediately. Results must be
+        // identical either way; issues must strictly drop.
+        let base = rmat(12, 16, 41);
+        let n_rmat = base.num_vertices();
+        let clique = 64usize;
+        let mut edges: Vec<(Vertex, Vertex)> = Vec::new();
+        for u in 0..n_rmat as Vertex {
+            for &v in base.neighbors(u) {
+                if u < v {
+                    edges.push((u, v));
+                }
+            }
+        }
+        for a in 0..clique {
+            for b in (a + 1)..clique {
+                edges.push(((n_rmat + a) as Vertex, (n_rmat + b) as Vertex));
+            }
+        }
+        let g = Csr::from_edge_list(0, &EdgeList::with_edges(n_rmat + clique, edges));
+        let hub = (0..n_rmat as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        let roots = [hub, n_rmat as Vertex];
+
+        let run = |component_bound: bool| {
+            let engine = MultiSourceSellBfs {
+                num_threads: 1,
+                component_bound,
+                vpu: VpuMode::Counted,
+                ..Default::default()
+            };
+            engine.prepare(&g).unwrap().run_batch(&roots)
+        };
+        let bounded = run(true);
+        let unbounded = run(false);
+        for (a, b) in bounded.iter().zip(unbounded.iter()) {
+            assert_eq!(a.tree.distances().unwrap(), b.tree.distances().unwrap());
+            let report = validate(&g, &a.tree);
+            assert!(report.all_passed(), "{}", report.summary());
+        }
+        // precondition: the wave actually ran bottom-up passes
+        assert!(
+            unbounded[0].trace.layers.iter().any(|l| l.bottom_up),
+            "no bottom-up pass — the retirement bound was never exercised"
+        );
+        let issues = |rs: &[crate::bfs::BfsResult]| -> u64 {
+            rs.iter().map(|r| r.trace.vpu_totals().explore_issues).sum()
+        };
+        let with = issues(&bounded);
+        let without = issues(&unbounded);
+        assert!(
+            with < without,
+            "component bound must retire lanes: {with} !< {without} issues"
+        );
     }
 
     #[test]

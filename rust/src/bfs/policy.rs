@@ -275,8 +275,17 @@ fn bu_mode_index(mode: BottomUpMode) -> Option<usize> {
 
 impl PolicyFeedback {
     /// Pick the chunking mode for a layer of `input_vertices` frontier
-    /// vertices carrying `input_edges` adjacency entries.
-    pub fn choose(&self, input_vertices: usize, input_edges: usize) -> ChunkingMode {
+    /// vertices carrying `input_edges` adjacency entries. `can_measure`
+    /// says whether this layer's counters will actually be recorded (the
+    /// counted backend) — an uncounted (hw) backend must not burn layers
+    /// probing a mode whose measurement it can never supply, so the
+    /// guided probe only fires when the probe can resolve itself.
+    pub fn choose(
+        &self,
+        input_vertices: usize,
+        input_edges: usize,
+        can_measure: bool,
+    ) -> ChunkingMode {
         let fallback = LayerPolicy::sell_chunking(input_vertices, input_edges);
         if input_vertices == 0 {
             return fallback;
@@ -296,7 +305,8 @@ impl PolicyFeedback {
             // guided probe: measure per-vertex chunking only in bands where
             // even its optimistic bound beats what packing measured
             (Some(p), None)
-                if self.roots_done() > 0
+                if can_measure
+                    && self.roots_done() > 0
                     && Self::per_vertex_occupancy_bound(mean_degree) > p =>
             {
                 ChunkingMode::PerVertex
@@ -369,6 +379,7 @@ impl PolicyFeedback {
         &self,
         unvisited_vertices: usize,
         unvisited_edges: usize,
+        can_measure: bool,
     ) -> BottomUpMode {
         let fallback = LayerPolicy::bottom_up_chunking(unvisited_vertices, unvisited_edges);
         if fallback == BottomUpMode::Scalar {
@@ -388,8 +399,10 @@ impl PolicyFeedback {
             }
             // the first-hit early exit only lowers per-vertex occupancy
             // further, so the top-down bound still filters probes safely
+            // (same uncounted-backend guard as `choose`)
             (Some(p), None)
-                if self.roots_done() > 0
+                if can_measure
+                    && self.roots_done() > 0
                     && Self::per_vertex_occupancy_bound(mean_degree) > p =>
             {
                 BottomUpMode::PerVertexChunks
@@ -601,9 +614,9 @@ mod tests {
     #[test]
     fn empty_feedback_falls_back_to_static_threshold() {
         let f = PolicyFeedback::default();
-        assert_eq!(f.choose(100, 400), LayerPolicy::sell_chunking(100, 400));
-        assert_eq!(f.choose(10, 1000), LayerPolicy::sell_chunking(10, 1000));
-        assert_eq!(f.choose(0, 0), ChunkingMode::LanePacked);
+        assert_eq!(f.choose(100, 400, true), LayerPolicy::sell_chunking(100, 400));
+        assert_eq!(f.choose(10, 1000, true), LayerPolicy::sell_chunking(10, 1000));
+        assert_eq!(f.choose(0, 0, true), ChunkingMode::LanePacked);
     }
 
     #[test]
@@ -613,12 +626,12 @@ mod tests {
         let f = PolicyFeedback::default();
         f.record_layer(ChunkingMode::LanePacked, 100, 400, &counters(100, 600));
         f.record_layer(ChunkingMode::PerVertex, 100, 400, &counters(100, 900));
-        assert_eq!(f.choose(100, 400), ChunkingMode::PerVertex);
+        assert_eq!(f.choose(100, 400, true), ChunkingMode::PerVertex);
         // ...and the reverse keeps lane packing
         let g = PolicyFeedback::default();
         g.record_layer(ChunkingMode::LanePacked, 100, 400, &counters(100, 1500));
         g.record_layer(ChunkingMode::PerVertex, 100, 400, &counters(100, 900));
-        assert_eq!(g.choose(100, 400), ChunkingMode::LanePacked);
+        assert_eq!(g.choose(100, 400, true), ChunkingMode::LanePacked);
     }
 
     #[test]
@@ -638,12 +651,30 @@ mod tests {
         // before a full root has landed
         let f = PolicyFeedback::default();
         f.record_layer(ChunkingMode::LanePacked, 100, 1600, &counters(100, 1200));
-        assert_eq!(f.choose(100, 1600), ChunkingMode::LanePacked);
+        assert_eq!(f.choose(100, 1600, true), ChunkingMode::LanePacked);
         f.record_root();
-        assert_eq!(f.choose(100, 1600), ChunkingMode::PerVertex);
+        assert_eq!(f.choose(100, 1600, true), ChunkingMode::PerVertex);
         // the probe's own measurements settle the comparison
         f.record_layer(ChunkingMode::PerVertex, 100, 1600, &counters(100, 900));
-        assert_eq!(f.choose(100, 1600), ChunkingMode::LanePacked);
+        assert_eq!(f.choose(100, 1600, true), ChunkingMode::LanePacked);
+    }
+
+    #[test]
+    fn guided_probe_requires_a_measuring_backend() {
+        // mean degree 16, bound 16.0 > measured 12.0, root complete: a
+        // counted layer probes — an uncounted (hw) layer must not, since
+        // its measurement would never land and the probe could never
+        // resolve itself
+        let f = PolicyFeedback::default();
+        f.record_layer(ChunkingMode::LanePacked, 100, 1600, &counters(100, 1200));
+        f.record_root();
+        assert_eq!(f.choose(100, 1600, true), ChunkingMode::PerVertex);
+        assert_eq!(f.choose(100, 1600, false), ChunkingMode::LanePacked);
+        let g = PolicyFeedback::default();
+        g.record_bottom_up_layer(BottomUpMode::SellPacked, 100, 1600, &counters(100, 1200));
+        g.record_root();
+        assert_eq!(g.choose_bottom_up(100, 1600, true), BottomUpMode::PerVertexChunks);
+        assert_eq!(g.choose_bottom_up(100, 1600, false), BottomUpMode::SellPacked);
     }
 
     #[test]
@@ -654,7 +685,7 @@ mod tests {
         let f = PolicyFeedback::default();
         f.record_layer(ChunkingMode::LanePacked, 100, 400, &counters(100, 1000));
         f.record_root();
-        assert_eq!(f.choose(100, 400), ChunkingMode::LanePacked);
+        assert_eq!(f.choose(100, 400, true), ChunkingMode::LanePacked);
     }
 
     #[test]
@@ -676,14 +707,14 @@ mod tests {
         let f = PolicyFeedback::default();
         f.record_bottom_up_layer(BottomUpMode::SellPacked, 100, 400, &counters(100, 600));
         f.record_bottom_up_layer(BottomUpMode::PerVertexChunks, 100, 400, &counters(100, 900));
-        assert_eq!(f.choose_bottom_up(100, 400), BottomUpMode::PerVertexChunks);
+        assert_eq!(f.choose_bottom_up(100, 400, true), BottomUpMode::PerVertexChunks);
         // ...and the reverse keeps lane packing
         let g = PolicyFeedback::default();
         g.record_bottom_up_layer(BottomUpMode::SellPacked, 100, 400, &counters(100, 1500));
         g.record_bottom_up_layer(BottomUpMode::PerVertexChunks, 100, 400, &counters(100, 900));
-        assert_eq!(g.choose_bottom_up(100, 400), BottomUpMode::SellPacked);
+        assert_eq!(g.choose_bottom_up(100, 400, true), BottomUpMode::SellPacked);
         // the scalar floor is not overridable by measurements
-        assert_eq!(f.choose_bottom_up(8, 32), BottomUpMode::Scalar);
+        assert_eq!(f.choose_bottom_up(8, 32, true), BottomUpMode::Scalar);
     }
 
     #[test]
@@ -692,14 +723,14 @@ mod tests {
         // packing (12.0) — probe-worthy, but only after a root completes
         let f = PolicyFeedback::default();
         f.record_bottom_up_layer(BottomUpMode::SellPacked, 100, 1600, &counters(100, 1200));
-        assert_eq!(f.choose_bottom_up(100, 1600), BottomUpMode::SellPacked);
+        assert_eq!(f.choose_bottom_up(100, 1600, true), BottomUpMode::SellPacked);
         f.record_root();
-        assert_eq!(f.choose_bottom_up(100, 1600), BottomUpMode::PerVertexChunks);
+        assert_eq!(f.choose_bottom_up(100, 1600, true), BottomUpMode::PerVertexChunks);
         // mean degree 4: the bound (4.0) cannot beat measured packing — no probe
         let g = PolicyFeedback::default();
         g.record_bottom_up_layer(BottomUpMode::SellPacked, 100, 400, &counters(100, 1000));
         g.record_root();
-        assert_eq!(g.choose_bottom_up(100, 400), BottomUpMode::SellPacked);
+        assert_eq!(g.choose_bottom_up(100, 400, true), BottomUpMode::SellPacked);
     }
 
     #[test]
@@ -810,7 +841,7 @@ mod tests {
         f.record_layer(ChunkingMode::PerVertex, 100, 400, &counters(8, 128));
         assert_eq!(f.occupancy_in_band(band_of(4), ChunkingMode::PerVertex), None);
         // under the floor the static threshold still decides
-        assert_eq!(f.choose(100, 400), ChunkingMode::LanePacked);
+        assert_eq!(f.choose(100, 400, true), ChunkingMode::LanePacked);
         assert!(f.mean_lanes_active(ChunkingMode::PerVertex).is_some());
     }
 }

@@ -50,7 +50,8 @@ use super::vectorized::SimdOpts;
 use crate::graph::bitmap::BITS_PER_WORD;
 use crate::graph::sell::{Sell16, SELL_C};
 use crate::graph::SellLane;
-use crate::simd::ops::{PrefetchHint, Vpu};
+use crate::simd::backend::VpuBackend;
+use crate::simd::ops::PrefetchHint;
 use crate::simd::vec512::{Mask16, VecI32x16, LANES};
 use crate::simd::VpuCounters;
 use crate::threads::parallel_for_dynamic;
@@ -177,7 +178,7 @@ const BU_CHUNK_GRAIN: usize = 64;
 /// `frontier_words` is the read-only frontier bitmap of the current layer;
 /// `visited`/`next`/`pred` follow the same discipline as the scalar scan —
 /// a vertex's entries are written only by the lane scanning that vertex.
-pub fn bottom_up_layer_sell(
+pub fn bottom_up_layer_sell<V: VpuBackend>(
     num_threads: usize,
     sell: &Sell16,
     frontier_words: &[u32],
@@ -186,19 +187,24 @@ pub fn bottom_up_layer_sell(
     pred: &SharedPred,
     opts: SimdOpts,
 ) -> (usize, usize, VpuCounters) {
-    #[derive(Default)]
-    struct Acc {
+    struct Acc<V> {
         edges: usize,
         found: usize,
-        vpu: Option<Vpu>,
+        vpu: Option<V>,
+    }
+    #[allow(clippy::derivable_impls)]
+    impl<V> Default for Acc<V> {
+        fn default() -> Self {
+            Acc { edges: 0, found: 0, vpu: None }
+        }
     }
 
-    let accs: Vec<Acc> = parallel_for_dynamic(
+    let accs: Vec<Acc<V>> = parallel_for_dynamic(
         num_threads,
         sell.num_chunks(),
         BU_CHUNK_GRAIN,
-        |_tid, chunk_range, acc: &mut Acc| {
-            let vpu = acc.vpu.get_or_insert_with(Vpu::new);
+        |_tid, chunk_range, acc: &mut Acc<V>| {
+            let vpu = acc.vpu.get_or_insert_with(V::new);
             let slots = chunk_range.start * SELL_C..chunk_range.end * SELL_C;
             // candidate lanes: occupied slots whose vertex is still
             // unvisited. Within a layer only this thread can visit them
@@ -260,7 +266,7 @@ pub fn bottom_up_layer_sell(
         edges += a.edges;
         found += a.found;
         if let Some(v) = a.vpu {
-            vpu.merge(&v.counters);
+            vpu.merge(&v.counters());
         }
     }
     (edges, found, vpu)
@@ -271,6 +277,8 @@ mod tests {
     use super::*;
     use crate::bfs::bottom_up::{bottom_up_layer_scalar, bottom_up_layer_simd};
     use crate::graph::{Bitmap, Csr, EdgeList, RmatConfig};
+    use crate::simd::hw::HwPortable;
+    use crate::simd::ops::Vpu;
     use crate::{Pred, Vertex};
 
     fn rmat(scale: u32, ef: usize, seed: u64) -> Csr {
@@ -302,7 +310,7 @@ mod tests {
         let (e1, f1) = bottom_up_layer_scalar(1, &g, &frontier, &v1, &n1, &p1);
         for threads in [1usize, 4] {
             let (v2, n2, p2) = fresh_state(n, root);
-            let (e2, f2, vpu) = bottom_up_layer_sell(
+            let (e2, f2, vpu) = bottom_up_layer_sell::<Vpu>(
                 threads,
                 &sell,
                 frontier.words(),
@@ -334,9 +342,9 @@ mod tests {
 
         let (v1, n1, p1) = fresh_state(n, root);
         let (e_chunked, _f, _) =
-            bottom_up_layer_simd(1, &g, frontier.words(), &v1, &n1, &p1);
+            bottom_up_layer_simd::<Vpu>(1, &g, frontier.words(), &v1, &n1, &p1);
         let (v2, n2, p2) = fresh_state(n, root);
-        let (e_packed, _f2, _) = bottom_up_layer_sell(
+        let (e_packed, _f2, _) = bottom_up_layer_sell::<Vpu>(
             1,
             &sell,
             frontier.words(),
@@ -377,10 +385,10 @@ mod tests {
             (v, SharedBitmap::new(n), SharedPred::new_infinity(n))
         };
         let (v1, n1, p1) = mk();
-        let (_, _, chunked) = bottom_up_layer_simd(1, &g, frontier.words(), &v1, &n1, &p1);
+        let (_, _, chunked) = bottom_up_layer_simd::<Vpu>(1, &g, frontier.words(), &v1, &n1, &p1);
         let (v2, n2, p2) = mk();
         let (_, _, packed) =
-            bottom_up_layer_sell(1, &sell, frontier.words(), &v2, &n2, &p2, SimdOpts::full());
+            bottom_up_layer_sell::<Vpu>(1, &sell, frontier.words(), &v2, &n2, &p2, SimdOpts::full());
         let occ_chunked = chunked.mean_lanes_active();
         let occ_packed = packed.mean_lanes_active();
         assert!(occ_chunked > 0.0 && occ_packed > 0.0);
@@ -393,6 +401,47 @@ mod tests {
     }
 
     #[test]
+    fn hw_backend_layer_matches_counted() {
+        // backend equivalence at the layer level: the portable hardware
+        // tier must produce the identical discoveries, parents and edge
+        // count as the counted emulator — and record nothing
+        let g = rmat(10, 16, 76);
+        let n = g.num_vertices();
+        let sell = Sell16::from_csr(&g, 256);
+        let root = (0..n as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        let mut frontier = Bitmap::new(n);
+        frontier.set_bit(root);
+
+        let (v1, n1, p1) = fresh_state(n, root);
+        let (e1, f1, counted) = bottom_up_layer_sell::<Vpu>(
+            1,
+            &sell,
+            frontier.words(),
+            &v1,
+            &n1,
+            &p1,
+            SimdOpts::full(),
+        );
+        let (v2, n2, p2) = fresh_state(n, root);
+        let (e2, f2, hw) = bottom_up_layer_sell::<HwPortable>(
+            1,
+            &sell,
+            frontier.words(),
+            &v2,
+            &n2,
+            &p2,
+            SimdOpts::full(),
+        );
+        assert_eq!(e1, e2);
+        assert_eq!(f1, f2);
+        assert_eq!(n1.snapshot().words(), n2.snapshot().words());
+        assert_eq!(v1.snapshot().words(), v2.snapshot().words());
+        assert_eq!(p1.snapshot(), p2.snapshot());
+        assert!(counted.explore_issues > 0, "counted backend must record");
+        assert_eq!(hw, crate::simd::VpuCounters::default(), "hw backend must not record");
+    }
+
+    #[test]
     fn empty_frontier_discovers_nothing() {
         let el = EdgeList::with_edges(8, vec![(0, 1), (1, 2)]);
         let g = Csr::from_edge_list(0, &el);
@@ -401,7 +450,7 @@ mod tests {
         let vis = SharedBitmap::new(8);
         let next = SharedBitmap::new(8);
         let pred = SharedPred::new_infinity(8);
-        let (edges, found, _) = bottom_up_layer_sell(
+        let (edges, found, _) = bottom_up_layer_sell::<Vpu>(
             1,
             &sell,
             frontier.words(),
@@ -425,7 +474,7 @@ mod tests {
         let mut frontier = Bitmap::new(5);
         frontier.set_bit(0);
         let (vis, next, pred) = fresh_state(5, 0);
-        let (_, found, _) = bottom_up_layer_sell(
+        let (_, found, _) = bottom_up_layer_sell::<Vpu>(
             1,
             &sell,
             frontier.words(),

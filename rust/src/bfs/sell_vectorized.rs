@@ -46,7 +46,8 @@ use super::{BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedB
 use crate::graph::bitmap::BITS_PER_WORD;
 use crate::graph::sell::{Sell16, SELL_C};
 use crate::graph::{Adjacency, Bitmap, Csr, PaddedCsr};
-use crate::simd::ops::{PrefetchHint, Vpu};
+use crate::simd::backend::{resolve, VpuBackend, VpuMode};
+use crate::simd::ops::PrefetchHint;
 use crate::simd::vec512::{Mask16, VecI32x16, LANES};
 use crate::simd::VpuCounters;
 use crate::threads::parallel_for_dynamic;
@@ -75,6 +76,9 @@ pub struct SellBfs {
     /// Degree-sort window of the prepared [`Sell16`] layout.
     /// [`SIGMA_AUTO`] resolves to the per-scale default at prepare time.
     pub sigma: usize,
+    /// VPU backend mode: counted emulation, hardware SIMD, or counted
+    /// warm-up + hardware steady state.
+    pub vpu: VpuMode,
 }
 
 impl Default for SellBfs {
@@ -87,6 +91,7 @@ impl Default for SellBfs {
             // every layer runs through the VPU.
             policy: LayerPolicy::All,
             sigma: SIGMA_AUTO,
+            vpu: VpuMode::default(),
         }
     }
 }
@@ -159,8 +164,8 @@ pub(crate) fn pack_frontier(
 /// restoration journal marker) — the key difference from the per-vertex
 /// explorer, where one scalar parent covers the whole chunk.
 #[allow(clippy::too_many_arguments)]
-fn explore_packed_row(
-    vpu: &mut Vpu,
+fn explore_packed_row<V: VpuBackend>(
+    vpu: &mut V,
     vneig: VecI32x16,
     active: Mask16,
     vparent_marked: VecI32x16,
@@ -215,7 +220,7 @@ fn explore_packed_row(
 /// with a different per-lane payload — keep fixes to the packing loop in
 /// sync.
 #[allow(clippy::too_many_arguments)]
-pub fn sell_explore_layer(
+pub fn sell_explore_layer<V: VpuBackend>(
     num_threads: usize,
     sell: &Sell16,
     frontier: &Bitmap,
@@ -225,19 +230,24 @@ pub fn sell_explore_layer(
     pred: &SharedPred,
     opts: SimdOpts,
 ) -> (usize, VpuCounters) {
-    #[derive(Default)]
-    struct Acc {
+    struct Acc<V> {
         edges: usize,
-        vpu: Option<Vpu>,
+        vpu: Option<V>,
+    }
+    #[allow(clippy::derivable_impls)]
+    impl<V> Default for Acc<V> {
+        fn default() -> Self {
+            Acc { edges: 0, vpu: None }
+        }
     }
 
     let (items, packed) = pack_frontier(sell, frontier, opts.aligned);
-    let accs: Vec<Acc> = parallel_for_dynamic(
+    let accs: Vec<Acc<V>> = parallel_for_dynamic(
         num_threads,
         items.len(),
         2,
-        |_tid, range, acc: &mut Acc| {
-            let vpu = acc.vpu.get_or_insert_with(Vpu::new);
+        |_tid, range, acc: &mut Acc<V>| {
+            let vpu = acc.vpu.get_or_insert_with(V::new);
             for item in &items[range] {
                 match *item {
                     PackedItem::FullChunk(c) => {
@@ -322,7 +332,7 @@ pub fn sell_explore_layer(
     for a in accs {
         edges += a.edges;
         if let Some(v) = a.vpu {
-            vpu.merge(&v.counters);
+            vpu.merge(&v.counters());
         }
     }
     (edges, vpu)
@@ -350,7 +360,7 @@ pub struct SellStep<'a> {
 
 impl SellStep<'_> {
     #[allow(clippy::too_many_arguments)]
-    pub fn layer(
+    pub fn layer<V: VpuBackend>(
         &self,
         frontier: &Bitmap,
         input_vertices: usize,
@@ -361,11 +371,13 @@ impl SellStep<'_> {
         nodes: Pred,
     ) -> (usize, RestoreStats, VpuCounters) {
         let mode = match self.feedback {
-            Some(f) => f.choose(input_vertices, input_edges),
+            // V::COUNTED gates the guided probe: an uncounted backend
+            // cannot supply the measurement a probe exists to collect
+            Some(f) => f.choose(input_vertices, input_edges, V::COUNTED),
             None => LayerPolicy::sell_chunking(input_vertices, input_edges),
         };
         let (edges, explore_vpu) = match mode {
-            ChunkingMode::LanePacked => sell_explore_layer(
+            ChunkingMode::LanePacked => sell_explore_layer::<V>(
                 self.num_threads,
                 self.sell,
                 frontier,
@@ -381,7 +393,7 @@ impl SellStep<'_> {
                     Some(p) => p,
                     None => self.g,
                 };
-                explore_layer_per_vertex(
+                explore_layer_per_vertex::<dyn Adjacency, V>(
                     self.num_threads,
                     adj,
                     frontier,
@@ -397,7 +409,7 @@ impl SellStep<'_> {
             f.record_layer(mode, input_vertices, input_edges, &explore_vpu);
         }
         let (rstats, restore_vpu) =
-            restore_layer_simd(self.num_threads, next, visited, pred, nodes);
+            restore_layer_simd::<V>(self.num_threads, next, visited, pred, nodes);
         let mut vpu = explore_vpu;
         vpu.merge(&restore_vpu);
         (edges, rstats, vpu)
@@ -405,9 +417,11 @@ impl SellStep<'_> {
 }
 
 impl SellBfs {
-    /// One traversal over a prepared layout. `feedback`, when present, is
-    /// both consulted (chunking choice) and fed (measured occupancy).
-    fn traverse(
+    /// One traversal over a prepared layout, on VPU backend `V`.
+    /// `feedback`, when present, is both consulted (chunking choice) and
+    /// fed (measured occupancy — zeros on uncounted backends, which the
+    /// channel ignores).
+    fn traverse<V: VpuBackend>(
         &self,
         g: &Csr,
         sell: &Sell16,
@@ -447,7 +461,7 @@ impl SellBfs {
             }
 
             let (edges_scanned, rstats, vpu_counters) = if vectorize {
-                step.layer(
+                step.layer::<V>(
                     &input,
                     frontier_count,
                     input_edges,
@@ -490,7 +504,7 @@ impl SellBfs {
 
         BfsResult {
             tree: BfsTree::new(root, pred.into_vec()),
-            trace: RunTrace { layers, num_threads: self.num_threads },
+            trace: RunTrace { layers, num_threads: self.num_threads, ..Default::default() },
         }
     }
 
@@ -521,13 +535,19 @@ impl PreparedBfs for PreparedSell<'_> {
     }
 
     fn run(&self, root: Vertex) -> BfsResult {
-        self.engine.traverse(
+        // backend dispatch, once per traversal; the traverse (and every
+        // layer helper under it) monomorphizes per backend
+        let (select, warmup) =
+            resolve(self.engine.vpu, self.artifacts.feedback().roots_done());
+        let mut r = crate::with_vpu_backend!(select, V, self.engine.traverse::<V>(
             self.g,
             &self.sell,
             self.padded.as_deref(),
             Some(self.artifacts.feedback()),
             root,
-        )
+        ));
+        r.trace.counted_warmup = warmup;
+        r
     }
 
     fn artifacts(&self) -> &GraphArtifacts {
@@ -601,7 +621,7 @@ mod tests {
                 assert_matches_serial(
                     &g,
                     5,
-                    SellBfs { num_threads: 4, opts, policy: LayerPolicy::All, sigma },
+                    SellBfs { num_threads: 4, opts, policy: LayerPolicy::All, sigma, ..Default::default() },
                 );
             }
         }
@@ -631,9 +651,11 @@ mod tests {
             num_threads: 1,
             opts: SimdOpts::full(),
             policy: LayerPolicy::All,
+            vpu: VpuMode::Counted,
         }
         .run(&g, root);
-        let sell = SellBfs { num_threads: 1, ..Default::default() }.run(&g, root);
+        let sell =
+            SellBfs { num_threads: 1, vpu: VpuMode::Counted, ..Default::default() }.run(&g, root);
         let occ_simd = simd.trace.vpu_totals().mean_lanes_active();
         let occ_sell = sell.trace.vpu_totals().mean_lanes_active();
         assert!(occ_simd > 0.0 && occ_sell > 0.0);
@@ -657,13 +679,19 @@ mod tests {
         // a star's leaf layer activates whole chunks → aligned full loads
         let el = EdgeList::with_edges(65, (1..65).map(|i| (0u32, i as Vertex)).collect());
         let g = Csr::from_edge_list(0, &el);
-        let full = SellBfs { num_threads: 1, policy: LayerPolicy::All, ..Default::default() }
-            .run(&g, 0);
+        let full = SellBfs {
+            num_threads: 1,
+            policy: LayerPolicy::All,
+            vpu: VpuMode::Counted,
+            ..Default::default()
+        }
+        .run(&g, 0);
         assert!(full.trace.vpu_totals().full_chunks > 0, "no aligned full loads");
         let noopt = SellBfs {
             num_threads: 1,
             opts: SimdOpts::none(),
             policy: LayerPolicy::All,
+            vpu: VpuMode::Counted,
             ..Default::default()
         }
         .run(&g, 0);
@@ -678,13 +706,19 @@ mod tests {
     fn prefetch_counters_follow_opts() {
         let g = rmat(9, 8, 95);
         let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
-        let with = SellBfs { num_threads: 1, policy: LayerPolicy::All, ..Default::default() }
-            .run(&g, root);
+        let with = SellBfs {
+            num_threads: 1,
+            policy: LayerPolicy::All,
+            vpu: VpuMode::Counted,
+            ..Default::default()
+        }
+        .run(&g, root);
         assert!(with.trace.vpu_totals().prefetch_l1 + with.trace.vpu_totals().prefetch_l2 > 0);
         let without = SellBfs {
             num_threads: 1,
             opts: SimdOpts::aligned_masks(),
             policy: LayerPolicy::All,
+            vpu: VpuMode::Counted,
             ..Default::default()
         }
         .run(&g, root);
@@ -698,8 +732,13 @@ mod tests {
         // even likelier than Listing 1 — restoration must still repair all
         let el = EdgeList::with_edges(64, (1..64).map(|i| (0u32, i as Vertex)).collect());
         let g = Csr::from_edge_list(0, &el);
-        let r = SellBfs { num_threads: 1, policy: LayerPolicy::All, ..Default::default() }
-            .run(&g, 0);
+        let r = SellBfs {
+            num_threads: 1,
+            policy: LayerPolicy::All,
+            vpu: VpuMode::Counted,
+            ..Default::default()
+        }
+        .run(&g, 0);
         let vpu = r.trace.vpu_totals();
         assert!(vpu.scatter_conflicts > 0, "dense children must collide in words");
         assert_eq!(r.tree.reached_count(), 64);

@@ -60,6 +60,7 @@ impl StatelessBfs for SerialQueueBfs {
                 ..Default::default()
             }],
             num_threads: 1,
+            ..Default::default()
         };
         BfsResult { tree: BfsTree::new(root, pred), trace }
     }
@@ -133,7 +134,7 @@ impl StatelessBfs for SerialLayeredBfs {
             output.clear(); // line 16 (out ← 0)
             layer += 1;
         }
-        BfsResult { tree: BfsTree::new(root, pred), trace: RunTrace { layers, num_threads: 1 } }
+        BfsResult { tree: BfsTree::new(root, pred), trace: RunTrace { layers, num_threads: 1, ..Default::default() } }
     }
 }
 

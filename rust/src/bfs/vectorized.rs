@@ -44,7 +44,8 @@ use super::{
 };
 use crate::graph::bitmap::BITS_PER_WORD;
 use crate::graph::{Adjacency, Bitmap, Csr, PaddedCsr};
-use crate::simd::ops::{PrefetchHint, Vpu};
+use crate::simd::backend::{resolve, VpuBackend, VpuMode};
+use crate::simd::ops::PrefetchHint;
 use crate::simd::vec512::{Mask16, VecI32x16, LANES};
 use crate::simd::VpuCounters;
 use crate::threads::parallel_for_dynamic;
@@ -93,27 +94,42 @@ pub struct VectorizedBfs {
     pub num_threads: usize,
     pub opts: SimdOpts,
     pub policy: LayerPolicy,
+    /// VPU backend mode: counted emulation, hardware SIMD, or counted
+    /// warm-up + hardware steady state ([`VpuMode::Auto`]).
+    pub vpu: VpuMode,
 }
 
 impl Default for VectorizedBfs {
     fn default() -> Self {
-        VectorizedBfs { num_threads: 4, opts: SimdOpts::full(), policy: LayerPolicy::default() }
+        VectorizedBfs {
+            num_threads: 4,
+            opts: SimdOpts::full(),
+            policy: LayerPolicy::default(),
+            vpu: VpuMode::default(),
+        }
     }
 }
 
 /// Per-thread accumulator for an explored layer.
-#[derive(Default)]
-struct ExploreAcc {
+struct ExploreAcc<V> {
     edges_scanned: usize,
-    vpu: Option<Vpu>,
+    vpu: Option<V>,
+}
+
+// manual impl: `V` need not be `Default` for `Option<V>` to default
+#[allow(clippy::derivable_impls)]
+impl<V> Default for ExploreAcc<V> {
+    fn default() -> Self {
+        ExploreAcc { edges_scanned: 0, vpu: None }
+    }
 }
 
 /// Explore one vertex's adjacency chunk `[offset, offset+n)` (n ≤ 16) with
 /// the Listing-1 instruction sequence. `chunk_mask` filters peel/remainder
 /// lanes (§4.2).
 #[allow(clippy::too_many_arguments)]
-fn explore_chunk(
-    vpu: &mut Vpu,
+fn explore_chunk<V: VpuBackend>(
+    vpu: &mut V,
     rows: &[u32],
     offset: usize,
     chunk_mask: Mask16,
@@ -183,8 +199,8 @@ fn explore_chunk(
 /// prepared [`PaddedCsr`] view whose aligned starts make the peel loop
 /// vanish. Shared with the SELL engine's per-vertex chunking mode.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn explore_vertex<A: Adjacency + ?Sized>(
-    vpu: &mut Vpu,
+pub(crate) fn explore_vertex<A: Adjacency + ?Sized, V: VpuBackend>(
+    vpu: &mut V,
     g: &A,
     u: Vertex,
     nodes: Pred,
@@ -273,7 +289,7 @@ pub(crate) fn explore_vertex<A: Adjacency + ?Sized>(
 /// per-vertex chunking mode; generic over the [`Adjacency`] layout so a
 /// prepared engine can traverse the aligned padded view.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn explore_layer_per_vertex<A: Adjacency + ?Sized>(
+pub(crate) fn explore_layer_per_vertex<A: Adjacency + ?Sized, V: VpuBackend>(
     num_threads: usize,
     g: &A,
     input: &Bitmap,
@@ -285,11 +301,11 @@ pub(crate) fn explore_layer_per_vertex<A: Adjacency + ?Sized>(
 ) -> (usize, VpuCounters) {
     let n = g.num_vertices();
     let in_words = input.words();
-    let accs: Vec<ExploreAcc> = parallel_for_dynamic(
+    let accs: Vec<ExploreAcc<V>> = parallel_for_dynamic(
         num_threads,
         in_words.len(),
         WORD_GRAIN,
-        |_tid, range, acc: &mut ExploreAcc| {
+        |_tid, range, acc: &mut ExploreAcc<V>| {
             for w in range {
                 let mut word = in_words[w];
                 while word != 0 {
@@ -299,7 +315,7 @@ pub(crate) fn explore_layer_per_vertex<A: Adjacency + ?Sized>(
                     if (u as usize) >= n {
                         continue;
                     }
-                    let vpu = acc.vpu.get_or_insert_with(Vpu::new);
+                    let vpu = acc.vpu.get_or_insert_with(V::new);
                     acc.edges_scanned += explore_vertex(vpu, g, u, nodes, visited, out, pred, opts);
                 }
             }
@@ -310,7 +326,7 @@ pub(crate) fn explore_layer_per_vertex<A: Adjacency + ?Sized>(
     for a in accs {
         edges += a.edges_scanned;
         if let Some(v) = a.vpu {
-            vpu.merge(&v.counters);
+            vpu.merge(&v.counters());
         }
     }
     (edges, vpu)
@@ -363,26 +379,31 @@ pub(crate) fn scalar_fallback_layer(
 /// gather the predecessors, select `P < 0`, rebuild the word's bit pattern
 /// with a horizontal OR, commit to `out` and `visited`, and add `nodes`
 /// back to the repaired predecessor entries.
-pub fn restore_layer_simd(
+pub fn restore_layer_simd<V: VpuBackend>(
     num_threads: usize,
     out: &SharedBitmap,
     visited: &SharedBitmap,
     pred: &SharedPred,
     nodes: Pred,
 ) -> (super::bitrace_free::RestoreStats, VpuCounters) {
-    #[derive(Default)]
-    struct Acc {
+    struct Acc<V> {
         stats: super::bitrace_free::RestoreStats,
-        vpu: Option<Vpu>,
+        vpu: Option<V>,
+    }
+    #[allow(clippy::derivable_impls)]
+    impl<V> Default for Acc<V> {
+        fn default() -> Self {
+            Acc { stats: Default::default(), vpu: None }
+        }
     }
     let n = out.len();
     let num_words = out.num_words();
-    let accs: Vec<Acc> = parallel_for_dynamic(
+    let accs: Vec<Acc<V>> = parallel_for_dynamic(
         num_threads,
         num_words,
         WORD_GRAIN,
-        |_tid, range, acc: &mut Acc| {
-            let vpu = acc.vpu.get_or_insert_with(Vpu::new);
+        |_tid, range, acc: &mut Acc<V>| {
+            let vpu = acc.vpu.get_or_insert_with(V::new);
             for w in range {
                 let word = out.word(w);
                 if word == 0 {
@@ -448,7 +469,7 @@ pub fn restore_layer_simd(
         stats.repaired += a.stats.repaired;
         stats.lost_bits_fixed += a.stats.lost_bits_fixed;
         if let Some(v) = a.vpu {
-            vpu.merge(&v.counters);
+            vpu.merge(&v.counters());
         }
     }
     (stats, vpu)
@@ -470,7 +491,22 @@ impl PreparedBfs for PreparedSimd<'_> {
     }
 
     fn run(&self, root: Vertex) -> BfsResult {
-        self.engine.traverse(self.g, self.padded.as_deref(), root)
+        // backend dispatch, once per traversal: the layer loops below
+        // monomorphize per backend (crate::with_vpu_backend)
+        let fb = self.artifacts.feedback();
+        let (select, warmup) = resolve(self.engine.vpu, fb.roots_done());
+        let mut r = crate::with_vpu_backend!(select, V, self.engine.traverse::<V>(
+            self.g,
+            self.padded.as_deref(),
+            root
+        ));
+        if self.engine.vpu == VpuMode::Auto {
+            // the simd engine records no policy feedback of its own, so
+            // advance the auto warm-up count explicitly
+            fb.record_root();
+        }
+        r.trace.counted_warmup = warmup;
+        r
     }
 
     fn artifacts(&self) -> &GraphArtifacts {
@@ -496,8 +532,10 @@ impl BfsEngine for VectorizedBfs {
 }
 
 impl VectorizedBfs {
-    /// One traversal over `g`, exploring through `padded` when present.
-    fn traverse(&self, g: &Csr, padded: Option<&PaddedCsr>, root: Vertex) -> BfsResult {
+    /// One traversal over `g`, exploring through `padded` when present,
+    /// on VPU backend `V` (monomorphized per backend by the dispatch in
+    /// [`PreparedSimd::run`]).
+    fn traverse<V: VpuBackend>(&self, g: &Csr, padded: Option<&PaddedCsr>, root: Vertex) -> BfsResult {
         let n = g.num_vertices();
         let nodes = n as Pred;
         let pred = SharedPred::new_infinity(n);
@@ -529,7 +567,7 @@ impl VectorizedBfs {
                     Some(p) => p,
                     None => g,
                 };
-                let (edges, mut vpu_total) = explore_layer_per_vertex(
+                let (edges, mut vpu_total) = explore_layer_per_vertex::<dyn Adjacency, V>(
                     self.num_threads,
                     adj,
                     &input,
@@ -541,7 +579,7 @@ impl VectorizedBfs {
                 );
                 // ---- vectorized restoration ----
                 let (rstats, restore_vpu) =
-                    restore_layer_simd(self.num_threads, &output, &visited, &pred, nodes);
+                    restore_layer_simd::<V>(self.num_threads, &output, &visited, &pred, nodes);
                 vpu_total.merge(&restore_vpu);
                 (edges, rstats, vpu_total)
             } else {
@@ -574,7 +612,7 @@ impl VectorizedBfs {
 
         BfsResult {
             tree: BfsTree::new(root, pred.into_vec()),
-            trace: RunTrace { layers, num_threads: self.num_threads },
+            trace: RunTrace { layers, num_threads: self.num_threads, ..Default::default() },
         }
     }
 }
@@ -584,6 +622,7 @@ mod tests {
     use super::*;
     use crate::bfs::serial::SerialLayeredBfs;
     use crate::graph::{EdgeList, RmatConfig};
+    use crate::simd::ops::Vpu;
     use crate::PRED_INFINITY;
 
     fn rmat(scale: u32, ef: usize, seed: u64) -> Csr {
@@ -606,7 +645,7 @@ mod tests {
     fn matches_serial_all_policies() {
         let g = rmat(10, 8, 31);
         for policy in [LayerPolicy::All, LayerPolicy::None, LayerPolicy::FirstK(2), LayerPolicy::heavy()] {
-            assert_matches_serial(&g, 0, VectorizedBfs { num_threads: 2, opts: SimdOpts::full(), policy });
+            assert_matches_serial(&g, 0, VectorizedBfs { num_threads: 2, opts: SimdOpts::full(), policy, ..Default::default() });
         }
     }
 
@@ -617,7 +656,7 @@ mod tests {
             assert_matches_serial(
                 &g,
                 5,
-                VectorizedBfs { num_threads: 4, opts, policy: LayerPolicy::All },
+                VectorizedBfs { num_threads: 4, opts, policy: LayerPolicy::All, ..Default::default() },
             );
         }
     }
@@ -628,8 +667,13 @@ mod tests {
         // intra-vector scatter conflicts.
         let el = EdgeList::with_edges(64, (1..64).map(|i| (0u32, i as Vertex)).collect());
         let g = Csr::from_edge_list(0, &el);
-        let r = VectorizedBfs { num_threads: 1, opts: SimdOpts::full(), policy: LayerPolicy::All }
-            .run(&g, 0);
+        let r = VectorizedBfs {
+            num_threads: 1,
+            opts: SimdOpts::full(),
+            policy: LayerPolicy::All,
+            vpu: VpuMode::Counted,
+        }
+        .run(&g, 0);
         let vpu = r.trace.vpu_totals();
         assert!(vpu.scatter_conflicts > 0, "dense children must collide in words");
         let fixed: usize = r.trace.layers.iter().map(|l| l.restore_fixed).sum();
@@ -641,14 +685,24 @@ mod tests {
     #[test]
     fn aligned_mode_uses_full_chunks() {
         let g = rmat(11, 16, 33);
-        let full = VectorizedBfs { num_threads: 2, opts: SimdOpts::full(), policy: LayerPolicy::All }
-            .run(&g, 0);
+        let full = VectorizedBfs {
+            num_threads: 2,
+            opts: SimdOpts::full(),
+            policy: LayerPolicy::All,
+            vpu: VpuMode::Counted,
+        }
+        .run(&g, 0);
         let c = full.trace.vpu_totals();
         assert!(c.full_chunks > 0);
         assert!(c.vector_loads > 0);
         // unaligned mode must not use full loads
-        let noopt = VectorizedBfs { num_threads: 2, opts: SimdOpts::none(), policy: LayerPolicy::All }
-            .run(&g, 0);
+        let noopt = VectorizedBfs {
+            num_threads: 2,
+            opts: SimdOpts::none(),
+            policy: LayerPolicy::All,
+            vpu: VpuMode::Counted,
+        }
+        .run(&g, 0);
         let c2 = noopt.trace.vpu_totals();
         assert_eq!(c2.vector_loads, 0);
         assert_eq!(c2.full_chunks, 0);
@@ -658,13 +712,19 @@ mod tests {
     #[test]
     fn prefetch_counters_only_with_prefetch() {
         let g = rmat(9, 8, 34);
-        let with = VectorizedBfs { num_threads: 1, opts: SimdOpts::full(), policy: LayerPolicy::All }
-            .run(&g, 0);
+        let with = VectorizedBfs {
+            num_threads: 1,
+            opts: SimdOpts::full(),
+            policy: LayerPolicy::All,
+            vpu: VpuMode::Counted,
+        }
+        .run(&g, 0);
         assert!(with.trace.vpu_totals().prefetch_l1 > 0);
         let without = VectorizedBfs {
             num_threads: 1,
             opts: SimdOpts::aligned_masks(),
             policy: LayerPolicy::All,
+            vpu: VpuMode::Counted,
         }
         .run(&g, 0);
         let c = without.trace.vpu_totals();
@@ -678,6 +738,7 @@ mod tests {
             num_threads: 2,
             opts: SimdOpts::full(),
             policy: LayerPolicy::FirstK(2),
+            ..Default::default()
         }
         .run(&g, 0);
         let vec_layers: Vec<bool> = r.trace.layers.iter().map(|l| l.vectorized).collect();
@@ -704,8 +765,13 @@ mod tests {
     #[test]
     fn vector_efficiency_reported() {
         let g = rmat(11, 16, 37);
-        let r = VectorizedBfs { num_threads: 1, opts: SimdOpts::full(), policy: LayerPolicy::All }
-            .run(&g, 0);
+        let r = VectorizedBfs {
+            num_threads: 1,
+            opts: SimdOpts::full(),
+            policy: LayerPolicy::All,
+            vpu: VpuMode::Counted,
+        }
+        .run(&g, 0);
         let eff = r.trace.vpu_totals().vector_efficiency();
         assert!(eff > 0.0 && eff <= 1.0);
     }
@@ -745,7 +811,7 @@ mod tests {
         let (o1, v1, p1) = mk();
         let s1 = restore_layer(1, &o1, &v1, &p1, nodes);
         let (o2, v2, p2) = mk();
-        let (s2, _) = restore_layer_simd(1, &o2, &v2, &p2, nodes);
+        let (s2, _) = restore_layer_simd::<Vpu>(1, &o2, &v2, &p2, nodes);
         assert_eq!(s1.repaired, s2.repaired);
         assert_eq!(s1.lost_bits_fixed, s2.lost_bits_fixed);
         assert_eq!(o1.snapshot().words(), o2.snapshot().words());

@@ -11,7 +11,12 @@ fn main() {
     let el = RmatConfig::graph500(scale, 16).generate(1);
     let g = Csr::from_edge_list(scale, &el);
     let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
-    let alg = VectorizedBfs { num_threads: 1, opts: SimdOpts::full(), policy: LayerPolicy::All };
+    let alg = VectorizedBfs {
+        num_threads: 1,
+        opts: SimdOpts::full(),
+        policy: LayerPolicy::All,
+        ..Default::default()
+    };
     // prepare once outside the timed loop — profile the traversal hot path
     let prepared = alg.prepare(&g).expect("prepare");
     let t0 = std::time::Instant::now();

@@ -108,6 +108,13 @@ COMMANDS:
                          others reject it)
                --alpha N (14) --beta N (24)  Beamer switch thresholds
                         (hybrid engines only; must be >= 1)
+               --vpu counted|hw|auto (counted)  VPU backend: counted
+                        emulation (feeds cost model + occupancy feedback),
+                        hardware SIMD (AVX-512/AVX2/portable, counters
+                        off), or auto (counted warm-up roots feed the
+                        policy, steady-state roots run hw and warm-ups
+                        are excluded from TEPS). VPU engines only.
+                        PHIBFS_VPU sets the process-wide default.
     model      Predict Xeon Phi TEPS for a thread/affinity sweep
                --scale N (20: uses the paper's Table 1 profile)
                --threads-list 1,2,48,236 --affinity balanced|compact|

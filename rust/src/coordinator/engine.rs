@@ -31,6 +31,7 @@ use crate::bfs::serial::{SerialLayeredBfs, SerialQueueBfs};
 use crate::bfs::vectorized::{SimdOpts, VectorizedBfs};
 use crate::bfs::BfsEngine;
 use crate::runtime::bfs::PjrtBfs;
+use crate::simd::VpuMode;
 
 /// Which engine a job should run on.
 #[derive(Clone, Debug, PartialEq)]
@@ -43,11 +44,13 @@ pub enum EngineKind {
     NonSimd { threads: usize },
     /// Algorithm 3 — scalar, no atomics, restoration.
     BitRaceFree { threads: usize },
-    /// §4 — the vectorized algorithm (the `simd` curve).
-    Simd { threads: usize, opts: SimdOpts, policy: LayerPolicy },
+    /// §4 — the vectorized algorithm (the `simd` curve). `vpu` selects
+    /// the backend mode (counted emulation / hardware SIMD / auto) for
+    /// this and every vectorized kind below.
+    Simd { threads: usize, opts: SimdOpts, policy: LayerPolicy, vpu: VpuMode },
     /// SELL-16-σ extension — lane-packed exploration over the sliced-
     /// ELLPACK layout (16 distinct frontier vertices per VPU issue).
-    Sell { threads: usize, opts: SimdOpts, policy: LayerPolicy, sigma: usize },
+    Sell { threads: usize, opts: SimdOpts, policy: LayerPolicy, sigma: usize, vpu: VpuMode },
     /// §8 extension — direction-optimizing hybrid (Beamer-style) with a
     /// vectorized bottom-up scan; `sell` routes the top-down phases through
     /// the SELL lane-packed step, `bu_sell` lane-packs the bottom-up phase
@@ -62,11 +65,12 @@ pub enum EngineKind {
         sigma: usize,
         alpha: usize,
         beta: usize,
+        vpu: VpuMode,
     },
     /// Batch-first MS-BFS extension — up to 16 roots traverse the SELL
     /// layout concurrently (one visit-mask bit per root); single roots run
     /// as a one-bit wave. `sigma`/`alpha`/`beta` as for `Hybrid`.
-    MultiSource { threads: usize, sigma: usize, alpha: usize, beta: usize },
+    MultiSource { threads: usize, sigma: usize, alpha: usize, beta: usize, vpu: VpuMode },
     /// The AOT JAX/Pallas kernel through PJRT.
     Pjrt { artifact_dir: String },
 }
@@ -103,6 +107,23 @@ impl EngineKind {
             sigma: SIGMA_AUTO,
             alpha: HybridBfs::DEFAULT_ALPHA,
             beta: HybridBfs::DEFAULT_BETA,
+            vpu: VpuMode::default(),
+        }
+    }
+
+    /// Set the VPU backend mode on kinds that drive the vector unit.
+    /// Returns `false` (and leaves the kind untouched) for the scalar
+    /// rungs of the ladder and `pjrt`, which have no VPU.
+    pub fn set_vpu(&mut self, mode: VpuMode) -> bool {
+        match self {
+            EngineKind::Simd { vpu, .. }
+            | EngineKind::Sell { vpu, .. }
+            | EngineKind::Hybrid { vpu, .. }
+            | EngineKind::MultiSource { vpu, .. } => {
+                *vpu = mode;
+                true
+            }
+            _ => false,
         }
     }
 
@@ -129,16 +150,19 @@ impl EngineKind {
                 threads,
                 opts: SimdOpts::full(),
                 policy: LayerPolicy::heavy(),
+                vpu: VpuMode::default(),
             },
             "simd-noopt" => EngineKind::Simd {
                 threads,
                 opts: SimdOpts::none(),
                 policy: LayerPolicy::heavy(),
+                vpu: VpuMode::default(),
             },
             "simd-nopf" => EngineKind::Simd {
                 threads,
                 opts: SimdOpts::aligned_masks(),
                 policy: LayerPolicy::heavy(),
+                vpu: VpuMode::default(),
             },
             // lane packing keeps low-degree layers efficient, so the sell
             // engines vectorize every layer (no §4.1 scalar fallback); σ is
@@ -148,12 +172,14 @@ impl EngineKind {
                 opts: SimdOpts::full(),
                 policy: LayerPolicy::All,
                 sigma: SIGMA_AUTO,
+                vpu: VpuMode::default(),
             },
             "sell-noopt" => EngineKind::Sell {
                 threads,
                 opts: SimdOpts::none(),
                 policy: LayerPolicy::All,
                 sigma: SIGMA_AUTO,
+                vpu: VpuMode::default(),
             },
             "hybrid" => Self::hybrid(threads, true, false, false),
             "hybrid-scalar" => Self::hybrid(threads, false, false, false),
@@ -167,6 +193,7 @@ impl EngineKind {
                 sigma: SIGMA_AUTO,
                 alpha: HybridBfs::DEFAULT_ALPHA,
                 beta: HybridBfs::DEFAULT_BETA,
+                vpu: VpuMode::default(),
             },
             "pjrt" => EngineKind::Pjrt { artifact_dir: artifact_dir.to_string() },
             other => anyhow::bail!(
@@ -190,18 +217,20 @@ pub fn make_engine(kind: &EngineKind) -> Result<Box<dyn BfsEngine>> {
         EngineKind::BitRaceFree { threads } => {
             Box::new(BitRaceFreeBfs { num_threads: *threads })
         }
-        EngineKind::Simd { threads, opts, policy } => Box::new(VectorizedBfs {
+        EngineKind::Simd { threads, opts, policy, vpu } => Box::new(VectorizedBfs {
             num_threads: *threads,
             opts: *opts,
             policy: *policy,
+            vpu: *vpu,
         }),
-        EngineKind::Sell { threads, opts, policy, sigma } => Box::new(SellBfs {
+        EngineKind::Sell { threads, opts, policy, sigma, vpu } => Box::new(SellBfs {
             num_threads: *threads,
             opts: *opts,
             policy: *policy,
             sigma: *sigma,
+            vpu: *vpu,
         }),
-        EngineKind::Hybrid { threads, simd, sell, bu_sell, sigma, alpha, beta } => {
+        EngineKind::Hybrid { threads, simd, sell, bu_sell, sigma, alpha, beta, vpu } => {
             Box::new(HybridBfs {
                 num_threads: *threads,
                 simd: *simd,
@@ -210,15 +239,17 @@ pub fn make_engine(kind: &EngineKind) -> Result<Box<dyn BfsEngine>> {
                 sigma: *sigma,
                 alpha: *alpha,
                 beta: *beta,
+                vpu: *vpu,
                 ..Default::default()
             })
         }
-        EngineKind::MultiSource { threads, sigma, alpha, beta } => {
+        EngineKind::MultiSource { threads, sigma, alpha, beta, vpu } => {
             Box::new(MultiSourceSellBfs {
                 num_threads: *threads,
                 sigma: *sigma,
                 alpha: *alpha,
                 beta: *beta,
+                vpu: *vpu,
                 ..Default::default()
             })
         }
@@ -254,12 +285,18 @@ mod tests {
             EngineKind::SerialLayered,
             EngineKind::NonSimd { threads: 2 },
             EngineKind::BitRaceFree { threads: 2 },
-            EngineKind::Simd { threads: 2, opts: SimdOpts::full(), policy: LayerPolicy::All },
+            EngineKind::Simd {
+                threads: 2,
+                opts: SimdOpts::full(),
+                policy: LayerPolicy::All,
+                vpu: VpuMode::default(),
+            },
             EngineKind::Sell {
                 threads: 2,
                 opts: SimdOpts::full(),
                 policy: LayerPolicy::All,
                 sigma: SIGMA_AUTO,
+                vpu: VpuMode::default(),
             },
         ] {
             assert!(make_engine(&kind).is_ok(), "{kind:?}");
@@ -270,7 +307,7 @@ mod tests {
     fn hybrid_sell_ms_parses_to_multi_source() {
         let kind = EngineKind::parse("hybrid-sell-ms", 4, "artifacts").unwrap();
         match kind {
-            EngineKind::MultiSource { threads: 4, sigma, alpha, beta } => {
+            EngineKind::MultiSource { threads: 4, sigma, alpha, beta, .. } => {
                 assert_eq!(sigma, SIGMA_AUTO);
                 assert_eq!(alpha, HybridBfs::DEFAULT_ALPHA);
                 assert_eq!(beta, HybridBfs::DEFAULT_BETA);
@@ -321,6 +358,20 @@ mod tests {
     }
 
     #[test]
+    fn set_vpu_covers_exactly_the_vpu_engines() {
+        for name in EngineKind::NATIVE_NAMES {
+            let mut kind = EngineKind::parse(name, 2, "artifacts").unwrap();
+            let has_vpu = !matches!(
+                *name,
+                "serial" | "serial-queue" | "non-simd" | "bitrace-free"
+            );
+            assert_eq!(kind.set_vpu(VpuMode::Hw), has_vpu, "{name}");
+        }
+        let mut pjrt = EngineKind::Pjrt { artifact_dir: "artifacts".into() };
+        assert!(!pjrt.set_vpu(VpuMode::Hw));
+    }
+
+    #[test]
     fn engines_run_and_agree() {
         use crate::graph::{Csr, RmatConfig};
         let el = RmatConfig::graph500(9, 8).generate(50);
@@ -330,18 +381,25 @@ mod tests {
             EngineKind::SerialQueue,
             EngineKind::NonSimd { threads: 2 },
             EngineKind::BitRaceFree { threads: 2 },
-            EngineKind::Simd { threads: 2, opts: SimdOpts::full(), policy: LayerPolicy::All },
+            EngineKind::Simd {
+                threads: 2,
+                opts: SimdOpts::full(),
+                policy: LayerPolicy::All,
+                vpu: VpuMode::default(),
+            },
             EngineKind::Sell {
                 threads: 2,
                 opts: SimdOpts::full(),
                 policy: LayerPolicy::All,
                 sigma: SIGMA_AUTO,
+                vpu: VpuMode::default(),
             },
             EngineKind::Sell {
                 threads: 2,
                 opts: SimdOpts::none(),
                 policy: LayerPolicy::heavy(),
                 sigma: SIGMA_AUTO,
+                vpu: VpuMode::default(),
             },
             EngineKind::hybrid(2, true, false, false),
             EngineKind::hybrid(2, false, false, false),

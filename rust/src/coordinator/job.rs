@@ -78,6 +78,13 @@ pub struct RootRun {
     /// prepare-once architecture saves per root.
     pub preparation_seconds: f64,
     pub trace: RunTrace,
+    /// This root ran on the counted emulator as a [`VpuMode::Auto`]
+    /// warm-up (copied from the trace): its `seconds` are emulation
+    /// timings, so TEPS aggregates exclude it
+    /// ([`crate::harness::stats::TepsStats`]).
+    ///
+    /// [`VpuMode::Auto`]: crate::simd::VpuMode::Auto
+    pub counted_warmup: bool,
     /// Validation report (None when the job ran with validate=false).
     pub validation: Option<ValidationReport>,
 }
@@ -135,6 +142,7 @@ mod tests {
             seconds: 0.01,
             preparation_seconds: 0.0,
             trace: RunTrace::default(),
+            counted_warmup: false,
             validation: None,
         };
         assert_eq!(r.teps(), 0.0);
@@ -149,6 +157,7 @@ mod tests {
             seconds: 0.5,
             preparation_seconds: 0.0,
             trace: RunTrace::default(),
+            counted_warmup: false,
             validation: None,
         };
         assert_eq!(r.teps(), 2_000_000.0);

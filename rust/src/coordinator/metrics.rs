@@ -52,9 +52,19 @@ impl Metrics {
         self.jobs.fetch_add(1, Ordering::Relaxed);
         self.roots.fetch_add(runs.len(), Ordering::Relaxed);
         self.batches.fetch_add(batches, Ordering::Relaxed);
-        let edges: u64 = runs.iter().map(|r| r.edges_traversed as u64).sum();
+        // counted warm-up roots (`--vpu auto`) carry emulation timings;
+        // keep them out of the throughput aggregate — same rule as
+        // `TepsStats`, including the all-warm-up fallback so a job made
+        // entirely of warm-ups still registers
+        let any_measured = runs.iter().any(|r| !r.counted_warmup);
+        let measured = runs.iter().filter(|r| !any_measured || !r.counted_warmup);
+        let mut edges = 0u64;
+        let mut nanos = 0u64;
+        for r in measured {
+            edges += r.edges_traversed as u64;
+            nanos += (r.seconds * 1e9) as u64;
+        }
         self.edges.fetch_add(edges, Ordering::Relaxed);
-        let nanos: u64 = runs.iter().map(|r| (r.seconds * 1e9) as u64).sum();
         self.nanos.fetch_add(nanos, Ordering::Relaxed);
         self.prep_nanos.fetch_add((preparation_seconds * 1e9) as u64, Ordering::Relaxed);
     }
@@ -101,6 +111,7 @@ mod tests {
             seconds,
             preparation_seconds: 0.0,
             trace: RunTrace::default(),
+            counted_warmup: false,
             validation: None,
         }
     }
@@ -133,6 +144,23 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.roots, 3);
         assert_eq!(s.batches, 1);
+    }
+
+    #[test]
+    fn warmup_roots_excluded_from_aggregate_teps() {
+        let warm = |edges: usize, seconds: f64| RootRun { counted_warmup: true, ..run(edges, seconds) };
+        let m = Metrics::default();
+        // two slow emulated warm-ups + one fast hw root: the aggregate
+        // must reflect only the hw root
+        m.record_job(&[warm(100, 10.0), warm(100, 10.0), run(1000, 0.001)], 0.0, 3);
+        let s = m.snapshot();
+        assert_eq!(s.roots, 3);
+        assert_eq!(s.edges_traversed, 1000);
+        assert!(s.aggregate_teps > 100_000.0, "warm-ups dragged TEPS: {}", s.aggregate_teps);
+        // all-warm-up fallback: the emulated numbers still register
+        let m = Metrics::default();
+        m.record_job(&[warm(100, 1.0)], 0.0, 1);
+        assert_eq!(m.snapshot().edges_traversed, 100);
     }
 
     #[test]

@@ -196,6 +196,7 @@ impl Coordinator {
                                 reached: r.tree.reached_count(),
                                 seconds,
                                 preparation_seconds: prep_share,
+                                counted_warmup: r.trace.counted_warmup,
                                 trace: r.trace,
                                 validation,
                             }
@@ -465,6 +466,7 @@ mod tests {
                 threads: 1,
                 opts: crate::bfs::vectorized::SimdOpts::full(),
                 policy: crate::bfs::policy::LayerPolicy::All,
+                vpu: crate::simd::VpuMode::default(),
             },
             vec![3, 9],
         );

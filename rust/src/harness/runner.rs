@@ -192,9 +192,39 @@ mod tests {
             threads: 2,
             opts: SimdOpts::full(),
             policy: LayerPolicy::heavy(),
+            vpu: crate::simd::VpuMode::default(),
         });
         exp.num_roots = 4;
         let report = exp.run().unwrap();
         assert!(report.all_valid);
+    }
+
+    #[test]
+    fn auto_mode_flags_and_excludes_warmup_roots() {
+        use crate::simd::{VpuMode, AUTO_WARMUP_ROOTS};
+        // --vpu auto end to end: a single worker runs the first roots on
+        // the counted emulator (flagged), the rest on hardware; TEPS
+        // stats exclude exactly the warm-ups
+        let mut engine = EngineKind::parse("sell", 2, "artifacts").unwrap();
+        assert!(engine.set_vpu(VpuMode::Auto));
+        let mut exp = Experiment::new(9, 8, engine);
+        exp.num_roots = 6;
+        exp.workers = 1;
+        let report = exp.run().unwrap();
+        assert!(report.all_valid, "auto-mode runs must validate");
+        let warmups = report.runs.iter().filter(|r| r.counted_warmup).count();
+        assert_eq!(warmups, AUTO_WARMUP_ROOTS, "sequential worker: exact warm-up count");
+        assert!(report.runs[0].counted_warmup && !report.runs[5].counted_warmup);
+        assert_eq!(report.stats.counted_warmup_excluded, warmups);
+        assert_eq!(report.stats.runs, 6 - warmups);
+        // steady-state roots ran uncounted — the hardware backend
+        // records no VPU events at all
+        let steady_issues: u64 = report
+            .runs
+            .iter()
+            .filter(|r| !r.counted_warmup)
+            .map(|r| r.trace.vpu_totals().explore_issues)
+            .sum();
+        assert_eq!(steady_issues, 0);
     }
 }

@@ -30,6 +30,14 @@ pub struct TepsStats {
     /// summed back here — the Graph500 kernel-1-style split. TEPS above
     /// are pure traversal; this is what prepare-once saves per root.
     pub preparation_seconds: f64,
+    /// Roots excluded from the TEPS statistics because they ran on the
+    /// counted emulator as `--vpu auto` warm-ups
+    /// ([`crate::coordinator::job::RootRun::counted_warmup`]): emulated
+    /// timings would drag every aggregate, so only hardware-steady-state
+    /// roots are measured. 0 unless auto mode ran (and 0 — with the
+    /// warm-ups measured normally — in the degenerate case where *every*
+    /// root was a warm-up, so small runs still report numbers).
+    pub counted_warmup_excluded: usize,
 }
 
 impl TepsStats {
@@ -59,12 +67,26 @@ impl TepsStats {
             harmonic_mean_graph500,
             harmonic_mean_filtered,
             preparation_seconds: 0.0,
+            counted_warmup_excluded: 0,
         }
     }
 
     pub fn from_runs(runs: &[RootRun]) -> Self {
-        let teps: Vec<f64> = runs.iter().map(|r| r.teps()).collect();
+        // exclude counted warm-up roots (auto mode) from the TEPS
+        // aggregates — unless every root was a warm-up, in which case the
+        // emulated numbers are all there is and excluding them would
+        // yield an empty report
+        let measured: Vec<f64> =
+            runs.iter().filter(|r| !r.counted_warmup).map(|r| r.teps()).collect();
+        let (teps, excluded) = if measured.is_empty() {
+            (runs.iter().map(|r| r.teps()).collect::<Vec<f64>>(), 0)
+        } else {
+            let excluded = runs.len() - measured.len();
+            (measured, excluded)
+        };
         let mut stats = Self::from_teps(&teps);
+        stats.counted_warmup_excluded = excluded;
+        // preparation was paid for every root, warm-up or not
         stats.preparation_seconds = runs.iter().map(|r| r.preparation_seconds).sum();
         stats
     }
@@ -104,6 +126,34 @@ mod tests {
     #[test]
     fn empty() {
         assert_eq!(TepsStats::from_teps(&[]).runs, 0);
+    }
+
+    #[test]
+    fn warmup_runs_excluded_from_aggregates() {
+        use crate::bfs::RunTrace;
+        let mk = |teps_edges: usize, warm: bool| RootRun {
+            root: 0,
+            edges_traversed: teps_edges,
+            reached: 10,
+            seconds: 1.0,
+            preparation_seconds: 0.5,
+            trace: RunTrace::default(),
+            counted_warmup: warm,
+            validation: None,
+        };
+        // two slow counted warm-ups, two fast hw roots
+        let runs = vec![mk(10, true), mk(10, true), mk(1000, false), mk(1000, false)];
+        let s = TepsStats::from_runs(&runs);
+        assert_eq!(s.runs, 2, "only steady-state roots are measured");
+        assert_eq!(s.counted_warmup_excluded, 2);
+        assert_eq!(s.min, 1000.0, "warm-up timings must not drag the stats");
+        assert!((s.preparation_seconds - 2.0).abs() < 1e-12, "prep sums over ALL roots");
+        // all-warm-up degenerate case: measure everything, exclude nothing
+        let all_warm = vec![mk(10, true), mk(20, true)];
+        let s = TepsStats::from_runs(&all_warm);
+        assert_eq!(s.runs, 2);
+        assert_eq!(s.counted_warmup_excluded, 0);
+        assert_eq!(s.max, 20.0);
     }
 
     #[test]

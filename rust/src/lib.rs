@@ -20,7 +20,10 @@
 //! * [`simd`] — a faithful 16-lane × 32-bit emulation of the Knights-Corner
 //!   vector unit (the exact intrinsics of the paper's Listing 1, including
 //!   the scatter write-conflict hazard the restoration process exists for),
-//!   with per-issue lane-occupancy counters.
+//!   with per-issue lane-occupancy counters — and, behind the same
+//!   [`simd::VpuBackend`] surface, zero-counter hardware tiers (AVX-512
+//!   opt-in / AVX2 double-pump / portable unrolled) selected per run with
+//!   `--vpu counted|hw|auto`.
 //! * [`bfs`] — the paper's algorithm ladder: serial (Alg 1), parallel
 //!   non-SIMD (Alg 2), bit-race-free with restoration (Alg 3), the
 //!   vectorized version (Listing 1), and the SELL-16-σ lane-packed

@@ -79,6 +79,21 @@ fn cmd_run(args: &Args) -> Result<()> {
         ),
         _ => {}
     }
+    // --vpu selects the backend for engines that drive the vector unit:
+    // counted emulation (default; feeds the cost model + occupancy
+    // feedback), hardware SIMD, or auto (counted warm-up roots, hardware
+    // steady state). Scalar engines have no VPU and refuse the flag.
+    let vpu_flag = args.get_str("vpu", "");
+    if !vpu_flag.is_empty() {
+        let mode = phi_bfs::simd::VpuMode::parse(&vpu_flag)
+            .ok_or_else(|| anyhow::anyhow!("--vpu: expected counted, hw or auto (got {vpu_flag:?})"))?;
+        if !engine.set_vpu(mode) {
+            anyhow::bail!(
+                "--vpu only applies to engines with a VPU (simd*, sell*, hybrid*); \
+                 got --engine {engine_name}"
+            );
+        }
+    }
     // --alpha/--beta tune the direction-optimizing switches; fail fast on
     // values that would degenerate them (the engine's prepare re-checks)
     match &mut engine {
@@ -112,6 +127,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         "graph500 run: SCALE={scale} edgefactor={edgefactor} engine={engine_name} threads={threads} roots={}",
         exp.num_roots
     );
+    if !vpu_flag.is_empty() {
+        println!(
+            "vpu backend: {vpu_flag} (detected hw tier: {})",
+            phi_bfs::simd::detect_hw_select().name()
+        );
+    }
     if exp.batch_roots > 1 {
         println!(
             "batching: up to {} roots per traversal batch{}",
@@ -140,6 +161,20 @@ fn cmd_run(args: &Args) -> Result<()> {
         s.zero_runs,
         if report.all_valid { "all 5 checks passed" } else { "FAILED" }
     );
+    let warmup_roots = report.runs.iter().filter(|r| r.counted_warmup).count();
+    if s.counted_warmup_excluded > 0 {
+        println!(
+            "({} counted warm-up roots excluded from TEPS — emulated timings)",
+            s.counted_warmup_excluded
+        );
+    } else if warmup_roots > 0 {
+        // every root was a warm-up: nothing could be excluded, so the
+        // TEPS above ARE emulation timings — say so
+        println!(
+            "(all {warmup_roots} roots were counted warm-ups — the TEPS above are \
+             emulated, not hardware, timings; run more roots for hw steady state)"
+        );
+    }
     println!(
         "TEPS  min {}  max {}  mean {}  harmonic(graph500) {}  harmonic(filtered) {}",
         sci(s.min),

@@ -184,7 +184,7 @@ impl PreparedPjrt<'_> {
         pred.truncate(n);
         Ok(BfsResult {
             tree: BfsTree::new(root, pred),
-            trace: RunTrace { layers, num_threads: 1 },
+            trace: RunTrace { layers, num_threads: 1, ..Default::default() },
         })
     }
 }

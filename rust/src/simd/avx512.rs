@@ -1,0 +1,260 @@
+//! The native AVX-512 tier of the hardware VPU backend (`--features
+//! avx512`, x86_64 only).
+//!
+//! This is the paper's actual target ISA: one 512-bit register holds all
+//! 16 lanes and `__mmask16` *is* [`Mask16`], so the Listing-1 dataflow
+//! maps 1:1 onto single instructions — no double-pumping, no mask
+//! expansion. The tier is opt-in because the 512-bit intrinsic surface
+//! stabilized in rustc 1.89; the default build ships the AVX2/portable
+//! tiers so older toolchains keep compiling. [`crate::simd::hw::detect_hw_select`]
+//! only returns this tier when the feature is compiled in **and** the CPU
+//! reports `avx512f`.
+//!
+//! Scatters and the shared-memory ops inherit the scalar-unrolled
+//! defaults for the same reasons as the AVX2 tier (lane-conflict rule
+//! preserved bit for bit; no vector access to atomics in Rust's memory
+//! model) — see [`crate::simd::hw`].
+//!
+//! # Safety
+//!
+//! All `#[target_feature(enable = "avx512f")]` helpers are only reachable
+//! through [`HwAvx512`], which is only constructed after
+//! `is_x86_feature_detected!("avx512f")` (debug-asserted in `new`).
+//! Gathers do no bounds checks; the safe wrappers `debug_assert!` every
+//! enabled lane in range, mirroring the AVX2 tier.
+
+use core::arch::x86_64::*;
+
+use super::backend::{gather_in_bounds, VpuBackend};
+use super::counters::VpuCounters;
+use super::vec512::{Mask16, VecI32x16};
+
+/// Native AVX-512 backend: 16 lanes per instruction, counters off.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HwAvx512;
+
+#[inline(always)]
+fn to512(v: VecI32x16) -> __m512i {
+    // SAFETY: [i32; 16] and __m512i are both 64 plain bytes
+    unsafe { core::mem::transmute::<[i32; 16], __m512i>(v.0) }
+}
+
+#[inline(always)]
+fn from512(x: __m512i) -> VecI32x16 {
+    // SAFETY: as in to512
+    VecI32x16(unsafe { core::mem::transmute::<__m512i, [i32; 16]>(x) })
+}
+
+macro_rules! avx512_binop {
+    ($fn_name:ident, $intrinsic:ident) => {
+        #[target_feature(enable = "avx512f")]
+        unsafe fn $fn_name(a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+            from512($intrinsic(to512(a), to512(b)))
+        }
+    };
+}
+
+avx512_binop!(and_avx512, _mm512_and_epi32);
+avx512_binop!(or_avx512, _mm512_or_epi32);
+avx512_binop!(andnot_avx512, _mm512_andnot_epi32);
+avx512_binop!(add_avx512, _mm512_add_epi32);
+avx512_binop!(sub_avx512, _mm512_sub_epi32);
+
+macro_rules! avx512_varshift {
+    ($fn_name:ident, $intrinsic:ident) => {
+        #[target_feature(enable = "avx512f")]
+        unsafe fn $fn_name(a: VecI32x16, counts: VecI32x16) -> VecI32x16 {
+            // match the portable spec: shift counts masked to 5 bits
+            let m31 = _mm512_set1_epi32(31);
+            from512($intrinsic(to512(a), _mm512_and_epi32(to512(counts), m31)))
+        }
+    };
+}
+
+avx512_varshift!(sllv_avx512, _mm512_sllv_epi32);
+avx512_varshift!(srlv_avx512, _mm512_srlv_epi32);
+
+#[target_feature(enable = "avx512f")]
+unsafe fn test_mask_avx512(a: VecI32x16, b: VecI32x16) -> Mask16 {
+    Mask16(_mm512_test_epi32_mask(to512(a), to512(b)))
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn cmplt_mask_avx512(a: VecI32x16, b: VecI32x16) -> Mask16 {
+    Mask16(_mm512_cmplt_epi32_mask(to512(a), to512(b)))
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn mask_or_avx512(src: VecI32x16, mask: Mask16, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+    from512(_mm512_mask_or_epi32(to512(src), mask.0, to512(a), to512(b)))
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn reduce_or_avx512(mask: Mask16, v: VecI32x16) -> i32 {
+    _mm512_mask_reduce_or_epi32(mask.0, to512(v))
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn gather_avx512(base: *const u8, vindex: VecI32x16) -> VecI32x16 {
+    from512(_mm512_i32gather_epi32::<4>(to512(vindex), base))
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn mask_gather_avx512(base: *const u8, vindex: VecI32x16, mask: Mask16) -> VecI32x16 {
+    // disabled lanes take the zero src operand — the portable spec
+    from512(_mm512_mask_i32gather_epi32::<4>(
+        _mm512_setzero_si512(),
+        mask.0,
+        to512(vindex),
+        base,
+    ))
+}
+
+impl VpuBackend for HwAvx512 {
+    const NAME: &'static str = "avx512";
+    const COUNTED: bool = false;
+
+    #[inline(always)]
+    fn new() -> Self {
+        debug_assert!(
+            std::arch::is_x86_feature_detected!("avx512f"),
+            "HwAvx512 constructed without AVX-512F support"
+        );
+        HwAvx512
+    }
+
+    #[inline(always)]
+    fn counters(&self) -> VpuCounters {
+        VpuCounters::default()
+    }
+
+    #[inline(always)]
+    fn sllv_epi32(&mut self, a: VecI32x16, counts: VecI32x16) -> VecI32x16 {
+        // SAFETY: AVX-512F detected at construction
+        unsafe { sllv_avx512(a, counts) }
+    }
+
+    #[inline(always)]
+    fn srlv_epi32(&mut self, a: VecI32x16, counts: VecI32x16) -> VecI32x16 {
+        // SAFETY: AVX-512F detected at construction
+        unsafe { srlv_avx512(a, counts) }
+    }
+
+    #[inline(always)]
+    fn and_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        // SAFETY: AVX-512F detected at construction
+        unsafe { and_avx512(a, b) }
+    }
+
+    #[inline(always)]
+    fn andnot_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        // SAFETY: AVX-512F detected at construction
+        unsafe { andnot_avx512(a, b) }
+    }
+
+    #[inline(always)]
+    fn or_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        // SAFETY: AVX-512F detected at construction
+        unsafe { or_avx512(a, b) }
+    }
+
+    #[inline(always)]
+    fn add_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        // SAFETY: AVX-512F detected at construction
+        unsafe { add_avx512(a, b) }
+    }
+
+    #[inline(always)]
+    fn sub_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        // SAFETY: AVX-512F detected at construction
+        unsafe { sub_avx512(a, b) }
+    }
+
+    #[inline(always)]
+    fn mask_or_epi32(&mut self, src: VecI32x16, mask: Mask16, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        // SAFETY: AVX-512F detected at construction
+        unsafe { mask_or_avx512(src, mask, a, b) }
+    }
+
+    #[inline(always)]
+    fn test_epi32_mask(&mut self, a: VecI32x16, b: VecI32x16) -> Mask16 {
+        // SAFETY: AVX-512F detected at construction
+        unsafe { test_mask_avx512(a, b) }
+    }
+
+    #[inline(always)]
+    fn cmplt_epi32_mask(&mut self, a: VecI32x16, b: VecI32x16) -> Mask16 {
+        // SAFETY: AVX-512F detected at construction
+        unsafe { cmplt_mask_avx512(a, b) }
+    }
+
+    #[inline(always)]
+    fn mask_reduce_or_epi32(&mut self, mask: Mask16, v: VecI32x16) -> i32 {
+        // SAFETY: AVX-512F detected at construction
+        unsafe { reduce_or_avx512(mask, v) }
+    }
+
+    #[inline(always)]
+    fn i32gather_epi32(&mut self, vindex: VecI32x16, base: &[i32]) -> VecI32x16 {
+        debug_assert!(gather_in_bounds(Mask16::ALL, &vindex, base.len()));
+        // SAFETY: AVX-512F detected at construction; indices in bounds by
+        // the engine invariant (debug-asserted above)
+        unsafe { gather_avx512(base.as_ptr() as *const u8, vindex) }
+    }
+
+    #[inline(always)]
+    fn mask_i32gather_epi32(&mut self, mask: Mask16, vindex: VecI32x16, base: &[i32]) -> VecI32x16 {
+        debug_assert!(gather_in_bounds(mask, &vindex, base.len()));
+        // SAFETY: as for i32gather_epi32; disabled lanes do not access
+        // memory
+        unsafe { mask_gather_avx512(base.as_ptr() as *const u8, vindex, mask) }
+    }
+
+    #[inline(always)]
+    fn i32gather_words(&mut self, vindex: VecI32x16, base: &[u32]) -> VecI32x16 {
+        debug_assert!(gather_in_bounds(Mask16::ALL, &vindex, base.len()));
+        // SAFETY: as for i32gather_epi32 (u32 reinterpreted as i32)
+        unsafe { gather_avx512(base.as_ptr() as *const u8, vindex) }
+    }
+
+    #[inline(always)]
+    fn mask_i32gather_words(&mut self, mask: Mask16, vindex: VecI32x16, base: &[u32]) -> VecI32x16 {
+        debug_assert!(gather_in_bounds(mask, &vindex, base.len()));
+        // SAFETY: as for mask_i32gather_epi32
+        unsafe { mask_gather_avx512(base.as_ptr() as *const u8, vindex, mask) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::ops::Vpu;
+
+    #[test]
+    fn avx512_matches_counted_ops() {
+        if !std::arch::is_x86_feature_detected!("avx512f") {
+            eprintln!("skipping: no AVX-512F on this host");
+            return;
+        }
+        let mut c = Vpu::new();
+        let mut h = HwAvx512::new();
+        let a = VecI32x16([3, -7, 0, i32::MAX, i32::MIN, 12, 99, -1, 5, 6, 7, 8, 9, 10, 11, 12]);
+        let b = VecI32x16([1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 31]);
+        assert_eq!(c.and_epi32(a, b), h.and_epi32(a, b));
+        assert_eq!(c.or_epi32(a, b), h.or_epi32(a, b));
+        assert_eq!(c.andnot_epi32(a, b), h.andnot_epi32(a, b));
+        assert_eq!(c.add_epi32(a, b), h.add_epi32(a, b));
+        assert_eq!(c.sub_epi32(a, b), h.sub_epi32(a, b));
+        assert_eq!(c.sllv_epi32(a, b), h.sllv_epi32(a, b));
+        assert_eq!(c.srlv_epi32(a, b), h.srlv_epi32(a, b));
+        assert_eq!(c.test_epi32_mask(a, b), h.test_epi32_mask(a, b));
+        assert_eq!(c.cmplt_epi32_mask(a, b), h.cmplt_epi32_mask(a, b));
+        let m = Mask16(0b0110_1101_1011_0110);
+        assert_eq!(c.mask_or_epi32(a, m, a, b), h.mask_or_epi32(a, m, a, b));
+        assert_eq!(c.mask_reduce_or_epi32(m, b), h.mask_reduce_or_epi32(m, b));
+        let words: Vec<u32> = (0..64u32).map(|x| x.wrapping_mul(0x9E37_79B9)).collect();
+        let idx = VecI32x16([0, 5, 9, 3, 63, 1, 2, 4, 6, 8, 10, 20, 30, 40, 50, 33]);
+        assert_eq!(c.i32gather_words(idx, &words), h.i32gather_words(idx, &words));
+        assert_eq!(c.mask_i32gather_words(m, idx, &words), h.mask_i32gather_words(m, idx, &words));
+    }
+}

@@ -1,0 +1,622 @@
+//! Pluggable VPU backends: the `VpuBackend` trait, backend selection, and
+//! the engine-level dispatch that keeps hot loops monomorphic.
+//!
+//! Every "vectorized" engine in the repo drives its hot loops through the
+//! intrinsic surface of the paper's Listing 1 (set1 / load / mask_load /
+//! gather / scatter / mask ops / andnot / prefetch). Until this module
+//! existed there was exactly one implementation — the **counted emulator**
+//! ([`crate::simd::ops::Vpu`]), which interprets every lane op in scalar
+//! Rust *and* bumps an event counter per instruction so the Xeon Phi cost
+//! model ([`crate::phi`]) and the cross-root occupancy feedback
+//! ([`crate::bfs::policy::PolicyFeedback`]) have data. That interpretation
+//! overhead sat on the hottest loops in the repository.
+//!
+//! [`VpuBackend`] splits the surface from the implementation:
+//!
+//! * **`Counted`** — [`crate::simd::ops::Vpu`], byte-for-byte the old
+//!   emulator (same lane semantics, same lane-ordered scatter conflict
+//!   rule, same counters). The cost model and policy feedback keep
+//!   working unchanged.
+//! * **Hardware backends** ([`crate::simd::hw`]) — the same lane
+//!   semantics with counters compiled to no-ops: a portable
+//!   scalar-unrolled tier (the trait's default method bodies, which LLVM
+//!   auto-vectorizes freely), an AVX2 double-pump tier, and an opt-in
+//!   AVX-512 tier (`--features avx512`). The portable bodies ARE the
+//!   specification: an intrinsic tier may override a method only if it
+//!   preserves the observable semantics bit for bit (the
+//!   backend-equivalence property suite enforces this).
+//!
+//! # Dispatch
+//!
+//! Backends are selected **once per traversal**, never per op: the
+//! [`with_vpu_backend!`](crate::with_vpu_backend) macro matches a
+//! [`VpuSelect`] and binds a concrete backend *type* inside each arm, so
+//! every engine's layer loop monomorphizes per backend and the selection
+//! branch sits entirely outside the hot path. The hardware tier is probed
+//! once per process with `is_x86_feature_detected!` and cached.
+//!
+//! # Modes
+//!
+//! [`VpuMode`] is the user-facing knob (`--vpu counted|hw|auto`):
+//!
+//! * `Counted` — every root runs the counted emulator (the default, and
+//!   the pre-backend behaviour bit for bit).
+//! * `Hw` — every root runs the best detected hardware tier. No counters
+//!   are recorded, so the policy feedback tables stay empty and every
+//!   adaptive choice falls back to its static rule.
+//! * `Auto` — the first [`AUTO_WARMUP_ROOTS`] roots of a prepared engine
+//!   run counted (feeding [`crate::bfs::policy::PolicyFeedback`] real
+//!   occupancy), then steady-state roots run the hardware tier *steered
+//!   by* the warm-up measurements. Warm-up roots are flagged
+//!   (`counted_warmup` on the trace) so TEPS aggregates can exclude the
+//!   emulated timings.
+//!
+//! The default mode can be forced process-wide with the `PHIBFS_VPU`
+//! environment variable (`counted`/`hw`/`auto`) — CI uses `PHIBFS_VPU=hw`
+//! to run the whole test suite on the hardware path.
+
+use std::sync::atomic::{AtomicI32, AtomicU32, Ordering};
+use std::sync::OnceLock;
+
+use super::counters::VpuCounters;
+use super::ops::PrefetchHint;
+use super::vec512::{Mask16, VecI32x16, LANES};
+
+/// Roots a prepared engine runs on the counted backend before [`VpuMode::Auto`]
+/// switches to hardware: root 0 fills the feedback tables, root 1 runs the
+/// bound-guided probes, steady state starts at root 2.
+pub const AUTO_WARMUP_ROOTS: usize = 2;
+
+/// The user-facing backend mode (`--vpu`, `PHIBFS_VPU`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VpuMode {
+    /// Every root runs the counted emulator (pre-backend behaviour).
+    Counted,
+    /// Every root runs the best detected hardware tier.
+    Hw,
+    /// Counted warm-up roots, hardware steady state (see module docs).
+    Auto,
+}
+
+impl VpuMode {
+    /// Parse a CLI value (`counted`, `hw`, `auto`).
+    pub fn parse(s: &str) -> Option<VpuMode> {
+        match s {
+            "counted" => Some(VpuMode::Counted),
+            "hw" => Some(VpuMode::Hw),
+            "auto" => Some(VpuMode::Auto),
+            _ => None,
+        }
+    }
+
+    /// The process-wide default: `PHIBFS_VPU` when set (and valid),
+    /// otherwise [`VpuMode::Counted`]. Read once and cached — the CI
+    /// hardware leg exports `PHIBFS_VPU=hw` to run every engine that was
+    /// constructed with `..Default::default()` on the hardware path.
+    pub fn env_default() -> VpuMode {
+        static ENV: OnceLock<VpuMode> = OnceLock::new();
+        *ENV.get_or_init(|| {
+            std::env::var("PHIBFS_VPU")
+                .ok()
+                .as_deref()
+                .and_then(VpuMode::parse)
+                .unwrap_or(VpuMode::Counted)
+        })
+    }
+}
+
+impl Default for VpuMode {
+    fn default() -> Self {
+        VpuMode::env_default()
+    }
+}
+
+/// A concrete backend choice for one traversal — what the dispatch macro
+/// matches on. `Counted` is the emulator; the `Hw*` variants are the
+/// hardware tiers in preference order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VpuSelect {
+    Counted,
+    /// 512-bit intrinsics (only reachable with `--features avx512` on a
+    /// CPU reporting `avx512f`; otherwise dispatches to the next tier).
+    HwAvx512,
+    /// 2 × 256-bit double-pump intrinsics.
+    HwAvx2,
+    /// Portable scalar-unrolled fallback (the trait's default bodies).
+    HwPortable,
+}
+
+impl VpuSelect {
+    /// Short name for reports and the ablation JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            VpuSelect::Counted => "counted",
+            VpuSelect::HwAvx512 => "avx512",
+            VpuSelect::HwAvx2 => "avx2",
+            VpuSelect::HwPortable => "portable",
+        }
+    }
+}
+
+/// Resolve the backend for one traversal: the mode plus how many roots the
+/// prepared engine has completed (its policy-feedback root count). Returns
+/// the selection and whether this root is a counted **warm-up** root of
+/// [`VpuMode::Auto`] (flagged on the trace, excluded from TEPS
+/// aggregates).
+pub fn resolve(mode: VpuMode, roots_done: usize) -> (VpuSelect, bool) {
+    match mode {
+        VpuMode::Counted => (VpuSelect::Counted, false),
+        VpuMode::Hw => (super::hw::detect_hw_select(), false),
+        VpuMode::Auto => {
+            if roots_done < AUTO_WARMUP_ROOTS {
+                (VpuSelect::Counted, true)
+            } else {
+                (super::hw::detect_hw_select(), false)
+            }
+        }
+    }
+}
+
+/// Bind a concrete backend type for a [`crate::simd::backend::VpuSelect`]
+/// and evaluate `$e` with `$V` as that type — the engine-level dispatch
+/// that keeps hot loops monomorphic (see [`crate::simd::backend`]).
+/// Variants that were compiled out (non-x86, or the `avx512` feature off)
+/// fall back through the [`crate::simd::hw`] type aliases, and
+/// [`crate::simd::hw::detect_hw_select`] never selects a compiled-out
+/// tier anyway.
+#[macro_export]
+macro_rules! with_vpu_backend {
+    ($select:expr, $V:ident, $e:expr) => {
+        match $select {
+            $crate::simd::backend::VpuSelect::Counted => {
+                type $V = $crate::simd::ops::Vpu;
+                $e
+            }
+            $crate::simd::backend::VpuSelect::HwAvx512 => {
+                type $V = $crate::simd::hw::BestAvx512;
+                $e
+            }
+            $crate::simd::backend::VpuSelect::HwAvx2 => {
+                type $V = $crate::simd::hw::BestAvx2;
+                $e
+            }
+            $crate::simd::backend::VpuSelect::HwPortable => {
+                type $V = $crate::simd::hw::HwPortable;
+                $e
+            }
+        }
+    };
+}
+
+/// The VPU intrinsic surface every engine hot loop is written against —
+/// method for method the emulator's API (see [`crate::simd::ops::Vpu`] for
+/// the semantics notes; they are normative for every backend).
+///
+/// The provided method bodies are the **portable scalar-unrolled tier**:
+/// exactly the counted emulator's lane arithmetic with the counters
+/// removed (fixed 16-iteration loops over `[i32; 16]`, which LLVM
+/// vectorizes freely). [`crate::simd::ops::Vpu`] overrides every method
+/// with its counting twin; the intrinsic tiers in [`crate::simd::hw`]
+/// override only the ops they accelerate. Load-bearing semantics every
+/// override must preserve:
+///
+/// * masked ops write only enabled lanes; masked loads/gathers read 0 into
+///   disabled lanes;
+/// * scatters commit lanes in ascending order, so on duplicate indices the
+///   **highest enabled lane wins** (the paper's Fig-6 bitmap race);
+/// * shifts mask their count to 5 bits (`count & 31`);
+/// * shared-memory ops go through the atomic cells with `Relaxed` plain
+///   loads/stores — the algorithmic races are preserved, the
+///   language-level UB is not (which is also why the intrinsic tiers keep
+///   these scalar: Rust's memory model has no vector access to atomics).
+///
+/// `Send` because worker threads each own one backend value.
+pub trait VpuBackend: Send {
+    /// Backend name for reports.
+    const NAME: &'static str;
+    /// Whether [`VpuBackend::counters`] carries real event counts. The
+    /// hardware tiers compile counting to nothing and return zeros.
+    const COUNTED: bool;
+
+    /// A fresh per-thread backend value.
+    fn new() -> Self;
+
+    /// Snapshot of the event counters (all-zero for uncounted backends).
+    fn counters(&self) -> VpuCounters;
+
+    // ---- register initialisation --------------------------------------
+
+    /// `_mm512_set1_epi32`.
+    #[inline(always)]
+    fn set1_epi32(&mut self, x: i32) -> VecI32x16 {
+        VecI32x16::splat(x)
+    }
+
+    // ---- loads ---------------------------------------------------------
+
+    /// `_mm512_load_epi32` — full 16-lane aligned load.
+    #[inline(always)]
+    fn load_epi32(&mut self, src: &[i32], offset: usize) -> VecI32x16 {
+        let mut out = [0i32; LANES];
+        out.copy_from_slice(&src[offset..offset + LANES]);
+        VecI32x16(out)
+    }
+
+    /// `_mm512_mask_loadu_epi32` — disabled lanes read as 0.
+    #[inline(always)]
+    fn mask_load_epi32(&mut self, mask: Mask16, src: &[i32], offset: usize) -> VecI32x16 {
+        let mut out = [0i32; LANES];
+        for (i, o) in out.iter_mut().enumerate() {
+            if mask.test_lane(i) {
+                *o = src[offset + i];
+            }
+        }
+        VecI32x16(out)
+    }
+
+    /// Full 16-lane load from a `u32` vertex array.
+    #[inline(always)]
+    fn load_vertices(&mut self, src: &[u32], offset: usize) -> VecI32x16 {
+        let mut out = [0i32; LANES];
+        for (o, &x) in out.iter_mut().zip(src[offset..offset + LANES].iter()) {
+            *o = x as i32;
+        }
+        VecI32x16(out)
+    }
+
+    /// Masked load from a `u32` vertex array.
+    #[inline(always)]
+    fn mask_load_vertices(&mut self, mask: Mask16, src: &[u32], offset: usize) -> VecI32x16 {
+        let mut out = [0i32; LANES];
+        for (i, o) in out.iter_mut().enumerate() {
+            if mask.test_lane(i) {
+                *o = src[offset + i] as i32;
+            }
+        }
+        VecI32x16(out)
+    }
+
+    // ---- lanewise ALU ----------------------------------------------------
+
+    /// `_mm512_div_epi32` (SVML).
+    #[inline(always)]
+    fn div_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        a.zip(&b, |x, y| x / y)
+    }
+
+    /// `_mm512_rem_epi32` (SVML).
+    #[inline(always)]
+    fn rem_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        a.zip(&b, |x, y| x % y)
+    }
+
+    /// `_mm512_sllv_epi32`.
+    #[inline(always)]
+    fn sllv_epi32(&mut self, a: VecI32x16, counts: VecI32x16) -> VecI32x16 {
+        a.zip(&counts, |x, c| ((x as u32) << (c as u32 & 31)) as i32)
+    }
+
+    /// `_mm512_srlv_epi32`.
+    #[inline(always)]
+    fn srlv_epi32(&mut self, a: VecI32x16, counts: VecI32x16) -> VecI32x16 {
+        a.zip(&counts, |x, c| ((x as u32) >> (c as u32 & 31)) as i32)
+    }
+
+    /// `_mm512_and_epi32`.
+    #[inline(always)]
+    fn and_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        a.zip(&b, |x, y| x & y)
+    }
+
+    /// `_mm512_andnot_epi32(a, b)` — lanewise `(!a) & b`.
+    #[inline(always)]
+    fn andnot_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        a.zip(&b, |x, y| !x & y)
+    }
+
+    /// `_mm512_or_epi32`.
+    #[inline(always)]
+    fn or_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        a.zip(&b, |x, y| x | y)
+    }
+
+    /// `_mm512_add_epi32`.
+    #[inline(always)]
+    fn add_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        a.zip(&b, |x, y| x.wrapping_add(y))
+    }
+
+    /// `_mm512_sub_epi32`.
+    #[inline(always)]
+    fn sub_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        a.zip(&b, |x, y| x.wrapping_sub(y))
+    }
+
+    /// `_mm512_mask_or_epi32(src, k, a, b)`.
+    #[inline(always)]
+    fn mask_or_epi32(&mut self, src: VecI32x16, mask: Mask16, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        let mut out = src.0;
+        for (i, o) in out.iter_mut().enumerate() {
+            if mask.test_lane(i) {
+                *o = a.0[i] | b.0[i];
+            }
+        }
+        VecI32x16(out)
+    }
+
+    // ---- mask ops --------------------------------------------------------
+
+    /// `_mm512_test_epi32_mask(a, b)` — per-lane `(a & b) != 0`.
+    #[inline(always)]
+    fn test_epi32_mask(&mut self, a: VecI32x16, b: VecI32x16) -> Mask16 {
+        let mut m = 0u16;
+        for i in 0..LANES {
+            if a.0[i] & b.0[i] != 0 {
+                m |= 1 << i;
+            }
+        }
+        Mask16(m)
+    }
+
+    /// `_mm512_cmplt_epi32_mask(a, b)` — per-lane `a < b`.
+    #[inline(always)]
+    fn cmplt_epi32_mask(&mut self, a: VecI32x16, b: VecI32x16) -> Mask16 {
+        let mut m = 0u16;
+        for i in 0..LANES {
+            if a.0[i] < b.0[i] {
+                m |= 1 << i;
+            }
+        }
+        Mask16(m)
+    }
+
+    /// `_mm512_kor`.
+    #[inline(always)]
+    fn kor(&mut self, a: Mask16, b: Mask16) -> Mask16 {
+        Mask16(a.0 | b.0)
+    }
+
+    /// `_mm512_kand`.
+    #[inline(always)]
+    fn kand(&mut self, a: Mask16, b: Mask16) -> Mask16 {
+        Mask16(a.0 & b.0)
+    }
+
+    /// `_mm512_knot`.
+    #[inline(always)]
+    fn knot(&mut self, a: Mask16) -> Mask16 {
+        Mask16(!a.0)
+    }
+
+    /// `_mm512_mask_reduce_or_epi32` — horizontal OR of enabled lanes.
+    #[inline(always)]
+    fn mask_reduce_or_epi32(&mut self, mask: Mask16, v: VecI32x16) -> i32 {
+        let mut acc = 0i32;
+        for i in 0..LANES {
+            if mask.test_lane(i) {
+                acc |= v.0[i];
+            }
+        }
+        acc
+    }
+
+    // ---- gather / scatter -------------------------------------------------
+
+    /// `_mm512_i32gather_epi32` over an `i32` array.
+    #[inline(always)]
+    fn i32gather_epi32(&mut self, vindex: VecI32x16, base: &[i32]) -> VecI32x16 {
+        let mut out = [0i32; LANES];
+        for (o, &idx) in out.iter_mut().zip(vindex.0.iter()) {
+            *o = base[idx as usize];
+        }
+        VecI32x16(out)
+    }
+
+    /// Masked gather; disabled lanes read as 0.
+    #[inline(always)]
+    fn mask_i32gather_epi32(&mut self, mask: Mask16, vindex: VecI32x16, base: &[i32]) -> VecI32x16 {
+        let mut out = [0i32; LANES];
+        for (i, o) in out.iter_mut().enumerate() {
+            if mask.test_lane(i) {
+                *o = base[vindex.0[i] as usize];
+            }
+        }
+        VecI32x16(out)
+    }
+
+    /// Gather over a `u32` word array.
+    #[inline(always)]
+    fn i32gather_words(&mut self, vindex: VecI32x16, base: &[u32]) -> VecI32x16 {
+        let mut out = [0i32; LANES];
+        for (o, &idx) in out.iter_mut().zip(vindex.0.iter()) {
+            *o = base[idx as usize] as i32;
+        }
+        VecI32x16(out)
+    }
+
+    /// Masked variant of [`VpuBackend::i32gather_words`].
+    #[inline(always)]
+    fn mask_i32gather_words(&mut self, mask: Mask16, vindex: VecI32x16, base: &[u32]) -> VecI32x16 {
+        let mut out = [0i32; LANES];
+        for (i, o) in out.iter_mut().enumerate() {
+            if mask.test_lane(i) {
+                *o = base[vindex.0[i] as usize] as i32;
+            }
+        }
+        VecI32x16(out)
+    }
+
+    /// `_mm512_mask_i32scatter_epi32` over `i32` — ascending lane commit
+    /// order, highest enabled lane wins on duplicate indices.
+    #[inline(always)]
+    fn mask_i32scatter_epi32(&mut self, base: &mut [i32], mask: Mask16, vindex: VecI32x16, v: VecI32x16) {
+        for i in 0..LANES {
+            if mask.test_lane(i) {
+                base[vindex.0[i] as usize] = v.0[i];
+            }
+        }
+    }
+
+    /// Masked scatter into a `u32` word array — same lane order rule.
+    #[inline(always)]
+    fn mask_i32scatter_words(&mut self, base: &mut [u32], mask: Mask16, vindex: VecI32x16, v: VecI32x16) {
+        for i in 0..LANES {
+            if mask.test_lane(i) {
+                base[vindex.0[i] as usize] = v.0[i] as u32;
+            }
+        }
+    }
+
+    // ---- shared-memory (multi-thread) gather / scatter ---------------------
+
+    /// Masked gather of bitmap words shared across threads.
+    #[inline(always)]
+    fn mask_gather_shared_words(&mut self, mask: Mask16, vindex: VecI32x16, base: &[AtomicU32]) -> VecI32x16 {
+        let mut out = [0i32; LANES];
+        for (i, o) in out.iter_mut().enumerate() {
+            if mask.test_lane(i) {
+                *o = base[vindex.0[i] as usize].load(Ordering::Relaxed) as i32;
+            }
+        }
+        VecI32x16(out)
+    }
+
+    /// Masked scatter of whole bitmap words shared across threads — the
+    /// racy store of §3.3.2, highest lane / last store wins.
+    #[inline(always)]
+    fn mask_scatter_shared_words(&mut self, base: &[AtomicU32], mask: Mask16, vindex: VecI32x16, v: VecI32x16) {
+        for i in 0..LANES {
+            if mask.test_lane(i) {
+                base[vindex.0[i] as usize].store(v.0[i] as u32, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Masked gather from a shared `i32` array (predecessors).
+    #[inline(always)]
+    fn mask_gather_shared_i32(&mut self, mask: Mask16, vindex: VecI32x16, base: &[AtomicI32]) -> VecI32x16 {
+        let mut out = [0i32; LANES];
+        for (i, o) in out.iter_mut().enumerate() {
+            if mask.test_lane(i) {
+                *o = base[vindex.0[i] as usize].load(Ordering::Relaxed);
+            }
+        }
+        VecI32x16(out)
+    }
+
+    /// Masked scatter into a shared `i32` array (predecessors).
+    #[inline(always)]
+    fn mask_scatter_shared_i32(&mut self, base: &[AtomicI32], mask: Mask16, vindex: VecI32x16, v: VecI32x16) {
+        for i in 0..LANES {
+            if mask.test_lane(i) {
+                base[vindex.0[i] as usize].store(v.0[i], Ordering::Relaxed);
+            }
+        }
+    }
+
+    // ---- prefetch ----------------------------------------------------------
+    //
+    // On the hardware tiers the prefetch hints are no-ops by default: the
+    // counted backend records them for the §4.2 cost model, and modern
+    // out-of-order cores with hardware prefetchers cover the streaming
+    // patterns these hints annotate.
+
+    /// `_mm512_prefetch_i32gather_ps`.
+    #[inline(always)]
+    fn prefetch_i32gather(&mut self, _vindex: VecI32x16, _hint: PrefetchHint) {}
+
+    /// `_mm512_mask_prefetch_i32scatter_ps`.
+    #[inline(always)]
+    fn mask_prefetch_i32scatter(&mut self, _mask: Mask16, _vindex: VecI32x16, _hint: PrefetchHint) {}
+
+    /// Scalar `_mm_prefetch`.
+    #[inline(always)]
+    fn prefetch_scalar(&mut self, _hint: PrefetchHint) {}
+
+    // ---- chunk accounting ---------------------------------------------------
+
+    /// Record a full 16-lane chunk (no-op on uncounted backends).
+    #[inline(always)]
+    fn note_full_chunk(&mut self) {}
+
+    /// Record `n` peel lanes.
+    #[inline(always)]
+    fn note_peel(&mut self, _n: usize) {}
+
+    /// Record `n` remainder lanes.
+    #[inline(always)]
+    fn note_remainder(&mut self, _n: usize) {}
+
+    /// Record one explore issue carrying `active` real-work lanes.
+    #[inline(always)]
+    fn note_explore_issue(&mut self, _active: u32) {}
+}
+
+/// Every enabled lane's index in bounds — the debug-only guard the
+/// intrinsic gather tiers assert before handing indices to hardware
+/// (which, like the real VPU, does no bounds checks). One definition so
+/// the bounds contract cannot drift between tiers.
+pub(crate) fn gather_in_bounds(mask: Mask16, vindex: &VecI32x16, len: usize) -> bool {
+    (0..LANES).all(|i| !mask.test_lane(i) || (vindex.0[i] as usize) < len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_modes() {
+        assert_eq!(VpuMode::parse("counted"), Some(VpuMode::Counted));
+        assert_eq!(VpuMode::parse("hw"), Some(VpuMode::Hw));
+        assert_eq!(VpuMode::parse("auto"), Some(VpuMode::Auto));
+        assert_eq!(VpuMode::parse("fast"), None);
+    }
+
+    #[test]
+    fn resolve_counted_and_hw() {
+        assert_eq!(resolve(VpuMode::Counted, 0), (VpuSelect::Counted, false));
+        assert_eq!(resolve(VpuMode::Counted, 100), (VpuSelect::Counted, false));
+        let (sel, warm) = resolve(VpuMode::Hw, 0);
+        assert_ne!(sel, VpuSelect::Counted);
+        assert!(!warm);
+    }
+
+    #[test]
+    fn resolve_auto_warms_up_then_switches() {
+        for r in 0..AUTO_WARMUP_ROOTS {
+            assert_eq!(resolve(VpuMode::Auto, r), (VpuSelect::Counted, true), "root {r}");
+        }
+        let (sel, warm) = resolve(VpuMode::Auto, AUTO_WARMUP_ROOTS);
+        assert_ne!(sel, VpuSelect::Counted);
+        assert!(!warm);
+    }
+
+    #[test]
+    fn select_names() {
+        assert_eq!(VpuSelect::Counted.name(), "counted");
+        assert_eq!(VpuSelect::HwPortable.name(), "portable");
+        assert_eq!(VpuSelect::HwAvx2.name(), "avx2");
+        assert_eq!(VpuSelect::HwAvx512.name(), "avx512");
+    }
+
+    #[test]
+    fn dispatch_macro_binds_every_variant() {
+        // All four arms COMPILE unconditionally (that is the macro's
+        // contract); only the tiers this host actually supports are
+        // EXECUTED — running an undetected intrinsic tier would SIGILL.
+        let mut selects = vec![VpuSelect::Counted, VpuSelect::HwPortable];
+        let detected = crate::simd::hw::detect_hw_select();
+        if !selects.contains(&detected) {
+            selects.push(detected);
+        }
+        for sel in selects {
+            let sum = crate::with_vpu_backend!(sel, V, {
+                let mut v = V::new();
+                let a = v.set1_epi32(3);
+                let b = v.set1_epi32(4);
+                v.add_epi32(a, b).0[0]
+            });
+            assert_eq!(sum, 7, "{sel:?}");
+        }
+    }
+}

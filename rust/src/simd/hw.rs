@@ -1,0 +1,528 @@
+//! Hardware VPU backends: the zero-counter tiers of
+//! [`crate::simd::backend::VpuBackend`].
+//!
+//! Three tiers, in dispatch preference order (see
+//! [`detect_hw_select`]):
+//!
+//! 1. **AVX-512** (`simd::avx512`, compiled with `--features avx512`) —
+//!    native 16-lane intrinsics; opt-in because the 512-bit intrinsic
+//!    surface requires a recent toolchain (rustc ≥ 1.89).
+//! 2. **AVX2 double-pump** ([`HwAvx2`], x86_64 only) — every 16-lane op
+//!    runs as two 256-bit halves: lanewise ALU, variable shifts, the
+//!    mask-producing compares, and the plain-slice gathers are real
+//!    `core::arch::x86_64` intrinsics.
+//! 3. **Portable** ([`HwPortable`]) — the trait's default scalar-unrolled
+//!    bodies (fixed 16-iteration loops LLVM auto-vectorizes), available on
+//!    every architecture.
+//!
+//! All tiers share two deliberate scalar choices:
+//!
+//! * **Shared-memory ops stay scalar-unrolled.** The threaded engines
+//!   gather/scatter through `AtomicU32`/`AtomicI32` cells; Rust's memory
+//!   model has no vector access to atomics, so a 16-lane intrinsic over
+//!   that storage would be a language-level data race. The per-lane
+//!   `Relaxed` accesses compile to plain loads/stores anyway.
+//! * **Scatters stay scalar-unrolled** (ascending lane order) so the
+//!   lane-conflict rule — highest enabled lane wins on duplicate indices,
+//!   the hazard the restoration process repairs — is preserved bit for
+//!   bit on every backend. The directed conflict test below enforces it.
+//!
+//! Counters are compiled to nothing: the `note_*`/prefetch methods inherit
+//! the trait's empty defaults and [`VpuBackend::counters`] returns zeros,
+//! so `--vpu hw` trades the cost model's event stream for wall-clock
+//! speed (run `--vpu counted`/`auto` when the model or the occupancy
+//! feedback needs data).
+
+use std::sync::OnceLock;
+
+use super::backend::{VpuBackend, VpuSelect};
+use super::counters::VpuCounters;
+
+/// Portable scalar-unrolled hardware backend — the trait's default method
+/// bodies, counters off. The reference implementation the intrinsic tiers
+/// must match.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HwPortable;
+
+impl VpuBackend for HwPortable {
+    const NAME: &'static str = "portable";
+    const COUNTED: bool = false;
+
+    #[inline(always)]
+    fn new() -> Self {
+        HwPortable
+    }
+
+    #[inline(always)]
+    fn counters(&self) -> VpuCounters {
+        VpuCounters::default()
+    }
+}
+
+/// Best backend reachable through the [`VpuSelect::HwAvx2`] dispatch arm
+/// on this target (portable off x86_64, where the AVX2 tier is not
+/// compiled).
+#[cfg(target_arch = "x86_64")]
+pub type BestAvx2 = HwAvx2;
+/// Best backend reachable through the [`VpuSelect::HwAvx2`] dispatch arm
+/// on this target (portable off x86_64, where the AVX2 tier is not
+/// compiled).
+#[cfg(not(target_arch = "x86_64"))]
+pub type BestAvx2 = HwPortable;
+
+/// Best backend reachable through the [`VpuSelect::HwAvx512`] dispatch
+/// arm: the AVX-512 tier with `--features avx512` on x86_64, otherwise
+/// whatever [`BestAvx2`] resolves to. [`detect_hw_select`] never selects a
+/// compiled-out tier, so this alias only decides what an explicit
+/// (test-constructed) `HwAvx512` selection falls back to.
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+pub type BestAvx512 = crate::simd::avx512::HwAvx512;
+/// Best backend reachable through the [`VpuSelect::HwAvx512`] dispatch
+/// arm: the AVX-512 tier with `--features avx512` on x86_64, otherwise
+/// whatever [`BestAvx2`] resolves to. [`detect_hw_select`] never selects a
+/// compiled-out tier, so this alias only decides what an explicit
+/// (test-constructed) `HwAvx512` selection falls back to.
+#[cfg(not(all(target_arch = "x86_64", feature = "avx512")))]
+pub type BestAvx512 = BestAvx2;
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+fn avx512_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx512f")
+}
+
+#[cfg(not(all(target_arch = "x86_64", feature = "avx512")))]
+fn avx512_available() -> bool {
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+/// The best hardware tier this process can run, probed once with
+/// `is_x86_feature_detected!` and cached — the "selected once per run"
+/// half of the dispatch design (the other half is the monomorphizing
+/// [`crate::with_vpu_backend`] macro).
+pub fn detect_hw_select() -> VpuSelect {
+    static SELECT: OnceLock<VpuSelect> = OnceLock::new();
+    *SELECT.get_or_init(|| {
+        if avx512_available() {
+            VpuSelect::HwAvx512
+        } else if avx2_available() {
+            VpuSelect::HwAvx2
+        } else {
+            VpuSelect::HwPortable
+        }
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+pub use x86::HwAvx2;
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! The AVX2 double-pump tier. Every override is two 256-bit halves of
+    //! the 16-lane op; semantics match the portable bodies bit for bit
+    //! (shift counts are masked to 5 bits explicitly, masked gathers read
+    //! 0 into disabled lanes via a zero `src` operand).
+    //!
+    //! # Safety
+    //!
+    //! The `#[target_feature(enable = "avx2")]` helpers are only reachable
+    //! through [`HwAvx2`], which is only constructed after
+    //! `is_x86_feature_detected!("avx2")` (via [`super::detect_hw_select`];
+    //! `new` debug-asserts it). Gather helpers do no bounds checks — the
+    //! engines feed indices derived from valid vertex ids, and the safe
+    //! wrappers `debug_assert!` every enabled lane in range (live in the
+    //! test profile, compiled out in release like the hardware itself).
+
+    use core::arch::x86_64::*;
+
+    use crate::simd::backend::{gather_in_bounds, VpuBackend};
+    use crate::simd::counters::VpuCounters;
+    use crate::simd::vec512::{Mask16, VecI32x16, LANES};
+
+    /// AVX2 double-pump backend (2 × 256-bit halves per 16-lane op).
+    #[derive(Clone, Copy, Debug, Default)]
+    pub struct HwAvx2;
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn vload(v: &VecI32x16) -> (__m256i, __m256i) {
+        let p = v.0.as_ptr() as *const __m256i;
+        (_mm256_loadu_si256(p), _mm256_loadu_si256(p.add(1)))
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn vstore(lo: __m256i, hi: __m256i) -> VecI32x16 {
+        let mut out = VecI32x16::zero();
+        let p = out.0.as_mut_ptr() as *mut __m256i;
+        _mm256_storeu_si256(p, lo);
+        _mm256_storeu_si256(p.add(1), hi);
+        out
+    }
+
+    /// Sign bits of 16 lanes (two cmp-result halves) as a `Mask16` word.
+    #[target_feature(enable = "avx2")]
+    unsafe fn movemask16(lo: __m256i, hi: __m256i) -> u16 {
+        let ml = _mm256_movemask_ps(_mm256_castsi256_ps(lo)) as u32 as u16;
+        let mh = _mm256_movemask_ps(_mm256_castsi256_ps(hi)) as u32 as u16;
+        ml | (mh << 8)
+    }
+
+    /// Expand a `Mask16` into two per-lane all-ones/all-zeros halves (the
+    /// vector mask operand AVX2's masked gather wants).
+    #[target_feature(enable = "avx2")]
+    unsafe fn expand_mask(m: u16) -> (__m256i, __m256i) {
+        let bits_lo = _mm256_setr_epi32(1, 1 << 1, 1 << 2, 1 << 3, 1 << 4, 1 << 5, 1 << 6, 1 << 7);
+        let bits_hi = _mm256_setr_epi32(
+            1 << 8,
+            1 << 9,
+            1 << 10,
+            1 << 11,
+            1 << 12,
+            1 << 13,
+            1 << 14,
+            1 << 15,
+        );
+        let mv = _mm256_set1_epi32(m as i32);
+        (
+            _mm256_cmpeq_epi32(_mm256_and_si256(mv, bits_lo), bits_lo),
+            _mm256_cmpeq_epi32(_mm256_and_si256(mv, bits_hi), bits_hi),
+        )
+    }
+
+    macro_rules! avx2_binop {
+        ($fn_name:ident, $intrinsic:ident) => {
+            #[target_feature(enable = "avx2")]
+            unsafe fn $fn_name(a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+                let (al, ah) = vload(&a);
+                let (bl, bh) = vload(&b);
+                vstore($intrinsic(al, bl), $intrinsic(ah, bh))
+            }
+        };
+    }
+
+    avx2_binop!(and_avx2, _mm256_and_si256);
+    avx2_binop!(or_avx2, _mm256_or_si256);
+    avx2_binop!(andnot_avx2, _mm256_andnot_si256);
+    avx2_binop!(add_avx2, _mm256_add_epi32);
+    avx2_binop!(sub_avx2, _mm256_sub_epi32);
+
+    macro_rules! avx2_varshift {
+        ($fn_name:ident, $intrinsic:ident) => {
+            #[target_feature(enable = "avx2")]
+            unsafe fn $fn_name(a: VecI32x16, counts: VecI32x16) -> VecI32x16 {
+                let (al, ah) = vload(&a);
+                let (cl, ch) = vload(&counts);
+                // hardware variable shifts zero the lane for counts > 31;
+                // the portable spec masks to 5 bits — match it explicitly
+                let m31 = _mm256_set1_epi32(31);
+                vstore(
+                    $intrinsic(al, _mm256_and_si256(cl, m31)),
+                    $intrinsic(ah, _mm256_and_si256(ch, m31)),
+                )
+            }
+        };
+    }
+
+    avx2_varshift!(sllv_avx2, _mm256_sllv_epi32);
+    avx2_varshift!(srlv_avx2, _mm256_srlv_epi32);
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn test_mask_avx2(a: VecI32x16, b: VecI32x16) -> Mask16 {
+        let (al, ah) = vload(&a);
+        let (bl, bh) = vload(&b);
+        let zero = _mm256_setzero_si256();
+        // lanes where (a & b) == 0, then invert — all 16 bits are lanes
+        let zl = _mm256_cmpeq_epi32(_mm256_and_si256(al, bl), zero);
+        let zh = _mm256_cmpeq_epi32(_mm256_and_si256(ah, bh), zero);
+        Mask16(!movemask16(zl, zh))
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn cmplt_mask_avx2(a: VecI32x16, b: VecI32x16) -> Mask16 {
+        let (al, ah) = vload(&a);
+        let (bl, bh) = vload(&b);
+        // a < b  ⇔  b > a (signed compare)
+        Mask16(movemask16(_mm256_cmpgt_epi32(bl, al), _mm256_cmpgt_epi32(bh, ah)))
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn loadu_avx2(p: *const i32) -> VecI32x16 {
+        let q = p as *const __m256i;
+        vstore(_mm256_loadu_si256(q), _mm256_loadu_si256(q.add(1)))
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn gather_avx2(base: *const i32, vindex: &VecI32x16) -> VecI32x16 {
+        let (il, ih) = vload(vindex);
+        vstore(
+            _mm256_i32gather_epi32::<4>(base, il),
+            _mm256_i32gather_epi32::<4>(base, ih),
+        )
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn mask_gather_avx2(base: *const i32, vindex: &VecI32x16, mask: Mask16) -> VecI32x16 {
+        let (il, ih) = vload(vindex);
+        let (ml, mh) = expand_mask(mask.0);
+        let zero = _mm256_setzero_si256();
+        // disabled lanes take the zero src operand — the portable spec
+        vstore(
+            _mm256_mask_i32gather_epi32::<4>(zero, base, il, ml),
+            _mm256_mask_i32gather_epi32::<4>(zero, base, ih, mh),
+        )
+    }
+
+    impl VpuBackend for HwAvx2 {
+        const NAME: &'static str = "avx2";
+        const COUNTED: bool = false;
+
+        #[inline(always)]
+        fn new() -> Self {
+            debug_assert!(
+                std::arch::is_x86_feature_detected!("avx2"),
+                "HwAvx2 constructed without AVX2 support"
+            );
+            HwAvx2
+        }
+
+        #[inline(always)]
+        fn counters(&self) -> VpuCounters {
+            VpuCounters::default()
+        }
+
+        #[inline(always)]
+        fn load_vertices(&mut self, src: &[u32], offset: usize) -> VecI32x16 {
+            let s = &src[offset..offset + LANES];
+            // SAFETY: AVX2 detected at construction; `s` spans 16 lanes
+            unsafe { loadu_avx2(s.as_ptr() as *const i32) }
+        }
+
+        #[inline(always)]
+        fn sllv_epi32(&mut self, a: VecI32x16, counts: VecI32x16) -> VecI32x16 {
+            // SAFETY: AVX2 detected at construction
+            unsafe { sllv_avx2(a, counts) }
+        }
+
+        #[inline(always)]
+        fn srlv_epi32(&mut self, a: VecI32x16, counts: VecI32x16) -> VecI32x16 {
+            // SAFETY: AVX2 detected at construction
+            unsafe { srlv_avx2(a, counts) }
+        }
+
+        #[inline(always)]
+        fn and_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+            // SAFETY: AVX2 detected at construction
+            unsafe { and_avx2(a, b) }
+        }
+
+        #[inline(always)]
+        fn andnot_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+            // SAFETY: AVX2 detected at construction
+            unsafe { andnot_avx2(a, b) }
+        }
+
+        #[inline(always)]
+        fn or_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+            // SAFETY: AVX2 detected at construction
+            unsafe { or_avx2(a, b) }
+        }
+
+        #[inline(always)]
+        fn add_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+            // SAFETY: AVX2 detected at construction
+            unsafe { add_avx2(a, b) }
+        }
+
+        #[inline(always)]
+        fn sub_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+            // SAFETY: AVX2 detected at construction
+            unsafe { sub_avx2(a, b) }
+        }
+
+        #[inline(always)]
+        fn test_epi32_mask(&mut self, a: VecI32x16, b: VecI32x16) -> Mask16 {
+            // SAFETY: AVX2 detected at construction
+            unsafe { test_mask_avx2(a, b) }
+        }
+
+        #[inline(always)]
+        fn cmplt_epi32_mask(&mut self, a: VecI32x16, b: VecI32x16) -> Mask16 {
+            // SAFETY: AVX2 detected at construction
+            unsafe { cmplt_mask_avx2(a, b) }
+        }
+
+        #[inline(always)]
+        fn i32gather_epi32(&mut self, vindex: VecI32x16, base: &[i32]) -> VecI32x16 {
+            debug_assert!(gather_in_bounds(Mask16::ALL, &vindex, base.len()));
+            // SAFETY: AVX2 detected at construction; indices in bounds by
+            // the engine invariant (debug-asserted above)
+            unsafe { gather_avx2(base.as_ptr(), &vindex) }
+        }
+
+        #[inline(always)]
+        fn mask_i32gather_epi32(&mut self, mask: Mask16, vindex: VecI32x16, base: &[i32]) -> VecI32x16 {
+            debug_assert!(gather_in_bounds(mask, &vindex, base.len()));
+            // SAFETY: as for i32gather_epi32; disabled lanes do not access
+            // memory
+            unsafe { mask_gather_avx2(base.as_ptr(), &vindex, mask) }
+        }
+
+        #[inline(always)]
+        fn i32gather_words(&mut self, vindex: VecI32x16, base: &[u32]) -> VecI32x16 {
+            debug_assert!(gather_in_bounds(Mask16::ALL, &vindex, base.len()));
+            // SAFETY: as for i32gather_epi32 (u32 reinterpreted as i32)
+            unsafe { gather_avx2(base.as_ptr() as *const i32, &vindex) }
+        }
+
+        #[inline(always)]
+        fn mask_i32gather_words(&mut self, mask: Mask16, vindex: VecI32x16, base: &[u32]) -> VecI32x16 {
+            debug_assert!(gather_in_bounds(mask, &vindex, base.len()));
+            // SAFETY: as for mask_i32gather_epi32
+            unsafe { mask_gather_avx2(base.as_ptr() as *const i32, &vindex, mask) }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    use super::*;
+    use crate::simd::ops::Vpu;
+    use crate::simd::vec512::{Mask16, VecI32x16};
+
+    /// Run the intrinsic-covered op battery on `V` and compare against the
+    /// counted emulator lane for lane.
+    fn assert_matches_counted<V: VpuBackend>() {
+        let mut c = Vpu::new();
+        let mut h = V::new();
+        let a = VecI32x16([3, -7, 0, i32::MAX, i32::MIN, 12, 99, -1, 5, 6, 7, 8, 9, 10, 11, 12]);
+        let b = VecI32x16([1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 31]);
+        assert_eq!(c.set1_epi32(42), h.set1_epi32(42));
+        assert_eq!(c.and_epi32(a, b), h.and_epi32(a, b));
+        assert_eq!(c.or_epi32(a, b), h.or_epi32(a, b));
+        assert_eq!(c.andnot_epi32(a, b), h.andnot_epi32(a, b));
+        assert_eq!(c.add_epi32(a, b), h.add_epi32(a, b));
+        assert_eq!(c.sub_epi32(a, b), h.sub_epi32(a, b));
+        assert_eq!(c.sllv_epi32(a, b), h.sllv_epi32(a, b));
+        assert_eq!(c.srlv_epi32(a, b), h.srlv_epi32(a, b));
+        assert_eq!(c.div_epi32(a, VecI32x16::splat(32)), h.div_epi32(a, VecI32x16::splat(32)));
+        assert_eq!(c.rem_epi32(b, VecI32x16::splat(32)), h.rem_epi32(b, VecI32x16::splat(32)));
+        assert_eq!(c.test_epi32_mask(a, b), h.test_epi32_mask(a, b));
+        assert_eq!(c.cmplt_epi32_mask(a, b), h.cmplt_epi32_mask(a, b));
+        assert_eq!(
+            c.mask_or_epi32(a, Mask16(0b1010_1010_1010_1010), a, b),
+            h.mask_or_epi32(a, Mask16(0b1010_1010_1010_1010), a, b)
+        );
+        assert_eq!(c.mask_reduce_or_epi32(Mask16::first_n(5), b), h.mask_reduce_or_epi32(Mask16::first_n(5), b));
+
+        let words: Vec<u32> = (0..64u32).map(|x| x.wrapping_mul(0x9E37_79B9)).collect();
+        let ints: Vec<i32> = (0..64i32).map(|x| x * 3 - 11).collect();
+        let idx = VecI32x16([0, 5, 9, 3, 63, 1, 2, 4, 6, 8, 10, 20, 30, 40, 50, 33]);
+        let m = Mask16(0b0110_1101_1011_0110);
+        assert_eq!(c.i32gather_epi32(idx, &ints), h.i32gather_epi32(idx, &ints));
+        assert_eq!(c.mask_i32gather_epi32(m, idx, &ints), h.mask_i32gather_epi32(m, idx, &ints));
+        assert_eq!(c.i32gather_words(idx, &words), h.i32gather_words(idx, &words));
+        assert_eq!(c.mask_i32gather_words(m, idx, &words), h.mask_i32gather_words(m, idx, &words));
+        assert_eq!(c.load_vertices(&words, 16), h.load_vertices(&words, 16));
+        assert_eq!(c.mask_load_vertices(m, &words, 16), h.mask_load_vertices(m, &words, 16));
+        assert_eq!(c.load_epi32(&ints, 8), h.load_epi32(&ints, 8));
+        assert_eq!(c.mask_load_epi32(m, &ints, 8), h.mask_load_epi32(m, &ints, 8));
+    }
+
+    /// The directed scatter-conflict test of the backend-equivalence
+    /// satellite: duplicate word indices must resolve identically —
+    /// highest enabled lane wins — on every backend (the counted emulator
+    /// additionally counts the lost lanes; the hardware tiers count
+    /// nothing but must lose the same bits).
+    fn assert_scatter_conflicts_match<V: VpuBackend>() {
+        let mut idx = VecI32x16::zero();
+        let mut vals = VecI32x16::zero();
+        // lanes 3, 7 and 11 all target word 2 with different single bits
+        for (lane, bit) in [(3usize, 5u32), (7, 7), (11, 9)] {
+            idx.0[lane] = 2;
+            vals.0[lane] = (1i32) << bit;
+        }
+        idx.0[0] = 1;
+        vals.0[0] = 0x55;
+        let mask = Mask16((1 << 0) | (1 << 3) | (1 << 7) | (1 << 11));
+
+        let mut counted = Vpu::new();
+        let mut words_c = vec![0u32; 4];
+        counted.mask_i32scatter_words(&mut words_c, mask, idx, vals);
+        assert_eq!(words_c[2], 1 << 9, "highest lane must win");
+        assert!(counted.counters().scatter_conflicts > 0);
+
+        let mut hw = V::new();
+        let mut words_h = vec![0u32; 4];
+        hw.mask_i32scatter_words(&mut words_h, mask, idx, vals);
+        assert_eq!(words_c, words_h, "{} scatter semantics diverged", V::NAME);
+        assert_eq!(hw.counters(), crate::simd::VpuCounters::default(), "{} must not count", V::NAME);
+
+        // i32 scatter: same rule
+        let mut base_c = vec![0i32; 4];
+        let mut base_h = vec![0i32; 4];
+        counted.mask_i32scatter_epi32(&mut base_c, mask, idx, vals);
+        hw.mask_i32scatter_epi32(&mut base_h, mask, idx, vals);
+        assert_eq!(base_c, base_h);
+
+        // shared-word scatter: same rule through the atomic cells
+        let shared_c: Vec<AtomicU32> = (0..4).map(|_| AtomicU32::new(0)).collect();
+        let shared_h: Vec<AtomicU32> = (0..4).map(|_| AtomicU32::new(0)).collect();
+        counted.mask_scatter_shared_words(&shared_c, mask, idx, vals);
+        hw.mask_scatter_shared_words(&shared_h, mask, idx, vals);
+        for (a, b) in shared_c.iter().zip(shared_h.iter()) {
+            assert_eq!(a.load(Ordering::Relaxed), b.load(Ordering::Relaxed));
+        }
+    }
+
+    #[test]
+    fn portable_matches_counted_ops() {
+        assert_matches_counted::<HwPortable>();
+    }
+
+    #[test]
+    fn portable_scatter_conflicts_match_counted() {
+        assert_scatter_conflicts_match::<HwPortable>();
+    }
+
+    #[test]
+    fn portable_counters_stay_zero() {
+        let mut h = HwPortable::new();
+        h.note_explore_issue(9);
+        h.note_full_chunk();
+        h.note_peel(3);
+        h.note_remainder(2);
+        let _ = h.set1_epi32(1);
+        assert_eq!(h.counters(), VpuCounters::default());
+        assert!(!HwPortable::COUNTED);
+        assert!(crate::simd::ops::Vpu::COUNTED);
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_matches_counted_ops() {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            eprintln!("skipping: no AVX2 on this host");
+            return;
+        }
+        assert_matches_counted::<HwAvx2>();
+        assert_scatter_conflicts_match::<HwAvx2>();
+    }
+
+    #[test]
+    fn detection_is_stable_and_never_counted() {
+        let a = detect_hw_select();
+        let b = detect_hw_select();
+        assert_eq!(a, b);
+        assert_ne!(a, VpuSelect::Counted);
+    }
+}

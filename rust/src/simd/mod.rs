@@ -20,10 +20,27 @@
 //! types, and [`counters`] the event counters (vector ops, gathers,
 //! scatters, prefetches, peel/remainder lanes) that feed the Xeon Phi
 //! performance model in [`crate::phi`].
+//!
+//! The emulator is one of several **pluggable backends** behind
+//! [`backend::VpuBackend`]: `--vpu counted` (the default) runs the
+//! counted emulation above, `--vpu hw` runs the same lane semantics on
+//! real `core::arch` SIMD with counters compiled away ([`hw`]: AVX-512
+//! opt-in / AVX2 double-pump / portable unrolled), and `--vpu auto` warms
+//! the policy feedback up on counted roots before switching to hardware.
+//! Engines dispatch once per traversal via
+//! [`with_vpu_backend!`](crate::with_vpu_backend), so hot loops stay
+//! monomorphic.
 
+pub mod backend;
 pub mod counters;
+pub mod hw;
 pub mod ops;
 pub mod vec512;
 
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+pub mod avx512;
+
+pub use backend::{resolve, VpuBackend, VpuMode, VpuSelect, AUTO_WARMUP_ROOTS};
 pub use counters::VpuCounters;
+pub use hw::{detect_hw_select, HwPortable};
 pub use vec512::{Mask16, VecI32x16, LANES};

@@ -488,6 +488,217 @@ pub enum PrefetchHint {
     T1,
 }
 
+// The counted backend of the pluggable-VPU design
+// ([`crate::simd::backend`]): every trait method delegates to the
+// counting inherent twin above, so the emulator's semantics — and its
+// event stream — are byte-for-byte what they were before backends
+// existed. Engines written against `VpuBackend` monomorphize onto this
+// impl when the run selects `--vpu counted` (or an `auto` warm-up root).
+impl super::backend::VpuBackend for Vpu {
+    const NAME: &'static str = "counted";
+    const COUNTED: bool = true;
+
+    #[inline(always)]
+    fn new() -> Self {
+        Vpu::new()
+    }
+
+    #[inline(always)]
+    fn counters(&self) -> VpuCounters {
+        self.counters
+    }
+
+    #[inline(always)]
+    fn set1_epi32(&mut self, x: i32) -> VecI32x16 {
+        Vpu::set1_epi32(self, x)
+    }
+
+    #[inline(always)]
+    fn load_epi32(&mut self, src: &[i32], offset: usize) -> VecI32x16 {
+        Vpu::load_epi32(self, src, offset)
+    }
+
+    #[inline(always)]
+    fn mask_load_epi32(&mut self, mask: Mask16, src: &[i32], offset: usize) -> VecI32x16 {
+        Vpu::mask_load_epi32(self, mask, src, offset)
+    }
+
+    #[inline(always)]
+    fn load_vertices(&mut self, src: &[u32], offset: usize) -> VecI32x16 {
+        Vpu::load_vertices(self, src, offset)
+    }
+
+    #[inline(always)]
+    fn mask_load_vertices(&mut self, mask: Mask16, src: &[u32], offset: usize) -> VecI32x16 {
+        Vpu::mask_load_vertices(self, mask, src, offset)
+    }
+
+    #[inline(always)]
+    fn div_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        Vpu::div_epi32(self, a, b)
+    }
+
+    #[inline(always)]
+    fn rem_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        Vpu::rem_epi32(self, a, b)
+    }
+
+    #[inline(always)]
+    fn sllv_epi32(&mut self, a: VecI32x16, counts: VecI32x16) -> VecI32x16 {
+        Vpu::sllv_epi32(self, a, counts)
+    }
+
+    #[inline(always)]
+    fn srlv_epi32(&mut self, a: VecI32x16, counts: VecI32x16) -> VecI32x16 {
+        Vpu::srlv_epi32(self, a, counts)
+    }
+
+    #[inline(always)]
+    fn and_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        Vpu::and_epi32(self, a, b)
+    }
+
+    #[inline(always)]
+    fn andnot_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        Vpu::andnot_epi32(self, a, b)
+    }
+
+    #[inline(always)]
+    fn or_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        Vpu::or_epi32(self, a, b)
+    }
+
+    #[inline(always)]
+    fn add_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        Vpu::add_epi32(self, a, b)
+    }
+
+    #[inline(always)]
+    fn sub_epi32(&mut self, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        Vpu::sub_epi32(self, a, b)
+    }
+
+    #[inline(always)]
+    fn mask_or_epi32(&mut self, src: VecI32x16, mask: Mask16, a: VecI32x16, b: VecI32x16) -> VecI32x16 {
+        Vpu::mask_or_epi32(self, src, mask, a, b)
+    }
+
+    #[inline(always)]
+    fn test_epi32_mask(&mut self, a: VecI32x16, b: VecI32x16) -> Mask16 {
+        Vpu::test_epi32_mask(self, a, b)
+    }
+
+    #[inline(always)]
+    fn cmplt_epi32_mask(&mut self, a: VecI32x16, b: VecI32x16) -> Mask16 {
+        Vpu::cmplt_epi32_mask(self, a, b)
+    }
+
+    #[inline(always)]
+    fn kor(&mut self, a: Mask16, b: Mask16) -> Mask16 {
+        Vpu::kor(self, a, b)
+    }
+
+    #[inline(always)]
+    fn kand(&mut self, a: Mask16, b: Mask16) -> Mask16 {
+        Vpu::kand(self, a, b)
+    }
+
+    #[inline(always)]
+    fn knot(&mut self, a: Mask16) -> Mask16 {
+        Vpu::knot(self, a)
+    }
+
+    #[inline(always)]
+    fn mask_reduce_or_epi32(&mut self, mask: Mask16, v: VecI32x16) -> i32 {
+        Vpu::mask_reduce_or_epi32(self, mask, v)
+    }
+
+    #[inline(always)]
+    fn i32gather_epi32(&mut self, vindex: VecI32x16, base: &[i32]) -> VecI32x16 {
+        Vpu::i32gather_epi32(self, vindex, base)
+    }
+
+    #[inline(always)]
+    fn mask_i32gather_epi32(&mut self, mask: Mask16, vindex: VecI32x16, base: &[i32]) -> VecI32x16 {
+        Vpu::mask_i32gather_epi32(self, mask, vindex, base)
+    }
+
+    #[inline(always)]
+    fn i32gather_words(&mut self, vindex: VecI32x16, base: &[u32]) -> VecI32x16 {
+        Vpu::i32gather_words(self, vindex, base)
+    }
+
+    #[inline(always)]
+    fn mask_i32gather_words(&mut self, mask: Mask16, vindex: VecI32x16, base: &[u32]) -> VecI32x16 {
+        Vpu::mask_i32gather_words(self, mask, vindex, base)
+    }
+
+    #[inline(always)]
+    fn mask_i32scatter_epi32(&mut self, base: &mut [i32], mask: Mask16, vindex: VecI32x16, v: VecI32x16) {
+        Vpu::mask_i32scatter_epi32(self, base, mask, vindex, v)
+    }
+
+    #[inline(always)]
+    fn mask_i32scatter_words(&mut self, base: &mut [u32], mask: Mask16, vindex: VecI32x16, v: VecI32x16) {
+        Vpu::mask_i32scatter_words(self, base, mask, vindex, v)
+    }
+
+    #[inline(always)]
+    fn mask_gather_shared_words(&mut self, mask: Mask16, vindex: VecI32x16, base: &[AtomicU32]) -> VecI32x16 {
+        Vpu::mask_gather_shared_words(self, mask, vindex, base)
+    }
+
+    #[inline(always)]
+    fn mask_scatter_shared_words(&mut self, base: &[AtomicU32], mask: Mask16, vindex: VecI32x16, v: VecI32x16) {
+        Vpu::mask_scatter_shared_words(self, base, mask, vindex, v)
+    }
+
+    #[inline(always)]
+    fn mask_gather_shared_i32(&mut self, mask: Mask16, vindex: VecI32x16, base: &[AtomicI32]) -> VecI32x16 {
+        Vpu::mask_gather_shared_i32(self, mask, vindex, base)
+    }
+
+    #[inline(always)]
+    fn mask_scatter_shared_i32(&mut self, base: &[AtomicI32], mask: Mask16, vindex: VecI32x16, v: VecI32x16) {
+        Vpu::mask_scatter_shared_i32(self, base, mask, vindex, v)
+    }
+
+    #[inline(always)]
+    fn prefetch_i32gather(&mut self, vindex: VecI32x16, hint: PrefetchHint) {
+        Vpu::prefetch_i32gather(self, vindex, hint)
+    }
+
+    #[inline(always)]
+    fn mask_prefetch_i32scatter(&mut self, mask: Mask16, vindex: VecI32x16, hint: PrefetchHint) {
+        Vpu::mask_prefetch_i32scatter(self, mask, vindex, hint)
+    }
+
+    #[inline(always)]
+    fn prefetch_scalar(&mut self, hint: PrefetchHint) {
+        Vpu::prefetch_scalar(self, hint)
+    }
+
+    #[inline(always)]
+    fn note_full_chunk(&mut self) {
+        Vpu::note_full_chunk(self)
+    }
+
+    #[inline(always)]
+    fn note_peel(&mut self, n: usize) {
+        Vpu::note_peel(self, n)
+    }
+
+    #[inline(always)]
+    fn note_remainder(&mut self, n: usize) {
+        Vpu::note_remainder(self, n)
+    }
+
+    #[inline(always)]
+    fn note_explore_issue(&mut self, active: u32) {
+        Vpu::note_explore_issue(self, active)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

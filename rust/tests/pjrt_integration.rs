@@ -134,6 +134,7 @@ fn pjrt_bfs_bit_identical_to_emulated_vpu() {
         num_threads: 1,
         opts: SimdOpts::full(),
         policy: LayerPolicy::All,
+        ..Default::default()
     }
     .run(&g, 0);
     assert_eq!(pjrt.tree.pred, native.tree.pred, "bit-identical predecessor arrays");

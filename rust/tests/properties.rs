@@ -23,6 +23,7 @@ use phi_bfs::bfs::BfsEngine;
 use phi_bfs::coordinator::engine::{make_engine, EngineKind};
 use phi_bfs::graph::{Bitmap, Csr, EdgeList, RmatConfig};
 use phi_bfs::prop::{forall, Gen};
+use phi_bfs::simd::{ops::Vpu, VpuMode};
 use phi_bfs::{Pred, Vertex, PRED_INFINITY};
 
 fn random_graph(g: &mut Gen) -> Csr {
@@ -42,6 +43,7 @@ fn ladder(g: &mut Gen) -> Vec<Box<dyn BfsEngine>> {
             num_threads: threads,
             opts: *g.choose(&[SimdOpts::none(), SimdOpts::aligned_masks(), SimdOpts::full()]),
             policy: *g.choose(&[LayerPolicy::All, LayerPolicy::FirstK(2), LayerPolicy::heavy()]),
+            vpu: *g.choose(&[VpuMode::Counted, VpuMode::Hw, VpuMode::Auto]),
         }),
         Box::new(SellBfs {
             num_threads: threads,
@@ -49,6 +51,7 @@ fn ladder(g: &mut Gen) -> Vec<Box<dyn BfsEngine>> {
             policy: *g.choose(&[LayerPolicy::All, LayerPolicy::FirstK(2), LayerPolicy::heavy()]),
             // 0 is SIGMA_AUTO: resolved per scale at prepare time
             sigma: *g.choose(&[0usize, 16, 64, 256, usize::MAX]),
+            vpu: *g.choose(&[VpuMode::Counted, VpuMode::Hw, VpuMode::Auto]),
         }),
     ]
 }
@@ -237,6 +240,52 @@ fn prop_prepared_engines_build_layouts_once() {
 }
 
 #[test]
+fn prop_backend_equivalence_counted_vs_hw() {
+    // The backend-equivalence satellite: every registered engine must
+    // produce identical depths — and a five-check-valid parent array — on
+    // the counted emulator, the detected hardware backend, and the
+    // auto-mode mix, across random RMAT graphs. (The directed
+    // scatter-conflict semantics test lives in simd::hw.)
+    forall("counted ≡ hw ≡ auto backends on RMAT", 4, |g| {
+        let scale = g.size(8, 10) as u32;
+        let seed = g.size(0, 1 << 16) as u64;
+        let el = RmatConfig::graph500(scale, 8).generate(seed);
+        let csr = Csr::from_edge_list(scale, &el);
+        let root = g.size(0, csr.num_vertices() - 1) as Vertex;
+        let threads = g.size(1, 3);
+        let expected = SerialLayeredBfs.run(&csr, root).tree.distances().unwrap();
+        for name in EngineKind::NATIVE_NAMES {
+            for mode in [VpuMode::Counted, VpuMode::Hw, VpuMode::Auto] {
+                let mut kind = EngineKind::parse(name, threads, "artifacts").unwrap();
+                // scalar engines have no VPU: the mode is a no-op there,
+                // but they still run so the sweep covers the whole ladder
+                kind.set_vpu(mode);
+                let engine = make_engine(&kind).unwrap_or_else(|e| panic!("{name}: {e}"));
+                let prepared = engine.prepare(&csr).unwrap_or_else(|e| panic!("{name}: {e}"));
+                // several roots through one prepared instance so Auto
+                // actually crosses its warm-up → hardware boundary
+                for offset in [0usize, 1, 2] {
+                    let r = ((root as usize + offset) % csr.num_vertices()) as Vertex;
+                    let want = if offset == 0 {
+                        expected.clone()
+                    } else {
+                        SerialLayeredBfs.run(&csr, r).tree.distances().unwrap()
+                    };
+                    let run = prepared.run(r);
+                    assert_eq!(
+                        run.tree.distances().unwrap(),
+                        want,
+                        "{name} on {mode:?} diverged (scale={scale}, seed={seed}, root={r})"
+                    );
+                    let report = validate(&csr, &run.tree);
+                    assert!(report.all_passed(), "{name} on {mode:?}: {}", report.summary());
+                }
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_restoration_repairs_arbitrary_corruption() {
     // Failure injection: arbitrary sets of journalled vertices, arbitrary
     // subsets of their bits lost — both restoration implementations must
@@ -293,7 +342,7 @@ fn prop_restoration_repairs_arbitrary_corruption() {
         let (o1, v1, p1) = build2(&lost);
         restore_layer(g.size(1, 3), &o1, &v1, &p1, nodes);
         let (o2, v2, p2) = build2(&lost);
-        restore_layer_simd(g.size(1, 3), &o2, &v2, &p2, nodes);
+        restore_layer_simd::<Vpu>(g.size(1, 3), &o2, &v2, &p2, nodes);
 
         // identical output from scalar and vectorized restoration
         assert_eq!(o1.snapshot().words(), o2.snapshot().words());
@@ -368,6 +417,7 @@ fn prop_reached_count_consistent() {
             num_threads: 2,
             opts: SimdOpts::full(),
             policy: LayerPolicy::All,
+            ..Default::default()
         }
         .run(&csr, root);
         let d = r.tree.distances().unwrap();
@@ -389,6 +439,7 @@ fn prop_no_negative_predecessors_survive() {
                 num_threads: 3,
                 opts: SimdOpts::full(),
                 policy: LayerPolicy::All,
+                ..Default::default()
             }),
         ] {
             let r = alg.run(&csr, root);
