@@ -22,7 +22,7 @@ use anyhow::Result;
 use super::state::{SharedBitmap, SharedPred};
 use super::{
     BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, PreparedStateless,
-    RunTrace, StatelessBfs, WORD_GRAIN,
+    RunControl, RunStatus, RunTrace, StatelessBfs, WORD_GRAIN,
 };
 use crate::graph::bitmap::BITS_PER_WORD;
 use crate::graph::{Bitmap, Csr};
@@ -118,7 +118,7 @@ impl StatelessBfs for BitRaceFreeBfs {
         "bitrace-free"
     }
 
-    fn traverse(&self, g: &Csr, root: Vertex) -> BfsResult {
+    fn traverse(&self, g: &Csr, root: Vertex, ctl: &RunControl) -> BfsResult {
         let n = g.num_vertices();
         let nodes = n as Pred;
         let pred = SharedPred::new_infinity(n);
@@ -133,7 +133,15 @@ impl StatelessBfs for BitRaceFreeBfs {
         let mut layers = Vec::new();
         let mut layer = 0usize;
         let mut frontier_count = 1usize;
+        let mut status = RunStatus::Complete;
         while frontier_count != 0 {
+            // Checked only between layers: a stop can never land between
+            // exploration and restoration, so no negative journal entries
+            // survive in the returned tree.
+            if let Some(s) = ctl.stop_reason() {
+                status = s;
+                break;
+            }
             let t0 = Instant::now();
             let in_words = input.words();
             // --- exploration (lines 8-14): racy word updates, no atomics ---
@@ -189,7 +197,7 @@ impl StatelessBfs for BitRaceFreeBfs {
 
         BfsResult {
             tree: BfsTree::new(root, pred.into_vec()),
-            trace: RunTrace { layers, num_threads: self.num_threads, ..Default::default() },
+            trace: RunTrace { layers, num_threads: self.num_threads, status, ..Default::default() },
         }
     }
 }

@@ -44,7 +44,8 @@ use super::sell_vectorized::{SellStep, SIGMA_AUTO};
 use super::state::{SharedBitmap, SharedPred};
 use super::vectorized::SimdOpts;
 use super::{
-    BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, RunTrace, WORD_GRAIN,
+    BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, RunControl, RunStatus,
+    RunTrace, WORD_GRAIN,
 };
 use crate::graph::bitmap::BITS_PER_WORD;
 use crate::graph::sell::Sell16;
@@ -245,6 +246,7 @@ impl HybridBfs {
         padded: Option<&PaddedCsr>,
         feedback: Option<&PolicyFeedback>,
         root: Vertex,
+        ctl: &RunControl,
     ) -> BfsResult {
         let n = g.num_vertices();
         let total_edges = g.num_directed_edges();
@@ -263,7 +265,12 @@ impl HybridBfs {
         let mut visited_count = 1usize;
         let mut edges_explored_total = 0usize;
         let mut bottom_up = false;
+        let mut status = RunStatus::Complete;
         while frontier_count != 0 {
+            if let Some(s) = ctl.stop_reason() {
+                status = s;
+                break;
+            }
             let t0 = Instant::now();
             let frontier_edges: usize = frontier.iter_set_bits().map(|u| g.degree(u)).sum();
             let unexplored = total_edges.saturating_sub(edges_explored_total);
@@ -446,7 +453,7 @@ impl HybridBfs {
 
         BfsResult {
             tree: BfsTree::new(root, pred.into_vec()),
-            trace: RunTrace { layers, num_threads: self.num_threads, ..Default::default() },
+            trace: RunTrace { layers, num_threads: self.num_threads, status, ..Default::default() },
         }
     }
 }
@@ -467,7 +474,7 @@ impl PreparedBfs for PreparedHybrid<'_> {
         "hybrid"
     }
 
-    fn run(&self, root: Vertex) -> BfsResult {
+    fn run_with(&self, root: Vertex, ctl: &RunControl) -> BfsResult {
         // backend dispatch, once per traversal (monomorphizes the whole
         // layer machinery under traverse)
         let fb = self.artifacts.feedback();
@@ -479,6 +486,7 @@ impl PreparedBfs for PreparedHybrid<'_> {
             self.padded.as_deref(),
             feedback,
             root,
+            ctl,
         ));
         if feedback.is_none() && self.engine.vpu == VpuMode::Auto {
             // non-sell hybrids record no feedback of their own: advance

@@ -1,0 +1,190 @@
+//! Cooperative run control: cancellation flags and deadlines for the
+//! traversal runtime.
+//!
+//! A BFS-as-a-service coordinator must be able to bound a traversal (a
+//! request deadline) or abandon it (a dropped client) without tearing down
+//! the worker pool. [`RunControl`] is the shared signal: a cancel flag plus
+//! an optional deadline, checked **at layer boundaries** by every engine of
+//! the ladder. Layer granularity is deliberate — the monomorphized VPU hot
+//! loops never see the control, so uninterrupted runs pay one atomic load
+//! (and, only when a deadline is armed, one `Instant::now`) per layer,
+//! which is noise next to a layer's edge volume. The serial queue engine
+//! has no layers, so it checks every [`SERIAL_CHECK_GRAIN`] dequeues.
+//!
+//! An interrupted traversal is not an error: it returns the **partial**
+//! result built so far, tagged with a [`RunStatus`]. Because every engine
+//! stops only at a layer boundary (or, for the queue form, between vertex
+//! expansions), the visited prefix is always internally consistent: every
+//! reached vertex carries its true BFS depth, so partial results validate
+//! against the serial oracle as a prefix (the chaos suite asserts this for
+//! every registered engine).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// How many vertices the queue-form serial engine expands between control
+/// checks (it has no layer boundaries to piggyback on).
+pub const SERIAL_CHECK_GRAIN: usize = 1024;
+
+/// How a traversal ended.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RunStatus {
+    /// The frontier drained — the result is the full BFS tree.
+    #[default]
+    Complete,
+    /// The run's deadline passed; the result is the visited prefix.
+    TimedOut,
+    /// The run was cancelled; the result is the visited prefix.
+    Cancelled,
+}
+
+impl RunStatus {
+    /// True when the traversal ran to completion.
+    #[inline]
+    pub fn is_complete(self) -> bool {
+        self == RunStatus::Complete
+    }
+}
+
+/// Process-wide monotonic anchor: deadlines are stored as nanosecond
+/// offsets from this instant so the control stays const-constructible
+/// (`Instant` itself cannot live in an atomic).
+fn anchor() -> Instant {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    *ANCHOR.get_or_init(Instant::now)
+}
+
+/// Shared cancel-flag + optional deadline, threaded through
+/// [`crate::bfs::PreparedBfs::run_batch_with`] and checked at layer
+/// boundaries by every engine.
+///
+/// Cloneable by `Arc`: the coordinator hands one control to all workers of
+/// a job, and an external caller holding the same `Arc` can cancel the
+/// whole job mid-flight.
+pub struct RunControl {
+    cancelled: AtomicBool,
+    /// Deadline as nanos-since-[`anchor`], `u64::MAX` = none armed.
+    deadline_ns: AtomicU64,
+}
+
+impl Default for RunControl {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for RunControl {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RunControl")
+            .field("cancelled", &self.is_cancelled())
+            .field("deadline_armed", &(self.deadline_ns.load(Ordering::Relaxed) != u64::MAX))
+            .finish()
+    }
+}
+
+impl RunControl {
+    /// A fresh control: not cancelled, no deadline.
+    pub const fn new() -> Self {
+        RunControl {
+            cancelled: AtomicBool::new(false),
+            deadline_ns: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    /// The shared "never stop" control — what the plain
+    /// [`crate::bfs::PreparedBfs::run`] entry points pass down, so
+    /// uncontrolled callers never allocate one.
+    pub fn unbounded() -> &'static RunControl {
+        static UNBOUNDED: RunControl = RunControl::new();
+        &UNBOUNDED
+    }
+
+    /// Ask every traversal sharing this control to stop at its next check.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// True once [`RunControl::cancel`] was called.
+    #[inline]
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
+    /// Arm (or re-arm) the deadline `d` from now. A zero `d` trips at the
+    /// very next check — useful for deterministic tests.
+    pub fn arm_deadline_in(&self, d: Duration) {
+        let now = anchor().elapsed().as_nanos() as u64;
+        let ns = now.saturating_add(d.as_nanos().min(u64::MAX as u128) as u64);
+        // MAX means "none", so a pathological far-future deadline clamps
+        // one tick below it
+        self.deadline_ns.store(ns.min(u64::MAX - 1), Ordering::Relaxed);
+    }
+
+    /// True when a deadline is armed and has passed.
+    #[inline]
+    pub fn deadline_exceeded(&self) -> bool {
+        let deadline = self.deadline_ns.load(Ordering::Relaxed);
+        deadline != u64::MAX && anchor().elapsed().as_nanos() as u64 >= deadline
+    }
+
+    /// The per-layer check: why (if at all) the traversal should stop now.
+    /// Cancellation wins over the deadline; the `Instant::now` for the
+    /// deadline test is only taken when one is armed.
+    #[inline]
+    pub fn stop_reason(&self) -> Option<RunStatus> {
+        if self.is_cancelled() {
+            return Some(RunStatus::Cancelled);
+        }
+        if self.deadline_exceeded() {
+            return Some(RunStatus::TimedOut);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_control_never_stops() {
+        let c = RunControl::new();
+        assert_eq!(c.stop_reason(), None);
+        assert!(!c.is_cancelled());
+        assert!(!c.deadline_exceeded());
+        assert_eq!(RunControl::unbounded().stop_reason(), None);
+    }
+
+    #[test]
+    fn cancel_is_sticky_and_wins_over_deadline() {
+        let c = RunControl::new();
+        c.arm_deadline_in(Duration::ZERO);
+        c.cancel();
+        assert_eq!(c.stop_reason(), Some(RunStatus::Cancelled));
+        assert_eq!(c.stop_reason(), Some(RunStatus::Cancelled), "sticky");
+    }
+
+    #[test]
+    fn zero_deadline_trips_immediately() {
+        let c = RunControl::new();
+        assert_eq!(c.stop_reason(), None);
+        c.arm_deadline_in(Duration::ZERO);
+        assert_eq!(c.stop_reason(), Some(RunStatus::TimedOut));
+    }
+
+    #[test]
+    fn future_deadline_does_not_trip() {
+        let c = RunControl::new();
+        c.arm_deadline_in(Duration::from_secs(3600));
+        assert_eq!(c.stop_reason(), None);
+    }
+
+    #[test]
+    fn status_default_is_complete() {
+        assert_eq!(RunStatus::default(), RunStatus::Complete);
+        assert!(RunStatus::Complete.is_complete());
+        assert!(!RunStatus::TimedOut.is_complete());
+        assert!(!RunStatus::Cancelled.is_complete());
+    }
+}

@@ -55,6 +55,7 @@
 
 pub mod artifacts;
 pub mod bitrace_free;
+pub mod control;
 pub mod bottom_up;
 pub mod multi_source;
 pub mod parallel;
@@ -71,6 +72,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 pub use artifacts::{ComponentMap, DegreeStats, GraphArtifacts};
+pub use control::{RunControl, RunStatus};
 
 use crate::graph::Csr;
 use crate::simd::VpuCounters;
@@ -223,6 +225,10 @@ pub struct RunTrace {
     /// backend. Warm-up timings are emulation timings, so TEPS aggregates
     /// exclude flagged runs ([`crate::harness::stats::TepsStats`]).
     pub counted_warmup: bool,
+    /// How the traversal ended ([`RunStatus::Complete`] unless the run's
+    /// [`RunControl`] stopped it early — then `layers` and the tree cover
+    /// only the visited prefix).
+    pub status: RunStatus,
 }
 
 impl RunTrace {
@@ -274,8 +280,12 @@ pub trait BfsEngine {
         artifacts: Arc<GraphArtifacts>,
     ) -> Result<Box<dyn PreparedBfs + 'g>>;
 
-    /// Phase 1: bind the engine to `g` with fresh artifacts.
+    /// Phase 1: bind the engine to `g` with fresh artifacts. The graph's
+    /// structure is validated first ([`Csr::validate_structure`]) so a
+    /// corrupt CSR surfaces as a structured error here, never as
+    /// out-of-bounds indexing deep inside a layout build or a lane gather.
     fn prepare<'g>(&self, g: &'g Csr) -> Result<Box<dyn PreparedBfs + 'g>> {
+        g.validate_structure()?;
         self.prepare_with(g, Arc::new(GraphArtifacts::for_graph(g)))
     }
 
@@ -295,18 +305,32 @@ pub trait PreparedBfs: Sync {
     /// Short name of the underlying engine.
     fn name(&self) -> &'static str;
 
-    /// Traverse the prepared graph from `root`.
-    fn run(&self, root: Vertex) -> BfsResult;
+    /// Traverse the prepared graph from `root` under `ctl` — the required
+    /// primitive. Engines check the control at layer boundaries and, when
+    /// it trips, return the visited prefix with the matching
+    /// [`RunStatus`] in the trace instead of the full tree.
+    fn run_with(&self, root: Vertex, ctl: &RunControl) -> BfsResult;
 
-    /// Traverse the prepared graph from every root of `roots`, returning
-    /// one result per root **in root order**. The provided implementation
-    /// loops [`PreparedBfs::run`], so every engine accepts batches of any
-    /// size; engines with a genuinely batched traversal (the MS-BFS
-    /// [`multi_source`] engine) override it to share one traversal across
-    /// the batch. Duplicate roots are allowed and yield independent
-    /// results.
+    /// Traverse the prepared graph from `root`, uncontrolled (no deadline,
+    /// no cancellation).
+    fn run(&self, root: Vertex) -> BfsResult {
+        self.run_with(root, RunControl::unbounded())
+    }
+
+    /// Traverse the prepared graph from every root of `roots` under `ctl`,
+    /// returning one result per root **in root order**. The provided
+    /// implementation loops [`PreparedBfs::run_with`], so every engine
+    /// accepts batches of any size; engines with a genuinely batched
+    /// traversal (the MS-BFS [`multi_source`] engine) override it to share
+    /// one traversal across the batch. Duplicate roots are allowed and
+    /// yield independent results.
+    fn run_batch_with(&self, roots: &[Vertex], ctl: &RunControl) -> Vec<BfsResult> {
+        roots.iter().map(|&r| self.run_with(r, ctl)).collect()
+    }
+
+    /// Uncontrolled batch entry point (see [`PreparedBfs::run_batch_with`]).
     fn run_batch(&self, roots: &[Vertex]) -> Vec<BfsResult> {
-        roots.iter().map(|&r| self.run(r)).collect()
+        self.run_batch_with(roots, RunControl::unbounded())
     }
 
     /// The per-graph artifacts this instance was prepared with.
@@ -318,7 +342,7 @@ pub trait PreparedBfs: Sync {
 /// enough to plug into the two-phase API through [`PreparedStateless`].
 pub(crate) trait StatelessBfs: Sync {
     fn name(&self) -> &'static str;
-    fn traverse(&self, g: &Csr, root: Vertex) -> BfsResult;
+    fn traverse(&self, g: &Csr, root: Vertex, ctl: &RunControl) -> BfsResult;
 }
 
 /// A [`PreparedBfs`] for [`StatelessBfs`] engines: just the engine config,
@@ -340,8 +364,8 @@ impl<E: StatelessBfs> PreparedBfs for PreparedStateless<'_, E> {
         self.engine.name()
     }
 
-    fn run(&self, root: Vertex) -> BfsResult {
-        self.engine.traverse(self.g, root)
+    fn run_with(&self, root: Vertex, ctl: &RunControl) -> BfsResult {
+        self.engine.traverse(self.g, root, ctl)
     }
 
     fn artifacts(&self) -> &GraphArtifacts {

@@ -95,7 +95,10 @@ use super::sell_bottom_up::LanePack;
 use super::sell_vectorized::{pack_frontier, PackedItem, SIGMA_AUTO};
 use super::state::{SharedBitmap, SharedPred};
 use super::vectorized::SimdOpts;
-use super::{BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, RunTrace};
+use super::{
+    BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, RunControl, RunStatus,
+    RunTrace,
+};
 use crate::graph::sell::{Sell16, SELL_C};
 use crate::graph::{Bitmap, Csr};
 use crate::simd::backend::{resolve, VpuBackend, VpuMode};
@@ -519,6 +522,7 @@ impl MultiSourceSellBfs {
         feedback: &PolicyFeedback,
         components: Option<&ComponentMap>,
         roots: &[Vertex],
+        ctl: &RunControl,
     ) -> Vec<BfsResult> {
         let k = roots.len();
         debug_assert!((1..=MS_WAVE).contains(&k), "wave width {k} out of range");
@@ -566,7 +570,14 @@ impl MultiSourceSellBfs {
         // would keep, one bit / cell per root
         let mut bu_flags = 0u32;
         let mut explored = [0usize; MS_WAVE];
+        // a stop applies to the whole wave: every root of the wave gets the
+        // same status and keeps its visited prefix
+        let mut status = RunStatus::Complete;
         while union_count != 0 {
+            if let Some(s) = ctl.stop_reason() {
+                status = s;
+                break;
+            }
             let t0 = Instant::now();
 
             // per-root layer accounting from the union frontier: a root's
@@ -753,7 +764,12 @@ impl MultiSourceSellBfs {
             .zip(rows)
             .map(|((pred, &root), layers)| BfsResult {
                 tree: BfsTree::new(root, pred.into_vec()),
-                trace: RunTrace { layers, num_threads: self.num_threads, ..Default::default() },
+                trace: RunTrace {
+                    layers,
+                    num_threads: self.num_threads,
+                    status,
+                    ..Default::default()
+                },
             })
             .collect()
     }
@@ -787,11 +803,13 @@ impl PreparedBfs for PreparedMultiSource<'_> {
         "hybrid-sell-ms"
     }
 
-    fn run(&self, root: Vertex) -> BfsResult {
-        self.run_batch(std::slice::from_ref(&root)).pop().expect("wave returned no result")
+    fn run_with(&self, root: Vertex, ctl: &RunControl) -> BfsResult {
+        self.run_batch_with(std::slice::from_ref(&root), ctl)
+            .pop()
+            .expect("wave returned no result")
     }
 
-    fn run_batch(&self, roots: &[Vertex]) -> Vec<BfsResult> {
+    fn run_batch_with(&self, roots: &[Vertex], ctl: &RunControl) -> Vec<BfsResult> {
         let mut out = Vec::with_capacity(roots.len());
         let fb = self.artifacts.feedback();
         for wave in roots.chunks(MS_WAVE) {
@@ -804,6 +822,7 @@ impl PreparedBfs for PreparedMultiSource<'_> {
                 fb,
                 self.components.as_deref(),
                 wave,
+                ctl,
             ));
             if warmup {
                 for r in &mut results {

@@ -20,7 +20,7 @@ use anyhow::Result;
 use super::state::{SharedBitmap, SharedPred};
 use super::{
     BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, PreparedStateless,
-    RunTrace, StatelessBfs, WORD_GRAIN,
+    RunControl, RunStatus, RunTrace, StatelessBfs, WORD_GRAIN,
 };
 use crate::graph::bitmap::BITS_PER_WORD;
 use crate::graph::{Bitmap, Csr};
@@ -52,7 +52,7 @@ impl StatelessBfs for ParallelBfs {
         "non-simd"
     }
 
-    fn traverse(&self, g: &Csr, root: Vertex) -> BfsResult {
+    fn traverse(&self, g: &Csr, root: Vertex, ctl: &RunControl) -> BfsResult {
         let n = g.num_vertices();
         let pred = SharedPred::new_infinity(n);
         let visited = SharedBitmap::new(n);
@@ -66,8 +66,13 @@ impl StatelessBfs for ParallelBfs {
         let mut layers = Vec::new();
         let mut layer = 0usize;
         let mut frontier_count = 1usize;
+        let mut status = RunStatus::Complete;
         while frontier_count != 0 {
             // line 7
+            if let Some(s) = ctl.stop_reason() {
+                status = s;
+                break;
+            }
             let t0 = Instant::now();
             let in_words = input.words();
             let accs: Vec<LayerAcc> = parallel_for_dynamic(
@@ -125,7 +130,7 @@ impl StatelessBfs for ParallelBfs {
 
         BfsResult {
             tree: BfsTree::new(root, pred.into_vec()),
-            trace: RunTrace { layers, num_threads: self.num_threads, ..Default::default() },
+            trace: RunTrace { layers, num_threads: self.num_threads, status, ..Default::default() },
         }
     }
 }

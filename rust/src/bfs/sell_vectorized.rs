@@ -42,7 +42,10 @@ use super::state::{SharedBitmap, SharedPred};
 use super::vectorized::{
     explore_layer_per_vertex, restore_layer_simd, scalar_fallback_layer, SimdOpts,
 };
-use super::{BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, RunTrace};
+use super::{
+    BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, RunControl, RunStatus,
+    RunTrace,
+};
 use crate::graph::bitmap::BITS_PER_WORD;
 use crate::graph::sell::{Sell16, SELL_C};
 use crate::graph::{Adjacency, Bitmap, Csr, PaddedCsr};
@@ -428,6 +431,7 @@ impl SellBfs {
         padded: Option<&PaddedCsr>,
         feedback: Option<&PolicyFeedback>,
         root: Vertex,
+        ctl: &RunControl,
     ) -> BfsResult {
         let step = SellStep {
             num_threads: self.num_threads,
@@ -452,7 +456,12 @@ impl SellBfs {
         let mut layer = 0usize;
         let mut frontier_count = 1usize;
         let mut nontrivial_seen = 0usize;
+        let mut status = RunStatus::Complete;
         while frontier_count != 0 {
+            if let Some(s) = ctl.stop_reason() {
+                status = s;
+                break;
+            }
             let t0 = Instant::now();
             let input_edges: usize = input.iter_set_bits().map(|u| g.degree(u)).sum();
             let vectorize = self.policy.vectorize(nontrivial_seen, frontier_count, input_edges);
@@ -504,7 +513,7 @@ impl SellBfs {
 
         BfsResult {
             tree: BfsTree::new(root, pred.into_vec()),
-            trace: RunTrace { layers, num_threads: self.num_threads, ..Default::default() },
+            trace: RunTrace { layers, num_threads: self.num_threads, status, ..Default::default() },
         }
     }
 
@@ -534,7 +543,7 @@ impl PreparedBfs for PreparedSell<'_> {
         "sell"
     }
 
-    fn run(&self, root: Vertex) -> BfsResult {
+    fn run_with(&self, root: Vertex, ctl: &RunControl) -> BfsResult {
         // backend dispatch, once per traversal; the traverse (and every
         // layer helper under it) monomorphizes per backend
         let (select, warmup) =
@@ -545,6 +554,7 @@ impl PreparedBfs for PreparedSell<'_> {
             self.padded.as_deref(),
             Some(self.artifacts.feedback()),
             root,
+            ctl,
         ));
         r.trace.counted_warmup = warmup;
         r

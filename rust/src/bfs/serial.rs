@@ -11,9 +11,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use super::control::SERIAL_CHECK_GRAIN;
 use super::{
     BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, PreparedStateless,
-    RunTrace, StatelessBfs,
+    RunControl, RunStatus, RunTrace, StatelessBfs,
 };
 use crate::graph::{Bitmap, Csr};
 use crate::{Pred, Vertex, PRED_INFINITY};
@@ -28,7 +29,7 @@ impl StatelessBfs for SerialQueueBfs {
         "serial-queue"
     }
 
-    fn traverse(&self, g: &Csr, root: Vertex) -> BfsResult {
+    fn traverse(&self, g: &Csr, root: Vertex, ctl: &RunControl) -> BfsResult {
         let start = Instant::now();
         let n = g.num_vertices();
         let mut pred: Vec<Pred> = vec![PRED_INFINITY; n];
@@ -39,7 +40,21 @@ impl StatelessBfs for SerialQueueBfs {
         queue.push_back(root);
         let mut edges_scanned = 0usize;
         let mut traversed = 0usize;
+        let mut status = RunStatus::Complete;
+        // No layer boundaries to piggyback the control check on: check
+        // every SERIAL_CHECK_GRAIN dequeues instead. A vertex already
+        // queued when the run stops keeps its pred, so the partial tree
+        // still assigns every reached vertex its true BFS depth.
+        let mut since_check = 0usize;
         while let Some(u) = queue.pop_front() {
+            since_check += 1;
+            if since_check >= SERIAL_CHECK_GRAIN {
+                since_check = 0;
+                if let Some(s) = ctl.stop_reason() {
+                    status = s;
+                    break;
+                }
+            }
             for &v in g.neighbors(u) {
                 edges_scanned += 1;
                 if !visited.test_bit(v) {
@@ -60,6 +75,7 @@ impl StatelessBfs for SerialQueueBfs {
                 ..Default::default()
             }],
             num_threads: 1,
+            status,
             ..Default::default()
         };
         BfsResult { tree: BfsTree::new(root, pred), trace }
@@ -90,7 +106,7 @@ impl StatelessBfs for SerialLayeredBfs {
         "serial-layered"
     }
 
-    fn traverse(&self, g: &Csr, root: Vertex) -> BfsResult {
+    fn traverse(&self, g: &Csr, root: Vertex, ctl: &RunControl) -> BfsResult {
         let n = g.num_vertices();
         let mut pred: Vec<Pred> = vec![PRED_INFINITY; n];
         let mut visited = Bitmap::new(n);
@@ -105,8 +121,13 @@ impl StatelessBfs for SerialLayeredBfs {
 
         let mut layers = Vec::new();
         let mut layer = 0usize;
+        let mut status = RunStatus::Complete;
         while !input.is_empty() {
             // line 7
+            if let Some(s) = ctl.stop_reason() {
+                status = s;
+                break;
+            }
             let t0 = Instant::now();
             let mut edges_scanned = 0usize;
             for &u in &input {
@@ -134,7 +155,10 @@ impl StatelessBfs for SerialLayeredBfs {
             output.clear(); // line 16 (out ← 0)
             layer += 1;
         }
-        BfsResult { tree: BfsTree::new(root, pred), trace: RunTrace { layers, num_threads: 1, ..Default::default() } }
+        BfsResult {
+            tree: BfsTree::new(root, pred),
+            trace: RunTrace { layers, num_threads: 1, status, ..Default::default() },
+        }
     }
 }
 

@@ -40,7 +40,8 @@ use anyhow::Result;
 use super::policy::LayerPolicy;
 use super::state::{SharedBitmap, SharedPred};
 use super::{
-    BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, RunTrace, WORD_GRAIN,
+    BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, RunControl, RunStatus,
+    RunTrace, WORD_GRAIN,
 };
 use crate::graph::bitmap::BITS_PER_WORD;
 use crate::graph::{Adjacency, Bitmap, Csr, PaddedCsr};
@@ -490,7 +491,7 @@ impl PreparedBfs for PreparedSimd<'_> {
         "simd"
     }
 
-    fn run(&self, root: Vertex) -> BfsResult {
+    fn run_with(&self, root: Vertex, ctl: &RunControl) -> BfsResult {
         // backend dispatch, once per traversal: the layer loops below
         // monomorphize per backend (crate::with_vpu_backend)
         let fb = self.artifacts.feedback();
@@ -498,7 +499,8 @@ impl PreparedBfs for PreparedSimd<'_> {
         let mut r = crate::with_vpu_backend!(select, V, self.engine.traverse::<V>(
             self.g,
             self.padded.as_deref(),
-            root
+            root,
+            ctl
         ));
         if self.engine.vpu == VpuMode::Auto {
             // the simd engine records no policy feedback of its own, so
@@ -535,7 +537,13 @@ impl VectorizedBfs {
     /// One traversal over `g`, exploring through `padded` when present,
     /// on VPU backend `V` (monomorphized per backend by the dispatch in
     /// [`PreparedSimd::run`]).
-    fn traverse<V: VpuBackend>(&self, g: &Csr, padded: Option<&PaddedCsr>, root: Vertex) -> BfsResult {
+    fn traverse<V: VpuBackend>(
+        &self,
+        g: &Csr,
+        padded: Option<&PaddedCsr>,
+        root: Vertex,
+        ctl: &RunControl,
+    ) -> BfsResult {
         let n = g.num_vertices();
         let nodes = n as Pred;
         let pred = SharedPred::new_infinity(n);
@@ -551,7 +559,12 @@ impl VectorizedBfs {
         let mut layer = 0usize;
         let mut frontier_count = 1usize;
         let mut nontrivial_seen = 0usize;
+        let mut status = RunStatus::Complete;
         while frontier_count != 0 {
+            if let Some(s) = ctl.stop_reason() {
+                status = s;
+                break;
+            }
             let t0 = Instant::now();
             // estimate the layer's edge volume for the policy decision
             let input_edges: usize =
@@ -612,7 +625,7 @@ impl VectorizedBfs {
 
         BfsResult {
             tree: BfsTree::new(root, pred.into_vec()),
-            trace: RunTrace { layers, num_threads: self.num_threads, ..Default::default() },
+            trace: RunTrace { layers, num_threads: self.num_threads, status, ..Default::default() },
         }
     }
 }

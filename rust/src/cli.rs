@@ -102,6 +102,12 @@ COMMANDS:
                --batch-roots N (1)  roots per traversal batch; engines
                         without a batched traversal loop internally,
                         hybrid-sell-ms shares one walk per 16-root wave
+               --deadline-ms N (unbounded)  traversal-phase deadline:
+                        engines stop at the next layer boundary once it
+                        passes; interrupted roots keep their visited
+                        prefix and are excluded from TEPS statistics
+               --max-attempts N (3)  attempts per root before it counts
+                        as failed; retries degrade counted VPU -> serial
                --sigma N|global|auto (auto)  SELL σ sort window
                         (engines with a SELL layout: sell, sell-noopt,
                          hybrid-sell, hybrid-sell-bu, hybrid-sell-ms;

@@ -1,0 +1,88 @@
+//! Structured coordinator errors.
+//!
+//! `run_job` used to surface every failure as a stringly `anyhow` chain,
+//! which a serving front end cannot dispatch on (is the *request* bad, or
+//! the *runtime*?). [`CoordinatorError`] classifies the job-level failure
+//! modes instead; per-root failures never reach this type — they are
+//! reported as [`super::job::RootOutcome::Failed`] entries inside a
+//! well-formed [`super::job::JobOutcome`].
+//!
+//! The enum implements [`std::error::Error`], so callers living on
+//! `anyhow` keep composing with `?` through the blanket conversion.
+
+use crate::graph::CsrStructureError;
+use crate::Vertex;
+
+/// Why a job could not run (or could not even start). Every variant is a
+/// *job-level* fault: nothing here is retried, because retrying cannot
+/// help — the graph is corrupt, the request is malformed, or the engine
+/// cannot be built for this configuration.
+#[derive(Debug)]
+pub enum CoordinatorError {
+    /// The job's CSR failed [`crate::graph::Csr::validate_structure`] —
+    /// rejected before any engine touches it.
+    InvalidGraph(CsrStructureError),
+    /// A requested root names a vertex outside the graph.
+    RootOutOfBounds { root: Vertex, vertices: usize },
+    /// The engine registry could not construct the requested engine.
+    EngineConstruction(anyhow::Error),
+    /// The engine's per-graph prepare phase failed (bad thresholds,
+    /// missing PJRT artifacts, ...).
+    Preparation(anyhow::Error),
+}
+
+impl std::fmt::Display for CoordinatorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CoordinatorError::InvalidGraph(e) => write!(f, "invalid graph: {e}"),
+            CoordinatorError::RootOutOfBounds { root, vertices } => {
+                write!(f, "root {root} out of bounds for a {vertices}-vertex graph")
+            }
+            // the vendored anyhow::Error is not a std error, so its causes
+            // are folded into the message here instead of source()
+            CoordinatorError::EngineConstruction(e) => {
+                write!(f, "engine construction failed: {e:#}")
+            }
+            CoordinatorError::Preparation(e) => write!(f, "engine preparation failed: {e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for CoordinatorError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CoordinatorError::InvalidGraph(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<CsrStructureError> for CoordinatorError {
+    fn from(e: CsrStructureError) -> Self {
+        CoordinatorError::InvalidGraph(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_failure_mode() {
+        let e = CoordinatorError::RootOutOfBounds { root: 9, vertices: 4 };
+        assert!(e.to_string().contains("root 9"));
+        let e = CoordinatorError::InvalidGraph(CsrStructureError::EmptyOffsets);
+        assert!(e.to_string().contains("invalid graph"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn takes_anyhow() -> anyhow::Result<()> {
+            Err(CoordinatorError::RootOutOfBounds { root: 1, vertices: 1 })?;
+            Ok(())
+        }
+        let err = takes_anyhow().unwrap_err();
+        assert!(err.to_string().contains("out of bounds"));
+    }
+}

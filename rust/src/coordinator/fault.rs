@@ -1,0 +1,169 @@
+//! Fault injection for the traversal runtime — the chaos harness.
+//!
+//! A fault-tolerant coordinator is only trustworthy if its failure paths
+//! are *exercised*, not just written. A [`FaultPlan`] describes one
+//! deterministic fault — a worker panic, a deadline-blowing stall, or a
+//! dropped result vector — fired at a chosen batch of a job
+//! ([`super::job::RunPolicy::fault`]). The scheduler applies the plan
+//! around its normal `run_batch_with` call, so the injected fault travels
+//! the exact code path a real one would: `catch_unwind`, per-root error
+//! slots, the degradation-ladder retry.
+//!
+//! [`FaultInjector`] additionally packages the same plan as a
+//! [`PreparedBfs`] wrapper for tests that drive an engine directly,
+//! without a coordinator.
+//!
+//! Injection is test infrastructure, but it is compiled unconditionally:
+//! the integration chaos suite (a separate crate) needs it, and an unused
+//! `None` plan costs one branch per batch.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use crate::bfs::{BfsResult, GraphArtifacts, PreparedBfs, RunControl};
+use crate::Vertex;
+
+/// What the injected fault does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic inside the worker (exercises `catch_unwind` + retry).
+    Panic,
+    /// Sleep this long, then run normally (blows a deadline without
+    /// violating any engine invariant).
+    Stall(Duration),
+    /// Run the batch, then return an empty result vector (exercises the
+    /// missing-result hole path that used to be a coordinator panic).
+    DropResults,
+}
+
+/// One deterministic injected fault: `kind` fires at batch `at_batch`.
+/// When `sticky`, the fault also fires for every later batch *and* for
+/// every retry of the affected roots — the attempt-exhaustion scenario.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub at_batch: usize,
+    pub kind: FaultKind,
+    pub sticky: bool,
+}
+
+impl FaultPlan {
+    /// A one-shot panic at batch `b` (retries succeed).
+    pub fn panic_at(b: usize) -> Self {
+        FaultPlan { at_batch: b, kind: FaultKind::Panic, sticky: false }
+    }
+
+    /// A panic at batch `b` that also fails every retry — the root can
+    /// only exhaust its attempts.
+    pub fn sticky_panic_at(b: usize) -> Self {
+        FaultPlan { at_batch: b, kind: FaultKind::Panic, sticky: true }
+    }
+
+    /// A stall of `d` at batch `b` (the batch then runs normally).
+    pub fn stall_at(b: usize, d: Duration) -> Self {
+        FaultPlan { at_batch: b, kind: FaultKind::Stall(d), sticky: false }
+    }
+
+    /// Run batch `b` but drop its results.
+    pub fn drop_results_at(b: usize) -> Self {
+        FaultPlan { at_batch: b, kind: FaultKind::DropResults, sticky: false }
+    }
+
+    /// Does this plan fire for batch index `b`?
+    pub fn fires_at(&self, b: usize) -> bool {
+        b == self.at_batch || (self.sticky && b >= self.at_batch)
+    }
+
+    /// Run `go` (the real batch traversal) under this plan for batch `b`:
+    /// panic, stall-then-run, drop the results, or pass through untouched.
+    pub fn apply<F: FnOnce() -> Vec<BfsResult>>(&self, b: usize, go: F) -> Vec<BfsResult> {
+        if self.fires_at(b) {
+            match self.kind {
+                FaultKind::Panic => panic!("injected fault: panic at batch {b}"),
+                FaultKind::Stall(d) => std::thread::sleep(d),
+                FaultKind::DropResults => {
+                    let _ = go();
+                    return Vec::new();
+                }
+            }
+        }
+        go()
+    }
+}
+
+/// A [`PreparedBfs`] wrapper applying a [`FaultPlan`] by dispatch order:
+/// the Nth `run_batch_with` call fires the plan's batch-N fault. For
+/// engine-level tests without a coordinator; the scheduler itself injects
+/// by exact batch index instead (dispatch order races under multiple
+/// workers).
+pub struct FaultInjector<'a> {
+    inner: &'a dyn PreparedBfs,
+    plan: FaultPlan,
+    dispatched: AtomicUsize,
+}
+
+impl<'a> FaultInjector<'a> {
+    pub fn new(inner: &'a dyn PreparedBfs, plan: FaultPlan) -> Self {
+        FaultInjector { inner, plan, dispatched: AtomicUsize::new(0) }
+    }
+}
+
+impl PreparedBfs for FaultInjector<'_> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn run_with(&self, root: Vertex, ctl: &RunControl) -> BfsResult {
+        self.inner.run_with(root, ctl)
+    }
+
+    fn run_batch_with(&self, roots: &[Vertex], ctl: &RunControl) -> Vec<BfsResult> {
+        let idx = self.dispatched.fetch_add(1, Ordering::Relaxed);
+        self.plan.apply(idx, || self.inner.run_batch_with(roots, ctl))
+    }
+
+    fn artifacts(&self) -> &GraphArtifacts {
+        self.inner.artifacts()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_at_matches_plan() {
+        let p = FaultPlan::panic_at(2);
+        assert!(!p.fires_at(1));
+        assert!(p.fires_at(2));
+        assert!(!p.fires_at(3), "one-shot plans fire once");
+        let s = FaultPlan::sticky_panic_at(2);
+        assert!(!s.fires_at(1));
+        assert!(s.fires_at(2) && s.fires_at(7), "sticky plans stay fired");
+    }
+
+    #[test]
+    fn apply_passes_through_when_not_firing() {
+        let p = FaultPlan::panic_at(5);
+        let out = p.apply(0, Vec::new);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn apply_panics_when_firing() {
+        let p = FaultPlan::panic_at(0);
+        let r = std::panic::catch_unwind(|| p.apply(0, Vec::new));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn apply_drops_results() {
+        let p = FaultPlan::drop_results_at(0);
+        let mut ran = false;
+        let out = p.apply(0, || {
+            ran = true;
+            Vec::new()
+        });
+        assert!(ran, "DropResults still runs the traversal");
+        assert!(out.is_empty());
+    }
+}

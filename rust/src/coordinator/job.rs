@@ -1,10 +1,12 @@
 //! Job and result types for the coordinator.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use super::engine::EngineKind;
+use super::fault::FaultPlan;
 use crate::bfs::validate::ValidationReport;
-use crate::bfs::{GraphArtifacts, RunTrace};
+use crate::bfs::{GraphArtifacts, RunControl, RunStatus, RunTrace};
 use crate::graph::Csr;
 use crate::Vertex;
 
@@ -42,9 +44,39 @@ impl BatchPolicy {
     }
 }
 
+/// Fault-handling policy for one job: how long it may run, how it can be
+/// cancelled, how hard the coordinator retries a failed root, and (chaos
+/// harness only) which fault to inject.
+#[derive(Clone, Debug)]
+pub struct RunPolicy {
+    /// Bound on the job's *traversal* phase (preparation is excluded):
+    /// armed on the job's [`RunControl`] right before workers spawn, so
+    /// engines stop at their next layer boundary once it passes and
+    /// return [`RunStatus::TimedOut`] partial results.
+    pub deadline: Option<Duration>,
+    /// External control handle. A caller holding the same `Arc` can
+    /// [`RunControl::cancel`] the whole job mid-flight; `None` gives the
+    /// job a private control (still used for `deadline`).
+    pub control: Option<Arc<RunControl>>,
+    /// Total attempts per root (first run included) before the root is
+    /// reported as [`RootOutcome::Failed`]; clamped to ≥ 1. Attempt 2
+    /// retries on the job's engine degraded to the counted VPU backend,
+    /// later attempts fall back to the serial reference engine.
+    pub max_attempts: usize,
+    /// Chaos-harness fault to inject ([`FaultPlan`]); `None` in production.
+    pub fault: Option<FaultPlan>,
+}
+
+impl Default for RunPolicy {
+    fn default() -> Self {
+        RunPolicy { deadline: None, control: None, max_attempts: 3, fault: None }
+    }
+}
+
 /// One unit of coordinator work: run BFS from each of `roots` over `graph`
 /// with `engine`, optionally validating every tree. `batch` groups the
-/// roots into [`crate::bfs::PreparedBfs::run_batch`] calls.
+/// roots into [`crate::bfs::PreparedBfs::run_batch`] calls; `run` carries
+/// the fault-handling policy (deadline, cancellation, retries).
 #[derive(Clone)]
 pub struct BfsJob {
     pub id: u64,
@@ -53,6 +85,7 @@ pub struct BfsJob {
     pub engine: EngineKind,
     pub validate: bool,
     pub batch: BatchPolicy,
+    pub run: RunPolicy,
 }
 
 /// Result of one root's traversal.
@@ -99,13 +132,70 @@ impl RootRun {
             0.0
         }
     }
+
+    /// How the traversal ended (from the trace): `Complete`, or the
+    /// interruption reason when a deadline/cancellation stopped it early —
+    /// in which case `reached`/`edges_traversed` cover only the visited
+    /// prefix.
+    pub fn status(&self) -> RunStatus {
+        self.trace.status
+    }
 }
 
-/// Completed job.
+/// Per-root outcome inside a completed job: the traversal result, or a
+/// structured failure record when the root's worker panicked (or dropped
+/// its result) and every retry down the degradation ladder failed too. A
+/// missing result is **never** a coordinator panic — it is a `Failed`
+/// entry here, and the rest of the job's roots report normally.
+#[derive(Clone, Debug)]
+pub enum RootOutcome {
+    /// The root ran (possibly on a degraded retry; possibly interrupted —
+    /// see [`RootRun::status`]).
+    Ran(RootRun),
+    /// All `attempts` attempts failed; `error` describes the last failure.
+    Failed { root: Vertex, error: String, attempts: usize },
+}
+
+impl RootOutcome {
+    /// The root this outcome belongs to.
+    pub fn root(&self) -> Vertex {
+        match self {
+            RootOutcome::Ran(r) => r.root,
+            RootOutcome::Failed { root, .. } => *root,
+        }
+    }
+
+    /// The run, when the root ran.
+    pub fn run(&self) -> Option<&RootRun> {
+        match self {
+            RootOutcome::Ran(r) => Some(r),
+            RootOutcome::Failed { .. } => None,
+        }
+    }
+
+    /// Consume into the run, when the root ran.
+    pub fn into_run(self) -> Option<RootRun> {
+        match self {
+            RootOutcome::Ran(r) => Some(r),
+            RootOutcome::Failed { .. } => None,
+        }
+    }
+
+    pub fn is_failed(&self) -> bool {
+        matches!(self, RootOutcome::Failed { .. })
+    }
+}
+
+/// Completed job. A `JobOutcome` is **always well-formed**: exactly one
+/// [`RootOutcome`] per requested root, in root order, even when workers
+/// panicked or the job was interrupted — job-level errors are reserved for
+/// requests that could not run at all
+/// ([`super::error::CoordinatorError`]).
 #[derive(Clone, Debug)]
 pub struct JobOutcome {
     pub id: u64,
-    pub runs: Vec<RootRun>,
+    /// One entry per root, in root order.
+    pub outcomes: Vec<RootOutcome>,
     pub all_valid: bool,
     /// Wall seconds the job spent in its one-time prepare phase (engine
     /// construction + per-graph artifact build) before any root ran.
@@ -115,6 +205,18 @@ pub struct JobOutcome {
     /// policy-feedback channel — inspectable for reuse and for the
     /// built-exactly-once guarantee.
     pub artifacts: Arc<GraphArtifacts>,
+}
+
+impl JobOutcome {
+    /// The successful runs, in root order (failed roots skipped).
+    pub fn runs(&self) -> impl Iterator<Item = &RootRun> {
+        self.outcomes.iter().filter_map(RootOutcome::run)
+    }
+
+    /// The failed roots, in root order.
+    pub fn failures(&self) -> impl Iterator<Item = &RootOutcome> {
+        self.outcomes.iter().filter(|o| o.is_failed())
+    }
 }
 
 #[cfg(test)]

@@ -25,6 +25,19 @@ pub struct Metrics {
     /// bytes, different allocation — a reloaded graph) rather than the
     /// identity fast-path.
     artifact_cache_content_hits: AtomicUsize,
+    /// Entries evicted from the artifact cache (LRU, at capacity).
+    artifact_cache_evictions: AtomicUsize,
+    /// Worker batches that panicked and were caught by the coordinator.
+    worker_panics: AtomicUsize,
+    /// Retry attempts dispatched for failed roots (each rung of the
+    /// degradation ladder counts once per root).
+    root_retries: AtomicUsize,
+    /// Roots that ultimately succeeded on a degraded retry (counted VPU or
+    /// serial fallback) rather than the job's requested engine.
+    degraded_roots: AtomicUsize,
+    /// Roots that exhausted every attempt and were reported as
+    /// [`super::job::RootOutcome::Failed`].
+    failed_roots: AtomicUsize,
 }
 
 /// Point-in-time copy of the counters.
@@ -45,10 +58,23 @@ pub struct MetricsSnapshot {
     pub artifact_cache_hits: usize,
     /// Cache hits that matched by graph *content* (reloaded graphs).
     pub artifact_cache_content_hits: usize,
+    /// Entries the artifact cache evicted (LRU, at capacity).
+    pub artifact_cache_evictions: usize,
+    /// Worker batch panics caught and contained.
+    pub worker_panics: usize,
+    /// Retry attempts dispatched for failed roots.
+    pub root_retries: usize,
+    /// Roots recovered on a degraded engine.
+    pub degraded_roots: usize,
+    /// Roots that exhausted every attempt.
+    pub failed_roots: usize,
 }
 
 impl Metrics {
-    pub fn record_job(&self, runs: &[RootRun], preparation_seconds: f64, batches: usize) {
+    /// Record one completed job's successful runs (failed roots are
+    /// recorded separately via [`Metrics::record_failed_root`], so the
+    /// throughput aggregates only ever see real traversals).
+    pub fn record_job(&self, runs: &[&RootRun], preparation_seconds: f64, batches: usize) {
         self.jobs.fetch_add(1, Ordering::Relaxed);
         self.roots.fetch_add(runs.len(), Ordering::Relaxed);
         self.batches.fetch_add(batches, Ordering::Relaxed);
@@ -79,6 +105,31 @@ impl Metrics {
         }
     }
 
+    /// Count one LRU eviction from the artifact cache.
+    pub fn record_artifact_cache_eviction(&self) {
+        self.artifact_cache_evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one caught worker-batch panic.
+    pub fn record_worker_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one retry attempt for a failed root.
+    pub fn record_root_retry(&self) {
+        self.root_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one root recovered on a degraded engine.
+    pub fn record_degraded_root(&self) {
+        self.degraded_roots.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one root that exhausted every attempt.
+    pub fn record_failed_root(&self) {
+        self.failed_roots.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let edges = self.edges.load(Ordering::Relaxed);
         let secs = self.nanos.load(Ordering::Relaxed) as f64 / 1e9;
@@ -94,6 +145,11 @@ impl Metrics {
             artifact_cache_content_hits: self
                 .artifact_cache_content_hits
                 .load(Ordering::Relaxed),
+            artifact_cache_evictions: self.artifact_cache_evictions.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            root_retries: self.root_retries.load(Ordering::Relaxed),
+            degraded_roots: self.degraded_roots.load(Ordering::Relaxed),
+            failed_roots: self.failed_roots.load(Ordering::Relaxed),
         }
     }
 }
@@ -119,7 +175,7 @@ mod tests {
     #[test]
     fn aggregates() {
         let m = Metrics::default();
-        m.record_job(&[run(100, 0.5), run(300, 0.5)], 0.25, 2);
+        m.record_job(&[&run(100, 0.5), &run(300, 0.5)], 0.25, 2);
         let s = m.snapshot();
         assert_eq!(s.jobs, 1);
         assert_eq!(s.roots, 2);
@@ -140,7 +196,7 @@ mod tests {
     #[test]
     fn batched_jobs_record_fewer_batches_than_roots() {
         let m = Metrics::default();
-        m.record_job(&[run(10, 0.1), run(10, 0.1), run(10, 0.1)], 0.0, 1);
+        m.record_job(&[&run(10, 0.1), &run(10, 0.1), &run(10, 0.1)], 0.0, 1);
         let s = m.snapshot();
         assert_eq!(s.roots, 3);
         assert_eq!(s.batches, 1);
@@ -148,19 +204,39 @@ mod tests {
 
     #[test]
     fn warmup_roots_excluded_from_aggregate_teps() {
-        let warm = |edges: usize, seconds: f64| RootRun { counted_warmup: true, ..run(edges, seconds) };
+        let warm = |edges: usize, seconds: f64| RootRun {
+            counted_warmup: true,
+            ..run(edges, seconds)
+        };
         let m = Metrics::default();
         // two slow emulated warm-ups + one fast hw root: the aggregate
         // must reflect only the hw root
-        m.record_job(&[warm(100, 10.0), warm(100, 10.0), run(1000, 0.001)], 0.0, 3);
+        m.record_job(&[&warm(100, 10.0), &warm(100, 10.0), &run(1000, 0.001)], 0.0, 3);
         let s = m.snapshot();
         assert_eq!(s.roots, 3);
         assert_eq!(s.edges_traversed, 1000);
         assert!(s.aggregate_teps > 100_000.0, "warm-ups dragged TEPS: {}", s.aggregate_teps);
         // all-warm-up fallback: the emulated numbers still register
         let m = Metrics::default();
-        m.record_job(&[warm(100, 1.0)], 0.0, 1);
+        m.record_job(&[&warm(100, 1.0)], 0.0, 1);
         assert_eq!(m.snapshot().edges_traversed, 100);
+    }
+
+    #[test]
+    fn fault_counters_accumulate() {
+        let m = Metrics::default();
+        m.record_worker_panic();
+        m.record_root_retry();
+        m.record_root_retry();
+        m.record_degraded_root();
+        m.record_failed_root();
+        m.record_artifact_cache_eviction();
+        let s = m.snapshot();
+        assert_eq!(s.worker_panics, 1);
+        assert_eq!(s.root_retries, 2);
+        assert_eq!(s.degraded_roots, 1);
+        assert_eq!(s.failed_roots, 1);
+        assert_eq!(s.artifact_cache_evictions, 1);
     }
 
     #[test]

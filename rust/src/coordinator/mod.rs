@@ -9,18 +9,34 @@
 //! [`crate::bfs::PreparedBfs::run_batch`] entry point), selects the BFS
 //! engine, and aggregates [`metrics`].
 //!
+//! The coordinator is the crate's **fault boundary**: requests that cannot
+//! run are rejected up front as structured [`error::CoordinatorError`]s,
+//! worker panics are caught and retried down a degradation ladder, and
+//! deadlines/cancellation ([`job::RunPolicy`]) stop traversals at layer
+//! boundaries with well-formed partial results — so one bad root (or one
+//! buggy engine) never takes down a 64-root job, let alone the process.
+//!
 //! * [`engine`] — engine registry: every algorithm of the ladder plus the
 //!   PJRT-backed kernel engine, behind one constructor.
-//! * [`job`] — job + result types, including the [`job::BatchPolicy`].
+//! * [`job`] — job + result types, including the [`job::BatchPolicy`],
+//!   the [`job::RunPolicy`] fault policy, and per-root
+//!   [`job::RootOutcome`]s.
+//! * [`error`] — the job-level [`error::CoordinatorError`] taxonomy.
+//! * [`fault`] — deterministic fault injection for the chaos suite.
 //! * [`scheduler`] — root-batch worker pool + the content-addressed
-//!   artifact cache.
-//! * [`metrics`] — run counters and TEPS aggregation.
+//!   artifact cache (LRU-bounded).
+//! * [`metrics`] — run counters, TEPS aggregation, and fault/retry
+//!   accounting.
 
 pub mod engine;
+pub mod error;
+pub mod fault;
 pub mod job;
 pub mod metrics;
 pub mod scheduler;
 
 pub use engine::{make_engine, EngineKind};
-pub use job::{BatchPolicy, BfsJob, JobOutcome, RootRun};
+pub use error::CoordinatorError;
+pub use fault::{FaultInjector, FaultKind, FaultPlan};
+pub use job::{BatchPolicy, BfsJob, JobOutcome, RootOutcome, RootRun, RunPolicy};
 pub use scheduler::Coordinator;

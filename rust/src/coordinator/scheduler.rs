@@ -18,19 +18,56 @@
 //!    [`crate::bfs::PreparedBfs::run_batch`] until the job drains. Each
 //!    root's reported seconds are its equal share of its batch's wall
 //!    time; results arrive in root order regardless of completion order.
+//!
+//! The run phase is **fault-isolated**: each batch traversal runs inside
+//! `catch_unwind`, a panicking batch poisons nothing (both shared locks
+//! recover), and its roots are retried down a degradation ladder — the
+//! job's engine on the counted VPU backend first, the serial reference
+//! engine after that — bounded by [`super::job::RunPolicy::max_attempts`].
+//! A root that exhausts its attempts becomes a
+//! [`super::job::RootOutcome::Failed`] entry; the job itself still returns
+//! a well-formed [`JobOutcome`]. Job-level failures (corrupt graph,
+//! out-of-range root, unbuildable engine) are rejected up front as
+//! [`CoordinatorError`] before any worker spawns.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, Weak};
+use std::sync::{Arc, Mutex, MutexGuard, Weak};
 use std::time::Instant;
 
-use anyhow::Result;
-
 use super::engine::make_engine;
-use super::job::{BfsJob, JobOutcome, RootRun};
+use super::error::CoordinatorError;
+use super::job::{BfsJob, JobOutcome, RootOutcome, RootRun};
 use super::metrics::Metrics;
+use crate::bfs::serial::SerialLayeredBfs;
 use crate::bfs::validate::validate;
-use crate::bfs::{GraphArtifacts, PreparedBfs};
+use crate::bfs::{BfsEngine, BfsResult, GraphArtifacts, PreparedBfs, RunControl};
 use crate::graph::Csr;
+use crate::simd::VpuMode;
+use crate::Vertex;
+
+/// Lock a mutex, recovering the data if a previous holder panicked. Both
+/// structures this guards (the result slots, the artifact cache) are valid
+/// after any interrupted write — a panicking worker is contained by
+/// `catch_unwind` and must not wedge every later job on a poisoned lock.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// One root's result slot while workers run: unfilled, a finished run, or
+/// the error text of the failure that will drive its retry.
+type RootSlot = Option<Result<RootRun, String>>;
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
 
 /// Entries the artifact cache holds at most — a serving deployment repeats
 /// jobs over a handful of hot graphs, not hundreds.
@@ -68,9 +105,11 @@ pub struct Coordinator {
     /// [`crate::bfs::policy::PolicyFeedback`] channel. Keys are **content
     /// addressed** (graph fingerprint + σ), with a `Weak` identity
     /// fast-path per entry, so entries deliberately outlive their graphs:
-    /// dropping and reloading a graph between jobs still hits. Insertion
-    /// order, oldest evicted at [`ARTIFACT_CACHE_CAP`], which bounds the
-    /// retained layouts.
+    /// dropping and reloading a graph between jobs still hits. The vec is
+    /// kept in recency order (front = least recently used); the LRU entry
+    /// is evicted at [`ARTIFACT_CACHE_CAP`], which bounds the retained
+    /// layouts no matter how many distinct graphs a long-lived coordinator
+    /// sees.
     artifact_cache: Mutex<Vec<ArtifactCacheEntry>>,
 }
 
@@ -96,36 +135,46 @@ impl Coordinator {
     /// concurrent jobs never serialize behind an O(V + E) hash). A
     /// content hit refreshes the entry's identity fast-path so the
     /// following jobs on the same reloaded `Arc` skip hashing again.
+    ///
+    /// Every hit (and every insert) moves its entry to the back of the
+    /// vec, so the front is always the least-recently-used entry — the one
+    /// evicted at capacity.
     fn artifacts_for(&self, graph: &Arc<Csr>, sigma: usize) -> (Arc<GraphArtifacts>, CacheOutcome) {
-        let identity_hit = |cache: &[ArtifactCacheEntry]| {
-            cache
-                .iter()
-                .find(|e| {
-                    e.sigma == sigma
-                        && e.graph.upgrade().map(|g| Arc::ptr_eq(&g, graph)).unwrap_or(false)
-                })
-                .map(|e| Arc::clone(&e.artifacts))
+        // positions rather than references, so a hit can be re-queued
+        let identity_pos = |cache: &[ArtifactCacheEntry]| {
+            cache.iter().position(|e| {
+                e.sigma == sigma
+                    && e.graph.upgrade().map(|g| Arc::ptr_eq(&g, graph)).unwrap_or(false)
+            })
         };
-        if let Some(artifacts) = identity_hit(&self.artifact_cache.lock().unwrap()) {
-            return (artifacts, CacheOutcome::IdentityHit);
+        // move entry `i` to the MRU end and return its artifacts
+        fn touch(cache: &mut Vec<ArtifactCacheEntry>, i: usize) -> Arc<GraphArtifacts> {
+            let e = cache.remove(i);
+            let artifacts = Arc::clone(&e.artifacts);
+            cache.push(e);
+            artifacts
+        }
+        {
+            let mut cache = lock_unpoisoned(&self.artifact_cache);
+            if let Some(i) = identity_pos(&cache) {
+                return (touch(&mut cache, i), CacheOutcome::IdentityHit);
+            }
         }
         // hash without the lock, then re-check: another worker may have
         // inserted (or re-pointed) an entry for this graph meanwhile
         let content = graph.content_hash();
-        let mut cache = self.artifact_cache.lock().unwrap();
-        if let Some(artifacts) = identity_hit(&cache) {
-            return (artifacts, CacheOutcome::IdentityHit);
+        let mut cache = lock_unpoisoned(&self.artifact_cache);
+        if let Some(i) = identity_pos(&cache) {
+            return (touch(&mut cache, i), CacheOutcome::IdentityHit);
         }
-        if let Some(e) = cache
-            .iter_mut()
-            .find(|e| e.sigma == sigma && e.content == content)
-        {
-            e.graph = Arc::downgrade(graph);
-            return (Arc::clone(&e.artifacts), CacheOutcome::ContentHit);
+        if let Some(i) = cache.iter().position(|e| e.sigma == sigma && e.content == content) {
+            cache[i].graph = Arc::downgrade(graph);
+            return (touch(&mut cache, i), CacheOutcome::ContentHit);
         }
         let artifacts = Arc::new(GraphArtifacts::for_graph(graph));
         if cache.len() >= ARTIFACT_CACHE_CAP {
             cache.remove(0);
+            self.metrics.record_artifact_cache_eviction();
         }
         cache.push(ArtifactCacheEntry {
             graph: Arc::downgrade(graph),
@@ -136,32 +185,83 @@ impl Coordinator {
         (artifacts, CacheOutcome::Miss)
     }
 
-    /// Execute a job to completion.
-    pub fn run_job(&self, job: &BfsJob) -> Result<JobOutcome> {
+    /// Package one engine result as a [`RootRun`]. Interrupted runs carry
+    /// a true visited *prefix* but not a complete BFS tree, so validation
+    /// (when the job asks for it) only judges complete traversals.
+    fn root_run(
+        job: &BfsJob,
+        root: Vertex,
+        r: BfsResult,
+        seconds: f64,
+        prep_share: f64,
+    ) -> RootRun {
+        let validation = (job.validate && r.trace.status.is_complete())
+            .then(|| validate(&job.graph, &r.tree));
+        RootRun {
+            root,
+            // Graph500 TEPS: undirected edges of the
+            // reached component ≈ directed scans / 2
+            edges_traversed: r.trace.total_edges_scanned() / 2,
+            reached: r.tree.reached_count(),
+            seconds,
+            preparation_seconds: prep_share,
+            counted_warmup: r.trace.counted_warmup,
+            trace: r.trace,
+            validation,
+        }
+    }
+
+    /// Execute a job to completion. `Err` means the *request* could not
+    /// run (corrupt graph, bad root, unbuildable engine); once workers
+    /// start, every per-root failure is contained inside the returned
+    /// [`JobOutcome`].
+    pub fn run_job(&self, job: &BfsJob) -> Result<JobOutcome, CoordinatorError> {
+        // Phase 0 — reject malformed requests before any engine touches
+        // them: a corrupt CSR would otherwise surface as an out-of-bounds
+        // panic deep inside whichever engine hit it first.
+        job.graph.validate_structure()?;
+        let vertices = job.graph.num_vertices();
+        if let Some(&root) = job.roots.iter().find(|&&r| r as usize >= vertices) {
+            return Err(CoordinatorError::RootOutOfBounds { root, vertices });
+        }
+
         // Phase 1 — fail fast: construct the engine and prepare the graph
         // once, before any worker spawns. The PJRT engine compiles its
         // executable here; the sell engines build their Sell16 layout here
         // — exactly once per *graph content*: repeated jobs on a cached
         // (or reloaded) graph reuse the artifacts and skip the build.
         let t_prep = Instant::now();
-        let engine = make_engine(&job.engine)?;
+        let engine = make_engine(&job.engine).map_err(CoordinatorError::EngineConstruction)?;
         let (artifacts, outcome) = self.artifacts_for(&job.graph, job.engine.sigma_key());
         match outcome {
             CacheOutcome::IdentityHit => self.metrics.record_artifact_cache_hit(false),
             CacheOutcome::ContentHit => self.metrics.record_artifact_cache_hit(true),
             CacheOutcome::Miss => {}
         }
-        let prepared = engine.prepare_with(&job.graph, Arc::clone(&artifacts))?;
+        let prepared = engine
+            .prepare_with(&job.graph, Arc::clone(&artifacts))
+            .map_err(CoordinatorError::Preparation)?;
         let preparation_seconds = t_prep.elapsed().as_secs_f64();
         let prep_share = preparation_seconds / job.roots.len().max(1) as f64;
 
+        // The job's run control: the caller's handle when one was passed
+        // (external cancellation), else a private one. The deadline is
+        // armed *after* preparation so it bounds traversal time only, and
+        // before any worker spawns so every batch observes it.
+        let ctl: Arc<RunControl> = job.run.control.clone().unwrap_or_default();
+        if let Some(d) = job.run.deadline {
+            ctl.arm_deadline_in(d);
+        }
+
         // Phase 2 — workers share the prepared engine by reference and
-        // pull root batches from a common cursor.
+        // pull root batches from a common cursor. Each batch runs inside
+        // `catch_unwind`: a panicking engine fails its own batch's slots
+        // and nothing else.
         let prepared: &dyn PreparedBfs = prepared.as_ref();
         let width = job.batch.width();
         let num_batches = job.batch.num_batches(job.roots.len());
         let cursor = AtomicUsize::new(0);
-        let results: Mutex<Vec<Option<RootRun>>> = Mutex::new(vec![None; job.roots.len()]);
+        let slots: Mutex<Vec<RootSlot>> = Mutex::new(vec![None; job.roots.len()]);
 
         std::thread::scope(|s| {
             for _ in 0..self.workers.min(num_batches.max(1)) {
@@ -174,53 +274,137 @@ impl Coordinator {
                     let end = (start + width).min(job.roots.len());
                     let batch_roots = &job.roots[start..end];
                     let t0 = Instant::now();
-                    let batch_results = prepared.run_batch(batch_roots);
+                    let caught = catch_unwind(AssertUnwindSafe(|| match &job.run.fault {
+                        Some(plan) => {
+                            plan.apply(b, || prepared.run_batch_with(batch_roots, &ctl))
+                        }
+                        None => prepared.run_batch_with(batch_roots, &ctl),
+                    }));
                     // per-batch timing, amortized equally over its roots
                     let seconds = t0.elapsed().as_secs_f64() / batch_roots.len() as f64;
-                    assert_eq!(
-                        batch_results.len(),
-                        batch_roots.len(),
-                        "run_batch must return one result per root"
-                    );
-                    let runs: Vec<RootRun> = batch_results
-                        .into_iter()
-                        .zip(batch_roots.iter())
-                        .map(|(r, &root)| {
-                            let validation =
-                                job.validate.then(|| validate(&job.graph, &r.tree));
-                            RootRun {
-                                root,
-                                // Graph500 TEPS: undirected edges of the
-                                // reached component ≈ directed scans / 2
-                                edges_traversed: r.trace.total_edges_scanned() / 2,
-                                reached: r.tree.reached_count(),
-                                seconds,
-                                preparation_seconds: prep_share,
-                                counted_warmup: r.trace.counted_warmup,
-                                trace: r.trace,
-                                validation,
-                            }
-                        })
-                        .collect();
-                    let mut slots = results.lock().unwrap();
-                    for (i, run) in runs.into_iter().enumerate() {
-                        slots[start + i] = Some(run);
+                    let batch: Vec<Result<RootRun, String>> = match caught {
+                        Ok(rs) if rs.len() == batch_roots.len() => rs
+                            .into_iter()
+                            .zip(batch_roots.iter())
+                            .map(|(r, &root)| {
+                                Ok(Self::root_run(job, root, r, seconds, prep_share))
+                            })
+                            .collect(),
+                        Ok(rs) => {
+                            // the old coordinator asserted here; a hole is
+                            // now a per-root failure, not a process abort
+                            let msg = format!(
+                                "engine returned {} results for a {}-root batch",
+                                rs.len(),
+                                batch_roots.len()
+                            );
+                            batch_roots.iter().map(|_| Err(msg.clone())).collect()
+                        }
+                        Err(payload) => {
+                            self.metrics.record_worker_panic();
+                            let msg =
+                                format!("worker panicked: {}", panic_message(payload.as_ref()));
+                            batch_roots.iter().map(|_| Err(msg.clone())).collect()
+                        }
+                    };
+                    let mut locked = lock_unpoisoned(&slots);
+                    for (i, r) in batch.into_iter().enumerate() {
+                        locked[start + i] = Some(r);
                     }
                 });
             }
         });
 
-        let runs: Vec<RootRun> = results
-            .into_inner()
-            .unwrap()
-            .into_iter()
-            .map(|r| r.expect("worker left a hole"))
-            .collect();
-        let all_valid = runs
-            .iter()
-            .all(|r| r.validation.as_ref().map(|v| v.all_passed()).unwrap_or(true));
+        // Phase 3 — retry failed roots down the degradation ladder,
+        // sequentially on this thread (failures are the rare path;
+        // isolation matters more than parallelism here). Rung 2 is the
+        // job's engine on the counted VPU backend — it sidesteps hardware
+        // SIMD faults and, for scalar engines, simply retries. Rung 3+ is
+        // the serial reference engine. Fallbacks are prepared lazily, once,
+        // against the job's already-built artifacts.
+        let slot_results = slots.into_inner().unwrap_or_else(|p| p.into_inner());
+        let max_attempts = job.run.max_attempts.max(1);
+        let mut counted_rung: Option<Box<dyn PreparedBfs + '_>> = None;
+        let mut serial_rung: Option<Box<dyn PreparedBfs + '_>> = None;
+        let mut outcomes: Vec<RootOutcome> = Vec::with_capacity(job.roots.len());
+        for (i, slot) in slot_results.into_iter().enumerate() {
+            let root = job.roots[i];
+            let mut attempts = 1usize;
+            let mut last =
+                slot.unwrap_or_else(|| Err("scheduler left an unfilled slot".to_string()));
+            // a sticky injected fault follows its roots through every
+            // retry — the attempt-exhaustion scenario of the chaos suite
+            let sticky_fault =
+                job.run.fault.filter(|p| p.sticky && p.fires_at(i / width));
+            while last.is_err() && attempts < max_attempts {
+                attempts += 1;
+                self.metrics.record_root_retry();
+                let rung: Option<&dyn PreparedBfs> = if attempts == 2 {
+                    if counted_rung.is_none() {
+                        let mut kind = job.engine.clone();
+                        kind.set_vpu(VpuMode::Counted);
+                        counted_rung = make_engine(&kind).ok().and_then(|e| {
+                            e.prepare_with(&job.graph, Arc::clone(&artifacts)).ok()
+                        });
+                    }
+                    counted_rung.as_deref()
+                } else {
+                    if serial_rung.is_none() {
+                        serial_rung = SerialLayeredBfs
+                            .prepare_with(&job.graph, Arc::clone(&artifacts))
+                            .ok();
+                    }
+                    serial_rung.as_deref()
+                };
+                let Some(rung) = rung else {
+                    last = Err("fallback engine preparation failed".to_string());
+                    continue;
+                };
+                let t0 = Instant::now();
+                let caught = catch_unwind(AssertUnwindSafe(|| match sticky_fault {
+                    Some(plan) => {
+                        plan.apply(plan.at_batch, || rung.run_batch_with(&[root], &ctl))
+                    }
+                    None => rung.run_batch_with(&[root], &ctl),
+                }));
+                let seconds = t0.elapsed().as_secs_f64();
+                last = match caught {
+                    Ok(mut rs) if rs.len() == 1 => {
+                        let r = rs.pop().expect("len checked");
+                        Ok(Self::root_run(job, root, r, seconds, prep_share))
+                    }
+                    Ok(rs) => {
+                        Err(format!("retry returned {} results for one root", rs.len()))
+                    }
+                    Err(payload) => {
+                        self.metrics.record_worker_panic();
+                        Err(format!("worker panicked: {}", panic_message(payload.as_ref())))
+                    }
+                };
+            }
+            match last {
+                Ok(run) => {
+                    if attempts > 1 {
+                        self.metrics.record_degraded_root();
+                    }
+                    outcomes.push(RootOutcome::Ran(run));
+                }
+                Err(error) => {
+                    self.metrics.record_failed_root();
+                    outcomes.push(RootOutcome::Failed { root, error, attempts });
+                }
+            }
+        }
+
+        let all_valid = outcomes.iter().all(|o| match o {
+            RootOutcome::Ran(r) => {
+                r.validation.as_ref().map(|v| v.all_passed()).unwrap_or(true)
+            }
+            RootOutcome::Failed { .. } => false,
+        });
+        let runs: Vec<&RootRun> = outcomes.iter().filter_map(RootOutcome::run).collect();
         self.metrics.record_job(&runs, preparation_seconds, num_batches);
-        Ok(JobOutcome { id: job.id, runs, all_valid, preparation_seconds, artifacts })
+        Ok(JobOutcome { id: job.id, outcomes, all_valid, preparation_seconds, artifacts })
     }
 }
 
@@ -228,22 +412,31 @@ impl Coordinator {
 mod tests {
     use super::*;
     use crate::coordinator::engine::EngineKind;
-    use crate::coordinator::job::BatchPolicy;
+    use crate::coordinator::fault::FaultPlan;
+    use crate::coordinator::job::{BatchPolicy, RunPolicy};
     use crate::graph::{Csr, RmatConfig};
     use std::sync::Arc;
 
     fn job(engine: EngineKind, roots: Vec<u32>) -> BfsJob {
         let el = RmatConfig::graph500(9, 8).generate(60);
         let g = Arc::new(Csr::from_edge_list(9, &el));
-        BfsJob { id: 1, graph: g, roots, engine, validate: true, batch: BatchPolicy::PerRoot }
+        BfsJob {
+            id: 1,
+            graph: g,
+            roots,
+            engine,
+            validate: true,
+            batch: BatchPolicy::PerRoot,
+            run: RunPolicy::default(),
+        }
     }
 
     #[test]
     fn runs_all_roots_in_order() {
         let j = job(EngineKind::SerialLayered, vec![0, 1, 2, 3, 4, 5, 6, 7]);
         let out = Coordinator::new(3).run_job(&j).unwrap();
-        assert_eq!(out.runs.len(), 8);
-        for (i, r) in out.runs.iter().enumerate() {
+        assert_eq!(out.runs().count(), 8);
+        for (i, r) in out.runs().enumerate() {
             assert_eq!(r.root, j.roots[i]);
         }
         assert!(out.all_valid);
@@ -268,7 +461,7 @@ mod tests {
         // zero-TEPS entries of §5.3)
         let j = job(EngineKind::SerialLayered, (0..20).collect());
         let out = Coordinator::new(2).run_job(&j).unwrap();
-        assert!(out.runs.iter().any(|r| r.reached == 1 && r.edges_traversed == 0));
+        assert!(out.runs().any(|r| r.reached == 1 && r.edges_traversed == 0));
     }
 
     #[test]
@@ -283,8 +476,8 @@ mod tests {
             j.batch = BatchPolicy::Fixed(4);
             let batched = Coordinator::new(2).run_job(&j).unwrap();
             assert!(per_root.all_valid && batched.all_valid, "{engine_name}");
-            assert_eq!(per_root.runs.len(), batched.runs.len());
-            for (a, b) in per_root.runs.iter().zip(batched.runs.iter()) {
+            assert_eq!(per_root.runs().count(), batched.runs().count());
+            for (a, b) in per_root.runs().zip(batched.runs()) {
                 assert_eq!(a.root, b.root, "{engine_name}");
                 assert_eq!(a.reached, b.reached, "{engine_name}");
             }
@@ -302,8 +495,8 @@ mod tests {
             );
             j.batch = if width == 1 { BatchPolicy::PerRoot } else { BatchPolicy::Fixed(width) };
             let out = Coordinator::new(3).run_job(&j).unwrap();
-            assert_eq!(out.runs.len(), 10, "width {width}");
-            for (i, r) in out.runs.iter().enumerate() {
+            assert_eq!(out.runs().count(), 10, "width {width}");
+            for (i, r) in out.runs().enumerate() {
                 assert_eq!(r.root, j.roots[i], "width {width}");
                 assert!(r.seconds >= 0.0);
             }
@@ -335,7 +528,7 @@ mod tests {
         assert_eq!(out.artifacts.sell_builds(), 1, "{:?}", out.artifacts);
         assert!(out.all_valid);
         assert!(out.preparation_seconds > 0.0);
-        for r in &out.runs {
+        for r in out.runs() {
             assert!((r.preparation_seconds - out.preparation_seconds / 8.0).abs() < 1e-12);
         }
         // the cross-root feedback channel saw every root
@@ -357,6 +550,7 @@ mod tests {
             engine,
             validate: true,
             batch: BatchPolicy::PerRoot,
+            run: RunPolicy::default(),
         };
         let j2 = BfsJob { id: 2, ..j1.clone() };
         let a = c.run_job(&j1).unwrap();
@@ -386,6 +580,7 @@ mod tests {
             engine: engine.clone(),
             validate: false,
             batch: BatchPolicy::PerRoot,
+            run: RunPolicy::default(),
         };
         let a = {
             // this Arc is dropped before the second job — only content
@@ -430,6 +625,7 @@ mod tests {
                 engine,
                 validate: false,
                 batch: BatchPolicy::PerRoot,
+                run: RunPolicy::default(),
             }
         };
         let a = c.run_job(&mk(&g1, 64)).unwrap();
@@ -472,9 +668,82 @@ mod tests {
         );
         let a = Coordinator::new(1).run_job(&j).unwrap();
         let b = Coordinator::new(1).run_job(&j).unwrap();
-        for (x, y) in a.runs.iter().zip(b.runs.iter()) {
+        for (x, y) in a.runs().zip(b.runs()) {
             assert_eq!(x.reached, y.reached);
             assert_eq!(x.edges_traversed, y.edges_traversed);
         }
+    }
+
+    #[test]
+    fn out_of_range_root_is_rejected() {
+        let j = job(EngineKind::SerialLayered, vec![0, 1_000_000]);
+        let err = Coordinator::new(1).run_job(&j).unwrap_err();
+        assert!(matches!(err, CoordinatorError::RootOutOfBounds { root: 1_000_000, .. }));
+    }
+
+    #[test]
+    fn injected_panic_is_contained_and_retried() {
+        // batch 1 (root index 1) panics once; the coordinator catches it,
+        // retries the root on the degradation ladder, and both the job and
+        // the coordinator (its locks included) stay fully usable
+        let mut j = job(EngineKind::SerialLayered, vec![0, 1, 2, 3]);
+        j.run.fault = Some(FaultPlan::panic_at(1));
+        let c = Coordinator::new(2);
+        let out = c.run_job(&j).unwrap();
+        assert_eq!(out.outcomes.len(), 4);
+        assert!(out.outcomes.iter().all(|o| !o.is_failed()), "one-shot fault recovers");
+        assert!(out.all_valid, "retried root still validates against the oracle");
+        let m = c.metrics().snapshot();
+        assert_eq!(m.worker_panics, 1);
+        assert_eq!(m.root_retries, 1);
+        assert_eq!(m.degraded_roots, 1);
+        assert_eq!(m.failed_roots, 0);
+        let ok = c.run_job(&job(EngineKind::SerialLayered, vec![0])).unwrap();
+        assert!(ok.all_valid, "coordinator survives for the next job");
+    }
+
+    #[test]
+    fn artifact_cache_evicts_least_recently_used() {
+        let c = Coordinator::new(1);
+        let mk_graph = |seed: u64| {
+            let el = RmatConfig::graph500(7, 8).generate(seed);
+            Arc::new(Csr::from_edge_list(7, &el))
+        };
+        let mk_job = |g: &Arc<Csr>| BfsJob {
+            id: 0,
+            graph: Arc::clone(g),
+            roots: vec![0],
+            engine: EngineKind::SerialLayered,
+            validate: false,
+            batch: BatchPolicy::PerRoot,
+            run: RunPolicy::default(),
+        };
+        let graphs: Vec<_> =
+            (0..=ARTIFACT_CACHE_CAP as u64).map(|s| mk_graph(100 + s)).collect();
+        // fill the cache exactly to capacity
+        let first = c.run_job(&mk_job(&graphs[0])).unwrap();
+        for g in &graphs[1..ARTIFACT_CACHE_CAP] {
+            c.run_job(&mk_job(g)).unwrap();
+        }
+        assert_eq!(c.metrics().snapshot().artifact_cache_evictions, 0);
+        // touch graph 0 — it becomes the most recently used entry
+        let touched = c.run_job(&mk_job(&graphs[0])).unwrap();
+        assert!(Arc::ptr_eq(&first.artifacts, &touched.artifacts));
+        // one more graph evicts the LRU entry: graph 1, not the
+        // just-touched graph 0 (insertion order would evict 0)
+        c.run_job(&mk_job(&graphs[ARTIFACT_CACHE_CAP])).unwrap();
+        assert_eq!(c.metrics().snapshot().artifact_cache_evictions, 1);
+        let again = c.run_job(&mk_job(&graphs[0])).unwrap();
+        assert!(
+            Arc::ptr_eq(&first.artifacts, &again.artifacts),
+            "recently-used entry survived the eviction"
+        );
+        // graph 1 really is gone: rerunning it misses (no hit recorded)
+        // and evicts the next LRU entry in turn
+        let hits_before = c.metrics().snapshot().artifact_cache_hits;
+        c.run_job(&mk_job(&graphs[1])).unwrap();
+        let m = c.metrics().snapshot();
+        assert_eq!(m.artifact_cache_hits, hits_before, "evicted entry must miss");
+        assert_eq!(m.artifact_cache_evictions, 2);
     }
 }

@@ -13,6 +13,55 @@
 use super::edge_list::EdgeList;
 use crate::Vertex;
 
+/// A structural defect found by [`Csr::validate_structure`].
+///
+/// Every engine trusts the CSR invariants (monotone in-bounds offsets,
+/// in-bounds targets) when it indexes `rows` or packs SELL lanes; a graph
+/// that arrived corrupt — a truncated load, a bad deserializer — must be
+/// rejected *before* preparation, as a structured error rather than an
+/// out-of-bounds panic deep inside a layout build.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CsrStructureError {
+    /// `colstarts` is empty — not even the `[0]` of an empty graph.
+    EmptyOffsets,
+    /// `colstarts[0]` must be 0.
+    BadFirstOffset { offset: usize },
+    /// `colstarts[vertex] > colstarts[vertex + 1]` — negative degree.
+    NonMonotoneOffsets { vertex: usize },
+    /// `colstarts[num_vertices]` disagrees with `rows.len()`.
+    EdgeCountMismatch { offset: usize, edges: usize },
+    /// `rows[index]` names a vertex outside the graph.
+    TargetOutOfBounds { index: usize, target: Vertex, vertices: usize },
+}
+
+impl std::fmt::Display for CsrStructureError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CsrStructureError::EmptyOffsets => {
+                write!(f, "CSR offsets array is empty (expected at least [0])")
+            }
+            CsrStructureError::BadFirstOffset { offset } => {
+                write!(f, "CSR offsets must start at 0, found {offset}")
+            }
+            CsrStructureError::NonMonotoneOffsets { vertex } => {
+                write!(f, "CSR offsets decrease at vertex {vertex} (negative degree)")
+            }
+            CsrStructureError::EdgeCountMismatch { offset, edges } => {
+                write!(f, "CSR final offset {offset} does not match adjacency length {edges}")
+            }
+            CsrStructureError::TargetOutOfBounds { index, target, vertices } => {
+                write!(
+                    f,
+                    "CSR adjacency entry {index} targets vertex {target} \
+                     outside the graph ({vertices} vertices)"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for CsrStructureError {}
+
 /// CSR graph. Immutable once built; shared read-only across BFS threads.
 #[derive(Clone, Debug)]
 pub struct Csr {
@@ -100,6 +149,42 @@ impl Csr {
     /// the Graph500 validator).
     pub fn has_edge(&self, a: Vertex, b: Vertex) -> bool {
         self.neighbors(a).binary_search(&b).is_ok()
+    }
+
+    /// Fail-fast structural validation: monotone offsets anchored at 0 and
+    /// closed by `rows.len()`, every adjacency target in bounds. O(V + E),
+    /// run once per [`crate::bfs::BfsEngine::prepare`] (and by the
+    /// coordinator before a job fans out) — never inside a traversal.
+    pub fn validate_structure(&self) -> Result<(), CsrStructureError> {
+        if self.colstarts.is_empty() {
+            return Err(CsrStructureError::EmptyOffsets);
+        }
+        if self.colstarts[0] != 0 {
+            return Err(CsrStructureError::BadFirstOffset { offset: self.colstarts[0] });
+        }
+        for (v, w) in self.colstarts.windows(2).enumerate() {
+            if w[0] > w[1] {
+                return Err(CsrStructureError::NonMonotoneOffsets { vertex: v });
+            }
+        }
+        let last = *self.colstarts.last().unwrap();
+        if last != self.rows.len() {
+            return Err(CsrStructureError::EdgeCountMismatch {
+                offset: last,
+                edges: self.rows.len(),
+            });
+        }
+        let n = self.num_vertices();
+        for (i, &t) in self.rows.iter().enumerate() {
+            if t as usize >= n {
+                return Err(CsrStructureError::TargetOutOfBounds {
+                    index: i,
+                    target: t,
+                    vertices: n,
+                });
+            }
+        }
+        Ok(())
     }
 
     /// 64-bit content fingerprint: FNV-1a over the vertex count, the
@@ -215,6 +300,47 @@ mod tests {
         // an extra isolated vertex changes the hash (degree sequence)
         let el3 = EdgeList::with_edges(7, vec![(0, 1), (1, 2), (3, 4), (2, 5)]);
         assert_ne!(a.content_hash(), Csr::from_edge_list(0, &el3).content_hash());
+    }
+
+    #[test]
+    fn validate_accepts_built_graphs() {
+        assert_eq!(diamond().validate_structure(), Ok(()));
+        // empty graph: offsets [0], no rows
+        let g = Csr { colstarts: vec![0], rows: vec![], scale: 0 };
+        assert_eq!(g.validate_structure(), Ok(()));
+    }
+
+    #[test]
+    fn validate_rejects_each_corruption() {
+        let mut g = diamond();
+        g.colstarts.clear();
+        assert_eq!(g.validate_structure(), Err(CsrStructureError::EmptyOffsets));
+
+        let mut g = diamond();
+        g.colstarts[0] = 2;
+        assert_eq!(g.validate_structure(), Err(CsrStructureError::BadFirstOffset { offset: 2 }));
+
+        let mut g = diamond();
+        g.colstarts[2] = g.colstarts[3] + 1; // decreasing at vertex 2
+        assert_eq!(
+            g.validate_structure(),
+            Err(CsrStructureError::NonMonotoneOffsets { vertex: 2 })
+        );
+
+        let mut g = diamond();
+        g.rows.pop(); // truncated adjacency stream
+        let expected = *g.colstarts.last().unwrap();
+        assert_eq!(
+            g.validate_structure(),
+            Err(CsrStructureError::EdgeCountMismatch { offset: expected, edges: g.rows.len() })
+        );
+
+        let mut g = diamond();
+        g.rows[3] = 99; // points outside the 4-vertex graph
+        assert_eq!(
+            g.validate_structure(),
+            Err(CsrStructureError::TargetOutOfBounds { index: 3, target: 99, vertices: 4 })
+        );
     }
 
     #[test]

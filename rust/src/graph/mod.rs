@@ -26,7 +26,7 @@ pub mod sell;
 pub mod stats;
 
 pub use bitmap::Bitmap;
-pub use csr::Csr;
+pub use csr::{Csr, CsrStructureError};
 pub use edge_list::EdgeList;
 pub use padded::{Adjacency, PaddedCsr};
 pub use rmat::RmatConfig;

@@ -2,13 +2,13 @@
 //! roots, per-root traversal + soft validation, TEPS statistics.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::stats::TepsStats;
 use crate::coordinator::engine::EngineKind;
-use crate::coordinator::job::{BatchPolicy, BfsJob, RootRun};
+use crate::coordinator::job::{BatchPolicy, BfsJob, RootOutcome, RootRun, RunPolicy};
 use crate::coordinator::scheduler::Coordinator;
 use crate::graph::stats::LayerProfile;
 use crate::graph::{Csr, RmatConfig};
@@ -31,6 +31,13 @@ pub struct Experiment {
     /// Wider batches route through `PreparedBfs::run_batch`, which the
     /// MS engine (`hybrid-sell-ms`) turns into shared 16-root waves.
     pub batch_roots: usize,
+    /// Traversal-phase deadline in milliseconds (`--deadline-ms`): engines
+    /// stop at the next layer boundary once it passes and the interrupted
+    /// roots are excluded from the TEPS statistics. `None` = unbounded.
+    pub deadline_ms: Option<u64>,
+    /// Attempts per root before it counts as failed (`--max-attempts`);
+    /// retries walk the coordinator's degradation ladder.
+    pub max_attempts: usize,
 }
 
 impl Experiment {
@@ -44,6 +51,8 @@ impl Experiment {
             workers: 1,
             validate: true,
             batch_roots: 1,
+            deadline_ms: None,
+            max_attempts: RunPolicy::default().max_attempts,
         }
     }
 
@@ -76,21 +85,42 @@ impl Experiment {
             } else {
                 BatchPolicy::PerRoot
             },
+            run: RunPolicy {
+                deadline: self.deadline_ms.map(Duration::from_millis),
+                max_attempts: self.max_attempts,
+                ..RunPolicy::default()
+            },
         };
         let coordinator = Coordinator::new(self.workers);
         let outcome = coordinator.run_job(&job)?;
 
-        let stats = TepsStats::from_runs(&outcome.runs);
+        // a benchmark's numbers are meaningless with holes in them: a
+        // root that exhausted its retries fails the whole experiment
+        if let Some(RootOutcome::Failed { root, error, attempts }) = outcome.failures().next()
+        {
+            anyhow::bail!(
+                "{} of {} roots failed permanently (root {root} after {attempts} \
+                 attempts: {error})",
+                outcome.failures().count(),
+                outcome.outcomes.len(),
+            );
+        }
+        let preparation_seconds = outcome.preparation_seconds;
+        let all_valid = outcome.all_valid;
+        let runs: Vec<RootRun> =
+            outcome.outcomes.into_iter().filter_map(RootOutcome::into_run).collect();
+
+        let stats = TepsStats::from_runs(&runs);
         Ok(ExperimentReport {
             scale: self.scale,
             edgefactor: self.edgefactor,
             num_vertices: n,
             num_directed_edges: graph.num_directed_edges(),
             construction_seconds,
-            preparation_seconds: outcome.preparation_seconds,
+            preparation_seconds,
             graph,
-            runs: outcome.runs,
-            all_valid: outcome.all_valid,
+            runs,
+            all_valid,
             stats,
         })
     }

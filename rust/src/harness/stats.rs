@@ -38,6 +38,10 @@ pub struct TepsStats {
     /// warm-ups measured normally — in the degenerate case where *every*
     /// root was a warm-up, so small runs still report numbers).
     pub counted_warmup_excluded: usize,
+    /// Roots excluded because their traversal was interrupted (deadline or
+    /// cancellation, [`crate::bfs::RunStatus`]): their timings measure an
+    /// aborted prefix, not BFS throughput.
+    pub interrupted_excluded: usize,
 }
 
 impl TepsStats {
@@ -68,24 +72,32 @@ impl TepsStats {
             harmonic_mean_filtered,
             preparation_seconds: 0.0,
             counted_warmup_excluded: 0,
+            interrupted_excluded: 0,
         }
     }
 
     pub fn from_runs(runs: &[RootRun]) -> Self {
+        // interrupted roots (deadline/cancellation) traversed only a
+        // prefix — their timings measure an abort, never throughput, so
+        // they are excluded unconditionally
+        let complete: Vec<&RootRun> =
+            runs.iter().filter(|r| r.status().is_complete()).collect();
+        let interrupted = runs.len() - complete.len();
         // exclude counted warm-up roots (auto mode) from the TEPS
         // aggregates — unless every root was a warm-up, in which case the
         // emulated numbers are all there is and excluding them would
         // yield an empty report
         let measured: Vec<f64> =
-            runs.iter().filter(|r| !r.counted_warmup).map(|r| r.teps()).collect();
+            complete.iter().filter(|r| !r.counted_warmup).map(|r| r.teps()).collect();
         let (teps, excluded) = if measured.is_empty() {
-            (runs.iter().map(|r| r.teps()).collect::<Vec<f64>>(), 0)
+            (complete.iter().map(|r| r.teps()).collect::<Vec<f64>>(), 0)
         } else {
-            let excluded = runs.len() - measured.len();
+            let excluded = complete.len() - measured.len();
             (measured, excluded)
         };
         let mut stats = Self::from_teps(&teps);
         stats.counted_warmup_excluded = excluded;
+        stats.interrupted_excluded = interrupted;
         // preparation was paid for every root, warm-up or not
         stats.preparation_seconds = runs.iter().map(|r| r.preparation_seconds).sum();
         stats
@@ -154,6 +166,32 @@ mod tests {
         assert_eq!(s.runs, 2);
         assert_eq!(s.counted_warmup_excluded, 0);
         assert_eq!(s.max, 20.0);
+    }
+
+    #[test]
+    fn interrupted_runs_excluded_from_aggregates() {
+        use crate::bfs::{RunStatus, RunTrace};
+        let mk = |edges: usize, status: RunStatus| RootRun {
+            root: 0,
+            edges_traversed: edges,
+            reached: 10,
+            seconds: 1.0,
+            preparation_seconds: 0.25,
+            trace: RunTrace { status, ..RunTrace::default() },
+            counted_warmup: false,
+            validation: None,
+        };
+        let runs = vec![
+            mk(1000, RunStatus::Complete),
+            mk(10, RunStatus::TimedOut),
+            mk(10, RunStatus::Cancelled),
+            mk(1000, RunStatus::Complete),
+        ];
+        let s = TepsStats::from_runs(&runs);
+        assert_eq!(s.runs, 2, "only complete roots are measured");
+        assert_eq!(s.interrupted_excluded, 2);
+        assert_eq!(s.min, 1000.0, "partial prefixes must not drag the stats");
+        assert!((s.preparation_seconds - 1.0).abs() < 1e-12, "prep sums over ALL roots");
     }
 
     #[test]

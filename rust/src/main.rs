@@ -11,6 +11,7 @@
 
 use anyhow::Result;
 
+use phi_bfs::bfs::RunStatus;
 use phi_bfs::cli::{Args, USAGE};
 use phi_bfs::coordinator::engine::EngineKind;
 use phi_bfs::graph::stats::LayerProfile;
@@ -122,6 +123,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     if exp.batch_roots == 0 {
         anyhow::bail!("--batch-roots must be >= 1");
     }
+    let deadline_ms: u64 = args.get("deadline-ms", 0)?;
+    if deadline_ms > 0 {
+        exp.deadline_ms = Some(deadline_ms);
+    }
+    exp.max_attempts = args.get("max-attempts", exp.max_attempts)?;
+    if exp.max_attempts == 0 {
+        anyhow::bail!("--max-attempts must be >= 1");
+    }
 
     println!(
         "graph500 run: SCALE={scale} edgefactor={edgefactor} engine={engine_name} threads={threads} roots={}",
@@ -161,6 +170,17 @@ fn cmd_run(args: &Args) -> Result<()> {
         s.zero_runs,
         if report.all_valid { "all 5 checks passed" } else { "FAILED" }
     );
+    if s.interrupted_excluded > 0 {
+        let timed_out =
+            report.runs.iter().filter(|r| r.status() == RunStatus::TimedOut).count();
+        let cancelled =
+            report.runs.iter().filter(|r| r.status() == RunStatus::Cancelled).count();
+        println!(
+            "({} interrupted roots excluded from TEPS — {timed_out} timed out, \
+             {cancelled} cancelled; partial visited prefixes kept)",
+            s.interrupted_excluded
+        );
+    }
     let warmup_roots = report.runs.iter().filter(|r| r.counted_warmup).count();
     if s.counted_warmup_excluded > 0 {
         println!(

@@ -21,7 +21,10 @@ use anyhow::{anyhow, Result};
 
 use super::artifacts::{ArtifactManifest, ArtifactSpec};
 use super::engine::{LayerStepArgs, PjrtEngine};
-use crate::bfs::{BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, RunTrace};
+use crate::bfs::{
+    BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, RunControl, RunStatus,
+    RunTrace,
+};
 use crate::graph::{Bitmap, Csr};
 use crate::{Pred, Vertex, PRED_INFINITY};
 
@@ -119,9 +122,18 @@ pub struct PreparedPjrt<'g> {
 impl PreparedPjrt<'_> {
     /// Run the traversal, returning the trace with per-call execution times.
     pub fn run_checked(&self, root: Vertex) -> Result<BfsResult> {
+        self.run_checked_with(root, RunControl::unbounded())
+    }
+
+    /// [`PreparedPjrt::run_checked`] under a [`RunControl`]: checked at
+    /// layer boundaries like every native engine.
+    pub fn run_checked_with(&self, root: Vertex, ctl: &RunControl) -> Result<BfsResult> {
         let g = self.g;
         let n = g.num_vertices();
-        let mut engine = self.engine.lock().expect("pjrt engine lock poisoned");
+        // A worker panicking between layer_step calls (caught upstream by
+        // the coordinator) must not poison the device for later roots:
+        // recover the guard — PjrtEngine keeps no partial traversal state.
+        let mut engine = self.engine.lock().unwrap_or_else(|p| p.into_inner());
         let spec = &self.spec;
 
         // state in artifact geometry (padded to spec.n / spec.words)
@@ -135,7 +147,12 @@ impl PreparedPjrt<'_> {
 
         let mut layers = Vec::new();
         let mut layer = 0usize;
+        let mut status = RunStatus::Complete;
         while frontier.count_ones() != 0 {
+            if let Some(s) = ctl.stop_reason() {
+                status = s;
+                break;
+            }
             let t0 = Instant::now();
             let chunks = PjrtBfs::pack_frontier(g, &frontier);
             let edges_scanned: usize = frontier.iter_set_bits().map(|u| g.degree(u)).sum();
@@ -184,7 +201,7 @@ impl PreparedPjrt<'_> {
         pred.truncate(n);
         Ok(BfsResult {
             tree: BfsTree::new(root, pred),
-            trace: RunTrace { layers, num_threads: 1, ..Default::default() },
+            trace: RunTrace { layers, num_threads: 1, status, ..Default::default() },
         })
     }
 }
@@ -194,8 +211,8 @@ impl PreparedBfs for PreparedPjrt<'_> {
         "pjrt-simd"
     }
 
-    fn run(&self, root: Vertex) -> BfsResult {
-        self.run_checked(root).expect("PJRT BFS failed")
+    fn run_with(&self, root: Vertex, ctl: &RunControl) -> BfsResult {
+        self.run_checked_with(root, ctl).expect("PJRT BFS failed")
     }
 
     fn artifacts(&self) -> &GraphArtifacts {

@@ -1,0 +1,285 @@
+//! Chaos / fault-injection suite for the fault-tolerant traversal runtime.
+//!
+//! Property under test: **whatever faults fire, the coordinator returns a
+//! well-formed [`JobOutcome`]** — one [`RootOutcome`] per requested root, in
+//! root order, with panics contained to the faulting batch, failed roots
+//! reported (never silently dropped), and interrupted roots carrying a
+//! visited prefix that agrees with the serial oracle.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use phi_bfs::bfs::serial::SerialLayeredBfs;
+use phi_bfs::bfs::{BfsEngine, PreparedBfs, RunControl, RunStatus};
+use phi_bfs::coordinator::{
+    make_engine, BatchPolicy, BfsJob, Coordinator, CoordinatorError, EngineKind, FaultInjector,
+    FaultPlan, RootOutcome, RunPolicy,
+};
+use phi_bfs::graph::{Csr, RmatConfig};
+use phi_bfs::Vertex;
+
+fn graph(scale: u32, seed: u64) -> Arc<Csr> {
+    let edges = RmatConfig::graph500(scale, 8).generate(seed);
+    Arc::new(Csr::from_edge_list(scale, &edges))
+}
+
+fn job(graph: &Arc<Csr>, engine: EngineKind, roots: Vec<Vertex>) -> BfsJob {
+    BfsJob {
+        id: 7,
+        graph: Arc::clone(graph),
+        roots,
+        engine,
+        validate: true,
+        batch: BatchPolicy::PerRoot,
+        run: RunPolicy::default(),
+    }
+}
+
+fn oracle_distances(g: &Csr, root: Vertex) -> Vec<u32> {
+    SerialLayeredBfs.run(g, root).tree.distances().unwrap()
+}
+
+/// The chaos property proper: for every fault kind, every root of the job
+/// still produces a well-formed outcome (recovered via the retry ladder for
+/// one-shot faults) and the coordinator survives to run the next job.
+#[test]
+fn every_fault_kind_yields_a_well_formed_outcome() {
+    let g = graph(8, 11);
+    let roots: Vec<Vertex> = (0..6).collect();
+    let plans = [
+        FaultPlan::panic_at(0),
+        FaultPlan::panic_at(2),
+        FaultPlan::drop_results_at(1),
+        FaultPlan::stall_at(0, Duration::from_millis(1)),
+    ];
+    for plan in plans {
+        let coordinator = Coordinator::new(2);
+        let mut j = job(&g, EngineKind::SerialLayered, roots.clone());
+        j.run.fault = Some(plan);
+        let out = coordinator.run_job(&j).unwrap_or_else(|e| panic!("{plan:?}: {e}"));
+
+        assert_eq!(out.outcomes.len(), roots.len(), "{plan:?}: one outcome per root");
+        for (i, o) in out.outcomes.iter().enumerate() {
+            assert_eq!(o.root(), roots[i], "{plan:?}: outcomes stay in root order");
+        }
+        assert_eq!(out.failures().count(), 0, "{plan:?}: one-shot faults must recover");
+        assert!(out.all_valid, "{plan:?}: recovered roots must validate");
+        for r in out.runs() {
+            assert_eq!(r.status(), RunStatus::Complete, "{plan:?}");
+            assert!(r.reached >= 1, "{plan:?}: root itself is always reached");
+        }
+
+        // the coordinator must be unharmed: a clean follow-up job works
+        let clean = job(&g, EngineKind::SerialLayered, vec![3]);
+        let out2 = coordinator.run_job(&clean).unwrap();
+        assert!(out2.all_valid && out2.failures().count() == 0);
+    }
+}
+
+/// A sticky fault fires on every attempt: the ladder runs out, the root is
+/// reported failed with its attempt count — and no root is ever lost.
+#[test]
+fn sticky_fault_exhausts_attempts_without_losing_roots() {
+    let g = graph(8, 12);
+    let coordinator = Coordinator::new(2);
+    let mut j = job(&g, EngineKind::SerialLayered, (0..4).collect());
+    j.run.fault = Some(FaultPlan::sticky_panic_at(2));
+    j.run.max_attempts = 3;
+    let out = coordinator.run_job(&j).unwrap();
+
+    assert_eq!(out.outcomes.len(), 4);
+    assert!(!out.all_valid, "a failed root must flip all_valid");
+    for (i, o) in out.outcomes.iter().enumerate() {
+        match o {
+            RootOutcome::Ran(r) => {
+                assert!(i < 2, "batches >= 2 fault stickily, root {i} cannot succeed");
+                assert_eq!(r.status(), RunStatus::Complete);
+            }
+            RootOutcome::Failed { root, error, attempts } => {
+                assert!(i >= 2, "batches 0 and 1 never fault, root {root} must succeed");
+                assert_eq!(*attempts, 3, "every rung of the ladder was tried");
+                assert!(error.contains("panicked"), "cause preserved, got: {error}");
+            }
+        }
+    }
+
+    let m = coordinator.metrics().snapshot();
+    assert_eq!(m.failed_roots, 2);
+    assert_eq!(m.degraded_roots, 0, "nothing recovered, nothing degraded");
+    assert_eq!(m.root_retries, 4, "two failed roots x two retries each");
+    assert!(m.worker_panics >= 2, "at least the two first-attempt panics");
+
+    // poisoned nothing: the same coordinator still runs clean jobs
+    let out2 = coordinator.run_job(&job(&g, EngineKind::SerialLayered, vec![0, 1])).unwrap();
+    assert!(out2.all_valid && out2.failures().count() == 0);
+}
+
+/// A zero deadline trips at the first layer-boundary check: every root
+/// reports `TimedOut`, keeps its (root-only) visited prefix, and none of
+/// them counts as failed — interruption is not an error.
+#[test]
+fn zero_deadline_times_out_with_a_valid_prefix() {
+    let g = graph(10, 5);
+    let coordinator = Coordinator::new(2);
+    let mut j = job(&g, EngineKind::SerialLayered, (0..8).collect());
+    j.run.deadline = Some(Duration::ZERO);
+    let out = coordinator.run_job(&j).unwrap();
+
+    assert_eq!(out.outcomes.len(), 8);
+    assert_eq!(out.failures().count(), 0, "timeouts are not failures");
+    assert!(out.all_valid, "interrupted roots skip validation, not fail it");
+    for r in out.runs() {
+        assert_eq!(r.status(), RunStatus::TimedOut);
+        assert!(r.reached >= 1, "the root is visited before the first check");
+    }
+    assert_eq!(coordinator.metrics().snapshot().failed_roots, 0);
+}
+
+/// A control cancelled before dispatch cancels every root cooperatively.
+#[test]
+fn pre_cancelled_control_cancels_every_root() {
+    let g = graph(10, 6);
+    let ctl = Arc::new(RunControl::default());
+    ctl.cancel();
+    let coordinator = Coordinator::new(2);
+    let mut j = job(&g, EngineKind::SerialLayered, (0..4).collect());
+    j.run.control = Some(ctl);
+    let out = coordinator.run_job(&j).unwrap();
+
+    assert_eq!(out.outcomes.len(), 4);
+    assert_eq!(out.failures().count(), 0);
+    assert!(out.all_valid);
+    for r in out.runs() {
+        assert_eq!(r.status(), RunStatus::Cancelled);
+    }
+}
+
+/// Ingest validation fails fast: corrupt CSRs are rejected with a
+/// structured error before any engine touches them — both at the
+/// coordinator boundary and in `BfsEngine::prepare`.
+#[test]
+fn corrupt_graphs_are_rejected_before_any_engine_runs() {
+    let base = graph(7, 42);
+    let corruptions: [(&str, fn(&mut Csr)); 5] = [
+        ("empty offsets", |g| g.colstarts.clear()),
+        ("bad first offset", |g| g.colstarts[0] = 1),
+        ("non-monotone offsets", |g| g.colstarts[1] = *g.colstarts.last().unwrap() + 1),
+        ("edge count mismatch", |g| {
+            g.rows.pop();
+        }),
+        ("target out of bounds", |g| g.rows[0] = Vertex::MAX),
+    ];
+    for (what, corrupt) in corruptions {
+        let mut bad = (*base).clone();
+        corrupt(&mut bad);
+        assert!(bad.validate_structure().is_err(), "{what}: corruption must be detectable");
+        assert!(SerialLayeredBfs.prepare(&bad).is_err(), "{what}: prepare must reject");
+
+        let coordinator = Coordinator::new(1);
+        let j = job(&Arc::new(bad), EngineKind::SerialLayered, vec![0]);
+        match coordinator.run_job(&j) {
+            Err(CoordinatorError::InvalidGraph(_)) => {}
+            other => panic!("{what}: expected InvalidGraph, got {other:?}"),
+        }
+    }
+}
+
+/// Out-of-range roots are a structured coordinator error, not a panic
+/// somewhere inside an engine.
+#[test]
+fn out_of_range_roots_are_a_structured_error() {
+    let g = graph(7, 42);
+    let coordinator = Coordinator::new(1);
+    let j = job(&g, EngineKind::SerialLayered, vec![0, 1_000_000]);
+    match coordinator.run_job(&j) {
+        Err(CoordinatorError::RootOutOfBounds { root: 1_000_000, vertices }) => {
+            assert_eq!(vertices, g.num_vertices());
+        }
+        other => panic!("expected RootOutOfBounds, got {other:?}"),
+    }
+}
+
+/// The harness-level injector wraps any `PreparedBfs` and fires by
+/// dispatch order: the first batch passes through untouched, the second
+/// hits the planned panic.
+#[test]
+fn fault_injector_wraps_an_engine_by_dispatch_order() {
+    let g = graph(8, 7);
+    let prepared = SerialLayeredBfs.prepare(&g).unwrap();
+    let injector = FaultInjector::new(prepared.as_ref(), FaultPlan::panic_at(1));
+
+    let first = injector.run_batch_with(&[0, 1], RunControl::unbounded());
+    assert_eq!(first.len(), 2, "batch 0 passes through the injector untouched");
+    assert!(first.iter().all(|r| r.trace.status.is_complete()));
+
+    let second = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        injector.run_batch_with(&[2], RunControl::unbounded())
+    }));
+    assert!(second.is_err(), "batch 1 must hit the injected panic");
+}
+
+/// Prefix consistency across the whole registry: under any deadline, every
+/// engine either completes with oracle-equal distances or times out with a
+/// prefix in which every reached vertex carries its true BFS depth. Holds
+/// for *any* stop point, so the assertion is timing-independent.
+#[test]
+fn interrupted_prefixes_agree_with_the_serial_oracle_on_every_engine() {
+    let g = graph(10, 3);
+    let root: Vertex = 0;
+    let oracle = oracle_distances(&g, root);
+    for name in EngineKind::NATIVE_NAMES {
+        let kind = EngineKind::parse(name, 2, "artifacts").unwrap();
+        let engine = make_engine(&kind).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let prepared = engine.prepare(&g).unwrap_or_else(|e| panic!("{name}: {e}"));
+        for deadline in [Duration::ZERO, Duration::from_micros(200)] {
+            let ctl = RunControl::default();
+            ctl.arm_deadline_in(deadline);
+            let r = prepared.run_with(root, &ctl);
+            let d = r.tree.distances().unwrap_or_else(|| panic!("{name}: cyclic parents"));
+            match r.trace.status {
+                RunStatus::Complete => {
+                    assert_eq!(d, oracle, "{name} @ {deadline:?}: complete run must match");
+                }
+                RunStatus::TimedOut => {
+                    assert_eq!(d[root as usize], 0, "{name}: the root is always depth 0");
+                    for (v, (&got, &want)) in d.iter().zip(&oracle).enumerate() {
+                        if got != u32::MAX {
+                            assert_eq!(
+                                got, want,
+                                "{name} @ {deadline:?}: vertex {v} reached at wrong depth"
+                            );
+                        }
+                    }
+                }
+                RunStatus::Cancelled => {
+                    panic!("{name}: nothing cancelled this run")
+                }
+            }
+        }
+    }
+}
+
+/// Deadlines bound wall time: a job that would happily run much longer is
+/// cut off close to its deadline (generous bound — CI machines are noisy),
+/// and still yields an outcome for every root.
+#[test]
+fn deadlines_bound_wall_time_with_modest_overshoot() {
+    let g = graph(12, 9);
+    let coordinator = Coordinator::new(2);
+    let mut j = job(&g, EngineKind::parse("simd", 2, "artifacts").unwrap(), (0..16).collect());
+    j.validate = false;
+    j.run.deadline = Some(Duration::from_millis(2));
+    let t0 = Instant::now();
+    let out = coordinator.run_job(&j).unwrap();
+    let elapsed = t0.elapsed();
+
+    assert_eq!(out.outcomes.len(), 16, "deadline or not, every root gets an outcome");
+    assert_eq!(out.failures().count(), 0, "timeouts are not failures");
+    // engines stop at the next layer boundary; a scale-12 layer is far,
+    // far shorter than this ceiling even on a loaded CI box
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "2ms deadline overshot to {elapsed:?} — deadline checks are not wired through"
+    );
+}
