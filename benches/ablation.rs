@@ -40,6 +40,14 @@
 //!    trajectories. NOTE: the MS rows reflect the per-component
 //!    lane-retirement bound (PR 5) — its counted issue counts dropped by
 //!    design relative to the unbounded pre-PR scan.
+//! 9. **Fused layer kernels** — whole-loop `#[target_feature]` fusion vs
+//!    per-op hardware dispatch (`force_unfused`) TEPS for `hybrid-sell-bu`
+//!    and `hybrid-sell-ms`, a `--prefetch-dist` sweep (0/1/2/4/8/auto),
+//!    and the hub-adjacency bitmap on/off ladder with the counted
+//!    bottom-up stream-read evidence. At full scale asserts fused hw
+//!    loops don't lose to per-op dispatch and the hub bitmap never
+//!    increases stream reads. Writes `BENCH_fusion.json` (override with
+//!    `PHIBFS_BENCH_FUSION_JSON`), archived by CI with the others.
 //!
 //! Pass `--smoke` (CI) for a down-scaled run of every section.
 
@@ -640,4 +648,183 @@ fn main() {
     std::fs::write(&vpu_json_path, &vpu_json)
         .unwrap_or_else(|e| panic!("writing {vpu_json_path}: {e}"));
     println!("wrote {vpu_json_path}");
+
+    // the fusion acceptance bar runs at SCALE 16; smoke keeps a scale with
+    // real explosion layers so the hardware tiers execute fused loops
+    let fu_scale: u32 = if smoke { 12 } else { env_param("PHIBFS_FUSION_SCALE", 16) };
+    section(&format!(
+        "Ablation 9 — fused layer kernels, prefetch distance, hub bitmap (SCALE {fu_scale}, \
+         hw tier: {})",
+        detect_hw_select().name()
+    ));
+    let el9 = RmatConfig::graph500(fu_scale, 16).generate(1);
+    let g9 = Csr::from_edge_list(fu_scale, &el9);
+    let root9 = (0..g9.num_vertices() as u32).max_by_key(|&v| g9.degree(v)).unwrap();
+    let m_edges9 = SerialLayeredBfs.run(&g9, root9).trace.total_edges_scanned() as f64 / 2.0;
+    // fresh preparation per configuration so every arm starts from the same
+    // (empty) feedback channel; the fixed prefetch distance keeps the auto
+    // sweep out of the fused-vs-unfused comparison
+    let hw_prepared = |name: &str, dist: usize, hub: Option<usize>| {
+        let mut kind = EngineKind::parse(name, 1, "artifacts").expect("engine");
+        assert!(kind.set_vpu(VpuMode::Hw), "{name} must accept a VPU mode");
+        assert!(kind.set_prefetch_dist(dist), "{name} must accept a prefetch distance");
+        if let Some(k) = hub {
+            assert!(kind.set_hub_bits(k), "{name} must accept hub bits");
+        }
+        make_engine(&kind).expect("engine").prepare(&g9).expect("prepare")
+    };
+
+    // (a) whole-loop fusion vs per-op hardware dispatch
+    struct FusionRow {
+        name: &'static str,
+        unfused_teps: f64,
+        unfused_seconds: f64,
+        fused_teps: f64,
+        fused_seconds: f64,
+    }
+    let mut fusion_rows: Vec<FusionRow> = Vec::new();
+    for name in ["hybrid-sell-bu", "hybrid-sell-ms"] {
+        let mut teps = [0.0f64; 2];
+        let mut secs = [0.0f64; 2];
+        for (i, forced_off) in [(0usize, true), (1, false)] {
+            phi_bfs::simd::force_unfused(forced_off);
+            let prepared = hw_prepared(name, 4, None);
+            let m = bench.run(
+                &format!("{name} {}", if forced_off { "per-op hw" } else { "fused hw" }),
+                || prepared.run(root9),
+            );
+            teps[i] = m.rate(m_edges9);
+            secs[i] = m.mean_secs();
+        }
+        phi_bfs::simd::force_unfused(false);
+        fusion_rows.push(FusionRow {
+            name,
+            unfused_teps: teps[0],
+            unfused_seconds: secs[0],
+            fused_teps: teps[1],
+            fused_seconds: secs[1],
+        });
+    }
+    let mut t = Table::new(&["engine", "per-op hw TEPS", "fused hw TEPS", "fusion speedup"]);
+    for r in &fusion_rows {
+        t.row(&[
+            r.name.into(),
+            mteps(r.unfused_teps),
+            mteps(r.fused_teps),
+            format!("{:.2}x", r.fused_teps / r.unfused_teps.max(f64::MIN_POSITIVE)),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(per-op: each lane op re-enters its own #[target_feature] function; fused:");
+    println!(" the whole layer loop compiles as one wide-vector region per tier)");
+    // wall-clock bar at full scale only (smoke runs are milliseconds long);
+    // >= not >: on a host without AVX2/AVX-512 the generic tier's fuse is
+    // the identity, so both arms legitimately tie
+    if !smoke {
+        for r in &fusion_rows {
+            assert!(
+                r.fused_teps >= r.unfused_teps,
+                "{}: fused hw TEPS {:.0} lost to per-op dispatch {:.0}",
+                r.name,
+                r.fused_teps,
+                r.unfused_teps
+            );
+        }
+    }
+
+    // (b) software-prefetch distance sweep on the SELL bottom-up hybrid
+    use phi_bfs::bfs::vectorized::PREFETCH_DIST_AUTO;
+    let mut pf_rows: Vec<(String, f64, f64)> = Vec::new();
+    for dist in [0usize, 1, 2, 4, 8, PREFETCH_DIST_AUTO] {
+        let label = if dist == PREFETCH_DIST_AUTO { "auto".into() } else { dist.to_string() };
+        let prepared = hw_prepared("hybrid-sell-bu", dist, None);
+        let m = bench
+            .run(&format!("hybrid-sell-bu --prefetch-dist {label}"), || prepared.run(root9));
+        pf_rows.push((label, m.rate(m_edges9), m.mean_secs()));
+    }
+    let mut t = Table::new(&["prefetch dist", "TEPS", "mean time"]);
+    for (label, teps, secs) in &pf_rows {
+        t.row(&[
+            label.clone(),
+            mteps(*teps),
+            format!("{:.2?}", std::time::Duration::from_secs_f64(*secs)),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(auto sweeps 1,2,4,8 on warm-up roots and settles on the fastest ns/edge)");
+
+    // (c) hub-adjacency bitmap on/off: hw TEPS ladder + counted stream-read
+    // evidence (deterministic: fresh engines, first-root raw-α switches)
+    let bu_stream_edges = |r: &phi_bfs::bfs::BfsResult| -> usize {
+        r.trace.layers.iter().filter(|l| l.bottom_up).map(|l| l.edges_scanned).sum()
+    };
+    let mut hub_rows: Vec<(&'static str, f64, f64, usize)> = Vec::new();
+    for (label, hub) in [("hub off", 0usize), ("hub 32", 32)] {
+        let prepared = hw_prepared("hybrid-sell-bu", 4, (hub > 0).then_some(hub));
+        let m = bench.run(&format!("hybrid-sell-bu {label}"), || prepared.run(root9));
+        let mut kind = EngineKind::parse("hybrid-sell-bu", 1, "artifacts").expect("engine");
+        if hub > 0 {
+            assert!(kind.set_hub_bits(hub));
+        }
+        let counted = make_engine(&kind).expect("engine").run(&g9, root9);
+        hub_rows.push((label, m.rate(m_edges9), m.mean_secs(), bu_stream_edges(&counted)));
+    }
+    let mut t = Table::new(&["configuration", "hw TEPS", "BU stream reads (counted)"]);
+    for (label, teps, _, edges) in &hub_rows {
+        t.row(&[(*label).into(), mteps(*teps), edges.to_string()]);
+    }
+    print!("{}", t.render());
+    let (e_off, e_on) = (hub_rows[0].3, hub_rows[1].3);
+    assert!(
+        e_on <= e_off,
+        "hub bitmap increased bottom-up stream reads ({e_on} > {e_off})"
+    );
+    println!(
+        "(candidates adjacent to a frontier hub claim their parent from the bitmap: \
+         {e_on} vs {e_off} adjacency reads)"
+    );
+
+    // perf trajectory: fused/unfused, prefetch sweep and hub ladder for CI
+    let fusion_json_path = std::env::var("PHIBFS_BENCH_FUSION_JSON")
+        .unwrap_or_else(|_| "BENCH_fusion.json".into());
+    let fusion_entries: Vec<String> = fusion_rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"name\":\"{}\",\"unfused_teps\":{:.1},\"unfused_seconds\":{:.6},\
+                 \"fused_teps\":{:.1},\"fused_seconds\":{:.6}}}",
+                r.name, r.unfused_teps, r.unfused_seconds, r.fused_teps, r.fused_seconds,
+            )
+        })
+        .collect();
+    let pf_entries: Vec<String> = pf_rows
+        .iter()
+        .map(|(label, teps, secs)| {
+            format!("{{\"dist\":\"{label}\",\"teps\":{teps:.1},\"mean_seconds\":{secs:.6}}}")
+        })
+        .collect();
+    let hub_entries: Vec<String> = hub_rows
+        .iter()
+        .map(|(label, teps, secs, edges)| {
+            format!(
+                "{{\"name\":\"{label}\",\"teps\":{teps:.1},\"mean_seconds\":{secs:.6},\
+                 \"bu_stream_edges\":{edges}}}"
+            )
+        })
+        .collect();
+    let fusion_json = format!(
+        "{{\"bench\":\"fusion\",\"scale\":{},\"edgefactor\":16,\"smoke\":{},\
+         \"hw_tier\":\"{}\",\"m_edges\":{:.0},\"fusion\":[{}],\"prefetch\":[{}],\
+         \"hub\":[{}]}}\n",
+        fu_scale,
+        smoke,
+        detect_hw_select().name(),
+        m_edges9,
+        fusion_entries.join(","),
+        pf_entries.join(","),
+        hub_entries.join(",")
+    );
+    std::fs::write(&fusion_json_path, &fusion_json)
+        .unwrap_or_else(|e| panic!("writing {fusion_json_path}: {e}"));
+    println!("wrote {fusion_json_path}");
 }

@@ -72,6 +72,69 @@ impl ComponentMap {
     }
 }
 
+/// Default number of hub lanes in the packed hub-adjacency bitmap
+/// ([`HubBits`]) — one `u32` mask word per vertex covers up to 32 hubs.
+pub const DEFAULT_HUB_BITS: usize = 32;
+
+/// Packed hub-adjacency bitmap: for the `k ≤ 32` highest-degree vertices
+/// ("hubs"), one mask word per vertex records which hubs it is adjacent
+/// to. An RMAT graph's hubs appear in almost every adjacency list, so
+/// during a bottom-up layer most unvisited vertices have a frontier
+/// neighbor among them: testing `masks[v] & frontier_hub_mask` answers
+/// "does v have a frontier hub parent?" from one L1-resident word,
+/// without touching the SELL adjacency stream at all
+/// ([`crate::bfs::sell_bottom_up::bottom_up_layer_sell`]).
+#[derive(Clone, Debug)]
+pub struct HubBits {
+    /// How many hubs were requested (clamped to 32 and the vertex count).
+    pub k: usize,
+    /// The hub vertices, highest degree first — bit `j` of a mask word
+    /// refers to `hubs[j]`.
+    pub hubs: Vec<Vertex>,
+    /// Per-vertex adjacency mask: bit `j` set ⇔ the vertex is adjacent to
+    /// `hubs[j]`.
+    pub masks: Vec<u32>,
+}
+
+impl HubBits {
+    /// Select the `k` highest-degree vertices of `g` (ties broken by id
+    /// for determinism) and mark their neighbors. O(V + Σ deg(hub)).
+    pub fn build(g: &Csr, k: usize) -> Self {
+        let n = g.num_vertices();
+        let k = k.min(32).min(n);
+        let mut by_degree: Vec<Vertex> = (0..n as Vertex).collect();
+        if k > 0 && k < n {
+            by_degree
+                .select_nth_unstable_by_key(k - 1, |&v| (std::cmp::Reverse(g.degree(v)), v));
+        }
+        let mut hubs: Vec<Vertex> = by_degree[..k].to_vec();
+        hubs.sort_unstable_by_key(|&v| (std::cmp::Reverse(g.degree(v)), v));
+        let mut masks = vec![0u32; n];
+        for (j, &h) in hubs.iter().enumerate() {
+            let bit = 1u32 << j;
+            for &w in g.neighbors(h) {
+                masks[w as usize] |= bit;
+            }
+        }
+        HubBits { k, hubs, masks }
+    }
+
+    /// Which hubs are set in `frontier_words` — the one mask word a
+    /// bottom-up layer tests every candidate against.
+    pub fn frontier_mask(&self, frontier_words: &[u32]) -> u32 {
+        let mut m = 0u32;
+        for (j, &h) in self.hubs.iter().enumerate() {
+            let w = (h / 32) as usize;
+            if let Some(&word) = frontier_words.get(w) {
+                if word >> (h % 32) & 1 != 0 {
+                    m |= 1 << j;
+                }
+            }
+        }
+        m
+    }
+}
+
 /// Typed per-graph state shared across all roots of a job.
 ///
 /// Only the [`PolicyFeedback`] channel exists up front; everything
@@ -85,9 +148,11 @@ pub struct GraphArtifacts {
     sell: OnceLock<Arc<Sell16>>,
     padded: OnceLock<Arc<PaddedCsr>>,
     components: OnceLock<Arc<ComponentMap>>,
+    hub: OnceLock<Arc<HubBits>>,
     sell_builds: AtomicUsize,
     padded_builds: AtomicUsize,
     component_builds: AtomicUsize,
+    hub_builds: AtomicUsize,
 }
 
 impl GraphArtifacts {
@@ -100,9 +165,11 @@ impl GraphArtifacts {
             sell: OnceLock::new(),
             padded: OnceLock::new(),
             components: OnceLock::new(),
+            hub: OnceLock::new(),
             sell_builds: AtomicUsize::new(0),
             padded_builds: AtomicUsize::new(0),
             component_builds: AtomicUsize::new(0),
+            hub_builds: AtomicUsize::new(0),
         }
     }
 
@@ -149,6 +216,30 @@ impl GraphArtifacts {
             self.component_builds.fetch_add(1, Ordering::Relaxed);
             Arc::new(ComponentMap::compute(g))
         }))
+    }
+
+    /// The packed hub-adjacency bitmap of `g` for the top-`k` hubs, built
+    /// on first call and cached. Like [`Self::sell_layout`], a call with a
+    /// different `k` than the cached bitmap builds fresh (uncached) — one
+    /// job runs one hub configuration.
+    pub fn hub_bits(&self, g: &Csr, k: usize) -> Arc<HubBits> {
+        let clamped = k.min(32).min(g.num_vertices());
+        let cached = self.hub.get_or_init(|| {
+            self.hub_builds.fetch_add(1, Ordering::Relaxed);
+            Arc::new(HubBits::build(g, k))
+        });
+        if cached.k == clamped {
+            Arc::clone(cached)
+        } else {
+            self.hub_builds.fetch_add(1, Ordering::Relaxed);
+            Arc::new(HubBits::build(g, k))
+        }
+    }
+
+    /// How many times a [`HubBits`] bitmap was constructed through these
+    /// artifacts.
+    pub fn hub_builds(&self) -> usize {
+        self.hub_builds.load(Ordering::Relaxed)
     }
 
     /// How many times a [`ComponentMap`] was constructed through these
@@ -259,6 +350,52 @@ mod tests {
         assert!(Arc::ptr_eq(&c1, &c2));
         assert_eq!(a.component_builds(), 1);
         assert_eq!(c1.count, cm.count);
+    }
+
+    #[test]
+    fn hub_bits_mark_exactly_the_hub_neighbors() {
+        // star around 0 plus a 3-4 edge: hubs by degree are 0 then 3/4
+        let el = EdgeList::with_edges(6, vec![(0, 1), (0, 2), (0, 5), (3, 4)]);
+        let g = Csr::from_edge_list(0, &el);
+        let h = HubBits::build(&g, 2);
+        assert_eq!(h.k, 2);
+        assert_eq!(h.hubs[0], 0, "highest degree first");
+        assert_eq!(h.hubs[1], 3, "ties broken by id");
+        // bit 0 = adjacency to vertex 0, bit 1 = adjacency to vertex 3
+        assert_eq!(h.masks[1] & 1, 1);
+        assert_eq!(h.masks[2] & 1, 1);
+        assert_eq!(h.masks[5] & 1, 1);
+        assert_eq!(h.masks[4], 2);
+        assert_eq!(h.masks[0], 0, "a hub is not its own neighbor here");
+        // frontier containing only vertex 3 activates hub bit 1
+        let mut frontier = crate::graph::Bitmap::new(6);
+        frontier.set_bit(3);
+        assert_eq!(h.frontier_mask(frontier.words()), 0b10);
+        frontier.set_bit(0);
+        assert_eq!(h.frontier_mask(frontier.words()), 0b11);
+    }
+
+    #[test]
+    fn hub_bits_build_once_and_k_mismatch_builds_fresh() {
+        let g = rmat(9, 8, 7);
+        let a = GraphArtifacts::for_graph(&g);
+        assert_eq!(a.hub_builds(), 0);
+        let h1 = a.hub_bits(&g, 16);
+        let h2 = a.hub_bits(&g, 16);
+        assert!(Arc::ptr_eq(&h1, &h2));
+        assert_eq!(a.hub_builds(), 1);
+        let h3 = a.hub_bits(&g, 8);
+        assert!(!Arc::ptr_eq(&h1, &h3));
+        assert_eq!(h3.k, 8);
+        assert_eq!(a.hub_builds(), 2);
+        // the original k stays cached
+        let h4 = a.hub_bits(&g, 16);
+        assert!(Arc::ptr_eq(&h1, &h4));
+        assert_eq!(a.hub_builds(), 2);
+        // oversized k clamps to 32
+        let h5 = HubBits::build(&g, 1000);
+        assert_eq!(h5.k, 32);
+        assert_eq!(h5.hubs.len(), 32);
     }
 
     #[test]

@@ -38,6 +38,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use super::artifacts::HubBits;
 use super::policy::{BottomUpMode, LayerPolicy, PolicyFeedback};
 use super::sell_bottom_up::bottom_up_layer_sell;
 use super::sell_vectorized::{SellStep, SIGMA_AUTO};
@@ -127,7 +128,9 @@ pub fn bottom_up_layer_simd<V: VpuBackend>(
         num_threads,
         num_words,
         WORD_GRAIN,
-        |_tid, range, acc: &mut Acc<V>| {
+        // the per-thread scan runs inside the backend's #[target_feature]
+        // envelope so the gather/bit-test filter fuses per tier
+        |_tid, range, acc: &mut Acc<V>| crate::simd::fused::fuse::<V, _, _>(|| {
             let vpu = acc.vpu.get_or_insert_with(V::new);
             for w in range {
                 for b in 0..BITS_PER_WORD {
@@ -166,7 +169,7 @@ pub fn bottom_up_layer_simd<V: VpuBackend>(
                     }
                 }
             }
-        },
+        }),
     );
     let mut edges = 0;
     let mut found = 0;
@@ -206,6 +209,13 @@ pub struct HybridBfs {
     /// `sell`/`bu_sell` need one); [`SIGMA_AUTO`] resolves to the
     /// per-scale default at prepare time.
     pub sigma: usize,
+    /// Size of the packed hub-adjacency bitmap for the SELL bottom-up
+    /// step (`--hub-bits`): prepare builds a [`HubBits`] for the top-k
+    /// highest-degree vertices and bottom-up candidates adjacent to a
+    /// frontier hub claim their parent from it without touching the SELL
+    /// adjacency stream. `0` (the default) disables hub caching; values
+    /// are clamped to 32. Only read when `bu_sell` is on.
+    pub hub_bits: usize,
     pub opts: SimdOpts,
     /// VPU backend mode: counted emulation, hardware SIMD, or counted
     /// warm-up + hardware steady state.
@@ -229,6 +239,7 @@ impl Default for HybridBfs {
             sell: false,
             bu_sell: false,
             sigma: SIGMA_AUTO,
+            hub_bits: 0,
             opts: SimdOpts::full(),
             vpu: VpuMode::default(),
         }
@@ -245,6 +256,7 @@ impl HybridBfs {
         sell_layout: Option<&Sell16>,
         padded: Option<&PaddedCsr>,
         feedback: Option<&PolicyFeedback>,
+        hub: Option<&HubBits>,
         root: Vertex,
         ctl: &RunControl,
     ) -> BfsResult {
@@ -357,6 +369,7 @@ impl HybridBfs {
                             &next,
                             &pred,
                             self.opts,
+                            hub,
                         );
                         (e, vpu)
                     }
@@ -465,6 +478,9 @@ pub struct PreparedHybrid<'g> {
     g: &'g Csr,
     sell: Option<Arc<Sell16>>,
     padded: Option<Arc<PaddedCsr>>,
+    /// Packed hub-adjacency bitmap for the SELL bottom-up step (built
+    /// when `hub_bits > 0` and `bu_sell` is on).
+    hub: Option<Arc<HubBits>>,
     engine: HybridBfs,
     artifacts: Arc<GraphArtifacts>,
 }
@@ -480,14 +496,24 @@ impl PreparedBfs for PreparedHybrid<'_> {
         let fb = self.artifacts.feedback();
         let (select, warmup) = resolve(self.engine.vpu, fb.roots_done());
         let feedback = self.sell.is_some().then_some(fb);
-        let mut r = crate::with_vpu_backend!(select, V, self.engine.traverse::<V>(
+        let mut engine = self.engine;
+        let sampling = super::vectorized::plan_prefetch(&mut engine.opts, fb, select);
+        let mut r = crate::with_vpu_backend!(select, V, engine.traverse::<V>(
             self.g,
             self.sell.as_deref(),
             self.padded.as_deref(),
             feedback,
+            self.hub.as_deref(),
             root,
             ctl,
         ));
+        if sampling {
+            fb.record_prefetch_sample(
+                engine.opts.prefetch_dist,
+                r.trace.total_wall_ns(),
+                r.trace.total_edges_scanned(),
+            );
+        }
         if feedback.is_none() && self.engine.vpu == VpuMode::Auto {
             // non-sell hybrids record no feedback of their own: advance
             // the auto warm-up count explicitly
@@ -540,7 +566,13 @@ impl BfsEngine for HybridBfs {
         } else {
             None
         };
-        Ok(Box::new(PreparedHybrid { g, sell, padded, engine: *self, artifacts }))
+        // the hub bitmap only serves the SELL bottom-up step
+        let hub = if self.bu_sell && self.hub_bits > 0 {
+            Some(artifacts.hub_bits(g, self.hub_bits))
+        } else {
+            None
+        };
+        Ok(Box::new(PreparedHybrid { g, sell, padded, hub, engine: *self, artifacts }))
     }
 }
 
@@ -720,6 +752,29 @@ mod tests {
             let s = SerialLayeredBfs.run(&g, 3);
             assert_eq!(r.tree.distances().unwrap(), s.tree.distances().unwrap());
         }
+    }
+
+    #[test]
+    fn hub_bits_hybrid_matches_serial_and_builds_once() {
+        let g = rmat(11, 82);
+        let root = (0..g.num_vertices() as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        let expected = SerialLayeredBfs.run(&g, root).tree.distances().unwrap();
+        let alg = HybridBfs {
+            num_threads: 2,
+            sell: true,
+            bu_sell: true,
+            hub_bits: 16,
+            vpu: VpuMode::Counted,
+            ..Default::default()
+        };
+        let prepared = alg.prepare(&g).unwrap();
+        assert_eq!(prepared.artifacts().hub_builds(), 1, "prepare builds the hub bitmap");
+        let r = prepared.run(root);
+        assert_eq!(r.tree.distances().unwrap(), expected, "hub caching must not change distances");
+        // hub caching off by default: no bitmap is built
+        let plain = HybridBfs { sell: true, bu_sell: true, ..Default::default() };
+        let p2 = plain.prepare(&g).unwrap();
+        assert_eq!(p2.artifacts().hub_builds(), 0);
     }
 
     #[test]

@@ -71,7 +71,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-pub use artifacts::{ComponentMap, DegreeStats, GraphArtifacts};
+pub use artifacts::{ComponentMap, DegreeStats, GraphArtifacts, HubBits, DEFAULT_HUB_BITS};
 pub use control::{RunControl, RunStatus};
 
 use crate::graph::Csr;
@@ -229,6 +229,11 @@ pub struct RunTrace {
     /// [`RunControl`] stopped it early — then `layers` and the tree cover
     /// only the visited prefix).
     pub status: RunStatus,
+    /// Nanoseconds this run spent *waiting for a device lock* before any
+    /// traversal work started (the PJRT-backed runtime serializes runs on
+    /// one device). Zero for engines with no device lock. Reported
+    /// separately so per-root seconds measure execution, not queueing.
+    pub lock_wait_ns: u64,
 }
 
 impl RunTrace {

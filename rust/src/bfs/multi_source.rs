@@ -263,11 +263,12 @@ fn ms_explore_layer<V: VpuBackend>(
     opts: SimdOpts,
 ) -> (usize, VpuCounters) {
     let (items, packed) = pack_frontier(sell, td_union, opts.aligned);
+    let dist = opts.effective_dist();
     let accs: Vec<PassAcc<V>> = parallel_for_dynamic(
         num_threads,
         items.len(),
         2,
-        |_tid, range, acc: &mut PassAcc<V>| {
+        |_tid, range, acc: &mut PassAcc<V>| crate::simd::fused::fuse::<V, _, _>(|| {
             let vpu = acc.vpu.get_or_insert_with(V::new);
             for item in &items[range] {
                 match *item {
@@ -302,8 +303,19 @@ fn ms_explore_layer<V: VpuBackend>(
                                 vpu.note_remainder(active.count() as usize);
                                 vpu.mask_load_vertices(active, &sell.cols, offset)
                             };
-                            if opts.prefetch && r + 1 < height {
-                                vpu.prefetch_scalar(PrefetchHint::T1);
+                            if opts.prefetch {
+                                if V::COUNTED {
+                                    if r + 1 < height {
+                                        vpu.prefetch_scalar(PrefetchHint::T1);
+                                    }
+                                } else if dist > 0 && r + dist < height {
+                                    if let Some(c0) = sell.cols.get(start + (r + dist) * SELL_C) {
+                                        vpu.prefetch_addr(
+                                            (c0 as *const u32).cast(),
+                                            PrefetchHint::T1,
+                                        );
+                                    }
+                                }
                             }
                             ms_explore_row(
                                 vpu, vneig, active, vsrc_mask, &src, state, opts.prefetch,
@@ -341,7 +353,22 @@ fn ms_explore_layer<V: VpuBackend>(
                             let roff = vpu.set1_epi32((r * SELL_C) as i32);
                             let vidx = vpu.add_epi32(vbase, roff);
                             if opts.prefetch {
-                                vpu.prefetch_i32gather(vidx, PrefetchHint::T1);
+                                if V::COUNTED {
+                                    vpu.prefetch_i32gather(vidx, PrefetchHint::T1);
+                                } else if dist > 0 && r + dist < height {
+                                    // lane 0 is the longest lane of the
+                                    // group — its stream is the one worth
+                                    // staying ahead of
+                                    if let Some(c0) = sell
+                                        .cols
+                                        .get(base_arr[0] as usize + (r + dist) * SELL_C)
+                                    {
+                                        vpu.prefetch_addr(
+                                            (c0 as *const u32).cast(),
+                                            PrefetchHint::T1,
+                                        );
+                                    }
+                                }
                             }
                             let vneig = vpu.mask_i32gather_words(active, vidx, &sell.cols);
                             ms_explore_row(
@@ -351,7 +378,7 @@ fn ms_explore_layer<V: VpuBackend>(
                     }
                 }
             }
-        },
+        }),
     );
 
     let (edges, _, _, vpu) = merge_accs(accs);
@@ -389,11 +416,12 @@ fn ms_bottom_up_layer<V: VpuBackend>(
     state: &WaveState<'_>,
     opts: SimdOpts,
 ) -> (usize, usize, usize, VpuCounters) {
+    let dist = opts.effective_dist();
     let accs: Vec<PassAcc<V>> = parallel_for_dynamic(
         num_threads,
         sell.num_chunks(),
         MS_BU_CHUNK_GRAIN,
-        |_tid, chunk_range, acc: &mut PassAcc<V>| {
+        |_tid, chunk_range, acc: &mut PassAcc<V>| crate::simd::fused::fuse::<V, _, _>(|| {
             let vpu = acc.vpu.get_or_insert_with(V::new);
             let slots = chunk_range.start * SELL_C..chunk_range.end * SELL_C;
             // candidate lanes: occupied slots whose vertex some *live*
@@ -431,7 +459,15 @@ fn ms_bottom_up_layer<V: VpuBackend>(
                 // visit mask (both one word per vertex)
                 let vidx = pack.gather_indices(sell);
                 if opts.prefetch {
-                    vpu.prefetch_i32gather(vidx, PrefetchHint::T1);
+                    if V::COUNTED {
+                        vpu.prefetch_i32gather(vidx, PrefetchHint::T1);
+                    } else if dist > 0 {
+                        // stay `dist` rows ahead of lane 0's adjacency
+                        // stream; `.get` bounds the lookahead
+                        if let Some(c0) = sell.cols.get(vidx.0[0] as usize + dist * SELL_C) {
+                            vpu.prefetch_addr((c0 as *const u32).cast(), PrefetchHint::T1);
+                        }
+                    }
                 }
                 let vneig = vpu.mask_i32gather_words(active, vidx, &sell.cols);
                 let vfm = vpu.mask_i32gather_words(active, vneig, frontier_mask);
@@ -462,7 +498,7 @@ fn ms_bottom_up_layer<V: VpuBackend>(
             drop(stream);
             acc.pool_vertices += pool_vertices;
             acc.pool_edges += pool_edges;
-        },
+        }),
     );
 
     merge_accs(accs)
@@ -816,7 +852,9 @@ impl PreparedBfs for PreparedMultiSource<'_> {
             // backend dispatch per wave: Auto runs counted warm-up waves
             // until the feedback channel has seen enough roots
             let (select, warmup) = resolve(self.engine.vpu, fb.roots_done());
-            let mut results = crate::with_vpu_backend!(select, V, self.engine.traverse_wave::<V>(
+            let mut engine = self.engine;
+            let sampling = super::vectorized::plan_prefetch(&mut engine.opts, fb, select);
+            let mut results = crate::with_vpu_backend!(select, V, engine.traverse_wave::<V>(
                 self.g,
                 &self.sell,
                 fb,
@@ -824,6 +862,17 @@ impl PreparedBfs for PreparedMultiSource<'_> {
                 wave,
                 ctl,
             ));
+            if sampling {
+                if let Some(lead) = results.first() {
+                    // the wave's shared wall time and VPU work live on the
+                    // lead trace, so that is the sample
+                    fb.record_prefetch_sample(
+                        engine.opts.prefetch_dist,
+                        lead.trace.total_wall_ns(),
+                        lead.trace.total_edges_scanned(),
+                    );
+                }
+            }
             if warmup {
                 for r in &mut results {
                     r.trace.counted_warmup = true;

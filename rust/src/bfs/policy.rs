@@ -33,6 +33,10 @@
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
+use super::vectorized::DEFAULT_PREFETCH_DIST;
+use crate::phi::config::KncParams;
+use crate::phi::cost::{price_layer, CostParams};
+use crate::phi::trace::LayerWork;
 use crate::simd::vec512::LANES;
 use crate::simd::VpuCounters;
 
@@ -182,6 +186,15 @@ const MIN_FEEDBACK_ISSUES: u64 = 64;
 struct ModeOcc {
     issues: AtomicU64,
     lanes: AtomicU64,
+    /// Aligned full-vector loads (the cheap chunk class of the cost model).
+    full_chunks: AtomicU64,
+    /// Masked/peel/remainder loads (pay the masked-chunk penalty).
+    masked_chunks: AtomicU64,
+    /// Gathered lanes — the per-lane issue occupancy a packed mode pays
+    /// that contiguous per-vertex loads do not.
+    gather_lanes: AtomicU64,
+    /// Scattered lanes.
+    scatter_lanes: AtomicU64,
 }
 
 impl ModeOcc {
@@ -189,6 +202,10 @@ impl ModeOcc {
     fn record(&self, vpu: &VpuCounters) {
         self.issues.fetch_add(vpu.explore_issues, Ordering::Relaxed);
         self.lanes.fetch_add(vpu.lanes_active, Ordering::Relaxed);
+        self.full_chunks.fetch_add(vpu.vector_loads, Ordering::Relaxed);
+        self.masked_chunks.fetch_add(vpu.masked_loads, Ordering::Relaxed);
+        self.gather_lanes.fetch_add(vpu.gather_lanes, Ordering::Relaxed);
+        self.scatter_lanes.fetch_add(vpu.scatter_lanes, Ordering::Relaxed);
     }
 
     /// Measured mean occupancy, `None` below the confidence floor — the
@@ -200,6 +217,38 @@ impl ModeOcc {
             return None;
         }
         Some(self.lanes.load(Ordering::Relaxed) as f64 / issues as f64)
+    }
+
+    /// Predicted Phi cycles per active lane: the cell's accumulated
+    /// counters, priced by [`price_layer`] with the default KNC machine.
+    /// This is what a mode's occupancy actually *buys* — a packed mode's
+    /// extra lanes are worthless if each issue drags gather lanes and
+    /// masked-chunk penalties behind it, which raw occupancy cannot see.
+    /// Footprint arguments are zero: the model's cache-fit stalls depend
+    /// on the graph, not the mode, so they would cancel in the comparison
+    /// anyway. `None` below the same confidence floor as
+    /// [`ModeOcc::occupancy`], or with no active lanes to normalize by.
+    fn predicted_cycles_per_lane(&self) -> Option<f64> {
+        let issues = self.issues.load(Ordering::Relaxed);
+        if issues < MIN_FEEDBACK_ISSUES {
+            return None;
+        }
+        let lanes = self.lanes.load(Ordering::Relaxed);
+        if lanes == 0 {
+            return None;
+        }
+        let w = LayerWork {
+            vectorized: true,
+            explore_issues: issues,
+            lanes_active: lanes,
+            full_chunks: self.full_chunks.load(Ordering::Relaxed),
+            masked_chunks: self.masked_chunks.load(Ordering::Relaxed),
+            gather_lanes: self.gather_lanes.load(Ordering::Relaxed),
+            scatter_lanes: self.scatter_lanes.load(Ordering::Relaxed),
+            ..Default::default()
+        };
+        let c = price_layer(&KncParams::default(), &CostParams::default(), &w, 0, 0);
+        Some((c.issue_cycles + c.stall_cycles) / lanes as f64)
     }
 }
 
@@ -248,7 +297,23 @@ pub struct PolicyFeedback {
     /// (the set a bottom-up layer actually scans). Index 0 = SellPacked,
     /// 1 = PerVertexChunks; the scalar mode issues nothing measurable.
     bu_bands: [[ModeOcc; 2]; OCC_BANDS],
+    /// Per-candidate prefetch-distance samples of the `--prefetch-dist
+    /// auto` warm-up sweep, indexed like [`PREFETCH_CANDIDATES`]: total
+    /// wall ns and total edges scanned by the roots that ran at that
+    /// distance. ns/edge is the figure of merit — roots differ in volume,
+    /// so raw wall times are not comparable.
+    prefetch: [PrefetchCell; PREFETCH_CANDIDATES.len()],
     roots_done: AtomicUsize,
+}
+
+/// Prefetch distances (SELL rows of lookahead) the auto-tune sweep
+/// samples, one root each, before settling on the best measured ns/edge.
+pub const PREFETCH_CANDIDATES: [usize; 4] = [1, 2, 4, 8];
+
+#[derive(Default)]
+struct PrefetchCell {
+    wall_ns: AtomicU64,
+    edges: AtomicU64,
 }
 
 /// log₂ band of a layer's mean frontier degree.
@@ -296,10 +361,26 @@ impl PolicyFeedback {
         let per_vertex = self.occupancy_in_band(b, ChunkingMode::PerVertex);
         match (packed, per_vertex) {
             (Some(p), Some(v)) => {
-                if v > p {
-                    ChunkingMode::PerVertex
-                } else {
-                    ChunkingMode::LanePacked
+                // both modes measured: compare what the Phi cost model
+                // says the counters *cost*, not what raw occupancy says
+                // they filled — a packed issue drags gather-lane issue
+                // cycles and masked-chunk penalties that a contiguous
+                // per-vertex chunk does not, and the priced comparison
+                // sees exactly that. With identical issue profiles the
+                // prices cancel and the ordering degrades to occupancy.
+                match (
+                    self.predicted_cost_in_band(b, ChunkingMode::LanePacked),
+                    self.predicted_cost_in_band(b, ChunkingMode::PerVertex),
+                ) {
+                    (Some(pc), Some(vc)) if pc != vc => {
+                        if vc < pc {
+                            ChunkingMode::PerVertex
+                        } else {
+                            ChunkingMode::LanePacked
+                        }
+                    }
+                    _ if v > p => ChunkingMode::PerVertex,
+                    _ => ChunkingMode::LanePacked,
                 }
             }
             // guided probe: measure per-vertex chunking only in bands where
@@ -365,6 +446,69 @@ impl PolicyFeedback {
         table_mean(&self.bands, mode_index(mode))
     }
 
+    /// Predicted Phi cycles per active lane of `mode` in degree band
+    /// `band` — the cost-model figure [`PolicyFeedback::choose`] compares
+    /// (`None` below the confidence floor).
+    pub fn predicted_cost_in_band(&self, band: usize, mode: ChunkingMode) -> Option<f64> {
+        self.bands[band][mode_index(mode)].predicted_cycles_per_lane()
+    }
+
+    /// Bottom-up counterpart of [`Self::predicted_cost_in_band`] (`None`
+    /// for the scalar mode, which records nothing).
+    pub fn bu_predicted_cost_in_band(&self, band: usize, mode: BottomUpMode) -> Option<f64> {
+        self.bu_bands[band][bu_mode_index(mode)?].predicted_cycles_per_lane()
+    }
+
+    // ---- prefetch distance: the `--prefetch-dist auto` warm-up sweep ----
+
+    /// Plan the next run's prefetch distance. Returns `(distance,
+    /// sampling)`: while any [`PREFETCH_CANDIDATES`] cell is still empty
+    /// the first such candidate is returned with `sampling = true` (the
+    /// caller must report the run back through
+    /// [`Self::record_prefetch_sample`]); once every candidate has a
+    /// sample the best measured distance is returned with `sampling =
+    /// false` and the sweep is over.
+    pub fn prefetch_plan(&self) -> (usize, bool) {
+        for (i, cell) in self.prefetch.iter().enumerate() {
+            if cell.edges.load(Ordering::Relaxed) == 0 {
+                return (PREFETCH_CANDIDATES[i], true);
+            }
+        }
+        (self.chosen_prefetch_dist(), false)
+    }
+
+    /// Report one sampling run back to the sweep: the whole-run wall time
+    /// and edge volume measured at candidate distance `dist`. Samples at
+    /// non-candidate distances or with no edge volume are discarded (a
+    /// trivial root measures nothing).
+    pub fn record_prefetch_sample(&self, dist: usize, wall_ns: u64, edges: usize) {
+        if edges == 0 {
+            return;
+        }
+        if let Some(i) = PREFETCH_CANDIDATES.iter().position(|&d| d == dist) {
+            self.prefetch[i].wall_ns.fetch_add(wall_ns, Ordering::Relaxed);
+            self.prefetch[i].edges.fetch_add(edges as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// The best prefetch distance measured so far — argmin of ns/edge over
+    /// the sampled candidates, [`DEFAULT_PREFETCH_DIST`] while nothing has
+    /// been sampled.
+    pub fn chosen_prefetch_dist(&self) -> usize {
+        let mut best: Option<(f64, usize)> = None;
+        for (i, cell) in self.prefetch.iter().enumerate() {
+            let edges = cell.edges.load(Ordering::Relaxed);
+            if edges == 0 {
+                continue;
+            }
+            let per_edge = cell.wall_ns.load(Ordering::Relaxed) as f64 / edges as f64;
+            if best.map_or(true, |(b, _)| per_edge < b) {
+                best = Some((per_edge, PREFETCH_CANDIDATES[i]));
+            }
+        }
+        best.map_or(DEFAULT_PREFETCH_DIST, |(_, d)| d)
+    }
+
     // ---- bottom-up: the hybrid's three-way scan choice ----
 
     /// Pick the bottom-up mode for a layer scanning `unvisited_vertices`
@@ -391,10 +535,22 @@ impl PolicyFeedback {
         let chunks = self.bu_occupancy_in_band(b, BottomUpMode::PerVertexChunks);
         match (packed, chunks) {
             (Some(p), Some(c)) => {
-                if c > p {
-                    BottomUpMode::PerVertexChunks
-                } else {
-                    BottomUpMode::SellPacked
+                // same priced comparison as `choose`: predicted cycles per
+                // active lane from the accumulated counters, occupancy as
+                // the tie-break when the prices cancel
+                match (
+                    self.bu_predicted_cost_in_band(b, BottomUpMode::SellPacked),
+                    self.bu_predicted_cost_in_band(b, BottomUpMode::PerVertexChunks),
+                ) {
+                    (Some(pc), Some(cc)) if pc != cc => {
+                        if cc < pc {
+                            BottomUpMode::PerVertexChunks
+                        } else {
+                            BottomUpMode::SellPacked
+                        }
+                    }
+                    _ if c > p => BottomUpMode::PerVertexChunks,
+                    _ => BottomUpMode::SellPacked,
                 }
             }
             // the first-hit early exit only lowers per-vertex occupancy
@@ -843,5 +999,98 @@ mod tests {
         // under the floor the static threshold still decides
         assert_eq!(f.choose(100, 400, true), ChunkingMode::LanePacked);
         assert!(f.mean_lanes_active(ChunkingMode::PerVertex).is_some());
+    }
+
+    /// Counters with a chunk/gather profile, for the cost-model tests.
+    fn rich_counters(issues: u64, lanes: u64, full: u64, gather: u64) -> VpuCounters {
+        VpuCounters {
+            explore_issues: issues,
+            lanes_active: lanes,
+            vector_loads: full,
+            gather_lanes: gather,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn priced_comparison_overrides_raw_occupancy() {
+        // band of mean degree 4. Lane packing measures MORE lanes per
+        // issue (10 vs 9), but every one of its issues is a gather-fed
+        // masked chunk dragging 32 gathered lanes behind it, while
+        // per-vertex chunking ran aligned full-vector loads. Priced:
+        // packing (100×(14+6) + 3200×1 + 100×60) / 1000 = 11.2 cycles per
+        // active lane vs chunking (100×14 + 100×60) / 900 ≈ 8.2 — the
+        // occupancy argmax points the wrong way and the cost model must
+        // override it.
+        let f = PolicyFeedback::default();
+        f.record_layer(ChunkingMode::LanePacked, 100, 400, &rich_counters(100, 1000, 0, 3200));
+        f.record_layer(ChunkingMode::PerVertex, 100, 400, &rich_counters(100, 900, 100, 0));
+        let b = band_of(4);
+        let packed_cost = f.predicted_cost_in_band(b, ChunkingMode::LanePacked).unwrap();
+        let chunk_cost = f.predicted_cost_in_band(b, ChunkingMode::PerVertex).unwrap();
+        assert!(chunk_cost < packed_cost, "{chunk_cost} !< {packed_cost}");
+        assert!(
+            f.occupancy_in_band(b, ChunkingMode::LanePacked).unwrap()
+                > f.occupancy_in_band(b, ChunkingMode::PerVertex).unwrap(),
+            "precondition: occupancy must point the other way"
+        );
+        assert_eq!(f.choose(100, 400, true), ChunkingMode::PerVertex);
+    }
+
+    #[test]
+    fn bottom_up_priced_comparison_overrides_raw_occupancy() {
+        // the same synthetic band, on the bottom-up three-way choice
+        let f = PolicyFeedback::default();
+        f.record_bottom_up_layer(
+            BottomUpMode::SellPacked,
+            100,
+            400,
+            &rich_counters(100, 1000, 0, 3200),
+        );
+        f.record_bottom_up_layer(
+            BottomUpMode::PerVertexChunks,
+            100,
+            400,
+            &rich_counters(100, 900, 100, 0),
+        );
+        assert_eq!(f.choose_bottom_up(100, 400, true), BottomUpMode::PerVertexChunks);
+        // the scalar floor still cannot be overridden by measurements
+        assert_eq!(f.choose_bottom_up(8, 32, true), BottomUpMode::Scalar);
+    }
+
+    #[test]
+    fn prefetch_sweep_samples_each_candidate_then_settles() {
+        let f = PolicyFeedback::default();
+        for &d in PREFETCH_CANDIDATES.iter() {
+            let (dist, sampling) = f.prefetch_plan();
+            assert_eq!(dist, d, "candidates must be sampled in order");
+            assert!(sampling);
+            // candidate 4 measures fastest per edge
+            let ns = if d == 4 { 1_000 } else { 10_000 };
+            f.record_prefetch_sample(d, ns, 1_000);
+        }
+        assert_eq!(f.prefetch_plan(), (4, false));
+        assert_eq!(f.chosen_prefetch_dist(), 4);
+    }
+
+    #[test]
+    fn prefetch_sweep_ignores_empty_and_foreign_samples() {
+        let f = PolicyFeedback::default();
+        assert_eq!(f.chosen_prefetch_dist(), DEFAULT_PREFETCH_DIST);
+        // a zero-edge sample measures nothing: the candidate stays open
+        f.record_prefetch_sample(1, 999, 0);
+        assert_eq!(f.prefetch_plan(), (1, true));
+        // a sample at a non-candidate distance (a CLI-pinned run) is
+        // discarded rather than polluting a cell
+        f.record_prefetch_sample(3, 999, 1_000);
+        assert_eq!(f.prefetch_plan(), (1, true));
+        // ns/edge, not raw ns, decides: dist 1 is slower per edge despite
+        // the smaller total
+        f.record_prefetch_sample(1, 4_000, 1_000);
+        f.record_prefetch_sample(2, 8_000, 4_000);
+        f.record_prefetch_sample(4, 30_000, 10_000);
+        f.record_prefetch_sample(8, 50_000, 10_000);
+        assert_eq!(f.chosen_prefetch_dist(), 2);
+        assert_eq!(f.prefetch_plan(), (2, false));
     }
 }

@@ -45,6 +45,7 @@
 //! equivalence tests assert; the chunked scan by contrast pays for every
 //! entry of a 16-chunk even when lane 0 already hit.
 
+use super::artifacts::HubBits;
 use super::state::{SharedBitmap, SharedPred};
 use super::vectorized::SimdOpts;
 use crate::graph::bitmap::BITS_PER_WORD;
@@ -178,6 +179,14 @@ const BU_CHUNK_GRAIN: usize = 64;
 /// `frontier_words` is the read-only frontier bitmap of the current layer;
 /// `visited`/`next`/`pred` follow the same discipline as the scalar scan —
 /// a vertex's entries are written only by the lane scanning that vertex.
+///
+/// `hub`, when present, is the packed hub-adjacency bitmap
+/// ([`HubBits`]): candidates adjacent to a frontier hub are claimed from
+/// one L1-resident mask word and never enter the [`LanePack`], so the
+/// SELL adjacency stream is read strictly less on hub-heavy layers.
+/// Hub-claimed lanes scan zero adjacency entries (that is the point), so
+/// edge counts shrink versus `hub = None`; distances are unchanged — the
+/// claimed parent is a frontier neighbor either way.
 pub fn bottom_up_layer_sell<V: VpuBackend>(
     num_threads: usize,
     sell: &Sell16,
@@ -186,6 +195,7 @@ pub fn bottom_up_layer_sell<V: VpuBackend>(
     next: &SharedBitmap,
     pred: &SharedPred,
     opts: SimdOpts,
+    hub: Option<&HubBits>,
 ) -> (usize, usize, VpuCounters) {
     struct Acc<V> {
         edges: usize,
@@ -199,18 +209,46 @@ pub fn bottom_up_layer_sell<V: VpuBackend>(
         }
     }
 
+    // which hubs are in this layer's frontier — one mask word for the
+    // whole layer, reused by every candidate test
+    let hub_mask = hub.map_or(0u32, |h| h.frontier_mask(frontier_words));
+    let dist = opts.effective_dist();
     let accs: Vec<Acc<V>> = parallel_for_dynamic(
         num_threads,
         sell.num_chunks(),
         BU_CHUNK_GRAIN,
-        |_tid, chunk_range, acc: &mut Acc<V>| {
+        |_tid, chunk_range, acc: &mut Acc<V>| crate::simd::fused::fuse::<V, _, _>(|| {
             let vpu = acc.vpu.get_or_insert_with(V::new);
             let slots = chunk_range.start * SELL_C..chunk_range.end * SELL_C;
             // candidate lanes: occupied slots whose vertex is still
             // unvisited. Within a layer only this thread can visit them
             // (each vertex is claimed by its own lane), so the filter is
-            // stable across the refill stream.
-            let mut stream = sell.slot_lanes(slots).filter(|l| !visited.test_bit(l.vertex));
+            // stable across the refill stream. Candidates adjacent to a
+            // frontier hub are claimed right here, from the bitmap, and
+            // never reach the pack.
+            let mut hub_found = 0usize;
+            let mut stream = sell.slot_lanes(slots).filter(|l| {
+                if visited.test_bit(l.vertex) {
+                    return false;
+                }
+                if hub_mask != 0 {
+                    if let Some(h) = hub {
+                        let m = h.masks[l.vertex as usize] & hub_mask;
+                        if m != 0 {
+                            // claim the lowest-indexed (highest-degree)
+                            // frontier hub as parent — race-free, same
+                            // per-vertex ownership as the lane claim
+                            let parent = h.hubs[m.trailing_zeros() as usize];
+                            pred.set(l.vertex, parent as crate::Pred);
+                            next.set_bit_atomic(l.vertex);
+                            visited.set_bit_atomic(l.vertex);
+                            hub_found += 1;
+                            return false;
+                        }
+                    }
+                }
+                true
+            });
             let mut pack = LanePack::new();
             loop {
                 let active = pack.refill(&mut stream);
@@ -223,7 +261,15 @@ pub fn bottom_up_layer_sell<V: VpuBackend>(
                 // gather each lane's next neighbor from the SELL storage
                 let vidx = pack.gather_indices(sell);
                 if opts.prefetch {
-                    vpu.prefetch_i32gather(vidx, PrefetchHint::T1);
+                    if V::COUNTED {
+                        vpu.prefetch_i32gather(vidx, PrefetchHint::T1);
+                    } else if dist > 0 {
+                        // hardware: representative-lane stream prefetch —
+                        // lane 0's SELL column line `dist` rows ahead
+                        if let Some(c) = sell.cols.get(vidx.0[0] as usize + dist * SELL_C) {
+                            vpu.prefetch_addr((c as *const u32).cast(), PrefetchHint::T1);
+                        }
+                    }
                 }
                 let vneig = vpu.mask_i32gather_words(active, vidx, &sell.cols);
 
@@ -256,7 +302,8 @@ pub fn bottom_up_layer_sell<V: VpuBackend>(
                 }
                 pack.advance(hit);
             }
-        },
+            acc.found += hub_found;
+        }),
     );
 
     let mut edges = 0usize;
@@ -318,6 +365,7 @@ mod tests {
                 &n2,
                 &p2,
                 SimdOpts::full(),
+                None,
             );
             assert_eq!(e1, e2, "lane-packed must scan exactly the scalar entry count");
             assert_eq!(f1, f2);
@@ -352,6 +400,7 @@ mod tests {
             &n2,
             &p2,
             SimdOpts::full(),
+            None,
         );
         assert_eq!(n1.snapshot().words(), n2.snapshot().words());
         assert_eq!(v1.snapshot().words(), v2.snapshot().words());
@@ -387,8 +436,16 @@ mod tests {
         let (v1, n1, p1) = mk();
         let (_, _, chunked) = bottom_up_layer_simd::<Vpu>(1, &g, frontier.words(), &v1, &n1, &p1);
         let (v2, n2, p2) = mk();
-        let (_, _, packed) =
-            bottom_up_layer_sell::<Vpu>(1, &sell, frontier.words(), &v2, &n2, &p2, SimdOpts::full());
+        let (_, _, packed) = bottom_up_layer_sell::<Vpu>(
+            1,
+            &sell,
+            frontier.words(),
+            &v2,
+            &n2,
+            &p2,
+            SimdOpts::full(),
+            None,
+        );
         let occ_chunked = chunked.mean_lanes_active();
         let occ_packed = packed.mean_lanes_active();
         assert!(occ_chunked > 0.0 && occ_packed > 0.0);
@@ -421,6 +478,7 @@ mod tests {
             &n1,
             &p1,
             SimdOpts::full(),
+            None,
         );
         let (v2, n2, p2) = fresh_state(n, root);
         let (e2, f2, hw) = bottom_up_layer_sell::<HwPortable>(
@@ -431,6 +489,7 @@ mod tests {
             &n2,
             &p2,
             SimdOpts::full(),
+            None,
         );
         assert_eq!(e1, e2);
         assert_eq!(f1, f2);
@@ -458,6 +517,7 @@ mod tests {
             &next,
             &pred,
             SimdOpts::full(),
+            None,
         );
         // every unvisited lane scans to exhaustion, finds nothing
         assert_eq!(found, 0);
@@ -482,11 +542,55 @@ mod tests {
             &next,
             &pred,
             SimdOpts::none(),
+            None,
         );
         assert_eq!(found, 1);
         assert!(next.test_bit(1));
         assert_eq!(pred.get(1), 0);
         assert_eq!(pred.get(2), crate::PRED_INFINITY);
         assert_eq!(pred.get(4), crate::PRED_INFINITY);
+    }
+
+    #[test]
+    fn hub_bitmap_claims_match_and_scan_less() {
+        // the frontier is the top-degree hub, so every candidate adjacent
+        // to it resolves from the bitmap: identical discoveries and
+        // parents, strictly fewer adjacency-stream reads
+        let g = rmat(10, 16, 78);
+        let n = g.num_vertices();
+        let sell = Sell16::from_csr(&g, 256);
+        let root = (0..n as u32).max_by_key(|&v| g.degree(v)).unwrap();
+        let hub = HubBits::build(&g, 16);
+        let mut frontier = Bitmap::new(n);
+        frontier.set_bit(root);
+
+        let (v1, n1, p1) = fresh_state(n, root);
+        let (e_off, f_off, _) = bottom_up_layer_sell::<Vpu>(
+            1,
+            &sell,
+            frontier.words(),
+            &v1,
+            &n1,
+            &p1,
+            SimdOpts::full(),
+            None,
+        );
+        let (v2, n2, p2) = fresh_state(n, root);
+        let (e_on, f_on, _) = bottom_up_layer_sell::<Vpu>(
+            1,
+            &sell,
+            frontier.words(),
+            &v2,
+            &n2,
+            &p2,
+            SimdOpts::full(),
+            Some(&hub),
+        );
+        assert_eq!(f_off, f_on, "hub claims must find the same vertices");
+        assert_eq!(n1.snapshot().words(), n2.snapshot().words());
+        assert_eq!(v1.snapshot().words(), v2.snapshot().words());
+        // the only frontier hub is the root, so claimed parents agree too
+        assert_eq!(p1.snapshot(), p2.snapshot());
+        assert!(e_on < e_off, "hub path must skip adjacency reads ({e_on} !< {e_off})");
     }
 }

@@ -245,11 +245,14 @@ pub fn sell_explore_layer<V: VpuBackend>(
     }
 
     let (items, packed) = pack_frontier(sell, frontier, opts.aligned);
+    let dist = opts.effective_dist();
+    // the per-thread item loop runs inside the backend's #[target_feature]
+    // envelope so the whole gather → filter → scatter dataflow fuses
     let accs: Vec<Acc<V>> = parallel_for_dynamic(
         num_threads,
         items.len(),
         2,
-        |_tid, range, acc: &mut Acc<V>| {
+        |_tid, range, acc: &mut Acc<V>| crate::simd::fused::fuse::<V, _, _>(|| {
             let vpu = acc.vpu.get_or_insert_with(V::new);
             for item in &items[range] {
                 match *item {
@@ -280,9 +283,24 @@ pub fn sell_explore_layer<V: VpuBackend>(
                                 vpu.note_remainder(active.count() as usize);
                                 vpu.mask_load_vertices(active, &sell.cols, offset)
                             };
-                            if opts.prefetch && r + 1 < height {
-                                // next row of this chunk streams in
-                                vpu.prefetch_scalar(PrefetchHint::T1);
+                            if opts.prefetch {
+                                if V::COUNTED {
+                                    if r + 1 < height {
+                                        // next row of this chunk streams in
+                                        vpu.prefetch_scalar(PrefetchHint::T1);
+                                    }
+                                } else if dist > 0 && r + dist < height {
+                                    // hardware: keep the cols line `dist`
+                                    // rows out in flight
+                                    if let Some(c) =
+                                        sell.cols.get(start + (r + dist) * SELL_C)
+                                    {
+                                        vpu.prefetch_addr(
+                                            (c as *const u32).cast(),
+                                            PrefetchHint::T1,
+                                        );
+                                    }
+                                }
                             }
                             explore_packed_row(
                                 vpu, vneig, active, vparent, visited, out, pred, opts.prefetch,
@@ -317,7 +335,22 @@ pub fn sell_explore_layer<V: VpuBackend>(
                             let roff = vpu.set1_epi32((r * SELL_C) as i32);
                             let vidx = vpu.add_epi32(vbase, roff);
                             if opts.prefetch {
-                                vpu.prefetch_i32gather(vidx, PrefetchHint::T1);
+                                if V::COUNTED {
+                                    vpu.prefetch_i32gather(vidx, PrefetchHint::T1);
+                                } else if dist > 0 && r + dist < height {
+                                    // representative-lane prefetch `dist`
+                                    // rows ahead of lane 0 (the longest —
+                                    // groups pack by descending length)
+                                    if let Some(c) = sell
+                                        .cols
+                                        .get(base_arr[0] as usize + (r + dist) * SELL_C)
+                                    {
+                                        vpu.prefetch_addr(
+                                            (c as *const u32).cast(),
+                                            PrefetchHint::T1,
+                                        );
+                                    }
+                                }
                             }
                             let vneig = vpu.mask_i32gather_words(active, vidx, &sell.cols);
                             explore_packed_row(
@@ -327,7 +360,7 @@ pub fn sell_explore_layer<V: VpuBackend>(
                     }
                 }
             }
-        },
+        }),
     );
 
     let mut edges = 0usize;
@@ -546,9 +579,11 @@ impl PreparedBfs for PreparedSell<'_> {
     fn run_with(&self, root: Vertex, ctl: &RunControl) -> BfsResult {
         // backend dispatch, once per traversal; the traverse (and every
         // layer helper under it) monomorphizes per backend
-        let (select, warmup) =
-            resolve(self.engine.vpu, self.artifacts.feedback().roots_done());
-        let mut r = crate::with_vpu_backend!(select, V, self.engine.traverse::<V>(
+        let fb = self.artifacts.feedback();
+        let (select, warmup) = resolve(self.engine.vpu, fb.roots_done());
+        let mut engine = self.engine;
+        let sampling = super::vectorized::plan_prefetch(&mut engine.opts, fb, select);
+        let mut r = crate::with_vpu_backend!(select, V, engine.traverse::<V>(
             self.g,
             &self.sell,
             self.padded.as_deref(),
@@ -556,6 +591,13 @@ impl PreparedBfs for PreparedSell<'_> {
             root,
             ctl,
         ));
+        if sampling {
+            fb.record_prefetch_sample(
+                engine.opts.prefetch_dist,
+                r.trace.total_wall_ns(),
+                r.trace.total_edges_scanned(),
+            );
+        }
         r.trace.counted_warmup = warmup;
         r
     }

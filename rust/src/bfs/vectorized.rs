@@ -37,7 +37,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::policy::LayerPolicy;
+use super::policy::{LayerPolicy, PolicyFeedback};
 use super::state::{SharedBitmap, SharedPred};
 use super::{
     BfsEngine, BfsResult, BfsTree, GraphArtifacts, LayerTrace, PreparedBfs, RunControl, RunStatus,
@@ -45,12 +45,24 @@ use super::{
 };
 use crate::graph::bitmap::BITS_PER_WORD;
 use crate::graph::{Adjacency, Bitmap, Csr, PaddedCsr};
-use crate::simd::backend::{resolve, VpuBackend, VpuMode};
+use crate::simd::backend::{resolve, VpuBackend, VpuMode, VpuSelect};
 use crate::simd::ops::PrefetchHint;
 use crate::simd::vec512::{Mask16, VecI32x16, LANES};
 use crate::simd::VpuCounters;
 use crate::threads::parallel_for_dynamic;
 use crate::{Pred, Vertex};
+
+/// `--prefetch-dist auto`: sweep [`crate::bfs::policy::PREFETCH_CANDIDATES`]
+/// on the first hardware roots, then lock the distance with the best
+/// measured ns/edge (see `PolicyFeedback::prefetch_plan`).
+pub const PREFETCH_DIST_AUTO: usize = usize::MAX;
+
+/// The distance layer kernels fall back to when asked to run with the
+/// [`PREFETCH_DIST_AUTO`] sentinel still unresolved (direct layer-function
+/// calls in tests, or prepared engines whose sweep has not produced a
+/// sample yet). Chunks (SELL rows / adjacency chunks) ahead of the one
+/// being explored.
+pub const DEFAULT_PREFETCH_DIST: usize = 4;
 
 /// §4.2 optimization toggles (the Fig 9 ablation axes).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -63,23 +75,41 @@ pub struct SimdOpts {
     /// Software prefetching of gathers/scatters plus next-iteration rows
     /// (§4.2 "Prefetching").
     pub prefetch: bool,
+    /// How many chunks ahead the **hardware** tiers issue their address
+    /// prefetches (`--prefetch-dist`). [`PREFETCH_DIST_AUTO`] lets the
+    /// prepared engine sweep for the best value; `0` disables the
+    /// distance-tuned prefetches (the counted emulator's §4.2 prefetch
+    /// *counters* are governed solely by `prefetch` and never see this
+    /// knob, so event counts stay bit-identical across distances).
+    pub prefetch_dist: usize,
 }
 
 impl SimdOpts {
     /// "SIMD - no opt" in Fig 9.
     pub fn none() -> Self {
-        SimdOpts { aligned: false, prefetch: false }
+        SimdOpts { aligned: false, prefetch: false, prefetch_dist: PREFETCH_DIST_AUTO }
     }
 
     /// "SIMD + parallel + alignment and masks" in Fig 9.
     pub fn aligned_masks() -> Self {
-        SimdOpts { aligned: true, prefetch: false }
+        SimdOpts { aligned: true, prefetch: false, prefetch_dist: PREFETCH_DIST_AUTO }
     }
 
     /// Full optimization set (alignment + masks + prefetching) — the
     /// configuration the headline results use.
     pub fn full() -> Self {
-        SimdOpts { aligned: true, prefetch: true }
+        SimdOpts { aligned: true, prefetch: true, prefetch_dist: PREFETCH_DIST_AUTO }
+    }
+
+    /// The concrete prefetch distance a layer kernel should use: the
+    /// configured value, or [`DEFAULT_PREFETCH_DIST`] while the auto
+    /// sentinel is still unresolved.
+    pub fn effective_dist(&self) -> usize {
+        if self.prefetch_dist == PREFETCH_DIST_AUTO {
+            DEFAULT_PREFETCH_DIST
+        } else {
+            self.prefetch_dist
+        }
     }
 }
 
@@ -216,11 +246,22 @@ pub(crate) fn explore_vertex<A: Adjacency + ?Sized, V: VpuBackend>(
         return 0;
     }
     let rows = g.rows();
+    let dist = opts.effective_dist();
 
     if opts.prefetch {
-        // Prefetch the rows array for the vertices processed next
-        // iteration (§4.2, after Jha et al. [14]).
-        vpu.prefetch_scalar(PrefetchHint::T1);
+        if V::COUNTED {
+            // Prefetch the rows array for the vertices processed next
+            // iteration (§4.2, after Jha et al. [14]). The counted
+            // emulator models this through the index-based hint so the
+            // event counters never depend on the tuned distance.
+            vpu.prefetch_scalar(PrefetchHint::T1);
+        } else if dist > 0 {
+            // Hardware tiers issue a real address prefetch `dist` chunks
+            // into the adjacency segment.
+            if let Some(r) = rows.get(start + dist * LANES) {
+                vpu.prefetch_addr((r as *const u32).cast(), PrefetchHint::T1);
+            }
+        }
     }
 
     if !opts.aligned {
@@ -260,6 +301,12 @@ pub(crate) fn explore_vertex<A: Adjacency + ?Sized, V: VpuBackend>(
     }
     let mut off = peel_end;
     while off + LANES <= end {
+        if !V::COUNTED && opts.prefetch && dist > 0 {
+            // stream-ahead: keep the rows line `dist` chunks out in flight
+            if let Some(r) = rows.get(off + dist * LANES) {
+                vpu.prefetch_addr((r as *const u32).cast(), PrefetchHint::T1);
+            }
+        }
         vpu.note_full_chunk();
         explore_chunk(vpu, rows, off, Mask16::ALL, true, u, nodes, visited, out, pred, opts.prefetch);
         off += LANES;
@@ -306,20 +353,25 @@ pub(crate) fn explore_layer_per_vertex<A: Adjacency + ?Sized, V: VpuBackend>(
         num_threads,
         in_words.len(),
         WORD_GRAIN,
+        // the whole per-thread chunk runs inside the backend's
+        // #[target_feature] envelope so Listing 1 fuses per tier
         |_tid, range, acc: &mut ExploreAcc<V>| {
-            for w in range {
-                let mut word = in_words[w];
-                while word != 0 {
-                    let bit = word.trailing_zeros();
-                    word &= word - 1;
-                    let u = Bitmap::bit_to_vertex(w, bit);
-                    if (u as usize) >= n {
-                        continue;
+            crate::simd::fused::fuse::<V, _, _>(|| {
+                for w in range {
+                    let mut word = in_words[w];
+                    while word != 0 {
+                        let bit = word.trailing_zeros();
+                        word &= word - 1;
+                        let u = Bitmap::bit_to_vertex(w, bit);
+                        if (u as usize) >= n {
+                            continue;
+                        }
+                        let vpu = acc.vpu.get_or_insert_with(V::new);
+                        acc.edges_scanned +=
+                            explore_vertex(vpu, g, u, nodes, visited, out, pred, opts);
                     }
-                    let vpu = acc.vpu.get_or_insert_with(V::new);
-                    acc.edges_scanned += explore_vertex(vpu, g, u, nodes, visited, out, pred, opts);
                 }
-            }
+            })
         },
     );
     let mut edges = 0usize;
@@ -403,7 +455,7 @@ pub fn restore_layer_simd<V: VpuBackend>(
         num_threads,
         num_words,
         WORD_GRAIN,
-        |_tid, range, acc: &mut Acc<V>| {
+        |_tid, range, acc: &mut Acc<V>| crate::simd::fused::fuse::<V, _, _>(|| {
             let vpu = acc.vpu.get_or_insert_with(V::new);
             for w in range {
                 let word = out.word(w);
@@ -461,7 +513,7 @@ pub fn restore_layer_simd<V: VpuBackend>(
                     vpu.mask_scatter_shared_i32(pred.atomic_cells(), m_neg, vvertex, restored);
                 }
             }
-        },
+        }),
     );
     let mut stats = super::bitrace_free::RestoreStats::default();
     let mut vpu = VpuCounters::default();
@@ -474,6 +526,23 @@ pub fn restore_layer_simd<V: VpuBackend>(
         }
     }
     (stats, vpu)
+}
+
+/// Resolve the [`PREFETCH_DIST_AUTO`] sentinel for one traversal: on a
+/// hardware backend, pick the next unsampled sweep candidate (or the
+/// locked winner once the sweep is done) from the graph's shared
+/// [`PolicyFeedback`]. Returns whether this run is a sweep **sample**
+/// whose wall time should be recorded afterwards via
+/// [`PolicyFeedback::record_prefetch_sample`]. Counted traversals keep
+/// the sentinel (the emulator never reads the distance), so the sweep
+/// spends hardware roots only.
+pub(crate) fn plan_prefetch(opts: &mut SimdOpts, fb: &PolicyFeedback, select: VpuSelect) -> bool {
+    if opts.prefetch_dist != PREFETCH_DIST_AUTO || !opts.prefetch || select == VpuSelect::Counted {
+        return false;
+    }
+    let (dist, sampling) = fb.prefetch_plan();
+    opts.prefetch_dist = dist;
+    sampling
 }
 
 /// A [`VectorizedBfs`] bound to one graph: carries the aligned
@@ -496,12 +565,21 @@ impl PreparedBfs for PreparedSimd<'_> {
         // monomorphize per backend (crate::with_vpu_backend)
         let fb = self.artifacts.feedback();
         let (select, warmup) = resolve(self.engine.vpu, fb.roots_done());
-        let mut r = crate::with_vpu_backend!(select, V, self.engine.traverse::<V>(
+        let mut engine = self.engine;
+        let sampling = plan_prefetch(&mut engine.opts, fb, select);
+        let mut r = crate::with_vpu_backend!(select, V, engine.traverse::<V>(
             self.g,
             self.padded.as_deref(),
             root,
             ctl
         ));
+        if sampling {
+            fb.record_prefetch_sample(
+                engine.opts.prefetch_dist,
+                r.trace.total_wall_ns(),
+                r.trace.total_edges_scanned(),
+            );
+        }
         if self.engine.vpu == VpuMode::Auto {
             // the simd engine records no policy feedback of its own, so
             // advance the auto warm-up count explicitly

@@ -114,6 +114,17 @@ COMMANDS:
                          others reject it)
                --alpha N (14) --beta N (24)  Beamer switch thresholds
                         (hybrid engines only; must be >= 1)
+               --prefetch-dist auto|N (auto)  software prefetch look-ahead
+                        in SELL rows for the hardware VPU tiers; `auto`
+                        sweeps 1,2,4,8 on warm-up roots and settles on the
+                        fastest (ns/edge); 0 disables distance prefetch.
+                        Counted emulation keeps the modelled schedule
+                        regardless. VPU engines only.
+               --hub-bits N (0)  cache the top-N highest-degree vertices
+                        (<= 32) in a packed hub-adjacency bitmap so the
+                        SELL bottom-up parent check skips the adjacency
+                        stream for hub-adjacent candidates; 0 disables.
+                        hybrid-sell-bu only.
                --vpu counted|hw|auto (counted)  VPU backend: counted
                         emulation (feeds cost model + occupancy feedback),
                         hardware SIMD (AVX-512/AVX2/portable, counters

@@ -28,7 +28,7 @@ use crate::bfs::parallel::ParallelBfs;
 use crate::bfs::policy::LayerPolicy;
 use crate::bfs::sell_vectorized::{SellBfs, SIGMA_AUTO};
 use crate::bfs::serial::{SerialLayeredBfs, SerialQueueBfs};
-use crate::bfs::vectorized::{SimdOpts, VectorizedBfs};
+use crate::bfs::vectorized::{SimdOpts, VectorizedBfs, PREFETCH_DIST_AUTO};
 use crate::bfs::BfsEngine;
 use crate::runtime::bfs::PjrtBfs;
 use crate::simd::VpuMode;
@@ -66,11 +66,26 @@ pub enum EngineKind {
         alpha: usize,
         beta: usize,
         vpu: VpuMode,
+        /// Hub-adjacency bitmap size (`--hub-bits`): top-k highest-degree
+        /// vertices cached for the SELL bottom-up parent check. `0`
+        /// disables; only read when `bu_sell` is on.
+        hub_bits: usize,
+        /// Software prefetch look-ahead in SELL rows (`--prefetch-dist`);
+        /// [`PREFETCH_DIST_AUTO`] runs the warm-up sweep.
+        prefetch_dist: usize,
     },
     /// Batch-first MS-BFS extension — up to 16 roots traverse the SELL
     /// layout concurrently (one visit-mask bit per root); single roots run
-    /// as a one-bit wave. `sigma`/`alpha`/`beta` as for `Hybrid`.
-    MultiSource { threads: usize, sigma: usize, alpha: usize, beta: usize, vpu: VpuMode },
+    /// as a one-bit wave. `sigma`/`alpha`/`beta`/`prefetch_dist` as for
+    /// `Hybrid`.
+    MultiSource {
+        threads: usize,
+        sigma: usize,
+        alpha: usize,
+        beta: usize,
+        vpu: VpuMode,
+        prefetch_dist: usize,
+    },
     /// The AOT JAX/Pallas kernel through PJRT.
     Pjrt { artifact_dir: String },
 }
@@ -108,6 +123,8 @@ impl EngineKind {
             alpha: HybridBfs::DEFAULT_ALPHA,
             beta: HybridBfs::DEFAULT_BETA,
             vpu: VpuMode::default(),
+            hub_bits: 0,
+            prefetch_dist: PREFETCH_DIST_AUTO,
         }
     }
 
@@ -121,6 +138,37 @@ impl EngineKind {
             | EngineKind::Hybrid { vpu, .. }
             | EngineKind::MultiSource { vpu, .. } => {
                 *vpu = mode;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Set the software-prefetch look-ahead distance (in SELL rows; the
+    /// raw-CSR explorer scales it the same way) on kinds that issue
+    /// prefetches. Returns `false` for scalar kinds and `pjrt`.
+    pub fn set_prefetch_dist(&mut self, dist: usize) -> bool {
+        match self {
+            EngineKind::Simd { opts, .. } | EngineKind::Sell { opts, .. } => {
+                opts.prefetch_dist = dist;
+                true
+            }
+            EngineKind::Hybrid { prefetch_dist, .. }
+            | EngineKind::MultiSource { prefetch_dist, .. } => {
+                *prefetch_dist = dist;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Set the hub-adjacency bitmap size. Only the SELL-packed bottom-up
+    /// hybrid (`hybrid-sell-bu`) consults the bitmap, so every other kind
+    /// returns `false` and is left untouched.
+    pub fn set_hub_bits(&mut self, k: usize) -> bool {
+        match self {
+            EngineKind::Hybrid { hub_bits, bu_sell: true, .. } => {
+                *hub_bits = k;
                 true
             }
             _ => false,
@@ -194,6 +242,7 @@ impl EngineKind {
                 alpha: HybridBfs::DEFAULT_ALPHA,
                 beta: HybridBfs::DEFAULT_BETA,
                 vpu: VpuMode::default(),
+                prefetch_dist: PREFETCH_DIST_AUTO,
             },
             "pjrt" => EngineKind::Pjrt { artifact_dir: artifact_dir.to_string() },
             other => anyhow::bail!(
@@ -230,8 +279,19 @@ pub fn make_engine(kind: &EngineKind) -> Result<Box<dyn BfsEngine>> {
             sigma: *sigma,
             vpu: *vpu,
         }),
-        EngineKind::Hybrid { threads, simd, sell, bu_sell, sigma, alpha, beta, vpu } => {
-            Box::new(HybridBfs {
+        EngineKind::Hybrid {
+            threads,
+            simd,
+            sell,
+            bu_sell,
+            sigma,
+            alpha,
+            beta,
+            vpu,
+            hub_bits,
+            prefetch_dist,
+        } => {
+            let mut e = HybridBfs {
                 num_threads: *threads,
                 simd: *simd,
                 sell: *sell,
@@ -240,18 +300,23 @@ pub fn make_engine(kind: &EngineKind) -> Result<Box<dyn BfsEngine>> {
                 alpha: *alpha,
                 beta: *beta,
                 vpu: *vpu,
+                hub_bits: *hub_bits,
                 ..Default::default()
-            })
+            };
+            e.opts.prefetch_dist = *prefetch_dist;
+            Box::new(e)
         }
-        EngineKind::MultiSource { threads, sigma, alpha, beta, vpu } => {
-            Box::new(MultiSourceSellBfs {
+        EngineKind::MultiSource { threads, sigma, alpha, beta, vpu, prefetch_dist } => {
+            let mut e = MultiSourceSellBfs {
                 num_threads: *threads,
                 sigma: *sigma,
                 alpha: *alpha,
                 beta: *beta,
                 vpu: *vpu,
                 ..Default::default()
-            })
+            };
+            e.opts.prefetch_dist = *prefetch_dist;
+            Box::new(e)
         }
         EngineKind::Pjrt { artifact_dir } => Box::new(PjrtBfs::from_dir(artifact_dir)?),
     })
@@ -369,6 +434,40 @@ mod tests {
         }
         let mut pjrt = EngineKind::Pjrt { artifact_dir: "artifacts".into() };
         assert!(!pjrt.set_vpu(VpuMode::Hw));
+    }
+
+    #[test]
+    fn set_prefetch_dist_covers_the_prefetching_engines() {
+        for name in EngineKind::NATIVE_NAMES {
+            let mut kind = EngineKind::parse(name, 2, "artifacts").unwrap();
+            let prefetches = !matches!(
+                *name,
+                "serial" | "serial-queue" | "non-simd" | "bitrace-free"
+            );
+            assert_eq!(kind.set_prefetch_dist(6), prefetches, "{name}");
+        }
+        let mut simd = EngineKind::parse("simd", 2, "artifacts").unwrap();
+        assert!(simd.set_prefetch_dist(6));
+        match simd {
+            EngineKind::Simd { opts, .. } => assert_eq!(opts.prefetch_dist, 6),
+            other => panic!("unexpected kind {other:?}"),
+        }
+        let mut pjrt = EngineKind::Pjrt { artifact_dir: "artifacts".into() };
+        assert!(!pjrt.set_prefetch_dist(6));
+    }
+
+    #[test]
+    fn set_hub_bits_only_on_sell_bottom_up() {
+        for name in EngineKind::NATIVE_NAMES {
+            let mut kind = EngineKind::parse(name, 2, "artifacts").unwrap();
+            assert_eq!(kind.set_hub_bits(16), *name == "hybrid-sell-bu", "{name}");
+        }
+        let mut bu = EngineKind::parse("hybrid-sell-bu", 2, "artifacts").unwrap();
+        assert!(bu.set_hub_bits(16));
+        match bu {
+            EngineKind::Hybrid { hub_bits: 16, .. } => {}
+            other => panic!("unexpected kind {other:?}"),
+        }
     }
 
     #[test]

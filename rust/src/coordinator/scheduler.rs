@@ -188,6 +188,11 @@ impl Coordinator {
     /// Package one engine result as a [`RootRun`]. Interrupted runs carry
     /// a true visited *prefix* but not a complete BFS tree, so validation
     /// (when the job asks for it) only judges complete traversals.
+    ///
+    /// Device-lock wait ([`crate::bfs::RunTrace::lock_wait_ns`]) is
+    /// subtracted from the measured seconds: a PJRT root queueing behind
+    /// another worker's execution did no traversal work during that time,
+    /// and counting it would deflate per-root TEPS by the worker count.
     fn root_run(
         job: &BfsJob,
         root: Vertex,
@@ -203,7 +208,7 @@ impl Coordinator {
             // reached component ≈ directed scans / 2
             edges_traversed: r.trace.total_edges_scanned() / 2,
             reached: r.tree.reached_count(),
-            seconds,
+            seconds: (seconds - r.trace.lock_wait_ns as f64 * 1e-9).max(0.0),
             preparation_seconds: prep_share,
             counted_warmup: r.trace.counted_warmup,
             trace: r.trace,
@@ -440,6 +445,29 @@ mod tests {
             assert_eq!(r.root, j.roots[i]);
         }
         assert!(out.all_valid);
+    }
+
+    #[test]
+    fn lock_wait_is_excluded_from_root_seconds() {
+        let j = job(EngineKind::SerialLayered, vec![0]);
+        let n = j.graph.num_vertices();
+        let mut pred = vec![crate::PRED_INFINITY; n];
+        pred[0] = 0;
+        let mk = |lock_wait_ns: u64| BfsResult {
+            tree: crate::bfs::BfsTree::new(0, pred.clone()),
+            trace: crate::bfs::RunTrace { lock_wait_ns, ..Default::default() },
+        };
+        // half a second of queueing inside a 2-second measurement: only
+        // the executing 1.5 s count toward the root
+        let r = Coordinator::root_run(&j, 0, mk(500_000_000), 2.0, 0.0);
+        assert!((r.seconds - 1.5).abs() < 1e-12, "got {}", r.seconds);
+        // no lock wait → unchanged
+        let r = Coordinator::root_run(&j, 0, mk(0), 2.0, 0.0);
+        assert!((r.seconds - 2.0).abs() < 1e-12);
+        // a wait longer than the measurement clamps at zero rather than
+        // going negative
+        let r = Coordinator::root_run(&j, 0, mk(5_000_000_000), 2.0, 0.0);
+        assert_eq!(r.seconds, 0.0);
     }
 
     #[test]

@@ -95,6 +95,35 @@ fn cmd_run(args: &Args) -> Result<()> {
             );
         }
     }
+    // --prefetch-dist tunes the hardware tiers' software-prefetch
+    // look-ahead ("auto" = warm-up sweep); counted emulation ignores the
+    // distance but the flag still parses so sweeps can share a command line
+    let pf_flag = args.get_str("prefetch-dist", "");
+    if !pf_flag.is_empty() {
+        let dist = match pf_flag.as_str() {
+            "auto" => phi_bfs::bfs::vectorized::PREFETCH_DIST_AUTO,
+            s => s.parse().map_err(|_| {
+                anyhow::anyhow!("--prefetch-dist: expected a number or `auto` (got {s:?})")
+            })?,
+        };
+        if !engine.set_prefetch_dist(dist) {
+            anyhow::bail!(
+                "--prefetch-dist only applies to engines with a VPU (simd*, sell*, hybrid*); \
+                 got --engine {engine_name}"
+            );
+        }
+    }
+    // --hub-bits sizes the packed hub-adjacency bitmap for the SELL
+    // bottom-up parent check; only hybrid-sell-bu consults it
+    if args.keys().any(|k| k.as_str() == "hub-bits") {
+        let k: usize = args.get("hub-bits", 0)?;
+        if !engine.set_hub_bits(k) {
+            anyhow::bail!(
+                "--hub-bits only applies to the SELL-packed bottom-up hybrid \
+                 (hybrid-sell-bu); got --engine {engine_name}"
+            );
+        }
+    }
     // --alpha/--beta tune the direction-optimizing switches; fail fast on
     // values that would degenerate them (the engine's prepare re-checks)
     match &mut engine {

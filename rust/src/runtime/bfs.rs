@@ -107,11 +107,13 @@ impl PjrtBfs {
 ///
 /// Serialization trade-off: multi-worker jobs on the PJRT engine now
 /// share one executable (compiled once, in prepare) instead of compiling
-/// per worker, but roots execute one at a time and a root's measured
-/// traversal seconds include any time spent waiting for the device lock.
-/// The target is a single CPU device, so concurrent clients bought little
-/// — a per-worker executable cache is the recorded follow-up if a
-/// multi-device backend lands.
+/// per worker, but roots execute one at a time. Time spent waiting for
+/// the device lock is measured separately and reported in
+/// [`RunTrace::lock_wait_ns`], so a root's traversal seconds cover
+/// execution only — queueing behind other workers no longer inflates
+/// per-root TEPS. The target is a single CPU device, so concurrent
+/// clients bought little — a per-worker executable cache is the recorded
+/// follow-up if a multi-device backend lands.
 pub struct PreparedPjrt<'g> {
     g: &'g Csr,
     engine: Mutex<PjrtEngine>,
@@ -133,7 +135,11 @@ impl PreparedPjrt<'_> {
         // A worker panicking between layer_step calls (caught upstream by
         // the coordinator) must not poison the device for later roots:
         // recover the guard — PjrtEngine keeps no partial traversal state.
+        // The wait for the lock is queueing, not traversal: time it apart
+        // so the trace can exclude it from per-root seconds.
+        let t_lock = Instant::now();
         let mut engine = self.engine.lock().unwrap_or_else(|p| p.into_inner());
+        let lock_wait_ns = t_lock.elapsed().as_nanos() as u64;
         let spec = &self.spec;
 
         // state in artifact geometry (padded to spec.n / spec.words)
@@ -201,7 +207,7 @@ impl PreparedPjrt<'_> {
         pred.truncate(n);
         Ok(BfsResult {
             tree: BfsTree::new(root, pred),
-            trace: RunTrace { layers, num_threads: 1, status, ..Default::default() },
+            trace: RunTrace { layers, num_threads: 1, status, lock_wait_ns, ..Default::default() },
         })
     }
 }

@@ -27,6 +27,8 @@ use core::arch::x86_64::*;
 
 use super::backend::{gather_in_bounds, VpuBackend};
 use super::counters::VpuCounters;
+use super::fused::FusedTier;
+use super::ops::PrefetchHint;
 use super::vec512::{Mask16, VecI32x16};
 
 /// Native AVX-512 backend: 16 lanes per instruction, counters off.
@@ -113,6 +115,7 @@ unsafe fn mask_gather_avx512(base: *const u8, vindex: VecI32x16, mask: Mask16) -
 impl VpuBackend for HwAvx512 {
     const NAME: &'static str = "avx512";
     const COUNTED: bool = false;
+    const TIER: FusedTier = FusedTier::Avx512;
 
     #[inline(always)]
     fn new() -> Self {
@@ -126,6 +129,11 @@ impl VpuBackend for HwAvx512 {
     #[inline(always)]
     fn counters(&self) -> VpuCounters {
         VpuCounters::default()
+    }
+
+    #[inline(always)]
+    fn prefetch_addr(&mut self, p: *const u8, hint: PrefetchHint) {
+        super::hw::hw_prefetch_addr(p, hint);
     }
 
     #[inline(always)]

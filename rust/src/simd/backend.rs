@@ -59,6 +59,7 @@ use std::sync::atomic::{AtomicI32, AtomicU32, Ordering};
 use std::sync::OnceLock;
 
 use super::counters::VpuCounters;
+use super::fused::FusedTier;
 use super::ops::PrefetchHint;
 use super::vec512::{Mask16, VecI32x16, LANES};
 
@@ -217,6 +218,11 @@ pub trait VpuBackend: Send {
     /// Whether [`VpuBackend::counters`] carries real event counts. The
     /// hardware tiers compile counting to nothing and return zeros.
     const COUNTED: bool;
+    /// The `#[target_feature]` envelope [`crate::simd::fused::fuse`] wraps
+    /// this backend's layer loops in. Defaults to
+    /// [`FusedTier::Generic`] (no envelope) — only intrinsic tiers
+    /// override it.
+    const TIER: FusedTier = FusedTier::Generic;
 
     /// A fresh per-thread backend value.
     fn new() -> Self;
@@ -532,6 +538,14 @@ pub trait VpuBackend: Send {
     /// Scalar `_mm_prefetch`.
     #[inline(always)]
     fn prefetch_scalar(&mut self, _hint: PrefetchHint) {}
+
+    /// Prefetch the cache line holding `p` into the level `hint` names.
+    /// The hardware tiers lower this to a real `_mm_prefetch`; the counted
+    /// emulator models prefetching through the index-based hints above and
+    /// leaves this one free, so distance-tuned hardware prefetch never
+    /// perturbs the event counters.
+    #[inline(always)]
+    fn prefetch_addr(&mut self, _p: *const u8, _hint: PrefetchHint) {}
 
     // ---- chunk accounting ---------------------------------------------------
 

@@ -1,0 +1,171 @@
+//! Whole-loop `#[target_feature]` fusion for the hardware VPU tiers.
+//!
+//! The intrinsic tiers in [`crate::simd::hw`] and [`crate::simd::avx512`]
+//! wrap every op in its own `#[target_feature(enable = ...)]` helper.
+//! That is sound, but a featureless caller cannot inline a feature-enabled
+//! callee, so each intrinsic op in a hot layer loop pays a real call: the
+//! gather → shift → test → scatter dataflow of Listing 1 never fuses into
+//! one register-resident sequence.
+//!
+//! The fix inverts the arrangement. [`fuse`] runs a closure — an entire
+//! monomorphized layer-loop body — *inside* a function compiled with the
+//! backend's target features ([`FusedTier`], a `const` on
+//! [`VpuBackend`]). Inlining is legal in that direction (a
+//! feature-enabled caller may inline featureless callees), so the closure
+//! body and every `#[inline(always)]` backend method collapse into one
+//! AVX2/AVX-512 compilation region and the per-op call boundary
+//! disappears.
+//!
+//! The counted emulator and the portable tier report
+//! [`FusedTier::Generic`] and run the closure directly — bit-identical
+//! code, bit-identical counters. The intrinsic arms re-check
+//! `is_x86_feature_detected!` (cached by std, one atomic load) before
+//! entering the feature-enabled envelope, so a test-constructed intrinsic
+//! backend on an unsupported host degrades to the unfused path instead of
+//! executing illegal instructions.
+//!
+//! [`force_unfused`] is the measurement escape hatch: the ablation bench
+//! flips it to compare fused against PR 5's per-op dispatch on identical
+//! inputs (`BENCH_fusion.json`). Fusion never changes results — only
+//! codegen — so the toggle is safe to leave in any state.
+//!
+//! [`VpuBackend`]: super::backend::VpuBackend
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use super::backend::VpuBackend;
+
+/// The `#[target_feature]` envelope a backend's layer loops compile under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FusedTier {
+    /// No envelope: run the loop body as compiled for the base target
+    /// (counted emulator, portable tier, non-x86 fallbacks).
+    Generic,
+    /// `#[target_feature(enable = "avx2")]` whole-loop compilation.
+    Avx2,
+    /// `#[target_feature(enable = "avx512f")]` whole-loop compilation.
+    Avx512,
+}
+
+/// When set, [`fuse`] skips the feature-enabled envelopes and runs every
+/// closure directly — PR 5's per-op dispatch, for A/B measurement.
+static FORCE_UNFUSED: AtomicBool = AtomicBool::new(false);
+
+/// Globally disable (`true`) or re-enable (`false`) whole-loop fusion.
+/// Results are unaffected either way; only codegen changes.
+pub fn force_unfused(on: bool) {
+    FORCE_UNFUSED.store(on, Ordering::Relaxed);
+}
+
+/// Whether [`force_unfused`] is currently set.
+pub fn fusion_forced_off() -> bool {
+    FORCE_UNFUSED.load(Ordering::Relaxed)
+}
+
+/// Run `f` inside the `#[target_feature]` envelope of backend `V`'s tier,
+/// so the whole closure body — and every `#[inline(always)]` op of `V` it
+/// calls — compiles as one fused region for that ISA. Generic tiers (the
+/// counted emulator, the portable tier) run `f` directly.
+#[inline(always)]
+pub fn fuse<V: VpuBackend, R, F: FnOnce() -> R>(f: F) -> R {
+    match V::TIER {
+        FusedTier::Generic => f(),
+        #[cfg(target_arch = "x86_64")]
+        FusedTier::Avx2 => {
+            if fusion_forced_off() || !std::arch::is_x86_feature_detected!("avx2") {
+                f()
+            } else {
+                // SAFETY: AVX2 is available on this CPU (checked above);
+                // the envelope executes nothing the closure would not.
+                unsafe { fuse_avx2(f) }
+            }
+        }
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        FusedTier::Avx512 => {
+            if fusion_forced_off() || !std::arch::is_x86_feature_detected!("avx512f") {
+                f()
+            } else {
+                // SAFETY: AVX-512F is available on this CPU (checked above)
+                unsafe { fuse_avx512(f) }
+            }
+        }
+        // Tiers whose envelope is not compiled for this target run unfused
+        // (they are unreachable anyway: the hw type aliases resolve them to
+        // compiled-in backends, which report their own tier).
+        #[cfg(not(target_arch = "x86_64"))]
+        FusedTier::Avx2 => f(),
+        #[cfg(not(all(target_arch = "x86_64", feature = "avx512")))]
+        FusedTier::Avx512 => f(),
+    }
+}
+
+/// The AVX2 whole-loop envelope: nothing but the closure, compiled with
+/// the feature enabled so the body (and its inlinees) fuse.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn fuse_avx2<R, F: FnOnce() -> R>(f: F) -> R {
+    f()
+}
+
+/// The AVX-512F whole-loop envelope.
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+#[target_feature(enable = "avx512f")]
+unsafe fn fuse_avx512<R, F: FnOnce() -> R>(f: F) -> R {
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::hw::{BestAvx2, BestAvx512, HwPortable};
+    use crate::simd::ops::Vpu;
+
+    fn run_through<V: VpuBackend>() -> i32 {
+        fuse::<V, _, _>(|| {
+            let mut v = V::new();
+            let a = v.set1_epi32(21);
+            v.add_epi32(a, a).0[7]
+        })
+    }
+
+    #[test]
+    fn fuse_runs_the_closure_on_every_tier() {
+        assert_eq!(run_through::<Vpu>(), 42);
+        assert_eq!(run_through::<HwPortable>(), 42);
+        // the intrinsic tiers guard on runtime detection internally, so
+        // this is safe even on hosts without the features
+        assert_eq!(run_through::<BestAvx2>(), 42);
+        assert_eq!(run_through::<BestAvx512>(), 42);
+    }
+
+    #[test]
+    fn force_unfused_round_trips_and_preserves_results() {
+        assert!(!fusion_forced_off());
+        force_unfused(true);
+        assert!(fusion_forced_off());
+        assert_eq!(run_through::<BestAvx2>(), 42);
+        force_unfused(false);
+        assert!(!fusion_forced_off());
+    }
+
+    #[test]
+    fn tiers_are_declared_correctly() {
+        assert_eq!(Vpu::TIER, FusedTier::Generic);
+        assert_eq!(HwPortable::TIER, FusedTier::Generic);
+        #[cfg(target_arch = "x86_64")]
+        assert_eq!(crate::simd::hw::HwAvx2::TIER, FusedTier::Avx2);
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        assert_eq!(crate::simd::avx512::HwAvx512::TIER, FusedTier::Avx512);
+    }
+
+    #[test]
+    fn fuse_propagates_closure_captures() {
+        let mut acc = 0u64;
+        fuse::<HwPortable, _, _>(|| {
+            for i in 0..100u64 {
+                acc += i;
+            }
+        });
+        assert_eq!(acc, 4950);
+    }
+}

@@ -37,6 +37,31 @@ use std::sync::OnceLock;
 
 use super::backend::{VpuBackend, VpuSelect};
 use super::counters::VpuCounters;
+use super::ops::PrefetchHint;
+
+/// Lower an address prefetch to `_mm_prefetch`. SSE is baseline on
+/// x86_64, so no `#[target_feature]` envelope (and no per-op call
+/// boundary) is involved; off x86_64 the hint evaporates. Shared by every
+/// hardware tier so the hint→locality mapping cannot drift between them.
+#[inline(always)]
+pub(crate) fn hw_prefetch_addr(p: *const u8, hint: PrefetchHint) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0, _MM_HINT_T1};
+        // SAFETY: prefetch is a hint — it never faults, for any address
+        #[allow(unused_unsafe)]
+        unsafe {
+            match hint {
+                PrefetchHint::T0 => _mm_prefetch::<_MM_HINT_T0>(p as *const i8),
+                PrefetchHint::T1 => _mm_prefetch::<_MM_HINT_T1>(p as *const i8),
+            }
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (p, hint);
+    }
+}
 
 /// Portable scalar-unrolled hardware backend — the trait's default method
 /// bodies, counters off. The reference implementation the intrinsic tiers
@@ -56,6 +81,11 @@ impl VpuBackend for HwPortable {
     #[inline(always)]
     fn counters(&self) -> VpuCounters {
         VpuCounters::default()
+    }
+
+    #[inline(always)]
+    fn prefetch_addr(&mut self, p: *const u8, hint: PrefetchHint) {
+        hw_prefetch_addr(p, hint);
     }
 }
 
@@ -146,6 +176,8 @@ mod x86 {
 
     use crate::simd::backend::{gather_in_bounds, VpuBackend};
     use crate::simd::counters::VpuCounters;
+    use crate::simd::fused::FusedTier;
+    use crate::simd::ops::PrefetchHint;
     use crate::simd::vec512::{Mask16, VecI32x16, LANES};
 
     /// AVX2 double-pump backend (2 × 256-bit halves per 16-lane op).
@@ -283,6 +315,7 @@ mod x86 {
     impl VpuBackend for HwAvx2 {
         const NAME: &'static str = "avx2";
         const COUNTED: bool = false;
+        const TIER: FusedTier = FusedTier::Avx2;
 
         #[inline(always)]
         fn new() -> Self {
@@ -296,6 +329,11 @@ mod x86 {
         #[inline(always)]
         fn counters(&self) -> VpuCounters {
             VpuCounters::default()
+        }
+
+        #[inline(always)]
+        fn prefetch_addr(&mut self, p: *const u8, hint: PrefetchHint) {
+            super::hw_prefetch_addr(p, hint);
         }
 
         #[inline(always)]

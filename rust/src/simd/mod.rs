@@ -33,6 +33,7 @@
 
 pub mod backend;
 pub mod counters;
+pub mod fused;
 pub mod hw;
 pub mod ops;
 pub mod vec512;
@@ -42,5 +43,6 @@ pub mod avx512;
 
 pub use backend::{resolve, VpuBackend, VpuMode, VpuSelect, AUTO_WARMUP_ROOTS};
 pub use counters::VpuCounters;
+pub use fused::{force_unfused, fuse, FusedTier};
 pub use hw::{detect_hw_select, HwPortable};
 pub use vec512::{Mask16, VecI32x16, LANES};

@@ -286,6 +286,91 @@ fn prop_backend_equivalence_counted_vs_hw() {
 }
 
 #[test]
+fn prop_fused_hw_tiers_match_counted_oracle_across_prefetch_dists() {
+    use phi_bfs::bfs::vectorized::PREFETCH_DIST_AUTO;
+    // The fusion satellite: the whole-loop #[target_feature] tiers, at any
+    // software-prefetch distance (including the auto sentinel), must
+    // produce exactly the counted oracle's distances — for every engine
+    // that drives the VPU — and a five-check-valid tree. Prefetch is a
+    // hint; fusion is a compilation strategy; neither may change results.
+    forall("fused hw ≡ counted oracle across prefetch distances", 3, |g| {
+        let scale = g.size(8, 10) as u32;
+        let seed = g.size(0, 1 << 16) as u64;
+        let el = RmatConfig::graph500(scale, 8).generate(seed);
+        let csr = Csr::from_edge_list(scale, &el);
+        let root = g.size(0, csr.num_vertices() - 1) as Vertex;
+        let threads = g.size(1, 3);
+        let expected = SerialLayeredBfs.run(&csr, root).tree.distances().unwrap();
+        for name in EngineKind::NATIVE_NAMES {
+            let mut counted = EngineKind::parse(name, threads, "artifacts").unwrap();
+            if !counted.set_prefetch_dist(4) {
+                continue; // scalar rungs have no prefetch knob (covered above)
+            }
+            counted.set_vpu(VpuMode::Counted);
+            let c = make_engine(&counted).unwrap().run(&csr, root);
+            assert_eq!(c.tree.distances().unwrap(), expected, "{name} counted oracle");
+            for dist in [0usize, 1, 4, 8, PREFETCH_DIST_AUTO] {
+                let mut kind = EngineKind::parse(name, threads, "artifacts").unwrap();
+                kind.set_prefetch_dist(dist);
+                kind.set_vpu(VpuMode::Hw);
+                let r = make_engine(&kind).unwrap().run(&csr, root);
+                assert_eq!(
+                    r.tree.distances().unwrap(),
+                    expected,
+                    "{name} fused hw dist={dist} diverged (scale={scale}, seed={seed}, root={root})"
+                );
+                let report = validate(&csr, &r.tree);
+                assert!(report.all_passed(), "{name} hw dist={dist}: {}", report.summary());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_hub_bitmap_preserves_distances_and_cuts_stream_reads() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    // The hub-cache satellite: turning the hub-adjacency bitmap on must
+    // never change distances, must never increase bottom-up adjacency
+    // reads, and on hub-rooted RMAT (every candidate near the top hubs)
+    // must actually skip stream reads for at least one generated graph.
+    let strict_seen = AtomicBool::new(false);
+    forall("hub bitmap ≡ plain bottom-up, fewer adjacency reads", 4, |g| {
+        let seed = g.size(0, 1 << 16) as u64;
+        let el = RmatConfig::graph500(10, 16).generate(seed);
+        let csr = Csr::from_edge_list(10, &el);
+        // root at the top-degree hub: guaranteed giant component, so the
+        // hybrid actually switches bottom-up and hub claims can fire
+        let root = (0..csr.num_vertices() as Vertex).max_by_key(|&v| csr.degree(v)).unwrap();
+        let run = |hub_bits: usize| {
+            let mut kind = EngineKind::parse("hybrid-sell-bu", 2, "artifacts").unwrap();
+            if hub_bits > 0 {
+                assert!(kind.set_hub_bits(hub_bits));
+            }
+            make_engine(&kind).unwrap().run(&csr, root)
+        };
+        let off = run(0);
+        let on = run(16);
+        assert_eq!(
+            on.tree.distances().unwrap(),
+            off.tree.distances().unwrap(),
+            "hub bitmap changed distances (seed={seed}, root={root})"
+        );
+        let bu_edges = |r: &phi_bfs::bfs::BfsResult| -> usize {
+            r.trace.layers.iter().filter(|l| l.bottom_up).map(|l| l.edges_scanned).sum()
+        };
+        let (e_off, e_on) = (bu_edges(&off), bu_edges(&on));
+        assert!(e_on <= e_off, "hub bitmap increased stream reads ({e_on} > {e_off})");
+        if e_on < e_off {
+            strict_seen.store(true, Ordering::Relaxed);
+        }
+    });
+    assert!(
+        strict_seen.load(Ordering::Relaxed),
+        "hub bitmap never skipped an adjacency read on any hub-rooted RMAT case"
+    );
+}
+
+#[test]
 fn prop_restoration_repairs_arbitrary_corruption() {
     // Failure injection: arbitrary sets of journalled vertices, arbitrary
     // subsets of their bits lost — both restoration implementations must
