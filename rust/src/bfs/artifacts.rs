@@ -17,7 +17,11 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
 
+use super::footprint::{
+    planned_component_bytes, planned_hub_bytes, planned_padded_bytes, planned_sell_bytes,
+};
 use super::policy::PolicyFeedback;
+use crate::coordinator::governor::ResourceGovernor;
 use crate::graph::{Csr, PaddedCsr, Sell16};
 
 pub use crate::graph::stats::DegreeStats;
@@ -145,6 +149,10 @@ impl HubBits {
 pub struct GraphArtifacts {
     stats: OnceLock<DegreeStats>,
     feedback: PolicyFeedback,
+    /// Byte-budget authority the lazy builders consult; absent (the
+    /// default, and every direct [`crate::bfs::BfsEngine::prepare`] call)
+    /// means ungoverned — every build proceeds and charges nothing.
+    governor: OnceLock<Arc<ResourceGovernor>>,
     sell: OnceLock<Arc<Sell16>>,
     padded: OnceLock<Arc<PaddedCsr>>,
     components: OnceLock<Arc<ComponentMap>>,
@@ -162,6 +170,7 @@ impl GraphArtifacts {
         GraphArtifacts {
             stats: OnceLock::new(),
             feedback: PolicyFeedback::default(),
+            governor: OnceLock::new(),
             sell: OnceLock::new(),
             padded: OnceLock::new(),
             components: OnceLock::new(),
@@ -173,9 +182,42 @@ impl GraphArtifacts {
         }
     }
 
+    /// Install the byte-budget authority the lazy builders consult.
+    /// Set once per artifacts (the coordinator does this right after the
+    /// cache lookup); later installs are ignored, so cached artifacts
+    /// keep the governor whose ledger their builds were charged to.
+    pub fn install_governor(&self, governor: Arc<ResourceGovernor>) {
+        let _ = self.governor.set(governor);
+    }
+
+    /// The installed governor, if any.
+    pub fn governor(&self) -> Option<&Arc<ResourceGovernor>> {
+        self.governor.get()
+    }
+
     /// Degree statistics of `g`, computed on first call and cached.
     pub fn stats(&self, g: &Csr) -> &DegreeStats {
         self.stats.get_or_init(|| DegreeStats::compute(g))
+    }
+
+    /// The cached SELL layout, if one was built.
+    pub fn built_sell(&self) -> Option<&Arc<Sell16>> {
+        self.sell.get()
+    }
+
+    /// The cached padded-CSR view, if one was built.
+    pub fn built_padded(&self) -> Option<&Arc<PaddedCsr>> {
+        self.padded.get()
+    }
+
+    /// The cached component map, if one was built.
+    pub fn built_components(&self) -> Option<&Arc<ComponentMap>> {
+        self.components.get()
+    }
+
+    /// The cached hub bitmap, if one was built.
+    pub fn built_hub(&self) -> Option<&Arc<HubBits>> {
+        self.hub.get()
     }
 
     /// The cross-root occupancy feedback channel of this job.
@@ -188,52 +230,142 @@ impl GraphArtifacts {
     /// (uncached) — within one job the engine's σ is fixed, so this path
     /// only triggers when artifacts are deliberately shared across
     /// differently-configured engines.
-    pub fn sell_layout(&self, g: &Csr, sigma: usize) -> Arc<Sell16> {
-        let cached = self.sell.get_or_init(|| {
-            self.sell_builds.fetch_add(1, Ordering::Relaxed);
-            Arc::new(Sell16::from_csr(g, sigma))
-        });
-        if cached.sigma == sigma.max(crate::graph::sell::SELL_C) {
+    ///
+    /// The SELL layout is **mandatory** for the engines that request it
+    /// (no fallback), so under an installed governor the build charges the
+    /// full budget and a charge that does not fit is an error carrying
+    /// [`crate::coordinator::governor::OVER_BUDGET_MARKER`] — the
+    /// coordinator surfaces it as
+    /// [`crate::coordinator::CoordinatorError::OverBudget`]. σ-mismatch
+    /// rebuilds are transient per-prepare copies and are not charged.
+    pub fn sell_layout(&self, g: &Csr, sigma: usize) -> anyhow::Result<Arc<Sell16>> {
+        if self.sell.get().is_none() {
+            let planned =
+                self.governor.get().map(|gov| (gov, planned_sell_bytes(g, sigma)));
+            if let Some((gov, bytes)) = &planned {
+                gov.charge_mandatory(*bytes, "SELL-16-sigma layout")?;
+            }
+            let mut built = false;
+            let _ = self.sell.get_or_init(|| {
+                built = true;
+                self.sell_builds.fetch_add(1, Ordering::Relaxed);
+                Arc::new(Sell16::from_csr(g, sigma))
+            });
+            if !built {
+                // Lost the init race: another thread's charge covers the
+                // cached layout, refund ours.
+                if let Some((gov, bytes)) = planned {
+                    gov.release(bytes);
+                }
+            }
+        }
+        let cached = self.sell.get().expect("initialized above");
+        Ok(if cached.sigma == sigma.max(crate::graph::sell::SELL_C) {
             Arc::clone(cached)
         } else {
             self.sell_builds.fetch_add(1, Ordering::Relaxed);
             Arc::new(Sell16::from_csr(g, sigma))
-        }
+        })
     }
 
     /// The aligned padded-CSR view of `g`, built on first call and cached.
-    pub fn padded_csr(&self, g: &Csr) -> Arc<PaddedCsr> {
-        Arc::clone(self.padded.get_or_init(|| {
+    ///
+    /// **Optional artifact**: under an installed governor, a build whose
+    /// planned bytes would push the ledger over the high watermark is
+    /// skipped — `None`, with a structured
+    /// [`crate::coordinator::governor::ResourcePressure`] event — and the
+    /// explorers run their unaligned-CSR peel-loop path instead.
+    pub fn padded_csr(&self, g: &Csr) -> Option<Arc<PaddedCsr>> {
+        if let Some(p) = self.padded.get() {
+            return Some(Arc::clone(p));
+        }
+        let planned = self.governor.get().map(|gov| (gov, planned_padded_bytes(g)));
+        if let Some((gov, bytes)) = &planned {
+            if !gov.optional_build_allowed(*bytes, "padded-csr") {
+                return None;
+            }
+        }
+        let mut built = false;
+        let p = self.padded.get_or_init(|| {
+            built = true;
             self.padded_builds.fetch_add(1, Ordering::Relaxed);
             Arc::new(PaddedCsr::from_csr(g))
-        }))
+        });
+        if !built {
+            if let Some((gov, bytes)) = planned {
+                gov.release(bytes);
+            }
+        }
+        Some(Arc::clone(p))
     }
 
     /// The connected-component labels of `g`, built on first call and
     /// cached — the MS-BFS per-component lane-retirement bound reads them.
-    pub fn components(&self, g: &Csr) -> Arc<ComponentMap> {
-        Arc::clone(self.components.get_or_init(|| {
+    ///
+    /// **Optional artifact**: skipped (`None`, with a
+    /// [`crate::coordinator::governor::ResourcePressure`] event) under
+    /// governor pressure; MS-BFS then retires lanes on the full live mask.
+    pub fn components(&self, g: &Csr) -> Option<Arc<ComponentMap>> {
+        if let Some(c) = self.components.get() {
+            return Some(Arc::clone(c));
+        }
+        let planned = self.governor.get().map(|gov| (gov, planned_component_bytes(g)));
+        if let Some((gov, bytes)) = &planned {
+            if !gov.optional_build_allowed(*bytes, "component-map") {
+                return None;
+            }
+        }
+        let mut built = false;
+        let c = self.components.get_or_init(|| {
+            built = true;
             self.component_builds.fetch_add(1, Ordering::Relaxed);
             Arc::new(ComponentMap::compute(g))
-        }))
+        });
+        if !built {
+            if let Some((gov, bytes)) = planned {
+                gov.release(bytes);
+            }
+        }
+        Some(Arc::clone(c))
     }
 
     /// The packed hub-adjacency bitmap of `g` for the top-`k` hubs, built
     /// on first call and cached. Like [`Self::sell_layout`], a call with a
     /// different `k` than the cached bitmap builds fresh (uncached) — one
     /// job runs one hub configuration.
-    pub fn hub_bits(&self, g: &Csr, k: usize) -> Arc<HubBits> {
+    ///
+    /// **Optional artifact**: skipped (`None`, with a
+    /// [`crate::coordinator::governor::ResourcePressure`] event) under
+    /// governor pressure; the bottom-up scan then reads the SELL adjacency
+    /// stream for every candidate.
+    pub fn hub_bits(&self, g: &Csr, k: usize) -> Option<Arc<HubBits>> {
         let clamped = k.min(32).min(g.num_vertices());
-        let cached = self.hub.get_or_init(|| {
-            self.hub_builds.fetch_add(1, Ordering::Relaxed);
-            Arc::new(HubBits::build(g, k))
-        });
-        if cached.k == clamped {
+        if self.hub.get().is_none() {
+            let planned = self.governor.get().map(|gov| (gov, planned_hub_bytes(g, k)));
+            if let Some((gov, bytes)) = &planned {
+                if !gov.optional_build_allowed(*bytes, "hub-bits") {
+                    return None;
+                }
+            }
+            let mut built = false;
+            let _ = self.hub.get_or_init(|| {
+                built = true;
+                self.hub_builds.fetch_add(1, Ordering::Relaxed);
+                Arc::new(HubBits::build(g, k))
+            });
+            if !built {
+                if let Some((gov, bytes)) = planned {
+                    gov.release(bytes);
+                }
+            }
+        }
+        let cached = self.hub.get().expect("initialized above");
+        Some(if cached.k == clamped {
             Arc::clone(cached)
         } else {
             self.hub_builds.fetch_add(1, Ordering::Relaxed);
             Arc::new(HubBits::build(g, k))
-        }
+        })
     }
 
     /// How many times a [`HubBits`] bitmap was constructed through these
@@ -306,12 +438,12 @@ mod tests {
         let g = rmat(9, 8, 4);
         let a = GraphArtifacts::for_graph(&g);
         assert_eq!(a.sell_builds(), 0);
-        let s1 = a.sell_layout(&g, 256);
-        let s2 = a.sell_layout(&g, 256);
+        let s1 = a.sell_layout(&g, 256).unwrap();
+        let s2 = a.sell_layout(&g, 256).unwrap();
         assert!(Arc::ptr_eq(&s1, &s2));
         assert_eq!(a.sell_builds(), 1);
-        let p1 = a.padded_csr(&g);
-        let p2 = a.padded_csr(&g);
+        let p1 = a.padded_csr(&g).unwrap();
+        let p2 = a.padded_csr(&g).unwrap();
         assert!(Arc::ptr_eq(&p1, &p2));
         assert_eq!(a.padded_builds(), 1);
     }
@@ -320,12 +452,12 @@ mod tests {
     fn sigma_mismatch_builds_fresh_without_evicting() {
         let g = rmat(9, 8, 5);
         let a = GraphArtifacts::for_graph(&g);
-        let s1 = a.sell_layout(&g, 256);
-        let s3 = a.sell_layout(&g, usize::MAX);
+        let s1 = a.sell_layout(&g, 256).unwrap();
+        let s3 = a.sell_layout(&g, usize::MAX).unwrap();
         assert!(!Arc::ptr_eq(&s1, &s3));
         assert_eq!(a.sell_builds(), 2);
         // the original σ stays cached
-        let s4 = a.sell_layout(&g, 256);
+        let s4 = a.sell_layout(&g, 256).unwrap();
         assert!(Arc::ptr_eq(&s1, &s4));
         assert_eq!(a.sell_builds(), 2);
     }
@@ -345,8 +477,8 @@ mod tests {
         assert_ne!(cm.label(5), cm.label(3));
         // built once through the artifacts, then cached
         let a = GraphArtifacts::for_graph(&g);
-        let c1 = a.components(&g);
-        let c2 = a.components(&g);
+        let c1 = a.components(&g).unwrap();
+        let c2 = a.components(&g).unwrap();
         assert!(Arc::ptr_eq(&c1, &c2));
         assert_eq!(a.component_builds(), 1);
         assert_eq!(c1.count, cm.count);
@@ -380,22 +512,84 @@ mod tests {
         let g = rmat(9, 8, 7);
         let a = GraphArtifacts::for_graph(&g);
         assert_eq!(a.hub_builds(), 0);
-        let h1 = a.hub_bits(&g, 16);
-        let h2 = a.hub_bits(&g, 16);
+        let h1 = a.hub_bits(&g, 16).unwrap();
+        let h2 = a.hub_bits(&g, 16).unwrap();
         assert!(Arc::ptr_eq(&h1, &h2));
         assert_eq!(a.hub_builds(), 1);
-        let h3 = a.hub_bits(&g, 8);
+        let h3 = a.hub_bits(&g, 8).unwrap();
         assert!(!Arc::ptr_eq(&h1, &h3));
         assert_eq!(h3.k, 8);
         assert_eq!(a.hub_builds(), 2);
         // the original k stays cached
-        let h4 = a.hub_bits(&g, 16);
+        let h4 = a.hub_bits(&g, 16).unwrap();
         assert!(Arc::ptr_eq(&h1, &h4));
         assert_eq!(a.hub_builds(), 2);
         // oversized k clamps to 32
         let h5 = HubBits::build(&g, 1000);
         assert_eq!(h5.k, 32);
         assert_eq!(h5.hubs.len(), 32);
+    }
+
+    #[test]
+    fn governed_optional_builds_skip_with_pressure_events() {
+        use crate::bfs::footprint::HeapFootprint;
+
+        let g = rmat(9, 8, 21);
+        let a = GraphArtifacts::for_graph(&g);
+        // A 1-byte budget: the high watermark is 0, so every optional
+        // build is refused before allocating anything.
+        a.install_governor(Arc::new(ResourceGovernor::with_budget(1)));
+        let gov = a.governor().unwrap();
+        assert!(a.padded_csr(&g).is_none());
+        assert!(a.components(&g).is_none());
+        assert!(a.hub_bits(&g, 16).is_none());
+        assert_eq!(a.padded_builds() + a.component_builds() + a.hub_builds(), 0);
+        assert_eq!(gov.pressure_events(), 3);
+        assert_eq!(gov.used(), 0, "refused builds charge nothing");
+        assert_eq!(a.heap_bytes(), 0);
+        let events = gov.drain_events();
+        let names: Vec<_> = events.iter().map(|e| e.artifact).collect();
+        assert_eq!(names, ["padded-csr", "component-map", "hub-bits"]);
+        // mandatory SELL layout: structured over-budget error
+        let err = a.sell_layout(&g, 256).unwrap_err();
+        assert!(format!("{err:#}")
+            .contains(crate::coordinator::governor::OVER_BUDGET_MARKER));
+        assert_eq!(a.sell_builds(), 0);
+    }
+
+    #[test]
+    fn governed_builds_charge_exact_planned_bytes() {
+        use crate::bfs::footprint::HeapFootprint;
+
+        let g = rmat(9, 8, 22);
+        let a = GraphArtifacts::for_graph(&g);
+        a.install_governor(Arc::new(ResourceGovernor::with_budget(64 << 20)));
+        let gov = Arc::clone(a.governor().unwrap());
+        let sell = a.sell_layout(&g, 256).unwrap();
+        assert_eq!(gov.used(), sell.heap_bytes());
+        let padded = a.padded_csr(&g).unwrap();
+        assert_eq!(gov.used(), sell.heap_bytes() + padded.heap_bytes());
+        // repeat calls hit the cache and charge nothing more
+        let _ = a.sell_layout(&g, 256).unwrap();
+        let _ = a.padded_csr(&g).unwrap();
+        assert_eq!(gov.used(), sell.heap_bytes() + padded.heap_bytes());
+        assert_eq!(gov.used(), a.heap_bytes());
+        assert_eq!(gov.pressure_events(), 0);
+    }
+
+    #[test]
+    fn already_built_artifacts_survive_later_pressure() {
+        let g = rmat(8, 8, 23);
+        let a = GraphArtifacts::for_graph(&g);
+        a.install_governor(Arc::new(ResourceGovernor::with_budget(64 << 20)));
+        let gov = Arc::clone(a.governor().unwrap());
+        let p1 = a.padded_csr(&g).unwrap();
+        // fill the ledger to the brim: new builds would be refused…
+        assert!(gov.try_charge(gov.remaining()));
+        assert!(a.components(&g).is_none());
+        // …but the cached padded view is still served
+        let p2 = a.padded_csr(&g).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2));
     }
 
     #[test]

@@ -557,18 +557,18 @@ impl BfsEngine for HybridBfs {
             } else {
                 self.sigma
             };
-            Some(artifacts.sell_layout(g, sigma))
+            Some(artifacts.sell_layout(g, sigma)?)
         } else {
             None
         };
-        let padded = if self.sell && self.opts.aligned {
-            Some(artifacts.padded_csr(g))
-        } else {
-            None
-        };
+        // padded CSR and the hub bitmap are optional artifacts: under
+        // governor memory pressure they come back `None` and the explorer
+        // falls back to its unaligned / full-stream paths
+        let padded =
+            if self.sell && self.opts.aligned { artifacts.padded_csr(g) } else { None };
         // the hub bitmap only serves the SELL bottom-up step
         let hub = if self.bu_sell && self.hub_bits > 0 {
-            Some(artifacts.hub_bits(g, self.hub_bits))
+            artifacts.hub_bits(g, self.hub_bits)
         } else {
             None
         };

@@ -128,6 +128,18 @@ impl RunControl {
         deadline != u64::MAX && anchor().elapsed().as_nanos() as u64 >= deadline
     }
 
+    /// Time left until the armed deadline: `None` when no deadline is
+    /// armed, zero once it has passed. Lets retry backoff truncate its
+    /// sleeps to the job's remaining budget instead of sleeping through it.
+    pub fn deadline_remaining(&self) -> Option<Duration> {
+        let deadline = self.deadline_ns.load(Ordering::Relaxed);
+        if deadline == u64::MAX {
+            return None;
+        }
+        let now = anchor().elapsed().as_nanos() as u64;
+        Some(Duration::from_nanos(deadline.saturating_sub(now)))
+    }
+
     /// The per-layer check: why (if at all) the traversal should stop now.
     /// Cancellation wins over the deadline; the `Instant::now` for the
     /// deadline test is only taken when one is armed.
@@ -178,6 +190,17 @@ mod tests {
         let c = RunControl::new();
         c.arm_deadline_in(Duration::from_secs(3600));
         assert_eq!(c.stop_reason(), None);
+    }
+
+    #[test]
+    fn deadline_remaining_tracks_the_armed_deadline() {
+        let c = RunControl::new();
+        assert_eq!(c.deadline_remaining(), None, "unarmed → None");
+        c.arm_deadline_in(Duration::from_secs(3600));
+        let rem = c.deadline_remaining().expect("armed");
+        assert!(rem > Duration::from_secs(3500) && rem <= Duration::from_secs(3600));
+        c.arm_deadline_in(Duration::ZERO);
+        assert_eq!(c.deadline_remaining(), Some(Duration::ZERO), "passed → zero");
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Byte accounting for prepared graph structures.
+//!
+//! The SELL-16-σ layout, the padded-CSR view, and the per-vertex bitmaps
+//! are memory-hungry by design — on a Graph500 RMAT graph the prepared
+//! artifacts together retain a small multiple of the CSR itself. Before
+//! the runtime can bound its footprint (the
+//! [`crate::coordinator::governor::ResourceGovernor`] ledger), every
+//! retained structure has to be able to say exactly how many bytes it
+//! holds: that is the [`HeapFootprint`] trait.
+//!
+//! Two flavors live here:
+//!
+//! - **`heap_bytes()`** — the exact payload bytes a *built* structure
+//!   retains, computed from its element counts. Capacity slack is not
+//!   counted: every constructor in `graph/` sizes its vectors exactly
+//!   (`with_capacity`/`vec![]`/`resize`), so length-based accounting is
+//!   the allocation truth, and the property suite pins the planners below
+//!   to it.
+//! - **`planned_*_bytes(g, ..)`** — the same number computed *before*
+//!   building, from the CSR alone. The governor charges its ledger with
+//!   these planned sizes **before** any allocation happens, which is what
+//!   makes "the ledger never exceeds the budget at any observation point"
+//!   an invariant rather than an aspiration. Each planner mirrors its
+//!   constructor's sizing logic exactly (`planned_sell_bytes` replays the
+//!   σ-window sort on degrees only — chunk heights depend only on each
+//!   chunk's degree multiset, so ties in the sort cannot change the
+//!   answer).
+
+use crate::bfs::artifacts::{ComponentMap, GraphArtifacts, HubBits};
+use crate::graph::sell::SELL_C;
+use crate::graph::{Adjacency, Csr, PaddedCsr, Sell16};
+use crate::Vertex;
+
+/// Exact retained heap bytes of a prepared structure.
+///
+/// Implementations count the payload bytes of owned allocations
+/// (`len * size_of::<Element>()`); inline fields are free and capacity
+/// slack is not counted (see the module docs for why that is exact here).
+pub trait HeapFootprint {
+    /// Retained heap bytes.
+    fn heap_bytes(&self) -> usize;
+}
+
+/// Payload bytes of a slice-backed allocation.
+#[inline]
+fn slice_bytes<T>(s: &[T]) -> usize {
+    std::mem::size_of_val(s)
+}
+
+impl HeapFootprint for Csr {
+    fn heap_bytes(&self) -> usize {
+        slice_bytes(&self.colstarts) + slice_bytes(&self.rows)
+    }
+}
+
+impl HeapFootprint for PaddedCsr {
+    fn heap_bytes(&self) -> usize {
+        // starts: usize per vertex, lens: u32 per vertex, rows: padded cells.
+        let n = Adjacency::num_vertices(self);
+        n * std::mem::size_of::<usize>()
+            + n * std::mem::size_of::<u32>()
+            + self.padded_len() * std::mem::size_of::<Vertex>()
+    }
+}
+
+impl HeapFootprint for Sell16 {
+    fn heap_bytes(&self) -> usize {
+        slice_bytes(&self.perm)
+            + slice_bytes(&self.rank)
+            + slice_bytes(&self.chunk_starts)
+            + slice_bytes(&self.chunk_lens)
+            + slice_bytes(&self.lane_len)
+            + slice_bytes(&self.cols)
+    }
+}
+
+impl HeapFootprint for HubBits {
+    fn heap_bytes(&self) -> usize {
+        slice_bytes(&self.hubs) + slice_bytes(&self.masks)
+    }
+}
+
+impl HeapFootprint for ComponentMap {
+    fn heap_bytes(&self) -> usize {
+        slice_bytes(&self.labels)
+    }
+}
+
+impl HeapFootprint for GraphArtifacts {
+    /// Sum of the graph-scale members built so far. The
+    /// [`crate::bfs::policy::PolicyFeedback`] tables and the build
+    /// counters are O(1) and not counted.
+    fn heap_bytes(&self) -> usize {
+        self.built_sell().map_or(0, |s| s.heap_bytes())
+            + self.built_padded().map_or(0, |p| p.heap_bytes())
+            + self.built_components().map_or(0, |c| c.heap_bytes())
+            + self.built_hub().map_or(0, |h| h.heap_bytes())
+    }
+}
+
+/// Bytes a [`PaddedCsr`] built from `g` will retain. O(V); mirrors
+/// [`PaddedCsr::from_csr`]'s sizing exactly.
+pub fn planned_padded_bytes(g: &Csr) -> usize {
+    let n = g.num_vertices();
+    let padded_cells: usize =
+        (0..n as Vertex).map(|v| g.degree(v).next_multiple_of(SELL_C)).sum();
+    n * std::mem::size_of::<usize>()
+        + n * std::mem::size_of::<u32>()
+        + padded_cells * std::mem::size_of::<Vertex>()
+}
+
+/// Bytes a [`Sell16`] built from `g` with window `sigma` will retain.
+/// O(V log σ): replays the σ-window degree sort on degrees alone. Chunk
+/// heights depend only on the sorted degree multiset of each 16-slot
+/// chunk, so this matches [`Sell16::from_csr`]'s storage exactly whatever
+/// order the stable sort leaves equal-degree vertices in.
+pub fn planned_sell_bytes(g: &Csr, sigma: usize) -> usize {
+    let n = g.num_vertices();
+    let sigma = sigma.max(SELL_C);
+    let num_chunks = n.div_ceil(SELL_C);
+    let num_slots = num_chunks * SELL_C;
+
+    let mut degrees: Vec<u32> = (0..n as Vertex).map(|v| g.degree(v) as u32).collect();
+    let mut start = 0usize;
+    while start < n {
+        let end = start.saturating_add(sigma).min(n);
+        degrees[start..end].sort_unstable_by_key(|&d| std::cmp::Reverse(d));
+        start = end;
+    }
+    let cols_cells: usize = degrees
+        .chunks(SELL_C)
+        .map(|c| c.iter().copied().max().unwrap_or(0) as usize * SELL_C)
+        .sum();
+
+    n * std::mem::size_of::<Vertex>()                         // perm
+        + n * std::mem::size_of::<u32>()                      // rank
+        + (num_chunks + 1) * std::mem::size_of::<usize>()     // chunk_starts
+        + num_chunks * std::mem::size_of::<u32>()             // chunk_lens
+        + num_slots * std::mem::size_of::<u32>()              // lane_len
+        + cols_cells * std::mem::size_of::<Vertex>() // cols
+}
+
+/// Bytes a [`ComponentMap`] over `g` will retain.
+pub fn planned_component_bytes(g: &Csr) -> usize {
+    g.num_vertices() * std::mem::size_of::<u32>()
+}
+
+/// Bytes a [`HubBits`] bitmap over `g` with `k` hubs will retain.
+pub fn planned_hub_bytes(g: &Csr, k: usize) -> usize {
+    let n = g.num_vertices();
+    let k = k.min(32).min(n);
+    k * std::mem::size_of::<Vertex>() + n * std::mem::size_of::<u32>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EdgeList, RmatConfig};
+
+    fn rmat(scale: u32, ef: usize, seed: u64) -> Csr {
+        let el = RmatConfig::graph500(scale, ef).generate(seed);
+        Csr::from_edge_list(scale, &el)
+    }
+
+    #[test]
+    fn csr_footprint_counts_offsets_and_rows() {
+        let g = rmat(9, 8, 1);
+        let expect = (g.num_vertices() + 1) * std::mem::size_of::<usize>()
+            + g.num_directed_edges() * std::mem::size_of::<Vertex>();
+        assert_eq!(g.heap_bytes(), expect);
+    }
+
+    #[test]
+    fn planners_match_built_structures_exactly() {
+        for (scale, seed) in [(7u32, 11u64), (9, 12), (10, 13)] {
+            let g = rmat(scale, 8, seed);
+            assert_eq!(planned_padded_bytes(&g), PaddedCsr::from_csr(&g).heap_bytes());
+            for sigma in [16usize, 256, usize::MAX] {
+                assert_eq!(
+                    planned_sell_bytes(&g, sigma),
+                    Sell16::from_csr(&g, sigma).heap_bytes(),
+                    "scale {scale} sigma {sigma}"
+                );
+            }
+            assert_eq!(
+                planned_component_bytes(&g),
+                ComponentMap::compute(&g).heap_bytes()
+            );
+            for k in [1usize, 16, 32, 1000] {
+                assert_eq!(
+                    planned_hub_bytes(&g, k),
+                    HubBits::build(&g, k).heap_bytes(),
+                    "k {k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn planners_handle_degenerate_graphs() {
+        let g = Csr::from_edge_list(0, &EdgeList::with_edges(1, vec![]));
+        assert_eq!(planned_padded_bytes(&g), PaddedCsr::from_csr(&g).heap_bytes());
+        assert_eq!(planned_sell_bytes(&g, 16), Sell16::from_csr(&g, 16).heap_bytes());
+        assert_eq!(planned_hub_bytes(&g, 4), HubBits::build(&g, 4).heap_bytes());
+    }
+
+    #[test]
+    fn artifacts_footprint_sums_built_members() {
+        let g = rmat(8, 8, 2);
+        let a = GraphArtifacts::for_graph(&g);
+        assert_eq!(a.heap_bytes(), 0, "nothing built yet");
+        let sell = a.sell_layout(&g, 256).unwrap();
+        assert_eq!(a.heap_bytes(), sell.heap_bytes());
+        let padded = a.padded_csr(&g).unwrap();
+        assert_eq!(a.heap_bytes(), sell.heap_bytes() + padded.heap_bytes());
+        let comp = a.components(&g).unwrap();
+        let hub = a.hub_bits(&g, 16).unwrap();
+        assert_eq!(
+            a.heap_bytes(),
+            sell.heap_bytes() + padded.heap_bytes() + comp.heap_bytes() + hub.heap_bytes()
+        );
+    }
+}

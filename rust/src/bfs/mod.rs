@@ -57,6 +57,7 @@ pub mod artifacts;
 pub mod bitrace_free;
 pub mod control;
 pub mod bottom_up;
+pub mod footprint;
 pub mod multi_source;
 pub mod parallel;
 pub mod policy;
@@ -72,6 +73,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 pub use artifacts::{ComponentMap, DegreeStats, GraphArtifacts, HubBits, DEFAULT_HUB_BITS};
+pub use footprint::HeapFootprint;
 pub use control::{RunControl, RunStatus};
 
 use crate::graph::Csr;

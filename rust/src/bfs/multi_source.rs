@@ -908,10 +908,13 @@ impl BfsEngine for MultiSourceSellBfs {
             );
         }
         let sigma = self.resolved_sigma(g, &artifacts);
-        let sell = artifacts.sell_layout(g, sigma);
+        let sell = artifacts.sell_layout(g, sigma)?;
         // the cheap components pass for the lane-retirement bound runs
-        // once per graph, in prepare, like every other artifact
-        let components = self.component_bound.then(|| artifacts.components(g));
+        // once per graph, in prepare, like every other artifact; it is
+        // optional — under governor memory pressure the lanes simply
+        // retire on the full live mask instead
+        let components =
+            if self.component_bound { artifacts.components(g) } else { None };
         Ok(Box::new(PreparedMultiSource { g, sell, components, engine: *self, artifacts }))
     }
 }

@@ -618,8 +618,9 @@ impl BfsEngine for SellBfs {
         artifacts: Arc<GraphArtifacts>,
     ) -> Result<Box<dyn PreparedBfs + 'g>> {
         let sigma = self.resolved_sigma(g, &artifacts);
-        let sell = artifacts.sell_layout(g, sigma);
-        let padded = if self.opts.aligned { Some(artifacts.padded_csr(g)) } else { None };
+        let sell = artifacts.sell_layout(g, sigma)?;
+        // optional under governor pressure: `None` re-enables the peel loop
+        let padded = if self.opts.aligned { artifacts.padded_csr(g) } else { None };
         Ok(Box::new(PreparedSell { g, sell, padded, engine: *self, artifacts }))
     }
 }

@@ -605,8 +605,9 @@ impl BfsEngine for VectorizedBfs {
         artifacts: Arc<GraphArtifacts>,
     ) -> Result<Box<dyn PreparedBfs + 'g>> {
         // the padded view only pays off when aligned chunking is on —
-        // unaligned mode issues masked loads regardless
-        let padded = if self.opts.aligned { Some(artifacts.padded_csr(g)) } else { None };
+        // unaligned mode issues masked loads regardless; under governor
+        // memory pressure it comes back `None` and the peel loop returns
+        let padded = if self.opts.aligned { artifacts.padded_csr(g) } else { None };
         Ok(Box::new(PreparedSimd { g, padded, engine: *self, artifacts }))
     }
 }

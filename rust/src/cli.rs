@@ -108,6 +108,17 @@ COMMANDS:
                         prefix and are excluded from TEPS statistics
                --max-attempts N (3)  attempts per root before it counts
                         as failed; retries degrade counted VPU -> serial
+               --mem-budget-mb N (unbounded)  memory budget for the
+                        resource governor: artifact builds and per-job
+                        working sets are byte-accounted against it,
+                        optional artifacts (padded CSR, hub bitmap,
+                        component map) are skipped under pressure with a
+                        structured report, and jobs that cannot fit are
+                        shed with an over-budget error instead of
+                        thrashing
+               --max-inflight N (unbounded)  admission cap on
+                        concurrently running jobs; excess jobs are
+                        rejected with a retry hint instead of queueing
                --sigma N|global|auto (auto)  SELL σ sort window
                         (engines with a SELL layout: sell, sell-noopt,
                          hybrid-sell, hybrid-sell-bu, hybrid-sell-ms;

@@ -10,13 +10,19 @@
 //! The enum implements [`std::error::Error`], so callers living on
 //! `anyhow` keep composing with `?` through the blanket conversion.
 
+use std::time::Duration;
+
 use crate::graph::CsrStructureError;
 use crate::Vertex;
 
-/// Why a job could not run (or could not even start). Every variant is a
-/// *job-level* fault: nothing here is retried, because retrying cannot
+/// Why a job could not run (or could not even start). Most variants are
+/// *job-level* faults: nothing there is retried, because retrying cannot
 /// help — the graph is corrupt, the request is malformed, or the engine
-/// cannot be built for this configuration.
+/// cannot be built for this configuration. The two shedding variants
+/// ([`CoordinatorError::Rejected`], [`CoordinatorError::OverBudget`]) are
+/// the exception a serving front end dispatches on: `Rejected` is
+/// transient (retry after the hint), `OverBudget` is structural (the job
+/// can never fit the configured memory budget).
 #[derive(Debug)]
 pub enum CoordinatorError {
     /// The job's CSR failed [`crate::graph::Csr::validate_structure`] —
@@ -29,6 +35,17 @@ pub enum CoordinatorError {
     /// The engine's per-graph prepare phase failed (bad thresholds,
     /// missing PJRT artifacts, ...).
     Preparation(anyhow::Error),
+    /// Admission control shed the job: the coordinator is at its in-flight
+    /// cap, or the current memory-ledger occupancy leaves no room for the
+    /// job's estimated footprint right now. Transient — a retry after
+    /// `retry_after_hint` may be admitted once holds release and the
+    /// artifact cache evicts.
+    Rejected { retry_after_hint: Duration },
+    /// A mandatory allocation (SELL layout, per-root working set) cannot
+    /// fit the configured memory budget even on an idle coordinator.
+    /// Structural — retrying cannot help; raise the budget or shrink the
+    /// job.
+    OverBudget { detail: String },
 }
 
 impl std::fmt::Display for CoordinatorError {
@@ -44,6 +61,16 @@ impl std::fmt::Display for CoordinatorError {
                 write!(f, "engine construction failed: {e:#}")
             }
             CoordinatorError::Preparation(e) => write!(f, "engine preparation failed: {e:#}"),
+            CoordinatorError::Rejected { retry_after_hint } => {
+                write!(
+                    f,
+                    "job rejected by admission control; retry after ~{} ms",
+                    retry_after_hint.as_millis()
+                )
+            }
+            CoordinatorError::OverBudget { detail } => {
+                write!(f, "job over memory budget: {detail}")
+            }
         }
     }
 }
@@ -74,6 +101,12 @@ mod tests {
         let e = CoordinatorError::InvalidGraph(CsrStructureError::EmptyOffsets);
         assert!(e.to_string().contains("invalid graph"));
         assert!(std::error::Error::source(&e).is_some());
+        let e = CoordinatorError::Rejected { retry_after_hint: Duration::from_millis(25) };
+        assert!(e.to_string().contains("rejected"));
+        assert!(e.to_string().contains("25"));
+        let e = CoordinatorError::OverBudget { detail: "layout needs 8 MiB".into() };
+        assert!(e.to_string().contains("over memory budget"));
+        assert!(e.to_string().contains("8 MiB"));
     }
 
     #[test]

@@ -34,6 +34,14 @@ pub enum FaultKind {
     /// Run the batch, then return an empty result vector (exercises the
     /// missing-result hole path that used to be a coordinator panic).
     DropResults,
+    /// Synthetic memory pressure: the scheduler charges this many bytes
+    /// against the job's [`super::governor::ResourceGovernor`] ledger for
+    /// the whole job (clamped to the remaining budget, released at job
+    /// end). Deterministically drives the optional-artifact-skip and
+    /// admission-shedding paths without needing a graph big enough to
+    /// fill the budget for real. Unlike the other kinds it fires at
+    /// admission, not per batch — [`FaultPlan::apply`] passes through.
+    MemoryPressure { bytes: usize },
 }
 
 /// One deterministic injected fault: `kind` fires at batch `at_batch`.
@@ -68,6 +76,11 @@ impl FaultPlan {
         FaultPlan { at_batch: b, kind: FaultKind::DropResults, sticky: false }
     }
 
+    /// Hold `bytes` of synthetic ledger pressure for the whole job.
+    pub fn memory_pressure(bytes: usize) -> Self {
+        FaultPlan { at_batch: 0, kind: FaultKind::MemoryPressure { bytes }, sticky: true }
+    }
+
     /// Does this plan fire for batch index `b`?
     pub fn fires_at(&self, b: usize) -> bool {
         b == self.at_batch || (self.sticky && b >= self.at_batch)
@@ -84,6 +97,8 @@ impl FaultPlan {
                     let _ = go();
                     return Vec::new();
                 }
+                // applied by the scheduler at admission, not per batch
+                FaultKind::MemoryPressure { .. } => {}
             }
         }
         go()
@@ -153,6 +168,20 @@ mod tests {
         let p = FaultPlan::panic_at(0);
         let r = std::panic::catch_unwind(|| p.apply(0, Vec::new));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn memory_pressure_is_sticky_and_passes_batches_through() {
+        let p = FaultPlan::memory_pressure(1 << 20);
+        assert!(p.sticky, "pressure holds for the whole job");
+        assert!(p.fires_at(0) && p.fires_at(9));
+        let mut ran = false;
+        let out = p.apply(0, || {
+            ran = true;
+            Vec::new()
+        });
+        assert!(ran, "batches run normally under synthetic pressure");
+        assert!(out.is_empty());
     }
 
     #[test]

@@ -1,0 +1,413 @@
+//! Resource governance: a byte-accounted memory budget for the runtime.
+//!
+//! The prepared layouts ([`crate::graph::Sell16`], [`crate::graph::PaddedCsr`],
+//! the hub/component bitmaps) are memory-hungry by design, and ROADMAP
+//! item 2's serving scenario cannot let an overloaded daemon OOM-kill the
+//! process. The [`ResourceGovernor`] makes memory a first-class bounded
+//! resource: one shared atomic **ledger** of charged bytes, checked
+//! against a configurable **budget** with two watermarks.
+//!
+//! The discipline is *charge before allocate*: every charge is a
+//! compare-and-swap that fails rather than exceeds the budget, and the
+//! planned sizes come from [`crate::bfs::footprint`]'s exact pre-build
+//! planners — so the ledger can never be observed above the budget.
+//! Three outcomes fall out of a charge that does not fit:
+//!
+//! - **optional artifact** (padded CSR, hub bitmap, component map): the
+//!   build is *skipped* with a structured [`ResourcePressure`] event; the
+//!   engines all tolerate the absence through their scalar/CSR fallback
+//!   paths. Skipping starts at the **high watermark**, before the budget
+//!   is actually exhausted, so mandatory work keeps headroom.
+//! - **mandatory allocation** (the SELL layout of a `sell`/`hybrid-sell`
+//!   engine): preparation fails with a marked error the coordinator maps
+//!   to [`crate::coordinator::CoordinatorError::OverBudget`].
+//! - **per-traversal working set**: reserved at admission by the
+//!   scheduler ([`LedgerHold`]); a reservation that does not fit sheds
+//!   the job with [`crate::coordinator::CoordinatorError::Rejected`].
+//!
+//! The artifact cache releases its entries' bytes on eviction and evicts
+//! until the ledger is back under the **low watermark** (see
+//! [`crate::coordinator::Coordinator`]).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::bfs::DegreeStats;
+
+/// Sentinel embedded in preparation errors raised by a mandatory artifact
+/// build that cannot fit the budget; the scheduler maps any preparation
+/// error whose chain contains it to
+/// [`crate::coordinator::CoordinatorError::OverBudget`].
+pub const OVER_BUDGET_MARKER: &str = "mandatory allocation over memory budget";
+
+/// Pressure (skip optional artifact builds) starts at this share of the
+/// budget…
+const HIGH_WATERMARK_PCT: usize = 85;
+/// …and cache eviction runs until the ledger is back under this share.
+const LOW_WATERMARK_PCT: usize = 70;
+
+/// Rough per-vertex bytes of one root's traversal state (parent array,
+/// distance-ish scratch, visited/frontier bitmaps) used by the admission
+/// estimate — deliberately a smooth overestimate, not an exact plan.
+const WORKING_SET_BYTES_PER_ROOT_VERTEX: usize = 12;
+
+/// A structured degradation event: an optional artifact build was skipped
+/// because charging it would push the ledger over the high watermark (or
+/// over the budget outright).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ResourcePressure {
+    /// Which artifact was skipped (`"padded-csr"`, `"hub-bits"`,
+    /// `"component-map"`).
+    pub artifact: &'static str,
+    /// Bytes the skipped build would have retained.
+    pub requested_bytes: usize,
+    /// Ledger at the decision point.
+    pub ledger_bytes: usize,
+    /// The configured budget.
+    pub budget_bytes: usize,
+}
+
+/// Admission policy for [`crate::coordinator::Coordinator::run_job`]:
+/// bound the number of concurrently running jobs (the estimated-footprint
+/// check rides the governor's budget, not this struct).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdmissionPolicy {
+    /// Maximum jobs allowed in flight at once (`usize::MAX` = unlimited).
+    pub max_inflight: usize,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy { max_inflight: usize::MAX }
+    }
+}
+
+/// Shared atomic byte ledger + watermarks. See the module docs for the
+/// charging discipline; one governor is shared by a coordinator, its
+/// artifact cache, and every `GraphArtifacts` it hands to engines.
+pub struct ResourceGovernor {
+    /// Budget in bytes; `usize::MAX` means unbounded (every charge
+    /// succeeds, no pressure, no eviction).
+    budget: usize,
+    ledger: AtomicUsize,
+    pressure_count: AtomicUsize,
+    events: Mutex<Vec<ResourcePressure>>,
+}
+
+impl std::fmt::Debug for ResourceGovernor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ResourceGovernor")
+            .field("budget", &self.budget)
+            .field("used", &self.used())
+            .field("pressure_events", &self.pressure_events())
+            .finish()
+    }
+}
+
+impl ResourceGovernor {
+    /// A governor with no budget: the ledger still counts, but nothing is
+    /// ever refused. The default for `Coordinator::new`.
+    pub fn unbounded() -> Self {
+        Self::with_budget(usize::MAX)
+    }
+
+    /// A governor enforcing `budget` bytes.
+    pub fn with_budget(budget: usize) -> Self {
+        ResourceGovernor {
+            budget,
+            ledger: AtomicUsize::new(0),
+            pressure_count: AtomicUsize::new(0),
+            events: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// True when a finite budget is being enforced.
+    #[inline]
+    pub fn is_bounded(&self) -> bool {
+        self.budget != usize::MAX
+    }
+
+    /// The configured budget in bytes (`usize::MAX` = unbounded).
+    #[inline]
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Bytes currently charged to the ledger.
+    #[inline]
+    pub fn used(&self) -> usize {
+        self.ledger.load(Ordering::Relaxed)
+    }
+
+    /// Bytes still chargeable before the budget refuses.
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.budget.saturating_sub(self.used())
+    }
+
+    /// Ledger level above which optional artifact builds are skipped.
+    #[inline]
+    pub fn high_watermark(&self) -> usize {
+        watermark(self.budget, HIGH_WATERMARK_PCT)
+    }
+
+    /// Ledger level cache eviction drives the ledger back under.
+    #[inline]
+    pub fn low_watermark(&self) -> usize {
+        watermark(self.budget, LOW_WATERMARK_PCT)
+    }
+
+    /// Charge `bytes` iff the ledger stays within the budget. Never
+    /// overshoots: the check-and-add is one CAS.
+    pub fn try_charge(&self, bytes: usize) -> bool {
+        self.ledger
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                let next = cur.checked_add(bytes)?;
+                (next <= self.budget).then_some(next)
+            })
+            .is_ok()
+    }
+
+    /// Return `bytes` to the ledger (saturating — releasing more than was
+    /// charged clamps at zero rather than wrapping).
+    pub fn release(&self, bytes: usize) {
+        let _ = self.ledger.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+            Some(cur.saturating_sub(bytes))
+        });
+    }
+
+    /// Gate an optional artifact build: charge `bytes` unless doing so
+    /// would push the ledger over the **high watermark**. On refusal a
+    /// [`ResourcePressure`] event is recorded and the build must be
+    /// skipped. Returns whether the build may proceed (and, if so, the
+    /// bytes are already charged).
+    pub fn optional_build_allowed(&self, bytes: usize, artifact: &'static str) -> bool {
+        if !self.is_bounded() {
+            return true;
+        }
+        let high = self.high_watermark();
+        let ok = self
+            .ledger
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                let next = cur.checked_add(bytes)?;
+                (next <= high).then_some(next)
+            })
+            .is_ok();
+        if !ok {
+            self.record_pressure(artifact, bytes);
+        }
+        ok
+    }
+
+    /// Charge a **mandatory** allocation; failure is an error carrying
+    /// [`OVER_BUDGET_MARKER`] so the coordinator can surface it as
+    /// [`crate::coordinator::CoordinatorError::OverBudget`].
+    pub fn charge_mandatory(&self, bytes: usize, what: &str) -> anyhow::Result<()> {
+        if self.try_charge(bytes) {
+            Ok(())
+        } else {
+            anyhow::bail!(
+                "{OVER_BUDGET_MARKER}: {what} needs {bytes} B, \
+                 ledger {} B of {} B budget",
+                self.used(),
+                self.budget
+            )
+        }
+    }
+
+    /// Record a [`ResourcePressure`] degradation event.
+    pub fn record_pressure(&self, artifact: &'static str, requested_bytes: usize) {
+        self.pressure_count.fetch_add(1, Ordering::Relaxed);
+        let ev = ResourcePressure {
+            artifact,
+            requested_bytes,
+            ledger_bytes: self.used(),
+            budget_bytes: self.budget,
+        };
+        lock_events(&self.events).push(ev);
+    }
+
+    /// Total [`ResourcePressure`] events recorded so far.
+    pub fn pressure_events(&self) -> usize {
+        self.pressure_count.load(Ordering::Relaxed)
+    }
+
+    /// Take the events recorded since the last drain (the count above is
+    /// cumulative and unaffected).
+    pub fn drain_events(&self) -> Vec<ResourcePressure> {
+        std::mem::take(&mut *lock_events(&self.events))
+    }
+
+    /// Reserve `bytes` on the ledger, released when the hold drops. Fails
+    /// (None) if the reservation does not fit the budget.
+    pub fn try_hold(self: &Arc<Self>, bytes: usize) -> Option<LedgerHold> {
+        self.try_charge(bytes)
+            .then(|| LedgerHold { governor: Arc::clone(self), bytes })
+    }
+
+    /// Reserve up to `bytes`, clamped to what fits — the synthetic-pressure
+    /// fault injection hook ([`crate::coordinator::FaultKind::MemoryPressure`]):
+    /// it fills the ledger deterministically without ever overshooting the
+    /// budget.
+    pub fn hold_clamped(self: &Arc<Self>, bytes: usize) -> LedgerHold {
+        let mut charged = 0usize;
+        let _ = self.ledger.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+            charged = bytes.min(self.budget.saturating_sub(cur));
+            cur.checked_add(charged)
+        });
+        LedgerHold { governor: Arc::clone(self), bytes: charged }
+    }
+}
+
+/// RAII ledger reservation (a per-job working set, or injected synthetic
+/// pressure); the bytes return to the ledger on drop.
+#[derive(Debug)]
+pub struct LedgerHold {
+    governor: Arc<ResourceGovernor>,
+    bytes: usize,
+}
+
+impl LedgerHold {
+    /// Bytes this hold has reserved.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl Drop for LedgerHold {
+    fn drop(&mut self) {
+        self.governor.release(self.bytes);
+    }
+}
+
+fn watermark(budget: usize, pct: usize) -> usize {
+    if budget == usize::MAX {
+        usize::MAX
+    } else {
+        (budget as u128 * pct as u128 / 100) as usize
+    }
+}
+
+/// Pushing a pressure event never panics while holding the lock, so a
+/// poisoned mutex only ever means a panicking *reader* test — recover the
+/// data rather than cascading.
+fn lock_events(
+    m: &Mutex<Vec<ResourcePressure>>,
+) -> std::sync::MutexGuard<'_, Vec<ResourcePressure>> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Estimated bytes of a job's per-traversal working set, from
+/// [`DegreeStats`] alone — the admission check runs it **before any
+/// allocation**. Dominated by the retained per-root parent arrays
+/// (`roots × V × 8`) plus per-worker traversal scratch.
+pub fn estimate_working_set(stats: &DegreeStats, roots: usize, workers: usize) -> usize {
+    let n = stats.num_vertices;
+    roots
+        .saturating_mul(n)
+        .saturating_mul(std::mem::size_of::<crate::Pred>())
+        .saturating_add(
+            workers.max(1).saturating_mul(n).saturating_mul(WORKING_SET_BYTES_PER_ROOT_VERTEX),
+        )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbounded_governor_never_refuses() {
+        let g = ResourceGovernor::unbounded();
+        assert!(!g.is_bounded());
+        assert!(g.try_charge(usize::MAX / 2));
+        assert!(g.optional_build_allowed(usize::MAX / 4, "padded-csr"));
+        assert_eq!(g.pressure_events(), 0);
+        assert!(g.charge_mandatory(1, "sell").is_ok());
+    }
+
+    #[test]
+    fn charges_never_exceed_budget() {
+        let g = ResourceGovernor::with_budget(1000);
+        assert!(g.try_charge(600));
+        assert!(!g.try_charge(500), "600 + 500 > 1000");
+        assert_eq!(g.used(), 600, "failed charge leaves the ledger untouched");
+        assert!(g.try_charge(400));
+        assert_eq!(g.used(), 1000);
+        assert_eq!(g.remaining(), 0);
+        g.release(250);
+        assert_eq!(g.used(), 750);
+        g.release(10_000);
+        assert_eq!(g.used(), 0, "over-release clamps at zero");
+    }
+
+    #[test]
+    fn watermarks_order_and_scale() {
+        let g = ResourceGovernor::with_budget(100 * 1024 * 1024);
+        assert!(g.low_watermark() < g.high_watermark());
+        assert!(g.high_watermark() < g.budget());
+        let unbounded = ResourceGovernor::unbounded();
+        assert_eq!(unbounded.high_watermark(), usize::MAX);
+    }
+
+    #[test]
+    fn optional_builds_skip_at_high_watermark_with_event() {
+        let g = ResourceGovernor::with_budget(1000);
+        assert!(g.try_charge(800), "800 <= budget");
+        // 800 is under budget but any meaningful optional build now
+        // crosses the 85% watermark.
+        assert!(!g.optional_build_allowed(100, "hub-bits"));
+        assert_eq!(g.used(), 800, "refused build charges nothing");
+        assert_eq!(g.pressure_events(), 1);
+        let evs = g.drain_events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].artifact, "hub-bits");
+        assert_eq!(evs[0].requested_bytes, 100);
+        assert_eq!(evs[0].budget_bytes, 1000);
+        assert!(g.drain_events().is_empty(), "drain takes");
+        assert_eq!(g.pressure_events(), 1, "count is cumulative");
+        // under the watermark the charge goes through
+        g.release(800);
+        assert!(g.optional_build_allowed(100, "hub-bits"));
+        assert_eq!(g.used(), 100);
+    }
+
+    #[test]
+    fn mandatory_failure_carries_the_marker() {
+        let g = ResourceGovernor::with_budget(10);
+        let err = g.charge_mandatory(100, "SELL layout").unwrap_err();
+        assert!(format!("{err:#}").contains(OVER_BUDGET_MARKER));
+        assert_eq!(g.used(), 0);
+    }
+
+    #[test]
+    fn holds_release_on_drop_and_clamp() {
+        let g = Arc::new(ResourceGovernor::with_budget(100));
+        let h = g.try_hold(60).expect("fits");
+        assert_eq!(g.used(), 60);
+        assert!(g.try_hold(60).is_none(), "second hold does not fit");
+        drop(h);
+        assert_eq!(g.used(), 0);
+        let clamped = g.hold_clamped(1_000_000);
+        assert_eq!(clamped.bytes(), 100, "clamped to the budget");
+        assert_eq!(g.used(), 100);
+        drop(clamped);
+        assert_eq!(g.used(), 0);
+    }
+
+    #[test]
+    fn working_set_estimate_scales_with_roots_and_vertices() {
+        let stats = DegreeStats {
+            num_vertices: 1 << 10,
+            num_directed_edges: 1 << 13,
+            min: 0,
+            max: 64,
+            mean: 8.0,
+            top1pct_edge_share: 0.3,
+            isolated: 10,
+        };
+        let one = estimate_working_set(&stats, 1, 1);
+        let many = estimate_working_set(&stats, 64, 1);
+        assert!(many > one);
+        assert!(one >= (1 << 10) * std::mem::size_of::<crate::Pred>());
+    }
+}

@@ -5,6 +5,7 @@ use std::time::Duration;
 
 use super::engine::EngineKind;
 use super::fault::FaultPlan;
+use super::governor::ResourcePressure;
 use crate::bfs::validate::ValidationReport;
 use crate::bfs::{GraphArtifacts, RunControl, RunStatus, RunTrace};
 use crate::graph::Csr;
@@ -205,6 +206,10 @@ pub struct JobOutcome {
     /// policy-feedback channel — inspectable for reuse and for the
     /// built-exactly-once guarantee.
     pub artifacts: Arc<GraphArtifacts>,
+    /// Structured degradation events raised while this job ran: each one
+    /// names an optional artifact the governor skipped under memory
+    /// pressure (the job still completed, on its fallback paths).
+    pub pressure: Vec<ResourcePressure>,
 }
 
 impl JobOutcome {

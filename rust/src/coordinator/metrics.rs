@@ -38,6 +38,19 @@ pub struct Metrics {
     /// Roots that exhausted every attempt and were reported as
     /// [`super::job::RootOutcome::Failed`].
     failed_roots: AtomicUsize,
+    /// Jobs shed by the resource governor before any traversal ran
+    /// ([`super::error::CoordinatorError::Rejected`] /
+    /// [`super::error::CoordinatorError::OverBudget`]). Shed jobs never
+    /// touch the throughput aggregates: no roots, no edges, no seconds.
+    jobs_shed: AtomicUsize,
+    /// Gauge: retained bytes currently accounted to the artifact cache
+    /// (sum of each entry's built artifacts).
+    cache_bytes: AtomicUsize,
+    /// Total bytes released by byte-accounted cache evictions.
+    bytes_evicted: AtomicU64,
+    /// Structured [`super::governor::ResourcePressure`] degradation events
+    /// (optional artifacts skipped under memory pressure).
+    pressure_events: AtomicUsize,
 }
 
 /// Point-in-time copy of the counters.
@@ -68,6 +81,15 @@ pub struct MetricsSnapshot {
     pub degraded_roots: usize,
     /// Roots that exhausted every attempt.
     pub failed_roots: usize,
+    /// Jobs shed by admission control / the memory budget (never counted
+    /// in `jobs`, `roots`, or the TEPS aggregates).
+    pub jobs_shed: usize,
+    /// Bytes currently retained by the artifact cache (gauge).
+    pub cache_bytes: usize,
+    /// Bytes released by byte-accounted cache evictions (cumulative).
+    pub bytes_evicted: u64,
+    /// Optional-artifact skips under memory pressure (cumulative).
+    pub pressure_events: usize,
 }
 
 impl Metrics {
@@ -130,6 +152,26 @@ impl Metrics {
         self.failed_roots.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one job shed by admission control or the memory budget.
+    pub fn record_job_shed(&self) {
+        self.jobs_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Set the artifact-cache retained-bytes gauge.
+    pub fn set_cache_bytes(&self, bytes: usize) {
+        self.cache_bytes.store(bytes, Ordering::Relaxed);
+    }
+
+    /// Count `bytes` released by one byte-accounted cache eviction.
+    pub fn record_bytes_evicted(&self, bytes: usize) {
+        self.bytes_evicted.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Count one optional-artifact skip under memory pressure.
+    pub fn record_pressure_event(&self) {
+        self.pressure_events.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let edges = self.edges.load(Ordering::Relaxed);
         let secs = self.nanos.load(Ordering::Relaxed) as f64 / 1e9;
@@ -150,6 +192,10 @@ impl Metrics {
             root_retries: self.root_retries.load(Ordering::Relaxed),
             degraded_roots: self.degraded_roots.load(Ordering::Relaxed),
             failed_roots: self.failed_roots.load(Ordering::Relaxed),
+            jobs_shed: self.jobs_shed.load(Ordering::Relaxed),
+            cache_bytes: self.cache_bytes.load(Ordering::Relaxed),
+            bytes_evicted: self.bytes_evicted.load(Ordering::Relaxed),
+            pressure_events: self.pressure_events.load(Ordering::Relaxed),
         }
     }
 }
@@ -237,6 +283,30 @@ mod tests {
         assert_eq!(s.degraded_roots, 1);
         assert_eq!(s.failed_roots, 1);
         assert_eq!(s.artifact_cache_evictions, 1);
+    }
+
+    #[test]
+    fn shedding_counters_never_touch_throughput_aggregates() {
+        let m = Metrics::default();
+        m.record_job_shed();
+        m.record_job_shed();
+        m.record_pressure_event();
+        m.record_bytes_evicted(1024);
+        m.set_cache_bytes(4096);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_shed, 2);
+        assert_eq!(s.pressure_events, 1);
+        assert_eq!(s.bytes_evicted, 1024);
+        assert_eq!(s.cache_bytes, 4096);
+        // shed jobs are not jobs: the TEPS aggregates stay untouched
+        assert_eq!(s.jobs, 0);
+        assert_eq!(s.roots, 0);
+        assert_eq!(s.edges_traversed, 0);
+        assert_eq!(s.preparation_seconds, 0.0);
+        assert_eq!(s.aggregate_teps, 0.0);
+        // the gauge overwrites rather than accumulates
+        m.set_cache_bytes(100);
+        assert_eq!(m.snapshot().cache_bytes, 100);
     }
 
     #[test]

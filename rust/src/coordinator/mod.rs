@@ -23,6 +23,8 @@
 //!   [`job::RootOutcome`]s.
 //! * [`error`] — the job-level [`error::CoordinatorError`] taxonomy.
 //! * [`fault`] — deterministic fault injection for the chaos suite.
+//! * [`governor`] — the byte-accounted memory budget: ledger, watermarks,
+//!   admission estimates, and structured pressure events.
 //! * [`scheduler`] — root-batch worker pool + the content-addressed
 //!   artifact cache (LRU-bounded).
 //! * [`metrics`] — run counters, TEPS aggregation, and fault/retry
@@ -31,6 +33,7 @@
 pub mod engine;
 pub mod error;
 pub mod fault;
+pub mod governor;
 pub mod job;
 pub mod metrics;
 pub mod scheduler;
@@ -38,5 +41,6 @@ pub mod scheduler;
 pub use engine::{make_engine, EngineKind};
 pub use error::CoordinatorError;
 pub use fault::{FaultInjector, FaultKind, FaultPlan};
+pub use governor::{AdmissionPolicy, LedgerHold, ResourceGovernor, ResourcePressure};
 pub use job::{BatchPolicy, BfsJob, JobOutcome, RootOutcome, RootRun, RunPolicy};
 pub use scheduler::Coordinator;

@@ -23,26 +23,47 @@
 //! `catch_unwind`, a panicking batch poisons nothing (both shared locks
 //! recover), and its roots are retried down a degradation ladder — the
 //! job's engine on the counted VPU backend first, the serial reference
-//! engine after that — bounded by [`super::job::RunPolicy::max_attempts`].
-//! A root that exhausts its attempts becomes a
+//! engine after that — bounded by [`super::job::RunPolicy::max_attempts`],
+//! with a bounded, jittered, deadline-aware exponential backoff between
+//! rungs. A root that exhausts its attempts becomes a
 //! [`super::job::RootOutcome::Failed`] entry; the job itself still returns
 //! a well-formed [`JobOutcome`]. Job-level failures (corrupt graph,
 //! out-of-range root, unbuildable engine) are rejected up front as
 //! [`CoordinatorError`] before any worker spawns.
+//!
+//! The scheduler is additionally **resource-governed** (see
+//! [`super::governor`]): admission control bounds in-flight jobs and
+//! checks each job's estimated footprint — mandatory layout bytes plus
+//! per-traversal working set, both derived from degree stats before any
+//! allocation — against the coordinator's byte budget, shedding load as
+//! [`CoordinatorError::Rejected`] / [`CoordinatorError::OverBudget`].
+//! Admitted jobs reserve their working set on the shared ledger for their
+//! lifetime, and the artifact cache is byte-accounted: evictions release
+//! an entry's retained bytes and run until the ledger is back under the
+//! governor's low watermark (the entry-count cap stays as a backstop).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, Weak};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use super::engine::make_engine;
+use super::engine::{make_engine, EngineKind};
 use super::error::CoordinatorError;
+use super::fault::{FaultKind, FaultPlan};
+use super::governor::{
+    estimate_working_set, AdmissionPolicy, LedgerHold, ResourceGovernor, OVER_BUDGET_MARKER,
+};
 use super::job::{BfsJob, JobOutcome, RootOutcome, RootRun};
 use super::metrics::Metrics;
+use crate::bfs::footprint::planned_sell_bytes;
+use crate::bfs::sell_vectorized::SIGMA_AUTO;
 use crate::bfs::serial::SerialLayeredBfs;
 use crate::bfs::validate::validate;
-use crate::bfs::{BfsEngine, BfsResult, GraphArtifacts, PreparedBfs, RunControl};
+use crate::bfs::{
+    BfsEngine, BfsResult, DegreeStats, GraphArtifacts, HeapFootprint, PreparedBfs, RunControl,
+};
 use crate::graph::Csr;
+use crate::rng::Xoshiro256;
 use crate::simd::VpuMode;
 use crate::Vertex;
 
@@ -70,8 +91,78 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
 }
 
 /// Entries the artifact cache holds at most — a serving deployment repeats
-/// jobs over a handful of hot graphs, not hundreds.
+/// jobs over a handful of hot graphs, not hundreds. With a bounded
+/// governor this is only a backstop: the byte-accounted watermark
+/// eviction usually fires first.
 const ARTIFACT_CACHE_CAP: usize = 8;
+
+/// First inter-attempt retry pause of the degradation ladder; doubles
+/// each further attempt.
+const RETRY_BACKOFF_BASE: Duration = Duration::from_millis(2);
+/// Ceiling on the exponential component of an inter-attempt pause (the
+/// jitter factor can stretch a capped pause to at most 1.5× this).
+const RETRY_BACKOFF_CAP: Duration = Duration::from_millis(50);
+
+/// Backoff before retry `attempt` of a root (the ladder calls this with
+/// `attempt` ≥ 2, so attempt 2 pauses around [`RETRY_BACKOFF_BASE`]).
+/// Jittered by a uniform factor in [0.5, 1.5) so coordinators retrying a
+/// contended resource do not stampede in lockstep; truncated to the
+/// control's remaining deadline and skipped entirely once the control
+/// already says stop — a retry must never sleep through the time budget
+/// it is trying to beat.
+fn retry_backoff(attempt: usize, rng: &mut Xoshiro256, ctl: &RunControl) -> Duration {
+    if ctl.stop_reason().is_some() {
+        return Duration::ZERO;
+    }
+    let exp = attempt.saturating_sub(2).min(10) as u32;
+    let raw = RETRY_BACKOFF_BASE.saturating_mul(1 << exp).min(RETRY_BACKOFF_CAP);
+    let mut pause = raw.mul_f64(0.5 + rng.next_f64());
+    if let Some(remaining) = ctl.deadline_remaining() {
+        pause = pause.min(remaining);
+    }
+    pause
+}
+
+/// RAII in-flight slot: acquired at admission, released on every exit
+/// path of `run_job` (shed, job-level error, success) when dropped.
+struct InflightGuard<'a> {
+    counter: &'a AtomicUsize,
+}
+
+impl<'a> InflightGuard<'a> {
+    fn acquire(counter: &'a AtomicUsize, max_inflight: usize) -> Option<Self> {
+        counter
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                (cur < max_inflight).then_some(cur + 1)
+            })
+            .ok()
+            .map(|_| InflightGuard { counter })
+    }
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.counter.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Bytes of mandatory layout the job's engine will charge in its prepare
+/// phase: the SELL layout for the sell-routed kinds when the job's
+/// artifacts have not built it yet, zero otherwise. Uses the exact
+/// pre-build planner, so the admission estimate matches the later charge
+/// byte-for-byte.
+fn planned_mandatory_bytes(job: &BfsJob, artifacts: &GraphArtifacts, stats: &DegreeStats) -> usize {
+    let sell_engine = matches!(job.engine, EngineKind::Sell { .. } | EngineKind::MultiSource { .. })
+        || matches!(job.engine, EngineKind::Hybrid { sell, bu_sell, .. } if sell || bu_sell);
+    if !sell_engine || artifacts.built_sell().is_some() {
+        return 0;
+    }
+    let sigma = match job.engine.sigma_key() {
+        SIGMA_AUTO => stats.suggested_sigma(),
+        s => s,
+    };
+    planned_sell_bytes(&job.graph, sigma)
+}
 
 /// One cached per-graph preparation. The durable key is `(content, sigma)`
 /// — a 64-bit fingerprint of the graph's degree sequence + adjacency
@@ -109,21 +200,87 @@ pub struct Coordinator {
     /// kept in recency order (front = least recently used); the LRU entry
     /// is evicted at [`ARTIFACT_CACHE_CAP`], which bounds the retained
     /// layouts no matter how many distinct graphs a long-lived coordinator
-    /// sees.
+    /// sees. Under a bounded governor entries are additionally
+    /// byte-accounted: eviction releases an entry's retained bytes and
+    /// runs until the ledger is back under the low watermark.
     artifact_cache: Mutex<Vec<ArtifactCacheEntry>>,
+    /// Shared byte ledger every piece of memory governance flows through:
+    /// artifact builds, cache retention, per-job working-set holds,
+    /// injected synthetic pressure. Unbounded for [`Coordinator::new`].
+    governor: Arc<ResourceGovernor>,
+    /// Admission policy (the in-flight cap; the estimated-footprint check
+    /// rides the governor's budget).
+    admission: AdmissionPolicy,
+    /// Jobs currently inside `run_job`.
+    inflight: AtomicUsize,
 }
 
 impl Coordinator {
+    /// An ungoverned coordinator: no memory budget, no in-flight cap.
     pub fn new(workers: usize) -> Self {
+        Self::with_limits(workers, None, AdmissionPolicy::default())
+    }
+
+    /// A resource-governed coordinator: `budget_bytes` bounds every
+    /// byte-accounted allocation (`None` = unbounded) and `admission`
+    /// bounds concurrently running jobs.
+    pub fn with_limits(
+        workers: usize,
+        budget_bytes: Option<usize>,
+        admission: AdmissionPolicy,
+    ) -> Self {
         Coordinator {
             workers: workers.max(1),
             metrics: Metrics::default(),
             artifact_cache: Mutex::new(Vec::new()),
+            governor: Arc::new(
+                budget_bytes
+                    .map_or_else(ResourceGovernor::unbounded, ResourceGovernor::with_budget),
+            ),
+            admission,
+            inflight: AtomicUsize::new(0),
         }
     }
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// The coordinator's shared byte ledger.
+    pub fn governor(&self) -> &Arc<ResourceGovernor> {
+        &self.governor
+    }
+
+    /// Backpressure hint for a shed job, scaled with the current load so
+    /// callers of a busier coordinator back off harder.
+    fn retry_hint(&self) -> Duration {
+        Duration::from_millis(25 * self.inflight.load(Ordering::Relaxed).max(1) as u64)
+    }
+
+    /// Drop the LRU cache entry, returning its retained bytes to the
+    /// ledger. A job still holding the entry's `Arc` keeps the structures
+    /// alive; the accounting stops the moment the cache lets go — the
+    /// bytes die with the job, not with the cache.
+    fn evict_lru(&self, cache: &mut Vec<ArtifactCacheEntry>) {
+        let e = cache.remove(0);
+        let bytes = e.artifacts.heap_bytes();
+        self.governor.release(bytes);
+        self.metrics.record_bytes_evicted(bytes);
+        self.metrics.record_artifact_cache_eviction();
+    }
+
+    /// Evict LRU entries until the ledger is back under the governor's
+    /// low watermark (no-op for an unbounded governor), then refresh the
+    /// retained-bytes gauge. Runs at the end of every job, after that
+    /// job's working-set hold released.
+    fn enforce_watermark(&self) {
+        let mut cache = lock_unpoisoned(&self.artifact_cache);
+        if self.governor.is_bounded() {
+            while self.governor.used() > self.governor.low_watermark() && !cache.is_empty() {
+                self.evict_lru(&mut cache);
+            }
+        }
+        self.metrics.set_cache_bytes(cache.iter().map(|e| e.artifacts.heap_bytes()).sum());
     }
 
     /// The cached artifacts for `(graph, sigma)`, or a fresh entry.
@@ -172,9 +329,11 @@ impl Coordinator {
             return (touch(&mut cache, i), CacheOutcome::ContentHit);
         }
         let artifacts = Arc::new(GraphArtifacts::for_graph(graph));
+        // every artifact this entry builds charges the coordinator's
+        // ledger (and is refused under pressure)
+        artifacts.install_governor(Arc::clone(&self.governor));
         if cache.len() >= ARTIFACT_CACHE_CAP {
-            cache.remove(0);
-            self.metrics.record_artifact_cache_eviction();
+            self.evict_lru(&mut cache);
         }
         cache.push(ArtifactCacheEntry {
             graph: Arc::downgrade(graph),
@@ -230,6 +389,22 @@ impl Coordinator {
             return Err(CoordinatorError::RootOutOfBounds { root, vertices });
         }
 
+        // Phase 0.5 — admission control. The in-flight slot is RAII, so
+        // every exit path below releases it.
+        let Some(_inflight) = InflightGuard::acquire(&self.inflight, self.admission.max_inflight)
+        else {
+            self.metrics.record_job_shed();
+            return Err(CoordinatorError::Rejected { retry_after_hint: self.retry_hint() });
+        };
+        // chaos hook: synthetic ledger pressure held for the whole job,
+        // clamped so the ledger never observes more than the budget
+        let _synthetic: Option<LedgerHold> = match job.run.fault {
+            Some(FaultPlan { kind: FaultKind::MemoryPressure { bytes }, .. }) => {
+                Some(self.governor.hold_clamped(bytes))
+            }
+            _ => None,
+        };
+
         // Phase 1 — fail fast: construct the engine and prepare the graph
         // once, before any worker spawns. The PJRT engine compiles its
         // executable here; the sell engines build their Sell16 layout here
@@ -243,9 +418,50 @@ impl Coordinator {
             CacheOutcome::ContentHit => self.metrics.record_artifact_cache_hit(true),
             CacheOutcome::Miss => {}
         }
-        let prepared = engine
-            .prepare_with(&job.graph, Arc::clone(&artifacts))
-            .map_err(CoordinatorError::Preparation)?;
+
+        // Estimated-footprint admission check, from degree stats alone —
+        // before the engine allocates anything. A job that can never fit
+        // the budget sheds structurally as OverBudget; one that merely
+        // does not fit *right now* sheds as Rejected (released holds and
+        // cache evictions can admit a retry). An admitted job reserves
+        // its working-set estimate on the ledger for its lifetime.
+        let working_set: Option<LedgerHold> = if self.governor.is_bounded() {
+            let stats = artifacts.stats(&job.graph);
+            let ws = estimate_working_set(stats, job.roots.len(), self.workers);
+            let layout = planned_mandatory_bytes(job, &artifacts, stats);
+            if layout.saturating_add(ws) > self.governor.budget() {
+                self.metrics.record_job_shed();
+                return Err(CoordinatorError::OverBudget {
+                    detail: format!(
+                        "estimated footprint {} B (mandatory layout {layout} B + \
+                         working set {ws} B) exceeds the {} B budget",
+                        layout.saturating_add(ws),
+                        self.governor.budget()
+                    ),
+                });
+            }
+            let Some(hold) =
+                self.governor.try_hold(ws).filter(|_| layout <= self.governor.remaining())
+            else {
+                self.metrics.record_job_shed();
+                return Err(CoordinatorError::Rejected { retry_after_hint: self.retry_hint() });
+            };
+            Some(hold)
+        } else {
+            None
+        };
+
+        let prepared = engine.prepare_with(&job.graph, Arc::clone(&artifacts)).map_err(|e| {
+            // a mandatory artifact that lost a charge race after passing
+            // admission still surfaces as the structured shedding error
+            let rendered = format!("{e:#}");
+            if rendered.contains(OVER_BUDGET_MARKER) {
+                self.metrics.record_job_shed();
+                CoordinatorError::OverBudget { detail: rendered }
+            } else {
+                CoordinatorError::Preparation(e)
+            }
+        })?;
         let preparation_seconds = t_prep.elapsed().as_secs_f64();
         let prep_share = preparation_seconds / job.roots.len().max(1) as f64;
 
@@ -341,9 +557,19 @@ impl Coordinator {
             // retry — the attempt-exhaustion scenario of the chaos suite
             let sticky_fault =
                 job.run.fault.filter(|p| p.sticky && p.fires_at(i / width));
+            // deterministic per-(job, root) jitter stream for the backoff
+            let mut backoff_rng =
+                Xoshiro256::seed_from_u64(job.id ^ ((root as u64) << 20) ^ 0x9e37_79b9);
             while last.is_err() && attempts < max_attempts {
                 attempts += 1;
                 self.metrics.record_root_retry();
+                // space the rungs out: a fault that needs a moment to
+                // clear (device contention, a stalled sibling) is not
+                // hammered at full rate
+                let pause = retry_backoff(attempts, &mut backoff_rng, &ctl);
+                if !pause.is_zero() {
+                    std::thread::sleep(pause);
+                }
                 let rung: Option<&dyn PreparedBfs> = if attempts == 2 {
                     if counted_rung.is_none() {
                         let mut kind = job.engine.clone();
@@ -409,7 +635,24 @@ impl Coordinator {
         });
         let runs: Vec<&RootRun> = outcomes.iter().filter_map(RootOutcome::run).collect();
         self.metrics.record_job(&runs, preparation_seconds, num_batches);
-        Ok(JobOutcome { id: job.id, outcomes, all_valid, preparation_seconds, artifacts })
+
+        // Release the working-set reservation, then re-balance the cache
+        // against the ledger and surface this job's structured pressure
+        // events (metrics counter + outcome field).
+        drop(working_set);
+        self.enforce_watermark();
+        let pressure = self.governor.drain_events();
+        for _ in &pressure {
+            self.metrics.record_pressure_event();
+        }
+        Ok(JobOutcome {
+            id: job.id,
+            outcomes,
+            all_valid,
+            preparation_seconds,
+            artifacts,
+            pressure,
+        })
     }
 }
 
@@ -773,5 +1016,175 @@ mod tests {
         let m = c.metrics().snapshot();
         assert_eq!(m.artifact_cache_hits, hits_before, "evicted entry must miss");
         assert_eq!(m.artifact_cache_evictions, 2);
+    }
+
+    #[test]
+    fn admission_rejects_at_inflight_cap() {
+        let c = Coordinator::with_limits(1, None, AdmissionPolicy { max_inflight: 0 });
+        let err = c.run_job(&job(EngineKind::SerialLayered, vec![0])).unwrap_err();
+        assert!(
+            matches!(err, CoordinatorError::Rejected { retry_after_hint }
+                if retry_after_hint > Duration::ZERO),
+            "{err}"
+        );
+        let m = c.metrics().snapshot();
+        assert_eq!(m.jobs_shed, 1);
+        assert_eq!(m.jobs, 0, "shed jobs never count as jobs");
+    }
+
+    #[test]
+    fn over_budget_job_sheds_structurally_without_polluting_aggregates() {
+        // a budget far below even the scale-9 working set: the footprint
+        // estimate sheds the job before any allocation, structurally
+        let c = Coordinator::with_limits(2, Some(1024), AdmissionPolicy::default());
+        let err = c.run_job(&job(EngineKind::SerialLayered, vec![0, 1])).unwrap_err();
+        assert!(matches!(err, CoordinatorError::OverBudget { .. }), "{err}");
+        let m = c.metrics().snapshot();
+        assert_eq!(m.jobs_shed, 1);
+        assert_eq!(m.jobs, 0);
+        assert_eq!(m.roots, 0);
+        assert_eq!(m.edges_traversed, 0);
+        assert_eq!(m.preparation_seconds, 0.0, "shed jobs never record preparation");
+        assert_eq!(m.aggregate_teps, 0.0);
+        assert_eq!(c.governor().used(), 0, "shedding leaves the ledger clean");
+    }
+
+    #[test]
+    fn transient_pressure_sheds_with_retry_hint_then_admits() {
+        let c = Coordinator::with_limits(1, Some(1 << 20), AdmissionPolicy::default());
+        let mut j = job(EngineKind::SerialLayered, vec![0]);
+        // fill the whole budget: the working-set hold cannot fit, but the
+        // job itself is not structurally over budget → transient shed
+        j.run.fault = Some(FaultPlan::memory_pressure(usize::MAX));
+        let err = c.run_job(&j).unwrap_err();
+        assert!(
+            matches!(err, CoordinatorError::Rejected { retry_after_hint }
+                if retry_after_hint > Duration::ZERO),
+            "{err}"
+        );
+        assert_eq!(c.metrics().snapshot().jobs_shed, 1);
+        // the synthetic hold died with the shed job: the same request
+        // without the fault is admitted and completes
+        j.run.fault = None;
+        assert!(c.run_job(&j).unwrap().all_valid);
+        let m = c.metrics().snapshot();
+        assert_eq!(m.jobs, 1);
+        assert_eq!(m.jobs_shed, 1);
+    }
+
+    #[test]
+    fn governed_job_reconciles_ledger_cache_and_gauge() {
+        // generous budget: everything builds, nothing sheds, and at job
+        // end the ledger holds exactly the cache's retained bytes
+        let c = Coordinator::with_limits(2, Some(64 << 20), AdmissionPolicy::default());
+        let j = job(EngineKind::parse("sell", 2, "artifacts").unwrap(), (0..4).collect());
+        let out = c.run_job(&j).unwrap();
+        assert!(out.all_valid);
+        assert!(out.pressure.is_empty(), "no pressure under a generous budget");
+        let m = c.metrics().snapshot();
+        assert_eq!(m.jobs_shed, 0);
+        assert_eq!(m.pressure_events, 0);
+        assert!(m.cache_bytes > 0, "the cache retains the built layouts");
+        assert_eq!(
+            c.governor().used(),
+            m.cache_bytes,
+            "working set released, only cached artifacts remain charged"
+        );
+        assert_eq!(m.cache_bytes, crate::bfs::HeapFootprint::heap_bytes(&*out.artifacts));
+    }
+
+    #[test]
+    fn synthetic_pressure_skips_optional_artifacts_but_job_completes() {
+        // position the ledger so the mandatory SELL layout lands exactly
+        // on the high watermark: optional builds (the padded CSR of the
+        // aligned sell engine) are refused with structured events, while
+        // the job itself completes — oracle-valid — on fallback paths
+        let budget: usize = 4 << 20;
+        let engine = EngineKind::parse("sell", 1, "artifacts").unwrap();
+        let j = job(engine, vec![0, 1]);
+        let stats = DegreeStats::compute(&j.graph);
+        let sell = planned_sell_bytes(&j.graph, stats.suggested_sigma());
+        let ws = estimate_working_set(&stats, j.roots.len(), 1);
+        let c = Coordinator::with_limits(1, Some(budget), AdmissionPolicy::default());
+        let pressure_bytes = c.governor().high_watermark() - sell - ws;
+        let mut j = j;
+        j.run.fault = Some(FaultPlan::memory_pressure(pressure_bytes));
+        let out = c.run_job(&j).unwrap();
+        assert!(out.all_valid, "the job completes on its fallback paths");
+        assert!(!out.pressure.is_empty(), "skips surface as structured events");
+        assert!(
+            out.pressure.iter().any(|p| p.artifact == "padded-csr"),
+            "{:?}",
+            out.pressure
+        );
+        for p in &out.pressure {
+            assert!(p.requested_bytes > 0);
+            assert_eq!(p.budget_bytes, budget);
+            assert!(p.ledger_bytes <= budget, "the ledger never exceeds the budget");
+        }
+        let m = c.metrics().snapshot();
+        assert_eq!(m.jobs_shed, 0, "a degraded job is not a shed job");
+        assert_eq!(m.pressure_events, out.pressure.len());
+        assert!(out.artifacts.built_sell().is_some(), "mandatory layout still built");
+        assert!(out.artifacts.built_padded().is_none(), "optional build was skipped");
+    }
+
+    #[test]
+    fn cache_evicts_by_bytes_until_under_low_watermark() {
+        // two sell-noopt jobs on two distinct graphs: each layout fits
+        // alone, both together cross the low watermark — finishing the
+        // second job evicts the first entry and returns exactly its bytes
+        let mk_graph = |seed: u64| {
+            let el = RmatConfig::graph500(9, 8).generate(seed);
+            Arc::new(Csr::from_edge_list(9, &el))
+        };
+        let (g1, g2) = (mk_graph(70), mk_graph(71));
+        let engine = EngineKind::parse("sell-noopt", 1, "artifacts").unwrap();
+        let sigma = DegreeStats::compute(&g1).suggested_sigma();
+        let s1 = planned_sell_bytes(&g1, sigma);
+        let s2 = planned_sell_bytes(&g2, sigma);
+        let ws = estimate_working_set(&DegreeStats::compute(&g1), 1, 1);
+        let budget = s1 + s2 + ws + 1024;
+        let c = Coordinator::with_limits(1, Some(budget), AdmissionPolicy::default());
+        assert!(s1.max(s2) <= c.governor().low_watermark(), "each entry fits alone");
+        assert!(s1 + s2 > c.governor().low_watermark(), "together they cross it");
+        let mk_job = |g: &Arc<Csr>| BfsJob {
+            id: 0,
+            graph: Arc::clone(g),
+            roots: vec![0],
+            engine: engine.clone(),
+            validate: true,
+            batch: BatchPolicy::PerRoot,
+            run: RunPolicy::default(),
+        };
+        assert!(c.run_job(&mk_job(&g1)).unwrap().all_valid);
+        assert_eq!(c.metrics().snapshot().artifact_cache_evictions, 0);
+        assert_eq!(c.governor().used(), s1, "exact planned bytes stay charged");
+        assert!(c.run_job(&mk_job(&g2)).unwrap().all_valid);
+        let m = c.metrics().snapshot();
+        assert_eq!(m.artifact_cache_evictions, 1, "watermark eviction, not the count cap");
+        assert_eq!(m.bytes_evicted, s1 as u64, "LRU entry released exactly its bytes");
+        assert_eq!(c.governor().used(), s2);
+        assert_eq!(m.cache_bytes, s2);
+        assert!(c.governor().used() <= c.governor().low_watermark());
+    }
+
+    #[test]
+    fn retry_backoff_grows_jittered_and_respects_deadline() {
+        let ctl = RunControl::new();
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let p2 = retry_backoff(2, &mut rng, &ctl);
+        assert!(p2 >= RETRY_BACKOFF_BASE.mul_f64(0.5), "jitter floor is 0.5×");
+        assert!(p2 < RETRY_BACKOFF_BASE.mul_f64(1.5), "jitter ceiling is 1.5×");
+        let p5 = retry_backoff(5, &mut rng, &ctl);
+        assert!(p5 >= RETRY_BACKOFF_BASE.mul_f64(8.0 * 0.5), "attempt 5 → 8× base");
+        let p20 = retry_backoff(20, &mut rng, &ctl);
+        assert!(p20 <= RETRY_BACKOFF_CAP.mul_f64(1.5), "the cap bounds late attempts");
+        // a nearly-expired deadline truncates the pause…
+        ctl.arm_deadline_in(Duration::from_micros(100));
+        assert!(retry_backoff(2, &mut rng, &ctl) <= Duration::from_micros(100));
+        // …and a tripped control skips the sleep entirely
+        ctl.cancel();
+        assert_eq!(retry_backoff(2, &mut rng, &ctl), Duration::ZERO);
     }
 }

@@ -30,7 +30,14 @@ pub fn read_edge_list(r: impl Read) -> Result<EdgeList> {
         }
         if let Some(rest) = line.strip_prefix('#') {
             if let Some(n) = rest.trim().strip_prefix("vertices:") {
-                declared = Some(n.trim().parse().with_context(|| format!("line {}", lineno + 1))?);
+                let v: u64 =
+                    n.trim().parse().with_context(|| format!("line {}", lineno + 1))?;
+                // the header is untrusted input: cap it at the id space
+                // rather than letting a hostile count size allocations
+                if v > u32::MAX as u64 + 1 {
+                    bail!("line {}: vertex count {v} beyond the u32 id space", lineno + 1);
+                }
+                declared = Some(v as usize);
             }
             continue;
         }
@@ -101,37 +108,89 @@ pub fn write_csr(mut w: impl Write, g: &Csr) -> Result<()> {
 }
 
 /// Read a binary CSR snapshot.
+///
+/// The header is **untrusted**: a hostile or truncated stream must fail
+/// with a structured error — never pre-allocate unbounded memory from a
+/// declared length, never hand a structurally broken graph downstream.
+/// Lengths are sanity-checked before any reservation, the arrays grow
+/// incrementally (a lying length fails at the stream's true end instead
+/// of reserving it up front), truncations report the failing byte
+/// offset, and the structural invariants — offsets start at zero, stay
+/// monotone, end at the row count; every endpoint in bounds — are
+/// verified as the bytes arrive.
 pub fn read_csr(mut r: impl Read) -> Result<Csr> {
+    /// Cap on speculative reservation from the untrusted header; honest
+    /// arrays still grow to any size the stream actually delivers.
+    const PREALLOC_CAP: usize = 1 << 20;
+    const MAX_SCALE: u64 = 63;
+    /// Rows beyond this are a corrupt length, not a graph this crate
+    /// could ever have written (2^48 directed edges ≈ a petabyte).
+    const MAX_ROWS: u64 = 1 << 48;
+
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic).context("csr header")?;
+    r.read_exact(&mut magic).context("csr header truncated at byte offset 0")?;
     if &magic != CSR_MAGIC {
         bail!("not a phi-bfs CSR snapshot (bad magic)");
     }
     let mut u64buf = [0u8; 8];
-    let mut read_u64 = |r: &mut dyn Read| -> Result<u64> {
-        r.read_exact(&mut u64buf)?;
+    let mut read_u64 = |r: &mut dyn Read, what: &str, offset: usize| -> Result<u64> {
+        r.read_exact(&mut u64buf)
+            .with_context(|| format!("csr {what} truncated at byte offset {offset}"))?;
         Ok(u64::from_le_bytes(u64buf))
     };
-    let scale = read_u64(&mut r)? as u32;
-    let n = read_u64(&mut r)? as usize;
-    let nrows = read_u64(&mut r)? as usize;
-    let mut br = std::io::BufReader::new(r);
-    let mut colstarts = Vec::with_capacity(n + 1);
-    let mut b8 = [0u8; 8];
-    for _ in 0..=n {
-        br.read_exact(&mut b8).context("colstarts")?;
-        colstarts.push(u64::from_le_bytes(b8) as usize);
+    let scale = read_u64(&mut r, "scale", 8)?;
+    if scale > MAX_SCALE {
+        bail!("corrupt snapshot: scale {scale} beyond {MAX_SCALE}");
     }
-    let mut rows = Vec::with_capacity(nrows);
-    let mut b4 = [0u8; 4];
-    for _ in 0..nrows {
-        br.read_exact(&mut b4).context("rows")?;
-        rows.push(u32::from_le_bytes(b4));
+    let n64 = read_u64(&mut r, "vertex count", 16)?;
+    if n64 > u32::MAX as u64 + 1 {
+        bail!("corrupt snapshot: {n64} vertices beyond the u32 id space");
+    }
+    let n = n64 as usize;
+    let nrows64 = read_u64(&mut r, "row count", 24)?;
+    if nrows64 > MAX_ROWS {
+        bail!("corrupt snapshot: row count {nrows64} implausible");
+    }
+    let nrows = nrows64 as usize;
+    let mut br = std::io::BufReader::new(r);
+    let mut colstarts: Vec<usize> = Vec::with_capacity((n + 1).min(PREALLOC_CAP));
+    let mut b8 = [0u8; 8];
+    let mut prev = 0usize;
+    for i in 0..=n {
+        let offset = 32 + i * 8;
+        br.read_exact(&mut b8)
+            .with_context(|| format!("csr colstarts[{i}] truncated at byte offset {offset}"))?;
+        let c64 = u64::from_le_bytes(b8);
+        if c64 > nrows64 {
+            bail!("corrupt snapshot: colstarts[{i}] = {c64} beyond row count {nrows64}");
+        }
+        let c = c64 as usize;
+        if i == 0 && c != 0 {
+            bail!("corrupt snapshot: colstarts[0] = {c}, expected 0");
+        }
+        if c < prev {
+            bail!("corrupt snapshot: colstarts[{i}] = {c} decreases from {prev}");
+        }
+        prev = c;
+        colstarts.push(c);
     }
     if colstarts.last().copied() != Some(nrows) {
         bail!("corrupt snapshot: colstarts tail {:?} != rows len {nrows}", colstarts.last());
     }
-    Ok(Csr { colstarts, rows, scale })
+    let rows_base = 32 + (n + 1) * 8;
+    let mut rows: Vec<Vertex> = Vec::with_capacity(nrows.min(PREALLOC_CAP));
+    let mut b4 = [0u8; 4];
+    for i in 0..nrows {
+        let offset = rows_base + i * 4;
+        br.read_exact(&mut b4)
+            .with_context(|| format!("csr rows[{i}] truncated at byte offset {offset}"))?;
+        let v = u32::from_le_bytes(b4);
+        if v as usize >= n {
+            bail!("corrupt snapshot: rows[{i}] = {v} out of bounds for {n} vertices");
+        }
+        rows.push(v);
+    }
+    Ok(Csr { colstarts, rows, scale: scale as u32 })
 }
 
 /// Save / load CSR snapshots by path.
@@ -194,6 +253,103 @@ mod tests {
     #[test]
     fn csr_rejects_bad_magic() {
         assert!(read_csr(&b"NOTMAGIC\x00\x00"[..]).is_err());
+    }
+
+    #[test]
+    fn hostile_headers_fail_fast_without_preallocation() {
+        // vertex count beyond the u32 id space
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(CSR_MAGIC);
+        hdr.extend_from_slice(&9u64.to_le_bytes());
+        hdr.extend_from_slice(&u64::MAX.to_le_bytes());
+        hdr.extend_from_slice(&u64::MAX.to_le_bytes());
+        let msg = format!("{:#}", read_csr(&hdr[..]).unwrap_err());
+        assert!(msg.contains("u32 id space"), "{msg}");
+        // plausible vertex count, absurd row count
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(CSR_MAGIC);
+        hdr.extend_from_slice(&9u64.to_le_bytes());
+        hdr.extend_from_slice(&512u64.to_le_bytes());
+        hdr.extend_from_slice(&u64::MAX.to_le_bytes());
+        let msg = format!("{:#}", read_csr(&hdr[..]).unwrap_err());
+        assert!(msg.contains("implausible"), "{msg}");
+        // absurd scale
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(CSR_MAGIC);
+        hdr.extend_from_slice(&64u64.to_le_bytes());
+        let msg = format!("{:#}", read_csr(&hdr[..]).unwrap_err());
+        assert!(msg.contains("scale"), "{msg}");
+        // honest-looking lengths backed by no data: must fail at the
+        // stream's true end, not allocate the declared size and crash
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(CSR_MAGIC);
+        hdr.extend_from_slice(&30u64.to_le_bytes());
+        hdr.extend_from_slice(&(1u64 << 30).to_le_bytes());
+        hdr.extend_from_slice(&(1u64 << 33).to_le_bytes());
+        let msg = format!("{:#}", read_csr(&hdr[..]).unwrap_err());
+        assert!(msg.contains("truncated at byte offset 32"), "{msg}");
+    }
+
+    #[test]
+    fn csr_rejects_structural_corruption() {
+        let el = RmatConfig::graph500(8, 6).generate(43);
+        let g = Csr::from_edge_list(8, &el);
+        let n = g.num_vertices();
+        let mut buf = Vec::new();
+        write_csr(&mut buf, &g).unwrap();
+        // an out-of-bounds row endpoint
+        let rows_base = 32 + (n + 1) * 8;
+        let mut bad = buf.clone();
+        bad[rows_base..rows_base + 4].copy_from_slice(&(n as u32 + 5).to_le_bytes());
+        let msg = format!("{:#}", read_csr(&bad[..]).unwrap_err());
+        assert!(msg.contains("out of bounds"), "{msg}");
+        // an offset beyond the row count
+        let mut bad = buf.clone();
+        bad[40..48].copy_from_slice(&u64::MAX.to_le_bytes());
+        let msg = format!("{:#}", read_csr(&bad[..]).unwrap_err());
+        assert!(msg.contains("colstarts[1]"), "{msg}");
+        // a decreasing offset sequence (still within the row count)
+        let nrows = g.rows.len() as u64;
+        let mut bad = buf.clone();
+        bad[40..48].copy_from_slice(&nrows.to_le_bytes());
+        let msg = format!("{:#}", read_csr(&bad[..]).unwrap_err());
+        assert!(msg.contains("decreases"), "{msg}");
+        // a declared edge-list vertex count beyond the id space
+        let text = format!("# vertices: {}\n0 1\n", u64::MAX);
+        let msg = format!("{:#}", read_edge_list(text.as_bytes()).unwrap_err());
+        assert!(msg.contains("u32 id space"), "{msg}");
+    }
+
+    #[test]
+    fn corrupted_snapshots_never_panic() {
+        use crate::rng::Xoshiro256;
+        let el = RmatConfig::graph500(8, 6).generate(42);
+        let g = Csr::from_edge_list(8, &el);
+        let mut buf = Vec::new();
+        write_csr(&mut buf, &g).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(0xC0FFEE);
+        // property: every strict prefix is a structured error naming the
+        // failing byte offset (or the magic check, for sub-header cuts)
+        for _ in 0..64 {
+            let cut = rng.next_index(buf.len());
+            let msg = format!("{:#}", read_csr(&buf[..cut]).unwrap_err());
+            assert!(
+                msg.contains("byte offset") || msg.contains("bad magic"),
+                "cut at {cut}: {msg}"
+            );
+        }
+        // property: a single flipped bit either errors or yields a CSR
+        // that still passes full structural validation — never a panic,
+        // never a silently inconsistent graph
+        for _ in 0..256 {
+            let mut fuzzed = buf.clone();
+            let bit = rng.next_index(buf.len() * 8);
+            fuzzed[bit / 8] ^= 1 << (bit % 8);
+            if let Ok(back) = read_csr(&fuzzed[..]) {
+                back.validate_structure()
+                    .expect("accepted snapshot must be structurally valid");
+            }
+        }
     }
 
     #[test]

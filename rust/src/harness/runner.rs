@@ -8,6 +8,7 @@ use anyhow::Result;
 
 use super::stats::TepsStats;
 use crate::coordinator::engine::EngineKind;
+use crate::coordinator::governor::{AdmissionPolicy, ResourcePressure};
 use crate::coordinator::job::{BatchPolicy, BfsJob, RootOutcome, RootRun, RunPolicy};
 use crate::coordinator::scheduler::Coordinator;
 use crate::graph::stats::LayerProfile;
@@ -38,6 +39,15 @@ pub struct Experiment {
     /// Attempts per root before it counts as failed (`--max-attempts`);
     /// retries walk the coordinator's degradation ladder.
     pub max_attempts: usize,
+    /// Memory budget in MiB for the coordinator's resource governor
+    /// (`--mem-budget-mb`): artifact builds and per-job working sets are
+    /// byte-accounted against it, optional artifacts are skipped under
+    /// pressure, and jobs whose footprint cannot fit are shed with a
+    /// structured error. `None` = ungoverned.
+    pub mem_budget_mb: Option<usize>,
+    /// Admission cap on concurrently running jobs (`--max-inflight`);
+    /// excess jobs are rejected with a retry hint instead of queueing.
+    pub max_inflight: usize,
 }
 
 impl Experiment {
@@ -53,6 +63,8 @@ impl Experiment {
             batch_roots: 1,
             deadline_ms: None,
             max_attempts: RunPolicy::default().max_attempts,
+            mem_budget_mb: None,
+            max_inflight: AdmissionPolicy::default().max_inflight,
         }
     }
 
@@ -91,7 +103,11 @@ impl Experiment {
                 ..RunPolicy::default()
             },
         };
-        let coordinator = Coordinator::new(self.workers);
+        let coordinator = Coordinator::with_limits(
+            self.workers,
+            self.mem_budget_mb.map(|mb| mb.saturating_mul(1 << 20)),
+            AdmissionPolicy { max_inflight: self.max_inflight },
+        );
         let outcome = coordinator.run_job(&job)?;
 
         // a benchmark's numbers are meaningless with holes in them: a
@@ -107,6 +123,7 @@ impl Experiment {
         }
         let preparation_seconds = outcome.preparation_seconds;
         let all_valid = outcome.all_valid;
+        let pressure = outcome.pressure;
         let runs: Vec<RootRun> =
             outcome.outcomes.into_iter().filter_map(RootOutcome::into_run).collect();
 
@@ -121,6 +138,7 @@ impl Experiment {
             graph,
             runs,
             all_valid,
+            pressure,
             stats,
         })
     }
@@ -140,6 +158,10 @@ pub struct ExperimentReport {
     pub graph: Arc<Csr>,
     pub runs: Vec<RootRun>,
     pub all_valid: bool,
+    /// Optional artifacts the governor skipped under memory pressure
+    /// (empty when ungoverned or when everything fit); the experiment
+    /// still completed on fallback paths.
+    pub pressure: Vec<ResourcePressure>,
     pub stats: TepsStats,
 }
 
@@ -212,6 +234,20 @@ mod tests {
         assert!(report.stats.max > 0.0);
         // batch timing: every root of a batch reports its equal share
         assert!(report.runs.iter().all(|r| r.seconds > 0.0));
+    }
+
+    #[test]
+    fn governed_experiment_completes_under_a_real_budget() {
+        // --mem-budget-mb plumbing end to end: a budget that comfortably
+        // fits the scale-9 artifacts runs clean — validated trees, no
+        // pressure events, no shedding
+        let mut exp =
+            Experiment::new(9, 8, EngineKind::parse("sell", 2, "artifacts").unwrap());
+        exp.num_roots = 4;
+        exp.mem_budget_mb = Some(64);
+        let report = exp.run().unwrap();
+        assert!(report.all_valid);
+        assert!(report.pressure.is_empty(), "a 64 MiB budget fits a scale-9 graph");
     }
 
     #[test]

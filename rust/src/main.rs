@@ -160,6 +160,20 @@ fn cmd_run(args: &Args) -> Result<()> {
     if exp.max_attempts == 0 {
         anyhow::bail!("--max-attempts must be >= 1");
     }
+    // --mem-budget-mb arms the resource governor; --max-inflight caps
+    // concurrently admitted jobs. Zero is a configuration error, not
+    // "unlimited" — omit the flag for the ungoverned default.
+    let mem_budget_mb: usize = args.get("mem-budget-mb", 0)?;
+    if args.keys().any(|k| k.as_str() == "mem-budget-mb") && mem_budget_mb == 0 {
+        anyhow::bail!("--mem-budget-mb must be >= 1 (omit the flag for no budget)");
+    }
+    if mem_budget_mb > 0 {
+        exp.mem_budget_mb = Some(mem_budget_mb);
+    }
+    exp.max_inflight = args.get("max-inflight", exp.max_inflight)?;
+    if exp.max_inflight == 0 {
+        anyhow::bail!("--max-inflight must be >= 1");
+    }
 
     println!(
         "graph500 run: SCALE={scale} edgefactor={edgefactor} engine={engine_name} threads={threads} roots={}",
@@ -170,6 +184,9 @@ fn cmd_run(args: &Args) -> Result<()> {
             "vpu backend: {vpu_flag} (detected hw tier: {})",
             phi_bfs::simd::detect_hw_select().name()
         );
+    }
+    if let Some(mb) = exp.mem_budget_mb {
+        println!("memory budget: {mb} MiB (governed; optional artifacts shed under pressure)");
     }
     if exp.batch_roots > 1 {
         println!(
@@ -209,6 +226,18 @@ fn cmd_run(args: &Args) -> Result<()> {
              {cancelled} cancelled; partial visited prefixes kept)",
             s.interrupted_excluded
         );
+    }
+    if !report.pressure.is_empty() {
+        println!(
+            "memory pressure: {} optional artifact(s) skipped to stay under budget:",
+            report.pressure.len()
+        );
+        for p in &report.pressure {
+            println!(
+                "  - {} ({} B requested; ledger {} / {} B)",
+                p.artifact, p.requested_bytes, p.ledger_bytes, p.budget_bytes
+            );
+        }
     }
     let warmup_roots = report.runs.iter().filter(|r| r.counted_warmup).count();
     if s.counted_warmup_excluded > 0 {

@@ -260,6 +260,115 @@ fn interrupted_prefixes_agree_with_the_serial_oracle_on_every_engine() {
     }
 }
 
+/// The three resource-pressure outcomes, driven deterministically by the
+/// synthetic `MemoryPressure` fault and exact pre-computed footprints:
+/// **degrade** (optional artifact skipped with a structured event, the job
+/// completes oracle-exact), **structural shed** (`OverBudget` — the
+/// footprint can never fit), and **transient shed** (`Rejected` with a
+/// retry hint — the budget is full right now, and the identical job is
+/// admitted once the pressure lifts).
+#[test]
+fn memory_pressure_drives_degrade_shed_and_reject_deterministically() {
+    use phi_bfs::bfs::footprint::planned_sell_bytes;
+    use phi_bfs::coordinator::governor::estimate_working_set;
+    use phi_bfs::coordinator::AdmissionPolicy;
+    use phi_bfs::graph::stats::DegreeStats;
+
+    let g = graph(9, 21);
+    let roots: Vec<Vertex> = vec![0, 1];
+    let stats = DegreeStats::compute(&g);
+    let sell = planned_sell_bytes(&g, stats.suggested_sigma());
+    let ws = estimate_working_set(&stats, roots.len(), 1);
+
+    // Outcome 1 — degrade. Synthetic pressure sized so the ledger lands
+    // exactly on the high watermark after the mandatory SELL build: the
+    // optional padded-CSR view is refused, the job still completes.
+    let budget = 4usize << 20;
+    let coordinator = Coordinator::with_limits(1, Some(budget), AdmissionPolicy::default());
+    let high = coordinator.governor().high_watermark();
+    let mut j = job(&g, EngineKind::parse("sell", 2, "artifacts").unwrap(), roots.clone());
+    j.run.fault = Some(FaultPlan::memory_pressure(high - sell - ws));
+    let out = coordinator.run_job(&j).unwrap();
+    assert!(out.all_valid, "degraded jobs must still validate");
+    assert_eq!(out.failures().count(), 0);
+    assert!(
+        out.pressure.iter().any(|p| p.artifact == "padded-csr"),
+        "the padded-CSR skip must be reported, got {:?}",
+        out.pressure
+    );
+    for (i, o) in out.outcomes.iter().enumerate() {
+        let r = o.run().expect("admitted roots all run");
+        let reach =
+            oracle_distances(&g, roots[i]).iter().filter(|&&d| d != u32::MAX).count();
+        assert_eq!(r.status(), RunStatus::Complete);
+        assert_eq!(r.reached, reach, "root {}: admitted runs stay oracle-exact", roots[i]);
+    }
+    assert_eq!(coordinator.metrics().snapshot().jobs_shed, 0, "degrade is not a shed");
+
+    // Outcome 2 — structural shed. A budget the working set alone can
+    // never fit: the job is refused before any allocation, with the
+    // footprint arithmetic in the error.
+    let coordinator = Coordinator::with_limits(1, Some(1024), AdmissionPolicy::default());
+    let j = job(&g, EngineKind::SerialLayered, roots.clone());
+    match coordinator.run_job(&j) {
+        Err(CoordinatorError::OverBudget { detail }) => {
+            assert!(detail.contains("exceeds"), "footprint arithmetic missing: {detail}");
+        }
+        other => panic!("expected OverBudget, got {other:?}"),
+    }
+    let m = coordinator.metrics().snapshot();
+    assert_eq!((m.jobs, m.jobs_shed), (0, 1), "shed jobs never pollute the aggregates");
+    assert_eq!(m.roots, 0);
+
+    // Outcome 3 — transient shed. The same job under a full ledger is
+    // rejected with a retry hint; with the pressure lifted it is admitted
+    // and completes.
+    let coordinator = Coordinator::with_limits(1, Some(1 << 20), AdmissionPolicy::default());
+    let mut j = job(&g, EngineKind::SerialLayered, roots.clone());
+    j.run.fault = Some(FaultPlan::memory_pressure(usize::MAX));
+    match coordinator.run_job(&j) {
+        Err(CoordinatorError::Rejected { retry_after_hint }) => {
+            assert!(retry_after_hint > Duration::ZERO, "the hint must be actionable");
+        }
+        other => panic!("expected Rejected, got {other:?}"),
+    }
+    assert_eq!(coordinator.metrics().snapshot().jobs_shed, 1);
+    let j = job(&g, EngineKind::SerialLayered, roots);
+    let out = coordinator.run_job(&j).unwrap();
+    assert!(out.all_valid, "the identical job is admitted once pressure lifts");
+    let m = coordinator.metrics().snapshot();
+    assert_eq!((m.jobs, m.jobs_shed), (1, 1));
+}
+
+/// Retries back off: under a sticky panic, a root exhausting 5 attempts
+/// pauses before attempts 2..=5 with exponentially growing, jittered
+/// sleeps (2·2^k ms, jitter ≥ 0.5×) — so the job's wall time has a hard
+/// floor of 0.5×(2+4+8+16) = 15 ms even though each traversal is
+/// microseconds. The ceiling stays modest: the cap and the jitter bound
+/// the total at well under a second.
+#[test]
+fn retry_ladder_spaces_attempts_with_backoff() {
+    let g = graph(8, 12);
+    let coordinator = Coordinator::new(1);
+    let mut j = job(&g, EngineKind::SerialLayered, vec![0]);
+    j.run.fault = Some(FaultPlan::sticky_panic_at(0));
+    j.run.max_attempts = 5;
+    let t0 = Instant::now();
+    let out = coordinator.run_job(&j).unwrap();
+    let elapsed = t0.elapsed();
+
+    assert_eq!(out.failures().count(), 1, "a sticky panic exhausts the ladder");
+    assert_eq!(coordinator.metrics().snapshot().root_retries, 4);
+    assert!(
+        elapsed >= Duration::from_millis(14),
+        "4 retries must be spaced by backoff, ran in {elapsed:?}"
+    );
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "backoff must stay bounded by the cap, took {elapsed:?}"
+    );
+}
+
 /// Deadlines bound wall time: a job that would happily run much longer is
 /// cut off close to its deadline (generous bound — CI machines are noisy),
 /// and still yields an outcome for every root.

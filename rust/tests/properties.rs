@@ -11,16 +11,22 @@
 //! * CSR construction round-trips arbitrary edge lists;
 //! * bitmap word/bit views agree under arbitrary operation sequences.
 
+use std::sync::Arc;
+
 use phi_bfs::bfs::bitrace_free::{restore_layer, BitRaceFreeBfs};
+use phi_bfs::bfs::footprint::{planned_padded_bytes, planned_sell_bytes};
 use phi_bfs::bfs::parallel::ParallelBfs;
 use phi_bfs::bfs::policy::LayerPolicy;
-use phi_bfs::bfs::sell_vectorized::SellBfs;
+use phi_bfs::bfs::sell_vectorized::{SellBfs, SIGMA_AUTO};
 use phi_bfs::bfs::serial::{SerialLayeredBfs, SerialQueueBfs};
 use phi_bfs::bfs::state::{SharedBitmap, SharedPred};
 use phi_bfs::bfs::validate::validate;
 use phi_bfs::bfs::vectorized::{restore_layer_simd, SimdOpts, VectorizedBfs};
-use phi_bfs::bfs::BfsEngine;
+use phi_bfs::bfs::{BfsEngine, HeapFootprint};
 use phi_bfs::coordinator::engine::{make_engine, EngineKind};
+use phi_bfs::coordinator::{
+    AdmissionPolicy, BatchPolicy, BfsJob, Coordinator, CoordinatorError, RunPolicy,
+};
 use phi_bfs::graph::{Bitmap, Csr, EdgeList, RmatConfig};
 use phi_bfs::prop::{forall, Gen};
 use phi_bfs::simd::{ops::Vpu, VpuMode};
@@ -368,6 +374,106 @@ fn prop_hub_bitmap_preserves_distances_and_cuts_stream_reads() {
         strict_seen.load(Ordering::Relaxed),
         "hub bitmap never skipped an adjacency read on any hub-rooted RMAT case"
     );
+}
+
+#[test]
+fn prop_governed_ledger_is_bounded_and_reconciles_exactly() {
+    // The resource-governance invariants, across every registered engine,
+    // several scales, and budgets from hopeless to comfortable:
+    //
+    // 1. **Bounded** — the byte ledger never exceeds the budget at any
+    //    observation point: every mid-run pressure event records a ledger
+    //    reading within the budget (charges are refuse-not-exceed CAS
+    //    updates), and after the job the ledger holds at most the budget.
+    // 2. **Exact** — the post-job ledger reconciles to the byte with the
+    //    retained artifacts' `heap_bytes()`, which in turn matches the
+    //    pre-build planning oracle for everything that was built.
+    // 3. **Correct** — admitted jobs produce five-check-validated trees;
+    //    jobs that cannot fit shed structurally (OverBudget / Rejected)
+    //    with nothing left charged and nothing counted as completed.
+    forall("governed ledger bounded, exact, and correct", 4, |g| {
+        let scale = g.size(8, 10) as u32;
+        let seed = g.size(0, 1 << 16) as u64;
+        let el = RmatConfig::graph500(scale, 8).generate(seed);
+        let csr = Arc::new(Csr::from_edge_list(scale, &el));
+        let root = g.size(0, csr.num_vertices() - 1) as Vertex;
+        let budget = *g.choose(&[1usize << 12, 1 << 21, 1 << 26]);
+        for name in EngineKind::NATIVE_NAMES {
+            let kind = EngineKind::parse(name, 2, "artifacts").unwrap();
+            let coordinator =
+                Coordinator::with_limits(2, Some(budget), AdmissionPolicy::default());
+            let governor = Arc::clone(coordinator.governor());
+            let job = BfsJob {
+                id: seed,
+                graph: Arc::clone(&csr),
+                roots: vec![root],
+                engine: kind.clone(),
+                validate: true,
+                batch: BatchPolicy::PerRoot,
+                run: RunPolicy::default(),
+            };
+            match coordinator.run_job(&job) {
+                Ok(out) => {
+                    assert!(out.all_valid, "{name}: admitted roots must validate");
+                    assert_eq!(out.failures().count(), 0, "{name}: no lost roots");
+                    let retained = out.artifacts.heap_bytes();
+                    assert!(
+                        governor.used() <= budget,
+                        "{name}: ledger {} exceeds budget {budget}",
+                        governor.used()
+                    );
+                    assert_eq!(
+                        governor.used(),
+                        retained,
+                        "{name}: ledger must reconcile with retained artifact bytes"
+                    );
+                    // the allocation oracle: whatever was built must cost
+                    // exactly what the pre-build planners predicted
+                    let stats = out.artifacts.stats(&csr);
+                    let mut oracle = 0usize;
+                    if out.artifacts.built_sell().is_some() {
+                        let sigma = match kind.sigma_key() {
+                            SIGMA_AUTO => stats.suggested_sigma(),
+                            s => s,
+                        };
+                        oracle += planned_sell_bytes(&csr, sigma);
+                    }
+                    if out.artifacts.built_padded().is_some() {
+                        oracle += planned_padded_bytes(&csr);
+                    }
+                    if let Some(h) = out.artifacts.built_hub() {
+                        oracle += h.heap_bytes();
+                    }
+                    if let Some(c) = out.artifacts.built_components() {
+                        oracle += c.heap_bytes();
+                    }
+                    assert_eq!(
+                        retained, oracle,
+                        "{name}: retained bytes diverge from the planning oracle \
+                         (scale={scale}, seed={seed}, budget={budget})"
+                    );
+                    // mid-run observation points: pressure events carry
+                    // in-budget ledger readings and the real budget
+                    for p in &out.pressure {
+                        assert!(p.requested_bytes > 0, "{name}: {p:?}");
+                        assert!(p.ledger_bytes <= budget, "{name}: {p:?}");
+                        assert_eq!(p.budget_bytes, budget, "{name}: {p:?}");
+                    }
+                }
+                Err(CoordinatorError::OverBudget { .. } | CoordinatorError::Rejected { .. }) => {
+                    assert_eq!(
+                        governor.used(),
+                        0,
+                        "{name}: a shed job must leave nothing charged"
+                    );
+                    let m = coordinator.metrics().snapshot();
+                    assert_eq!(m.jobs, 0, "{name}: shed jobs never count as completed");
+                    assert!(m.jobs_shed >= 1, "{name}: shedding must be counted");
+                }
+                Err(e) => panic!("{name}: unexpected error {e}"),
+            }
+        }
+    });
 }
 
 #[test]
