@@ -56,6 +56,16 @@
 //!    pressure events and zero shed jobs asserted always. Writes
 //!    `BENCH_robustness.json` (override with
 //!    `PHIBFS_BENCH_ROBUSTNESS_JSON`), archived by CI with the others.
+//! 11. **Serving under offered load** — the `phi-bfs serve` daemon on a
+//!    loopback port, closed-loop client sweeps at 1 / 4 / 16 concurrent
+//!    clients against a fixed batch width of 16: p50/p99 request latency,
+//!    mean batch fill, and aggregate TEPS per offered load. Shows the
+//!    batching win the daemon exists for — independent clients accumulate
+//!    into MS-BFS-shaped waves, so fill (and per-wave amortization) rises
+//!    with offered load while the deadline bound caps added latency.
+//!    Asserts no request fails and fill is monotone from 1 to 16 clients.
+//!    Writes `BENCH_serving.json` (override with
+//!    `PHIBFS_BENCH_SERVING_JSON`), archived by CI with the others.
 //!
 //! Pass `--smoke` (CI) for a down-scaled run of every section.
 
@@ -80,6 +90,7 @@ use phi_bfs::harness::report::{mteps, Table};
 use phi_bfs::phi::cost::CostParams;
 use phi_bfs::phi::sim::predict_with_helpers;
 use phi_bfs::phi::{predict, Affinity, KncParams, WorkTrace};
+use phi_bfs::serve::{ServeClient, ServeOptions, Server};
 use phi_bfs::simd::{detect_hw_select, VpuCounters, VpuMode};
 use phi_bfs::Vertex;
 
@@ -956,4 +967,115 @@ fn main() {
     std::fs::write(&robustness_json_path, &robustness_json)
         .unwrap_or_else(|e| panic!("writing {robustness_json_path}: {e}"));
     println!("wrote {robustness_json_path}");
+
+    // offered-load sweep: the same daemon configuration (width-16 waves,
+    // a tight accumulation deadline) under 1 / 4 / 16 closed-loop
+    // clients. One client can never fill a wave (every request flushes
+    // by deadline, fill = 1); 16 clients keep the accumulator fed, so
+    // waves leave by width and the MS engine amortizes one shared
+    // traversal across them — fill and aggregate TEPS rise with load
+    // while the deadline bound caps the latency a lone request pays.
+    let serve_scale: u32 = if smoke { 9 } else { env_param("PHIBFS_SERVE_SCALE", 12) };
+    let reqs_per_client: usize = if smoke { 8 } else { 32 };
+    section(&format!(
+        "Ablation 11 — serving under offered load (SCALE {serve_scale}, width-16 waves)"
+    ));
+    let serve_engine = EngineKind::parse("hybrid-sell-ms", 2, "artifacts").expect("engine");
+    struct ServeRow {
+        clients: usize,
+        requests: u64,
+        p50_ms: f64,
+        p99_ms: f64,
+        batch_fill: f64,
+        aggregate_teps: f64,
+    }
+    let mut serve_rows: Vec<ServeRow> = Vec::new();
+    for clients in [1usize, 4, 16] {
+        let mut opts = ServeOptions::new(serve_engine.clone());
+        opts.port = 0;
+        opts.batch_width = 16;
+        opts.batch_deadline = std::time::Duration::from_millis(5);
+        opts.workers = 2;
+        let server = Server::bind(opts).expect("bind loopback daemon");
+        let addr = server.addr().to_string();
+        let daemon = std::thread::spawn(move || server.wait());
+        let gid = ServeClient::connect(&addr)
+            .expect("connect")
+            .load(&format!("rmat:{serve_scale}:16:1"), None)
+            .expect("load");
+        let vertices = 1usize << serve_scale;
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let (addr, gid) = (addr.clone(), gid.clone());
+                std::thread::spawn(move || {
+                    let mut cl = ServeClient::connect(&addr).expect("connect");
+                    for j in 0..reqs_per_client {
+                        let root = ((c * reqs_per_client + j) * 11 % vertices) as Vertex;
+                        let reply = cl.bfs(&gid, root, None).expect("transport");
+                        assert!(reply.starts_with("OK BFS"), "request failed: {reply}");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("client thread");
+        }
+        ServeClient::connect(&addr).expect("connect").shutdown().expect("shutdown");
+        let snap = daemon.join().expect("daemon thread");
+        let expected = (clients * reqs_per_client) as u64;
+        assert_eq!(snap.failed, 0, "{clients} clients: requests failed: {snap}");
+        assert_eq!(snap.ok, expected, "{clients} clients: lost replies: {snap}");
+        serve_rows.push(ServeRow {
+            clients,
+            requests: expected,
+            p50_ms: snap.p50_ms,
+            p99_ms: snap.p99_ms,
+            batch_fill: snap.batch_fill,
+            aggregate_teps: snap.coordinator.aggregate_teps,
+        });
+    }
+    let mut t = Table::new(&["clients", "requests", "p50 ms", "p99 ms", "batch fill", "agg TEPS"]);
+    for r in &serve_rows {
+        t.row(&[
+            r.clients.to_string(),
+            r.requests.to_string(),
+            format!("{:.3}", r.p50_ms),
+            format!("{:.3}", r.p99_ms),
+            format!("{:.2}", r.batch_fill),
+            mteps(r.aggregate_teps),
+        ]);
+    }
+    print!("{}", t.render());
+    // one closed-loop client can only ever offer one pending request, so
+    // its fill is exactly 1; a full client complement must do better
+    assert!(
+        serve_rows[2].batch_fill >= serve_rows[0].batch_fill,
+        "batch fill must not shrink with offered load: {:.2} @16 vs {:.2} @1",
+        serve_rows[2].batch_fill,
+        serve_rows[0].batch_fill
+    );
+    let serving_json_path = std::env::var("PHIBFS_BENCH_SERVING_JSON")
+        .unwrap_or_else(|_| "BENCH_serving.json".into());
+    let serve_configs: Vec<String> = serve_rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"clients\":{},\"requests\":{},\"p50_ms\":{:.3},\"p99_ms\":{:.3},\
+                 \"batch_fill\":{:.3},\"aggregate_teps\":{:.1}}}",
+                r.clients, r.requests, r.p50_ms, r.p99_ms, r.batch_fill, r.aggregate_teps
+            )
+        })
+        .collect();
+    let serving_json = format!(
+        "{{\"bench\":\"serving\",\"scale\":{},\"edgefactor\":16,\"smoke\":{},\
+         \"engine\":\"hybrid-sell-ms\",\"batch_width\":16,\"batch_deadline_ms\":5,\
+         \"reqs_per_client\":{},\"configs\":[{}]}}\n",
+        serve_scale,
+        smoke,
+        reqs_per_client,
+        serve_configs.join(",")
+    );
+    std::fs::write(&serving_json_path, &serving_json)
+        .unwrap_or_else(|e| panic!("writing {serving_json_path}: {e}"));
+    println!("wrote {serving_json_path}");
 }

@@ -155,6 +155,29 @@ COMMANDS:
                --engine ... (simd) --threads N (4) --bc-sources N (32)
                --batch-roots N (1)  seeds per component-sweep batch
                         (betweenness always batches its sources)
+    serve      BFS-as-a-service daemon: newline-delimited text protocol
+               (LOAD <path|rmat:S:EF:SEED> [sigma] / BFS <gid> <root>
+               [deadline-ms] / STATS / SHUTDOWN), one reply line per
+               request. BFS requests accumulate per graph and flush as a
+               wave at --batch-width or at the oldest request's deadline
+               margin, whichever first; SHUTDOWN drains pending waves
+               before exit and prints a stats summary.
+               --host ADDR (127.0.0.1) --port N (0 = ephemeral)
+               --engine NAME (hybrid-sell-ms) --threads N (4)
+               --workers N (2)  coordinator workers per wave
+               --dispatchers N (2)  concurrent waves in traversal
+               --batch-width N (16)  roots per width-triggered wave
+               --batch-deadline-ms N (10)  max accumulation wait
+               --max-attempts N (3)  per-root retries; also bounds wave
+                        re-submissions after admission-control rejections
+               --mem-budget-mb N (unbounded) --max-inflight N (unbounded)
+               --fault-reject-waves N (0)  chaos: shed the first N waves
+                        as Rejected to exercise the retry path (needs
+                        --mem-budget-mb)
+    client     One-shot driver for a running serve daemon (CI smoke)
+               --addr HOST:PORT (required)
+               --send \"CMD;CMD;...\"  request lines, ';'-separated,
+                        sent in order; each reply line is printed
     info       Print artifact manifest + PJRT platform
                --artifacts DIR (artifacts)
     help       This text

@@ -7,7 +7,7 @@ use super::engine::EngineKind;
 use super::fault::FaultPlan;
 use super::governor::ResourcePressure;
 use crate::bfs::validate::ValidationReport;
-use crate::bfs::{GraphArtifacts, RunControl, RunStatus, RunTrace};
+use crate::bfs::{BfsTree, GraphArtifacts, RunControl, RunStatus, RunTrace};
 use crate::graph::Csr;
 use crate::Vertex;
 
@@ -66,11 +66,62 @@ pub struct RunPolicy {
     pub max_attempts: usize,
     /// Chaos-harness fault to inject ([`FaultPlan`]); `None` in production.
     pub fault: Option<FaultPlan>,
+    /// Digest each root's distance vector into a [`DepthSummary`] on
+    /// [`RootRun::depths`]. Off by default — the harness compares whole
+    /// trees itself — and switched on by serving callers
+    /// ([`BfsJob::wave`]) that need a compact per-request answer without
+    /// shipping the tree out of the coordinator.
+    pub report_depths: bool,
 }
 
 impl Default for RunPolicy {
     fn default() -> Self {
-        RunPolicy { deadline: None, control: None, max_attempts: 3, fault: None }
+        RunPolicy {
+            deadline: None,
+            control: None,
+            max_attempts: 3,
+            fault: None,
+            report_depths: false,
+        }
+    }
+}
+
+/// Compact digest of one root's BFS distance vector: the eccentricity of
+/// the root within its component plus an order-sensitive FNV-1a checksum
+/// of the full `u32` distance array (unreached = `u32::MAX` sentinel
+/// included). Two traversals agree on every per-vertex depth iff their
+/// summaries are equal, so a serving client can verify a reply against an
+/// oracle without transferring |V| distances.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DepthSummary {
+    /// Deepest BFS layer reached (0 for an isolated root; the unreached
+    /// sentinel never counts).
+    pub max_depth: u32,
+    /// FNV-1a over the little-endian bytes of the distance vector.
+    pub checksum: u64,
+}
+
+impl DepthSummary {
+    /// Digest a distance vector (`u32::MAX` = unreached).
+    pub fn from_distances(dist: &[u32]) -> Self {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut max_depth = 0u32;
+        for &d in dist {
+            for b in d.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+            if d != u32::MAX && d > max_depth {
+                max_depth = d;
+            }
+        }
+        DepthSummary { max_depth, checksum: h }
+    }
+
+    /// Digest a BFS tree's distances; `None` when the tree's predecessor
+    /// chains do not resolve (a corrupt tree never digests).
+    pub fn from_tree(tree: &BfsTree) -> Option<Self> {
+        tree.distances().map(|d| Self::from_distances(&d))
     }
 }
 
@@ -87,6 +138,41 @@ pub struct BfsJob {
     pub validate: bool,
     pub batch: BatchPolicy,
     pub run: RunPolicy,
+}
+
+impl BfsJob {
+    /// A serving wave: one externally-accumulated batch of roots traversed
+    /// as a single [`BatchPolicy::Fixed`] group (the MS-BFS wave shape),
+    /// with depth digests reported per root and no validation — the
+    /// serving layer checks replies against its own oracle, not per wave.
+    /// `deadline` is the tightest remaining budget among the wave's
+    /// requests; `control` lets the caller cancel the whole wave.
+    pub fn wave(
+        id: u64,
+        graph: Arc<Csr>,
+        roots: Vec<Vertex>,
+        engine: EngineKind,
+        deadline: Option<Duration>,
+        control: Option<Arc<RunControl>>,
+        max_attempts: usize,
+    ) -> Self {
+        let width = roots.len().max(1);
+        BfsJob {
+            id,
+            graph,
+            roots,
+            engine,
+            validate: false,
+            batch: BatchPolicy::Fixed(width),
+            run: RunPolicy {
+                deadline,
+                control,
+                max_attempts,
+                report_depths: true,
+                ..RunPolicy::default()
+            },
+        }
+    }
 }
 
 /// Result of one root's traversal.
@@ -121,6 +207,11 @@ pub struct RootRun {
     pub counted_warmup: bool,
     /// Validation report (None when the job ran with validate=false).
     pub validation: Option<ValidationReport>,
+    /// Distance-vector digest, present when the job's
+    /// [`RunPolicy::report_depths`] asked for one and the tree resolved
+    /// (interrupted prefixes still digest — the digest then covers the
+    /// partial distances).
+    pub depths: Option<DepthSummary>,
 }
 
 impl RootRun {
@@ -251,6 +342,7 @@ mod tests {
             trace: RunTrace::default(),
             counted_warmup: false,
             validation: None,
+            depths: None,
         };
         assert_eq!(r.teps(), 0.0);
     }
@@ -266,7 +358,34 @@ mod tests {
             trace: RunTrace::default(),
             counted_warmup: false,
             validation: None,
+            depths: None,
         };
         assert_eq!(r.teps(), 2_000_000.0);
+    }
+
+    #[test]
+    fn depth_summary_digests_distances() {
+        let a = DepthSummary::from_distances(&[0, 1, 2, u32::MAX]);
+        let b = DepthSummary::from_distances(&[0, 1, 2, u32::MAX]);
+        assert_eq!(a, b, "the digest is deterministic");
+        assert_eq!(a.max_depth, 2, "the unreached sentinel is not a depth");
+        let c = DepthSummary::from_distances(&[0, 1, 3, u32::MAX]);
+        assert_ne!(a.checksum, c.checksum, "one changed depth changes the checksum");
+        // order sensitivity: same multiset of depths, different vertices
+        let d = DepthSummary::from_distances(&[0, 2, 1, u32::MAX]);
+        assert_ne!(a.checksum, d.checksum);
+        assert_eq!(DepthSummary::from_distances(&[]).max_depth, 0);
+    }
+
+    #[test]
+    fn wave_constructor_sets_serving_policy() {
+        let el = crate::graph::RmatConfig::graph500(7, 8).generate(5);
+        let g = Arc::new(Csr::from_edge_list(7, &el));
+        let j = BfsJob::wave(9, g, vec![0, 1, 2], EngineKind::SerialLayered, None, None, 2);
+        assert_eq!(j.id, 9);
+        assert_eq!(j.batch, BatchPolicy::Fixed(3), "one batch spanning the whole wave");
+        assert!(j.run.report_depths);
+        assert!(!j.validate);
+        assert_eq!(j.run.max_attempts, 2);
     }
 }

@@ -92,6 +92,39 @@ pub struct MetricsSnapshot {
     pub pressure_events: usize,
 }
 
+impl std::fmt::Display for MetricsSnapshot {
+    /// One `key=value` line — the single rendering shared by the serve
+    /// daemon's `STATS` reply and shutdown summary and the CLI's
+    /// end-of-run print, so the three never drift apart.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "jobs={} roots={} batches={} edges={} traversal_s={:.3} prep_s={:.3} \
+             teps={:.3e} cache_hits={} cache_content_hits={} cache_evictions={} \
+             cache_bytes={} bytes_evicted={} worker_panics={} root_retries={} \
+             degraded_roots={} failed_roots={} jobs_shed={} pressure_events={}",
+            self.jobs,
+            self.roots,
+            self.batches,
+            self.edges_traversed,
+            self.total_seconds,
+            self.preparation_seconds,
+            self.aggregate_teps,
+            self.artifact_cache_hits,
+            self.artifact_cache_content_hits,
+            self.artifact_cache_evictions,
+            self.cache_bytes,
+            self.bytes_evicted,
+            self.worker_panics,
+            self.root_retries,
+            self.degraded_roots,
+            self.failed_roots,
+            self.jobs_shed,
+            self.pressure_events,
+        )
+    }
+}
+
 impl Metrics {
     /// Record one completed job's successful runs (failed roots are
     /// recorded separately via [`Metrics::record_failed_root`], so the
@@ -215,6 +248,7 @@ mod tests {
             trace: RunTrace::default(),
             counted_warmup: false,
             validation: None,
+            depths: None,
         }
     }
 
@@ -307,6 +341,19 @@ mod tests {
         // the gauge overwrites rather than accumulates
         m.set_cache_bytes(100);
         assert_eq!(m.snapshot().cache_bytes, 100);
+    }
+
+    #[test]
+    fn snapshot_renders_one_line_of_key_values() {
+        let m = Metrics::default();
+        m.record_job(&[&run(100, 0.5)], 0.25, 1);
+        m.record_job_shed();
+        let line = m.snapshot().to_string();
+        assert!(!line.contains('\n'), "one line, embeddable in a protocol reply");
+        let keys = ["jobs=1", "roots=1", "edges=100", "jobs_shed=1", "teps=", "cache_hits=0"];
+        for key in keys {
+            assert!(line.contains(key), "{line:?} missing {key}");
+        }
     }
 
     #[test]

@@ -42,5 +42,6 @@ pub use engine::{make_engine, EngineKind};
 pub use error::CoordinatorError;
 pub use fault::{FaultInjector, FaultKind, FaultPlan};
 pub use governor::{AdmissionPolicy, LedgerHold, ResourceGovernor, ResourcePressure};
-pub use job::{BatchPolicy, BfsJob, JobOutcome, RootOutcome, RootRun, RunPolicy};
-pub use scheduler::Coordinator;
+pub use job::{BatchPolicy, BfsJob, DepthSummary, JobOutcome, RootOutcome, RootRun, RunPolicy};
+pub use metrics::MetricsSnapshot;
+pub use scheduler::{retry_backoff, Coordinator};

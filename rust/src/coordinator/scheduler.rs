@@ -104,13 +104,19 @@ const RETRY_BACKOFF_BASE: Duration = Duration::from_millis(2);
 const RETRY_BACKOFF_CAP: Duration = Duration::from_millis(50);
 
 /// Backoff before retry `attempt` of a root (the ladder calls this with
-/// `attempt` ≥ 2, so attempt 2 pauses around [`RETRY_BACKOFF_BASE`]).
-/// Jittered by a uniform factor in [0.5, 1.5) so coordinators retrying a
-/// contended resource do not stampede in lockstep; truncated to the
-/// control's remaining deadline and skipped entirely once the control
-/// already says stop — a retry must never sleep through the time budget
-/// it is trying to beat.
-fn retry_backoff(attempt: usize, rng: &mut Xoshiro256, ctl: &RunControl) -> Duration {
+/// `attempt` ≥ 2, so attempt 2 pauses around `RETRY_BACKOFF_BASE`,
+/// 2 ms). Jittered by a uniform factor in [0.5, 1.5) so coordinators
+/// retrying a contended resource do not stampede in lockstep; truncated
+/// to the control's remaining deadline and skipped entirely once the
+/// control already says stop — a retry must never sleep through the time
+/// budget it is trying to beat.
+///
+/// Public because every caller that re-submits a
+/// [`CoordinatorError::Rejected`] job (the serve dispatcher, the
+/// harness's one-shot path) spaces its attempts with the same schedule,
+/// taking the larger of this backoff and the rejection's
+/// `retry_after_hint`.
+pub fn retry_backoff(attempt: usize, rng: &mut Xoshiro256, ctl: &RunControl) -> Duration {
     if ctl.stop_reason().is_some() {
         return Duration::ZERO;
     }
@@ -361,6 +367,11 @@ impl Coordinator {
     ) -> RootRun {
         let validation = (job.validate && r.trace.status.is_complete())
             .then(|| validate(&job.graph, &r.tree));
+        let depths = if job.run.report_depths {
+            super::job::DepthSummary::from_tree(&r.tree)
+        } else {
+            None
+        };
         RootRun {
             root,
             // Graph500 TEPS: undirected edges of the
@@ -372,6 +383,7 @@ impl Coordinator {
             counted_warmup: r.trace.counted_warmup,
             trace: r.trace,
             validation,
+            depths,
         }
     }
 
@@ -1167,6 +1179,35 @@ mod tests {
         assert_eq!(c.governor().used(), s2);
         assert_eq!(m.cache_bytes, s2);
         assert!(c.governor().used() <= c.governor().low_watermark());
+    }
+
+    #[test]
+    fn wave_job_reports_depth_summaries() {
+        use crate::coordinator::job::DepthSummary;
+        let el = RmatConfig::graph500(9, 8).generate(60);
+        let g = Arc::new(Csr::from_edge_list(9, &el));
+        let j = BfsJob::wave(
+            7,
+            Arc::clone(&g),
+            vec![0, 1, 2],
+            EngineKind::SerialLayered,
+            None,
+            None,
+            3,
+        );
+        let out = Coordinator::new(2).run_job(&j).unwrap();
+        assert_eq!(out.runs().count(), 3);
+        for r in out.runs() {
+            let d = r.depths.expect("wave jobs digest every root's distances");
+            // the digest agrees with one computed straight from an
+            // independent serial traversal of the same root
+            let oracle = SerialLayeredBfs.run(&g, r.root);
+            assert_eq!(d, DepthSummary::from_tree(&oracle.tree).unwrap(), "root {}", r.root);
+        }
+        // the default policy stays lean: no digests unless asked
+        let plain = job(EngineKind::SerialLayered, vec![0]);
+        let out = Coordinator::new(1).run_job(&plain).unwrap();
+        assert!(out.runs().all(|r| r.depths.is_none()));
     }
 
     #[test]

@@ -7,10 +7,13 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::stats::TepsStats;
+use crate::bfs::RunControl;
 use crate::coordinator::engine::EngineKind;
+use crate::coordinator::error::CoordinatorError;
 use crate::coordinator::governor::{AdmissionPolicy, ResourcePressure};
 use crate::coordinator::job::{BatchPolicy, BfsJob, RootOutcome, RootRun, RunPolicy};
-use crate::coordinator::scheduler::Coordinator;
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::scheduler::{retry_backoff, Coordinator};
 use crate::graph::stats::LayerProfile;
 use crate::graph::{Csr, RmatConfig};
 use crate::rng::Xoshiro256;
@@ -108,7 +111,36 @@ impl Experiment {
             self.mem_budget_mb.map(|mb| mb.saturating_mul(1 << 20)),
             AdmissionPolicy { max_inflight: self.max_inflight },
         );
-        let outcome = coordinator.run_job(&job)?;
+        // a shed job is transient backpressure, not a failure: honor the
+        // coordinator's retry hint (floored by the jittered backoff curve
+        // so concurrent harnesses cannot re-collide in lockstep) for a
+        // bounded number of re-submissions — the serve daemon's
+        // dispatcher applies the same discipline per wave
+        let mut backoff_rng = Xoshiro256::seed_from_u64(self.seed ^ 0x5245_5452); // "RETR"
+        let max_submissions = self.max_attempts.max(1);
+        let mut attempt = 0usize;
+        let outcome = loop {
+            match coordinator.run_job(&job) {
+                Ok(outcome) => break outcome,
+                Err(CoordinatorError::Rejected { retry_after_hint })
+                    if attempt + 1 < max_submissions =>
+                {
+                    attempt += 1;
+                    let pause = retry_after_hint.max(retry_backoff(
+                        attempt + 1,
+                        &mut backoff_rng,
+                        RunControl::unbounded(),
+                    ));
+                    eprintln!(
+                        "harness: job shed by admission control; retrying in {} ms \
+                         (attempt {attempt}/{max_submissions})",
+                        pause.as_millis()
+                    );
+                    std::thread::sleep(pause);
+                }
+                Err(e) => return Err(e.into()),
+            }
+        };
 
         // a benchmark's numbers are meaningless with holes in them: a
         // root that exhausted its retries fails the whole experiment
@@ -128,6 +160,7 @@ impl Experiment {
             outcome.outcomes.into_iter().filter_map(RootOutcome::into_run).collect();
 
         let stats = TepsStats::from_runs(&runs);
+        let coordinator_metrics = coordinator.metrics().snapshot();
         Ok(ExperimentReport {
             scale: self.scale,
             edgefactor: self.edgefactor,
@@ -140,6 +173,7 @@ impl Experiment {
             all_valid,
             pressure,
             stats,
+            coordinator_metrics,
         })
     }
 }
@@ -163,6 +197,10 @@ pub struct ExperimentReport {
     /// still completed on fallback paths.
     pub pressure: Vec<ResourcePressure>,
     pub stats: TepsStats,
+    /// The coordinator's own counters for this experiment, rendered as
+    /// one `key=value` line by its `Display` — the same line the serve
+    /// daemon's `STATS` reply embeds.
+    pub coordinator_metrics: MetricsSnapshot,
 }
 
 impl ExperimentReport {
@@ -248,6 +286,37 @@ mod tests {
         let report = exp.run().unwrap();
         assert!(report.all_valid);
         assert!(report.pressure.is_empty(), "a 64 MiB budget fits a scale-9 graph");
+    }
+
+    #[test]
+    fn rejected_one_shot_run_retries_boundedly_then_fails() {
+        // --max-inflight 0 rejects every submission: the harness honors
+        // the retry hint for max_attempts submissions, then surfaces the
+        // structured rejection instead of hanging forever
+        let mut exp = Experiment::new(7, 8, EngineKind::SerialLayered);
+        exp.num_roots = 2;
+        exp.max_inflight = 0;
+        exp.max_attempts = 2;
+        let t0 = Instant::now();
+        let err = exp.run().expect_err("a zero-inflight cap admits nothing");
+        assert!(
+            err.to_string().contains("rejected by admission control"),
+            "unexpected error: {err:#}"
+        );
+        // one retry happened, and it actually waited for the ~25 ms hint
+        assert!(t0.elapsed() >= Duration::from_millis(20), "retry must back off");
+    }
+
+    #[test]
+    fn report_carries_coordinator_metrics() {
+        let mut exp = Experiment::new(8, 8, EngineKind::SerialLayered);
+        exp.num_roots = 3;
+        let report = exp.run().unwrap();
+        let m = &report.coordinator_metrics;
+        assert_eq!((m.jobs, m.roots), (1, 3));
+        assert!(m.aggregate_teps > 0.0);
+        let line = m.to_string();
+        assert!(line.contains("jobs=1") && line.contains("roots=3"), "{line:?}");
     }
 
     #[test]

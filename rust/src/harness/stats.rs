@@ -152,6 +152,7 @@ mod tests {
             trace: RunTrace::default(),
             counted_warmup: warm,
             validation: None,
+            depths: None,
         };
         // two slow counted warm-ups, two fast hw roots
         let runs = vec![mk(10, true), mk(10, true), mk(1000, false), mk(1000, false)];
@@ -180,6 +181,7 @@ mod tests {
             trace: RunTrace { status, ..RunTrace::default() },
             counted_warmup: false,
             validation: None,
+            depths: None,
         };
         let runs = vec![
             mk(1000, RunStatus::Complete),

@@ -45,6 +45,9 @@
 //! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas layer
 //!   step (`artifacts/*.hlo.txt`) and executes it from Rust.
 //! * [`coordinator`] — the L3 driver: BFS job queue, scheduler, engines.
+//! * [`serve`] — BFS-as-a-service: the `phi-bfs serve` daemon with
+//!   deadline-aware batching (independent clients accumulate into MS-BFS
+//!   waves) and latency telemetry.
 //! * [`benchkit`] / [`prop`] — offline stand-ins for criterion / proptest.
 //!
 //! ## Quickstart
@@ -78,6 +81,7 @@ pub mod phi;
 pub mod prop;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod simd;
 pub mod threads;
 

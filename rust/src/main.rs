@@ -7,7 +7,11 @@
 //!   or the PJRT-compiled kernel.
 //! * `model` — Xeon Phi TEPS predictions for thread/affinity sweeps.
 //! * `table1` — the per-layer traversal profile (paper Table 1).
+//! * `serve` — the BFS-as-a-service daemon (deadline-aware batching).
+//! * `client` — one-shot line-protocol driver for a running daemon.
 //! * `info` — artifact + PJRT platform diagnostics.
+
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -19,6 +23,7 @@ use phi_bfs::graph::{Csr, RmatConfig};
 use phi_bfs::harness::report::{mteps, sci, Table};
 use phi_bfs::harness::runner::Experiment;
 use phi_bfs::phi::{self, Affinity, KncParams};
+use phi_bfs::serve::{ServeClient, ServeOptions, Server};
 
 fn main() {
     let args = match Args::from_env() {
@@ -33,6 +38,8 @@ fn main() {
         "model" => cmd_model(&args),
         "table1" => cmd_table1(&args),
         "analyze" => cmd_analyze(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -261,8 +268,84 @@ fn cmd_run(args: &Args) -> Result<()> {
         sci(s.harmonic_mean_graph500),
         sci(s.harmonic_mean_filtered)
     );
+    println!("coordinator: {}", report.coordinator_metrics);
     if !report.all_valid {
         anyhow::bail!("validation failed");
+    }
+    Ok(())
+}
+
+/// `phi-bfs serve` — bind the daemon and block until a client sends
+/// `SHUTDOWN` (drain-then-exit); the final stats line is the summary.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let threads: usize = args.get("threads", 4)?;
+    let engine_name = args.get_str("engine", "hybrid-sell-ms");
+    let artifacts = args.get_str("artifacts", "artifacts");
+    let engine = EngineKind::parse(&engine_name, threads, &artifacts)?;
+    let mut opts = ServeOptions::new(engine);
+    opts.host = args.get_str("host", &opts.host);
+    opts.port = args.get("port", opts.port)?;
+    opts.workers = args.get("workers", opts.workers)?;
+    opts.dispatchers = args.get("dispatchers", opts.dispatchers)?;
+    opts.batch_width = args.get("batch-width", opts.batch_width)?;
+    if opts.batch_width == 0 {
+        anyhow::bail!("--batch-width must be >= 1");
+    }
+    opts.batch_deadline = Duration::from_millis(args.get("batch-deadline-ms", 10u64)?);
+    opts.max_attempts = args.get("max-attempts", opts.max_attempts)?;
+    if opts.max_attempts == 0 {
+        anyhow::bail!("--max-attempts must be >= 1");
+    }
+    let mem_budget_mb: usize = args.get("mem-budget-mb", 0)?;
+    if args.keys().any(|k| k.as_str() == "mem-budget-mb") && mem_budget_mb == 0 {
+        anyhow::bail!("--mem-budget-mb must be >= 1 (omit the flag for no budget)");
+    }
+    if mem_budget_mb > 0 {
+        opts.mem_budget_mb = Some(mem_budget_mb);
+    }
+    opts.max_inflight = args.get("max-inflight", opts.max_inflight)?;
+    if opts.max_inflight == 0 {
+        anyhow::bail!("--max-inflight must be >= 1");
+    }
+    opts.fault_reject_waves = args.get("fault-reject-waves", 0u64)?;
+    if opts.fault_reject_waves > 0 && opts.mem_budget_mb.is_none() {
+        anyhow::bail!(
+            "--fault-reject-waves needs --mem-budget-mb (an unbounded governor never \
+             sheds, so the injected pressure would be a no-op)"
+        );
+    }
+    println!(
+        "phi-bfs serve: engine={engine_name} workers={} dispatchers={} batch_width={} \
+         batch_deadline_ms={}",
+        opts.workers,
+        opts.dispatchers,
+        opts.batch_width,
+        opts.batch_deadline.as_millis()
+    );
+    let server = Server::bind(opts)?;
+    let snapshot = server.wait();
+    println!("serve: shutdown summary: {snapshot}");
+    Ok(())
+}
+
+/// `phi-bfs client` — send `;`-separated request lines to a running
+/// daemon and print each reply (the CI smoke driver).
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get_str("addr", "");
+    if addr.is_empty() {
+        anyhow::bail!("--addr HOST:PORT is required");
+    }
+    let script = args.get_str("send", "");
+    if script.is_empty() {
+        anyhow::bail!("--send \"CMD;CMD;...\" is required");
+    }
+    let mut client = ServeClient::connect(&addr)?;
+    for line in script.split(';').map(str::trim).filter(|l| !l.is_empty()) {
+        let reply = client.send(line)?;
+        println!("{reply}");
+        if reply.starts_with("ERR ") {
+            anyhow::bail!("request {line:?} failed: {reply}");
+        }
     }
     Ok(())
 }

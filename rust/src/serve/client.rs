@@ -1,0 +1,115 @@
+//! Blocking line-protocol client for `phi-bfs serve`.
+//!
+//! Used by the integration tests, the ablation-11 closed-loop load
+//! generator, and the `phi-bfs client` subcommand (the CI smoke leg's
+//! driver). One request line out, one reply line back — the protocol has
+//! no pipelining, which keeps the client a [`std::net::TcpStream`] and a
+//! [`BufReader`].
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use crate::Vertex;
+
+/// One connection to a serve daemon.
+pub struct ServeClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl ServeClient {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        let writer = stream.try_clone().context("cloning the connection")?;
+        Ok(ServeClient { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one request line, wait for its reply line (trailing newline
+    /// stripped). `Err` means the transport failed, not the request — a
+    /// request-level failure is an `ERR ...` reply.
+    pub fn send(&mut self, line: &str) -> Result<String> {
+        writeln!(self.writer, "{line}").with_context(|| format!("sending {line:?}"))?;
+        self.writer.flush().ok();
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply).context("reading reply")?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        Ok(reply.trim_end().to_string())
+    }
+
+    /// `LOAD` a graph; returns the assigned graph id (e.g. `"g1"`).
+    pub fn load(&mut self, spec: &str, sigma: Option<usize>) -> Result<String> {
+        let line = match sigma {
+            Some(s) => format!("LOAD {spec} {s}"),
+            None => format!("LOAD {spec}"),
+        };
+        let reply = self.send(&line)?;
+        match kv(&reply, "id") {
+            Some(id) if reply.starts_with("OK LOAD") => Ok(id),
+            _ => bail!("LOAD failed: {reply}"),
+        }
+    }
+
+    /// `BFS` — returns the raw reply line (`OK BFS ...` or `ERR ...`).
+    pub fn bfs(&mut self, graph: &str, root: Vertex, deadline_ms: Option<u64>) -> Result<String> {
+        let line = match deadline_ms {
+            Some(ms) => format!("BFS {graph} {root} {ms}"),
+            None => format!("BFS {graph} {root}"),
+        };
+        self.send(&line)
+    }
+
+    pub fn stats(&mut self) -> Result<String> {
+        self.send("STATS")
+    }
+
+    pub fn shutdown(&mut self) -> Result<String> {
+        self.send("SHUTDOWN")
+    }
+}
+
+/// Look up `key=value` in a reply line (exact key, first match).
+pub fn kv(line: &str, key: &str) -> Option<String> {
+    line.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(key)?.strip_prefix('=').map(str::to_string))
+}
+
+/// [`kv`], parsed as a decimal integer.
+pub fn kv_u64(line: &str, key: &str) -> Option<u64> {
+    kv(line, key)?.parse().ok()
+}
+
+/// [`kv`], parsed as a float (handles the `1.234e6` TEPS rendering).
+pub fn kv_f64(line: &str, key: &str) -> Option<f64> {
+    kv(line, key)?.parse().ok()
+}
+
+/// [`kv`], parsed as the 16-hex-digit checksum rendering.
+pub fn kv_hex(line: &str, key: &str) -> Option<u64> {
+    u64::from_str_radix(&kv(line, key)?, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_matches_exact_keys_only() {
+        let line = "OK BFS root=3 reached=512 checksum=00ff00ff00ff00ff p50_ms=1.024";
+        assert_eq!(kv(line, "root").as_deref(), Some("3"));
+        assert_eq!(kv_u64(line, "reached"), Some(512));
+        assert_eq!(kv_hex(line, "checksum"), Some(0x00ff_00ff_00ff_00ff));
+        assert_eq!(kv_f64(line, "p50_ms"), Some(1.024));
+        assert_eq!(kv(line, "p50"), None, "prefix of a key must not match");
+        assert_eq!(kv(line, "missing"), None);
+    }
+
+    #[test]
+    fn kv_parses_scientific_floats() {
+        assert_eq!(kv_f64("teps=1.250e6 x=1", "teps"), Some(1_250_000.0));
+    }
+}

@@ -1,0 +1,292 @@
+//! Serving telemetry: request latency, queue depth, batch fill, and the
+//! embedded coordinator counters — everything `STATS` and the shutdown
+//! summary report.
+//!
+//! Latency is recorded into a fixed array of power-of-two-microsecond
+//! buckets (lock-free atomics, no allocation on the request path), so
+//! p50/p99 are bucket upper bounds: exact enough to steer batching knobs,
+//! cheap enough to sit on every reply.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+use super::queue::FlushTrigger;
+use crate::coordinator::MetricsSnapshot;
+
+/// Latency buckets: bucket `i` holds samples whose microsecond count has
+/// bit-length `i` (range `[2^(i-1), 2^i)` µs; bucket 0 is `< 1 µs`). 40
+/// buckets reach ~2^39 µs ≈ 6 days — every representable request.
+const LATENCY_BUCKETS: usize = 40;
+
+/// Power-of-two-bucket latency histogram.
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; LATENCY_BUCKETS],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&self, latency: Duration) {
+        let micros = latency.as_micros().min(u64::MAX as u128) as u64;
+        let idx = (64 - micros.leading_zeros() as usize).min(LATENCY_BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Upper bound (in ms) of the bucket holding quantile `q` ∈ [0, 1];
+    /// 0.0 while the histogram is empty.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((total as f64) * q).ceil().max(1.0) as u64;
+        let mut cumulative = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cumulative += c;
+            if cumulative >= target {
+                return (1u64 << i.min(53)) as f64 / 1000.0;
+            }
+        }
+        (1u64 << (LATENCY_BUCKETS - 1)) as f64 / 1000.0
+    }
+}
+
+/// Live serving counters (interior-mutable, shared by reference across
+/// connection handlers and dispatchers — same shape as
+/// [`crate::coordinator::metrics::Metrics`]).
+#[derive(Default)]
+pub struct ServeMetrics {
+    /// `BFS` requests accepted into the queue.
+    requests: AtomicU64,
+    /// Requests answered with an `OK BFS` line.
+    ok: AtomicU64,
+    /// Requests answered with an `ERR` line after being enqueued.
+    failed: AtomicU64,
+    /// Requests currently queued or in flight (gauge).
+    queue_depth: AtomicUsize,
+    /// High-water mark of `queue_depth`.
+    queue_peak: AtomicUsize,
+    /// Waves dispatched through the coordinator (successfully).
+    waves: AtomicU64,
+    /// Total roots across dispatched waves (`/ waves` = batch fill).
+    wave_roots: AtomicU64,
+    width_flushes: AtomicU64,
+    deadline_flushes: AtomicU64,
+    drain_flushes: AtomicU64,
+    /// Waves the coordinator shed with `Rejected { retry_after_hint }`.
+    rejected_waves: AtomicU64,
+    /// Re-submissions after a rejected wave backed off.
+    wave_retries: AtomicU64,
+    graphs_loaded: AtomicU64,
+    latency: LatencyHistogram,
+}
+
+impl ServeMetrics {
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let depth = self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.queue_peak.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// A wave of `n` requests left the queue for dispatch.
+    pub fn record_wave_popped(&self, n: usize) {
+        self.queue_depth.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn record_ok(&self, latency: Duration) {
+        self.ok.fetch_add(1, Ordering::Relaxed);
+        self.latency.record(latency);
+    }
+
+    pub fn record_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A wave ran to a coordinator outcome: account its trigger and fill.
+    pub fn record_wave(&self, trigger: FlushTrigger, roots: usize) {
+        self.waves.fetch_add(1, Ordering::Relaxed);
+        self.wave_roots.fetch_add(roots as u64, Ordering::Relaxed);
+        let counter = match trigger {
+            FlushTrigger::Width => &self.width_flushes,
+            FlushTrigger::Deadline => &self.deadline_flushes,
+            FlushTrigger::Drain => &self.drain_flushes,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_rejected_wave(&self) {
+        self.rejected_waves.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_wave_retry(&self) {
+        self.wave_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_graph_loaded(&self) {
+        self.graphs_loaded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time serving snapshot, embedding the coordinator's own
+    /// counters (whose `Display` renders the shared tail of the line).
+    pub fn snapshot(&self, coordinator: MetricsSnapshot) -> ServeSnapshot {
+        let waves = self.waves.load(Ordering::Relaxed);
+        let wave_roots = self.wave_roots.load(Ordering::Relaxed);
+        ServeSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            ok: self.ok.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            p50_ms: self.latency.quantile_ms(0.50),
+            p99_ms: self.latency.quantile_ms(0.99),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            queue_peak: self.queue_peak.load(Ordering::Relaxed),
+            waves,
+            batch_fill: if waves > 0 { wave_roots as f64 / waves as f64 } else { 0.0 },
+            width_flushes: self.width_flushes.load(Ordering::Relaxed),
+            deadline_flushes: self.deadline_flushes.load(Ordering::Relaxed),
+            drain_flushes: self.drain_flushes.load(Ordering::Relaxed),
+            rejected_waves: self.rejected_waves.load(Ordering::Relaxed),
+            wave_retries: self.wave_retries.load(Ordering::Relaxed),
+            graphs_loaded: self.graphs_loaded.load(Ordering::Relaxed),
+            cache_hit_rate: if coordinator.jobs > 0 {
+                (coordinator.artifact_cache_hits as f64 / coordinator.jobs as f64).min(1.0)
+            } else {
+                0.0
+            },
+            coordinator,
+        }
+    }
+}
+
+/// Point-in-time copy of the serving counters; rendered as one
+/// `key=value` line by its `Display` (the `STATS` reply body and the
+/// shutdown summary).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeSnapshot {
+    pub requests: u64,
+    pub ok: u64,
+    pub failed: u64,
+    /// Median request latency (bucket upper bound, ms) — enqueue to reply.
+    pub p50_ms: f64,
+    /// 99th-percentile request latency (bucket upper bound, ms).
+    pub p99_ms: f64,
+    /// Requests queued or in flight right now.
+    pub queue_depth: usize,
+    pub queue_peak: usize,
+    pub waves: u64,
+    /// Mean roots per dispatched wave (the batching win: 16 ≈ every
+    /// gather served a full MS-BFS wave).
+    pub batch_fill: f64,
+    pub width_flushes: u64,
+    pub deadline_flushes: u64,
+    pub drain_flushes: u64,
+    pub rejected_waves: u64,
+    pub wave_retries: u64,
+    pub graphs_loaded: u64,
+    /// Artifact-cache hit rate over coordinator jobs (a warm serving
+    /// steady state sits near 1.0: every wave after a graph's first skips
+    /// preparation).
+    pub cache_hit_rate: f64,
+    /// The embedded coordinator counters (aggregate TEPS lives here).
+    pub coordinator: MetricsSnapshot,
+}
+
+impl std::fmt::Display for ServeSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "requests={} ok={} failed={} p50_ms={:.3} p99_ms={:.3} queue_depth={} \
+             queue_peak={} waves={} batch_fill={:.2} width_flushes={} deadline_flushes={} \
+             drain_flushes={} rejected_waves={} wave_retries={} graphs={} \
+             cache_hit_rate={:.2} | {}",
+            self.requests,
+            self.ok,
+            self.failed,
+            self.p50_ms,
+            self.p99_ms,
+            self.queue_depth,
+            self.queue_peak,
+            self.waves,
+            self.batch_fill,
+            self.width_flushes,
+            self.deadline_flushes,
+            self.drain_flushes,
+            self.rejected_waves,
+            self.wave_retries,
+            self.graphs_loaded,
+            self.cache_hit_rate,
+            self.coordinator,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::Metrics;
+
+    #[test]
+    fn histogram_quantiles_are_bucket_upper_bounds() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile_ms(0.5), 0.0, "empty histogram");
+        // 99 fast samples (~100 µs) + 1 slow (~50 ms)
+        for _ in 0..99 {
+            h.record(Duration::from_micros(100));
+        }
+        h.record(Duration::from_millis(50));
+        let p50 = h.quantile_ms(0.50);
+        let p99 = h.quantile_ms(0.99);
+        // 100 µs has bit-length 7 → bucket bound 2^7 µs = 0.128 ms
+        assert!((p50 - 0.128).abs() < 1e-9, "p50 {p50}");
+        assert!(p50 <= p99, "quantiles are monotone");
+        assert!(p99 < 1.0, "p99 still in the fast buckets (99/100 samples)");
+        assert!(h.quantile_ms(1.0) >= 32.0, "max lands in the ~50 ms bucket");
+    }
+
+    #[test]
+    fn snapshot_aggregates_and_renders() {
+        let m = ServeMetrics::default();
+        for _ in 0..3 {
+            m.record_request();
+        }
+        m.record_wave_popped(2);
+        m.record_ok(Duration::from_millis(1));
+        m.record_ok(Duration::from_millis(4));
+        m.record_failed();
+        m.record_wave(FlushTrigger::Width, 2);
+        m.record_wave(FlushTrigger::Deadline, 1);
+        m.record_rejected_wave();
+        m.record_wave_retry();
+        m.record_graph_loaded();
+        let coord = Metrics::default();
+        let s = m.snapshot(coord.snapshot());
+        assert_eq!((s.requests, s.ok, s.failed), (3, 2, 1));
+        assert_eq!(s.queue_depth, 1);
+        assert_eq!(s.queue_peak, 3);
+        assert_eq!(s.waves, 2);
+        assert!((s.batch_fill - 1.5).abs() < 1e-9);
+        assert_eq!((s.width_flushes, s.deadline_flushes, s.drain_flushes), (1, 1, 0));
+        assert_eq!((s.rejected_waves, s.wave_retries), (1, 1));
+        assert!(s.p50_ms > 0.0 && s.p50_ms <= s.p99_ms);
+        let line = s.to_string();
+        assert!(!line.contains('\n'));
+        let keys = [
+            "requests=3",
+            "ok=2",
+            "failed=1",
+            "p50_ms=",
+            "p99_ms=",
+            "queue_depth=1",
+            "batch_fill=1.50",
+            "cache_hit_rate=",
+            "teps=",
+        ];
+        for key in keys {
+            assert!(line.contains(key), "{line:?} missing {key}");
+        }
+    }
+}

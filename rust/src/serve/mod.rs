@@ -1,0 +1,37 @@
+//! BFS-as-a-service: the `phi-bfs serve` daemon.
+//!
+//! The paper's fastest configurations are *batch* engines — MS-BFS runs
+//! 16 roots per shared traversal, and every prepared engine amortizes
+//! its per-graph layout (SELL-16-σ build, degree stats, compiled
+//! kernels) across roots. A one-shot CLI can only exploit that when the
+//! caller happens to have 16 queries in hand; a daemon can *manufacture*
+//! the batch shape from independent clients. That is this subsystem:
+//!
+//! * [`protocol`] — the newline-delimited text protocol
+//!   (`LOAD`/`BFS`/`STATS`/`SHUTDOWN`, structured `ERR` replies).
+//! * [`queue`] — the deadline-aware batching queue: per-graph
+//!   accumulators that flush at batch width (a full MS-BFS wave) or at
+//!   the oldest request's deadline margin, whichever first.
+//! * [`server`] — the daemon itself: thread-per-connection acceptor,
+//!   dispatcher pool, wave dispatch through the resource-governed
+//!   [`crate::coordinator::Coordinator`] (admission-control rejections
+//!   re-queue after the shed's backpressure hint), drain-then-exit
+//!   shutdown.
+//! * [`metrics`] — serving telemetry: lock-free latency histogram
+//!   (p50/p99), queue depth, batch fill, flush triggers, artifact-cache
+//!   hit rate — the `STATS` reply and the shutdown summary.
+//! * [`client`] — the blocking line-protocol client used by the
+//!   integration tests, the CI smoke driver (`phi-bfs client`), and the
+//!   serving ablation's load generator.
+
+pub mod client;
+pub mod metrics;
+pub mod protocol;
+pub mod queue;
+pub mod server;
+
+pub use client::{kv, kv_f64, kv_hex, kv_u64, ServeClient};
+pub use metrics::{ServeMetrics, ServeSnapshot};
+pub use protocol::{err_line, parse_request, Request};
+pub use queue::{BatchQueue, FlushTrigger, PendingBfs};
+pub use server::{ServeOptions, Server};

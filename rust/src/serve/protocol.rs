@@ -1,0 +1,156 @@
+//! The newline-delimited text protocol `phi-bfs serve` speaks.
+//!
+//! One request per line, one reply line per request, all ASCII:
+//!
+//! ```text
+//! LOAD <path|rmat:SCALE:EF:SEED> [sigma]   → OK LOAD id=gN vertices=V directed_edges=E
+//! BFS <graph-id> <root> [deadline-ms]      → OK BFS root=.. reached=.. edges=.. depth=..
+//!                                            checksum=<16-hex> status=.. wave_width=..
+//!                                            trigger=<width|deadline|drain> latency_ms=..
+//! STATS                                    → OK STATS <ServeSnapshot line>
+//! SHUTDOWN                                 → OK SHUTDOWN draining
+//! ```
+//!
+//! Every failure is a single structured line, `ERR <kind> <detail>`, with
+//! `kind` one of `parse`, `load`, `unknown-graph`, `root-out-of-bounds`,
+//! `rejected`, `over-budget`, `failed`, `shutting-down`, `internal` — so
+//! a client can
+//! dispatch on the kind token without parsing prose (mirroring how the
+//! daemon itself dispatches on [`crate::coordinator::CoordinatorError`]).
+
+use crate::Vertex;
+
+/// Ceiling on a request's `deadline-ms` (one day): keeps
+/// `Instant + Duration` arithmetic far from overflow while allowing any
+/// deadline a real client would set.
+pub const MAX_DEADLINE_MS: u64 = 86_400_000;
+
+/// A parsed request line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    /// `LOAD <spec> [sigma]` — load a graph (binary CSR file, edge-list
+    /// file, or generated `rmat:SCALE:EF:SEED`), optionally with a SELL
+    /// sorting window σ for the engines that take one.
+    Load { spec: String, sigma: Option<usize> },
+    /// `BFS <graph-id> <root> [deadline-ms]` — enqueue one traversal
+    /// request; it joins the graph's accumulating wave.
+    Bfs { graph: String, root: Vertex, deadline_ms: Option<u64> },
+    /// `STATS` — one-line serving snapshot.
+    Stats,
+    /// `SHUTDOWN` — drain pending waves, then exit.
+    Shutdown,
+}
+
+/// Parse one request line. The error string is ready to ship inside an
+/// `ERR parse` reply.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let mut it = line.split_whitespace();
+    let Some(cmd) = it.next() else {
+        return Err("empty request".to_string());
+    };
+    let req = match cmd.to_ascii_uppercase().as_str() {
+        "LOAD" => {
+            let spec = it
+                .next()
+                .ok_or("LOAD needs a graph spec (a file path or rmat:SCALE:EF:SEED)")?
+                .to_string();
+            let sigma = match it.next() {
+                None => None,
+                Some(s) => Some(
+                    s.parse::<usize>()
+                        .map_err(|_| format!("LOAD sigma: cannot parse {s:?}"))?,
+                ),
+            };
+            Request::Load { spec, sigma }
+        }
+        "BFS" => {
+            let graph = it.next().ok_or("BFS needs a graph id (from LOAD)")?.to_string();
+            let root = it.next().ok_or("BFS needs a root vertex")?;
+            let root: Vertex =
+                root.parse().map_err(|_| format!("BFS root: cannot parse {root:?}"))?;
+            let deadline_ms = match it.next() {
+                None => None,
+                Some(s) => {
+                    let ms: u64 = s
+                        .parse()
+                        .map_err(|_| format!("BFS deadline-ms: cannot parse {s:?}"))?;
+                    Some(ms.min(MAX_DEADLINE_MS))
+                }
+            };
+            Request::Bfs { graph, root, deadline_ms }
+        }
+        "STATS" => Request::Stats,
+        "SHUTDOWN" => Request::Shutdown,
+        other => {
+            return Err(format!("unknown command {other:?} (try LOAD/BFS/STATS/SHUTDOWN)"))
+        }
+    };
+    if it.next().is_some() {
+        return Err(format!("trailing arguments after {cmd}"));
+    }
+    Ok(req)
+}
+
+/// Render a structured error reply. `detail` is flattened to one line so
+/// a multi-line error (an anyhow chain, a panic message) can never break
+/// the one-reply-per-line framing.
+pub fn err_line(kind: &str, detail: &str) -> String {
+    let flat: String =
+        detail.chars().map(|c| if c == '\n' || c == '\r' { ' ' } else { c }).collect();
+    format!("ERR {kind} {flat}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_command() {
+        assert_eq!(
+            parse_request("LOAD rmat:10:8:1").unwrap(),
+            Request::Load { spec: "rmat:10:8:1".into(), sigma: None }
+        );
+        assert_eq!(
+            parse_request("LOAD /tmp/g.csr 128").unwrap(),
+            Request::Load { spec: "/tmp/g.csr".into(), sigma: Some(128) }
+        );
+        assert_eq!(
+            parse_request("BFS g1 42").unwrap(),
+            Request::Bfs { graph: "g1".into(), root: 42, deadline_ms: None }
+        );
+        assert_eq!(
+            parse_request("BFS g1 0 250").unwrap(),
+            Request::Bfs { graph: "g1".into(), root: 0, deadline_ms: Some(250) }
+        );
+        assert_eq!(parse_request("STATS").unwrap(), Request::Stats);
+        assert_eq!(parse_request("shutdown").unwrap(), Request::Shutdown, "case-insensitive");
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_request("").is_err());
+        assert!(parse_request("NOPE").is_err());
+        assert!(parse_request("LOAD").is_err(), "missing spec");
+        assert!(parse_request("BFS g1").is_err(), "missing root");
+        assert!(parse_request("BFS g1 notanumber").is_err());
+        assert!(parse_request("BFS g1 0 -5").is_err(), "negative deadline");
+        assert!(parse_request("STATS extra").is_err(), "trailing tokens");
+        assert!(parse_request("LOAD spec 64 extra").is_err());
+    }
+
+    #[test]
+    fn huge_deadlines_clamp() {
+        let r = parse_request(&format!("BFS g1 0 {}", u64::MAX)).unwrap();
+        assert_eq!(
+            r,
+            Request::Bfs { graph: "g1".into(), root: 0, deadline_ms: Some(MAX_DEADLINE_MS) }
+        );
+    }
+
+    #[test]
+    fn err_lines_never_contain_newlines() {
+        let e = err_line("failed", "first\nsecond\r\nthird");
+        assert!(!e.contains('\n') && !e.contains('\r'));
+        assert!(e.starts_with("ERR failed "));
+    }
+}

@@ -1,0 +1,276 @@
+//! The deadline-aware batching queue at the heart of the serve daemon.
+//!
+//! Requests accumulate **per graph** (a wave is one MS-BFS traversal over
+//! one prepared graph, so waves never mix graphs) and a wave flushes when
+//! either condition fires first:
+//!
+//! * **width** — the graph's accumulator reaches the configured batch
+//!   width (16: the MS-BFS wave shape of `hybrid-sell-ms`), or
+//! * **deadline** — the *earliest* `flush_by` instant among pending
+//!   requests passes. Each request's `flush_by` is the enqueue time plus
+//!   the queue-wide batch deadline, tightened to ¾ of the request's own
+//!   deadline budget when it carries one — a request must leave the queue
+//!   with a margin of its budget still in hand for the traversal itself.
+//!
+//! A draining queue ([`BatchQueue::drain`], the `SHUTDOWN` path) refuses
+//! new requests but flushes everything already enqueued as whole
+//! per-graph waves, so in-flight clients always get a reply before the
+//! daemon exits.
+//!
+//! Dispatcher threads block in [`BatchQueue::pop_wave`]; connection
+//! handlers call [`BatchQueue::push`] and then wait on their request's
+//! reply channel. The queue itself never touches a socket or an engine —
+//! it only decides *when* and *with what* a wave runs, which is what the
+//! unit tests below pin down without any networking.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::Vertex;
+
+/// One enqueued `BFS` request, waiting for its wave.
+pub struct PendingBfs {
+    pub root: Vertex,
+    /// Absolute deadline of the *request* (None = unbounded): the wave's
+    /// [`crate::bfs::RunControl`] deadline is derived from the tightest
+    /// one in the wave at dispatch time.
+    pub deadline: Option<Instant>,
+    /// When the request entered the queue — the latency anchor: reply
+    /// latency is measured from here, so it includes queueing time.
+    pub enqueued: Instant,
+    /// Flush the accumulating wave no later than this, even if the width
+    /// has not been reached.
+    pub flush_by: Instant,
+    /// Reply channel back to the connection handler (a pre-formatted
+    /// protocol line).
+    pub reply: Sender<String>,
+}
+
+/// Why a wave left the queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushTrigger {
+    /// The per-graph accumulator reached the batch width.
+    Width,
+    /// The oldest request's flush-by margin passed.
+    Deadline,
+    /// The queue is draining for shutdown.
+    Drain,
+}
+
+impl FlushTrigger {
+    /// The protocol token (`trigger=` value in a `BFS` reply).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FlushTrigger::Width => "width",
+            FlushTrigger::Deadline => "deadline",
+            FlushTrigger::Drain => "drain",
+        }
+    }
+}
+
+#[derive(Default)]
+struct QueueState {
+    /// Per-graph accumulators, keyed by the registry's numeric graph id.
+    pending: HashMap<u64, VecDeque<PendingBfs>>,
+    draining: bool,
+}
+
+/// Per-graph accumulators + the flush policy. Shared by reference between
+/// connection handlers (push) and dispatcher threads (pop).
+pub struct BatchQueue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+    width: usize,
+    batch_deadline: Duration,
+}
+
+impl BatchQueue {
+    pub fn new(width: usize, batch_deadline: Duration) -> Self {
+        BatchQueue {
+            state: Mutex::new(QueueState::default()),
+            ready: Condvar::new(),
+            width: width.max(1),
+            batch_deadline,
+        }
+    }
+
+    /// Roots per width-triggered wave (≥ 1).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// The queue-wide accumulation bound.
+    pub fn batch_deadline(&self) -> Duration {
+        self.batch_deadline
+    }
+
+    fn lock(&self) -> MutexGuard<'_, QueueState> {
+        self.state.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Enqueue one request on `graph`'s accumulator. `Err` hands the
+    /// request back when the queue is draining — the caller replies with
+    /// a `shutting-down` error instead of enqueueing into the void.
+    pub fn push(&self, graph: u64, req: PendingBfs) -> Result<(), PendingBfs> {
+        let mut st = self.lock();
+        if st.draining {
+            return Err(req);
+        }
+        st.pending.entry(graph).or_default().push_back(req);
+        // wake every dispatcher: one may flush by width while another
+        // recomputes its deadline wait
+        self.ready.notify_all();
+        Ok(())
+    }
+
+    /// Requests currently accumulated across all graphs.
+    pub fn depth(&self) -> usize {
+        self.lock().pending.values().map(|q| q.len()).sum()
+    }
+
+    /// Switch to drain mode: refuse new pushes, flush what is pending,
+    /// and make `pop_wave` return `None` once empty.
+    pub fn drain(&self) {
+        self.lock().draining = true;
+        self.ready.notify_all();
+    }
+
+    /// Block until a wave is ready and take it: `(graph, requests,
+    /// trigger)`. Width-full graphs flush first (exactly `width`
+    /// requests, oldest first); otherwise the earliest expired `flush_by`
+    /// flushes its whole graph accumulator. Returns `None` only when the
+    /// queue is draining and empty — the dispatcher's exit signal.
+    pub fn pop_wave(&self) -> Option<(u64, Vec<PendingBfs>, FlushTrigger)> {
+        let mut st = self.lock();
+        loop {
+            // 1. width-triggered: any graph with a full wave flushes now
+            let full = st.pending.iter().find(|(_, q)| q.len() >= self.width).map(|(&g, _)| g);
+            if let Some(g) = full {
+                let q = st.pending.get_mut(&g).expect("key found above");
+                let wave: Vec<PendingBfs> = q.drain(..self.width).collect();
+                if q.is_empty() {
+                    st.pending.remove(&g);
+                }
+                return Some((g, wave, FlushTrigger::Width));
+            }
+            // 2. the earliest flush_by across graphs decides what's next
+            let now = Instant::now();
+            let next = st
+                .pending
+                .iter()
+                .filter_map(|(&g, q)| q.iter().map(|p| p.flush_by).min().map(|t| (t, g)))
+                .min_by_key(|&(t, _)| t);
+            if st.draining {
+                // drain mode: flush whatever is left, graph by graph
+                // (still whole per-graph waves — never mixed)
+                if let Some((_, g)) = next {
+                    let q = st.pending.remove(&g).expect("key found above");
+                    return Some((g, Vec::from(q), FlushTrigger::Drain));
+                }
+                return None;
+            }
+            match next {
+                Some((t, g)) if t <= now => {
+                    let q = st.pending.remove(&g).expect("key found above");
+                    return Some((g, Vec::from(q), FlushTrigger::Deadline));
+                }
+                Some((t, _)) => {
+                    // sleep until the earliest margin (or a push/drain)
+                    let (guard, _timeout) = self
+                        .ready
+                        .wait_timeout(st, t.saturating_duration_since(now))
+                        .unwrap_or_else(|poisoned| poisoned.into_inner());
+                    st = guard;
+                }
+                None => {
+                    st = self.ready.wait(st).unwrap_or_else(|poisoned| poisoned.into_inner());
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    /// A pending request whose reply channel goes nowhere (these tests
+    /// exercise flush policy, not dispatch).
+    fn pending(root: Vertex, flush_in: Duration) -> PendingBfs {
+        let (tx, _rx) = mpsc::channel();
+        let now = Instant::now();
+        PendingBfs { root, deadline: None, enqueued: now, flush_by: now + flush_in, reply: tx }
+    }
+
+    const FAR: Duration = Duration::from_secs(3600);
+
+    #[test]
+    fn full_wave_flushes_immediately_by_width() {
+        let q = BatchQueue::new(4, FAR);
+        for r in 0..4 {
+            q.push(1, pending(r, FAR)).unwrap();
+        }
+        let t0 = Instant::now();
+        let (g, wave, trigger) = q.pop_wave().expect("wave ready");
+        assert!(t0.elapsed() < Duration::from_millis(500), "no deadline wait");
+        assert_eq!(g, 1);
+        assert_eq!(trigger, FlushTrigger::Width);
+        assert_eq!(wave.iter().map(|p| p.root).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn width_flush_takes_exactly_width_oldest_first() {
+        let q = BatchQueue::new(2, FAR);
+        for r in 0..5 {
+            q.push(1, pending(r, FAR)).unwrap();
+        }
+        let (_, wave, _) = q.pop_wave().unwrap();
+        assert_eq!(wave.iter().map(|p| p.root).collect::<Vec<_>>(), vec![0, 1]);
+        let (_, wave, _) = q.pop_wave().unwrap();
+        assert_eq!(wave.iter().map(|p| p.root).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(q.depth(), 1, "the straggler keeps waiting for its margin");
+    }
+
+    #[test]
+    fn lone_request_flushes_at_its_margin() {
+        let q = BatchQueue::new(16, FAR);
+        q.push(1, pending(7, Duration::from_millis(50))).unwrap();
+        let t0 = Instant::now();
+        let (g, wave, trigger) = q.pop_wave().expect("wave ready");
+        let waited = t0.elapsed();
+        assert_eq!((g, wave.len()), (1, 1));
+        assert_eq!(trigger, FlushTrigger::Deadline);
+        assert!(waited >= Duration::from_millis(30), "flushed early: {waited:?}");
+        assert!(waited < Duration::from_secs(30), "flushed far too late: {waited:?}");
+    }
+
+    #[test]
+    fn graphs_never_share_a_wave() {
+        let q = BatchQueue::new(2, FAR);
+        q.push(1, pending(10, FAR)).unwrap();
+        q.push(2, pending(20, FAR)).unwrap();
+        q.push(1, pending(11, FAR)).unwrap();
+        let (g, wave, trigger) = q.pop_wave().unwrap();
+        assert_eq!(g, 1, "only graph 1 has a full wave");
+        assert_eq!(trigger, FlushTrigger::Width);
+        assert_eq!(wave.iter().map(|p| p.root).collect::<Vec<_>>(), vec![10, 11]);
+        // graph 2's lone request drains as its own wave
+        q.drain();
+        let (g, wave, trigger) = q.pop_wave().unwrap();
+        assert_eq!((g, wave.len()), (2, 1));
+        assert_eq!(trigger, FlushTrigger::Drain);
+        assert!(q.pop_wave().is_none(), "drained and empty");
+    }
+
+    #[test]
+    fn draining_queue_refuses_new_requests() {
+        let q = BatchQueue::new(4, FAR);
+        q.drain();
+        assert!(q.push(1, pending(0, FAR)).is_err());
+        assert!(q.pop_wave().is_none());
+    }
+}

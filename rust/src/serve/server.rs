@@ -1,0 +1,595 @@
+//! The `phi-bfs serve` daemon: a thread-per-connection TCP acceptor over
+//! the deadline-aware [`BatchQueue`], dispatching accumulated waves
+//! through a resource-governed [`Coordinator`].
+//!
+//! Threads, from the socket inward:
+//!
+//! * **acceptor** — blocks in `TcpListener::accept`, spawns one
+//!   connection handler per client, exits when shutdown begins (woken by
+//!   a self-connect).
+//! * **connection handlers** — parse one request line at a time.
+//!   `LOAD`/`STATS` reply inline; `BFS` bounds-checks the root, enqueues
+//!   a [`PendingBfs`] carrying a reply channel, and blocks on that
+//!   channel (each connection is its own thread, so blocking here costs
+//!   nothing); `SHUTDOWN` flips the daemon into drain mode.
+//! * **dispatchers** — block in [`BatchQueue::pop_wave`], wrap each wave
+//!   in a [`BfsJob::wave`], and submit it to the coordinator. A wave the
+//!   coordinator sheds with [`CoordinatorError::Rejected`] is re-submitted
+//!   after the shed's `retry_after_hint` (lower-bounded by the jittered
+//!   [`retry_backoff`] curve) up to the job retry budget; every other
+//!   error fans out to the wave's requests as structured `ERR` lines.
+//!
+//! Shutdown is *drain-then-exit*: the queue refuses new requests, every
+//! accumulated wave still dispatches (trigger `drain`), and
+//! [`Server::wait`] joins acceptor → dispatchers → handlers before
+//! returning the final [`ServeSnapshot`].
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::metrics::{ServeMetrics, ServeSnapshot};
+use super::protocol::{err_line, parse_request, Request, MAX_DEADLINE_MS};
+use super::queue::{BatchQueue, FlushTrigger, PendingBfs};
+use crate::bfs::{RunControl, RunStatus};
+use crate::coordinator::{
+    retry_backoff, AdmissionPolicy, BfsJob, Coordinator, CoordinatorError, EngineKind, FaultPlan,
+    RootOutcome,
+};
+use crate::graph::{Csr, RmatConfig};
+use crate::rng::Xoshiro256;
+use crate::Vertex;
+
+/// How often a blocked connection read wakes up to re-check the shutdown
+/// flag, so idle clients cannot hold a draining daemon open.
+const READ_POLL: Duration = Duration::from_millis(200);
+
+/// Everything `phi-bfs serve` configures; [`Server::bind`] consumes it.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    pub host: String,
+    /// TCP port; 0 asks the OS for an ephemeral one (tests, CI smoke).
+    pub port: u16,
+    /// Engine template for every wave (per-graph sigma is patched in at
+    /// dispatch when the `LOAD` carried one).
+    pub engine: EngineKind,
+    /// Coordinator worker threads per wave.
+    pub workers: usize,
+    /// Dispatcher threads pulling waves off the queue — the number of
+    /// waves traversing concurrently.
+    pub dispatchers: usize,
+    /// Roots per width-triggered wave (16 = the MS-BFS wave shape).
+    pub batch_width: usize,
+    /// Queue-wide accumulation bound for deadline-triggered flushes.
+    pub batch_deadline: Duration,
+    /// Coordinator memory budget (None = ungoverned).
+    pub mem_budget_mb: Option<usize>,
+    /// Admission cap on concurrently running coordinator jobs.
+    pub max_inflight: usize,
+    /// Per-root retry budget inside a wave, and the dispatcher's bound on
+    /// whole-wave re-submissions after admission-control rejections.
+    pub max_attempts: usize,
+    /// Chaos knob: the first N waves carry a synthetic memory-pressure
+    /// fault so they shed as `Rejected` and exercise the retry path
+    /// (requires a bounded budget to have any effect).
+    pub fault_reject_waves: u64,
+}
+
+impl ServeOptions {
+    pub fn new(engine: EngineKind) -> Self {
+        ServeOptions {
+            host: "127.0.0.1".to_string(),
+            port: 0,
+            engine,
+            workers: 2,
+            dispatchers: 2,
+            batch_width: 16,
+            batch_deadline: Duration::from_millis(10),
+            mem_budget_mb: None,
+            max_inflight: AdmissionPolicy::default().max_inflight,
+            max_attempts: 3,
+            fault_reject_waves: 0,
+        }
+    }
+}
+
+/// A registry entry: the loaded CSR plus the sigma its `LOAD` requested
+/// (applied to sigma-bearing engines at dispatch).
+#[derive(Clone)]
+struct LoadedGraph {
+    graph: Arc<Csr>,
+    sigma: Option<usize>,
+}
+
+/// State shared by the acceptor, every connection handler, and every
+/// dispatcher.
+struct ServerInner {
+    opts: ServeOptions,
+    addr: SocketAddr,
+    coordinator: Coordinator,
+    queue: BatchQueue,
+    metrics: ServeMetrics,
+    graphs: Mutex<HashMap<u64, LoadedGraph>>,
+    next_graph_id: AtomicU64,
+    next_job_id: AtomicU64,
+    /// Waves handed to the coordinator so far — indexes the
+    /// `fault_reject_waves` chaos gate deterministically.
+    waves_dispatched: AtomicU64,
+    shutting_down: AtomicBool,
+    /// Connection handler threads, joined by [`Server::wait`].
+    handlers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// A bound, running daemon. Construct with [`Server::bind`]; block until
+/// drained shutdown with [`Server::wait`].
+pub struct Server {
+    inner: Arc<ServerInner>,
+    acceptor: Option<JoinHandle<()>>,
+    dispatchers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind the listener, start the dispatcher pool and the acceptor, and
+    /// print the `listening on` line (flushed — CI greps it from a
+    /// redirected pipe).
+    pub fn bind(opts: ServeOptions) -> Result<Server> {
+        let listener = TcpListener::bind((opts.host.as_str(), opts.port))
+            .with_context(|| format!("binding {}:{}", opts.host, opts.port))?;
+        let addr = listener.local_addr().context("resolving the bound address")?;
+        let coordinator = Coordinator::with_limits(
+            opts.workers,
+            opts.mem_budget_mb.map(|mb| mb.saturating_mul(1 << 20)),
+            AdmissionPolicy { max_inflight: opts.max_inflight },
+        );
+        let queue = BatchQueue::new(opts.batch_width, opts.batch_deadline);
+        let dispatchers_n = opts.dispatchers.max(1);
+        let inner = Arc::new(ServerInner {
+            opts,
+            addr,
+            coordinator,
+            queue,
+            metrics: ServeMetrics::default(),
+            graphs: Mutex::new(HashMap::new()),
+            next_graph_id: AtomicU64::new(1),
+            next_job_id: AtomicU64::new(1),
+            waves_dispatched: AtomicU64::new(0),
+            shutting_down: AtomicBool::new(false),
+            handlers: Mutex::new(Vec::new()),
+        });
+        println!("phi-bfs serve: listening on {addr}");
+        std::io::stdout().flush().ok();
+        let dispatchers = (0..dispatchers_n)
+            .map(|_| {
+                let inner = Arc::clone(&inner);
+                std::thread::spawn(move || dispatcher_loop(&inner))
+            })
+            .collect();
+        let acceptor = {
+            let inner = Arc::clone(&inner);
+            std::thread::spawn(move || acceptor_loop(&inner, listener))
+        };
+        Ok(Server { inner, acceptor: Some(acceptor), dispatchers })
+    }
+
+    /// The address actually bound (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.inner.addr
+    }
+
+    /// Block until the daemon shuts down (a client sent `SHUTDOWN`, or
+    /// [`Server::begin_shutdown`] was called), every pending wave has
+    /// drained, and every thread has exited. Returns the final snapshot —
+    /// the shutdown summary.
+    pub fn wait(mut self) -> ServeSnapshot {
+        if let Some(acceptor) = self.acceptor.take() {
+            acceptor.join().ok();
+        }
+        for d in self.dispatchers.drain(..) {
+            d.join().ok();
+        }
+        let handlers = {
+            let mut guard =
+                self.inner.handlers.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+            std::mem::take(&mut *guard)
+        };
+        for h in handlers {
+            h.join().ok();
+        }
+        self.inner.metrics.snapshot(self.inner.coordinator.metrics().snapshot())
+    }
+
+    /// Start a drain-then-exit shutdown (idempotent): refuse new work,
+    /// flush the queue, and wake the acceptor so it can exit.
+    pub fn begin_shutdown(&self) {
+        self.inner.begin_shutdown();
+    }
+}
+
+impl ServerInner {
+    fn begin_shutdown(&self) {
+        if self.shutting_down.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.queue.drain();
+        // the acceptor blocks in accept(): a throwaway self-connect is the
+        // portable way to wake it so it can observe the flag
+        TcpStream::connect(self.addr).ok();
+    }
+}
+
+fn acceptor_loop(inner: &Arc<ServerInner>, listener: TcpListener) {
+    loop {
+        let Ok((stream, _)) = listener.accept() else { continue };
+        if inner.shutting_down.load(Ordering::SeqCst) {
+            return;
+        }
+        let handler = {
+            let inner = Arc::clone(inner);
+            std::thread::spawn(move || connection_loop(&inner, stream))
+        };
+        inner.handlers.lock().unwrap_or_else(|poisoned| poisoned.into_inner()).push(handler);
+    }
+}
+
+/// One client connection: read request lines, write reply lines, until
+/// the client hangs up or the daemon drains.
+fn connection_loop(inner: &Arc<ServerInner>, stream: TcpStream) {
+    stream.set_read_timeout(Some(READ_POLL)).ok();
+    let Ok(mut writer) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => return, // client closed
+            Ok(_) => {
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                let reply = handle_line(inner, trimmed);
+                if writeln!(writer, "{reply}").is_err() || writer.flush().is_err() {
+                    return;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // idle poll: exit once the daemon is draining so a silent
+                // client cannot hold shutdown open
+                if inner.shutting_down.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn handle_line(inner: &Arc<ServerInner>, line: &str) -> String {
+    let req = match parse_request(line) {
+        Ok(req) => req,
+        Err(detail) => return err_line("parse", &detail),
+    };
+    match req {
+        Request::Load { spec, sigma } => handle_load(inner, &spec, sigma),
+        Request::Bfs { graph, root, deadline_ms } => handle_bfs(inner, &graph, root, deadline_ms),
+        Request::Stats => {
+            let snap = inner.metrics.snapshot(inner.coordinator.metrics().snapshot());
+            format!("OK STATS {snap}")
+        }
+        Request::Shutdown => {
+            inner.begin_shutdown();
+            "OK SHUTDOWN draining".to_string()
+        }
+    }
+}
+
+/// Load a graph from a `rmat:SCALE:EDGEFACTOR:SEED` spec or a file path
+/// (binary CSR sniffed by magic, edge-list text otherwise) and register
+/// it under a fresh `g{N}` id.
+fn handle_load(inner: &Arc<ServerInner>, spec: &str, sigma: Option<usize>) -> String {
+    if inner.shutting_down.load(Ordering::SeqCst) {
+        return err_line("shutting-down", "daemon is draining; not accepting new graphs");
+    }
+    if sigma.is_some() {
+        // refuse eagerly: a sigma on an engine that cannot honor it would
+        // otherwise silently serve un-sorted layouts
+        let mut probe = inner.opts.engine.clone();
+        if let Err(e) = apply_sigma(&mut probe, sigma) {
+            return err_line("load", &e.to_string());
+        }
+    }
+    let graph = match load_graph(spec) {
+        Ok(g) => g,
+        Err(e) => return err_line("load", &format!("{e:#}")),
+    };
+    if let Err(e) = graph.validate_structure() {
+        return err_line("load", &format!("invalid graph structure: {e}"));
+    }
+    let id = inner.next_graph_id.fetch_add(1, Ordering::Relaxed);
+    let (vertices, edges) = (graph.num_vertices(), graph.num_directed_edges());
+    inner
+        .graphs
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+        .insert(id, LoadedGraph { graph: Arc::new(graph), sigma });
+    inner.metrics.record_graph_loaded();
+    format!("OK LOAD id=g{id} vertices={vertices} directed_edges={edges}")
+}
+
+/// Enqueue one BFS request and block (on this connection's own thread)
+/// until its wave runs and the dispatcher sends the reply line back.
+fn handle_bfs(
+    inner: &Arc<ServerInner>,
+    graph: &str,
+    root: Vertex,
+    deadline_ms: Option<u64>,
+) -> String {
+    let Some(id) = graph.strip_prefix('g').and_then(|n| n.parse::<u64>().ok()) else {
+        return err_line("unknown-graph", &format!("{graph:?} is not a g<N> id"));
+    };
+    let entry = inner
+        .graphs
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+        .get(&id)
+        .cloned();
+    let Some(entry) = entry else {
+        return err_line("unknown-graph", &format!("no graph loaded as g{id}"));
+    };
+    // per-request bounds check: the coordinator rejects a whole wave on
+    // one bad root, so a bad request must never reach a shared wave
+    let vertices = entry.graph.num_vertices();
+    if root as usize >= vertices {
+        return err_line(
+            "root-out-of-bounds",
+            &format!("root {root} out of bounds for a {vertices}-vertex graph"),
+        );
+    }
+    let now = Instant::now();
+    let deadline = deadline_ms.map(|ms| now + Duration::from_millis(ms.min(MAX_DEADLINE_MS)));
+    // leave the queue with ≥ ¼ of the request's own budget still in hand
+    // for the traversal itself
+    let mut flush_by = now + inner.queue.batch_deadline();
+    if let Some(ms) = deadline_ms {
+        flush_by = flush_by.min(now + Duration::from_millis(ms.min(MAX_DEADLINE_MS)) * 3 / 4);
+    }
+    let (tx, rx) = mpsc::channel();
+    let req = PendingBfs { root, deadline, enqueued: now, flush_by, reply: tx };
+    if inner.queue.push(id, req).is_err() {
+        return err_line("shutting-down", "daemon is draining; not accepting new requests");
+    }
+    inner.metrics.record_request();
+    rx.recv()
+        .unwrap_or_else(|_| err_line("internal", "reply channel closed before a reply was sent"))
+}
+
+fn dispatcher_loop(inner: &Arc<ServerInner>) {
+    while let Some((graph_id, wave, trigger)) = inner.queue.pop_wave() {
+        dispatch_wave(inner, graph_id, wave, trigger);
+    }
+}
+
+/// Run one wave through the coordinator and fan the outcome back to every
+/// request's reply channel. `Rejected` sheds re-submit after the hint;
+/// every other error is terminal for the wave.
+fn dispatch_wave(
+    inner: &Arc<ServerInner>,
+    graph_id: u64,
+    wave: Vec<PendingBfs>,
+    trigger: FlushTrigger,
+) {
+    inner.metrics.record_wave_popped(wave.len());
+    let entry = inner
+        .graphs
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+        .get(&graph_id)
+        .cloned();
+    let Some(entry) = entry else {
+        fail_wave(inner, &wave, &err_line("unknown-graph", "graph unloaded while queued"));
+        return;
+    };
+    let mut engine = inner.opts.engine.clone();
+    if apply_sigma(&mut engine, entry.sigma).is_err() {
+        // LOAD pre-validated this; only reachable if the engine template
+        // changed shape underneath us
+        fail_wave(inner, &wave, &err_line("internal", "sigma no longer applies to the engine"));
+        return;
+    }
+    let now = Instant::now();
+    let deadline = wave
+        .iter()
+        .filter_map(|p| p.deadline)
+        .map(|d| d.saturating_duration_since(now))
+        .min();
+    let control = Arc::new(RunControl::new());
+    let wave_index = inner.waves_dispatched.fetch_add(1, Ordering::Relaxed);
+    let job_id = inner.next_job_id.fetch_add(1, Ordering::Relaxed);
+    let roots: Vec<Vertex> = wave.iter().map(|p| p.root).collect();
+    let mut job = BfsJob::wave(
+        job_id,
+        Arc::clone(&entry.graph),
+        roots,
+        engine,
+        deadline,
+        Some(Arc::clone(&control)),
+        inner.opts.max_attempts,
+    );
+    if wave_index < inner.opts.fault_reject_waves {
+        // chaos gate: synthetic ledger pressure makes a bounded governor
+        // shed this wave as Rejected on its first submission
+        job.run.fault = Some(FaultPlan::memory_pressure(usize::MAX));
+    }
+    let mut rng = Xoshiro256::seed_from_u64(job_id ^ 0x5345_5256);
+    let max_submissions = inner.opts.max_attempts.max(1);
+    let mut attempt = 0usize;
+    let outcome = loop {
+        match inner.coordinator.run_job(&job) {
+            Ok(outcome) => break outcome,
+            Err(CoordinatorError::Rejected { retry_after_hint })
+                if attempt + 1 < max_submissions =>
+            {
+                attempt += 1;
+                inner.metrics.record_rejected_wave();
+                // the injected pressure made its point; retries run clean
+                job.run.fault = None;
+                let pause = retry_after_hint.max(retry_backoff(attempt + 1, &mut rng, &control));
+                eprintln!(
+                    "phi-bfs serve: wave {job_id} on g{graph_id} rejected by admission \
+                     control; retrying in {} ms (attempt {attempt}/{max_submissions})",
+                    pause.as_millis()
+                );
+                std::thread::sleep(pause);
+                inner.metrics.record_wave_retry();
+            }
+            Err(e) => {
+                let kind = match &e {
+                    CoordinatorError::Rejected { .. } => "rejected",
+                    CoordinatorError::OverBudget { .. } => "over-budget",
+                    CoordinatorError::RootOutOfBounds { .. } => "root-out-of-bounds",
+                    _ => "failed",
+                };
+                fail_wave(inner, &wave, &err_line(kind, &e.to_string()));
+                return;
+            }
+        }
+    };
+    inner.metrics.record_wave(trigger, wave.len());
+    let width = wave.len();
+    for (pending, root_outcome) in wave.into_iter().zip(outcome.outcomes.iter()) {
+        match root_outcome {
+            RootOutcome::Ran(r) => {
+                let latency = pending.enqueued.elapsed();
+                inner.metrics.record_ok(latency);
+                let (depth, checksum) =
+                    r.depths.map(|d| (d.max_depth, d.checksum)).unwrap_or((0, 0));
+                let status = match r.status() {
+                    RunStatus::Complete => "complete",
+                    RunStatus::TimedOut => "timed-out",
+                    RunStatus::Cancelled => "cancelled",
+                };
+                let line = format!(
+                    "OK BFS root={} reached={} edges={} depth={} checksum={:016x} \
+                     status={} wave_width={} trigger={} latency_ms={:.3}",
+                    r.root,
+                    r.reached,
+                    r.edges_traversed,
+                    depth,
+                    checksum,
+                    status,
+                    width,
+                    trigger.as_str(),
+                    latency.as_secs_f64() * 1e3,
+                );
+                pending.reply.send(line).ok();
+            }
+            RootOutcome::Failed { error, attempts, .. } => {
+                inner.metrics.record_failed();
+                let line = err_line("failed", &format!("after {attempts} attempts: {error}"));
+                pending.reply.send(line).ok();
+            }
+        }
+    }
+}
+
+/// Reply the same error line to every request in a wave.
+fn fail_wave(inner: &Arc<ServerInner>, wave: &[PendingBfs], line: &str) {
+    for pending in wave {
+        inner.metrics.record_failed();
+        pending.reply.send(line.to_string()).ok();
+    }
+}
+
+/// Patch a per-graph sigma into sigma-bearing engine variants (mirrors
+/// the `--sigma` handling in the CLI one-shot path). `None` is a no-op.
+fn apply_sigma(engine: &mut EngineKind, sigma: Option<usize>) -> Result<()> {
+    let Some(v) = sigma else { return Ok(()) };
+    match engine {
+        EngineKind::Sell { sigma, .. } | EngineKind::MultiSource { sigma, .. } => *sigma = v,
+        EngineKind::Hybrid { sell, bu_sell, sigma, .. } if *sell || *bu_sell => *sigma = v,
+        other => bail!("sigma {v} does not apply to engine {other:?}"),
+    }
+    Ok(())
+}
+
+/// Build a CSR from a `LOAD` spec: `rmat:SCALE:EDGEFACTOR:SEED`
+/// generates a Graph500 R-MAT instance; anything else is a file path —
+/// binary CSR when the magic matches, edge-list text otherwise.
+fn load_graph(spec: &str) -> Result<Csr> {
+    if let Some(rest) = spec.strip_prefix("rmat:") {
+        let parts: Vec<&str> = rest.split(':').collect();
+        if parts.len() != 3 {
+            bail!("rmat spec must be rmat:SCALE:EDGEFACTOR:SEED, got {spec:?}");
+        }
+        let scale: u32 = parts[0].parse().with_context(|| format!("bad scale {:?}", parts[0]))?;
+        let ef: usize =
+            parts[1].parse().with_context(|| format!("bad edgefactor {:?}", parts[1]))?;
+        let seed: u64 = parts[2].parse().with_context(|| format!("bad seed {:?}", parts[2]))?;
+        if !(1..=26).contains(&scale) {
+            bail!("rmat scale {scale} outside the served range 1..=26");
+        }
+        if ef == 0 {
+            bail!("rmat edgefactor must be >= 1");
+        }
+        let el = RmatConfig::graph500(scale, ef).generate(seed);
+        return Ok(Csr::from_edge_list(scale, &el));
+    }
+    let bytes = std::fs::read(spec).with_context(|| format!("reading graph file {spec:?}"))?;
+    if bytes.starts_with(b"PHIBFS01") {
+        crate::graph::io::read_csr(&bytes[..])
+    } else {
+        let el = crate::graph::io::read_edge_list(&bytes[..])
+            .with_context(|| format!("parsing {spec:?} as an edge list"))?;
+        Ok(Csr::from_edge_list(0, &el))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_graph_parses_rmat_specs_and_rejects_bad_ones() {
+        let g = load_graph("rmat:6:8:42").expect("valid spec");
+        assert_eq!(g.num_vertices(), 64);
+        assert!(load_graph("rmat:6:8").is_err(), "missing seed");
+        assert!(load_graph("rmat:0:8:1").is_err(), "scale 0");
+        assert!(load_graph("rmat:6:0:1").is_err(), "edgefactor 0");
+        assert!(load_graph("/nonexistent/phi-bfs-graph").is_err(), "missing file");
+    }
+
+    #[test]
+    fn load_graph_round_trips_both_file_formats() {
+        let el = RmatConfig::graph500(5, 8).generate(7);
+        let g = Csr::from_edge_list(5, &el);
+        let dir = std::env::temp_dir().join(format!("phi-bfs-serve-load-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let csr_path = dir.join("g.csr");
+        let el_path = dir.join("g.txt");
+        crate::graph::io::save_csr(&csr_path, &g).unwrap();
+        crate::graph::io::save_edge_list(&el_path, &el).unwrap();
+        let from_csr = load_graph(csr_path.to_str().unwrap()).expect("binary CSR");
+        let from_el = load_graph(el_path.to_str().unwrap()).expect("edge-list text");
+        assert_eq!(from_csr.content_hash(), g.content_hash());
+        assert_eq!(from_el.content_hash(), g.content_hash());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn apply_sigma_patches_sell_engines_and_refuses_serial() {
+        let mut e = EngineKind::parse("sell", 2, "").unwrap();
+        assert!(apply_sigma(&mut e, Some(4096)).is_ok());
+        let mut serial = EngineKind::SerialQueue;
+        assert!(apply_sigma(&mut serial, Some(4096)).is_err());
+        assert!(apply_sigma(&mut serial, None).is_ok(), "no sigma is always fine");
+    }
+}

@@ -1,0 +1,287 @@
+//! Loopback integration suite for the `phi-bfs serve` daemon.
+//!
+//! Property under test: **a daemon serving concurrent clients returns, for
+//! every request, exactly the distances the serial oracle computes** —
+//! while batching requests into per-graph waves (width- or
+//! deadline-triggered, never mixing graphs), reporting latency/fill/cache
+//! telemetry over `STATS`, retrying admission-control rejections, and
+//! draining every in-flight request before a `SHUTDOWN` completes.
+//!
+//! Everything runs over real TCP on an ephemeral loopback port; the
+//! oracle regenerates the same R-MAT instances the daemon serves and
+//! compares the protocol's FNV depth digests.
+
+use std::net::SocketAddr;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use phi_bfs::bfs::serial::SerialLayeredBfs;
+use phi_bfs::bfs::BfsEngine;
+use phi_bfs::coordinator::{DepthSummary, EngineKind};
+use phi_bfs::graph::{Csr, RmatConfig};
+use phi_bfs::serve::{kv, kv_hex, kv_u64, ServeClient, ServeOptions, ServeSnapshot, Server};
+use phi_bfs::Vertex;
+
+/// Bind a daemon on an ephemeral port and run its drain-then-exit wait on
+/// a background thread; the handle yields the shutdown summary.
+fn launch(mut opts: ServeOptions) -> (SocketAddr, JoinHandle<ServeSnapshot>) {
+    opts.port = 0;
+    let server = Server::bind(opts).expect("bind loopback daemon");
+    let addr = server.addr();
+    (addr, std::thread::spawn(move || server.wait()))
+}
+
+fn serial_opts() -> ServeOptions {
+    ServeOptions::new(EngineKind::SerialLayered)
+}
+
+fn rmat(scale: u32, ef: usize, seed: u64) -> Csr {
+    Csr::from_edge_list(scale, &RmatConfig::graph500(scale, ef).generate(seed))
+}
+
+/// The depth digest the daemon must reply with for `root`, recomputed
+/// from the serial reference engine.
+fn oracle_checksum(g: &Csr, root: Vertex) -> u64 {
+    DepthSummary::from_tree(&SerialLayeredBfs.run(g, root).tree).unwrap().checksum
+}
+
+#[test]
+fn full_wave_of_16_flushes_by_width_with_oracle_exact_depths() {
+    let mut opts = serial_opts();
+    opts.batch_width = 16;
+    opts.batch_deadline = Duration::from_secs(30); // width must win
+    let (addr, daemon) = launch(opts);
+    let gid = ServeClient::connect(&addr.to_string()).unwrap().load("rmat:9:8:1", None).unwrap();
+    let oracle = rmat(9, 8, 1);
+
+    let clients: Vec<JoinHandle<String>> = (0..16)
+        .map(|root| {
+            let (addr, gid) = (addr.to_string(), gid.clone());
+            std::thread::spawn(move || {
+                ServeClient::connect(&addr).unwrap().bfs(&gid, root, None).unwrap()
+            })
+        })
+        .collect();
+    for (root, h) in clients.into_iter().enumerate() {
+        let reply = h.join().unwrap();
+        assert!(reply.starts_with("OK BFS"), "root {root}: {reply}");
+        assert_eq!(kv(&reply, "trigger").as_deref(), Some("width"), "{reply}");
+        assert_eq!(kv_u64(&reply, "wave_width"), Some(16), "{reply}");
+        assert_eq!(
+            kv_hex(&reply, "checksum"),
+            Some(oracle_checksum(&oracle, root as Vertex)),
+            "root {root} diverged from the serial oracle: {reply}"
+        );
+    }
+    ServeClient::connect(&addr.to_string()).unwrap().shutdown().unwrap();
+    let snap = daemon.join().unwrap();
+    assert_eq!((snap.ok, snap.failed), (16, 0));
+    assert!(snap.width_flushes >= 1, "{snap}");
+}
+
+#[test]
+fn lone_request_flushes_at_its_deadline_margin_not_after() {
+    let mut opts = serial_opts();
+    opts.batch_width = 16;
+    opts.batch_deadline = Duration::from_secs(30); // the margin must win
+    let (addr, daemon) = launch(opts);
+    let gid = ServeClient::connect(&addr.to_string()).unwrap().load("rmat:8:8:3", None).unwrap();
+
+    // a 600 ms request deadline → the queue must flush at the ¾ margin
+    // (~450 ms), leaving budget for the traversal itself
+    let t0 = Instant::now();
+    let reply =
+        ServeClient::connect(&addr.to_string()).unwrap().bfs(&gid, 0, Some(600)).unwrap();
+    let waited = t0.elapsed();
+    assert!(reply.starts_with("OK BFS"), "{reply}");
+    assert_eq!(kv(&reply, "trigger").as_deref(), Some("deadline"), "{reply}");
+    assert_eq!(kv(&reply, "status").as_deref(), Some("complete"), "{reply}");
+    assert_eq!(kv_hex(&reply, "checksum"), Some(oracle_checksum(&rmat(8, 8, 3), 0)));
+    assert!(waited >= Duration::from_millis(300), "flushed before the margin: {waited:?}");
+    assert!(waited < Duration::from_secs(5), "waited past the request deadline: {waited:?}");
+    ServeClient::connect(&addr.to_string()).unwrap().shutdown().unwrap();
+    let snap = daemon.join().unwrap();
+    assert!(snap.deadline_flushes >= 1, "{snap}");
+}
+
+#[test]
+fn concurrent_graphs_never_share_a_wave() {
+    let mut opts = serial_opts();
+    opts.batch_width = 2;
+    opts.batch_deadline = Duration::from_millis(500);
+    let (addr, daemon) = launch(opts);
+    let mut setup = ServeClient::connect(&addr.to_string()).unwrap();
+    let g1 = setup.load("rmat:8:8:1", None).unwrap();
+    let g2 = setup.load("rmat:8:8:2", None).unwrap();
+    assert_ne!(g1, g2);
+
+    let spawn_bfs = |gid: String, root: Vertex| {
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            ServeClient::connect(&addr).unwrap().bfs(&gid, root, None).unwrap()
+        })
+    };
+    let a = spawn_bfs(g1.clone(), 0);
+    let b = spawn_bfs(g2.clone(), 0);
+    let c = spawn_bfs(g1.clone(), 1);
+    let oracle1 = rmat(8, 8, 1);
+    let oracle2 = rmat(8, 8, 2);
+    for (h, oracle, root) in [(a, &oracle1, 0), (b, &oracle2, 0), (c, &oracle1, 1)] {
+        let reply = h.join().unwrap();
+        assert!(reply.starts_with("OK BFS"), "{reply}");
+        // a mixed wave would digest distances from the wrong graph
+        assert_eq!(kv_hex(&reply, "checksum"), Some(oracle_checksum(oracle, root)), "{reply}");
+        // g1's pair may fill a width wave; g2's loner never can
+        assert!(kv_u64(&reply, "wave_width").unwrap() <= 2, "{reply}");
+    }
+    ServeClient::connect(&addr.to_string()).unwrap().shutdown().unwrap();
+    let snap = daemon.join().unwrap();
+    assert_eq!((snap.ok, snap.failed), (3, 0));
+    assert_eq!(snap.graphs_loaded, 2);
+}
+
+/// The issue's acceptance scenario: ≥64 concurrent requests across ≥2
+/// graphs, every reply oracle-exact, at least one width-triggered and one
+/// deadline-triggered flush, and a `STATS` line carrying the full
+/// telemetry set.
+#[test]
+fn acceptance_64_concurrent_requests_across_two_graphs() {
+    let mut opts = serial_opts();
+    opts.batch_width = 16;
+    opts.batch_deadline = Duration::from_millis(200);
+    opts.dispatchers = 2;
+    let (addr, daemon) = launch(opts);
+    let mut setup = ServeClient::connect(&addr.to_string()).unwrap();
+    let g1 = setup.load("rmat:9:8:1", None).unwrap();
+    let g2 = setup.load("rmat:8:8:2", None).unwrap();
+    let oracle1 = rmat(9, 8, 1);
+    let oracle2 = rmat(8, 8, 2);
+
+    // 33 clients on g1 + 31 on g2: both graphs fill at least one width
+    // wave (16) and strand a remainder that must flush by deadline
+    let clients: Vec<(usize, JoinHandle<String>)> = (0..64)
+        .map(|i| {
+            let on_g1 = i % 2 == 0 || i >= 62;
+            let gid = if on_g1 { g1.clone() } else { g2.clone() };
+            let vertices = if on_g1 { 512 } else { 256 };
+            let root = (i * 7 % vertices) as Vertex;
+            let addr = addr.to_string();
+            let h = std::thread::spawn(move || {
+                ServeClient::connect(&addr).unwrap().bfs(&gid, root, Some(30_000)).unwrap()
+            });
+            (i, h)
+        })
+        .collect();
+    let mut triggers = Vec::new();
+    for (i, h) in clients {
+        let reply = h.join().unwrap();
+        let on_g1 = i % 2 == 0 || i >= 62;
+        let (oracle, vertices) = if on_g1 { (&oracle1, 512) } else { (&oracle2, 256) };
+        let root = (i * 7 % vertices) as Vertex;
+        assert!(reply.starts_with("OK BFS"), "client {i}: {reply}");
+        assert_eq!(
+            kv_hex(&reply, "checksum"),
+            Some(oracle_checksum(oracle, root)),
+            "client {i} (root {root}) diverged from the serial oracle: {reply}"
+        );
+        triggers.push(kv(&reply, "trigger").unwrap());
+    }
+    assert!(triggers.iter().any(|t| t == "width"), "no width-triggered wave: {triggers:?}");
+    assert!(
+        triggers.iter().any(|t| t == "deadline"),
+        "no deadline-triggered wave: {triggers:?}"
+    );
+
+    let mut tail = ServeClient::connect(&addr.to_string()).unwrap();
+    let stats = tail.stats().unwrap();
+    assert!(stats.starts_with("OK STATS"), "{stats}");
+    let stats_keys = ["p50_ms=", "p99_ms=", "queue_depth=", "batch_fill=", "cache_hit_rate="];
+    for key in stats_keys {
+        assert!(stats.contains(key), "{stats:?} missing {key}");
+    }
+    assert_eq!(kv_u64(&stats, "ok"), Some(64), "{stats}");
+    // both graphs re-ran many waves on cached artifacts
+    assert!(kv_u64(&stats, "cache_hits").unwrap() >= 2, "{stats}");
+
+    assert_eq!(tail.shutdown().unwrap(), "OK SHUTDOWN draining");
+    let snap = daemon.join().unwrap();
+    assert_eq!((snap.ok, snap.failed), (64, 0), "{snap}");
+    assert!(snap.batch_fill > 1.0, "batching never amortized anything: {snap}");
+    assert!(snap.p99_ms >= snap.p50_ms && snap.p50_ms > 0.0, "{snap}");
+}
+
+#[test]
+fn shutdown_drains_pending_requests_before_exit() {
+    let mut opts = serial_opts();
+    opts.batch_width = 16;
+    opts.batch_deadline = Duration::from_secs(30); // nothing flushes on its own
+    let (addr, daemon) = launch(opts);
+    let gid = ServeClient::connect(&addr.to_string()).unwrap().load("rmat:8:8:5", None).unwrap();
+
+    let pending = {
+        let (addr, gid) = (addr.to_string(), gid.clone());
+        std::thread::spawn(move || ServeClient::connect(&addr).unwrap().bfs(&gid, 3, None).unwrap())
+    };
+    // wait until the request is visibly queued, then shut down
+    let mut probe = ServeClient::connect(&addr.to_string()).unwrap();
+    let t0 = Instant::now();
+    loop {
+        let stats = probe.stats().unwrap();
+        if kv_u64(&stats, "queue_depth") == Some(1) {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(20), "request never queued: {stats}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    probe.shutdown().unwrap();
+
+    let reply = pending.join().unwrap();
+    assert!(reply.starts_with("OK BFS"), "drained request must still be served: {reply}");
+    assert_eq!(kv(&reply, "trigger").as_deref(), Some("drain"), "{reply}");
+    assert_eq!(kv_hex(&reply, "checksum"), Some(oracle_checksum(&rmat(8, 8, 5), 3)));
+    let snap = daemon.join().unwrap();
+    assert!(snap.drain_flushes >= 1, "{snap}");
+    assert_eq!((snap.ok, snap.failed), (1, 0), "{snap}");
+}
+
+#[test]
+fn rejected_wave_is_retried_after_the_hint_and_served() {
+    let mut opts = serial_opts();
+    opts.batch_width = 1; // every request is its own wave
+    opts.batch_deadline = Duration::from_millis(10);
+    opts.mem_budget_mb = Some(512);
+    opts.fault_reject_waves = 1; // first wave sheds as Rejected, retry runs clean
+    let (addr, daemon) = launch(opts);
+    let gid = ServeClient::connect(&addr.to_string()).unwrap().load("rmat:8:8:9", None).unwrap();
+
+    let reply = ServeClient::connect(&addr.to_string()).unwrap().bfs(&gid, 0, None).unwrap();
+    assert!(reply.starts_with("OK BFS"), "rejected wave must be retried, not failed: {reply}");
+    assert_eq!(kv_hex(&reply, "checksum"), Some(oracle_checksum(&rmat(8, 8, 9), 0)));
+    ServeClient::connect(&addr.to_string()).unwrap().shutdown().unwrap();
+    let snap = daemon.join().unwrap();
+    assert!(snap.rejected_waves >= 1, "the chaos gate never fired: {snap}");
+    assert!(snap.wave_retries >= 1, "{snap}");
+    assert_eq!((snap.ok, snap.failed), (1, 0), "{snap}");
+}
+
+#[test]
+fn protocol_errors_are_structured_lines() {
+    let mut opts = serial_opts();
+    opts.batch_deadline = Duration::from_millis(10);
+    let (addr, daemon) = launch(opts);
+    let mut c = ServeClient::connect(&addr.to_string()).unwrap();
+    assert!(c.send("FROB g1 0").unwrap().starts_with("ERR parse"));
+    assert!(c.send("BFS g99 0").unwrap().starts_with("ERR unknown-graph"));
+    assert!(c.send("LOAD rmat:not:a:spec").unwrap().starts_with("ERR load"));
+    let gid = c.load("rmat:7:8:1", None).unwrap();
+    // scale 7 → 128 vertices: root 999 is per-request out of bounds and
+    // must be refused at enqueue, never poisoning a shared wave
+    let reply = c.bfs(&gid, 999, None).unwrap();
+    assert!(reply.starts_with("ERR root-out-of-bounds"), "{reply}");
+    // the connection survives structured errors
+    let ok = c.bfs(&gid, 1, None).unwrap();
+    assert!(ok.starts_with("OK BFS"), "{ok}");
+    c.shutdown().unwrap();
+    let snap = daemon.join().unwrap();
+    assert_eq!((snap.ok, snap.failed), (1, 0), "{snap}");
+}
