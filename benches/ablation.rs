@@ -48,14 +48,18 @@
 //!    loops don't lose to per-op dispatch and the hub bitmap never
 //!    increases stream reads. Writes `BENCH_fusion.json` (override with
 //!    `PHIBFS_BENCH_FUSION_JSON`), archived by CI with the others.
-//! 10. **Resource governance** — governed (byte-accounted ledger, admission
-//!    control armed) vs ungoverned coordinator TEPS over the same job
-//!    stream at SCALE 16 (smoke 12). The budget is sized from the
+//! 10. **Resource governance + supervision** — governed (byte-accounted
+//!    ledger, admission control armed) vs ungoverned coordinator TEPS
+//!    over the same job stream at SCALE 16 (smoke 12), plus a supervised
+//!    arm that routes the governed stream through the watchdog's worker
+//!    pool with a generous liveness budget. The budget is sized from the
 //!    footprint planners so nothing sheds: the run measures pure
-//!    accounting overhead, asserted ≤ 3% at full scale, with zero
-//!    pressure events and zero shed jobs asserted always. Writes
-//!    `BENCH_robustness.json` (override with
-//!    `PHIBFS_BENCH_ROBUSTNESS_JSON`), archived by CI with the others.
+//!    accounting overhead (governed vs ungoverned) and pure heartbeat +
+//!    monitor overhead (supervised vs governed), each asserted ≤ 3% at
+//!    full scale, with zero pressure events, zero shed jobs and zero
+//!    watchdog fires asserted always. Writes `BENCH_robustness.json`
+//!    (override with `PHIBFS_BENCH_ROBUSTNESS_JSON`), archived by CI with
+//!    the others.
 //! 11. **Serving under offered load** — the `phi-bfs serve` daemon on a
 //!    loopback port, closed-loop client sweeps at 1 / 4 / 16 concurrent
 //!    clients against a fixed batch width of 16: p50/p99 request latency,
@@ -82,7 +86,9 @@ use phi_bfs::bfs::vectorized::{SimdOpts, VectorizedBfs};
 use phi_bfs::bfs::BfsEngine;
 use phi_bfs::coordinator::engine::{make_engine, EngineKind};
 use phi_bfs::coordinator::governor::estimate_working_set;
-use phi_bfs::coordinator::{AdmissionPolicy, BatchPolicy, BfsJob, Coordinator, RunPolicy};
+use phi_bfs::coordinator::{
+    AdmissionPolicy, BatchPolicy, BfsJob, Coordinator, RunPolicy, Supervisor,
+};
 use phi_bfs::graph::sell::Sell16;
 use phi_bfs::graph::stats::{DegreeStats, SellOccupancy};
 use phi_bfs::graph::{Csr, RmatConfig};
@@ -887,17 +893,27 @@ fn main() {
     }
     let mut gov_rows: Vec<GovRow> = Vec::new();
     let mut gov_snapshot = None;
-    for name in ["ungoverned", "governed"] {
-        let coord = if name == "governed" {
-            Coordinator::with_limits(1, Some(budget10), AdmissionPolicy::default())
-        } else {
+    for name in ["ungoverned", "governed", "supervised"] {
+        let coord = Arc::new(if name == "ungoverned" {
             Coordinator::new(1)
-        };
+        } else {
+            Coordinator::with_limits(1, Some(budget10), AdmissionPolicy::default())
+        });
+        // the supervised arm routes the same governed job stream through
+        // the watchdog's worker pool with a generous liveness budget, so
+        // its delta over "governed" is pure heartbeat + monitor cost
+        let supervisor =
+            (name == "supervised").then(|| Supervisor::new(Arc::clone(&coord), 1));
+        job10.run.liveness =
+            supervisor.as_ref().map(|_| std::time::Duration::from_secs(10));
         // validated warm-up: proves the governed arm traverses correctly
         // and fills the artifact cache so timed iterations measure the
         // steady-state path (admission + ledger + cached artifacts)
         job10.validate = true;
-        let warm = coord.run_job(&job10).expect("warm-up job admitted");
+        let warm = match &supervisor {
+            Some(s) => s.run_job(job10.clone()).expect("warm-up job admitted"),
+            None => coord.run_job(&job10).expect("warm-up job admitted"),
+        };
         assert!(warm.all_valid, "{name}: warm-up run must validate");
         assert!(
             warm.pressure.is_empty(),
@@ -905,10 +921,19 @@ fn main() {
             warm.pressure
         );
         job10.validate = false;
-        let m = bench.run(&format!("sell {name}"), || coord.run_job(&job10).expect("admitted"));
+        let m = bench.run(&format!("sell {name}"), || match &supervisor {
+            Some(s) => s.run_job(job10.clone()).expect("admitted"),
+            None => coord.run_job(&job10).expect("admitted"),
+        });
         let snap = coord.metrics().snapshot();
         assert_eq!(snap.jobs_shed, 0, "{name}: no job may shed under a planner-sized budget");
         assert_eq!(snap.pressure_events, 0, "{name}: no artifact may degrade");
+        if name == "supervised" {
+            assert_eq!(
+                snap.watchdog_fires, 0,
+                "{name}: a healthy run must never trip the watchdog"
+            );
+        }
         if name == "governed" {
             gov_snapshot = Some(snap);
         }
@@ -916,7 +941,10 @@ fn main() {
     }
     let ungoverned_teps = gov_rows[0].teps;
     let governed_teps = gov_rows[1].teps;
+    let supervised_teps = gov_rows[2].teps;
     let overhead_pct = (1.0 - governed_teps / ungoverned_teps.max(f64::MIN_POSITIVE)) * 100.0;
+    let watchdog_overhead_pct =
+        (1.0 - supervised_teps / governed_teps.max(f64::MIN_POSITIVE)) * 100.0;
     let mut t = Table::new(&["configuration", "TEPS", "mean time"]);
     for r in &gov_rows {
         t.row(&[
@@ -930,15 +958,24 @@ fn main() {
         "(governance overhead: {overhead_pct:.2}% — byte ledger, admission check and \
          watermark scan on every job; budget {budget10} B, zero pressure events)"
     );
-    // the wall-clock acceptance bar runs at full scale only — smoke runs
+    println!(
+        "(supervision overhead: {watchdog_overhead_pct:.2}% over governed — heartbeat \
+         tick per layer check + watchdog monitor + pool handoff; zero watchdog fires)"
+    );
+    // the wall-clock acceptance bars run at full scale only — smoke runs
     // are milliseconds long, where shared-runner noise could fail CI
-    // without a real regression; both TEPS land in BENCH_robustness.json
+    // without a real regression; every TEPS lands in BENCH_robustness.json
     // always so the trajectory is visible either way
     if !smoke {
         assert!(
             governed_teps >= ungoverned_teps * 0.97,
             "governed TEPS {governed_teps:.0} lost more than 3% to ungoverned \
              {ungoverned_teps:.0} ({overhead_pct:.2}% overhead)"
+        );
+        assert!(
+            supervised_teps >= governed_teps * 0.97,
+            "supervised TEPS {supervised_teps:.0} lost more than 3% to governed \
+             {governed_teps:.0} ({watchdog_overhead_pct:.2}% watchdog overhead)"
         );
     }
 
@@ -948,21 +985,26 @@ fn main() {
         .unwrap_or_else(|_| "BENCH_robustness.json".into());
     let robustness_json = format!(
         "{{\"bench\":\"robustness\",\"scale\":{},\"edgefactor\":16,\"smoke\":{},\
-         \"m_edges\":{:.0},\"budget_bytes\":{},\"overhead_pct\":{:.3},\"configs\":[\
+         \"m_edges\":{:.0},\"budget_bytes\":{},\"overhead_pct\":{:.3},\
+         \"watchdog_overhead_pct\":{:.3},\"configs\":[\
          {{\"name\":\"ungoverned\",\"teps\":{:.1},\"mean_seconds\":{:.6}}},\
          {{\"name\":\"governed\",\"teps\":{:.1},\"mean_seconds\":{:.6},\
-         \"pressure_events\":{},\"jobs_shed\":{}}}]}}\n",
+         \"pressure_events\":{},\"jobs_shed\":{}}},\
+         {{\"name\":\"supervised\",\"teps\":{:.1},\"mean_seconds\":{:.6}}}]}}\n",
         gov_scale,
         smoke,
         m_edges10,
         budget10,
         overhead_pct,
+        watchdog_overhead_pct,
         gov_rows[0].teps,
         gov_rows[0].seconds,
         gov_rows[1].teps,
         gov_rows[1].seconds,
         gov_snapshot.pressure_events,
         gov_snapshot.jobs_shed,
+        gov_rows[2].teps,
+        gov_rows[2].seconds,
     );
     std::fs::write(&robustness_json_path, &robustness_json)
         .unwrap_or_else(|e| panic!("writing {robustness_json_path}: {e}"));

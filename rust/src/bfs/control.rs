@@ -66,6 +66,16 @@ pub struct RunControl {
     cancelled: AtomicBool,
     /// Deadline as nanos-since-[`anchor`], `u64::MAX` = none armed.
     deadline_ns: AtomicU64,
+    /// Monotonic progress heartbeat, bumped by every [`stop_reason`]
+    /// call — i.e. at exactly the layer boundaries where cancellation is
+    /// already checked, so the hot loops stay untouched. A supervisor
+    /// that samples [`ticks`] and sees no movement knows the traversal
+    /// stopped reaching layer boundaries (a non-cooperative hang), which
+    /// no deadline can detect.
+    ///
+    /// [`stop_reason`]: RunControl::stop_reason
+    /// [`ticks`]: RunControl::ticks
+    ticks: AtomicU64,
 }
 
 impl Default for RunControl {
@@ -89,6 +99,7 @@ impl RunControl {
         RunControl {
             cancelled: AtomicBool::new(false),
             deadline_ns: AtomicU64::new(u64::MAX),
+            ticks: AtomicU64::new(0),
         }
     }
 
@@ -142,9 +153,11 @@ impl RunControl {
 
     /// The per-layer check: why (if at all) the traversal should stop now.
     /// Cancellation wins over the deadline; the `Instant::now` for the
-    /// deadline test is only taken when one is armed.
+    /// deadline test is only taken when one is armed. Every call bumps the
+    /// progress heartbeat — reaching a control check *is* progress.
     #[inline]
     pub fn stop_reason(&self) -> Option<RunStatus> {
+        self.ticks.fetch_add(1, Ordering::Relaxed);
         if self.is_cancelled() {
             return Some(RunStatus::Cancelled);
         }
@@ -152,6 +165,16 @@ impl RunControl {
             return Some(RunStatus::TimedOut);
         }
         None
+    }
+
+    /// The heartbeat counter: how many control checks the traversals
+    /// sharing this control have reached. A watchdog samples this — two
+    /// identical readings a liveness budget apart mean the run made no
+    /// layer progress in between. Reading never ticks; only
+    /// [`RunControl::stop_reason`] does.
+    #[inline]
+    pub fn ticks(&self) -> u64 {
+        self.ticks.load(Ordering::Relaxed)
     }
 }
 
@@ -201,6 +224,21 @@ mod tests {
         assert!(rem > Duration::from_secs(3500) && rem <= Duration::from_secs(3600));
         c.arm_deadline_in(Duration::ZERO);
         assert_eq!(c.deadline_remaining(), Some(Duration::ZERO), "passed → zero");
+    }
+
+    #[test]
+    fn stop_reason_ticks_the_heartbeat_and_reads_do_not() {
+        let c = RunControl::new();
+        assert_eq!(c.ticks(), 0);
+        assert_eq!(c.stop_reason(), None);
+        assert_eq!(c.stop_reason(), None);
+        assert_eq!(c.ticks(), 2, "each check is one heartbeat");
+        assert_eq!(c.ticks(), 2, "reading the heartbeat must not tick it");
+        // interrupted checks still count as heartbeats: the worker reached
+        // a layer boundary, which is exactly the progress being measured
+        c.cancel();
+        assert_eq!(c.stop_reason(), Some(RunStatus::Cancelled));
+        assert_eq!(c.ticks(), 3);
     }
 
     #[test]

@@ -108,6 +108,12 @@ COMMANDS:
                         prefix and are excluded from TEPS statistics
                --max-attempts N (3)  attempts per root before it counts
                         as failed; retries degrade counted VPU -> serial
+               --liveness-ms N (off)  watchdog liveness budget: the job
+                        runs on a supervised worker, a wave that makes no
+                        layer progress for N ms is cancelled, and one that
+                        ignores cancellation for a further N ms is
+                        abandoned (structured per-root failures, worker
+                        replaced)
                --mem-budget-mb N (unbounded)  memory budget for the
                         resource governor: artifact builds and per-job
                         working sets are byte-accounted against it,
@@ -157,11 +163,14 @@ COMMANDS:
                         (betweenness always batches its sources)
     serve      BFS-as-a-service daemon: newline-delimited text protocol
                (LOAD <path|rmat:S:EF:SEED> [sigma] / BFS <gid> <root>
-               [deadline-ms] / STATS / SHUTDOWN), one reply line per
-               request. BFS requests accumulate per graph and flush as a
-               wave at --batch-width or at the oldest request's deadline
-               margin, whichever first; SHUTDOWN drains pending waves
-               before exit and prints a stats summary.
+               [deadline-ms] / STATS / HEALTH / SHUTDOWN), one reply line
+               per request (request lines are capped at 64 KiB —
+               oversize lines get ERR parse line-too-long). BFS requests
+               accumulate per graph and flush as a wave at --batch-width
+               or at the oldest request's deadline margin, whichever
+               first; requests whose deadline lapses in the queue get ERR
+               expired; SHUTDOWN drains pending waves before exit and
+               prints a stats summary.
                --host ADDR (127.0.0.1) --port N (0 = ephemeral)
                --engine NAME (hybrid-sell-ms) --threads N (4)
                --workers N (2)  coordinator workers per wave
@@ -171,9 +180,27 @@ COMMANDS:
                --max-attempts N (3)  per-root retries; also bounds wave
                         re-submissions after admission-control rejections
                --mem-budget-mb N (unbounded) --max-inflight N (unbounded)
+               --liveness-ms N (off)  per-wave watchdog budget: waves run
+                        on the supervised self-healing pool; a hung wave
+                        is cancelled at N ms without layer progress and
+                        abandoned (worker detached + replaced, structured
+                        ERR failed replies) after a further N ms
+               --breaker-threshold N (3)  consecutive wave failures that
+                        trip a graph's circuit breaker open; while open,
+                        that graph's BFS requests fast-fail with
+                        ERR unavailable <retry-after-ms> and a
+                        server-driven half-open probe wave closes the
+                        breaker once the graph traverses again
+               --breaker-cooldown-ms N (500)  open time before the probe
                --fault-reject-waves N (0)  chaos: shed the first N waves
                         as Rejected to exercise the retry path (needs
                         --mem-budget-mb)
+               --fault-hang-waves N (0)  chaos: the first N waves on the
+                        first-loaded graph hang non-cooperatively to
+                        exercise the watchdog (needs --liveness-ms)
+               --fault-fail-waves N (0)  chaos: the next N waves on the
+                        first-loaded graph fail deterministically to
+                        exercise the circuit breaker
     client     One-shot driver for a running serve daemon (CI smoke)
                --addr HOST:PORT (required)
                --send \"CMD;CMD;...\"  request lines, ';'-separated,

@@ -42,6 +42,21 @@ pub enum FaultKind {
     /// fill the budget for real. Unlike the other kinds it fires at
     /// admission, not per batch — [`FaultPlan::apply`] passes through.
     MemoryPressure { bytes: usize },
+    /// A non-cooperative hang: the worker never returns and never checks
+    /// its [`RunControl`], unlike the bounded [`FaultKind::Stall`]. No
+    /// deadline or cancel can stop it — only the watchdog's
+    /// abandon-and-replace path ends the wave (the hung thread itself is
+    /// leaked, exactly like a real wedged gather loop or stuck device
+    /// call).
+    Hang,
+    /// Deterministic wave failure: the traversal is skipped and an empty
+    /// result vector returned, on every batch and every retry (plans with
+    /// this kind are sticky), so all roots exhaust their attempts and the
+    /// wave surfaces as structured failures. The count is carried for the
+    /// serve layer, which injects the plan into the first `n` waves of a
+    /// chaos-target graph to drive a circuit breaker open and then closed
+    /// again.
+    FailWaves(u64),
 }
 
 /// One deterministic injected fault: `kind` fires at batch `at_batch`.
@@ -81,6 +96,19 @@ impl FaultPlan {
         FaultPlan { at_batch: 0, kind: FaultKind::MemoryPressure { bytes }, sticky: true }
     }
 
+    /// Hang forever at batch `b` — the worker stops heartbeating and
+    /// ignores cancellation, so only watchdog abandonment ends the wave.
+    pub fn hang_at(b: usize) -> Self {
+        FaultPlan { at_batch: b, kind: FaultKind::Hang, sticky: false }
+    }
+
+    /// Fail every batch and retry of the job (empty results until the
+    /// roots exhaust their attempts); `n` tells the serve layer how many
+    /// consecutive waves to poison.
+    pub fn fail_waves(n: u64) -> Self {
+        FaultPlan { at_batch: 0, kind: FaultKind::FailWaves(n), sticky: true }
+    }
+
     /// Does this plan fire for batch index `b`?
     pub fn fires_at(&self, b: usize) -> bool {
         b == self.at_batch || (self.sticky && b >= self.at_batch)
@@ -99,6 +127,12 @@ impl FaultPlan {
                 }
                 // applied by the scheduler at admission, not per batch
                 FaultKind::MemoryPressure { .. } => {}
+                FaultKind::Hang => loop {
+                    // no ctl check on purpose: this models a worker that
+                    // stopped reaching layer boundaries entirely
+                    std::thread::sleep(Duration::from_millis(50));
+                },
+                FaultKind::FailWaves(_) => return Vec::new(),
             }
         }
         go()
@@ -181,6 +215,20 @@ mod tests {
             Vec::new()
         });
         assert!(ran, "batches run normally under synthetic pressure");
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn fail_waves_is_sticky_and_skips_the_traversal() {
+        let p = FaultPlan::fail_waves(3);
+        assert!(p.sticky, "every retry must fail too");
+        assert!(p.fires_at(0) && p.fires_at(5));
+        let mut ran = false;
+        let out = p.apply(0, || {
+            ran = true;
+            vec![]
+        });
+        assert!(!ran, "FailWaves must not run the traversal");
         assert!(out.is_empty());
     }
 

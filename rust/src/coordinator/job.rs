@@ -66,6 +66,13 @@ pub struct RunPolicy {
     pub max_attempts: usize,
     /// Chaos-harness fault to inject ([`FaultPlan`]); `None` in production.
     pub fault: Option<FaultPlan>,
+    /// Liveness budget for supervised execution
+    /// ([`super::watchdog::Supervisor`]): if the job's heartbeat
+    /// ([`RunControl::ticks`]) stops advancing for this long, the watchdog
+    /// fires the cancel; after a further grace window it abandons the wave
+    /// outright. `None` (the default) means unsupervised — the watchdog
+    /// leaves the job alone even when run through a supervisor.
+    pub liveness: Option<Duration>,
     /// Digest each root's distance vector into a [`DepthSummary`] on
     /// [`RootRun::depths`]. Off by default — the harness compares whole
     /// trees itself — and switched on by serving callers
@@ -81,6 +88,7 @@ impl Default for RunPolicy {
             control: None,
             max_attempts: 3,
             fault: None,
+            liveness: None,
             report_depths: false,
         }
     }

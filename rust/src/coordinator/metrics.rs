@@ -51,6 +51,15 @@ pub struct Metrics {
     /// Structured [`super::governor::ResourcePressure`] degradation events
     /// (optional artifacts skipped under memory pressure).
     pressure_events: AtomicUsize,
+    /// Watchdog liveness trips: a supervised wave missed its heartbeat
+    /// budget and had its [`crate::bfs::RunControl`] cancel fired.
+    watchdog_fires: AtomicUsize,
+    /// Waves abandoned after the post-cancel grace window also expired —
+    /// the worker never returned and its results were discarded.
+    hung_waves: AtomicUsize,
+    /// Replacement workers spawned for abandoned ones, restoring the
+    /// supervised pool to full capacity.
+    workers_replaced: AtomicUsize,
 }
 
 /// Point-in-time copy of the counters.
@@ -90,6 +99,12 @@ pub struct MetricsSnapshot {
     pub bytes_evicted: u64,
     /// Optional-artifact skips under memory pressure (cumulative).
     pub pressure_events: usize,
+    /// Waves whose liveness budget lapsed (watchdog fired their cancel).
+    pub watchdog_fires: usize,
+    /// Waves abandoned outright after the grace window.
+    pub hung_waves: usize,
+    /// Replacement workers spawned for abandoned ones.
+    pub workers_replaced: usize,
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -102,7 +117,8 @@ impl std::fmt::Display for MetricsSnapshot {
             "jobs={} roots={} batches={} edges={} traversal_s={:.3} prep_s={:.3} \
              teps={:.3e} cache_hits={} cache_content_hits={} cache_evictions={} \
              cache_bytes={} bytes_evicted={} worker_panics={} root_retries={} \
-             degraded_roots={} failed_roots={} jobs_shed={} pressure_events={}",
+             degraded_roots={} failed_roots={} jobs_shed={} pressure_events={} \
+             watchdog_fires={} hung_waves={} workers_replaced={}",
             self.jobs,
             self.roots,
             self.batches,
@@ -121,6 +137,9 @@ impl std::fmt::Display for MetricsSnapshot {
             self.failed_roots,
             self.jobs_shed,
             self.pressure_events,
+            self.watchdog_fires,
+            self.hung_waves,
+            self.workers_replaced,
         )
     }
 }
@@ -205,6 +224,21 @@ impl Metrics {
         self.pressure_events.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one watchdog liveness trip (missed heartbeats → cancel fired).
+    pub fn record_watchdog_fire(&self) {
+        self.watchdog_fires.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one wave abandoned after the grace window.
+    pub fn record_hung_wave(&self) {
+        self.hung_waves.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one replacement worker spawned for an abandoned one.
+    pub fn record_worker_replaced(&self) {
+        self.workers_replaced.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let edges = self.edges.load(Ordering::Relaxed);
         let secs = self.nanos.load(Ordering::Relaxed) as f64 / 1e9;
@@ -229,6 +263,9 @@ impl Metrics {
             cache_bytes: self.cache_bytes.load(Ordering::Relaxed),
             bytes_evicted: self.bytes_evicted.load(Ordering::Relaxed),
             pressure_events: self.pressure_events.load(Ordering::Relaxed),
+            watchdog_fires: self.watchdog_fires.load(Ordering::Relaxed),
+            hung_waves: self.hung_waves.load(Ordering::Relaxed),
+            workers_replaced: self.workers_replaced.load(Ordering::Relaxed),
         }
     }
 }
@@ -350,10 +387,33 @@ mod tests {
         m.record_job_shed();
         let line = m.snapshot().to_string();
         assert!(!line.contains('\n'), "one line, embeddable in a protocol reply");
-        let keys = ["jobs=1", "roots=1", "edges=100", "jobs_shed=1", "teps=", "cache_hits=0"];
+        let keys = [
+            "jobs=1",
+            "roots=1",
+            "edges=100",
+            "jobs_shed=1",
+            "teps=",
+            "cache_hits=0",
+            "watchdog_fires=0",
+            "hung_waves=0",
+            "workers_replaced=0",
+        ];
         for key in keys {
             assert!(line.contains(key), "{line:?} missing {key}");
         }
+    }
+
+    #[test]
+    fn supervision_counters_accumulate() {
+        let m = Metrics::default();
+        m.record_watchdog_fire();
+        m.record_watchdog_fire();
+        m.record_hung_wave();
+        m.record_worker_replaced();
+        let s = m.snapshot();
+        assert_eq!(s.watchdog_fires, 2);
+        assert_eq!(s.hung_waves, 1);
+        assert_eq!(s.workers_replaced, 1);
     }
 
     #[test]

@@ -29,6 +29,9 @@
 //!   artifact cache (LRU-bounded).
 //! * [`metrics`] — run counters, TEPS aggregation, and fault/retry
 //!   accounting.
+//! * [`watchdog`] — supervised execution: a liveness monitor that cancels
+//!   waves whose heartbeat stalls and abandons (then replaces) workers
+//!   that ignore the cancel.
 
 pub mod engine;
 pub mod error;
@@ -37,6 +40,7 @@ pub mod governor;
 pub mod job;
 pub mod metrics;
 pub mod scheduler;
+pub mod watchdog;
 
 pub use engine::{make_engine, EngineKind};
 pub use error::CoordinatorError;
@@ -45,3 +49,4 @@ pub use governor::{AdmissionPolicy, LedgerHold, ResourceGovernor, ResourcePressu
 pub use job::{BatchPolicy, BfsJob, DepthSummary, JobOutcome, RootOutcome, RootRun, RunPolicy};
 pub use metrics::MetricsSnapshot;
 pub use scheduler::{retry_backoff, Coordinator};
+pub use watchdog::Supervisor;

@@ -71,7 +71,7 @@ use crate::Vertex;
 /// structures this guards (the result slots, the artifact cache) are valid
 /// after any interrupted write — a panicking worker is contained by
 /// `catch_unwind` and must not wedge every later job on a poisoned lock.
-fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 

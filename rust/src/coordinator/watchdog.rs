@@ -1,0 +1,604 @@
+//! Supervised execution: a liveness watchdog over the coordinator.
+//!
+//! Every protection below this layer is *cooperative* — deadlines and
+//! cancellation are checked at layer boundaries, so a wave that stops
+//! reaching them (a wedged gather loop, a stuck device call, a worker
+//! sleeping inside an injected [`super::FaultKind::Hang`]) is invisible to
+//! all of it. The [`Supervisor`] detects and heals around exactly that
+//! failure mode:
+//!
+//! 1. Supervised jobs run on a pool of detachable worker threads, each
+//!    executing whole [`Coordinator::run_job`] calls (the coordinator's
+//!    own scoped workers *join*, so a non-cooperative hang would wedge
+//!    `run_job` itself — supervision has to live above it).
+//! 2. A monitor thread samples each wave's heartbeat
+//!    ([`crate::bfs::RunControl::ticks`], bumped at every layer-boundary
+//!    control check). No movement for the wave's liveness budget
+//!    ([`super::RunPolicy::liveness`]) means the wave stopped making layer
+//!    progress: the monitor fires the wave's cancel (`watchdog_fires`), so
+//!    a merely *slow* cooperative wave stops at its next boundary and
+//!    returns partial results normally.
+//! 3. If the worker still does not return within a grace window (the
+//!    cancel was ignored — a true hang), the wave is **abandoned**: its
+//!    caller gets a well-formed [`JobOutcome`] of structured
+//!    [`RootOutcome::Failed`] entries (`hung_waves`), the hung thread is
+//!    condemned and left detached (it can never be joined), and a
+//!    replacement worker is spawned so pool capacity self-heals
+//!    (`workers_replaced`).
+//!
+//! Jobs without a liveness budget bypass the pool entirely and run inline
+//! on the caller's thread — unsupervised callers pay nothing.
+//!
+//! The liveness budget must cover the job's one-time prepare phase (no
+//! heartbeats tick while layouts build); serving deployments amortize
+//! preparation through the artifact cache, so in practice the budget only
+//! has to cover the longest layer.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::bfs::{GraphArtifacts, RunControl};
+use crate::graph::Csr;
+use crate::Vertex;
+
+use super::error::CoordinatorError;
+use super::job::{BfsJob, JobOutcome, RootOutcome};
+use super::scheduler::{lock_unpoisoned, Coordinator};
+
+/// Monitor poll bounds: the scan interval adapts to a quarter of the
+/// tightest watched liveness budget, clamped into this range.
+const POLL_MIN: Duration = Duration::from_millis(1);
+const POLL_MAX: Duration = Duration::from_millis(50);
+
+/// One supervised job waiting for (or holding) its result.
+struct Slot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+    /// Set when the monitor abandoned the wave (the stored outcome is
+    /// synthesized, and the worker's late result — if it ever comes —
+    /// will be discarded).
+    abandoned: AtomicBool,
+}
+
+enum SlotState {
+    Pending,
+    Done(Result<JobOutcome, CoordinatorError>),
+}
+
+impl Slot {
+    fn new() -> Self {
+        Slot {
+            state: Mutex::new(SlotState::Pending),
+            cv: Condvar::new(),
+            abandoned: AtomicBool::new(false),
+        }
+    }
+
+    /// Fill the slot unless it already holds a result. Returns whether
+    /// this call won the race (the loser's result is discarded).
+    fn fill(&self, result: Result<JobOutcome, CoordinatorError>) -> bool {
+        let mut state = lock_unpoisoned(&self.state);
+        let won = matches!(*state, SlotState::Pending);
+        if won {
+            *state = SlotState::Done(result);
+        }
+        self.cv.notify_all();
+        won
+    }
+
+    fn wait(&self) -> Result<JobOutcome, CoordinatorError> {
+        let mut state = lock_unpoisoned(&self.state);
+        loop {
+            match std::mem::replace(&mut *state, SlotState::Pending) {
+                SlotState::Done(result) => return result,
+                SlotState::Pending => {
+                    state = self
+                        .cv
+                        .wait(state)
+                        .unwrap_or_else(|poisoned| poisoned.into_inner());
+                }
+            }
+        }
+    }
+}
+
+/// Per-worker condemnation flag: set by the monitor when the worker's
+/// wave is abandoned. A condemned worker that eventually returns exits
+/// instead of pulling more work (its replacement already took its seat);
+/// one that never returns stays detached forever.
+struct WorkerCell {
+    condemned: AtomicBool,
+}
+
+/// A queued supervised job.
+struct Ticket {
+    job: BfsJob,
+    slot: Arc<Slot>,
+}
+
+/// A wave currently executing with a liveness budget armed.
+struct WatchEntry {
+    id: u64,
+    control: Arc<RunControl>,
+    liveness: Duration,
+    /// Extra time after the cancel fires before the wave is abandoned;
+    /// equal to the liveness budget, so abandonment lands at 2× liveness.
+    grace: Duration,
+    slot: Arc<Slot>,
+    worker: Arc<WorkerCell>,
+    // enough of the job to synthesize a well-formed outcome on abandonment
+    job_id: u64,
+    roots: Vec<Vertex>,
+    graph: Arc<Csr>,
+    // monitor-private progress tracking
+    last_ticks: u64,
+    last_progress: Instant,
+    fired_at: Option<Instant>,
+}
+
+struct Inner {
+    coordinator: Arc<Coordinator>,
+    queue: Mutex<VecDeque<Ticket>>,
+    queue_cv: Condvar,
+    watched: Mutex<Vec<WatchEntry>>,
+    watched_cv: Condvar,
+    shutdown: AtomicBool,
+    entry_seq: AtomicU64,
+    /// Workers currently able to serve waves (spawned minus condemned).
+    capacity: AtomicUsize,
+}
+
+/// The supervision layer: a self-healing worker pool plus the liveness
+/// monitor. Construct one per daemon (or per harness run) around a shared
+/// [`Coordinator`]; submit work with [`Supervisor::run_job`].
+pub struct Supervisor {
+    inner: Arc<Inner>,
+    monitor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Supervisor {
+    /// A supervisor over `coordinator` with `workers` pool threads
+    /// (clamped to ≥ 1). Pool threads only execute jobs that carry a
+    /// liveness budget; unsupervised jobs run inline in the caller.
+    pub fn new(coordinator: Arc<Coordinator>, workers: usize) -> Self {
+        let inner = Arc::new(Inner {
+            coordinator,
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            watched: Mutex::new(Vec::new()),
+            watched_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            entry_seq: AtomicU64::new(0),
+            capacity: AtomicUsize::new(0),
+        });
+        for _ in 0..workers.max(1) {
+            Inner::spawn_worker(&inner);
+        }
+        let monitor_inner = Arc::clone(&inner);
+        let monitor = std::thread::Builder::new()
+            .name("phi-bfs-watchdog".into())
+            .spawn(move || monitor_loop(&monitor_inner))
+            .expect("spawn watchdog monitor");
+        Supervisor { inner, monitor: Some(monitor) }
+    }
+
+    /// The shared coordinator every supervised job runs on.
+    pub fn coordinator(&self) -> &Arc<Coordinator> {
+        &self.inner.coordinator
+    }
+
+    /// Workers currently able to serve waves. After an abandonment this
+    /// returns to its original value: the condemned worker left the pool
+    /// and its replacement joined it.
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity.load(Ordering::Relaxed)
+    }
+
+    /// Run `job` under supervision, blocking until it completes or is
+    /// abandoned. Jobs without [`super::RunPolicy::liveness`] run inline
+    /// (identical to [`Coordinator::run_job`]); jobs with one run on the
+    /// pool and are guaranteed to return within roughly 2× the budget of
+    /// the moment they stop making progress — abandoned waves yield a
+    /// well-formed outcome whose every root is [`RootOutcome::Failed`].
+    pub fn run_job(&self, job: BfsJob) -> Result<JobOutcome, CoordinatorError> {
+        if job.run.liveness.is_none() {
+            return self.inner.coordinator.run_job(&job);
+        }
+        let slot = Arc::new(Slot::new());
+        {
+            let mut q = lock_unpoisoned(&self.inner.queue);
+            q.push_back(Ticket { job, slot: Arc::clone(&slot) });
+        }
+        self.inner.queue_cv.notify_one();
+        slot.wait()
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::Relaxed);
+        // fail any still-queued tickets so no submitter waits forever
+        let stranded: Vec<Ticket> = lock_unpoisoned(&self.inner.queue).drain(..).collect();
+        for t in stranded {
+            t.slot.abandoned.store(true, Ordering::Relaxed);
+            t.slot.fill(Ok(abandoned_outcome(&t.job, "supervisor shutting down")));
+        }
+        self.inner.queue_cv.notify_all();
+        self.inner.watched_cv.notify_all();
+        if let Some(m) = self.monitor.take() {
+            m.join().ok();
+        }
+        // workers are detached by design (a hung one can never be joined);
+        // idle ones exit at their next queue wakeup
+    }
+}
+
+impl Inner {
+    fn spawn_worker(inner: &Arc<Inner>) {
+        let cell = Arc::new(WorkerCell { condemned: AtomicBool::new(false) });
+        inner.capacity.fetch_add(1, Ordering::Relaxed);
+        let worker_inner = Arc::clone(inner);
+        std::thread::Builder::new()
+            .name("phi-bfs-supervised".into())
+            .spawn(move || worker_loop(&worker_inner, &cell))
+            .expect("spawn supervised worker");
+    }
+
+    /// Register a running wave with the monitor; returns the entry id.
+    fn watch(
+        &self,
+        job: &BfsJob,
+        liveness: Duration,
+        control: &Arc<RunControl>,
+        slot: &Arc<Slot>,
+        worker: &Arc<WorkerCell>,
+    ) -> u64 {
+        let id = self.entry_seq.fetch_add(1, Ordering::Relaxed);
+        let entry = WatchEntry {
+            id,
+            control: Arc::clone(control),
+            liveness,
+            grace: liveness,
+            slot: Arc::clone(slot),
+            worker: Arc::clone(worker),
+            job_id: job.id,
+            roots: job.roots.clone(),
+            graph: Arc::clone(&job.graph),
+            last_ticks: control.ticks(),
+            last_progress: Instant::now(),
+            fired_at: None,
+        };
+        lock_unpoisoned(&self.watched).push(entry);
+        self.watched_cv.notify_all();
+        id
+    }
+
+    fn unwatch(&self, id: u64) {
+        lock_unpoisoned(&self.watched).retain(|e| e.id != id);
+    }
+
+    /// The abandonment path: synthesize the failure outcome, hand it to
+    /// the waiting submitter, condemn the hung worker, and restore pool
+    /// capacity with a replacement.
+    fn abandon(self: &Arc<Self>, entry: WatchEntry) {
+        let metrics = self.coordinator.metrics();
+        metrics.record_hung_wave();
+        for _ in &entry.roots {
+            metrics.record_failed_root();
+        }
+        entry.worker.condemned.store(true, Ordering::Relaxed);
+        self.capacity.fetch_sub(1, Ordering::Relaxed);
+        let detail = format!(
+            "wave abandoned by watchdog: no layer progress within {:?} and cancellation \
+             ignored for a further {:?} (hung worker detached)",
+            entry.liveness, entry.grace
+        );
+        let job = FakeJob { id: entry.job_id, roots: &entry.roots, graph: &entry.graph };
+        entry.slot.abandoned.store(true, Ordering::Relaxed);
+        entry.slot.fill(Ok(abandoned_outcome_parts(job, &detail)));
+        if !self.shutdown.load(Ordering::Relaxed) {
+            Inner::spawn_worker(self);
+            metrics.record_worker_replaced();
+        }
+    }
+}
+
+/// The fields of a job the abandonment synthesizer needs (the real
+/// [`BfsJob`] is owned by the hung worker at that point).
+struct FakeJob<'a> {
+    id: u64,
+    roots: &'a [Vertex],
+    graph: &'a Arc<Csr>,
+}
+
+fn abandoned_outcome_parts(job: FakeJob<'_>, detail: &str) -> JobOutcome {
+    JobOutcome {
+        id: job.id,
+        outcomes: job
+            .roots
+            .iter()
+            .map(|&root| RootOutcome::Failed {
+                root,
+                error: detail.to_string(),
+                attempts: 1,
+            })
+            .collect(),
+        all_valid: false,
+        preparation_seconds: 0.0,
+        artifacts: Arc::new(GraphArtifacts::for_graph(job.graph)),
+        pressure: Vec::new(),
+    }
+}
+
+fn abandoned_outcome(job: &BfsJob, detail: &str) -> JobOutcome {
+    abandoned_outcome_parts(
+        FakeJob { id: job.id, roots: &job.roots, graph: &job.graph },
+        detail,
+    )
+}
+
+fn worker_loop(inner: &Arc<Inner>, cell: &Arc<WorkerCell>) {
+    loop {
+        let ticket = {
+            let mut q = lock_unpoisoned(&inner.queue);
+            loop {
+                if inner.shutdown.load(Ordering::Relaxed)
+                    || cell.condemned.load(Ordering::Relaxed)
+                {
+                    return;
+                }
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                q = inner
+                    .queue_cv
+                    .wait(q)
+                    .unwrap_or_else(|poisoned| poisoned.into_inner());
+            }
+        };
+        execute(inner, cell, ticket);
+        if cell.condemned.load(Ordering::Relaxed) {
+            // the replacement already took this seat
+            return;
+        }
+    }
+}
+
+fn execute(inner: &Arc<Inner>, cell: &Arc<WorkerCell>, ticket: Ticket) {
+    let Ticket { mut job, slot } = ticket;
+    // the heartbeat lives on the control: give the job a dedicated one if
+    // the caller didn't supply a shared handle
+    let control = Arc::clone(job.run.control.get_or_insert_with(Arc::default));
+    let watch_id = job
+        .run
+        .liveness
+        .map(|budget| inner.watch(&job, budget, &control, &slot, cell));
+    let result = inner.coordinator.run_job(&job);
+    if let Some(id) = watch_id {
+        inner.unwatch(id);
+    }
+    // a worker returning after abandonment loses the race; its result is
+    // discarded (the submitter already got the synthesized failure)
+    slot.fill(result);
+}
+
+fn monitor_loop(inner: &Arc<Inner>) {
+    let mut watched = lock_unpoisoned(&inner.watched);
+    loop {
+        if inner.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        if watched.is_empty() {
+            // idle: sleep until a wave registers or shutdown
+            watched = inner
+                .watched_cv
+                .wait(watched)
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            continue;
+        }
+        let poll = watched
+            .iter()
+            .map(|e| e.liveness / 4)
+            .min()
+            .unwrap_or(POLL_MAX)
+            .clamp(POLL_MIN, POLL_MAX);
+        let (guard, _) = inner
+            .watched_cv
+            .wait_timeout(watched, poll)
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        watched = guard;
+        if inner.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        let now = Instant::now();
+        let mut abandoned: Vec<WatchEntry> = Vec::new();
+        let mut i = 0;
+        while i < watched.len() {
+            let ticks = watched[i].control.ticks();
+            if ticks != watched[i].last_ticks {
+                // the wave reached a layer boundary since the last scan —
+                // that is liveness, whatever the wall clock says
+                let e = &mut watched[i];
+                e.last_ticks = ticks;
+                e.last_progress = now;
+                e.fired_at = None;
+                i += 1;
+                continue;
+            }
+            let idle = now.saturating_duration_since(watched[i].last_progress);
+            let liveness = watched[i].liveness;
+            let grace = watched[i].grace;
+            match watched[i].fired_at {
+                None if idle >= liveness => {
+                    watched[i].control.cancel();
+                    inner.coordinator.metrics().record_watchdog_fire();
+                    watched[i].fired_at = Some(now);
+                    i += 1;
+                }
+                Some(fired) if now.saturating_duration_since(fired) >= grace => {
+                    abandoned.push(watched.swap_remove(i));
+                    // no i += 1: swap_remove moved a fresh entry into i
+                }
+                _ => i += 1,
+            }
+        }
+        if !abandoned.is_empty() {
+            // abandon outside the watched lock: spawning workers and
+            // filling slots must not block the next scan
+            drop(watched);
+            for e in abandoned {
+                inner.abandon(e);
+            }
+            watched = lock_unpoisoned(&inner.watched);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EngineKind;
+    use crate::coordinator::{BatchPolicy, FaultPlan, RunPolicy};
+    use crate::graph::RmatConfig;
+
+    fn graph() -> Arc<Csr> {
+        let el = RmatConfig::graph500(8, 8).generate(3);
+        Arc::new(Csr::from_edge_list(8, &el))
+    }
+
+    fn job(graph: &Arc<Csr>, liveness: Option<Duration>) -> BfsJob {
+        BfsJob {
+            id: 1,
+            graph: Arc::clone(graph),
+            roots: vec![0, 1, 2],
+            engine: EngineKind::SerialLayered,
+            validate: false,
+            batch: BatchPolicy::Fixed(3),
+            run: RunPolicy { liveness, ..RunPolicy::default() },
+        }
+    }
+
+    fn supervisor(workers: usize) -> Supervisor {
+        Supervisor::new(Arc::new(Coordinator::new(1)), workers)
+    }
+
+    #[test]
+    fn unsupervised_jobs_run_inline_and_complete() {
+        let sup = supervisor(1);
+        let g = graph();
+        let outcome = sup.run_job(job(&g, None)).expect("admitted");
+        assert_eq!(outcome.outcomes.len(), 3);
+        assert!(outcome.failures().next().is_none());
+        let snap = sup.coordinator().metrics().snapshot();
+        assert_eq!(snap.watchdog_fires, 0);
+        assert_eq!(snap.hung_waves, 0);
+    }
+
+    #[test]
+    fn healthy_supervised_jobs_complete_without_watchdog_fires() {
+        let sup = supervisor(2);
+        let g = graph();
+        for _ in 0..4 {
+            let outcome =
+                sup.run_job(job(&g, Some(Duration::from_secs(5)))).expect("admitted");
+            assert!(outcome.failures().next().is_none());
+        }
+        let snap = sup.coordinator().metrics().snapshot();
+        assert_eq!(snap.watchdog_fires, 0, "healthy waves must never trip the watchdog");
+        assert_eq!(snap.workers_replaced, 0);
+        assert_eq!(sup.capacity(), 2);
+    }
+
+    #[test]
+    fn hung_wave_is_abandoned_and_the_pool_self_heals() {
+        let sup = supervisor(1);
+        let g = graph();
+        let liveness = Duration::from_millis(40);
+        let mut hung = job(&g, Some(liveness));
+        hung.run.fault = Some(FaultPlan::hang_at(0));
+        let t0 = Instant::now();
+        let outcome = sup.run_job(hung).expect("abandonment is not a job error");
+        let elapsed = t0.elapsed();
+        assert_eq!(outcome.outcomes.len(), 3, "well-formed: one outcome per root");
+        assert!(outcome.outcomes.iter().all(|o| o.is_failed()));
+        assert!(!outcome.all_valid);
+        match &outcome.outcomes[0] {
+            RootOutcome::Failed { error, .. } => {
+                assert!(error.contains("watchdog"), "structured error: {error}")
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        // detection fires within the budget (+ one poll); abandonment adds
+        // the grace window. Generous wall bound: CI schedulers are noisy.
+        assert!(
+            elapsed >= liveness,
+            "cannot abandon before the budget lapses ({elapsed:?})"
+        );
+        assert!(
+            elapsed < liveness * 20,
+            "abandonment took {elapsed:?}, way past 2x the {liveness:?} budget"
+        );
+        let snap = sup.coordinator().metrics().snapshot();
+        assert_eq!(snap.watchdog_fires, 1);
+        assert_eq!(snap.hung_waves, 1);
+        assert_eq!(snap.workers_replaced, 1);
+        assert_eq!(snap.failed_roots, 3);
+        assert_eq!(sup.capacity(), 1, "replacement restored the pool");
+        // the replacement worker actually serves: the next supervised job
+        // on the same (single-seat) pool completes
+        let outcome = sup.run_job(job(&g, Some(Duration::from_secs(5)))).expect("admitted");
+        assert!(outcome.failures().next().is_none(), "pool recovered");
+    }
+
+    #[test]
+    fn cooperative_slow_wave_is_cancelled_not_abandoned() {
+        let sup = supervisor(1);
+        let g = graph();
+        // a bounded stall longer than the liveness budget but shorter than
+        // budget + grace: the worker sleeps through the budget (watchdog
+        // fires its cancel), then *does* reach its control checks and
+        // stops cooperatively before the grace window lapses — so nothing
+        // is abandoned
+        let mut slow = job(&g, Some(Duration::from_millis(150)));
+        slow.run.fault = Some(FaultPlan::stall_at(0, Duration::from_millis(200)));
+        slow.run.max_attempts = 1;
+        let outcome = sup.run_job(slow).expect("admitted");
+        let snap = sup.coordinator().metrics().snapshot();
+        assert!(snap.watchdog_fires >= 1, "the stall must trip the liveness budget");
+        assert_eq!(snap.hung_waves, 0, "a cooperative wave is never abandoned");
+        assert_eq!(snap.workers_replaced, 0);
+        assert_eq!(sup.capacity(), 1);
+        // the wave returned through the normal path: outcomes are Ran
+        // (cancelled partial prefixes), not synthesized failures
+        for o in &outcome.outcomes {
+            if let Some(run) = o.run() {
+                assert!(!run.status().is_complete() || run.reached > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn idle_supervisor_drops_cleanly() {
+        // the monitor sleeps on its condvar while nothing is watched; Drop
+        // must wake and join it without a wave ever having run
+        let sup = supervisor(2);
+        assert_eq!(sup.capacity(), 2);
+        drop(sup);
+    }
+
+    #[test]
+    fn fail_waves_fault_surfaces_structured_failures_not_hangs() {
+        let sup = supervisor(1);
+        let g = graph();
+        let mut failing = job(&g, Some(Duration::from_secs(5)));
+        failing.run.fault = Some(FaultPlan::fail_waves(2));
+        failing.run.max_attempts = 2;
+        let outcome = sup.run_job(failing).expect("admitted");
+        assert!(outcome.outcomes.iter().all(|o| o.is_failed()), "every root exhausts");
+        let snap = sup.coordinator().metrics().snapshot();
+        assert_eq!(snap.hung_waves, 0, "FailWaves returns promptly — never a hang");
+        assert_eq!(snap.failed_roots, 3);
+    }
+}

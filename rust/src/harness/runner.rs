@@ -14,6 +14,7 @@ use crate::coordinator::governor::{AdmissionPolicy, ResourcePressure};
 use crate::coordinator::job::{BatchPolicy, BfsJob, RootOutcome, RootRun, RunPolicy};
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::scheduler::{retry_backoff, Coordinator};
+use crate::coordinator::watchdog::Supervisor;
 use crate::graph::stats::LayerProfile;
 use crate::graph::{Csr, RmatConfig};
 use crate::rng::Xoshiro256;
@@ -51,6 +52,12 @@ pub struct Experiment {
     /// Admission cap on concurrently running jobs (`--max-inflight`);
     /// excess jobs are rejected with a retry hint instead of queueing.
     pub max_inflight: usize,
+    /// Watchdog liveness budget in milliseconds (`--liveness-ms`): the
+    /// job runs under a [`Supervisor`] that cancels it if its heartbeat
+    /// stalls this long and abandons it (structured per-root failures)
+    /// after a further grace window. `None` = unsupervised. The budget
+    /// must also cover the one-time prepare phase, which does not tick.
+    pub liveness_ms: Option<u64>,
 }
 
 impl Experiment {
@@ -68,6 +75,7 @@ impl Experiment {
             max_attempts: RunPolicy::default().max_attempts,
             mem_budget_mb: None,
             max_inflight: AdmissionPolicy::default().max_inflight,
+            liveness_ms: None,
         }
     }
 
@@ -103,14 +111,20 @@ impl Experiment {
             run: RunPolicy {
                 deadline: self.deadline_ms.map(Duration::from_millis),
                 max_attempts: self.max_attempts,
+                liveness: self.liveness_ms.map(Duration::from_millis),
                 ..RunPolicy::default()
             },
         };
-        let coordinator = Coordinator::with_limits(
+        let coordinator = Arc::new(Coordinator::with_limits(
             self.workers,
             self.mem_budget_mb.map(|mb| mb.saturating_mul(1 << 20)),
             AdmissionPolicy { max_inflight: self.max_inflight },
-        );
+        ));
+        // a liveness budget routes the job through the watchdog's
+        // supervised pool; without one the supervisor is never built and
+        // the job runs inline exactly as before
+        let supervisor =
+            self.liveness_ms.map(|_| Supervisor::new(Arc::clone(&coordinator), 1));
         // a shed job is transient backpressure, not a failure: honor the
         // coordinator's retry hint (floored by the jittered backoff curve
         // so concurrent harnesses cannot re-collide in lockstep) for a
@@ -120,7 +134,11 @@ impl Experiment {
         let max_submissions = self.max_attempts.max(1);
         let mut attempt = 0usize;
         let outcome = loop {
-            match coordinator.run_job(&job) {
+            let result = match &supervisor {
+                Some(sup) => sup.run_job(job.clone()),
+                None => coordinator.run_job(&job),
+            };
+            match result {
                 Ok(outcome) => break outcome,
                 Err(CoordinatorError::Rejected { retry_after_hint })
                     if attempt + 1 < max_submissions =>
@@ -305,6 +323,21 @@ mod tests {
         );
         // one retry happened, and it actually waited for the ~25 ms hint
         assert!(t0.elapsed() >= Duration::from_millis(20), "retry must back off");
+    }
+
+    #[test]
+    fn supervised_experiment_runs_clean_with_a_generous_budget() {
+        // --liveness-ms plumbing: the job routes through the watchdog's
+        // supervised pool, completes normally, and a healthy run never
+        // trips the watchdog
+        let mut exp = Experiment::new(8, 8, EngineKind::SerialLayered);
+        exp.num_roots = 4;
+        exp.liveness_ms = Some(10_000);
+        let report = exp.run().unwrap();
+        assert_eq!(report.runs.len(), 4);
+        assert!(report.all_valid);
+        assert_eq!(report.coordinator_metrics.watchdog_fires, 0);
+        assert_eq!(report.coordinator_metrics.hung_waves, 0);
     }
 
     #[test]

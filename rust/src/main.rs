@@ -167,6 +167,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     if exp.max_attempts == 0 {
         anyhow::bail!("--max-attempts must be >= 1");
     }
+    // --liveness-ms arms the watchdog: the job runs on a supervised
+    // worker and a wave with no layer progress gets cancelled, then
+    // abandoned. Zero is a configuration error, not "off".
+    let liveness_ms: u64 = args.get("liveness-ms", 0)?;
+    if args.keys().any(|k| k.as_str() == "liveness-ms") && liveness_ms == 0 {
+        anyhow::bail!("--liveness-ms must be >= 1 (omit the flag to run unsupervised)");
+    }
+    if liveness_ms > 0 {
+        exp.liveness_ms = Some(liveness_ms);
+    }
     // --mem-budget-mb arms the resource governor; --max-inflight caps
     // concurrently admitted jobs. Zero is a configuration error, not
     // "unlimited" — omit the flag for the ungoverned default.
@@ -194,6 +204,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if let Some(mb) = exp.mem_budget_mb {
         println!("memory budget: {mb} MiB (governed; optional artifacts shed under pressure)");
+    }
+    if let Some(ms) = exp.liveness_ms {
+        println!(
+            "watchdog: {ms} ms liveness budget (supervised; a hung wave is cancelled at \
+             {ms} ms and abandoned at {} ms)",
+            2 * ms
+        );
     }
     if exp.batch_roots > 1 {
         println!(
@@ -307,6 +324,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if opts.max_inflight == 0 {
         anyhow::bail!("--max-inflight must be >= 1");
     }
+    // --liveness-ms arms the supervised pool + watchdog for every wave;
+    // zero is a configuration error (omit the flag to serve unsupervised)
+    let liveness_ms: u64 = args.get("liveness-ms", 0)?;
+    if args.keys().any(|k| k.as_str() == "liveness-ms") && liveness_ms == 0 {
+        anyhow::bail!("--liveness-ms must be >= 1 (omit the flag to serve unsupervised)");
+    }
+    if liveness_ms > 0 {
+        opts.liveness = Some(Duration::from_millis(liveness_ms));
+    }
+    opts.breaker_threshold = args.get("breaker-threshold", opts.breaker_threshold)?;
+    if opts.breaker_threshold == 0 {
+        anyhow::bail!("--breaker-threshold must be >= 1");
+    }
+    let cooldown_ms: u64 = args.get("breaker-cooldown-ms", opts.breaker_cooldown.as_millis() as u64)?;
+    if cooldown_ms == 0 {
+        anyhow::bail!("--breaker-cooldown-ms must be >= 1");
+    }
+    opts.breaker_cooldown = Duration::from_millis(cooldown_ms);
     opts.fault_reject_waves = args.get("fault-reject-waves", 0u64)?;
     if opts.fault_reject_waves > 0 && opts.mem_budget_mb.is_none() {
         anyhow::bail!(
@@ -314,13 +349,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
              sheds, so the injected pressure would be a no-op)"
         );
     }
+    opts.fault_hang_waves = args.get("fault-hang-waves", 0u64)?;
+    if opts.fault_hang_waves > 0 && opts.liveness.is_none() {
+        anyhow::bail!(
+            "--fault-hang-waves needs --liveness-ms (without a watchdog the injected \
+             hang would wedge a dispatcher forever)"
+        );
+    }
+    opts.fault_fail_waves = args.get("fault-fail-waves", 0u64)?;
     println!(
         "phi-bfs serve: engine={engine_name} workers={} dispatchers={} batch_width={} \
-         batch_deadline_ms={}",
+         batch_deadline_ms={} liveness_ms={} breaker_threshold={} breaker_cooldown_ms={}",
         opts.workers,
         opts.dispatchers,
         opts.batch_width,
-        opts.batch_deadline.as_millis()
+        opts.batch_deadline.as_millis(),
+        opts.liveness.map_or_else(|| "off".to_string(), |d| d.as_millis().to_string()),
+        opts.breaker_threshold,
+        opts.breaker_cooldown.as_millis()
     );
     let server = Server::bind(opts)?;
     let snapshot = server.wait();

@@ -1,0 +1,257 @@
+//! Per-graph circuit breaker: fail fast while a graph is sick, recover
+//! without thundering herds.
+//!
+//! A graph whose waves keep failing — a hung engine being abandoned by the
+//! watchdog over and over, a poisoned artifact, injected chaos — would
+//! otherwise burn a dispatcher seat, a supervised worker, and every
+//! client's deadline on each doomed wave. The breaker is the classic
+//! three-state machine, scoped per loaded graph:
+//!
+//! * **Closed** — healthy. Wave failures increment a consecutive-failure
+//!   streak; any wave success resets it. When the streak reaches the
+//!   threshold the breaker trips to Open.
+//! * **Open** — sick. `BFS` requests for the graph are fast-failed with
+//!   `ERR unavailable <retry-after-ms> ...` *before* they touch the queue
+//!   (the retry-after hint is the time left in the cooldown). Other graphs
+//!   are untouched — the breaker is the isolation boundary between one
+//!   sick graph and the rest of the daemon.
+//! * **Half-open** — probing. Once the cooldown lapses, [`CircuitBreaker::probe`]
+//!   hands exactly one caller (the server's dispatcher, which sends its
+//!   own probe wave — recovery does not depend on client traffic) the
+//!   right to run a trial wave. Success closes the breaker; failure
+//!   re-opens it for another cooldown. Requests arriving mid-probe still
+//!   fast-fail.
+//!
+//! The breaker itself is transport-agnostic and lock-cheap (one small
+//! mutex per graph, touched once per request and once per wave outcome);
+//! the server layers the protocol reply and metrics on top.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::scheduler::lock_unpoisoned;
+
+/// When a breaker trips and how long it stays open.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerPolicy {
+    /// Consecutive wave failures that trip the breaker (clamped to ≥ 1).
+    pub threshold: u32,
+    /// How long the breaker stays open before a half-open probe may run.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerPolicy {
+    fn default() -> Self {
+        BreakerPolicy { threshold: 3, cooldown: Duration::from_millis(500) }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum State {
+    Closed { consecutive_failures: u32 },
+    Open { until: Instant },
+    /// A probe wave is in flight; its outcome decides the next state.
+    HalfOpen,
+}
+
+/// What the breaker says about an incoming `BFS` request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Closed (or probing): let the request through to the queue.
+    Allow,
+    /// Open: reject immediately; retry after this many milliseconds.
+    FastFail { retry_after_ms: u64 },
+}
+
+/// One graph's breaker. Shared by reference between connection handlers
+/// (admission) and dispatchers (wave outcomes + probes).
+pub struct CircuitBreaker {
+    policy: BreakerPolicy,
+    state: Mutex<State>,
+}
+
+impl CircuitBreaker {
+    pub fn new(policy: BreakerPolicy) -> Self {
+        let policy = BreakerPolicy { threshold: policy.threshold.max(1), ..policy };
+        CircuitBreaker { policy, state: Mutex::new(State::Closed { consecutive_failures: 0 }) }
+    }
+
+    /// Admission check for one `BFS` request at time `now`. Requests are
+    /// admitted while the breaker is closed, and also while a probe is in
+    /// flight *only* in the sense that the probe itself runs — client
+    /// requests during Open and HalfOpen both fast-fail, so one probe wave
+    /// (not a client stampede) decides recovery.
+    pub fn admit(&self, now: Instant) -> Admission {
+        let state = lock_unpoisoned(&self.state);
+        match *state {
+            State::Closed { .. } => Admission::Allow,
+            State::Open { until } => {
+                let left = until.saturating_duration_since(now);
+                if left.is_zero() {
+                    // cooldown over but no probe has run yet: keep
+                    // fast-failing with a minimal hint until the
+                    // dispatcher's probe settles the matter
+                    Admission::FastFail { retry_after_ms: 1 }
+                } else {
+                    Admission::FastFail { retry_after_ms: (left.as_millis() as u64).max(1) }
+                }
+            }
+            State::HalfOpen => Admission::FastFail {
+                retry_after_ms: (self.policy.cooldown.as_millis() as u64).max(1),
+            },
+        }
+    }
+
+    /// True when the cooldown of an open breaker has lapsed and no probe
+    /// is in flight: the caller (one dispatcher) wins the right to run the
+    /// half-open probe wave and MUST report its outcome via
+    /// [`CircuitBreaker::record_success`] / [`CircuitBreaker::record_failure`].
+    pub fn probe(&self, now: Instant) -> bool {
+        let mut state = lock_unpoisoned(&self.state);
+        match *state {
+            State::Open { until } if now >= until => {
+                *state = State::HalfOpen;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// A wave for this graph succeeded: closes a half-open breaker, resets
+    /// the failure streak of a closed one.
+    pub fn record_success(&self) {
+        let mut state = lock_unpoisoned(&self.state);
+        *state = State::Closed { consecutive_failures: 0 };
+    }
+
+    /// A wave for this graph failed (every root Failed, or the dispatch
+    /// itself errored). Returns `true` when this failure *tripped* the
+    /// breaker open (so the caller can count distinct opens, not failures).
+    pub fn record_failure(&self, now: Instant) -> bool {
+        let mut state = lock_unpoisoned(&self.state);
+        match *state {
+            State::Closed { consecutive_failures } => {
+                let streak = consecutive_failures + 1;
+                if streak >= self.policy.threshold {
+                    *state = State::Open { until: now + self.policy.cooldown };
+                    true
+                } else {
+                    *state = State::Closed { consecutive_failures: streak };
+                    false
+                }
+            }
+            // the probe failed: back to open for another cooldown (counted
+            // as a re-open so HEALTH watchers see the flap)
+            State::HalfOpen => {
+                *state = State::Open { until: now + self.policy.cooldown };
+                true
+            }
+            // already open (e.g. a straggler wave that was in flight when
+            // the breaker tripped): stay open, don't extend the cooldown
+            State::Open { .. } => false,
+        }
+    }
+
+    /// One-word state name for `HEALTH`: `closed`, `open`, or `half-open`.
+    pub fn state_name(&self) -> &'static str {
+        match *lock_unpoisoned(&self.state) {
+            State::Closed { .. } => "closed",
+            State::Open { .. } => "open",
+            State::HalfOpen => "half-open",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn breaker(threshold: u32, cooldown_ms: u64) -> CircuitBreaker {
+        CircuitBreaker::new(BreakerPolicy {
+            threshold,
+            cooldown: Duration::from_millis(cooldown_ms),
+        })
+    }
+
+    #[test]
+    fn stays_closed_below_the_threshold_and_success_resets_the_streak() {
+        let b = breaker(3, 100);
+        let now = Instant::now();
+        assert_eq!(b.admit(now), Admission::Allow);
+        assert!(!b.record_failure(now));
+        assert!(!b.record_failure(now));
+        b.record_success(); // streak back to 0
+        assert!(!b.record_failure(now));
+        assert!(!b.record_failure(now), "streak restarted after the success");
+        assert_eq!(b.admit(now), Admission::Allow);
+        assert_eq!(b.state_name(), "closed");
+    }
+
+    #[test]
+    fn opens_at_the_threshold_and_fast_fails_with_a_retry_hint() {
+        let b = breaker(2, 250);
+        let now = Instant::now();
+        assert!(!b.record_failure(now));
+        assert!(b.record_failure(now), "the tripping failure reports the open");
+        assert_eq!(b.state_name(), "open");
+        match b.admit(now) {
+            Admission::FastFail { retry_after_ms } => {
+                assert!(
+                    retry_after_ms >= 1 && retry_after_ms <= 250,
+                    "hint {retry_after_ms} must be within the cooldown"
+                );
+            }
+            Admission::Allow => panic!("open breaker must not admit"),
+        }
+        // mid-cooldown the hint shrinks with the clock
+        match b.admit(now + Duration::from_millis(200)) {
+            Admission::FastFail { retry_after_ms } => assert!(retry_after_ms <= 50),
+            Admission::Allow => panic!("still within cooldown"),
+        }
+    }
+
+    #[test]
+    fn half_open_probe_closes_on_success() {
+        let b = breaker(1, 50);
+        let t0 = Instant::now();
+        assert!(b.record_failure(t0));
+        assert!(!b.probe(t0), "no probe before the cooldown lapses");
+        let later = t0 + Duration::from_millis(51);
+        assert!(b.probe(later), "cooldown over: probe granted");
+        assert_eq!(b.state_name(), "half-open");
+        assert!(!b.probe(later), "exactly one probe at a time");
+        assert_ne!(b.admit(later), Admission::Allow, "clients fast-fail mid-probe");
+        b.record_success();
+        assert_eq!(b.state_name(), "closed");
+        assert_eq!(b.admit(later), Admission::Allow);
+    }
+
+    #[test]
+    fn half_open_probe_reopens_on_failure() {
+        let b = breaker(1, 50);
+        let t0 = Instant::now();
+        assert!(b.record_failure(t0));
+        let later = t0 + Duration::from_millis(51);
+        assert!(b.probe(later));
+        assert!(b.record_failure(later), "a failed probe re-opens (a counted open)");
+        assert_eq!(b.state_name(), "open");
+        assert!(!b.probe(later), "fresh cooldown must lapse before the next probe");
+        assert!(b.probe(later + Duration::from_millis(51)));
+    }
+
+    #[test]
+    fn straggler_failures_while_open_do_not_extend_the_cooldown() {
+        let b = breaker(1, 50);
+        let t0 = Instant::now();
+        assert!(b.record_failure(t0));
+        assert!(!b.record_failure(t0 + Duration::from_millis(25)), "not a new open");
+        // the original cooldown still governs the probe
+        assert!(b.probe(t0 + Duration::from_millis(51)));
+    }
+
+    #[test]
+    fn zero_threshold_clamps_to_one() {
+        let b = breaker(0, 50);
+        assert!(b.record_failure(Instant::now()), "first failure trips");
+    }
+}

@@ -67,6 +67,12 @@ impl ServeClient {
         self.send("STATS")
     }
 
+    /// `HEALTH` — the daemon's one-line liveness/readiness report
+    /// (`OK HEALTH status=.. accepting=.. ... breakers=..`).
+    pub fn health(&mut self) -> Result<String> {
+        self.send("HEALTH")
+    }
+
     pub fn shutdown(&mut self) -> Result<String> {
         self.send("SHUTDOWN")
     }

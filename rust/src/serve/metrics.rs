@@ -83,6 +83,18 @@ pub struct ServeMetrics {
     /// Re-submissions after a rejected wave backed off.
     wave_retries: AtomicU64,
     graphs_loaded: AtomicU64,
+    /// Per-graph circuit-breaker transitions into `Open`.
+    breaker_opens: AtomicU64,
+    /// `BFS` requests fast-failed with `ERR unavailable` while a breaker
+    /// was open (they never touched the queue).
+    breaker_fast_fails: AtomicU64,
+    /// Half-open probe waves dispatched by the server itself.
+    probe_waves: AtomicU64,
+    /// Requests whose deadline lapsed while queued (answered `ERR expired`
+    /// without a doomed dispatch).
+    expired_requests: AtomicU64,
+    /// Request lines rejected for exceeding the line-length cap.
+    oversize_lines: AtomicU64,
     latency: LatencyHistogram,
 }
 
@@ -131,6 +143,26 @@ impl ServeMetrics {
         self.graphs_loaded.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_breaker_open(&self) {
+        self.breaker_opens.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_breaker_fast_fail(&self) {
+        self.breaker_fast_fails.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_probe_wave(&self) {
+        self.probe_waves.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_expired_request(&self) {
+        self.expired_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_oversize_line(&self) {
+        self.oversize_lines.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Point-in-time serving snapshot, embedding the coordinator's own
     /// counters (whose `Display` renders the shared tail of the line).
     pub fn snapshot(&self, coordinator: MetricsSnapshot) -> ServeSnapshot {
@@ -152,6 +184,11 @@ impl ServeMetrics {
             rejected_waves: self.rejected_waves.load(Ordering::Relaxed),
             wave_retries: self.wave_retries.load(Ordering::Relaxed),
             graphs_loaded: self.graphs_loaded.load(Ordering::Relaxed),
+            breaker_opens: self.breaker_opens.load(Ordering::Relaxed),
+            breaker_fast_fails: self.breaker_fast_fails.load(Ordering::Relaxed),
+            probe_waves: self.probe_waves.load(Ordering::Relaxed),
+            expired_requests: self.expired_requests.load(Ordering::Relaxed),
+            oversize_lines: self.oversize_lines.load(Ordering::Relaxed),
             cache_hit_rate: if coordinator.jobs > 0 {
                 (coordinator.artifact_cache_hits as f64 / coordinator.jobs as f64).min(1.0)
             } else {
@@ -187,6 +224,16 @@ pub struct ServeSnapshot {
     pub rejected_waves: u64,
     pub wave_retries: u64,
     pub graphs_loaded: u64,
+    /// Circuit-breaker transitions into `Open` across all graphs.
+    pub breaker_opens: u64,
+    /// Requests fast-failed with `ERR unavailable` by an open breaker.
+    pub breaker_fast_fails: u64,
+    /// Server-dispatched half-open probe waves.
+    pub probe_waves: u64,
+    /// Requests expired in the queue (answered without dispatch).
+    pub expired_requests: u64,
+    /// Request lines rejected at the line-length cap.
+    pub oversize_lines: u64,
     /// Artifact-cache hit rate over coordinator jobs (a warm serving
     /// steady state sits near 1.0: every wave after a graph's first skips
     /// preparation).
@@ -202,7 +249,8 @@ impl std::fmt::Display for ServeSnapshot {
             "requests={} ok={} failed={} p50_ms={:.3} p99_ms={:.3} queue_depth={} \
              queue_peak={} waves={} batch_fill={:.2} width_flushes={} deadline_flushes={} \
              drain_flushes={} rejected_waves={} wave_retries={} graphs={} \
-             cache_hit_rate={:.2} | {}",
+             breaker_opens={} breaker_fast_fails={} probe_waves={} expired={} \
+             oversize_lines={} cache_hit_rate={:.2} | {}",
             self.requests,
             self.ok,
             self.failed,
@@ -218,6 +266,11 @@ impl std::fmt::Display for ServeSnapshot {
             self.rejected_waves,
             self.wave_retries,
             self.graphs_loaded,
+            self.breaker_opens,
+            self.breaker_fast_fails,
+            self.probe_waves,
+            self.expired_requests,
+            self.oversize_lines,
             self.cache_hit_rate,
             self.coordinator,
         )
@@ -262,6 +315,12 @@ mod tests {
         m.record_rejected_wave();
         m.record_wave_retry();
         m.record_graph_loaded();
+        m.record_breaker_open();
+        m.record_breaker_fast_fail();
+        m.record_breaker_fast_fail();
+        m.record_probe_wave();
+        m.record_expired_request();
+        m.record_oversize_line();
         let coord = Metrics::default();
         let s = m.snapshot(coord.snapshot());
         assert_eq!((s.requests, s.ok, s.failed), (3, 2, 1));
@@ -271,6 +330,8 @@ mod tests {
         assert!((s.batch_fill - 1.5).abs() < 1e-9);
         assert_eq!((s.width_flushes, s.deadline_flushes, s.drain_flushes), (1, 1, 0));
         assert_eq!((s.rejected_waves, s.wave_retries), (1, 1));
+        assert_eq!((s.breaker_opens, s.breaker_fast_fails, s.probe_waves), (1, 2, 1));
+        assert_eq!((s.expired_requests, s.oversize_lines), (1, 1));
         assert!(s.p50_ms > 0.0 && s.p50_ms <= s.p99_ms);
         let line = s.to_string();
         assert!(!line.contains('\n'));
@@ -282,6 +343,11 @@ mod tests {
             "p99_ms=",
             "queue_depth=1",
             "batch_fill=1.50",
+            "breaker_opens=1",
+            "breaker_fast_fails=2",
+            "probe_waves=1",
+            "expired=1",
+            "oversize_lines=1",
             "cache_hit_rate=",
             "teps=",
         ];

@@ -8,15 +8,20 @@
 //! the batch shape from independent clients. That is this subsystem:
 //!
 //! * [`protocol`] — the newline-delimited text protocol
-//!   (`LOAD`/`BFS`/`STATS`/`SHUTDOWN`, structured `ERR` replies).
+//!   (`LOAD`/`BFS`/`STATS`/`HEALTH`/`SHUTDOWN`, structured `ERR`
+//!   replies).
 //! * [`queue`] — the deadline-aware batching queue: per-graph
 //!   accumulators that flush at batch width (a full MS-BFS wave) or at
 //!   the oldest request's deadline margin, whichever first.
-//! * [`server`] — the daemon itself: thread-per-connection acceptor,
-//!   dispatcher pool, wave dispatch through the resource-governed
-//!   [`crate::coordinator::Coordinator`] (admission-control rejections
-//!   re-queue after the shed's backpressure hint), drain-then-exit
-//!   shutdown.
+//! * [`server`] — the daemon itself: thread-per-connection acceptor
+//!   (bounded line reads), dispatcher pool, wave dispatch through the
+//!   supervised, resource-governed [`crate::coordinator::Coordinator`]
+//!   (admission-control rejections re-queue after the shed's
+//!   backpressure hint, with per-request deadline budgets recomputed),
+//!   drain-then-exit shutdown.
+//! * [`breaker`] — per-graph circuit breakers: consecutive wave failures
+//!   trip a graph open (`ERR unavailable` fast-fails), a server-driven
+//!   half-open probe wave closes it again.
 //! * [`metrics`] — serving telemetry: lock-free latency histogram
 //!   (p50/p99), queue depth, batch fill, flush triggers, artifact-cache
 //!   hit rate — the `STATS` reply and the shutdown summary.
@@ -24,14 +29,16 @@
 //!   integration tests, the CI smoke driver (`phi-bfs client`), and the
 //!   serving ablation's load generator.
 
+pub mod breaker;
 pub mod client;
 pub mod metrics;
 pub mod protocol;
 pub mod queue;
 pub mod server;
 
+pub use breaker::{Admission, BreakerPolicy, CircuitBreaker};
 pub use client::{kv, kv_f64, kv_hex, kv_u64, ServeClient};
 pub use metrics::{ServeMetrics, ServeSnapshot};
 pub use protocol::{err_line, parse_request, Request};
 pub use queue::{BatchQueue, FlushTrigger, PendingBfs};
-pub use server::{ServeOptions, Server};
+pub use server::{ServeOptions, Server, MAX_LINE_BYTES};

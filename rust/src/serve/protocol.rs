@@ -8,15 +8,25 @@
 //!                                            checksum=<16-hex> status=.. wave_width=..
 //!                                            trigger=<width|deadline|drain> latency_ms=..
 //! STATS                                    → OK STATS <ServeSnapshot line>
+//! HEALTH                                   → OK HEALTH status=<ok|draining> accepting=..
+//!                                            graphs=.. queue_depth=.. pressure_events=..
+//!                                            watchdog_fires=.. hung_waves=..
+//!                                            breakers=<id:state[:retry-ms],..|none>
 //! SHUTDOWN                                 → OK SHUTDOWN draining
 //! ```
 //!
 //! Every failure is a single structured line, `ERR <kind> <detail>`, with
 //! `kind` one of `parse`, `load`, `unknown-graph`, `root-out-of-bounds`,
-//! `rejected`, `over-budget`, `failed`, `shutting-down`, `internal` — so
-//! a client can
+//! `rejected`, `unavailable`, `expired`, `over-budget`, `failed`,
+//! `shutting-down`, `internal` — so a client can
 //! dispatch on the kind token without parsing prose (mirroring how the
 //! daemon itself dispatches on [`crate::coordinator::CoordinatorError`]).
+//! `ERR unavailable` (an open circuit breaker) and `ERR rejected`
+//! (admission control) both lead their detail with a retry-after hint in
+//! milliseconds; `ERR expired` means the request's own deadline lapsed
+//! while it sat in the queue. Request lines longer than the daemon's line
+//! cap are answered `ERR parse line-too-long ...` and the connection
+//! resynchronizes at the next newline.
 
 use crate::Vertex;
 
@@ -37,6 +47,10 @@ pub enum Request {
     Bfs { graph: String, root: Vertex, deadline_ms: Option<u64> },
     /// `STATS` — one-line serving snapshot.
     Stats,
+    /// `HEALTH` — one-line liveness/readiness report: accepting vs
+    /// draining, queue depth, supervision counters, and every graph's
+    /// circuit-breaker state.
+    Health,
     /// `SHUTDOWN` — drain pending waves, then exit.
     Shutdown,
 }
@@ -80,9 +94,12 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             Request::Bfs { graph, root, deadline_ms }
         }
         "STATS" => Request::Stats,
+        "HEALTH" => Request::Health,
         "SHUTDOWN" => Request::Shutdown,
         other => {
-            return Err(format!("unknown command {other:?} (try LOAD/BFS/STATS/SHUTDOWN)"))
+            return Err(format!(
+                "unknown command {other:?} (try LOAD/BFS/STATS/HEALTH/SHUTDOWN)"
+            ))
         }
     };
     if it.next().is_some() {
@@ -123,6 +140,8 @@ mod tests {
             Request::Bfs { graph: "g1".into(), root: 0, deadline_ms: Some(250) }
         );
         assert_eq!(parse_request("STATS").unwrap(), Request::Stats);
+        assert_eq!(parse_request("HEALTH").unwrap(), Request::Health);
+        assert_eq!(parse_request("health").unwrap(), Request::Health, "case-insensitive");
         assert_eq!(parse_request("shutdown").unwrap(), Request::Shutdown, "case-insensitive");
     }
 

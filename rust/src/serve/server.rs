@@ -1,23 +1,42 @@
 //! The `phi-bfs serve` daemon: a thread-per-connection TCP acceptor over
 //! the deadline-aware [`BatchQueue`], dispatching accumulated waves
-//! through a resource-governed [`Coordinator`].
+//! through a supervised, resource-governed [`Coordinator`].
 //!
 //! Threads, from the socket inward:
 //!
 //! * **acceptor** — blocks in `TcpListener::accept`, spawns one
 //!   connection handler per client, exits when shutdown begins (woken by
 //!   a self-connect).
-//! * **connection handlers** — parse one request line at a time.
-//!   `LOAD`/`STATS` reply inline; `BFS` bounds-checks the root, enqueues
-//!   a [`PendingBfs`] carrying a reply channel, and blocks on that
-//!   channel (each connection is its own thread, so blocking here costs
-//!   nothing); `SHUTDOWN` flips the daemon into drain mode.
+//! * **connection handlers** — parse one request line at a time through a
+//!   bounded line reader (lines are capped at [`MAX_LINE_BYTES`]; an
+//!   oversize line is answered `ERR parse line-too-long` and the stream
+//!   resynchronizes at the next newline, so a misbehaving client can
+//!   never grow an unbounded buffer server-side). `LOAD`/`STATS`/`HEALTH`
+//!   reply inline; `BFS` bounds-checks the root, consults the graph's
+//!   [`CircuitBreaker`], enqueues a [`PendingBfs`] carrying a reply
+//!   channel, and blocks on that channel (each connection is its own
+//!   thread, so blocking here costs nothing); `SHUTDOWN` flips the daemon
+//!   into drain mode.
 //! * **dispatchers** — block in [`BatchQueue::pop_wave`], wrap each wave
-//!   in a [`BfsJob::wave`], and submit it to the coordinator. A wave the
-//!   coordinator sheds with [`CoordinatorError::Rejected`] is re-submitted
-//!   after the shed's `retry_after_hint` (lower-bounded by the jittered
-//!   [`retry_backoff`] curve) up to the job retry budget; every other
-//!   error fans out to the wave's requests as structured `ERR` lines.
+//!   in a [`BfsJob::wave`], and submit it through the [`Supervisor`] (so
+//!   a configured `--liveness-ms` budget arms the watchdog per wave). A
+//!   wave the coordinator sheds with [`CoordinatorError::Rejected`] is
+//!   re-submitted after the shed's `retry_after_hint` (lower-bounded by
+//!   the jittered [`retry_backoff`] curve) up to the job retry budget —
+//!   and each re-submission recomputes every surviving request's
+//!   *remaining* deadline budget, answering already-expired requests with
+//!   `ERR expired` instead of dispatching them doomed; every other error
+//!   fans out to the wave's requests as structured `ERR` lines.
+//! * **prober** — a detached scanner that, once an open breaker's
+//!   cooldown lapses, dispatches the half-open probe wave itself, so a
+//!   sick graph recovers (or re-opens) without depending on client
+//!   traffic.
+//!
+//! Wave outcomes feed each graph's [`CircuitBreaker`]: enough consecutive
+//! wave failures (hung waves abandoned by the watchdog included) trip it
+//! open, after which `BFS` requests for that graph fast-fail with
+//! `ERR unavailable <retry-after-ms> ...` before touching the queue —
+//! one sick graph cannot starve the rest of the daemon.
 //!
 //! Shutdown is *drain-then-exit*: the queue refuses new requests, every
 //! accumulated wave still dispatches (trigger `drain`), and
@@ -35,13 +54,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use super::breaker::{Admission, BreakerPolicy, CircuitBreaker};
 use super::metrics::{ServeMetrics, ServeSnapshot};
 use super::protocol::{err_line, parse_request, Request, MAX_DEADLINE_MS};
 use super::queue::{BatchQueue, FlushTrigger, PendingBfs};
 use crate::bfs::{RunControl, RunStatus};
 use crate::coordinator::{
     retry_backoff, AdmissionPolicy, BfsJob, Coordinator, CoordinatorError, EngineKind, FaultPlan,
-    RootOutcome,
+    RootOutcome, Supervisor,
 };
 use crate::graph::{Csr, RmatConfig};
 use crate::rng::Xoshiro256;
@@ -50,6 +70,19 @@ use crate::Vertex;
 /// How often a blocked connection read wakes up to re-check the shutdown
 /// flag, so idle clients cannot hold a draining daemon open.
 const READ_POLL: Duration = Duration::from_millis(200);
+
+/// Cap on one request line (terminator excluded). Anything longer is
+/// answered `ERR parse line-too-long` and discarded up to the next
+/// newline — the connection survives, the buffer never grows past this.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// How often the prober scans for open breakers whose cooldown lapsed.
+const PROBE_POLL: Duration = Duration::from_millis(25);
+
+/// Chaos faults (`fault_hang_waves` / `fault_fail_waves`) target the
+/// first-loaded graph, so a chaos run can poison `g1` while `g2` proves
+/// the blast radius stayed contained.
+const CHAOS_TARGET_GRAPH: u64 = 1;
 
 /// Everything `phi-bfs serve` configures; [`Server::bind`] consumes it.
 #[derive(Clone, Debug)]
@@ -76,10 +109,27 @@ pub struct ServeOptions {
     /// Per-root retry budget inside a wave, and the dispatcher's bound on
     /// whole-wave re-submissions after admission-control rejections.
     pub max_attempts: usize,
+    /// Per-wave liveness budget for the watchdog (`--liveness-ms`):
+    /// `None` serves unsupervised (waves run inline on the dispatcher,
+    /// the pre-watchdog behaviour), `Some` runs every wave on the
+    /// supervisor pool with hang detection armed.
+    pub liveness: Option<Duration>,
+    /// Consecutive wave failures that trip a graph's circuit breaker.
+    pub breaker_threshold: u32,
+    /// How long a tripped breaker stays open before the half-open probe.
+    pub breaker_cooldown: Duration,
     /// Chaos knob: the first N waves carry a synthetic memory-pressure
     /// fault so they shed as `Rejected` and exercise the retry path
     /// (requires a bounded budget to have any effect).
     pub fault_reject_waves: u64,
+    /// Chaos knob: the first N waves dispatched for [`CHAOS_TARGET_GRAPH`]
+    /// hang non-cooperatively ([`FaultPlan::hang_at`]) — requires a
+    /// liveness budget, otherwise the hang would wedge a dispatcher.
+    pub fault_hang_waves: u64,
+    /// Chaos knob: the next N waves for [`CHAOS_TARGET_GRAPH`] (after any
+    /// hang waves) fail deterministically ([`FaultPlan::fail_waves`]) —
+    /// drives a breaker open and, once exhausted, closed again.
+    pub fault_fail_waves: u64,
 }
 
 impl ServeOptions {
@@ -95,7 +145,12 @@ impl ServeOptions {
             mem_budget_mb: None,
             max_inflight: AdmissionPolicy::default().max_inflight,
             max_attempts: 3,
+            liveness: None,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(500),
             fault_reject_waves: 0,
+            fault_hang_waves: 0,
+            fault_fail_waves: 0,
         }
     }
 }
@@ -108,23 +163,37 @@ struct LoadedGraph {
     sigma: Option<usize>,
 }
 
-/// State shared by the acceptor, every connection handler, and every
-/// dispatcher.
+/// State shared by the acceptor, every connection handler, every
+/// dispatcher, and the prober.
 struct ServerInner {
     opts: ServeOptions,
     addr: SocketAddr,
-    coordinator: Coordinator,
+    /// Supervised execution layer over the shared coordinator: waves with
+    /// a liveness budget run on its self-healing pool, the rest inline.
+    supervisor: Supervisor,
     queue: BatchQueue,
     metrics: ServeMetrics,
     graphs: Mutex<HashMap<u64, LoadedGraph>>,
+    /// One circuit breaker per loaded graph, created at `LOAD`.
+    breakers: Mutex<HashMap<u64, Arc<CircuitBreaker>>>,
     next_graph_id: AtomicU64,
     next_job_id: AtomicU64,
     /// Waves handed to the coordinator so far — indexes the
     /// `fault_reject_waves` chaos gate deterministically.
     waves_dispatched: AtomicU64,
+    /// Waves dispatched for [`CHAOS_TARGET_GRAPH`] while hang/fail chaos
+    /// is armed — indexes those gates (probe waves count too, so a
+    /// `fail_waves` budget can expire *through* the recovery probes).
+    chaos_waves: AtomicU64,
     shutting_down: AtomicBool,
     /// Connection handler threads, joined by [`Server::wait`].
     handlers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl ServerInner {
+    fn coordinator(&self) -> &Coordinator {
+        self.supervisor.coordinator()
+    }
 }
 
 /// A bound, running daemon. Construct with [`Server::bind`]; block until
@@ -136,30 +205,41 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind the listener, start the dispatcher pool and the acceptor, and
-    /// print the `listening on` line (flushed — CI greps it from a
-    /// redirected pipe).
+    /// Bind the listener, start the dispatcher pool, the breaker prober,
+    /// and the acceptor, and print the `listening on` line (flushed — CI
+    /// greps it from a redirected pipe).
     pub fn bind(opts: ServeOptions) -> Result<Server> {
+        if opts.fault_hang_waves > 0 && opts.liveness.is_none() {
+            bail!(
+                "--fault-hang-waves requires --liveness-ms: an unsupervised hang would \
+                 wedge a dispatcher forever"
+            );
+        }
         let listener = TcpListener::bind((opts.host.as_str(), opts.port))
             .with_context(|| format!("binding {}:{}", opts.host, opts.port))?;
         let addr = listener.local_addr().context("resolving the bound address")?;
-        let coordinator = Coordinator::with_limits(
+        let coordinator = Arc::new(Coordinator::with_limits(
             opts.workers,
             opts.mem_budget_mb.map(|mb| mb.saturating_mul(1 << 20)),
             AdmissionPolicy { max_inflight: opts.max_inflight },
-        );
-        let queue = BatchQueue::new(opts.batch_width, opts.batch_deadline);
+        ));
         let dispatchers_n = opts.dispatchers.max(1);
+        // one pool seat per dispatcher plus one for the prober, so every
+        // thread that can submit a supervised wave always finds a worker
+        let supervisor = Supervisor::new(coordinator, dispatchers_n + 1);
+        let queue = BatchQueue::new(opts.batch_width, opts.batch_deadline);
         let inner = Arc::new(ServerInner {
             opts,
             addr,
-            coordinator,
+            supervisor,
             queue,
             metrics: ServeMetrics::default(),
             graphs: Mutex::new(HashMap::new()),
+            breakers: Mutex::new(HashMap::new()),
             next_graph_id: AtomicU64::new(1),
             next_job_id: AtomicU64::new(1),
             waves_dispatched: AtomicU64::new(0),
+            chaos_waves: AtomicU64::new(0),
             shutting_down: AtomicBool::new(false),
             handlers: Mutex::new(Vec::new()),
         });
@@ -171,6 +251,12 @@ impl Server {
                 std::thread::spawn(move || dispatcher_loop(&inner))
             })
             .collect();
+        {
+            // detached on purpose: a probe into a still-hung graph can
+            // outlive the drain, and shutdown must not wait for it
+            let inner = Arc::clone(&inner);
+            std::thread::spawn(move || prober_loop(&inner));
+        }
         let acceptor = {
             let inner = Arc::clone(&inner);
             std::thread::spawn(move || acceptor_loop(&inner, listener))
@@ -202,7 +288,7 @@ impl Server {
         for h in handlers {
             h.join().ok();
         }
-        self.inner.metrics.snapshot(self.inner.coordinator.metrics().snapshot())
+        self.inner.metrics.snapshot(self.inner.coordinator().metrics().snapshot())
     }
 
     /// Start a drain-then-exit shutdown (idempotent): refuse new work,
@@ -238,37 +324,120 @@ fn acceptor_loop(inner: &Arc<ServerInner>, listener: TcpListener) {
     }
 }
 
-/// One client connection: read request lines, write reply lines, until
-/// the client hangs up or the daemon drains.
-fn connection_loop(inner: &Arc<ServerInner>, stream: TcpStream) {
-    stream.set_read_timeout(Some(READ_POLL)).ok();
-    let Ok(mut writer) = stream.try_clone() else { return };
-    let mut reader = BufReader::new(stream);
+/// What one [`read_bounded_line`] call produced.
+enum LineRead {
+    /// A complete line within the cap (newline stripped, lossy UTF-8).
+    Line(String),
+    /// The line blew past [`MAX_LINE_BYTES`]; the overflow is being (or
+    /// has been) discarded up to the next newline.
+    TooLong,
+    /// Read timeout — the caller should poll the shutdown flag.
+    Idle,
+    /// EOF or a hard I/O error — the connection is done.
+    Closed,
+}
+
+/// Read one newline-terminated line without ever buffering more than
+/// [`MAX_LINE_BYTES`] of it. `partial` accumulates across `Idle` polls;
+/// `discarding` carries the resync state after an oversize line.
+fn read_bounded_line(
+    reader: &mut BufReader<TcpStream>,
+    partial: &mut Vec<u8>,
+    discarding: &mut bool,
+) -> LineRead {
+    enum Step {
+        /// Consumed n bytes; keep reading.
+        More(usize),
+        /// Newline at offset n-1: a full line is in `partial`.
+        Line(usize),
+        /// Cap blown; consume n bytes and (maybe) keep discarding.
+        TooLong(usize, bool),
+    }
     loop {
-        let mut line = String::new();
-        match reader.read_line(&mut line) {
-            Ok(0) => return, // client closed
-            Ok(_) => {
-                let trimmed = line.trim();
-                if trimmed.is_empty() {
-                    continue;
-                }
-                let reply = handle_line(inner, trimmed);
-                if writeln!(writer, "{reply}").is_err() || writer.flush().is_err() {
-                    return;
-                }
-            }
+        let step = match reader.fill_buf() {
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
+                return LineRead::Idle
+            }
+            Err(_) => return LineRead::Closed,
+            Ok(chunk) if chunk.is_empty() => return LineRead::Closed,
+            Ok(chunk) => match chunk.iter().position(|&b| b == b'\n') {
+                Some(pos) if *discarding => {
+                    // tail of an already-reported oversize line
+                    *discarding = false;
+                    Step::More(pos + 1)
+                }
+                Some(pos) if partial.len() + pos > MAX_LINE_BYTES => Step::TooLong(pos + 1, false),
+                Some(pos) => {
+                    partial.extend_from_slice(&chunk[..pos]);
+                    Step::Line(pos + 1)
+                }
+                None if *discarding => Step::More(chunk.len()),
+                None if partial.len() + chunk.len() > MAX_LINE_BYTES => {
+                    Step::TooLong(chunk.len(), true)
+                }
+                None => {
+                    partial.extend_from_slice(chunk);
+                    Step::More(chunk.len())
+                }
+            },
+        };
+        match step {
+            Step::More(n) => reader.consume(n),
+            Step::Line(n) => {
+                reader.consume(n);
+                let line = String::from_utf8_lossy(partial).into_owned();
+                partial.clear();
+                return LineRead::Line(line);
+            }
+            Step::TooLong(n, keep_discarding) => {
+                reader.consume(n);
+                partial.clear();
+                *discarding = keep_discarding;
+                return LineRead::TooLong;
+            }
+        }
+    }
+}
+
+/// One client connection: read request lines (bounded), write reply
+/// lines, until the client hangs up or the daemon drains.
+fn connection_loop(inner: &Arc<ServerInner>, stream: TcpStream) {
+    stream.set_read_timeout(Some(READ_POLL)).ok();
+    let Ok(mut writer) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(stream);
+    let mut partial = Vec::new();
+    let mut discarding = false;
+    loop {
+        let reply = match read_bounded_line(&mut reader, &mut partial, &mut discarding) {
+            LineRead::Closed => return,
+            LineRead::Idle => {
                 // idle poll: exit once the daemon is draining so a silent
                 // client cannot hold shutdown open
                 if inner.shutting_down.load(Ordering::SeqCst) {
                     return;
                 }
+                continue;
             }
-            Err(_) => return,
+            LineRead::TooLong => {
+                inner.metrics.record_oversize_line();
+                err_line(
+                    "parse",
+                    &format!("line-too-long: request lines are capped at {MAX_LINE_BYTES} bytes"),
+                )
+            }
+            LineRead::Line(line) => {
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                handle_line(inner, trimmed)
+            }
+        };
+        if writeln!(writer, "{reply}").is_err() || writer.flush().is_err() {
+            return;
         }
     }
 }
@@ -282,9 +451,10 @@ fn handle_line(inner: &Arc<ServerInner>, line: &str) -> String {
         Request::Load { spec, sigma } => handle_load(inner, &spec, sigma),
         Request::Bfs { graph, root, deadline_ms } => handle_bfs(inner, &graph, root, deadline_ms),
         Request::Stats => {
-            let snap = inner.metrics.snapshot(inner.coordinator.metrics().snapshot());
+            let snap = inner.metrics.snapshot(inner.coordinator().metrics().snapshot());
             format!("OK STATS {snap}")
         }
+        Request::Health => handle_health(inner),
         Request::Shutdown => {
             inner.begin_shutdown();
             "OK SHUTDOWN draining".to_string()
@@ -292,9 +462,53 @@ fn handle_line(inner: &Arc<ServerInner>, line: &str) -> String {
     }
 }
 
+/// The `HEALTH` reply: liveness/readiness in one greppable line —
+/// accepting vs draining, queue depth, ledger pressure, supervision
+/// counters, and every graph's breaker state (open breakers carry their
+/// retry-after hint in ms).
+fn handle_health(inner: &Arc<ServerInner>) -> String {
+    let draining = inner.shutting_down.load(Ordering::SeqCst);
+    let snap = inner.metrics.snapshot(inner.coordinator().metrics().snapshot());
+    let now = Instant::now();
+    let breakers = inner.breakers.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+    let mut ids: Vec<u64> = breakers.keys().copied().collect();
+    ids.sort_unstable();
+    let states = if ids.is_empty() {
+        "none".to_string()
+    } else {
+        let frags: Vec<String> = ids
+            .iter()
+            .map(|id| {
+                let b = &breakers[id];
+                let name = b.state_name();
+                match b.admit(now) {
+                    Admission::FastFail { retry_after_ms } if name == "open" => {
+                        format!("g{id}:open:{retry_after_ms}")
+                    }
+                    _ => format!("g{id}:{name}"),
+                }
+            })
+            .collect();
+        frags.join(",")
+    };
+    format!(
+        "OK HEALTH status={} accepting={} graphs={} queue_depth={} pressure_events={} \
+         watchdog_fires={} hung_waves={} workers_replaced={} breakers={}",
+        if draining { "draining" } else { "ok" },
+        !draining,
+        snap.graphs_loaded,
+        snap.queue_depth,
+        snap.coordinator.pressure_events,
+        snap.coordinator.watchdog_fires,
+        snap.coordinator.hung_waves,
+        snap.coordinator.workers_replaced,
+        states,
+    )
+}
+
 /// Load a graph from a `rmat:SCALE:EDGEFACTOR:SEED` spec or a file path
 /// (binary CSR sniffed by magic, edge-list text otherwise) and register
-/// it under a fresh `g{N}` id.
+/// it under a fresh `g{N}` id (with a fresh, closed circuit breaker).
 fn handle_load(inner: &Arc<ServerInner>, spec: &str, sigma: Option<usize>) -> String {
     if inner.shutting_down.load(Ordering::SeqCst) {
         return err_line("shutting-down", "daemon is draining; not accepting new graphs");
@@ -321,8 +535,24 @@ fn handle_load(inner: &Arc<ServerInner>, spec: &str, sigma: Option<usize>) -> St
         .lock()
         .unwrap_or_else(|poisoned| poisoned.into_inner())
         .insert(id, LoadedGraph { graph: Arc::new(graph), sigma });
+    inner.breakers.lock().unwrap_or_else(|poisoned| poisoned.into_inner()).insert(
+        id,
+        Arc::new(CircuitBreaker::new(BreakerPolicy {
+            threshold: inner.opts.breaker_threshold,
+            cooldown: inner.opts.breaker_cooldown,
+        })),
+    );
     inner.metrics.record_graph_loaded();
     format!("OK LOAD id=g{id} vertices={vertices} directed_edges={edges}")
+}
+
+fn breaker_for(inner: &ServerInner, id: u64) -> Option<Arc<CircuitBreaker>> {
+    inner
+        .breakers
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+        .get(&id)
+        .map(Arc::clone)
 }
 
 /// Enqueue one BFS request and block (on this connection's own thread)
@@ -345,6 +575,21 @@ fn handle_bfs(
     let Some(entry) = entry else {
         return err_line("unknown-graph", &format!("no graph loaded as g{id}"));
     };
+    // fast-fail at the door while the graph's breaker is open: the request
+    // never touches the queue, and the leading token of the detail is the
+    // retry-after hint in milliseconds
+    if let Some(b) = breaker_for(inner, id) {
+        if let Admission::FastFail { retry_after_ms } = b.admit(Instant::now()) {
+            inner.metrics.record_breaker_fast_fail();
+            return err_line(
+                "unavailable",
+                &format!(
+                    "{retry_after_ms} circuit breaker open for g{id}; retry in \
+                     {retry_after_ms} ms"
+                ),
+            );
+        }
+    }
     // per-request bounds check: the coordinator rejects a whole wave on
     // one bad root, so a bad request must never reach a shared wave
     let vertices = entry.graph.num_vertices();
@@ -378,9 +623,32 @@ fn dispatcher_loop(inner: &Arc<ServerInner>) {
     }
 }
 
-/// Run one wave through the coordinator and fan the outcome back to every
-/// request's reply channel. `Rejected` sheds re-submit after the hint;
-/// every other error is terminal for the wave.
+/// The chaos fault (if any) for the next wave of `graph_id`: hang waves
+/// first, then fail waves, then clean. Only [`CHAOS_TARGET_GRAPH`] is
+/// ever poisoned, and the gate counter only advances while chaos is
+/// armed, so production dispatch pays one branch.
+fn chaos_fault(inner: &ServerInner, graph_id: u64) -> Option<FaultPlan> {
+    let hang = inner.opts.fault_hang_waves;
+    let fail = inner.opts.fault_fail_waves;
+    if graph_id != CHAOS_TARGET_GRAPH || (hang == 0 && fail == 0) {
+        return None;
+    }
+    let index = inner.chaos_waves.fetch_add(1, Ordering::Relaxed);
+    if index < hang {
+        Some(FaultPlan::hang_at(0))
+    } else if index - hang < fail {
+        Some(FaultPlan::fail_waves(fail))
+    } else {
+        None
+    }
+}
+
+/// Run one wave through the supervisor and fan the outcome back to every
+/// request's reply channel. `Rejected` sheds re-submit after the hint —
+/// with each request's *remaining* deadline budget recomputed, and
+/// already-expired requests answered `ERR expired` up front; every other
+/// error is terminal for the wave. Wave outcomes feed the graph's
+/// circuit breaker.
 fn dispatch_wave(
     inner: &Arc<ServerInner>,
     graph_id: u64,
@@ -405,43 +673,76 @@ fn dispatch_wave(
         fail_wave(inner, &wave, &err_line("internal", "sigma no longer applies to the engine"));
         return;
     }
-    let now = Instant::now();
-    let deadline = wave
-        .iter()
-        .filter_map(|p| p.deadline)
-        .map(|d| d.saturating_duration_since(now))
-        .min();
-    let control = Arc::new(RunControl::new());
+    let breaker = breaker_for(inner, graph_id);
     let wave_index = inner.waves_dispatched.fetch_add(1, Ordering::Relaxed);
     let job_id = inner.next_job_id.fetch_add(1, Ordering::Relaxed);
-    let roots: Vec<Vertex> = wave.iter().map(|p| p.root).collect();
-    let mut job = BfsJob::wave(
-        job_id,
-        Arc::clone(&entry.graph),
-        roots,
-        engine,
-        deadline,
-        Some(Arc::clone(&control)),
-        inner.opts.max_attempts,
-    );
-    if wave_index < inner.opts.fault_reject_waves {
-        // chaos gate: synthetic ledger pressure makes a bounded governor
-        // shed this wave as Rejected on its first submission
-        job.run.fault = Some(FaultPlan::memory_pressure(usize::MAX));
-    }
     let mut rng = Xoshiro256::seed_from_u64(job_id ^ 0x5345_5256);
     let max_submissions = inner.opts.max_attempts.max(1);
     let mut attempt = 0usize;
-    let outcome = loop {
-        match inner.coordinator.run_job(&job) {
-            Ok(outcome) => break outcome,
+    let mut wave = wave;
+    let (outcome, wave) = loop {
+        // deadline sweep: a request whose own budget lapsed while it sat
+        // in the queue (or while a rejected wave backed off) gets an
+        // immediate structured reply instead of a doomed dispatch
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(wave.len());
+        for pending in wave {
+            if pending.deadline.is_some_and(|d| now >= d) {
+                inner.metrics.record_expired_request();
+                inner.metrics.record_failed();
+                let waited = now.saturating_duration_since(pending.enqueued);
+                let line = err_line(
+                    "expired",
+                    &format!(
+                        "deadline lapsed after {:.3} ms queued (never dispatched)",
+                        waited.as_secs_f64() * 1e3
+                    ),
+                );
+                pending.reply.send(line).ok();
+            } else {
+                live.push(pending);
+            }
+        }
+        if live.is_empty() {
+            // the whole wave expired before it could run
+            return;
+        }
+        // each surviving request contributes what is *left* of its budget,
+        // so a re-submitted wave never runs against a stale bound computed
+        // at first dispatch
+        let deadline = live
+            .iter()
+            .filter_map(|p| p.deadline)
+            .map(|d| d.saturating_duration_since(now))
+            .min();
+        let control = Arc::new(RunControl::new());
+        let roots: Vec<Vertex> = live.iter().map(|p| p.root).collect();
+        let mut job = BfsJob::wave(
+            job_id,
+            Arc::clone(&entry.graph),
+            roots,
+            engine.clone(),
+            deadline,
+            Some(Arc::clone(&control)),
+            inner.opts.max_attempts,
+        );
+        job.run.liveness = inner.opts.liveness;
+        if attempt == 0 {
+            if wave_index < inner.opts.fault_reject_waves {
+                // chaos gate: synthetic ledger pressure makes a bounded
+                // governor shed this wave as Rejected on first submission
+                job.run.fault = Some(FaultPlan::memory_pressure(usize::MAX));
+            } else if let Some(plan) = chaos_fault(inner, graph_id) {
+                job.run.fault = Some(plan);
+            }
+        }
+        match inner.supervisor.run_job(job) {
+            Ok(outcome) => break (outcome, live),
             Err(CoordinatorError::Rejected { retry_after_hint })
                 if attempt + 1 < max_submissions =>
             {
                 attempt += 1;
                 inner.metrics.record_rejected_wave();
-                // the injected pressure made its point; retries run clean
-                job.run.fault = None;
                 let pause = retry_after_hint.max(retry_backoff(attempt + 1, &mut rng, &control));
                 eprintln!(
                     "phi-bfs serve: wave {job_id} on g{graph_id} rejected by admission \
@@ -450,19 +751,37 @@ fn dispatch_wave(
                 );
                 std::thread::sleep(pause);
                 inner.metrics.record_wave_retry();
+                wave = live;
             }
             Err(e) => {
+                if let Some(b) = &breaker {
+                    if b.record_failure(Instant::now()) {
+                        inner.metrics.record_breaker_open();
+                    }
+                }
                 let kind = match &e {
                     CoordinatorError::Rejected { .. } => "rejected",
                     CoordinatorError::OverBudget { .. } => "over-budget",
                     CoordinatorError::RootOutOfBounds { .. } => "root-out-of-bounds",
                     _ => "failed",
                 };
-                fail_wave(inner, &wave, &err_line(kind, &e.to_string()));
+                fail_wave(inner, &live, &err_line(kind, &e.to_string()));
                 return;
             }
         }
     };
+    // breaker accounting: a wave where *every* root failed (including one
+    // abandoned wholesale by the watchdog) is a wave failure; any root
+    // succeeding counts as wave success and resets the streak
+    if let Some(b) = &breaker {
+        if outcome.outcomes.iter().all(|o| o.is_failed()) {
+            if b.record_failure(Instant::now()) {
+                inner.metrics.record_breaker_open();
+            }
+        } else {
+            b.record_success();
+        }
+    }
     inner.metrics.record_wave(trigger, wave.len());
     let width = wave.len();
     for (pending, root_outcome) in wave.into_iter().zip(outcome.outcomes.iter()) {
@@ -498,6 +817,75 @@ fn dispatch_wave(
                 pending.reply.send(line).ok();
             }
         }
+    }
+}
+
+/// The breaker prober: scans for open breakers whose cooldown lapsed and
+/// dispatches their half-open probe wave (one root, one attempt) itself,
+/// so recovery never waits for client traffic. Runs detached; exits once
+/// shutdown begins.
+fn prober_loop(inner: &Arc<ServerInner>) {
+    loop {
+        if inner.shutting_down.load(Ordering::SeqCst) {
+            return;
+        }
+        std::thread::sleep(PROBE_POLL);
+        let mut due: Vec<(u64, Arc<CircuitBreaker>)> = Vec::new();
+        {
+            let now = Instant::now();
+            let breakers = inner.breakers.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+            for (id, b) in breakers.iter() {
+                if b.probe(now) {
+                    due.push((*id, Arc::clone(b)));
+                }
+            }
+        }
+        for (graph_id, b) in due {
+            run_probe(inner, graph_id, &b);
+        }
+    }
+}
+
+/// Run one half-open probe wave for `graph_id` and settle its breaker:
+/// close on success, re-open (for another cooldown) on failure.
+fn run_probe(inner: &Arc<ServerInner>, graph_id: u64, breaker: &CircuitBreaker) {
+    let entry = inner
+        .graphs
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+        .get(&graph_id)
+        .cloned();
+    let Some(entry) = entry else {
+        // unreachable today (graphs are never unloaded); leave the breaker
+        // half-open rather than invent an outcome for a missing graph
+        return;
+    };
+    let mut engine = inner.opts.engine.clone();
+    if apply_sigma(&mut engine, entry.sigma).is_err() {
+        if breaker.record_failure(Instant::now()) {
+            inner.metrics.record_breaker_open();
+        }
+        return;
+    }
+    inner.metrics.record_probe_wave();
+    let job_id = inner.next_job_id.fetch_add(1, Ordering::Relaxed);
+    // a bounded, single-attempt trial from root 0: the point is "does a
+    // wave come back healthy", not throughput
+    let deadline = inner.opts.breaker_cooldown.max(Duration::from_millis(100));
+    let mut job =
+        BfsJob::wave(job_id, Arc::clone(&entry.graph), vec![0], engine, Some(deadline), None, 1);
+    job.run.liveness = inner.opts.liveness;
+    if let Some(plan) = chaos_fault(inner, graph_id) {
+        job.run.fault = Some(plan);
+    }
+    let healthy = match inner.supervisor.run_job(job) {
+        Ok(outcome) => outcome.outcomes.iter().any(|o| !o.is_failed()),
+        Err(_) => false,
+    };
+    if healthy {
+        breaker.record_success();
+    } else if breaker.record_failure(Instant::now()) {
+        inner.metrics.record_breaker_open();
     }
 }
 
@@ -591,5 +979,33 @@ mod tests {
         let mut serial = EngineKind::SerialQueue;
         assert!(apply_sigma(&mut serial, Some(4096)).is_err());
         assert!(apply_sigma(&mut serial, None).is_ok(), "no sigma is always fine");
+    }
+
+    #[test]
+    fn hang_chaos_without_liveness_is_refused_at_bind() {
+        let mut opts = ServeOptions::new(EngineKind::SerialLayered);
+        opts.fault_hang_waves = 1;
+        let err = match Server::bind(opts) {
+            Err(e) => e,
+            Ok(_) => panic!("a hang with no watchdog must not bind"),
+        };
+        assert!(err.to_string().contains("liveness"), "{err:#}");
+    }
+
+    #[test]
+    fn chaos_faults_only_target_the_first_graph_in_order() {
+        let mut opts = ServeOptions::new(EngineKind::SerialLayered);
+        opts.liveness = Some(Duration::from_secs(1));
+        opts.fault_hang_waves = 1;
+        opts.fault_fail_waves = 2;
+        let server = Server::bind(opts).expect("bind");
+        let inner = Arc::clone(&server.inner);
+        assert!(chaos_fault(&inner, 2).is_none(), "g2 is never poisoned");
+        assert_eq!(chaos_fault(&inner, 1), Some(FaultPlan::hang_at(0)));
+        assert_eq!(chaos_fault(&inner, 1), Some(FaultPlan::fail_waves(2)));
+        assert_eq!(chaos_fault(&inner, 1), Some(FaultPlan::fail_waves(2)));
+        assert!(chaos_fault(&inner, 1).is_none(), "chaos budget exhausted");
+        server.begin_shutdown();
+        server.wait();
     }
 }

@@ -14,7 +14,7 @@ use phi_bfs::bfs::serial::SerialLayeredBfs;
 use phi_bfs::bfs::{BfsEngine, PreparedBfs, RunControl, RunStatus};
 use phi_bfs::coordinator::{
     make_engine, BatchPolicy, BfsJob, Coordinator, CoordinatorError, EngineKind, FaultInjector,
-    FaultPlan, RootOutcome, RunPolicy,
+    FaultPlan, RootOutcome, RunPolicy, Supervisor,
 };
 use phi_bfs::graph::{Csr, RmatConfig};
 use phi_bfs::Vertex;
@@ -338,6 +338,80 @@ fn memory_pressure_drives_degrade_shed_and_reject_deterministically() {
     assert!(out.all_valid, "the identical job is admitted once pressure lifts");
     let m = coordinator.metrics().snapshot();
     assert_eq!((m.jobs, m.jobs_shed), (1, 1));
+}
+
+/// The watchdog acceptance scenario at the chaos-suite level: a
+/// non-cooperative mid-wave hang (a fault that never polls its
+/// `RunControl`) is detected and abandoned within a small multiple of the
+/// liveness budget, every root of the hung wave reports a structured
+/// one-line failure, and the supervised pool self-heals for the next job.
+#[test]
+fn non_cooperative_hang_is_abandoned_within_the_liveness_budget() {
+    let g = graph(8, 13);
+    let liveness = Duration::from_millis(60);
+    let supervisor = Supervisor::new(Arc::new(Coordinator::new(1)), 1);
+    let mut j = job(&g, EngineKind::SerialLayered, vec![0, 1]);
+    j.run.fault = Some(FaultPlan::hang_at(0));
+    j.run.liveness = Some(liveness);
+    j.run.max_attempts = 1;
+    let t0 = Instant::now();
+    let out = supervisor.run_job(j).unwrap();
+    let elapsed = t0.elapsed();
+
+    assert_eq!(out.outcomes.len(), 2, "every root of the hung wave gets an outcome");
+    assert!(!out.all_valid);
+    for o in &out.outcomes {
+        match o {
+            RootOutcome::Failed { error, .. } => {
+                assert!(error.contains("watchdog"), "structured cause: {error}");
+                assert!(!error.contains('\n'), "one-line error: {error:?}");
+            }
+            RootOutcome::Ran(_) => panic!("a hung wave cannot produce a run"),
+        }
+    }
+    // nominal abandonment is liveness (cancel) + grace (= liveness); the
+    // upper bound is generous for noisy CI schedulers
+    assert!(elapsed >= liveness, "abandonment cannot precede the budget: {elapsed:?}");
+    assert!(elapsed < liveness * 20, "hang detected far too late: {elapsed:?}");
+    let m = supervisor.coordinator().metrics().snapshot();
+    assert_eq!(m.watchdog_fires, 1, "the cancel fired once");
+    assert_eq!(m.hung_waves, 1, "the abandonment was recorded");
+    assert_eq!(m.workers_replaced, 1, "the condemned worker was replaced");
+
+    // self-healed: the replacement worker serves a clean follow-up job
+    let out2 = supervisor.run_job(job(&g, EngineKind::SerialLayered, vec![2])).unwrap();
+    assert!(out2.all_valid && out2.failures().count() == 0);
+}
+
+/// `FaultPlan::fail_waves` models an engine that silently swallows its
+/// results: sticky across the retry ladder, every root exhausts its
+/// attempts with a structured failure — never a hang, never a panic, and
+/// the coordinator survives to run the next job.
+#[test]
+fn fail_waves_exhausts_the_ladder_with_structured_failures() {
+    let g = graph(8, 14);
+    let coordinator = Coordinator::new(1);
+    let mut j = job(&g, EngineKind::SerialLayered, (0..3).collect());
+    j.run.fault = Some(FaultPlan::fail_waves(4));
+    j.run.max_attempts = 2;
+    let out = coordinator.run_job(&j).unwrap();
+
+    assert_eq!(out.outcomes.len(), 3);
+    assert!(!out.all_valid);
+    for o in &out.outcomes {
+        match o {
+            RootOutcome::Failed { attempts, error, .. } => {
+                assert_eq!(*attempts, 2, "the whole ladder was tried");
+                assert!(error.contains("results"), "cause preserved: {error}");
+            }
+            RootOutcome::Ran(_) => panic!("fail-waves must fail every root"),
+        }
+    }
+    assert_eq!(coordinator.metrics().snapshot().failed_roots, 3);
+
+    // unharmed: the same coordinator serves the next job clean
+    let out2 = coordinator.run_job(&job(&g, EngineKind::SerialLayered, vec![0])).unwrap();
+    assert!(out2.all_valid && out2.failures().count() == 0);
 }
 
 /// Retries back off: under a sticky panic, a root exhausting 5 attempts

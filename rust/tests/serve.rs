@@ -264,6 +264,198 @@ fn rejected_wave_is_retried_after_the_hint_and_served() {
     assert_eq!((snap.ok, snap.failed), (1, 0), "{snap}");
 }
 
+/// The self-healing acceptance scenario: g1's first wave hangs
+/// non-cooperatively; the watchdog abandons it within a small multiple of
+/// the liveness budget and every request of the wave gets a structured
+/// one-line failure; that wave failure trips g1's circuit breaker
+/// (threshold 1), so follow-up g1 requests fast-fail with
+/// `ERR unavailable <retry-after-ms> ...`; the server-driven half-open
+/// probe closes the breaker again with no client traffic required; and a
+/// healthy g2 keeps serving oracle-exact checksums throughout.
+#[test]
+fn hung_graph_trips_its_breaker_probes_closed_and_g2_stays_exact() {
+    let liveness = Duration::from_millis(80);
+    let mut opts = serial_opts();
+    opts.batch_width = 1;
+    opts.batch_deadline = Duration::from_millis(10);
+    opts.dispatchers = 2;
+    opts.max_attempts = 1;
+    opts.liveness = Some(liveness);
+    opts.breaker_threshold = 1;
+    opts.breaker_cooldown = Duration::from_millis(750);
+    opts.fault_hang_waves = 1;
+    let (addr, daemon) = launch(opts);
+    let mut setup = ServeClient::connect(&addr.to_string()).unwrap();
+    let g1 = setup.load("rmat:8:8:1", None).unwrap();
+    let g2 = setup.load("rmat:8:8:2", None).unwrap();
+    let oracle1 = rmat(8, 8, 1);
+    let oracle2 = rmat(8, 8, 2);
+
+    // the poisoned wave hangs mid-traversal without ever polling its
+    // control; only the watchdog can end it
+    let t0 = Instant::now();
+    let reply = setup.bfs(&g1, 0, None).unwrap();
+    let elapsed = t0.elapsed();
+    assert!(reply.starts_with("ERR failed"), "hung wave must fail structurally: {reply}");
+    assert!(reply.contains("watchdog"), "cause must name the watchdog: {reply}");
+    assert!(elapsed >= liveness, "abandonment cannot precede the liveness budget");
+    assert!(elapsed < Duration::from_secs(20), "watchdog never fired: {elapsed:?}");
+
+    // the wave failure tripped the breaker: g1 fast-fails before touching
+    // the queue, leading its detail with the retry-after hint in ms
+    let ff = setup.bfs(&g1, 0, None).unwrap();
+    assert!(ff.starts_with("ERR unavailable "), "{ff}");
+    let hint: u64 = ff
+        .strip_prefix("ERR unavailable ")
+        .unwrap()
+        .split_whitespace()
+        .next()
+        .unwrap()
+        .parse()
+        .expect("leading retry-after-ms token");
+    assert!(hint >= 1, "{ff}");
+
+    let health = setup.health().unwrap();
+    assert!(health.starts_with("OK HEALTH status=ok"), "{health}");
+    assert!(health.contains("g1:open"), "{health}");
+    assert!(health.contains("g2:closed"), "{health}");
+    assert!(kv_u64(&health, "watchdog_fires").unwrap() >= 1, "{health}");
+    assert!(kv_u64(&health, "hung_waves").unwrap() >= 1, "{health}");
+    assert!(kv_u64(&health, "workers_replaced").unwrap() >= 1, "{health}");
+
+    // the blast radius stayed contained: g2 serves oracle-exact while g1
+    // is open
+    let r2 = setup.bfs(&g2, 5, None).unwrap();
+    assert!(r2.starts_with("OK BFS"), "{r2}");
+    assert_eq!(kv_hex(&r2, "checksum"), Some(oracle_checksum(&oracle2, 5)), "{r2}");
+
+    // recovery needs no client help: once the cooldown lapses the prober
+    // dispatches the half-open probe itself and closes the breaker
+    let t0 = Instant::now();
+    let recovered = loop {
+        let r = setup.bfs(&g1, 1, None).unwrap();
+        if r.starts_with("OK BFS") {
+            break r;
+        }
+        assert!(r.starts_with("ERR unavailable"), "unexpected reply while open: {r}");
+        assert!(t0.elapsed() < Duration::from_secs(20), "breaker never recovered");
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    assert_eq!(
+        kv_hex(&recovered, "checksum"),
+        Some(oracle_checksum(&oracle1, 1)),
+        "recovered graph must serve oracle-exact again: {recovered}"
+    );
+    let health = setup.health().unwrap();
+    assert!(health.contains("g1:closed"), "{health}");
+
+    setup.shutdown().unwrap();
+    let snap = daemon.join().unwrap();
+    assert!(snap.breaker_opens >= 1, "{snap}");
+    assert!(snap.breaker_fast_fails >= 1, "{snap}");
+    assert!(snap.probe_waves >= 1, "the prober never ran: {snap}");
+    assert!(snap.failed >= 1 && snap.ok >= 2, "{snap}");
+}
+
+/// A request whose deadline lapses while it waits (here: behind an
+/// admission-control shed whose retry pause outlives the remaining
+/// budget) is answered `ERR expired` instead of being dispatched doomed.
+#[test]
+fn queued_request_whose_deadline_lapses_gets_err_expired() {
+    let mut opts = serial_opts();
+    opts.batch_width = 1;
+    opts.batch_deadline = Duration::from_millis(5);
+    opts.mem_budget_mb = Some(512);
+    // the shed's retry pause is >= 25 ms — past this request's 20 ms
+    opts.fault_reject_waves = 1;
+    let (addr, daemon) = launch(opts);
+    let gid = ServeClient::connect(&addr.to_string()).unwrap().load("rmat:8:8:9", None).unwrap();
+
+    let reply = ServeClient::connect(&addr.to_string()).unwrap().bfs(&gid, 0, Some(20)).unwrap();
+    assert!(reply.starts_with("ERR expired"), "{reply}");
+    ServeClient::connect(&addr.to_string()).unwrap().shutdown().unwrap();
+    let snap = daemon.join().unwrap();
+    assert!(snap.expired_requests >= 1, "{snap}");
+    assert_eq!(snap.ok, 0, "an expired request must never be dispatched: {snap}");
+}
+
+/// Protocol-robustness fuzz: 200 deterministic pseudo-random request
+/// lines — printable junk, binary junk, almost-valid commands, blank
+/// lines, and two oversize (> [`MAX_LINE_BYTES`]) lines — down one real
+/// TCP connection. The daemon must answer every non-blank line with
+/// exactly one structured reply, answer nothing to blank lines, survive
+/// the oversize lines with `ERR parse line-too-long`, and still serve the
+/// final handshake — a dropped or duplicated reply anywhere desyncs it.
+#[test]
+fn fuzzed_junk_lines_each_get_exactly_one_structured_reply() {
+    use std::io::{BufRead, BufReader, Write};
+
+    use phi_bfs::serve::MAX_LINE_BYTES;
+
+    let mut opts = serial_opts();
+    opts.batch_deadline = Duration::from_millis(10);
+    let (addr, daemon) = launch(opts);
+
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut state = 0x5eed_cafe_f00d_u64;
+    let mut next = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    for i in 0..200u64 {
+        let oversize = i == 4 || i == 104;
+        let line: Vec<u8> = if oversize {
+            vec![b'A'; MAX_LINE_BYTES + 1000]
+        } else {
+            match i % 4 {
+                0 => (0..next() % 64).map(|_| b' ' + (next() % 94) as u8).collect(),
+                1 => (0..next() % 256)
+                    .map(|_| next() as u8)
+                    .filter(|&b| b != b'\n' && b != b'\r')
+                    .collect(),
+                2 => format!("BFS g{} {}", next() % 4, next() % 1000).into_bytes(),
+                // blank / whitespace-only: must draw no reply at all
+                _ => vec![b' '; (next() % 4) as usize],
+            }
+        };
+        // mirror the daemon's own blank test (lossy UTF-8, then trim)
+        let expects_reply =
+            oversize || !String::from_utf8_lossy(&line).trim().is_empty();
+        writer.write_all(&line).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        if expects_reply {
+            let mut reply = String::new();
+            let n = reader.read_line(&mut reply).unwrap();
+            assert!(n > 0, "line {i}: the daemon closed the connection");
+            assert!(
+                reply.starts_with("OK ") || reply.starts_with("ERR "),
+                "line {i}: unstructured reply {reply:?}"
+            );
+            if oversize {
+                assert!(reply.contains("line-too-long"), "line {i}: {reply}");
+            }
+        }
+    }
+    // the handshake proves the reply stream never desynced
+    writer.write_all(b"STATS\n").unwrap();
+    writer.flush().unwrap();
+    let mut stats = String::new();
+    reader.read_line(&mut stats).unwrap();
+    assert!(stats.starts_with("OK STATS"), "desynced after fuzz: {stats}");
+    assert!(kv_u64(&stats, "oversize_lines").unwrap() >= 2, "{stats}");
+    writer.write_all(b"SHUTDOWN\n").unwrap();
+    writer.flush().unwrap();
+    let mut bye = String::new();
+    reader.read_line(&mut bye).unwrap();
+    assert_eq!(bye.trim_end(), "OK SHUTDOWN draining", "desynced after fuzz: {bye}");
+    daemon.join().unwrap();
+}
+
 #[test]
 fn protocol_errors_are_structured_lines() {
     let mut opts = serial_opts();
